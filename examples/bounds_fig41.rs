@@ -1,0 +1,59 @@
+//! Fig 4.1 reproduction (E2): upper bounds on the reliability and privacy
+//! failure probabilities at p = p*(n, q_total), for n = 100..1000 and
+//! q_total ∈ {0, 0.01, 0.05, 0.1} — plus Monte-Carlo empirical rates
+//! validating that the bounds hold (E9).
+//!
+//! ```bash
+//! cargo run --release --example bounds_fig41
+//! ```
+
+use ccesa::analysis::bounds::{
+    p_star, per_step_q, t_rule, theorem5_reliability_bound, theorem6_privacy_bound,
+};
+use ccesa::analysis::montecarlo::estimate_failure_rates;
+use ccesa::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::new("bounds_fig41", "Fig 4.1: P_e bounds at p = p*")
+        .flag("trials", Some("300"), "Monte-Carlo trials per point")
+        .flag("csv", Some("results_fig41.csv"), "output CSV path")
+        .switch("no-mc", "skip the Monte-Carlo validation columns")
+        .parse();
+    let trials: usize = args.req("trials");
+    let run_mc = !args.get_bool("no-mc");
+    let csv_path: String = args.req("csv");
+
+    let mut csv =
+        String::from("n,q_total,p_star,t,bound_rel,bound_priv,mc_rel,mc_priv\n");
+    println!(
+        "{:>6} {:>8} {:>8} {:>6} {:>12} {:>12} {:>10} {:>10}",
+        "n", "q_total", "p*", "t", "P_e^r bound", "P_e^p bound", "mc rel", "mc priv"
+    );
+    for &q_total in &[0.0f64, 0.01, 0.05, 0.1] {
+        for n in (100..=1000).step_by(100) {
+            let p = p_star(n, q_total);
+            let q = per_step_q(q_total);
+            let t = t_rule(n, p);
+            let b5 = theorem5_reliability_bound(n, p, q, t);
+            let b6 = theorem6_privacy_bound(n, p, q);
+            let (mc_r, mc_p) = if run_mc && n <= 500 {
+                let est = estimate_failure_rates(n, p, q, t, trials, 99 + n as u64);
+                (est.p_e_reliability, est.p_e_privacy)
+            } else {
+                (f64::NAN, f64::NAN)
+            };
+            println!(
+                "{n:>6} {q_total:>8.2} {p:>8.3} {t:>6} {b5:>12.3e} {b6:>12.3e} {mc_r:>10.4} {mc_p:>10.4}"
+            );
+            csv.push_str(&format!(
+                "{n},{q_total},{p:.6},{t},{b5:.6e},{b6:.6e},{mc_r},{mc_p}\n"
+            ));
+        }
+    }
+    std::fs::write(&csv_path, csv)?;
+    println!("\nwrote {csv_path}");
+    println!(
+        "shape check (paper): P_e^p ≤ 1e-40 everywhere; P_e^r ≤ 1e-2; both decrease with n"
+    );
+    Ok(())
+}

@@ -1,0 +1,115 @@
+//! Ablation (DESIGN.md §5): assignment-graph family comparison at equal
+//! mean degree — Erdős–Rényi (this paper) vs Harary (Bell et al. 2020)
+//! vs the complete graph (SA), plus a below-threshold ER point.
+//!
+//! For each topology: Monte-Carlo reliability/privacy failure rates under
+//! dropout, measured per-client key/share bytes from a real round, and
+//! single-round wall time.
+//!
+//! ```bash
+//! cargo run --release --example graph_ablation -- --n 100 --qtotal 0.1
+//! ```
+
+use ccesa::analysis::bounds::{p_star, per_step_q, t_rule};
+use ccesa::analysis::montecarlo::{sample_evolution, theorem2_predicate};
+use ccesa::protocol::dropout::DropoutModel;
+use ccesa::protocol::engine::run_round;
+use ccesa::protocol::server::theorem1_predicate;
+use ccesa::protocol::{ProtocolConfig, Topology};
+use ccesa::util::cli::Args;
+use ccesa::util::rng::Rng;
+use ccesa::util::timer::Timer;
+
+fn main() -> anyhow::Result<()> {
+    ccesa::util::logging::init();
+    let args = Args::new("graph_ablation", "ER vs Harary vs complete assignment graphs")
+        .flag("n", Some("100"), "clients")
+        .flag("dim", Some("5000"), "model dimension")
+        .flag("qtotal", Some("0.1"), "protocol dropout")
+        .flag("trials", Some("300"), "Monte-Carlo trials")
+        .flag("seed", Some("3"), "seed")
+        .parse();
+    let n: usize = args.req("n");
+    let dim: usize = args.req("dim");
+    let q_total: f64 = args.req("qtotal");
+    let trials: usize = args.req("trials");
+    let seed: u64 = args.req("seed");
+
+    let q = per_step_q(q_total);
+    let ps = p_star(n, q_total);
+    let t = t_rule(n, ps);
+    let harary_k = ((n as f64 - 1.0) * ps).round() as usize; // equal mean degree
+    println!("n={n} q_total={q_total} p*={ps:.4} t={t} harary_k={harary_k}\n");
+
+    let cases: Vec<(&str, Topology, usize)> = vec![
+        ("SA (complete)", Topology::Complete, n / 2 + 1),
+        ("CCESA ER p=p*", Topology::ErdosRenyi { p: ps }, t),
+        ("CCESA ER p=p*/2", Topology::ErdosRenyi { p: ps / 2.0 }, t_rule(n, ps / 2.0)),
+        ("Harary k=⌈(n-1)p*⌉", Topology::Harary { k: harary_k }, t.min(harary_k / 2 + 1)),
+    ];
+
+    println!(
+        "{:<20} {:>10} {:>10} {:>14} {:>12} {:>10}",
+        "topology", "rel fail", "priv fail", "client B", "round ms", "reliable?"
+    );
+    for (label, topo, tt) in cases {
+        // Monte-Carlo rates (graph-level, fast). Harary/complete are not
+        // random, so build them once and evaluate dropout-only trials.
+        let (mut rel_fail, mut priv_fail) = (0usize, 0usize);
+        let mut mc_rng = Rng::new(seed ^ 0xAB);
+        for _ in 0..trials {
+            let ev = match &topo {
+                Topology::ErdosRenyi { p } => sample_evolution(n, *p, q, tt, &mut mc_rng),
+                other => {
+                    // fixed graph + random dropout via the p=1 sampler on a
+                    // custom evolution: emulate by sampling with p=1 then
+                    // replacing the graph
+                    let mut ev = sample_evolution(n, 1.0, q, tt, &mut mc_rng);
+                    ev.graph = other.build(n, &mut mc_rng);
+                    ev
+                }
+            };
+            if ev.sets.v3.len() < tt || !theorem1_predicate(&ev.graph, &ev.sets, tt) {
+                rel_fail += 1;
+            }
+            if !theorem2_predicate(&ev, tt) {
+                priv_fail += 1;
+            }
+        }
+
+        // one real round for bytes + latency
+        let mut rng = Rng::new(seed);
+        let models: Vec<Vec<u64>> = (0..n)
+            .map(|_| (0..dim).map(|_| rng.next_u64() & 0xFFFF_FFFF).collect())
+            .collect();
+        let cfg = ProtocolConfig {
+            n,
+            t: tt,
+            mask_bits: 32,
+            dim,
+            topology: topo,
+            dropout: DropoutModel::iid_from_total(q_total),
+            seed,
+        };
+        let timer = Timer::start();
+        let round = run_round(&cfg, &models);
+        let ms = timer.elapsed_ms();
+        let (client_b, reliable) = match &round {
+            Ok(r) => (r.stats.mean_client_total() - (dim * 4) as f64, r.reliable),
+            Err(_) => (f64::NAN, false),
+        };
+        println!(
+            "{label:<20} {:>10.4} {:>10.4} {:>14.0} {:>12.1} {:>10}",
+            rel_fail as f64 / trials as f64,
+            priv_fail as f64 / trials as f64,
+            client_b,
+            ms,
+            reliable
+        );
+    }
+    println!(
+        "\nexpected: ER at p* and Harary at equal degree both ≈ SA on reliability/privacy at \
+         a fraction of the bytes; ER at p*/2 shows reliability failures (below Theorem 3)."
+    );
+    Ok(())
+}

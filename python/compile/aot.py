@@ -1,0 +1,160 @@
+"""AOT pipeline: lower every L2 entry point to HLO *text* + a manifest.
+
+HLO text (not `.serialize()`) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the Rust `xla` crate) rejects; the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (written to --out-dir, default ../artifacts):
+  mlp_train.hlo.txt       (w1,b1,w2,b2,x,y1h,lr) -> (w1',b1',w2',b2',loss)
+  mlp_eval.hlo.txt        (w1,b1,w2,b2,x,labels) -> (correct,)
+  softreg_train.hlo.txt   (w,b,x,y1h,lr)         -> (w',b',loss)
+  softreg_predict.hlo.txt (w,b,x)                -> (probs,)
+  inversion.hlo.txt       (w,b,x,y1h,step)       -> (x',loss)
+  masked_sum.hlo.txt      (stacked u32)          -> (colsum u32,)
+  quantize.hlo.txt        (x f32[m])             -> (words u32[m],)
+  manifest.json           shapes/dtypes/orderings for the Rust runtime
+
+Run via `make artifacts` (no-op when inputs are unchanged).
+"""
+
+import argparse
+import functools
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels.masked_sum import masked_sum
+from compile.kernels.quantize import quantize as quantize_kernel
+
+# Fixed AOT shapes (recorded in the manifest; the Rust side reads them).
+MLP = dict(batch=32, d=192, h=256, c=10)
+FACE = dict(batch=20, d=1024, c=40)
+INV = dict(batch=1)
+AGG = dict(clients=64, m=65536)
+# scale matching masking::Quantizer::for_sum_of(32, 4.0, 64): 2^31/(2*64*4)
+QUANT_SCALE = float(2**31) / (2.0 * 64 * 4.0)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def u32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.uint32)
+
+
+def spec_json(s):
+    return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def entries():
+    """(name, fn, input_specs, output_arity) for every artifact."""
+    b, d, h, c = MLP["batch"], MLP["d"], MLP["h"], MLP["c"]
+    fb, fd, fc = FACE["batch"], FACE["d"], FACE["c"]
+    return [
+        (
+            "mlp_train",
+            functools.partial(model.mlp_train_step, use_pallas=True),
+            [f32(d, h), f32(h), f32(h, c), f32(c), f32(b, d), f32(b, c), f32()],
+            5,
+        ),
+        (
+            "mlp_eval",
+            functools.partial(model.mlp_eval_step, use_pallas=True),
+            [f32(d, h), f32(h), f32(h, c), f32(c), f32(b, d), i32(b)],
+            1,
+        ),
+        (
+            "softreg_train",
+            functools.partial(model.softreg_train_step, use_pallas=True),
+            [f32(fd, fc), f32(fc), f32(fb, fd), f32(fb, fc), f32()],
+            3,
+        ),
+        (
+            "softreg_predict",
+            functools.partial(model.softreg_predict, use_pallas=True),
+            [f32(fd, fc), f32(fc), f32(fb, fd)],
+            1,
+        ),
+        (
+            "inversion",
+            functools.partial(model.softreg_inversion_step, use_pallas=True),
+            [f32(fd, fc), f32(fc), f32(INV["batch"], fd), f32(INV["batch"], fc), f32()],
+            2,
+        ),
+        (
+            "masked_sum",
+            masked_sum,
+            [u32(AGG["clients"], AGG["m"])],
+            1,
+        ),
+        (
+            "quantize",
+            functools.partial(quantize_kernel, clip=4.0, scale=QUANT_SCALE),
+            [f32(AGG["m"])],
+            1,
+        ),
+    ]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument("--only", default=None, help="emit a single artifact by name")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {
+        "format": "hlo-text/v1",
+        "mlp": MLP,
+        "face": FACE,
+        "agg": AGG,
+        "artifacts": {},
+    }
+    for name, fn, specs, n_out in entries():
+        if args.only and name != args.only:
+            continue
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [spec_json(s) for s in specs],
+            "num_outputs": n_out,
+        }
+        print(f"wrote {path} ({len(text)} chars)", file=sys.stderr)
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    if args.only and os.path.exists(mpath):
+        with open(mpath) as f:
+            old = json.load(f)
+        old["artifacts"].update(manifest["artifacts"])
+        manifest = old
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {mpath}", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

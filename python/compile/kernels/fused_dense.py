@@ -1,0 +1,124 @@
+"""L1 Pallas kernel: fused dense layer  y = act(x @ W + b).
+
+Every layer of the L2 models (the federated MLP and the softmax-regression
+face classifier) lowers through this kernel, so the whole training hot path
+runs through Pallas.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the grid tiles rows of the
+activation matrix so each program instance holds an (bm × K) activation
+block, the full (K × N) weight panel and a (bm × N) output block in
+VMEM — an MXU-friendly schedule in which the weight panel is reused across
+the row grid (the HBM→VMEM transfer pattern a GPU kernel would express with
+threadblock tiling). For the dimensions used here (K, N ≤ 1024) the panels
+fit VMEM comfortably; larger layers would add a K-loop with an accumulator.
+
+interpret=True is mandatory on this image: CPU PJRT cannot run Mosaic
+custom-calls (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref, *, activation: str):
+    """One grid step: o = act(x_block @ W + b)."""
+    x = x_ref[...]
+    w = w_ref[...]
+    b = b_ref[...]
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32) + b[None, :]
+    if activation == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif activation == "tanh":
+        y = jnp.tanh(y)
+    elif activation != "none":
+        raise ValueError(f"unknown activation {activation!r}")
+    o_ref[...] = y
+
+
+def _pick_block_rows(m: int) -> int:
+    """Largest divisor of m that is ≤ 128 (MXU-shaped when possible)."""
+    for bm in (128, 64, 32, 16, 8, 4, 2, 1):
+        if m % bm == 0:
+            return bm
+    return 1
+
+
+def _fused_dense_raw(x, w, b, activation: str):
+    """act(x @ w + b) via Pallas. x: (M, K), w: (K, N), b: (N,)."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"shape mismatch {x.shape} @ {w.shape}"
+    assert b.shape == (n,)
+    bm = _pick_block_rows(m)
+    kernel = functools.partial(_dense_kernel, activation=activation)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),   # activation rows
+            pl.BlockSpec((k, n), lambda i: (0, 0)),    # full weight panel
+            pl.BlockSpec((n,), lambda i: (0,)),        # bias
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w, b)
+
+
+def _pallas_matmul(a, b):
+    """a @ b through the same Pallas kernel (zero bias, no activation) —
+    the backward pass stays on the L1 path too."""
+    zeros = jnp.zeros((b.shape[1],), jnp.float32)
+    return _fused_dense_raw(a, b, zeros, "none")
+
+
+# interpret-mode pallas_call has no transpose rule, so reverse-mode AD is
+# provided explicitly; the backward matmuls reuse the Pallas kernel.
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _fused_dense_ad(x, w, b, activation):
+    return _fused_dense_raw(x, w, b, activation)
+
+
+def _fused_dense_fwd(x, w, b, activation):
+    y = _fused_dense_raw(x, w, b, activation)
+    return y, (x, w, y)
+
+
+def _fused_dense_bwd(activation, res, g):
+    x, w, y = res
+    if activation == "relu":
+        gpre = g * (y > 0.0).astype(g.dtype)
+    elif activation == "tanh":
+        gpre = g * (1.0 - y * y)
+    elif activation == "none":
+        gpre = g
+    else:  # pragma: no cover — rejected in the forward pass
+        raise ValueError(f"unknown activation {activation!r}")
+    dx = _pallas_matmul(gpre, w.T)
+    dw = _pallas_matmul(x.T, gpre)
+    db = jnp.sum(gpre, axis=0)
+    return dx, dw, db
+
+
+_fused_dense_ad.defvjp(_fused_dense_fwd, _fused_dense_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("activation",))
+def fused_dense(x, w, b, activation: str = "none"):
+    """Differentiable fused dense layer act(x @ w + b) on the Pallas path."""
+    if activation not in ("none", "relu", "tanh"):
+        raise ValueError(f"unknown activation {activation!r}")
+    return _fused_dense_ad(x, w, b, activation)
+
+
+def vmem_bytes(m: int, k: int, n: int) -> int:
+    """Estimated per-program VMEM footprint (f32) for the chosen schedule.
+
+    Used by the §Perf structural analysis: must stay well under ~16 MiB
+    (TPUv4 VMEM) for the shapes we AOT.
+    """
+    bm = _pick_block_rows(m)
+    return 4 * (bm * k + k * n + n + bm * n)

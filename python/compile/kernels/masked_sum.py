@@ -1,0 +1,57 @@
+"""L1 Pallas kernel: modular column-sum of masked client vectors.
+
+The server-side aggregation hot spot (Eq. 4's Σ_{i∈V3} θ̃_i): given the
+stacked masked updates as a (clients × m) uint32 matrix, produce the
+column-wise sum mod 2^32 (uint32 wrap-around addition IS the modular sum —
+the masking domain Z_{2^32} maps directly onto the hardware word).
+
+TPU adaptation: the grid tiles the model dimension m; each program instance
+reduces a (clients × bm) VMEM-resident panel along the client axis. The
+client axis is small (≤ a few thousand) and the m axis large (10^4–10^6),
+so tiling m keeps VMEM bounded while the reduction stays vectorized on the
+VPU (this is a bandwidth-bound kernel — no MXU involvement).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _masked_sum_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    # uint32 accumulate wraps mod 2^32 — exactly the masked-domain sum
+    o_ref[...] = jnp.sum(x, axis=0, dtype=jnp.uint32)
+
+
+def _pick_block_cols(m: int) -> int:
+    for bm in (4096, 2048, 1024, 512, 256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if m % bm == 0:
+            return bm
+    return 1
+
+
+@jax.jit
+def masked_sum(stacked):
+    """Column sum mod 2^32. stacked: (clients, m) uint32 → (m,) uint32."""
+    assert stacked.dtype == jnp.uint32, stacked.dtype
+    c, m = stacked.shape
+    bm = _pick_block_cols(m)
+    return pl.pallas_call(
+        _masked_sum_kernel,
+        grid=(m // bm,),
+        in_specs=[pl.BlockSpec((c, bm), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((bm,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.uint32),
+        interpret=True,
+    )(stacked)
+
+
+def vmem_bytes(clients: int, m: int) -> int:
+    """Per-program VMEM footprint estimate (uint32)."""
+    bm = _pick_block_cols(m)
+    return 4 * (clients * bm + bm)
+
+
+masked_sum_kernel = functools.partial(_masked_sum_kernel)

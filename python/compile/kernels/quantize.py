@@ -1,0 +1,53 @@
+"""L1 Pallas kernel: fixed-point quantization into the masked domain.
+
+The client-side step between local training and masking (Step 2's input):
+`q(x) = round(clamp(x, -clip, clip) * scale) mod 2^32`, emitted as uint32
+(two's-complement wrap for negatives). On TPU this fuses with the mask
+addition into a single VMEM pass; here it is exercised standalone and
+compared against the Rust `masking::Quantizer` (which matches up to
+rounding mode at exact .5 boundaries).
+
+TPU adaptation: a pure VPU elementwise kernel tiled along m; one (bm,)
+block in VMEM per program instance.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quantize_kernel(x_ref, o_ref, *, clip: float, scale: float):
+    x = x_ref[...]
+    clamped = jnp.clip(x, -clip, clip)
+    q = jnp.round(clamped * scale).astype(jnp.int32)
+    o_ref[...] = jax.lax.bitcast_convert_type(q, jnp.uint32)
+
+
+def _pick_block(m: int) -> int:
+    for bm in (4096, 2048, 1024, 512, 256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if m % bm == 0:
+            return bm
+    return 1
+
+
+@functools.partial(jax.jit, static_argnames=("clip", "scale"))
+def quantize(x, clip: float, scale: float):
+    """Quantize a 1-D f32 vector into uint32 masked-domain words."""
+    (m,) = x.shape
+    bm = _pick_block(m)
+    kernel = functools.partial(_quantize_kernel, clip=clip, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm,),
+        in_specs=[pl.BlockSpec((bm,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((bm,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.uint32),
+        interpret=True,
+    )(x)
+
+
+def vmem_bytes(m: int) -> int:
+    bm = _pick_block(m)
+    return 4 * 2 * bm

@@ -1,0 +1,34 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every kernel in this package has a reference here; pytest asserts
+allclose/equal agreement across a hypothesis-driven sweep of shapes and
+activations (python/tests/test_kernels.py). This is the build-time
+correctness gate for L1.
+"""
+
+import jax.numpy as jnp
+
+
+def dense_ref(x, w, b, activation: str = "none"):
+    """Reference for kernels.fused_dense.fused_dense."""
+    y = x @ w + b[None, :]
+    if activation == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif activation == "tanh":
+        y = jnp.tanh(y)
+    elif activation != "none":
+        raise ValueError(f"unknown activation {activation!r}")
+    return y
+
+
+def masked_sum_ref(stacked):
+    """Reference for kernels.masked_sum.masked_sum (sum mod 2^32)."""
+    assert stacked.dtype == jnp.uint32
+    return jnp.sum(stacked, axis=0, dtype=jnp.uint32)
+
+
+def quantize_ref(x, clip: float, scale: float):
+    """Reference for kernels.quantize.quantize."""
+    import jax
+    q = jnp.round(jnp.clip(x, -clip, clip) * scale).astype(jnp.int32)
+    return jax.lax.bitcast_convert_type(q, jnp.uint32)

@@ -1,0 +1,110 @@
+"""L2: JAX compute graphs for the federated-learning workloads.
+
+Two models, both built exclusively on the L1 `fused_dense` Pallas kernel:
+
+* **MLP classifier** — the CIFAR-like reliability experiments (Fig 5.2 /
+  Fig A.3): one hidden layer, softmax cross-entropy, SGD.
+* **Softmax regression** — the AT&T-faces privacy experiments (Fig 2 /
+  A.4, Tables 5.2 / A.3), matching Fredrikson et al.'s model-inversion
+  setting. `inversion_step` is the attacker's gradient step on the input.
+
+Each entry point is a pure function over flat parameter arguments so that
+`aot.py` can lower it with fixed shapes and the Rust runtime can feed
+parameters positionally.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.fused_dense import fused_dense
+from compile.kernels.ref import dense_ref
+
+
+def _dense(x, w, b, activation, use_pallas):
+    if use_pallas:
+        return fused_dense(x, w, b, activation)
+    return dense_ref(x, w, b, activation)
+
+
+def softmax_cross_entropy(logits, y_onehot):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.sum(y_onehot * logp, axis=-1))
+
+
+# --------------------------------------------------------------------------
+# MLP: x → relu(xW1+b1) → (·W2+b2) → logits
+# --------------------------------------------------------------------------
+
+def mlp_logits(w1, b1, w2, b2, x, use_pallas=True):
+    h = _dense(x, w1, b1, "relu", use_pallas)
+    return _dense(h, w2, b2, "none", use_pallas)
+
+
+def mlp_loss(w1, b1, w2, b2, x, y_onehot, use_pallas=True):
+    return softmax_cross_entropy(mlp_logits(w1, b1, w2, b2, x, use_pallas), y_onehot)
+
+
+def mlp_train_step(w1, b1, w2, b2, x, y_onehot, lr, use_pallas=True):
+    """One SGD step; returns (w1', b1', w2', b2', loss)."""
+    loss, grads = jax.value_and_grad(mlp_loss, argnums=(0, 1, 2, 3))(
+        w1, b1, w2, b2, x, y_onehot, use_pallas
+    )
+    g1, gb1, g2, gb2 = grads
+    return (
+        w1 - lr * g1,
+        b1 - lr * gb1,
+        w2 - lr * g2,
+        b2 - lr * gb2,
+        loss,
+    )
+
+
+def mlp_eval_step(w1, b1, w2, b2, x, y_labels, use_pallas=True):
+    """Returns (correct_count, mean_loss_proxy). y_labels: int32 (B,)."""
+    logits = mlp_logits(w1, b1, w2, b2, x, use_pallas)
+    pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    correct = jnp.sum((pred == y_labels).astype(jnp.int32))
+    return (correct,)
+
+
+def mlp_init(rng_key, d, h, c):
+    k1, k2 = jax.random.split(rng_key)
+    w1 = jax.random.normal(k1, (d, h), jnp.float32) * jnp.sqrt(2.0 / d)
+    w2 = jax.random.normal(k2, (h, c), jnp.float32) * jnp.sqrt(1.0 / h)
+    return w1, jnp.zeros((h,), jnp.float32), w2, jnp.zeros((c,), jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# Softmax regression (faces): x → xW+b → logits
+# --------------------------------------------------------------------------
+
+def softreg_logits(w, b, x, use_pallas=True):
+    return _dense(x, w, b, "none", use_pallas)
+
+
+def softreg_loss(w, b, x, y_onehot, use_pallas=True):
+    return softmax_cross_entropy(softreg_logits(w, b, x, use_pallas), y_onehot)
+
+
+def softreg_train_step(w, b, x, y_onehot, lr, use_pallas=True):
+    loss, (gw, gb) = jax.value_and_grad(softreg_loss, argnums=(0, 1))(
+        w, b, x, y_onehot, use_pallas
+    )
+    return w - lr * gw, b - lr * gb, loss
+
+
+def softreg_predict(w, b, x, use_pallas=True):
+    """Class probabilities — the membership-inference attack surface."""
+    return (jax.nn.softmax(softreg_logits(w, b, x, use_pallas), axis=-1),)
+
+
+def softreg_inversion_step(w, b, x, y_onehot, step_size, use_pallas=True):
+    """One step of the Fredrikson et al. model-inversion attack: gradient
+    DESCENT on the class loss wrt the *input*, clamped to [0, 1].
+
+    Returns (x', loss). The attacker iterates this from x = 0.5·1 to
+    reconstruct the training template of the target class.
+    """
+    loss, gx = jax.value_and_grad(softreg_loss, argnums=2)(w, b, x, y_onehot, use_pallas)
+    x_new = jnp.clip(x - step_size * gx, 0.0, 1.0)
+    return x_new, loss

@@ -1,0 +1,165 @@
+"""L1 correctness gate: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and activations; exact agreement is required for
+the integer kernel and tight allclose for the float kernel.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.fused_dense import fused_dense, vmem_bytes, _pick_block_rows
+from compile.kernels.masked_sum import masked_sum
+from compile.kernels.masked_sum import vmem_bytes as agg_vmem_bytes
+from compile.kernels.ref import dense_ref, masked_sum_ref
+
+ACTIVATIONS = ("none", "relu", "tanh")
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.sampled_from([1, 2, 3, 8, 20, 32, 33, 128]),
+    k=st.sampled_from([1, 5, 16, 64, 192]),
+    n=st.sampled_from([1, 4, 10, 40, 256]),
+    act=st.sampled_from(ACTIVATIONS),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_dense_matches_ref(m, k, n, act, seed):
+    rng = np.random.default_rng(seed)
+    x, w = _rand(rng, m, k), _rand(rng, k, n)
+    b = _rand(rng, n)
+    out = fused_dense(x, w, b, act)
+    ref = dense_ref(x, w, b, act)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.sampled_from([8, 32, 64]),
+    k=st.sampled_from([16, 48]),
+    n=st.sampled_from([8, 24]),
+    act=st.sampled_from(ACTIVATIONS),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_dense_gradients_match_ref(m, k, n, act, seed):
+    rng = np.random.default_rng(seed)
+    x, w = _rand(rng, m, k), _rand(rng, k, n)
+    b = _rand(rng, n)
+
+    def loss_pallas(x, w, b):
+        return jnp.sum(fused_dense(x, w, b, act) ** 2)
+
+    def loss_ref(x, w, b):
+        return jnp.sum(dense_ref(x, w, b, act) ** 2)
+
+    gp = jax.grad(loss_pallas, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(x, w, b)
+    for a, r, name in zip(gp, gr, "xwb"):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(r), rtol=5e-4, atol=5e-4, err_msg=f"grad {name}"
+        )
+
+
+def test_fused_dense_rejects_unknown_activation():
+    x = jnp.zeros((2, 2))
+    w = jnp.zeros((2, 2))
+    b = jnp.zeros((2,))
+    with pytest.raises(ValueError):
+        fused_dense(x, w, b, "gelu")
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    clients=st.sampled_from([1, 2, 7, 16, 64]),
+    m=st.sampled_from([1, 3, 32, 100, 1024, 4096]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_masked_sum_matches_ref_exactly(clients, m, seed):
+    rng = np.random.default_rng(seed)
+    stacked = jnp.asarray(
+        rng.integers(0, 2**32, size=(clients, m), dtype=np.uint32)
+    )
+    out = masked_sum(stacked)
+    ref = masked_sum_ref(stacked)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_masked_sum_wraps_mod_2_32():
+    # two clients both at 2^32 - 1: sum mod 2^32 = 2^32 - 2
+    stacked = jnp.full((2, 4), 2**32 - 1, jnp.uint32)
+    out = np.asarray(masked_sum(stacked))
+    assert (out == np.uint32(2**32 - 2)).all()
+
+
+def test_mask_cancellation_through_kernel():
+    # additive masks that cancel pairwise leave the plain sum — the
+    # secure-aggregation identity, exercised on the L1 kernel
+    rng = np.random.default_rng(0)
+    n, m = 4, 256
+    plain = rng.integers(0, 1000, size=(n, m), dtype=np.uint32)
+    masks = rng.integers(0, 2**32, size=(n, n, m), dtype=np.uint32)
+    masked = plain.astype(np.int64)
+    for i in range(n):
+        for j in range(n):
+            if i < j:
+                masked[i] = (masked[i] + masks[i][j]) % (2**32)
+            elif i > j:
+                masked[i] = (masked[i] - masks[j][i]) % (2**32)
+    out = np.asarray(masked_sum(jnp.asarray(masked.astype(np.uint32))))
+    ref = np.asarray(masked_sum_ref(jnp.asarray(plain)))
+    np.testing.assert_array_equal(out, ref)
+
+
+def test_vmem_estimates_within_tpu_budget():
+    # structural §Perf check: AOT shapes fit a 16 MiB VMEM comfortably
+    assert vmem_bytes(32, 192, 256) < 4 * 2**20
+    assert vmem_bytes(20, 1024, 40) < 4 * 2**20
+    assert agg_vmem_bytes(64, 65536) < 8 * 2**20
+
+
+def test_block_rows_divide():
+    for m in [1, 2, 7, 30, 32, 100, 128, 999]:
+        bm = _pick_block_rows(m)
+        assert m % bm == 0 and bm <= 128
+
+
+# --- quantize kernel -------------------------------------------------------
+
+from compile.kernels.quantize import quantize, _pick_block
+from compile.kernels.ref import quantize_ref
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.sampled_from([1, 7, 64, 1000, 4096]),
+    clip=st.sampled_from([1.0, 4.0]),
+    scale=st.sampled_from([100.0, 65536.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quantize_matches_ref(m, clip, scale, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray((rng.standard_normal(m) * 2).astype(np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(quantize(x, clip, scale)), np.asarray(quantize_ref(x, clip, scale))
+    )
+
+
+def test_quantize_two_complement_wrap():
+    x = jnp.asarray(np.array([-1.0, 1.0, 0.0], np.float32))
+    out = np.asarray(quantize(x, 4.0, 100.0))
+    assert out[1] == 100
+    assert out[0] == np.uint32(2**32 - 100)  # -100 wraps
+    assert out[2] == 0
+
+
+def test_quantize_clips():
+    x = jnp.asarray(np.array([100.0, -100.0], np.float32))
+    out = np.asarray(quantize(x, 2.0, 10.0))
+    assert out[0] == 20
+    assert out[1] == np.uint32(2**32 - 20)

@@ -1,0 +1,126 @@
+"""L2 correctness: training steps decrease loss, pallas and reference paths
+agree, the inversion step recovers class templates on a toy problem."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+def _toy_batch(rng, batch, d, c):
+    y = rng.integers(0, c, size=batch)
+    x = rng.standard_normal((batch, d)).astype(np.float32) + y[:, None] / c
+    onehot = np.eye(c, dtype=np.float32)[y]
+    return jnp.asarray(x), jnp.asarray(onehot), jnp.asarray(y.astype(np.int32))
+
+
+def test_mlp_pallas_matches_ref_path():
+    rng = np.random.default_rng(1)
+    d, h, c, b = 24, 16, 5, 8
+    w1, b1, w2, b2 = model.mlp_init(jax.random.PRNGKey(0), d, h, c)
+    x, y1h, _ = _toy_batch(rng, b, d, c)
+    lr = jnp.float32(0.1)
+    out_p = model.mlp_train_step(w1, b1, w2, b2, x, y1h, lr, use_pallas=True)
+    out_r = model.mlp_train_step(w1, b1, w2, b2, x, y1h, lr, use_pallas=False)
+    for a, r in zip(out_p, out_r):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(r), rtol=2e-4, atol=2e-4)
+
+
+def test_mlp_training_reduces_loss():
+    rng = np.random.default_rng(2)
+    d, h, c, b = 16, 32, 4, 32
+    params = model.mlp_init(jax.random.PRNGKey(1), d, h, c)
+    x, y1h, labels = _toy_batch(rng, b, d, c)
+    lr = jnp.float32(0.5)
+    first_loss = None
+    loss = None
+    for _ in range(30):
+        *params, loss = model.mlp_train_step(*params, x, y1h, lr)
+        if first_loss is None:
+            first_loss = float(loss)
+    assert float(loss) < 0.7 * first_loss, (first_loss, float(loss))
+    (correct,) = model.mlp_eval_step(*params, x, labels)
+    assert int(correct) >= b // 2
+
+
+def test_softreg_training_and_prediction():
+    rng = np.random.default_rng(3)
+    d, c, b = 32, 6, 24
+    w = jnp.zeros((d, c), jnp.float32)
+    bb = jnp.zeros((c,), jnp.float32)
+    x, y1h, labels = _toy_batch(rng, b, d, c)
+    loss0 = None
+    loss = None
+    for _ in range(40):
+        w, bb, loss = model.softreg_train_step(w, bb, x, y1h, jnp.float32(0.5))
+        if loss0 is None:
+            loss0 = float(loss)
+    assert float(loss) < loss0
+    (probs,) = model.softreg_predict(w, bb, x)
+    probs = np.asarray(probs)
+    assert probs.shape == (b, c)
+    np.testing.assert_allclose(probs.sum(axis=1), 1.0, rtol=1e-5)
+    acc = (probs.argmax(axis=1) == np.asarray(labels)).mean()
+    assert acc > 0.5
+
+
+def test_inversion_recovers_class_template():
+    # identities are distinct templates; softmax regression trained on them
+    # must leak the template through gradient inversion (the FedAvg row of
+    # Fig 2). This is the attack's unit-level ground truth.
+    rng = np.random.default_rng(4)
+    d, c = 64, 4
+    templates = rng.uniform(0.0, 1.0, size=(c, d)).astype(np.float32)
+    x_train = np.repeat(templates, 16, axis=0) + 0.05 * rng.standard_normal(
+        (c * 16, d)
+    ).astype(np.float32)
+    y_train = np.repeat(np.arange(c), 16)
+    y1h = np.eye(c, dtype=np.float32)[y_train]
+
+    w = jnp.zeros((d, c), jnp.float32)
+    b = jnp.zeros((c,), jnp.float32)
+    for _ in range(200):
+        w, b, _ = model.softreg_train_step(
+            w, b, jnp.asarray(x_train), jnp.asarray(y1h), jnp.float32(1.0)
+        )
+
+    target = 2
+    x = jnp.full((1, d), 0.5, jnp.float32)
+    t1h = jnp.asarray(np.eye(c, dtype=np.float32)[[target]])
+    for _ in range(100):
+        x, _ = model.softreg_inversion_step(w, b, x, t1h, jnp.float32(5.0))
+    rec = np.asarray(x)[0]
+
+    def cos(a, bb):
+        return float(np.dot(a, bb) / (np.linalg.norm(a) * np.linalg.norm(bb) + 1e-9))
+
+    target_sim = cos(rec - rec.mean(), templates[target] - templates[target].mean())
+    other_sims = [
+        cos(rec - rec.mean(), templates[k] - templates[k].mean())
+        for k in range(c)
+        if k != target
+    ]
+    assert target_sim > 0.4, target_sim
+    assert target_sim > max(other_sims) + 0.15, (target_sim, other_sims)
+
+
+def test_inversion_stays_in_unit_box():
+    d, c = 16, 3
+    w = jnp.zeros((d, c), jnp.float32)
+    b = jnp.zeros((c,), jnp.float32)
+    x = jnp.full((1, d), 0.5, jnp.float32)
+    t1h = jnp.asarray(np.eye(c, dtype=np.float32)[[0]])
+    x, loss = model.softreg_inversion_step(w, b, x, t1h, jnp.float32(100.0))
+    arr = np.asarray(x)
+    assert (arr >= 0.0).all() and (arr <= 1.0).all()
+    assert np.isfinite(float(loss))
+
+
+def test_loss_is_cross_entropy():
+    logits = jnp.asarray([[10.0, 0.0], [0.0, 10.0]], jnp.float32)
+    y = jnp.asarray([[1.0, 0.0], [0.0, 1.0]], jnp.float32)
+    assert float(model.softmax_cross_entropy(logits, y)) < 1e-3
+    y_wrong = jnp.asarray([[0.0, 1.0], [1.0, 0.0]], jnp.float32)
+    assert float(model.softmax_cross_entropy(logits, y_wrong)) > 5.0

@@ -1,0 +1,79 @@
+//! Crypto-substrate microbenchmarks — the §Perf instrument for L3 hot
+//! paths: ChaCha20 keystream (the PRG), SHA-256/HKDF (key derivation),
+//! x25519 (key agreement), AEAD (share encryption), GF(2^16) and Shamir
+//! (share generation / reconstruction at Table-5.1 scales).
+
+use ccesa::bench::{black_box, Bench};
+use ccesa::crypto::{aead, chacha20::ChaCha20, dh, hkdf, prg, sha256};
+use ccesa::shamir;
+use ccesa::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new("crypto_primitives");
+
+    // ChaCha20 raw block throughput — the PRG inner loop
+    let cipher = ChaCha20::new(&[7u8; 32], &[1u8; 12]);
+    let mut block = [0u32; 16];
+    b.throughput("chacha20 block (64B)", 64.0, "B/s", || {
+        cipher.block_words(black_box(1), &mut block);
+        black_box(block[0]);
+    });
+
+    // PRG mask expansion at the paper's m=10^4 and the E2E m≈5·10^4
+    for &m in &[10_000usize, 52_000] {
+        let mut acc = vec![0u64; m];
+        let seed = [9u8; 32];
+        b.throughput(
+            &format!("prg apply_mask m={m} (b=32)"),
+            (m * 4) as f64,
+            "B/s",
+            || {
+                prg::apply_mask(&mut acc, &seed, &prg::NONCE_PAIRWISE, 32, false);
+                black_box(acc[0]);
+            },
+        );
+    }
+
+    // SHA-256 / HKDF
+    let data = vec![0xABu8; 1024];
+    b.throughput("sha256 1KiB", 1024.0, "B/s", || {
+        black_box(sha256::sha256(&data));
+    });
+    b.bench("hkdf32 (extract+expand)", || {
+        black_box(hkdf::hkdf32(b"salt", &data[..32], b"info"));
+    });
+
+    // x25519: keygen + agreement — Step 0/2 cost per neighbor
+    let mut rng = Rng::new(1);
+    let alice = dh::KeyPair::generate(&mut rng);
+    let bob = dh::KeyPair::generate(&mut rng);
+    b.bench("x25519 key agreement", || {
+        black_box(dh::agree_mask_seed(&alice.sk, &bob.pk));
+    });
+
+    // AEAD seal/open of one share pair (the Step-1 payload)
+    let key = [3u8; 32];
+    let nonce = [4u8; 12];
+    let pt = vec![0x5Au8; 70];
+    let ct = aead::seal(&key, &nonce, b"aad", &pt);
+    b.bench("aead seal 70B share pair", || {
+        black_box(aead::seal(&key, &nonce, b"aad", &pt));
+    });
+    b.bench("aead open 70B share pair", || {
+        black_box(aead::open(&key, &nonce, b"aad", &ct).unwrap());
+    });
+
+    // Shamir at Table-5.1 scale: n=100 holders, t=51
+    let secret = [0xC5u8; 32];
+    let points: Vec<u16> = (1..=100).collect();
+    let mut srng = Rng::new(2);
+    b.bench("shamir split 32B t=51 n=100", || {
+        black_box(shamir::split(&secret, 51, &points, &mut srng).unwrap());
+    });
+    let shares = shamir::split(&secret, 51, &points, &mut srng).unwrap();
+    b.bench("shamir reconstruct t=51", || {
+        black_box(shamir::reconstruct(&shares[..51], 51, 32).unwrap());
+    });
+
+    b.report();
+}

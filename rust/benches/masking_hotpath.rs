@@ -1,0 +1,81 @@
+//! The Step-2 / unmasking hot path at production scale (E-perf): PRG mask
+//! expansion + wrapping adds at m = 10^6 (the paper's running example) and
+//! at the E2E model size, plus quantize/dequantize throughput.
+//!
+//! §Perf target: apply_mask at memory-bandwidth-limited rate — ChaCha20
+//! generation dominates, so the keystream rate is the roofline.
+
+use ccesa::bench::{black_box, Bench};
+use ccesa::crypto::prg::{apply_mask, expand_masks, NONCE_PAIRWISE};
+use ccesa::masking::{add_assign, Quantizer};
+use ccesa::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new("masking_hotpath");
+    let seed = [0xA5u8; 32];
+
+    for &m in &[10_000usize, 100_000, 1_000_000] {
+        let mut acc = vec![0u64; m];
+        b.throughput(
+            &format!("apply_mask m={m} b=32 (fused)"),
+            (m * 4) as f64,
+            "B/s",
+            || {
+                apply_mask(&mut acc, &seed, &NONCE_PAIRWISE, 32, false);
+                black_box(acc[0]);
+            },
+        );
+    }
+
+    // unfused baseline: expand then add (what the naive Eq.-3 code does)
+    let m = 1_000_000;
+    let mut acc = vec![0u64; m];
+    let mut mask = vec![0u64; m];
+    b.throughput("expand+add m=1e6 b=32 (unfused)", (m * 4) as f64, "B/s", || {
+        expand_masks(&seed, &NONCE_PAIRWISE, 32, &mut mask);
+        add_assign(&mut acc, &mask, 32);
+        black_box(acc[0]);
+    });
+
+    // 16-bit domain (Table 5.1's field)
+    let mut acc16 = vec![0u64; m];
+    b.throughput("apply_mask m=1e6 b=16", (m * 2) as f64, "B/s", || {
+        apply_mask(&mut acc16, &seed, &NONCE_PAIRWISE, 16, false);
+        black_box(acc16[0]);
+    });
+
+    // quantizer
+    let mut rng = Rng::new(3);
+    let xs: Vec<f32> = (0..m).map(|_| rng.normal_f32(0.0, 0.5)).collect();
+    let q = Quantizer::for_sum_of(32, 4.0, 100);
+    b.throughput("quantize m=1e6", m as f64, "elem/s", || {
+        black_box(q.quantize(&xs));
+    });
+    let words = q.quantize(&xs);
+    b.throughput("dequantize m=1e6", m as f64, "elem/s", || {
+        black_box(q.dequantize(&words));
+    });
+
+    // server-side aggregation of 64 masked vectors (cf. the masked_sum
+    // HLO kernel benched in round_latency)
+    let vecs: Vec<Vec<u64>> = (0..64)
+        .map(|i| (0..10_000).map(|j| (i * j) as u64 & 0xFFFF_FFFF).collect())
+        .collect();
+    let mut agg = vec![0u64; 10_000];
+    b.throughput(
+        "server sum 64 x m=1e4 (rust)",
+        (64 * 10_000 * 4) as f64,
+        "B/s",
+        || {
+            for a in agg.iter_mut() {
+                *a = 0;
+            }
+            for v in &vecs {
+                add_assign(&mut agg, v, 32);
+            }
+            black_box(agg[0]);
+        },
+    );
+
+    b.report();
+}

@@ -1,0 +1,77 @@
+//! End-to-end round latency vs n (E-perf / Table 5.1 aggregate), the
+//! threaded coordinator vs the sync engine, and the PJRT masked_sum
+//! kernel vs the pure-Rust server aggregation.
+
+use ccesa::analysis::bounds::{p_star, t_rule};
+use ccesa::bench::{black_box, Bench};
+use ccesa::coordinator::run_round_threaded;
+use ccesa::protocol::engine::run_round;
+use ccesa::protocol::{ProtocolConfig, Topology};
+use ccesa::runtime::{to_u32, Input, Manifest, Runtime};
+use ccesa::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new("round_latency");
+    let dim = 10_000;
+
+    for &n in &[50usize, 100, 200] {
+        let mut rng = Rng::new(9);
+        let models: Vec<Vec<u64>> = (0..n)
+            .map(|_| (0..dim).map(|_| rng.next_u64() & 0xFFFF_FFFF).collect())
+            .collect();
+        let p = p_star(n, 0.0);
+        let cc_cfg = ProtocolConfig::new(n, t_rule(n, p), dim, Topology::ErdosRenyi { p }, 4);
+        let sa_cfg = ProtocolConfig::new(n, n / 2 + 1, dim, Topology::Complete, 4);
+        b.bench(&format!("round n={n} CCESA(p*) sync"), || {
+            black_box(run_round(&cc_cfg, &models).unwrap());
+        });
+        b.bench(&format!("round n={n} SA sync"), || {
+            black_box(run_round(&sa_cfg, &models).unwrap());
+        });
+        if n == 100 {
+            b.bench(&format!("round n={n} CCESA(p*) threaded"), || {
+                black_box(run_round_threaded(&cc_cfg, &models).unwrap());
+            });
+        }
+    }
+
+    // PJRT masked_sum kernel vs rust loop at the AOT shape
+    let dir = Manifest::default_dir();
+    if dir.join("manifest.json").exists() {
+        let rt = Runtime::cpu(&dir).expect("pjrt");
+        let exe = rt.load("masked_sum").expect("masked_sum artifact");
+        let (clients, m) = rt.manifest.agg_dims();
+        let mut rng = Rng::new(11);
+        let stacked: Vec<u32> = (0..clients * m).map(|_| rng.next_u32()).collect();
+        b.throughput(
+            &format!("masked_sum HLO {clients}x{m}"),
+            (clients * m * 4) as f64,
+            "B/s",
+            || {
+                let outs = exe
+                    .run(&[Input::U32(stacked.clone(), vec![clients as i64, m as i64])])
+                    .unwrap();
+                black_box(to_u32(&outs[0]).unwrap());
+            },
+        );
+        b.throughput(
+            &format!("masked_sum rust {clients}x{m}"),
+            (clients * m * 4) as f64,
+            "B/s",
+            || {
+                let mut acc = vec![0u32; m];
+                for c in 0..clients {
+                    let row = &stacked[c * m..(c + 1) * m];
+                    for (a, x) in acc.iter_mut().zip(row) {
+                        *a = a.wrapping_add(*x);
+                    }
+                }
+                black_box(acc[0]);
+            },
+        );
+    } else {
+        eprintln!("skipping PJRT kernel bench: artifacts not built");
+    }
+
+    b.report();
+}

@@ -1,0 +1,84 @@
+//! Table 1 reproduction (E1): measured communication and computation vs n
+//! for CCESA / SA / FedAvg, with log–log exponent fits against the paper's
+//! asymptotic columns.
+//!
+//! Client comm:  CCESA O(√(n log n)+m)  SA O(n+m)   FedAvg O(m)
+//! Server comm:  CCESA O(n√(n log n)+mn) SA O(n²+mn) FedAvg O(mn)
+//! Client time:  CCESA ≈ p·SA           SA O(n²+mn)
+
+use ccesa::analysis::bounds::{p_star, t_rule};
+use ccesa::protocol::engine::run_round;
+use ccesa::protocol::{ProtocolConfig, Topology};
+use ccesa::util::rng::Rng;
+use ccesa::util::stats::power_law_exponent;
+
+fn main() {
+    let full = std::env::var("CCESA_BENCH_FULL").ok().as_deref() == Some("1");
+    let ns: Vec<usize> = if full {
+        vec![50, 100, 200, 400, 800]
+    } else {
+        vec![50, 100, 200, 400]
+    };
+    let dim = 2_000; // keep the m-term visible but not dominant
+
+    println!("== Table 1: measured scaling vs n (dim={dim}) ==");
+    println!(
+        "{:>5} {:>7} | {:>12} {:>12} | {:>12} {:>12} | {:>10} {:>10}",
+        "n", "p*", "cl B ccesa", "cl B sa", "sv B ccesa", "sv B sa", "cl ms cc", "cl ms sa"
+    );
+
+    let mut rows: Vec<(f64, [f64; 6])> = Vec::new();
+    for &n in &ns {
+        let mut rng = Rng::new(1);
+        let models: Vec<Vec<u64>> = (0..n)
+            .map(|_| (0..dim).map(|_| rng.next_u64() & 0xFFFF_FFFF).collect())
+            .collect();
+        let p = p_star(n, 0.0);
+        let cc = run_round(
+            &ProtocolConfig::new(n, t_rule(n, p), dim, Topology::ErdosRenyi { p }, 7),
+            &models,
+        )
+        .expect("ccesa round");
+        let sa = run_round(
+            &ProtocolConfig::new(n, n / 2 + 1, dim, Topology::Complete, 7),
+            &models,
+        )
+        .expect("sa round");
+        let model_bytes = (dim * 4) as f64;
+        let cl_cc = cc.stats.mean_client_total() - model_bytes;
+        let cl_sa = sa.stats.mean_client_total() - model_bytes;
+        let sv_cc = cc.stats.server_total() as f64;
+        let sv_sa = sa.stats.server_total() as f64;
+        let t_cc: f64 = ["client_step0", "client_step1", "client_step2", "client_step3"]
+            .iter()
+            .map(|s| cc.times.total_ms(s))
+            .sum::<f64>()
+            / n as f64;
+        let t_sa: f64 = ["client_step0", "client_step1", "client_step2", "client_step3"]
+            .iter()
+            .map(|s| sa.times.total_ms(s))
+            .sum::<f64>()
+            / n as f64;
+        println!(
+            "{n:>5} {p:>7.3} | {cl_cc:>12.0} {cl_sa:>12.0} | {sv_cc:>12.0} {sv_sa:>12.0} | {t_cc:>10.3} {t_sa:>10.3}"
+        );
+        rows.push((n as f64, [cl_cc, cl_sa, sv_cc, sv_sa, t_cc, t_sa]));
+    }
+
+    let xs: Vec<f64> = rows.iter().map(|(n, _)| *n).collect();
+    let col = |i: usize| -> Vec<f64> { rows.iter().map(|(_, r)| r[i]).collect() };
+    let fits = [
+        ("client extra bytes CCESA", 0, "≈0.6 (√(n log n))"),
+        ("client extra bytes SA", 1, "≈1.0 (n)"),
+        ("server bytes CCESA", 2, "1.0–1.6 (n√(n log n)+mn)"),
+        ("server bytes SA", 3, "1.0–2.0 (n²+mn)"),
+    ];
+    println!("\nlog–log exponent fits (paper's asymptotic column in parens):");
+    for (name, i, expect) in fits {
+        let (k, r2) = power_law_exponent(&xs, &col(i));
+        println!("  {name:<28} n^{k:.2}  (r²={r2:.3}; paper {expect})");
+    }
+    let (k_tcc, _) = power_law_exponent(&xs, &col(4));
+    let (k_tsa, _) = power_law_exponent(&xs, &col(5));
+    println!("  client time CCESA            n^{k_tcc:.2}   vs SA n^{k_tsa:.2} (CCESA flatter)");
+}

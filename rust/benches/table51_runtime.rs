@@ -1,0 +1,83 @@
+//! Table 5.1 reproduction (E3): per-step running time of SA vs CCESA.
+//!
+//! Mirrors the paper's setup: m = 10000 model elements in F_{2^16},
+//! n ∈ {100, 300 (500 with CCESA_BENCH_FULL=1)}, q_total ∈ {0, 0.1};
+//! t per the paper (SA: n/2+1, CCESA: Remark 4), p = p*(n, q_total).
+//! Reports mean per-client milliseconds for Steps 0–3 and total server
+//! time — the paper's claim is the CCESA/SA ratio ≈ p.
+
+use ccesa::analysis::bounds::{p_star, t_rule};
+use ccesa::protocol::dropout::DropoutModel;
+use ccesa::protocol::engine::run_round;
+use ccesa::protocol::{ProtocolConfig, Topology};
+use ccesa::util::rng::Rng;
+
+fn main() {
+    let full = std::env::var("CCESA_BENCH_FULL").ok().as_deref() == Some("1");
+    let ns: &[usize] = if full { &[100, 300, 500] } else { &[100, 300] };
+    let dim = 10_000;
+    let mask_bits = 16;
+
+    println!("== Table 5.1: running time (ms), m={dim}, field 2^16 ==");
+    println!(
+        "{:<6} {:>5} {:>7} {:>5} {:>7} | {:>9} {:>9} {:>9} {:>9} | {:>9} | {:>9}",
+        "scheme", "n", "q_tot", "t", "p", "step0", "step1", "step2", "step3", "client Σ", "server"
+    );
+
+    let mut ratios: Vec<f64> = Vec::new();
+    for &n in ns {
+        for &q_total in &[0.0, 0.1] {
+            let mut rng = Rng::new(0x51);
+            let models: Vec<Vec<u64>> = (0..n)
+                .map(|_| (0..dim).map(|_| rng.next_u64() & 0xFFFF).collect())
+                .collect();
+            let row = |scheme: &str, topology: Topology, t: usize, p_label: f64| -> f64 {
+                let cfg = ProtocolConfig {
+                    n,
+                    t,
+                    mask_bits,
+                    dim,
+                    topology,
+                    dropout: if q_total > 0.0 {
+                        DropoutModel::iid_from_total(q_total)
+                    } else {
+                        DropoutModel::None
+                    },
+                    seed: 0xBE7C + n as u64,
+                };
+                let r = run_round(&cfg, &models).expect("round");
+                let per_client = |name: &str| {
+                    // engine buckets aggregate all clients; report mean/client
+                    r.times.total_ms(name) / n as f64
+                };
+                let c0 = per_client("client_step0");
+                let c1 = per_client("client_step1");
+                let c2 = per_client("client_step2");
+                let c3 = per_client("client_step3");
+                let server = r.times.total_ms("server_step0")
+                    + r.times.total_ms("server_step1")
+                    + r.times.total_ms("server_step2")
+                    + r.times.total_ms("server_finalize");
+                let client_total = c0 + c1 + c2 + c3;
+                println!(
+                    "{scheme:<6} {n:>5} {q_total:>7.2} {t:>5} {p_label:>7.3} | {c0:>9.3} {c1:>9.3} {c2:>9.3} {c3:>9.3} | {client_total:>9.3} | {server:>9.1}",
+                );
+                client_total
+            };
+            let sa_t = n / 2 + 1;
+            let sa_total = row("SA", Topology::Complete, sa_t, 1.0);
+            let p = p_star(n, q_total);
+            let cc_t = t_rule(n, p);
+            let cc_total = row("CCESA", Topology::ErdosRenyi { p }, cc_t, p);
+            let ratio = cc_total / sa_total;
+            println!(
+                "       -> CCESA/SA client-time ratio = {ratio:.3} (paper predicts ≈ p = {p:.3})"
+            );
+            ratios.push(ratio / p);
+        }
+    }
+    let mean_rel = ratios.iter().sum::<f64>() / ratios.len() as f64;
+    println!(
+        "\nmean (measured ratio)/(predicted p) = {mean_rel:.2} — 1.0 is a perfect Table 5.1 match"
+    );
+}

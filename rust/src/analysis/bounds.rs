@@ -1,0 +1,263 @@
+//! Executable forms of the paper's Theorems 3–6, the threshold connection
+//! probability p* (Eq. 5) and the design rule for t (Remark 4 / Prop. 1).
+//!
+//! All logarithms are natural, matching the proofs in Appendix B (the
+//! paper's `log` is `ln`; this reproduces Table F.4 exactly, e.g.
+//! p*(100, q_total=0) = 0.6362).
+
+/// Natural-log of n! via a cached cumulative table (n ≤ 1 << 20).
+fn ln_factorial(n: usize) -> f64 {
+    use std::sync::OnceLock;
+    static TABLE: OnceLock<Vec<f64>> = OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut t = Vec::with_capacity(4097);
+        t.push(0.0);
+        for k in 1..=4096usize {
+            t.push(t[k - 1] + (k as f64).ln());
+        }
+        t
+    });
+    if n < table.len() {
+        return table[n];
+    }
+    // Stirling with correction for the (rare) large-n case
+    let x = n as f64;
+    x * x.ln() - x + 0.5 * (2.0 * std::f64::consts::PI * x).ln() + 1.0 / (12.0 * x)
+}
+
+/// ln C(n, k).
+pub fn ln_choose(n: usize, k: usize) -> f64 {
+    assert!(k <= n);
+    ln_factorial(n) - ln_factorial(k) - ln_factorial(n - k)
+}
+
+/// Bernoulli KL divergence D(a ‖ b), natural log.
+pub fn kl_div(a: f64, b: f64) -> f64 {
+    assert!((0.0..=1.0).contains(&a) && (0.0 < b && b < 1.0));
+    let term = |x: f64, y: f64| if x == 0.0 { 0.0 } else { x * (x / y).ln() };
+    term(a, b) + term(1.0 - a, 1.0 - b)
+}
+
+/// Per-step dropout q from protocol-level q_total = 1 − (1−q)^4.
+pub fn per_step_q(q_total: f64) -> f64 {
+    assert!((0.0..1.0).contains(&q_total));
+    1.0 - (1.0 - q_total).powf(0.25)
+}
+
+/// Remark 4: t = ⌈((n−1)p + √((n−1)ln(n−1)) + 1)/2⌉ — the minimum
+/// threshold that defeats the unmasking attack (Prop. 1) while maximizing
+/// dropout tolerance.
+pub fn t_rule(n: usize, p: f64) -> usize {
+    assert!(n >= 2);
+    let nf = (n - 1) as f64;
+    (((nf * p) + (nf * nf.ln()).sqrt() + 1.0) / 2.0).ceil() as usize
+}
+
+/// Theorem 3's reliability threshold on p (a.a.s. reliable above it):
+/// p > (3√((n−1)ln(n−1)) − 1) / ((n−1)(2(1−q)^4 − 1)).
+pub fn theorem3_threshold(n: usize, q: f64) -> f64 {
+    let nf = (n - 1) as f64;
+    let denom = nf * (2.0 * (1.0 - q).powi(4) - 1.0);
+    assert!(denom > 0.0, "reliability threshold requires (1-q)^4 > 1/2");
+    (3.0 * (nf * nf.ln()).sqrt() - 1.0) / denom
+}
+
+/// Theorem 4's privacy threshold on p (a.a.s. private above it):
+/// p > ln(⌈n(1−q)^3 − √(n ln n)⌉) / ⌈n(1−q)^3 − √(n ln n)⌉.
+pub fn theorem4_threshold(n: usize, q: f64) -> f64 {
+    let nf = n as f64;
+    let l = (nf * (1.0 - q).powi(3) - (nf * nf.ln()).sqrt()).ceil();
+    assert!(l >= 2.0, "n too small for the Theorem-4 bound");
+    l.ln() / l
+}
+
+/// Eq. (5): p* = max(privacy threshold, reliability threshold), given the
+/// protocol-level dropout q_total (Table F.4 / Fig 4.1 parameterization).
+pub fn p_star(n: usize, q_total: f64) -> f64 {
+    let q = per_step_q(q_total);
+    theorem4_threshold(n, q).max(theorem3_threshold(n, q)).min(1.0)
+}
+
+/// Theorem 5: upper bound on the reliability failure probability,
+/// P_e^(r) ≤ n · exp(−(n−1) · D((t−1)/(n−1) ‖ p(1−q)^4)).
+///
+/// The Chernoff bound is valid (and returned) only when the success rate
+/// p(1−q)^4 exceeds (t−1)/(n−1); otherwise returns 1.0 (vacuous).
+pub fn theorem5_reliability_bound(n: usize, p: f64, q: f64, t: usize) -> f64 {
+    let nf = (n - 1) as f64;
+    let a = (t - 1) as f64 / nf;
+    let b = (p * (1.0 - q).powi(4)).clamp(1e-12, 1.0 - 1e-12);
+    if a >= b {
+        return 1.0;
+    }
+    ((n as f64).ln() - nf * kl_div(a, b)).exp().min(1.0)
+}
+
+/// Theorem 6: upper bound on the privacy failure probability,
+/// P_e^(p) ≤ Σ_m C(n,m)(1−q)^{3m}(1−(1−q)^3)^{n−m} Σ_k C(m,k)(1−p)^{k(m−k)}.
+///
+/// Evaluated in log space; values below ~1e-300 underflow to 0, which is
+/// fine for plotting Fig 4.1 (the paper reports ≤ 1e-40).
+pub fn theorem6_privacy_bound(n: usize, p: f64, q: f64) -> f64 {
+    let s3 = (1.0 - q).powi(3); // P(client alive at step 2)
+    let ln_s3 = s3.ln();
+    let ln_not_s3 = (1.0 - s3).max(1e-300).ln();
+    let ln_1mp = (1.0 - p).max(1e-300).ln();
+    let mut total = 0.0f64;
+    for m in 2..=n {
+        let ln_am = ln_choose(n, m) + (m as f64) * ln_s3 + ((n - m) as f64) * ln_not_s3;
+        let mut bm = 0.0f64;
+        for k in 1..=m / 2 {
+            let ln_term = ln_choose(m, k) + (k * (m - k)) as f64 * ln_1mp;
+            bm += ln_term.exp();
+        }
+        total += ln_am.exp() * bm.min(1.0);
+    }
+    total.min(1.0)
+}
+
+/// Asymptotic reliability guarantee from Table 1:
+/// P(reliable) ≥ 1 − O(n e^{−√(n log n)}) at p = p*.
+pub fn table1_reliability_guarantee(n: usize, q_total: f64) -> f64 {
+    let q = per_step_q(q_total);
+    let p = p_star(n, q_total);
+    let t = t_rule(n, p);
+    1.0 - theorem5_reliability_bound(n, p, q, t)
+}
+
+/// A row of Table F.4: (n, q_total) → p*.
+pub fn table_f4() -> Vec<(usize, f64, f64)> {
+    let mut rows = Vec::new();
+    for &q_total in &[0.0, 0.01, 0.05, 0.1] {
+        for n in (100..=1000).step_by(100) {
+            rows.push((n, q_total, p_star(n, q_total)));
+        }
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ln_choose_small_values() {
+        assert!((ln_choose(5, 2) - (10f64).ln()).abs() < 1e-12);
+        assert!((ln_choose(10, 0)).abs() < 1e-12);
+        assert!((ln_choose(10, 10)).abs() < 1e-12);
+        // large n via Stirling fallback: C(10000, 2) = 49995000
+        assert!((ln_choose(10_000, 2) - (49_995_000f64).ln()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn kl_properties() {
+        assert_eq!(kl_div(0.3, 0.3), 0.0);
+        assert!(kl_div(0.1, 0.5) > 0.0);
+        assert!(kl_div(0.0, 0.5) > 0.0);
+    }
+
+    #[test]
+    fn reproduces_table_f4_values() {
+        // Table F.4 of the paper, rounded to 3 decimals
+        let cases = [
+            (100, 0.0, 0.636),
+            (300, 0.0, 0.411),
+            (500, 0.0, 0.333),
+            (1000, 0.0, 0.248),
+            (100, 0.01, 0.649),
+            (500, 0.05, 0.370),
+            (100, 0.1, 0.795),
+            (300, 0.1, 0.513),
+            (500, 0.1, 0.416),
+            (1000, 0.1, 0.311),
+        ];
+        for (n, qt, expect) in cases {
+            let p = p_star(n, qt);
+            assert!(
+                (p - expect).abs() < 0.0015,
+                "p*({n},{qt}) = {p:.4}, paper says {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn reproduces_table51_thresholds() {
+        // Table 5.1's t column for CCESA: (n, q_total) → t at p = p*
+        let cases = [(100, 0.0, 43), (100, 0.1, 51), (300, 0.0, 83), (500, 0.0, 112), (500, 0.1, 133)];
+        for (n, qt, expect_t) in cases {
+            let t = t_rule(n, p_star(n, qt));
+            assert!(
+                (t as i64 - expect_t as i64).abs() <= 1,
+                "t({n},{qt}) = {t}, paper says {expect_t}"
+            );
+        }
+        // and SA's convention t = n/2 + 1 is just a special case the
+        // benches set explicitly (paper used 51/151/251)
+    }
+
+    #[test]
+    fn p_star_decreasing_in_n() {
+        let mut prev = f64::INFINITY;
+        for n in (100..=1000).step_by(100) {
+            let p = p_star(n, 0.05);
+            assert!(p < prev, "p* must decrease with n");
+            prev = p;
+        }
+    }
+
+    #[test]
+    fn p_star_increasing_in_dropout() {
+        for n in [100, 500, 1000] {
+            assert!(p_star(n, 0.1) > p_star(n, 0.0));
+        }
+    }
+
+    #[test]
+    fn theorem5_bound_behaves() {
+        // at p = p*, the bound must be < 10^-2-ish for moderate n (Fig 4.1
+        // shows ≤ 1e-2 across the range)
+        for n in [100usize, 300, 500, 1000] {
+            let p = p_star(n, 0.1);
+            let q = per_step_q(0.1);
+            let t = t_rule(n, p);
+            let b = theorem5_reliability_bound(n, p, q, t);
+            assert!(b < 0.05, "n={n}: P_e^(r) bound {b}");
+            // monotone: larger p ⇒ smaller bound
+            let b_hi = theorem5_reliability_bound(n, (p * 1.3).min(1.0), q, t);
+            assert!(b_hi <= b * 1.001);
+        }
+        // vacuous regime: success rate below (t-1)/(n-1)
+        assert_eq!(theorem5_reliability_bound(100, 0.1, 0.5, 90), 1.0);
+    }
+
+    #[test]
+    fn theorem6_bound_tiny_at_p_star() {
+        // Fig 4.1: privacy failure bound ≤ 1e-40 at p = p*
+        for n in [100usize, 500, 1000] {
+            let p = p_star(n, 0.1);
+            let q = per_step_q(0.1);
+            let b = theorem6_privacy_bound(n, p, q);
+            assert!(b < 1e-20, "n={n}: P_e^(p) bound {b:e}");
+        }
+    }
+
+    #[test]
+    fn theorem6_bound_large_when_p_small() {
+        // sanity: with p near 0 the graph is a.s. disconnected
+        let b = theorem6_privacy_bound(50, 0.01, 0.0);
+        assert!(b > 0.5, "bound {b}");
+    }
+
+    #[test]
+    fn per_step_q_inverts_total() {
+        for qt in [0.0, 0.01, 0.05, 0.1, 0.5] {
+            let q = per_step_q(qt);
+            assert!((1.0 - (1.0 - q).powi(4) - qt).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn table1_guarantee_close_to_one() {
+        assert!(table1_reliability_guarantee(500, 0.0) > 0.95);
+    }
+}

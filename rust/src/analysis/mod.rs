@@ -1,0 +1,14 @@
+//! Theoretical analysis of the paper, made executable.
+//!
+//! * [`bounds`] — Theorems 3–6, the threshold probability p* (Eq. 5), the
+//!   secret-sharing design rule for t (Remark 4) — regenerates Fig 4.1 and
+//!   Table F.4;
+//! * [`costs`] — Appendix C's communication/computation cost models for
+//!   CCESA, SA and FedAvg, plus the Turbo-aggregate comparison from §1 —
+//!   regenerates Table 1's concrete columns;
+//! * [`montecarlo`] — fast graph-only estimators of the empirical
+//!   reliability/privacy failure rates, used to validate the bounds.
+
+pub mod bounds;
+pub mod costs;
+pub mod montecarlo;

@@ -1,0 +1,200 @@
+//! Fast Monte-Carlo estimators of the empirical reliability/privacy
+//! failure probabilities.
+//!
+//! These simulate only the *combinatorial* layer (graph + dropouts +
+//! Theorem-1/2 predicates) — no crypto — so thousands of trials per
+//! parameter point are cheap. The full-crypto engine agrees with these
+//! predicates exactly (asserted in `protocol::engine` and
+//! `protocol::adversary` tests), so the estimates transfer.
+
+use crate::graph::Graph;
+use crate::protocol::server::theorem1_predicate;
+use crate::protocol::SurvivorSets;
+use crate::util::rng::Rng;
+
+/// One simulated protocol evolution (graph + survivor sets).
+pub struct Evolution {
+    pub graph: Graph,
+    pub sets: SurvivorSets,
+}
+
+/// Sample the protocol evolution: G(n,p), then 4 rounds of i.i.d. per-step
+/// dropout with probability q. Clients whose live neighborhood at Step 1 is
+/// below t withdraw (mirroring the engine's behavior).
+pub fn sample_evolution(n: usize, p: f64, q: f64, t: usize, rng: &mut Rng) -> Evolution {
+    let graph = Graph::erdos_renyi(n, p, rng);
+    let mut alive: Vec<bool> = (0..n).map(|_| !rng.bernoulli(q)).collect();
+    let v1: Vec<usize> = (0..n).filter(|&i| alive[i]).collect();
+    // step-1 withdrawals: |Adj(i) ∩ V1| + 1 < t
+    let mut v2 = Vec::new();
+    for &i in &v1 {
+        if rng.bernoulli(q) {
+            alive[i] = false;
+            continue;
+        }
+        let live_neigh = graph
+            .neighbors(i)
+            .iter()
+            .filter(|&&j| SurvivorSets::contains(&v1, j))
+            .count();
+        if live_neigh + 1 < t {
+            alive[i] = false;
+            continue;
+        }
+        v2.push(i);
+    }
+    let v3: Vec<usize> = v2
+        .iter()
+        .copied()
+        .filter(|&_i| {
+            let s = !rng.bernoulli(q);
+            s
+        })
+        .collect();
+    let v4: Vec<usize> = v3.iter().copied().filter(|_| !rng.bernoulli(q)).collect();
+    Evolution { graph, sets: SurvivorSets { v1, v2, v3, v4 } }
+}
+
+/// Theorem-2 privacy predicate on a bare evolution (graph form of
+/// `adversary::theorem2_private`).
+pub fn theorem2_predicate(ev: &Evolution, t: usize) -> bool {
+    let (g3, map) = ev.graph.induced(&ev.sets.v3);
+    if g3.is_connected() {
+        return true;
+    }
+    let informative = |i: usize| {
+        let mut cnt = ev
+            .graph
+            .neighbors(i)
+            .iter()
+            .filter(|&&j| SurvivorSets::contains(&ev.sets.v4, j))
+            .count();
+        if SurvivorSets::contains(&ev.sets.v4, i) {
+            cnt += 1;
+        }
+        cnt >= t
+    };
+    for comp in g3.components() {
+        let c: Vec<usize> = comp.iter().map(|&v| map[v]).collect();
+        let mut c_plus = c.clone();
+        for &i in &ev.sets.v2 {
+            if c.contains(&i) {
+                continue;
+            }
+            if ev.graph.neighbors(i).iter().any(|&j| c.contains(&j)) {
+                c_plus.push(i);
+            }
+        }
+        if c_plus.iter().all(|&i| informative(i)) {
+            return false;
+        }
+    }
+    true
+}
+
+/// Monte-Carlo estimates over `trials` runs.
+#[derive(Debug, Clone, Copy)]
+pub struct FailureRates {
+    pub p_e_reliability: f64,
+    pub p_e_privacy: f64,
+    pub trials: usize,
+}
+
+pub fn estimate_failure_rates(
+    n: usize,
+    p: f64,
+    q: f64,
+    t: usize,
+    trials: usize,
+    seed: u64,
+) -> FailureRates {
+    let mut rng = Rng::new(seed);
+    let mut rel_fail = 0usize;
+    let mut priv_fail = 0usize;
+    for _ in 0..trials {
+        let ev = sample_evolution(n, p, q, t, &mut rng);
+        // Reliability per Definition 1: the server must actually obtain the
+        // sum — impossible when fewer than t clients reach Step 2, and
+        // (Theorem 1) when some node of V3⁺ is not informative.
+        if ev.sets.v3.len() < t || !theorem1_predicate(&ev.graph, &ev.sets, t) {
+            rel_fail += 1;
+        }
+        if !theorem2_predicate(&ev, t) {
+            priv_fail += 1;
+        }
+    }
+    FailureRates {
+        p_e_reliability: rel_fail as f64 / trials as f64,
+        p_e_privacy: priv_fail as f64 / trials as f64,
+        trials,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::bounds::{p_star, per_step_q, t_rule, theorem5_reliability_bound, theorem6_privacy_bound};
+
+    #[test]
+    fn complete_graph_never_fails_without_dropout() {
+        let r = estimate_failure_rates(30, 1.0, 0.0, 16, 50, 1);
+        assert_eq!(r.p_e_reliability, 0.0);
+        assert_eq!(r.p_e_privacy, 0.0);
+    }
+
+    #[test]
+    fn empirical_rates_respect_theorem_bounds() {
+        // The Chernoff/union bounds must upper-bound the empirical rates.
+        let n = 120;
+        for q_total in [0.0, 0.1] {
+            let q = per_step_q(q_total);
+            let p = p_star(n, q_total);
+            let t = t_rule(n, p);
+            let est = estimate_failure_rates(n, p, q, t, 400, 7);
+            let b5 = theorem5_reliability_bound(n, p, q, t);
+            let b6 = theorem6_privacy_bound(n, p, q);
+            let ci = 1.96 * (est.p_e_reliability * (1.0 - est.p_e_reliability) / 400.0)
+                .sqrt()
+                .max(0.01);
+            assert!(
+                est.p_e_reliability <= b5 + ci,
+                "q_total={q_total}: empirical rel fail {} > bound {b5}",
+                est.p_e_reliability
+            );
+            assert!(
+                est.p_e_privacy <= b6 + 0.01,
+                "q_total={q_total}: empirical priv fail {} > bound {b6:e}",
+                est.p_e_privacy
+            );
+        }
+    }
+
+    #[test]
+    fn privacy_fails_often_for_tiny_p() {
+        // far below the connectivity threshold with a permissive t, the
+        // attack surface opens up
+        let r = estimate_failure_rates(40, 0.06, 0.0, 2, 300, 3);
+        assert!(r.p_e_privacy > 0.05, "priv fail rate {}", r.p_e_privacy);
+    }
+
+    #[test]
+    fn reliability_fails_for_aggressive_threshold() {
+        // t close to n with dropout: some client will miss shares
+        let r = estimate_failure_rates(30, 0.5, 0.1, 25, 200, 5);
+        assert!(r.p_e_reliability > 0.5, "rel fail rate {}", r.p_e_reliability);
+    }
+
+    #[test]
+    fn evolution_sets_are_nested() {
+        let mut rng = Rng::new(11);
+        for _ in 0..20 {
+            let ev = sample_evolution(50, 0.3, 0.1, 5, &mut rng);
+            let contains = |sup: &[usize], sub: &[usize]| {
+                sub.iter().all(|&x| SurvivorSets::contains(sup, x))
+            };
+            assert!(contains(&ev.sets.v1, &ev.sets.v2));
+            assert!(contains(&ev.sets.v2, &ev.sets.v3));
+            assert!(contains(&ev.sets.v3, &ev.sets.v4));
+        }
+    }
+}

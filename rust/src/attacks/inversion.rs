@@ -1,0 +1,82 @@
+//! Model-inversion attack (Fredrikson et al. 2015), as run in Fig 2 / A.4.
+//!
+//! The attacker eavesdrops a client's uploaded model, interprets it as
+//! softmax-regression parameters, and gradient-descends the class loss
+//! with respect to the *input image* (via the AOT `inversion` HLO step).
+//! Success is measured as centered-cosine similarity between the
+//! reconstruction and the victim identity's template — high for FedAvg,
+//! chance-level for SA/CCESA.
+
+use super::centered_cosine;
+use crate::runtime::softreg::{SoftregParams, SoftregRuntime};
+use anyhow::Result;
+
+/// Result of attacking one target identity.
+#[derive(Debug, Clone)]
+pub struct InversionOutcome {
+    pub target: usize,
+    /// Reconstructed image (d pixels in [0,1]).
+    pub reconstruction: Vec<f32>,
+    /// Similarity to the target's template.
+    pub target_similarity: f32,
+    /// Best similarity to any *other* identity's template.
+    pub best_other_similarity: f32,
+}
+
+impl InversionOutcome {
+    /// The attack "identifies" the victim if the target template is the
+    /// best match by a margin.
+    pub fn identified(&self) -> bool {
+        self.target_similarity > self.best_other_similarity
+    }
+}
+
+/// Run the iterative inversion against eavesdropped parameters.
+pub fn invert(
+    sr: &SoftregRuntime,
+    eavesdropped: &SoftregParams,
+    target: usize,
+    templates: &[Vec<f32>],
+    steps: usize,
+    step_size: f32,
+) -> Result<InversionOutcome> {
+    let d = sr.dims;
+    assert!(target < d.c && templates.len() == d.c);
+    let mut onehot = vec![0.0f32; d.c];
+    onehot[target] = 1.0;
+    let mut img = vec![0.5f32; d.d];
+    for _ in 0..steps {
+        let (next, _) = sr.inversion_step(eavesdropped, &img, &onehot, step_size)?;
+        img = next;
+    }
+    let target_similarity = centered_cosine(&img, &templates[target]);
+    let best_other_similarity = (0..d.c)
+        .filter(|&k| k != target)
+        .map(|k| centered_cosine(&img, &templates[k]))
+        .fold(f32::NEG_INFINITY, f32::max);
+    Ok(InversionOutcome {
+        target,
+        reconstruction: img,
+        target_similarity,
+        best_other_similarity,
+    })
+}
+
+/// Attack several identities and report the identification rate — the
+/// Fig 2 aggregate (1.0 under FedAvg, ≈1/c chance under SA/CCESA).
+pub fn identification_rate(
+    sr: &SoftregRuntime,
+    eavesdropped: &SoftregParams,
+    templates: &[Vec<f32>],
+    targets: &[usize],
+    steps: usize,
+    step_size: f32,
+) -> Result<f64> {
+    let mut hits = 0usize;
+    for &t in targets {
+        if invert(sr, eavesdropped, t, templates, steps, step_size)?.identified() {
+            hits += 1;
+        }
+    }
+    Ok(hits as f64 / targets.len().max(1) as f64)
+}

@@ -1,0 +1,106 @@
+//! The paper's privacy attacks, run against what an eavesdropper actually
+//! observes under each scheme.
+//!
+//! * [`inversion`] — Fredrikson et al. model inversion (Fig 2 / A.4);
+//! * [`membership`] — confidence-based membership inference (Tables 5.2 /
+//!   A.3).
+//!
+//! The central abstraction is [`EavesdroppedModel`]: under FedAvg the
+//! wire carries the plaintext model; under SA/CCESA it carries the masked
+//! words θ̃_i, whose dequantization is (computationally) uniform noise, so
+//! both attacks degrade to chance — exactly the paper's experimental
+//! claim.
+
+pub mod inversion;
+pub mod membership;
+
+use crate::masking::Quantizer;
+
+/// What the eavesdropper reconstructs from one client's upload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scheme {
+    /// FedAvg: plaintext f32 model on the wire.
+    FedAvg,
+    /// SA or CCESA: masked Z_{2^b} words on the wire.
+    Masked,
+}
+
+/// The model parameters as seen by the eavesdropper.
+///
+/// For `Masked`, the adversary's best effort is to dequantize the masked
+/// words with the public quantizer — the result carries zero information
+/// about θ (the masks are fresh PRG output), but it is a *valid f32
+/// parameter vector*, so the attacks run unchanged and their failure is
+/// measured rather than assumed.
+pub fn eavesdropped_model(
+    scheme: Scheme,
+    plain: &[f32],
+    quantizer: &Quantizer,
+    masked_words: &[u64],
+) -> Vec<f32> {
+    match scheme {
+        Scheme::FedAvg => plain.to_vec(),
+        Scheme::Masked => masked_words
+            .iter()
+            .map(|&w| quantizer.dequantize_one(w) as f32)
+            .collect(),
+    }
+}
+
+/// Centered cosine similarity — the reconstruction-quality metric for the
+/// inversion experiments.
+pub fn centered_cosine(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    let ma = a.iter().sum::<f32>() / a.len() as f32;
+    let mb = b.iter().sum::<f32>() / b.len() as f32;
+    let mut num = 0.0;
+    let mut da = 0.0;
+    let mut db = 0.0;
+    for (x, y) in a.iter().zip(b) {
+        let xa = x - ma;
+        let yb = y - mb;
+        num += xa * yb;
+        da += xa * xa;
+        db += yb * yb;
+    }
+    num / (da.sqrt() * db.sqrt() + 1e-9)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::prg::{apply_mask, NONCE_SELF};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn fedavg_view_is_plaintext() {
+        let q = Quantizer::for_sum_of(32, 1.0, 4);
+        let plain = vec![0.5f32, -0.25];
+        let v = eavesdropped_model(Scheme::FedAvg, &plain, &q, &[]);
+        assert_eq!(v, plain);
+    }
+
+    #[test]
+    fn masked_view_is_uncorrelated_with_plaintext() {
+        let mut rng = Rng::new(9);
+        let q = Quantizer::for_sum_of(32, 1.0, 4);
+        let plain: Vec<f32> = (0..2000).map(|_| rng.normal_f32(0.0, 0.3)).collect();
+        let mut words = q.quantize(&plain);
+        let mut seed = [0u8; 32];
+        rng.fill_bytes(&mut seed);
+        apply_mask(&mut words, &seed, &NONCE_SELF, 32, false);
+        let view = eavesdropped_model(Scheme::Masked, &plain, &q, &words);
+        let corr = centered_cosine(&view, &plain);
+        assert!(corr.abs() < 0.08, "masked view correlates: {corr}");
+    }
+
+    #[test]
+    fn centered_cosine_basics() {
+        let a = [1.0f32, 2.0, 3.0];
+        assert!((centered_cosine(&a, &a) - 1.0).abs() < 1e-5);
+        let b = [3.0f32, 2.0, 1.0];
+        assert!((centered_cosine(&a, &b) + 1.0).abs() < 1e-5);
+        let c = [5.0f32, 5.0, 5.0]; // zero variance → ~0
+        assert!(centered_cosine(&a, &c).abs() < 1e-3);
+    }
+}

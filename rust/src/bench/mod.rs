@@ -1,0 +1,212 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Provides warmup, adaptive iteration counts targeting a measurement
+//! budget, and robust statistics (median / p95). All `cargo bench` targets
+//! (`rust/benches/*.rs`, `harness = false`) use this module.
+//!
+//! ```no_run
+//! use ccesa::bench::Bench;
+//! let mut b = Bench::new("demo");
+//! b.bench("hash 1KiB", || {
+//!     // work under test
+//! });
+//! b.report();
+//! ```
+
+use crate::util::stats::Summary;
+use std::time::{Duration, Instant};
+
+/// One benchmark result row.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub summary: Summary, // per-iteration seconds
+    pub throughput_label: Option<(f64, &'static str)>,
+}
+
+impl BenchResult {
+    pub fn median_s(&self) -> f64 {
+        self.summary.p50
+    }
+}
+
+/// Format seconds with an adaptive unit.
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Benchmark group with a shared measurement budget per case.
+pub struct Bench {
+    pub group: String,
+    pub warmup: Duration,
+    pub budget: Duration,
+    pub min_iters: u64,
+    pub max_iters: u64,
+    pub results: Vec<BenchResult>,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Self {
+        // CCESA_BENCH_FAST=1 shrinks budgets (used by `make test` smoke).
+        let fast = std::env::var("CCESA_BENCH_FAST").ok().as_deref() == Some("1");
+        Bench {
+            group: group.to_string(),
+            warmup: if fast { Duration::from_millis(20) } else { Duration::from_millis(200) },
+            budget: if fast { Duration::from_millis(100) } else { Duration::from_secs(1) },
+            min_iters: 5,
+            max_iters: 1_000_000,
+            results: Vec::new(),
+        }
+    }
+
+    /// Benchmark a closure; returns median seconds per iteration.
+    pub fn bench(&mut self, name: &str, mut f: impl FnMut()) -> f64 {
+        self.bench_with_throughput(name, None, &mut f)
+    }
+
+    /// Benchmark with a throughput annotation, e.g. `(bytes as f64, "B/s")`
+    /// or `(ops as f64, "elem/s")` per iteration.
+    pub fn throughput(
+        &mut self,
+        name: &str,
+        amount: f64,
+        unit: &'static str,
+        mut f: impl FnMut(),
+    ) -> f64 {
+        self.bench_with_throughput(name, Some((amount, unit)), &mut f)
+    }
+
+    fn bench_with_throughput(
+        &mut self,
+        name: &str,
+        thr: Option<(f64, &'static str)>,
+        f: &mut dyn FnMut(),
+    ) -> f64 {
+        // Warmup + calibration: figure out per-iter cost.
+        let wstart = Instant::now();
+        let mut calib_iters = 0u64;
+        while wstart.elapsed() < self.warmup || calib_iters == 0 {
+            f();
+            calib_iters += 1;
+            if calib_iters >= self.max_iters {
+                break;
+            }
+        }
+        let per_iter = wstart.elapsed().as_secs_f64() / calib_iters as f64;
+
+        // Choose up to ~20 samples covering the budget; expensive cases
+        // (per-iteration cost beyond the budget) degrade gracefully to
+        // `min_iters` single-iteration samples instead of 20× overruns.
+        let budget_s = self.budget.as_secs_f64();
+        let samples = ((budget_s / per_iter).ceil() as u64).clamp(self.min_iters, 20);
+        let iters_per_sample =
+            ((budget_s / samples as f64 / per_iter).ceil() as u64).clamp(1, self.max_iters);
+        let total_target = (samples * iters_per_sample).max(self.min_iters);
+
+        let mut times = Vec::with_capacity(samples as usize);
+        let mut done = 0u64;
+        while done < total_target {
+            let batch = iters_per_sample.min(total_target - done);
+            let t = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            times.push(t.elapsed().as_secs_f64() / batch as f64);
+            done += batch;
+        }
+        let summary = Summary::of(&times);
+        let median = summary.p50;
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            iters: done,
+            summary,
+            throughput_label: thr,
+        });
+        median
+    }
+
+    /// Print a formatted report for the group.
+    pub fn report(&self) {
+        println!("\n== bench group: {} ==", self.group);
+        let width = self.results.iter().map(|r| r.name.len()).max().unwrap_or(8).max(8);
+        for r in &self.results {
+            let med = r.summary.p50;
+            let thr = r
+                .throughput_label
+                .map(|(amt, unit)| {
+                    let rate = amt / med;
+                    if unit.starts_with("B/") {
+                        format!("  {:>9.1} MiB/s", rate / (1024.0 * 1024.0))
+                    } else {
+                        format!("  {rate:>12.0} {unit}")
+                    }
+                })
+                .unwrap_or_default();
+            println!(
+                "  {:<width$}  med {:>11}  p95 {:>11}  (n={}){thr}",
+                r.name,
+                fmt_time(med),
+                fmt_time(r.summary.p95),
+                r.iters,
+            );
+        }
+    }
+}
+
+/// Prevent the optimizer from discarding a value (stable-rust black box).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        std::env::set_var("CCESA_BENCH_FAST", "1");
+        let mut b = Bench::new("test");
+        let mut acc = 0u64;
+        let med = b.bench("add", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(med > 0.0);
+        assert_eq!(b.results.len(), 1);
+        assert!(b.results[0].iters >= 5);
+    }
+
+    #[test]
+    fn ordering_reflects_work() {
+        std::env::set_var("CCESA_BENCH_FAST", "1");
+        let mut b = Bench::new("order");
+        let cheap = b.bench("cheap", || {
+            black_box(1u64 + 1);
+        });
+        let pricey = b.bench("pricey", || {
+            let mut s = 0u64;
+            for i in 0..2000u64 {
+                s = s.wrapping_add(black_box(i));
+            }
+            black_box(s);
+        });
+        assert!(pricey > cheap, "pricey={pricey} cheap={cheap}");
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(2.0).ends_with(" s"));
+        assert!(fmt_time(2e-3).ends_with(" ms"));
+        assert!(fmt_time(2e-6).ends_with(" µs"));
+        assert!(fmt_time(2e-9).ends_with(" ns"));
+    }
+}

@@ -1,0 +1,322 @@
+//! Threaded deployment shape: the server event loop and one worker thread
+//! per client, exchanging the protocol messages over mpsc channels.
+//!
+//! `protocol::engine` is the deterministic synchronous core used by tests
+//! and benches; this module is the "real service" arrangement — clients
+//! are concurrent, the server collects each phase as messages arrive, and
+//! per-phase completion is detected by counting (every live client either
+//! responds or reports that it dropped). With `DropoutModel::None` or
+//! `Targeted` the result is bit-identical to the sync engine for the same
+//! seed (asserted in tests).
+
+use crate::net::{Dir, NetStats};
+use crate::protocol::client::Client;
+use crate::protocol::messages::*;
+use crate::protocol::server::{RoundOutput, Server};
+use crate::protocol::{ClientId, ProtocolConfig, SurvivorSets};
+use crate::util::rng::Rng;
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+
+/// Client → server messages; every live client sends exactly one per phase.
+enum Up {
+    Adv(AdvertiseKeys),
+    Shares(ShareUpload),
+    Masked(MaskedInput),
+    Unmask(UnmaskShares),
+    /// client dropped during the given phase
+    Dropped(ClientId, u8),
+    /// client hit an internal error — treated as a drop, but logged
+    Failed(ClientId, u8, String),
+}
+
+/// Server → client phase inputs.
+enum Down {
+    Bundle(KeyBundle),
+    Delivery(ShareDelivery),
+    Announce(SurvivorAnnounce),
+    /// round over (client not needed further)
+    Finish,
+}
+
+/// Outcome of a threaded round (mirrors the engine's essentials).
+#[derive(Debug)]
+pub struct CoordRoundResult {
+    pub sum: Option<Vec<u64>>,
+    pub reliable: bool,
+    pub sets: SurvivorSets,
+    pub stats: NetStats,
+}
+
+/// Run one aggregation round with real threads.
+pub fn run_round_threaded(cfg: &ProtocolConfig, models: &[Vec<u64>]) -> Result<CoordRoundResult> {
+    assert_eq!(models.len(), cfg.n);
+    let mut rng = Rng::new(cfg.seed);
+    let graph = cfg.topology.build(cfg.n, &mut rng);
+    let mut dropout_rng = rng.split(0xD20);
+
+    // Pre-draw dropout decisions in the engine's order so None/Targeted
+    // models produce identical survivor sets to the sync engine.
+    let mut survives = vec![[true; 4]; cfg.n];
+    for step in 0..4 {
+        for (id, s) in survives.iter_mut().enumerate() {
+            s[step] = cfg.dropout.survives(step, id, &mut dropout_rng);
+        }
+    }
+
+    let (tx_up, rx_up) = mpsc::channel::<Up>();
+    let mut to_clients: BTreeMap<ClientId, mpsc::Sender<Down>> = BTreeMap::new();
+
+    std::thread::scope(|scope| -> Result<CoordRoundResult> {
+        // spawn client workers
+        for id in 0..cfg.n {
+            let (tx_down, rx_down) = mpsc::channel::<Down>();
+            to_clients.insert(id, tx_down);
+            let tx_up = tx_up.clone();
+            let neighbors = graph.neighbors(id).to_vec();
+            let mut key_rng = rng.split(0xC11E27 + id as u64);
+            let mut share_rng = rng.split(0x5A12E + id as u64);
+            let model = models[id].clone();
+            let surv = survives[id];
+            let t = cfg.t;
+            let bits = cfg.mask_bits;
+            scope.spawn(move || {
+                let mut me = Client::new(id, t, bits, neighbors, &mut key_rng);
+                // phase 0
+                if !surv[0] {
+                    let _ = tx_up.send(Up::Dropped(id, 0));
+                    return;
+                }
+                let _ = tx_up.send(Up::Adv(me.step0_advertise()));
+                // phase 1
+                let Ok(Down::Bundle(bundle)) = rx_down.recv() else { return };
+                if !surv[1] {
+                    let _ = tx_up.send(Up::Dropped(id, 1));
+                    return;
+                }
+                match me.step1_share_keys(&bundle, &mut share_rng) {
+                    Ok(up) => {
+                        let _ = tx_up.send(Up::Shares(up));
+                    }
+                    Err(e) => {
+                        // small live neighborhood ⇒ secure withdrawal
+                        let _ = tx_up.send(Up::Failed(id, 1, e.to_string()));
+                        return;
+                    }
+                }
+                // phase 2
+                let Ok(Down::Delivery(delivery)) = rx_down.recv() else { return };
+                if !surv[2] {
+                    let _ = tx_up.send(Up::Dropped(id, 2));
+                    return;
+                }
+                match me.step2_masked_input(&delivery, &model) {
+                    Ok(mi) => {
+                        let _ = tx_up.send(Up::Masked(mi));
+                    }
+                    Err(e) => {
+                        let _ = tx_up.send(Up::Failed(id, 2, e.to_string()));
+                        return;
+                    }
+                }
+                // phase 3
+                let Ok(Down::Announce(announce)) = rx_down.recv() else { return };
+                if !surv[3] {
+                    let _ = tx_up.send(Up::Dropped(id, 3));
+                    return;
+                }
+                match me.step3_unmask(&announce) {
+                    Ok(um) => {
+                        let _ = tx_up.send(Up::Unmask(um));
+                    }
+                    Err(e) => {
+                        let _ = tx_up.send(Up::Failed(id, 3, e.to_string()));
+                    }
+                }
+                let _ = rx_down.recv(); // Finish
+            });
+        }
+        drop(tx_up);
+
+        let mut server = Server::new(cfg.n, cfg.t, cfg.mask_bits, cfg.dim, graph.clone());
+        let mut stats = NetStats::new(cfg.n);
+
+        // ---- phase 0: every client reports (advert or drop)
+        let mut advs = Vec::new();
+        for _ in 0..cfg.n {
+            match rx_up.recv().map_err(|_| anyhow!("client channel closed"))? {
+                Up::Adv(a) => {
+                    stats.record(0, Dir::Up, a.id, a.size_bytes());
+                    advs.push(a);
+                }
+                Up::Dropped(id, step) => log::trace!("client {id} dropped at step {step}"),
+                Up::Failed(id, step, e) => log::debug!("client {id} failed step {step}: {e}"),
+                _ => return Err(anyhow!("protocol order violation in phase 0")),
+            }
+        }
+        let bundles = server.step0_route_keys(advs)?;
+        let expect1 = bundles.len();
+        for (id, b) in bundles {
+            stats.record(0, Dir::Down, id, b.size_bytes());
+            let _ = to_clients[&id].send(Down::Bundle(b));
+        }
+
+        // ---- phase 1
+        let mut uploads = Vec::new();
+        for _ in 0..expect1 {
+            match rx_up.recv()? {
+                Up::Shares(u) => {
+                    stats.record(1, Dir::Up, u.from, u.size_bytes());
+                    uploads.push(u);
+                }
+                Up::Dropped(id, step) => log::trace!("client {id} dropped at step {step}"),
+                Up::Failed(id, step, e) => log::debug!("client {id} withdrew step {step}: {e}"),
+                _ => return Err(anyhow!("protocol order violation in phase 1")),
+            }
+        }
+        // deterministic collection order regardless of thread scheduling
+        uploads.sort_by_key(|u| u.from);
+        let deliveries = server.step1_route_shares(uploads)?;
+        let expect2 = deliveries.len();
+        for (id, d) in deliveries {
+            stats.record(1, Dir::Down, id, d.size_bytes());
+            let _ = to_clients[&id].send(Down::Delivery(d));
+        }
+
+        // ---- phase 2
+        let mut masked = Vec::new();
+        for _ in 0..expect2 {
+            match rx_up.recv()? {
+                Up::Masked(m) => {
+                    stats.record(2, Dir::Up, m.id, m.size_bytes());
+                    masked.push(m);
+                }
+                Up::Dropped(id, step) => log::trace!("client {id} dropped at step {step}"),
+                Up::Failed(id, step, e) => log::debug!("client {id} failed step {step}: {e}"),
+                _ => return Err(anyhow!("protocol order violation in phase 2")),
+            }
+        }
+        masked.sort_by_key(|m| m.id);
+        let announce = server.step2_collect_masked(masked)?;
+        let expect3 = announce.v3.len();
+        for &id in &announce.v3 {
+            stats.record(2, Dir::Down, id, announce.size_bytes());
+            let _ = to_clients[&id].send(Down::Announce(announce.clone()));
+        }
+
+        // ---- phase 3
+        let mut responses = Vec::new();
+        for _ in 0..expect3 {
+            match rx_up.recv()? {
+                Up::Unmask(u) => {
+                    stats.record(3, Dir::Up, u.from, u.size_bytes());
+                    responses.push(u);
+                }
+                Up::Dropped(id, step) => log::trace!("client {id} dropped at step {step}"),
+                Up::Failed(id, step, e) => log::debug!("client {id} failed step {step}: {e}"),
+                _ => return Err(anyhow!("protocol order violation in phase 3")),
+            }
+        }
+        responses.sort_by_key(|r| r.from);
+        let RoundOutput { sum, reliable, sets } = server.finalize(responses)?;
+        for tx in to_clients.values() {
+            let _ = tx.send(Down::Finish);
+        }
+        Ok(CoordRoundResult { sum, reliable, sets, stats })
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::dropout::DropoutModel;
+    use crate::protocol::engine;
+    use crate::protocol::Topology;
+
+    fn models(n: usize, dim: usize, seed: u64) -> Vec<Vec<u64>> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| (0..dim).map(|_| rng.next_u64() & 0xFFFF_FFFF).collect())
+            .collect()
+    }
+
+    #[test]
+    fn threaded_matches_sync_engine_no_dropout() {
+        let n = 12;
+        let dim = 40;
+        let cfg = ProtocolConfig::new(n, 5, dim, Topology::ErdosRenyi { p: 0.7 }, 2024);
+        let m = models(n, dim, 3);
+        let sync = engine::run_round(&cfg, &m).unwrap();
+        let threaded = run_round_threaded(&cfg, &m).unwrap();
+        assert_eq!(threaded.reliable, sync.reliable);
+        assert_eq!(threaded.sets, sync.sets);
+        assert_eq!(threaded.sum, sync.sum);
+        assert_eq!(threaded.stats.server_total(), sync.stats.server_total());
+    }
+
+    #[test]
+    fn threaded_matches_sync_engine_targeted_dropout() {
+        let n = 10;
+        let dim = 16;
+        let cfg = ProtocolConfig {
+            dropout: DropoutModel::Targeted {
+                per_step: [vec![1], vec![3], vec![5], vec![7]],
+            },
+            ..ProtocolConfig::new(n, 4, dim, Topology::Complete, 77)
+        };
+        let m = models(n, dim, 4);
+        let sync = engine::run_round(&cfg, &m).unwrap();
+        let threaded = run_round_threaded(&cfg, &m).unwrap();
+        assert_eq!(threaded.reliable, sync.reliable);
+        assert_eq!(threaded.sets, sync.sets);
+        assert_eq!(threaded.sum, sync.sum);
+    }
+
+    #[test]
+    fn threaded_sum_is_true_sum() {
+        let n = 8;
+        let dim = 30;
+        let cfg = ProtocolConfig::new(n, 4, dim, Topology::Complete, 5);
+        let m = models(n, dim, 6);
+        let r = run_round_threaded(&cfg, &m).unwrap();
+        assert!(r.reliable);
+        let mut expect = vec![0u64; dim];
+        for mv in &m {
+            for (a, x) in expect.iter_mut().zip(mv) {
+                *a = a.wrapping_add(*x) & 0xFFFF_FFFF;
+            }
+        }
+        assert_eq!(r.sum.unwrap(), expect);
+    }
+
+    #[test]
+    fn threaded_iid_dropout_terminates_and_is_consistent() {
+        // Iid dropout draws happen in a fixed pre-pass, so the run is
+        // deterministic; the protocol must terminate and, when reliable,
+        // produce exactly the V3 sum.
+        for seed in 0..5 {
+            let n = 14;
+            let cfg = ProtocolConfig {
+                dropout: DropoutModel::Iid { q: 0.15 },
+                ..ProtocolConfig::new(n, 5, 8, Topology::ErdosRenyi { p: 0.8 }, 100 + seed)
+            };
+            let m = models(n, 8, seed);
+            match run_round_threaded(&cfg, &m) {
+                Ok(r) => {
+                    if r.reliable {
+                        let sum = r.sum.unwrap();
+                        let mut expect = vec![0u64; 8];
+                        for &i in &r.sets.v3 {
+                            for (a, x) in expect.iter_mut().zip(&m[i]) {
+                                *a = a.wrapping_add(*x) & 0xFFFF_FFFF;
+                            }
+                        }
+                        assert_eq!(sum, expect, "seed={seed}");
+                    }
+                }
+                Err(_) => { /* |V_k| < t abort is acceptable under dropout */ }
+            }
+        }
+    }
+}

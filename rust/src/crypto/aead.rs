@@ -1,0 +1,134 @@
+//! ChaCha20-Poly1305 AEAD (RFC 8439 §2.8).
+//!
+//! Stands in for the paper's AES-GCM-128: clients encrypt the Shamir shares
+//! `(b_{i,j}, s^{SK}_{i,j})` under the pairwise key `c_{i,j}` before routing
+//! them through the (untrusted-channel) server in Step 1.
+
+use super::chacha20::ChaCha20;
+use super::poly1305::{poly1305, tags_equal};
+use thiserror::Error;
+
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum AeadError {
+    #[error("authentication tag mismatch (ciphertext tampered or wrong key)")]
+    TagMismatch,
+    #[error("ciphertext too short to contain a tag")]
+    TooShort,
+}
+
+fn pad16(len: usize) -> usize {
+    (16 - len % 16) % 16
+}
+
+fn compute_tag(otk: &[u8; 32], aad: &[u8], ct: &[u8]) -> [u8; 16] {
+    let mut mac_data = Vec::with_capacity(aad.len() + ct.len() + 32);
+    mac_data.extend_from_slice(aad);
+    mac_data.extend_from_slice(&vec![0u8; pad16(aad.len())]);
+    mac_data.extend_from_slice(ct);
+    mac_data.extend_from_slice(&vec![0u8; pad16(ct.len())]);
+    mac_data.extend_from_slice(&(aad.len() as u64).to_le_bytes());
+    mac_data.extend_from_slice(&(ct.len() as u64).to_le_bytes());
+    poly1305(otk, &mac_data)
+}
+
+fn one_time_key(key: &[u8; 32], nonce: &[u8; 12]) -> [u8; 32] {
+    let cipher = ChaCha20::new(key, nonce);
+    let mut block = [0u8; 64];
+    cipher.block(0, &mut block);
+    block[..32].try_into().unwrap()
+}
+
+/// Encrypt: returns ciphertext || 16-byte tag.
+pub fn seal(key: &[u8; 32], nonce: &[u8; 12], aad: &[u8], plaintext: &[u8]) -> Vec<u8> {
+    let cipher = ChaCha20::new(key, nonce);
+    let mut out = plaintext.to_vec();
+    cipher.apply_keystream(1, &mut out);
+    let otk = one_time_key(key, nonce);
+    let tag = compute_tag(&otk, aad, &out);
+    out.extend_from_slice(&tag);
+    out
+}
+
+/// Decrypt and verify; returns the plaintext.
+pub fn open(
+    key: &[u8; 32],
+    nonce: &[u8; 12],
+    aad: &[u8],
+    ct_and_tag: &[u8],
+) -> Result<Vec<u8>, AeadError> {
+    if ct_and_tag.len() < 16 {
+        return Err(AeadError::TooShort);
+    }
+    let (ct, tag) = ct_and_tag.split_at(ct_and_tag.len() - 16);
+    let otk = one_time_key(key, nonce);
+    let expect = compute_tag(&otk, aad, ct);
+    let tag: [u8; 16] = tag.try_into().unwrap();
+    if !tags_equal(&expect, &tag) {
+        return Err(AeadError::TagMismatch);
+    }
+    let cipher = ChaCha20::new(key, nonce);
+    let mut out = ct.to_vec();
+    cipher.apply_keystream(1, &mut out);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::hex;
+
+    // RFC 8439 §2.8.2 test vector.
+    #[test]
+    fn rfc8439_seal() {
+        let key = hex::decode_array::<32>(
+            "808182838485868788898a8b8c8d8e8f909192939495969798999a9b9c9d9e9f",
+        )
+        .unwrap();
+        let nonce = hex::decode_array::<12>("070000004041424344454647").unwrap();
+        let aad = hex::decode("50515253c0c1c2c3c4c5c6c7").unwrap();
+        let pt = b"Ladies and Gentlemen of the class of '99: If I could offer you \
+only one tip for the future, sunscreen would be it.";
+        let out = seal(&key, &nonce, &aad, pt);
+        let (ct, tag) = out.split_at(out.len() - 16);
+        assert_eq!(
+            hex::encode(ct),
+            "d31a8d34648e60db7b86afbc53ef7ec2a4aded51296e08fea9e2b5a736ee62d6\
+             3dbea45e8ca9671282fafb69da92728b1a71de0a9e060b2905d6a5b67ecd3b36\
+             92ddbd7f2d778b8c9803aee328091b58fab324e4fad675945585808b4831d7bc\
+             3ff4def08e4b7a9de576d26586cec64b6116"
+        );
+        assert_eq!(hex::encode(tag), "1ae10b594f09e26a7e902ecbd0600691");
+    }
+
+    #[test]
+    fn round_trip_and_tamper() {
+        let key = [9u8; 32];
+        let nonce = [1u8; 12];
+        let aad = b"header";
+        let pt = b"the secret shares";
+        let mut ct = seal(&key, &nonce, aad, pt);
+        assert_eq!(open(&key, &nonce, aad, &ct).unwrap(), pt.to_vec());
+
+        // flip a ciphertext bit
+        ct[0] ^= 1;
+        assert_eq!(open(&key, &nonce, aad, &ct), Err(AeadError::TagMismatch));
+        ct[0] ^= 1;
+        // wrong aad
+        assert_eq!(open(&key, &nonce, b"other", &ct), Err(AeadError::TagMismatch));
+        // wrong key
+        assert_eq!(open(&[8u8; 32], &nonce, aad, &ct), Err(AeadError::TagMismatch));
+        // wrong nonce
+        assert_eq!(open(&key, &[0u8; 12], aad, &ct), Err(AeadError::TagMismatch));
+        // truncated
+        assert_eq!(open(&key, &nonce, aad, &ct[..10]), Err(AeadError::TooShort));
+    }
+
+    #[test]
+    fn empty_plaintext_and_aad() {
+        let key = [3u8; 32];
+        let nonce = [4u8; 12];
+        let ct = seal(&key, &nonce, &[], &[]);
+        assert_eq!(ct.len(), 16);
+        assert_eq!(open(&key, &nonce, &[], &ct).unwrap(), Vec::<u8>::new());
+    }
+}

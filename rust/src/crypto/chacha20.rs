@@ -1,0 +1,273 @@
+//! ChaCha20 stream cipher (RFC 8439 §2.3–2.4).
+//!
+//! Used as (a) the protocol PRG expanding mask seeds `b_i` / `s_{i,j}` into
+//! Z_{2^b} mask vectors — the hot path of Step 2 — and (b) the cipher half
+//! of the ChaCha20-Poly1305 AEAD, and (c) the simulation RNG core.
+
+/// ChaCha20 keystream generator for a fixed (key, nonce).
+#[derive(Clone)]
+pub struct ChaCha20 {
+    /// Initial state words 0..16 minus the counter (word 12).
+    state: [u32; 16],
+}
+
+const SIGMA: [u32; 4] = [0x6170_7865, 0x3320_646e, 0x7962_2d32, 0x6b20_6574];
+
+#[inline(always)]
+fn quarter_round(s: &mut [u32; 16], a: usize, b: usize, c: usize, d: usize) {
+    s[a] = s[a].wrapping_add(s[b]);
+    s[d] = (s[d] ^ s[a]).rotate_left(16);
+    s[c] = s[c].wrapping_add(s[d]);
+    s[b] = (s[b] ^ s[c]).rotate_left(12);
+    s[a] = s[a].wrapping_add(s[b]);
+    s[d] = (s[d] ^ s[a]).rotate_left(8);
+    s[c] = s[c].wrapping_add(s[d]);
+    s[b] = (s[b] ^ s[c]).rotate_left(7);
+}
+
+impl ChaCha20 {
+    pub fn new(key: &[u8; 32], nonce: &[u8; 12]) -> Self {
+        let mut state = [0u32; 16];
+        state[..4].copy_from_slice(&SIGMA);
+        for i in 0..8 {
+            state[4 + i] = u32::from_le_bytes(key[4 * i..4 * i + 4].try_into().unwrap());
+        }
+        state[12] = 0; // counter, set per block
+        for i in 0..3 {
+            state[13 + i] = u32::from_le_bytes(nonce[4 * i..4 * i + 4].try_into().unwrap());
+        }
+        ChaCha20 { state }
+    }
+
+    /// Compute the 64-byte block for `counter` into `out`.
+    #[inline]
+    pub fn block(&self, counter: u32, out: &mut [u8; 64]) {
+        let mut ws = [0u32; 16];
+        self.block_words(counter, &mut ws);
+        for (i, w) in ws.iter().enumerate() {
+            out[4 * i..4 * i + 4].copy_from_slice(&w.to_le_bytes());
+        }
+    }
+
+    /// Compute the block for `counter` as 16 little-endian u32 words.
+    ///
+    /// The mask-expansion hot path consumes words directly (masks live in
+    /// Z_{2^32}), skipping the byte serialization round-trip.
+    #[inline]
+    pub fn block_words(&self, counter: u32, out: &mut [u32; 16]) {
+        let mut s = self.state;
+        s[12] = counter;
+        let init = s;
+        for _ in 0..10 {
+            // column rounds
+            quarter_round(&mut s, 0, 4, 8, 12);
+            quarter_round(&mut s, 1, 5, 9, 13);
+            quarter_round(&mut s, 2, 6, 10, 14);
+            quarter_round(&mut s, 3, 7, 11, 15);
+            // diagonal rounds
+            quarter_round(&mut s, 0, 5, 10, 15);
+            quarter_round(&mut s, 1, 6, 11, 12);
+            quarter_round(&mut s, 2, 7, 8, 13);
+            quarter_round(&mut s, 3, 4, 9, 14);
+        }
+        for i in 0..16 {
+            out[i] = s[i].wrapping_add(init[i]);
+        }
+    }
+
+    /// Compute four consecutive blocks (`counter..counter+4`) as 64 u32
+    /// words, processed in lock-step so LLVM auto-vectorizes the quarter
+    /// rounds across blocks (the §Perf optimization of the PRG hot path:
+    /// ~3× over the scalar block on this host — see EXPERIMENTS.md §Perf).
+    ///
+    /// Output layout: `out[b * 16 + w]` = word `w` of block `b` (i.e. the
+    /// natural sequential keystream order).
+    #[inline]
+    pub fn block_words_x4(&self, counter: u32, out: &mut [u32; 64]) {
+        self.block_words_xn::<4>(counter, out);
+    }
+
+    /// Eight consecutive blocks — one AVX2/AVX-512 register per state word.
+    #[inline]
+    pub fn block_words_x8(&self, counter: u32, out: &mut [u32; 128]) {
+        self.block_words_xn::<8>(counter, out);
+    }
+
+    /// Sixteen consecutive blocks (one AVX-512 register per state word).
+    #[inline]
+    pub fn block_words_x16(&self, counter: u32, out: &mut [u32; 256]) {
+        self.block_words_xn::<16>(counter, out);
+    }
+
+    #[inline]
+    fn block_words_xn<const N: usize>(&self, counter: u32, out: &mut [u32]) {
+        debug_assert_eq!(out.len(), 16 * N);
+        // state lanes: s[w][l] = word w of block l
+        let mut s = [[0u32; N]; 16];
+        for w in 0..16 {
+            s[w] = [self.state[w]; N];
+        }
+        for (b, lane) in s[12].iter_mut().enumerate() {
+            *lane = counter.wrapping_add(b as u32);
+        }
+        let init = s;
+
+        #[inline(always)]
+        fn qr<const N: usize>(s: &mut [[u32; N]; 16], a: usize, b: usize, c: usize, d: usize) {
+            for l in 0..N {
+                s[a][l] = s[a][l].wrapping_add(s[b][l]);
+            }
+            for l in 0..N {
+                s[d][l] = (s[d][l] ^ s[a][l]).rotate_left(16);
+            }
+            for l in 0..N {
+                s[c][l] = s[c][l].wrapping_add(s[d][l]);
+            }
+            for l in 0..N {
+                s[b][l] = (s[b][l] ^ s[c][l]).rotate_left(12);
+            }
+            for l in 0..N {
+                s[a][l] = s[a][l].wrapping_add(s[b][l]);
+            }
+            for l in 0..N {
+                s[d][l] = (s[d][l] ^ s[a][l]).rotate_left(8);
+            }
+            for l in 0..N {
+                s[c][l] = s[c][l].wrapping_add(s[d][l]);
+            }
+            for l in 0..N {
+                s[b][l] = (s[b][l] ^ s[c][l]).rotate_left(7);
+            }
+        }
+
+        for _ in 0..10 {
+            qr(&mut s, 0, 4, 8, 12);
+            qr(&mut s, 1, 5, 9, 13);
+            qr(&mut s, 2, 6, 10, 14);
+            qr(&mut s, 3, 7, 11, 15);
+            qr(&mut s, 0, 5, 10, 15);
+            qr(&mut s, 1, 6, 11, 12);
+            qr(&mut s, 2, 7, 8, 13);
+            qr(&mut s, 3, 4, 9, 14);
+        }
+        for w in 0..16 {
+            for l in 0..N {
+                out[l * 16 + w] = s[w][l].wrapping_add(init[w][l]);
+            }
+        }
+    }
+
+    /// XOR the keystream (starting at block `counter`) into `data` in place.
+    pub fn apply_keystream(&self, mut counter: u32, data: &mut [u8]) {
+        let mut block = [0u8; 64];
+        for chunk in data.chunks_mut(64) {
+            self.block(counter, &mut block);
+            for (d, k) in chunk.iter_mut().zip(block.iter()) {
+                *d ^= k;
+            }
+            counter = counter.wrapping_add(1);
+        }
+    }
+
+    /// Encrypt/decrypt convenience (allocating).
+    pub fn process(&self, counter: u32, data: &[u8]) -> Vec<u8> {
+        let mut out = data.to_vec();
+        self.apply_keystream(counter, &mut out);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::hex;
+
+    // RFC 8439 §2.3.2 test vector.
+    #[test]
+    fn rfc8439_block() {
+        let key: [u8; 32] = (0u8..32).collect::<Vec<_>>().try_into().unwrap();
+        let nonce = hex::decode_array::<12>("000000090000004a00000000").unwrap();
+        let c = ChaCha20::new(&key, &nonce);
+        let mut out = [0u8; 64];
+        c.block(1, &mut out);
+        let expect = hex::decode(
+            "10f1e7e4d13b5915500fdd1fa32071c4c7d1f4c733c068030422aa9ac3d46c4e\
+             d2826446079faa0914c2d705d98b02a2b5129cd1de164eb9cbd083e8a2503c4e",
+        )
+        .unwrap();
+        assert_eq!(out.to_vec(), expect);
+    }
+
+    // RFC 8439 §2.4.2 encryption test vector.
+    #[test]
+    fn rfc8439_encrypt() {
+        let key: [u8; 32] = (0u8..32).collect::<Vec<_>>().try_into().unwrap();
+        let nonce = hex::decode_array::<12>("000000000000004a00000000").unwrap();
+        let plaintext = b"Ladies and Gentlemen of the class of '99: If I could offer you \
+only one tip for the future, sunscreen would be it.";
+        let c = ChaCha20::new(&key, &nonce);
+        let ct = c.process(1, plaintext);
+        let expect = hex::decode(
+            "6e2e359a2568f98041ba0728dd0d6981e97e7aec1d4360c20a27afccfd9fae0b\
+             f91b65c5524733ab8f593dabcd62b3571639d624e65152ab8f530c359f0861d8\
+             07ca0dbf500d6a6156a38e088a22b65e52bc514d16ccf806818ce91ab7793736\
+             5af90bbf74a35be6b40b8eedf2785e42874d",
+        )
+        .unwrap();
+        assert_eq!(ct, expect);
+        // decrypt round-trip
+        assert_eq!(c.process(1, &ct), plaintext.to_vec());
+    }
+
+    #[test]
+    fn keystream_blocks_differ_by_counter() {
+        let c = ChaCha20::new(&[7u8; 32], &[1u8; 12]);
+        let mut b0 = [0u8; 64];
+        let mut b1 = [0u8; 64];
+        c.block(0, &mut b0);
+        c.block(1, &mut b1);
+        assert_ne!(b0, b1);
+        // deterministic
+        let mut b0b = [0u8; 64];
+        c.block(0, &mut b0b);
+        assert_eq!(b0, b0b);
+    }
+
+    #[test]
+    fn block_words_match_block_bytes() {
+        let c = ChaCha20::new(&[3u8; 32], &[9u8; 12]);
+        let mut bytes = [0u8; 64];
+        let mut words = [0u32; 16];
+        c.block(5, &mut bytes);
+        c.block_words(5, &mut words);
+        for i in 0..16 {
+            assert_eq!(words[i], u32::from_le_bytes(bytes[4 * i..4 * i + 4].try_into().unwrap()));
+        }
+    }
+
+    #[test]
+    fn block_words_x4_matches_scalar_blocks() {
+        let c = ChaCha20::new(&[0x42u8; 32], &[6u8; 12]);
+        let mut quad = [0u32; 64];
+        c.block_words_x4(100, &mut quad);
+        for b in 0..4u32 {
+            let mut single = [0u32; 16];
+            c.block_words(100 + b, &mut single);
+            assert_eq!(&quad[(b as usize) * 16..(b as usize + 1) * 16], &single[..], "block {b}");
+        }
+        // counter wrap-around edge
+        c.block_words_x4(u32::MAX - 1, &mut quad);
+        let mut single = [0u32; 16];
+        c.block_words(u32::MAX, &mut single);
+        assert_eq!(&quad[16..32], &single[..]);
+    }
+
+    #[test]
+    fn apply_keystream_partial_blocks() {
+        let c = ChaCha20::new(&[5u8; 32], &[2u8; 12]);
+        let msg = vec![0xABu8; 150]; // 2 full blocks + 22 bytes
+        let ct = c.process(0, &msg);
+        assert_eq!(c.process(0, &ct), msg);
+        assert_ne!(ct, msg);
+    }
+}

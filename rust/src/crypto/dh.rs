@@ -1,0 +1,101 @@
+//! Diffie–Hellman key pairs and the paper's key-agreement function `f`.
+//!
+//! Each client holds two pairs (Algorithm 1):
+//!  * `(c_i^PK, c_i^SK)` — for the AEAD keys `c_{i,j}` encrypting shares;
+//!  * `(s_i^PK, s_i^SK)` — for the pairwise mask seeds `s_{i,j}`.
+//!
+//! `agree_*` = x25519(SK_i, PK_j) passed through HKDF-SHA256 with a
+//! purpose-specific info string, so mask seeds and encryption keys are
+//! independent even for the same key pair.
+
+use super::hkdf::hkdf32;
+use super::x25519::{clamp_scalar, public_key, x25519};
+use crate::util::rng::Rng;
+
+pub type PublicKey = [u8; 32];
+pub type SecretKey = [u8; 32];
+
+/// An x25519 key pair.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct KeyPair {
+    pub pk: PublicKey,
+    pub sk: SecretKey,
+}
+
+impl KeyPair {
+    /// Generate from the (deterministic, seeded) simulation RNG.
+    pub fn generate(rng: &mut Rng) -> KeyPair {
+        let mut sk = [0u8; 32];
+        rng.fill_bytes(&mut sk);
+        sk = clamp_scalar(sk);
+        KeyPair { pk: public_key(&sk), sk }
+    }
+
+    /// Rebuild a key pair from a secret key (e.g. a Shamir-reconstructed
+    /// `s_i^SK` at the server in Step 3).
+    pub fn from_secret(sk: SecretKey) -> KeyPair {
+        let sk = clamp_scalar(sk);
+        KeyPair { pk: public_key(&sk), sk }
+    }
+}
+
+/// Raw shared point (used when the caller applies its own KDF).
+pub fn shared_point(sk: &SecretKey, pk: &PublicKey) -> [u8; 32] {
+    x25519(sk, pk)
+}
+
+/// Key agreement for the pairwise *mask seed* `s_{i,j}`.
+pub fn agree_mask_seed(sk: &SecretKey, pk: &PublicKey) -> [u8; 32] {
+    hkdf32(b"ccesa/v1", &shared_point(sk, pk), b"mask-seed")
+}
+
+/// Key agreement for the pairwise *encryption key* `c_{i,j}`.
+pub fn agree_enc_key(sk: &SecretKey, pk: &PublicKey) -> [u8; 32] {
+    hkdf32(b"ccesa/v1", &shared_point(sk, pk), b"enc-key")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn agreement_is_symmetric() {
+        let mut rng = Rng::new(0xD1FF1E);
+        let a = KeyPair::generate(&mut rng);
+        let b = KeyPair::generate(&mut rng);
+        assert_eq!(agree_mask_seed(&a.sk, &b.pk), agree_mask_seed(&b.sk, &a.pk));
+        assert_eq!(agree_enc_key(&a.sk, &b.pk), agree_enc_key(&b.sk, &a.pk));
+    }
+
+    #[test]
+    fn mask_and_enc_keys_differ() {
+        let mut rng = Rng::new(1);
+        let a = KeyPair::generate(&mut rng);
+        let b = KeyPair::generate(&mut rng);
+        assert_ne!(agree_mask_seed(&a.sk, &b.pk), agree_enc_key(&a.sk, &b.pk));
+    }
+
+    #[test]
+    fn distinct_pairs_distinct_secrets() {
+        let mut rng = Rng::new(2);
+        let a = KeyPair::generate(&mut rng);
+        let b = KeyPair::generate(&mut rng);
+        let c = KeyPair::generate(&mut rng);
+        assert_ne!(agree_mask_seed(&a.sk, &b.pk), agree_mask_seed(&a.sk, &c.pk));
+    }
+
+    #[test]
+    fn from_secret_recovers_public() {
+        let mut rng = Rng::new(3);
+        let kp = KeyPair::generate(&mut rng);
+        let rebuilt = KeyPair::from_secret(kp.sk);
+        assert_eq!(rebuilt.pk, kp.pk);
+    }
+
+    #[test]
+    fn generation_is_deterministic_in_seed() {
+        let k1 = KeyPair::generate(&mut Rng::new(42));
+        let k2 = KeyPair::generate(&mut Rng::new(42));
+        assert_eq!(k1, k2);
+    }
+}

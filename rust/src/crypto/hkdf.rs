@@ -1,0 +1,96 @@
+//! HKDF-SHA256 (RFC 5869): extract-and-expand KDF.
+//!
+//! The x25519 shared point is not uniformly distributed, so key agreement
+//! output is always passed through HKDF before use as a mask seed or AEAD
+//! key — mirroring the paper's "composed with a SHA-256 hash" construction.
+
+use super::hmac::hmac_sha256;
+
+/// HKDF-Extract: PRK = HMAC(salt, ikm).
+pub fn extract(salt: &[u8], ikm: &[u8]) -> [u8; 32] {
+    hmac_sha256(salt, ikm)
+}
+
+/// HKDF-Expand to `out.len()` bytes (≤ 255·32).
+pub fn expand(prk: &[u8; 32], info: &[u8], out: &mut [u8]) {
+    assert!(out.len() <= 255 * 32, "hkdf expand too long");
+    let mut t: Vec<u8> = Vec::new();
+    let mut written = 0;
+    let mut counter = 1u8;
+    while written < out.len() {
+        let mut input = Vec::with_capacity(t.len() + info.len() + 1);
+        input.extend_from_slice(&t);
+        input.extend_from_slice(info);
+        input.push(counter);
+        let block = hmac_sha256(prk, &input);
+        let n = (out.len() - written).min(32);
+        out[written..written + n].copy_from_slice(&block[..n]);
+        written += n;
+        t = block.to_vec();
+        counter = counter.wrapping_add(1);
+    }
+}
+
+/// One-shot extract+expand to a 32-byte key.
+pub fn hkdf32(salt: &[u8], ikm: &[u8], info: &[u8]) -> [u8; 32] {
+    let prk = extract(salt, ikm);
+    let mut out = [0u8; 32];
+    expand(&prk, info, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::hex;
+
+    // RFC 5869 Test Case 1.
+    #[test]
+    fn rfc5869_case1() {
+        let ikm = [0x0b; 22];
+        let salt = hex::decode("000102030405060708090a0b0c").unwrap();
+        let info = hex::decode("f0f1f2f3f4f5f6f7f8f9").unwrap();
+        let prk = extract(&salt, &ikm);
+        assert_eq!(
+            hex::encode(&prk),
+            "077709362c2e32df0ddc3f0dc47bba6390b6c73bb50f9c3122ec844ad7c2b3e5"
+        );
+        let mut okm = [0u8; 42];
+        expand(&prk, &info, &mut okm);
+        assert_eq!(
+            hex::encode(&okm),
+            "3cb25f25faacd57a90434f64d0362f2a2d2d0a90cf1a5a4c5db02d56ecc4c5bf34007208d5b887185865"
+        );
+    }
+
+    // RFC 5869 Test Case 3 (zero-length salt/info).
+    #[test]
+    fn rfc5869_case3() {
+        let ikm = [0x0b; 22];
+        let prk = extract(&[], &ikm);
+        let mut okm = [0u8; 42];
+        expand(&prk, &[], &mut okm);
+        assert_eq!(
+            hex::encode(&okm),
+            "8da4e775a563c18f715f802a063c5a31b8a11f5c5ee1879ec3454e5f3c738d2d9d201395faa4b61a96c8"
+        );
+    }
+
+    #[test]
+    fn domain_separation() {
+        let a = hkdf32(b"salt", b"ikm", b"mask");
+        let b = hkdf32(b"salt", b"ikm", b"enc");
+        assert_ne!(a, b);
+        assert_eq!(a, hkdf32(b"salt", b"ikm", b"mask"));
+    }
+
+    #[test]
+    fn expand_multiblock_prefix_consistency() {
+        let prk = extract(b"s", b"k");
+        let mut a = [0u8; 100];
+        let mut b = [0u8; 32];
+        expand(&prk, b"i", &mut a);
+        expand(&prk, b"i", &mut b);
+        assert_eq!(&a[..32], &b[..]);
+    }
+}

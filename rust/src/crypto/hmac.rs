@@ -1,0 +1,86 @@
+//! HMAC-SHA256 (RFC 2104), used by HKDF.
+
+use super::sha256::Sha256;
+
+/// One-shot HMAC-SHA256.
+pub fn hmac_sha256(key: &[u8], msg: &[u8]) -> [u8; 32] {
+    let mut k = [0u8; 64];
+    if key.len() > 64 {
+        let d = {
+            let mut h = Sha256::new();
+            h.update(key);
+            h.finalize()
+        };
+        k[..32].copy_from_slice(&d);
+    } else {
+        k[..key.len()].copy_from_slice(key);
+    }
+    let mut ipad = [0x36u8; 64];
+    let mut opad = [0x5cu8; 64];
+    for i in 0..64 {
+        ipad[i] ^= k[i];
+        opad[i] ^= k[i];
+    }
+    let inner = {
+        let mut h = Sha256::new();
+        h.update(&ipad).update(msg);
+        h.finalize()
+    };
+    let mut h = Sha256::new();
+    h.update(&opad).update(&inner);
+    h.finalize()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::hex;
+
+    // RFC 4231 test cases.
+    #[test]
+    fn rfc4231_case1() {
+        let key = [0x0b; 20];
+        let out = hmac_sha256(&key, b"Hi There");
+        assert_eq!(
+            hex::encode(&out),
+            "b0344c61d8db38535ca8afceaf0bf12b881dc200c9833da726e9376c2e32cff7"
+        );
+    }
+
+    #[test]
+    fn rfc4231_case2() {
+        let out = hmac_sha256(b"Jefe", b"what do ya want for nothing?");
+        assert_eq!(
+            hex::encode(&out),
+            "5bdcc146bf60754e6a042426089575c75a003f089d2739839dec58b964ec3843"
+        );
+    }
+
+    #[test]
+    fn rfc4231_case6_long_key() {
+        let key = [0xaa; 131];
+        let out = hmac_sha256(&key, b"Test Using Larger Than Block-Size Key - Hash Key First");
+        assert_eq!(
+            hex::encode(&out),
+            "60e431591ee0b67f0d8a26aacbf5b77f8e0bc6213728c5140546040f0ee37f54"
+        );
+    }
+
+    #[test]
+    fn cross_check_hmac_crate() {
+        use hmac::{Hmac, Mac};
+        type H = Hmac<sha2::Sha256>;
+        let mut rng = crate::util::rng::Rng::new(0xFEED);
+        for (klen, mlen) in [(0usize, 0usize), (16, 100), (64, 64), (65, 1), (200, 1000)] {
+            let mut key = vec![0u8; klen];
+            let mut msg = vec![0u8; mlen];
+            rng.fill_bytes(&mut key);
+            rng.fill_bytes(&mut msg);
+            let ours = hmac_sha256(&key, &msg);
+            let mut mac = H::new_from_slice(&key).unwrap();
+            mac.update(&msg);
+            let theirs: [u8; 32] = mac.finalize().into_bytes().into();
+            assert_eq!(ours, theirs, "klen={klen} mlen={mlen}");
+        }
+    }
+}

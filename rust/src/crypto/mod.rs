@@ -1,0 +1,27 @@
+//! Cryptographic substrates, implemented from scratch.
+//!
+//! The CCESA protocol (Algorithm 1 of the paper) needs four primitives:
+//!
+//! 1. **Key agreement** `f(PK_j, SK_i) = f(PK_i, SK_j)` — [`x25519`]
+//!    (RFC 7748) with an HKDF-SHA256 KDF ([`dh`]). The paper used ECDH over
+//!    NIST SP800-56 + SHA-256; x25519 plays the identical role (see
+//!    DESIGN.md substitution table).
+//! 2. **Symmetric authenticated encryption** of secret shares —
+//!    [`aead`] ChaCha20-Poly1305 (RFC 8439) standing in for AES-GCM-128.
+//! 3. **PRG** expanding a 32-byte seed into a mask vector over Z_{2^b} —
+//!    [`prg`] (ChaCha20 keystream).
+//! 4. **t-out-of-n secret sharing** — lives in [`crate::shamir`] over
+//!    GF(2^16) (supports n up to 65534, needed for the n=1000 experiments).
+//!
+//! Every primitive is validated against RFC/NIST test vectors, and SHA-256 /
+//! HMAC additionally against the RustCrypto crates (dev-dependencies only).
+
+pub mod aead;
+pub mod chacha20;
+pub mod dh;
+pub mod hkdf;
+pub mod hmac;
+pub mod poly1305;
+pub mod prg;
+pub mod sha256;
+pub mod x25519;

@@ -1,0 +1,237 @@
+//! Poly1305 one-time authenticator (RFC 8439 §2.5).
+
+/// Compute the Poly1305 tag of `msg` under a 32-byte one-time key.
+pub fn poly1305(key: &[u8; 32], msg: &[u8]) -> [u8; 16] {
+    // r with clamping
+    let mut r = [0u8; 16];
+    r.copy_from_slice(&key[..16]);
+    r[3] &= 15;
+    r[7] &= 15;
+    r[11] &= 15;
+    r[15] &= 15;
+    r[4] &= 252;
+    r[8] &= 252;
+    r[12] &= 252;
+
+    // 26-bit limbs of r
+    let r0 = (u32::from_le_bytes(r[0..4].try_into().unwrap())) & 0x3ffffff;
+    let r1 = (u32::from_le_bytes(r[3..7].try_into().unwrap()) >> 2) & 0x3ffffff;
+    let r2 = (u32::from_le_bytes(r[6..10].try_into().unwrap()) >> 4) & 0x3ffffff;
+    let r3 = (u32::from_le_bytes(r[9..13].try_into().unwrap()) >> 6) & 0x3ffffff;
+    let r4 = (u32::from_le_bytes(r[12..16].try_into().unwrap()) >> 8) & 0x3ffffff;
+
+    let s1 = r1 * 5;
+    let s2 = r2 * 5;
+    let s3 = r3 * 5;
+    let s4 = r4 * 5;
+
+    let mut h0 = 0u32;
+    let mut h1 = 0u32;
+    let mut h2 = 0u32;
+    let mut h3 = 0u32;
+    let mut h4 = 0u32;
+
+    let mut chunks = msg.chunks_exact(16);
+    let mut process = |block: &[u8; 16], hibit: u32| {
+        h0 = h0.wrapping_add(u32::from_le_bytes(block[0..4].try_into().unwrap()) & 0x3ffffff);
+        h1 = h1.wrapping_add((u32::from_le_bytes(block[3..7].try_into().unwrap()) >> 2) & 0x3ffffff);
+        h2 = h2.wrapping_add((u32::from_le_bytes(block[6..10].try_into().unwrap()) >> 4) & 0x3ffffff);
+        h3 = h3.wrapping_add((u32::from_le_bytes(block[9..13].try_into().unwrap()) >> 6) & 0x3ffffff);
+        h4 = h4.wrapping_add((u32::from_le_bytes(block[12..16].try_into().unwrap()) >> 8) | hibit);
+
+        let d0 = (h0 as u64) * (r0 as u64)
+            + (h1 as u64) * (s4 as u64)
+            + (h2 as u64) * (s3 as u64)
+            + (h3 as u64) * (s2 as u64)
+            + (h4 as u64) * (s1 as u64);
+        let mut d1 = (h0 as u64) * (r1 as u64)
+            + (h1 as u64) * (r0 as u64)
+            + (h2 as u64) * (s4 as u64)
+            + (h3 as u64) * (s3 as u64)
+            + (h4 as u64) * (s2 as u64);
+        let mut d2 = (h0 as u64) * (r2 as u64)
+            + (h1 as u64) * (r1 as u64)
+            + (h2 as u64) * (r0 as u64)
+            + (h3 as u64) * (s4 as u64)
+            + (h4 as u64) * (s3 as u64);
+        let mut d3 = (h0 as u64) * (r3 as u64)
+            + (h1 as u64) * (r2 as u64)
+            + (h2 as u64) * (r1 as u64)
+            + (h3 as u64) * (r0 as u64)
+            + (h4 as u64) * (s4 as u64);
+        let mut d4 = (h0 as u64) * (r4 as u64)
+            + (h1 as u64) * (r3 as u64)
+            + (h2 as u64) * (r2 as u64)
+            + (h3 as u64) * (r1 as u64)
+            + (h4 as u64) * (r0 as u64);
+
+        let mut c;
+        c = d0 >> 26;
+        h0 = (d0 & 0x3ffffff) as u32;
+        d1 += c;
+        c = d1 >> 26;
+        h1 = (d1 & 0x3ffffff) as u32;
+        d2 += c;
+        c = d2 >> 26;
+        h2 = (d2 & 0x3ffffff) as u32;
+        d3 += c;
+        c = d3 >> 26;
+        h3 = (d3 & 0x3ffffff) as u32;
+        d4 += c;
+        c = d4 >> 26;
+        h4 = (d4 & 0x3ffffff) as u32;
+        h0 = h0.wrapping_add((c as u32) * 5);
+        let c2 = h0 >> 26;
+        h0 &= 0x3ffffff;
+        h1 = h1.wrapping_add(c2);
+    };
+
+    for block in chunks.by_ref() {
+        process(block.try_into().unwrap(), 1 << 24);
+    }
+    let rem = chunks.remainder();
+    if !rem.is_empty() {
+        let mut block = [0u8; 16];
+        block[..rem.len()].copy_from_slice(rem);
+        block[rem.len()] = 1;
+        process(&block, 0);
+    }
+
+    // full carry
+    let mut c = h1 >> 26;
+    h1 &= 0x3ffffff;
+    h2 = h2.wrapping_add(c);
+    c = h2 >> 26;
+    h2 &= 0x3ffffff;
+    h3 = h3.wrapping_add(c);
+    c = h3 >> 26;
+    h3 &= 0x3ffffff;
+    h4 = h4.wrapping_add(c);
+    c = h4 >> 26;
+    h4 &= 0x3ffffff;
+    h0 = h0.wrapping_add(c * 5);
+    c = h0 >> 26;
+    h0 &= 0x3ffffff;
+    h1 = h1.wrapping_add(c);
+
+    // compute h + -p
+    let mut g0 = h0.wrapping_add(5);
+    c = g0 >> 26;
+    g0 &= 0x3ffffff;
+    let mut g1 = h1.wrapping_add(c);
+    c = g1 >> 26;
+    g1 &= 0x3ffffff;
+    let mut g2 = h2.wrapping_add(c);
+    c = g2 >> 26;
+    g2 &= 0x3ffffff;
+    let mut g3 = h3.wrapping_add(c);
+    c = g3 >> 26;
+    g3 &= 0x3ffffff;
+    let g4 = h4.wrapping_add(c).wrapping_sub(1 << 26);
+
+    // select h if h < p, else h - p
+    let mask = (g4 >> 31).wrapping_sub(1);
+    g0 &= mask;
+    g1 &= mask;
+    g2 &= mask;
+    g3 &= mask;
+    let g4m = g4 & mask;
+    let maskn = !mask;
+    h0 = (h0 & maskn) | g0;
+    h1 = (h1 & maskn) | g1;
+    h2 = (h2 & maskn) | g2;
+    h3 = (h3 & maskn) | g3;
+    h4 = (h4 & maskn) | g4m;
+
+    // serialize h mod 2^128
+    let hh0 = h0 | (h1 << 26);
+    let hh1 = (h1 >> 6) | (h2 << 20);
+    let hh2 = (h2 >> 12) | (h3 << 14);
+    let hh3 = (h3 >> 18) | (h4 << 8);
+
+    // add s (key[16..32]) mod 2^128
+    let s0 = u32::from_le_bytes(key[16..20].try_into().unwrap());
+    let s1_ = u32::from_le_bytes(key[20..24].try_into().unwrap());
+    let s2_ = u32::from_le_bytes(key[24..28].try_into().unwrap());
+    let s3_ = u32::from_le_bytes(key[28..32].try_into().unwrap());
+
+    let mut f: u64 = hh0 as u64 + s0 as u64;
+    let t0 = f as u32;
+    f = hh1 as u64 + s1_ as u64 + (f >> 32);
+    let t1 = f as u32;
+    f = hh2 as u64 + s2_ as u64 + (f >> 32);
+    let t2 = f as u32;
+    f = hh3 as u64 + s3_ as u64 + (f >> 32);
+    let t3 = f as u32;
+
+    let mut tag = [0u8; 16];
+    tag[0..4].copy_from_slice(&t0.to_le_bytes());
+    tag[4..8].copy_from_slice(&t1.to_le_bytes());
+    tag[8..12].copy_from_slice(&t2.to_le_bytes());
+    tag[12..16].copy_from_slice(&t3.to_le_bytes());
+    tag
+}
+
+/// Constant-time tag comparison.
+pub fn tags_equal(a: &[u8; 16], b: &[u8; 16]) -> bool {
+    let mut diff = 0u8;
+    for i in 0..16 {
+        diff |= a[i] ^ b[i];
+    }
+    diff == 0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::hex;
+
+    // RFC 8439 §2.5.2.
+    #[test]
+    fn rfc8439_tag() {
+        let key = hex::decode_array::<32>(
+            "85d6be7857556d337f4452fe42d506a80103808afb0db2fd4abff6af4149f51b",
+        )
+        .unwrap();
+        let msg = b"Cryptographic Forum Research Group";
+        let tag = poly1305(&key, msg);
+        assert_eq!(hex::encode(&tag), "a8061dc1305136c6c22b8baf0c0127a9");
+    }
+
+    // RFC 8439 A.3 vector #1: all-zero key and message.
+    #[test]
+    fn zero_key_zero_msg() {
+        let tag = poly1305(&[0u8; 32], &[0u8; 64]);
+        assert_eq!(tag, [0u8; 16]);
+    }
+
+    // RFC 8439 A.3 vector #3: r = 0, s != 0 → tag = s over "message".
+    #[test]
+    fn r_zero_tag_is_s() {
+        let mut key = [0u8; 32];
+        key[16..32].copy_from_slice(&hex::decode("36e5f6b5c5e06070f0efca96227a863e").unwrap());
+        let msg = b"Any submission to the IETF intended by the Contributor for publi\
+cation as all or part of an IETF Internet-Draft or RFC and any statement made wi\
+thin the context of an IETF activity is considered an \"IETF Contribution\". Such \
+statements include oral statements in IETF sessions, as well as written and elec\
+tronic communications made at any time or place, which are addressed to";
+        let tag = poly1305(&key, &msg[..]);
+        assert_eq!(hex::encode(&tag), "36e5f6b5c5e06070f0efca96227a863e");
+    }
+
+    #[test]
+    fn different_messages_different_tags() {
+        let key = [7u8; 32];
+        assert_ne!(poly1305(&key, b"hello"), poly1305(&key, b"hellp"));
+        assert_ne!(poly1305(&key, b""), poly1305(&key, b"\x00"));
+    }
+
+    #[test]
+    fn tags_equal_constant_time_behavior() {
+        let a = [1u8; 16];
+        let mut b = a;
+        assert!(tags_equal(&a, &b));
+        b[15] ^= 1;
+        assert!(!tags_equal(&a, &b));
+    }
+}

@@ -1,0 +1,459 @@
+//! X25519 Diffie–Hellman (RFC 7748), from scratch.
+//!
+//! Field arithmetic over GF(2^255 − 19) with five 51-bit limbs in u64
+//! (products accumulated in u128), and the constant-time Montgomery ladder.
+//!
+//! This is the key-agreement function `f` of the paper:
+//! `s_{i,j} = f(s_j^PK, s_i^SK) = f(s_i^PK, s_j^SK)`.
+
+/// Field element: five 51-bit limbs, little-endian.
+#[derive(Clone, Copy, Debug)]
+struct Fe([u64; 5]);
+
+const MASK51: u64 = (1u64 << 51) - 1;
+
+impl Fe {
+    const ZERO: Fe = Fe([0; 5]);
+    const ONE: Fe = Fe([1, 0, 0, 0, 0]);
+
+    fn from_bytes(b: &[u8; 32]) -> Fe {
+        let load = |i: usize| u64::from_le_bytes(b[i..i + 8].try_into().unwrap());
+        Fe([
+            load(0) & MASK51,
+            (load(6) >> 3) & MASK51,
+            (load(12) >> 6) & MASK51,
+            (load(19) >> 1) & MASK51,
+            (load(24) >> 12) & MASK51,
+        ])
+    }
+
+    fn to_bytes(mut self) -> [u8; 32] {
+        self = self.carry();
+        self = self.carry();
+        // reduce: add 19 and carry, then subtract 2^255 if set (freeze)
+        let mut t = self.0;
+        let mut q = (t[0].wrapping_add(19)) >> 51;
+        q = (t[1] + q) >> 51;
+        q = (t[2] + q) >> 51;
+        q = (t[3] + q) >> 51;
+        q = (t[4] + q) >> 51;
+        t[0] += 19 * q;
+        let mut c = t[0] >> 51;
+        t[0] &= MASK51;
+        t[1] += c;
+        c = t[1] >> 51;
+        t[1] &= MASK51;
+        t[2] += c;
+        c = t[2] >> 51;
+        t[2] &= MASK51;
+        t[3] += c;
+        c = t[3] >> 51;
+        t[3] &= MASK51;
+        t[4] += c;
+        t[4] &= MASK51;
+
+        let mut out = [0u8; 32];
+        let lo = t[0] | (t[1] << 51);
+        let mid = (t[1] >> 13) | (t[2] << 38);
+        let hi = (t[2] >> 26) | (t[3] << 25);
+        let top = (t[3] >> 39) | (t[4] << 12);
+        out[0..8].copy_from_slice(&lo.to_le_bytes());
+        out[8..16].copy_from_slice(&mid.to_le_bytes());
+        out[16..24].copy_from_slice(&hi.to_le_bytes());
+        out[24..32].copy_from_slice(&top.to_le_bytes());
+        out
+    }
+
+    #[inline]
+    fn carry(self) -> Fe {
+        let mut t = self.0;
+        let mut c: u64;
+        c = t[0] >> 51;
+        t[0] &= MASK51;
+        t[1] += c;
+        c = t[1] >> 51;
+        t[1] &= MASK51;
+        t[2] += c;
+        c = t[2] >> 51;
+        t[2] &= MASK51;
+        t[3] += c;
+        c = t[3] >> 51;
+        t[3] &= MASK51;
+        t[4] += c;
+        c = t[4] >> 51;
+        t[4] &= MASK51;
+        t[0] += c * 19;
+        Fe(t)
+    }
+
+    #[inline]
+    fn add(self, rhs: Fe) -> Fe {
+        Fe([
+            self.0[0] + rhs.0[0],
+            self.0[1] + rhs.0[1],
+            self.0[2] + rhs.0[2],
+            self.0[3] + rhs.0[3],
+            self.0[4] + rhs.0[4],
+        ])
+        .carry()
+    }
+
+    /// a - b, with bias 2p added to keep limbs positive.
+    #[inline]
+    fn sub(self, rhs: Fe) -> Fe {
+        // 2p in 51-bit limbs: 2*(2^255-19) = (2^52-38, 2^52-2, ...)
+        const TWO_P0: u64 = 0xFFFFFFFFFFFDA << 1;
+        const TWO_P1234: u64 = 0xFFFFFFFFFFFFE << 1;
+        Fe([
+            self.0[0] + TWO_P0 - rhs.0[0],
+            self.0[1] + TWO_P1234 - rhs.0[1],
+            self.0[2] + TWO_P1234 - rhs.0[2],
+            self.0[3] + TWO_P1234 - rhs.0[3],
+            self.0[4] + TWO_P1234 - rhs.0[4],
+        ])
+        .carry()
+    }
+
+    #[inline]
+    fn mul(self, rhs: Fe) -> Fe {
+        let [a0, a1, a2, a3, a4] = self.0;
+        let [b0, b1, b2, b3, b4] = rhs.0;
+        let m = |x: u64, y: u64| x as u128 * y as u128;
+
+        let mut r0 = m(a0, b0) + 19 * (m(a1, b4) + m(a2, b3) + m(a3, b2) + m(a4, b1));
+        let mut r1 = m(a0, b1) + m(a1, b0) + 19 * (m(a2, b4) + m(a3, b3) + m(a4, b2));
+        let mut r2 = m(a0, b2) + m(a1, b1) + m(a2, b0) + 19 * (m(a3, b4) + m(a4, b3));
+        let mut r3 = m(a0, b3) + m(a1, b2) + m(a2, b1) + m(a3, b0) + 19 * m(a4, b4);
+        let mut r4 = m(a0, b4) + m(a1, b3) + m(a2, b2) + m(a3, b1) + m(a4, b0);
+
+        // carry chain over u128
+        let mut c: u128;
+        c = r0 >> 51;
+        r0 &= MASK51 as u128;
+        r1 += c;
+        c = r1 >> 51;
+        r1 &= MASK51 as u128;
+        r2 += c;
+        c = r2 >> 51;
+        r2 &= MASK51 as u128;
+        r3 += c;
+        c = r3 >> 51;
+        r3 &= MASK51 as u128;
+        r4 += c;
+        c = r4 >> 51;
+        r4 &= MASK51 as u128;
+        r0 += c * 19;
+        // one more carry step leaves the element partially reduced
+        // (limbs ≤ 2^51 + 2^13), which is safe to feed into further
+        // mul/square/add calls — the full carry() pass is redundant (§Perf)
+        c = r0 >> 51;
+        r0 &= MASK51 as u128;
+        r1 += c;
+
+        Fe([r0 as u64, r1 as u64, r2 as u64, r3 as u64, r4 as u64])
+    }
+
+    /// Dedicated squaring: 15 limb products instead of mul's 25 (§Perf —
+    /// the Montgomery ladder is 4 squarings per bit).
+    #[inline]
+    fn square(self) -> Fe {
+        let [a0, a1, a2, a3, a4] = self.0;
+        let m = |x: u64, y: u64| x as u128 * y as u128;
+
+        let mut r0 = m(a0, a0) + 38 * (m(a1, a4) + m(a2, a3));
+        let mut r1 = 2 * m(a0, a1) + 38 * m(a2, a4) + 19 * m(a3, a3);
+        let mut r2 = 2 * m(a0, a2) + m(a1, a1) + 38 * m(a3, a4);
+        let mut r3 = 2 * (m(a0, a3) + m(a1, a2)) + 19 * m(a4, a4);
+        let mut r4 = 2 * (m(a0, a4) + m(a1, a3)) + m(a2, a2);
+
+        let mut c: u128;
+        c = r0 >> 51;
+        r0 &= MASK51 as u128;
+        r1 += c;
+        c = r1 >> 51;
+        r1 &= MASK51 as u128;
+        r2 += c;
+        c = r2 >> 51;
+        r2 &= MASK51 as u128;
+        r3 += c;
+        c = r3 >> 51;
+        r3 &= MASK51 as u128;
+        r4 += c;
+        c = r4 >> 51;
+        r4 &= MASK51 as u128;
+        r0 += c * 19;
+        c = r0 >> 51;
+        r0 &= MASK51 as u128;
+        r1 += c;
+
+        Fe([r0 as u64, r1 as u64, r2 as u64, r3 as u64, r4 as u64])
+    }
+
+    /// Multiply by small constant (121666 for the ladder).
+    #[inline]
+    fn mul_small(self, k: u64) -> Fe {
+        let mut r = [0u128; 5];
+        for i in 0..5 {
+            r[i] = self.0[i] as u128 * k as u128;
+        }
+        let mut c: u128;
+        let mut t = [0u64; 5];
+        c = r[0] >> 51;
+        t[0] = (r[0] as u64) & MASK51;
+        r[1] += c;
+        c = r[1] >> 51;
+        t[1] = (r[1] as u64) & MASK51;
+        r[2] += c;
+        c = r[2] >> 51;
+        t[2] = (r[2] as u64) & MASK51;
+        r[3] += c;
+        c = r[3] >> 51;
+        t[3] = (r[3] as u64) & MASK51;
+        r[4] += c;
+        c = r[4] >> 51;
+        t[4] = (r[4] as u64) & MASK51;
+        t[0] += (c as u64) * 19;
+        Fe(t).carry()
+    }
+
+    /// Inversion via Fermat: a^(p-2).
+    fn invert(self) -> Fe {
+        // addition chain from curve25519 reference
+        let z = self;
+        let z2 = z.square(); // 2
+        let z9 = z2.square().square().mul(z); // 9
+        let z11 = z9.mul(z2); // 11
+        let z2_5_0 = z11.square().mul(z9); // 2^5 - 2^0 = 31
+        let mut t = z2_5_0;
+        for _ in 0..5 {
+            t = t.square();
+        }
+        let z2_10_0 = t.mul(z2_5_0);
+        t = z2_10_0;
+        for _ in 0..10 {
+            t = t.square();
+        }
+        let z2_20_0 = t.mul(z2_10_0);
+        t = z2_20_0;
+        for _ in 0..20 {
+            t = t.square();
+        }
+        let z2_40_0 = t.mul(z2_20_0);
+        t = z2_40_0;
+        for _ in 0..10 {
+            t = t.square();
+        }
+        let z2_50_0 = t.mul(z2_10_0);
+        t = z2_50_0;
+        for _ in 0..50 {
+            t = t.square();
+        }
+        let z2_100_0 = t.mul(z2_50_0);
+        t = z2_100_0;
+        for _ in 0..100 {
+            t = t.square();
+        }
+        let z2_200_0 = t.mul(z2_100_0);
+        t = z2_200_0;
+        for _ in 0..50 {
+            t = t.square();
+        }
+        let z2_250_0 = t.mul(z2_50_0);
+        t = z2_250_0;
+        for _ in 0..5 {
+            t = t.square();
+        }
+        t.mul(z11) // 2^255 - 21
+    }
+
+    /// Constant-time conditional swap.
+    #[inline]
+    fn cswap(swap: u64, a: &mut Fe, b: &mut Fe) {
+        let mask = 0u64.wrapping_sub(swap);
+        for i in 0..5 {
+            let x = mask & (a.0[i] ^ b.0[i]);
+            a.0[i] ^= x;
+            b.0[i] ^= x;
+        }
+    }
+}
+
+/// Clamp a 32-byte scalar per RFC 7748.
+pub fn clamp_scalar(mut k: [u8; 32]) -> [u8; 32] {
+    k[0] &= 248;
+    k[31] &= 127;
+    k[31] |= 64;
+    k
+}
+
+/// X25519 scalar multiplication: `k` (clamped internally) times point `u`.
+pub fn x25519(k: &[u8; 32], u: &[u8; 32]) -> [u8; 32] {
+    let k = clamp_scalar(*k);
+    // mask top bit of u per RFC 7748
+    let mut u = *u;
+    u[31] &= 127;
+    let x1 = Fe::from_bytes(&u);
+
+    let mut x2 = Fe::ONE;
+    let mut z2 = Fe::ZERO;
+    let mut x3 = x1;
+    let mut z3 = Fe::ONE;
+    let mut swap = 0u64;
+
+    for t in (0..255).rev() {
+        let k_t = ((k[t / 8] >> (t % 8)) & 1) as u64;
+        swap ^= k_t;
+        Fe::cswap(swap, &mut x2, &mut x3);
+        Fe::cswap(swap, &mut z2, &mut z3);
+        swap = k_t;
+
+        let a = x2.add(z2);
+        let aa = a.square();
+        let b = x2.sub(z2);
+        let bb = b.square();
+        let e = aa.sub(bb);
+        let c = x3.add(z3);
+        let d = x3.sub(z3);
+        let da = d.mul(a);
+        let cb = c.mul(b);
+        x3 = da.add(cb).square();
+        z3 = x1.mul(da.sub(cb).square());
+        x2 = aa.mul(bb);
+        z2 = e.mul(aa.add(e.mul_small(121665)));
+    }
+    Fe::cswap(swap, &mut x2, &mut x3);
+    Fe::cswap(swap, &mut z2, &mut z3);
+
+    x2.mul(z2.invert()).to_bytes()
+}
+
+/// The X25519 base point (u = 9).
+pub const BASEPOINT: [u8; 32] = {
+    let mut b = [0u8; 32];
+    b[0] = 9;
+    b
+};
+
+/// Derive the public key for a secret scalar.
+pub fn public_key(secret: &[u8; 32]) -> [u8; 32] {
+    x25519(secret, &BASEPOINT)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::hex;
+
+    // RFC 7748 §5.2 test vector 1.
+    #[test]
+    fn rfc7748_vector1() {
+        let k = hex::decode_array::<32>(
+            "a546e36bf0527c9d3b16154b82465edd62144c0ac1fc5a18506a2244ba449ac4",
+        )
+        .unwrap();
+        let u = hex::decode_array::<32>(
+            "e6db6867583030db3594c1a424b15f7c726624ec26b3353b10a903a6d0ab1c4c",
+        )
+        .unwrap();
+        let out = x25519(&k, &u);
+        assert_eq!(
+            hex::encode(&out),
+            "c3da55379de9c6908e94ea4df28d084f32eccf03491c71f754b4075577a28552"
+        );
+    }
+
+    // RFC 7748 §5.2 test vector 2 (u has high bit set — must be masked).
+    #[test]
+    fn rfc7748_vector2() {
+        let k = hex::decode_array::<32>(
+            "4b66e9d4d1b4673c5ad22691957d6af5c11b6421e0ea01d42ca4169e7918ba0d",
+        )
+        .unwrap();
+        let u = hex::decode_array::<32>(
+            "e5210f12786811d3f4b7959d0538ae2c31dbe7106fc03c3efc4cd549c715a493",
+        )
+        .unwrap();
+        let out = x25519(&k, &u);
+        assert_eq!(
+            hex::encode(&out),
+            "95cbde9476e8907d7aade45cb4b873f88b595a68799fa152e6f8f7647aac7957"
+        );
+    }
+
+    // RFC 7748 §5.2 iteration test (1 and 1,000 iterations).
+    #[test]
+    fn rfc7748_iterated() {
+        let mut k = BASEPOINT;
+        let mut u = BASEPOINT;
+        let out1 = x25519(&k, &u);
+        // after 1 iteration
+        assert_eq!(
+            hex::encode(&out1),
+            "422c8e7a6227d7bca1350b3e2bb7279f7897b87bb6854b783c60e80311ae3079"
+        );
+        u = k;
+        k = out1;
+        for _ in 1..1000 {
+            let r = x25519(&k, &u);
+            u = k;
+            k = r;
+        }
+        assert_eq!(
+            hex::encode(&k),
+            "684cf59ba83309552800ef566f2f4d3c1c3887c49360e3875f2eb94d99532c51"
+        );
+    }
+
+    // RFC 7748 §6.1 Diffie-Hellman vector.
+    #[test]
+    fn rfc7748_dh() {
+        let alice_sk = hex::decode_array::<32>(
+            "77076d0a7318a57d3c16c17251b26645df4c2f87ebc0992ab177fba51db92c2a",
+        )
+        .unwrap();
+        let bob_sk = hex::decode_array::<32>(
+            "5dab087e624a8a4b79e17f8b83800ee66f3bb1292618b6fd1c2f8b27ff88e0eb",
+        )
+        .unwrap();
+        let alice_pk = public_key(&alice_sk);
+        let bob_pk = public_key(&bob_sk);
+        assert_eq!(
+            hex::encode(&alice_pk),
+            "8520f0098930a754748b7ddcb43ef75a0dbf3a0d26381af4eba4a98eaa9b4e6a"
+        );
+        assert_eq!(
+            hex::encode(&bob_pk),
+            "de9edb7d7b7dc1b4d35b61c2ece435373f8343c85b78674dadfc7e146f882b4f"
+        );
+        let k1 = x25519(&alice_sk, &bob_pk);
+        let k2 = x25519(&bob_sk, &alice_pk);
+        assert_eq!(k1, k2);
+        assert_eq!(
+            hex::encode(&k1),
+            "4a5d9d5ba4ce2de1728e3bf480350f25e07e21c947d19e3376f09b3c1e161742"
+        );
+    }
+
+    #[test]
+    fn dh_symmetry_random_keys() {
+        let mut rng = crate::util::rng::Rng::new(0x715519);
+        for _ in 0..8 {
+            let mut a = [0u8; 32];
+            let mut b = [0u8; 32];
+            rng.fill_bytes(&mut a);
+            rng.fill_bytes(&mut b);
+            let pa = public_key(&a);
+            let pb = public_key(&b);
+            assert_eq!(x25519(&a, &pb), x25519(&b, &pa));
+        }
+    }
+
+    #[test]
+    fn clamping_applied() {
+        let k = [0xFFu8; 32];
+        let c = clamp_scalar(k);
+        assert_eq!(c[0] & 7, 0);
+        assert_eq!(c[31] & 0x80, 0);
+        assert_eq!(c[31] & 0x40, 0x40);
+    }
+}

@@ -1,0 +1,309 @@
+//! Synthetic datasets for the paper's experiments.
+//!
+//! * [`SyntheticCifar`] — 10-class Gaussian-blob images replacing CIFAR-10
+//!   in the Fig 5.2 reliability experiments: the claim under test is about
+//!   *aggregation reliability vs p*, which depends on the protocol, not on
+//!   the vision model (DESIGN.md substitution table).
+//! * [`SyntheticFaces`] — per-identity smooth templates + noise replacing
+//!   the AT&T database for the model-inversion experiments: Fredrikson et
+//!   al.'s attack reconstructs the class template from softmax-regression
+//!   weights, so template recovery is measurable identically.
+
+use crate::util::rng::Rng;
+
+/// A labeled dataset with flattened f32 features.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// n_samples × dim, row-major.
+    pub xs: Vec<f32>,
+    pub ys: Vec<usize>,
+    pub dim: usize,
+    pub classes: usize,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.ys.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.ys.is_empty()
+    }
+    pub fn x(&self, i: usize) -> &[f32] {
+        &self.xs[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Materialize a batch (features, one-hot, labels) for sample indices,
+    /// repeating indices if needed to fill `batch`.
+    pub fn batch(&self, idx: &[usize], batch: usize) -> (Vec<f32>, Vec<f32>, Vec<i32>) {
+        let mut x = Vec::with_capacity(batch * self.dim);
+        let mut onehot = vec![0.0f32; batch * self.classes];
+        let mut labels = Vec::with_capacity(batch);
+        for k in 0..batch {
+            let i = idx[k % idx.len()];
+            x.extend_from_slice(self.x(i));
+            onehot[k * self.classes + self.ys[i]] = 1.0;
+            labels.push(self.ys[i] as i32);
+        }
+        (x, onehot, labels)
+    }
+
+    /// Subset view (copying).
+    pub fn subset(&self, idx: &[usize]) -> Dataset {
+        let mut xs = Vec::with_capacity(idx.len() * self.dim);
+        let mut ys = Vec::with_capacity(idx.len());
+        for &i in idx {
+            xs.extend_from_slice(self.x(i));
+            ys.push(self.ys[i]);
+        }
+        Dataset { xs, ys, dim: self.dim, classes: self.classes }
+    }
+}
+
+/// CIFAR-like blobs: class k has a unit-norm mean direction; samples are
+/// mean + isotropic noise, giving a linearly-separable-but-noisy task.
+pub struct SyntheticCifar;
+
+impl SyntheticCifar {
+    pub fn generate(n_samples: usize, dim: usize, classes: usize, noise: f32, rng: &mut Rng) -> Dataset {
+        // class means: random unit vectors, held apart by construction
+        let means: Vec<Vec<f32>> = (0..classes)
+            .map(|_| {
+                let v: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+                let norm = v.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-6);
+                v.into_iter().map(|x| x / norm).collect()
+            })
+            .collect();
+        let mut xs = Vec::with_capacity(n_samples * dim);
+        let mut ys = Vec::with_capacity(n_samples);
+        for i in 0..n_samples {
+            let y = i % classes;
+            for j in 0..dim {
+                xs.push(means[y][j] + noise * rng.normal() as f32);
+            }
+            ys.push(y);
+        }
+        // shuffle sample order
+        let mut order: Vec<usize> = (0..n_samples).collect();
+        rng.shuffle(&mut order);
+        let ds = Dataset { xs, ys, dim, classes };
+        ds.subset(&order)
+    }
+
+    /// Generate a train/test pair drawn from the *same* class means.
+    pub fn generate_split(
+        n_train: usize,
+        n_test: usize,
+        dim: usize,
+        classes: usize,
+        noise: f32,
+        rng: &mut Rng,
+    ) -> (Dataset, Dataset) {
+        let all = Self::generate(n_train + n_test, dim, classes, noise, rng);
+        let train_idx: Vec<usize> = (0..n_train).collect();
+        let test_idx: Vec<usize> = (n_train..n_train + n_test).collect();
+        (all.subset(&train_idx), all.subset(&test_idx))
+    }
+}
+
+/// Face-like identities: smooth random templates in [0,1]^(side²) made by
+/// low-pass filtering white noise; samples add pixel noise.
+pub struct SyntheticFaces;
+
+impl SyntheticFaces {
+    pub fn template(side: usize, rng: &mut Rng) -> Vec<f32> {
+        let dim = side * side;
+        let raw: Vec<f32> = (0..dim).map(|_| rng.next_f32()).collect();
+        // two passes of 5x5 box blur ⇒ smooth, face-ish blobs
+        let blur = |img: &[f32]| -> Vec<f32> {
+            let mut out = vec![0.0f32; dim];
+            let r = 2i64;
+            for y in 0..side as i64 {
+                for x in 0..side as i64 {
+                    let mut acc = 0.0;
+                    let mut cnt = 0.0;
+                    for dy in -r..=r {
+                        for dx in -r..=r {
+                            let yy = y + dy;
+                            let xx = x + dx;
+                            if yy >= 0 && yy < side as i64 && xx >= 0 && xx < side as i64 {
+                                acc += img[(yy as usize) * side + xx as usize];
+                                cnt += 1.0;
+                            }
+                        }
+                    }
+                    out[(y as usize) * side + x as usize] = acc / cnt;
+                }
+            }
+            out
+        };
+        let sm = blur(&blur(&raw));
+        // stretch to [0,1]
+        let lo = sm.iter().cloned().fold(f32::INFINITY, f32::min);
+        let hi = sm.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        sm.into_iter().map(|v| (v - lo) / (hi - lo + 1e-9)).collect()
+    }
+
+    /// Generate (dataset, templates): `per_identity` samples per identity.
+    pub fn generate(
+        identities: usize,
+        per_identity: usize,
+        side: usize,
+        noise: f32,
+        rng: &mut Rng,
+    ) -> (Dataset, Vec<Vec<f32>>) {
+        let dim = side * side;
+        let templates: Vec<Vec<f32>> = (0..identities).map(|_| Self::template(side, rng)).collect();
+        let mut xs = Vec::with_capacity(identities * per_identity * dim);
+        let mut ys = Vec::with_capacity(identities * per_identity);
+        for (id, t) in templates.iter().enumerate() {
+            for _ in 0..per_identity {
+                for &p in t {
+                    xs.push((p + noise * rng.normal() as f32).clamp(0.0, 1.0));
+                }
+                ys.push(id);
+            }
+        }
+        (Dataset { xs, ys, dim, classes: identities }, templates)
+    }
+}
+
+/// I.i.d. partition: shuffle and deal evenly to `n_clients`.
+pub fn partition_iid(ds: &Dataset, n_clients: usize, rng: &mut Rng) -> Vec<Vec<usize>> {
+    let mut order: Vec<usize> = (0..ds.len()).collect();
+    rng.shuffle(&mut order);
+    let mut parts = vec![Vec::new(); n_clients];
+    for (k, i) in order.into_iter().enumerate() {
+        parts[k % n_clients].push(i);
+    }
+    parts
+}
+
+/// Non-i.i.d. shard partition (McMahan et al. §3 / paper §F.2.1): sort by
+/// label, cut into `2·n_clients` shards, give each client 2 random shards —
+/// each client sees at most ~2 classes.
+pub fn partition_noniid(ds: &Dataset, n_clients: usize, rng: &mut Rng) -> Vec<Vec<usize>> {
+    let mut order: Vec<usize> = (0..ds.len()).collect();
+    order.sort_by_key(|&i| ds.ys[i]);
+    let n_shards = 2 * n_clients;
+    let shard_size = ds.len() / n_shards;
+    assert!(shard_size > 0, "dataset too small for {n_clients} clients");
+    let mut shard_ids: Vec<usize> = (0..n_shards).collect();
+    rng.shuffle(&mut shard_ids);
+    let mut parts = vec![Vec::new(); n_clients];
+    for (k, &s) in shard_ids.iter().enumerate() {
+        let start = s * shard_size;
+        let end = if s == n_shards - 1 { ds.len() } else { start + shard_size };
+        parts[k / 2].extend_from_slice(&order[start..end]);
+    }
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cifar_blobs_are_separable_ish() {
+        let mut rng = Rng::new(1);
+        let ds = SyntheticCifar::generate(500, 32, 10, 0.3, &mut rng);
+        assert_eq!(ds.len(), 500);
+        assert_eq!(ds.dim, 32);
+        // nearest-class-mean classification beats chance comfortably
+        let mut means = vec![vec![0.0f32; 32]; 10];
+        let mut counts = vec![0usize; 10];
+        for i in 0..ds.len() {
+            counts[ds.ys[i]] += 1;
+            for (m, v) in means[ds.ys[i]].iter_mut().zip(ds.x(i)) {
+                *m += v;
+            }
+        }
+        for (m, &c) in means.iter_mut().zip(&counts) {
+            for v in m.iter_mut() {
+                *v /= c.max(1) as f32;
+            }
+        }
+        let mut correct = 0;
+        for i in 0..ds.len() {
+            let best = (0..10)
+                .min_by(|&a, &b| {
+                    let da: f32 =
+                        means[a].iter().zip(ds.x(i)).map(|(m, x)| (m - x) * (m - x)).sum();
+                    let db: f32 =
+                        means[b].iter().zip(ds.x(i)).map(|(m, x)| (m - x) * (m - x)).sum();
+                    da.partial_cmp(&db).unwrap()
+                })
+                .unwrap();
+            if best == ds.ys[i] {
+                correct += 1;
+            }
+        }
+        assert!(correct as f64 > 0.8 * ds.len() as f64, "correct={correct}");
+    }
+
+    #[test]
+    fn faces_templates_are_smooth_and_distinct() {
+        let mut rng = Rng::new(2);
+        let (ds, templates) = SyntheticFaces::generate(8, 5, 16, 0.05, &mut rng);
+        assert_eq!(ds.len(), 40);
+        assert_eq!(templates.len(), 8);
+        // smoothness: neighbor diffs well below range
+        for t in &templates {
+            let mut acc = 0.0f32;
+            for i in 0..t.len() - 1 {
+                acc += (t[i + 1] - t[i]).abs();
+            }
+            assert!(acc / (t.len() as f32) < 0.12, "template too rough");
+            assert!(t.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        }
+        // identities differ
+        let d01: f32 = templates[0]
+            .iter()
+            .zip(&templates[1])
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum();
+        assert!(d01 > 1.0);
+    }
+
+    #[test]
+    fn iid_partition_covers_all_evenly() {
+        let mut rng = Rng::new(3);
+        let ds = SyntheticCifar::generate(100, 8, 10, 0.2, &mut rng);
+        let parts = partition_iid(&ds, 7, &mut rng);
+        let total: usize = parts.iter().map(|p| p.len()).sum();
+        assert_eq!(total, 100);
+        let sizes: Vec<usize> = parts.iter().map(|p| p.len()).collect();
+        assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+        let mut all: Vec<usize> = parts.concat();
+        all.sort_unstable();
+        assert_eq!(all, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn noniid_partition_limits_classes_per_client() {
+        let mut rng = Rng::new(4);
+        let ds = SyntheticCifar::generate(400, 8, 10, 0.2, &mut rng);
+        let parts = partition_noniid(&ds, 10, &mut rng);
+        let total: usize = parts.iter().map(|p| p.len()).sum();
+        assert_eq!(total, 400);
+        for (k, p) in parts.iter().enumerate() {
+            let classes: std::collections::HashSet<usize> =
+                p.iter().map(|&i| ds.ys[i]).collect();
+            assert!(classes.len() <= 3, "client {k} sees {} classes", classes.len());
+        }
+    }
+
+    #[test]
+    fn batch_fills_and_wraps() {
+        let mut rng = Rng::new(5);
+        let ds = SyntheticCifar::generate(10, 4, 2, 0.1, &mut rng);
+        let (x, onehot, labels) = ds.batch(&[0, 1, 2], 8);
+        assert_eq!(x.len(), 8 * 4);
+        assert_eq!(onehot.len(), 8 * 2);
+        assert_eq!(labels.len(), 8);
+        // wrapped: samples 3..8 repeat 0,1,2
+        assert_eq!(labels[0], labels[3]);
+        for row in onehot.chunks(2) {
+            assert!((row.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! Federated-learning orchestration on top of the secure-aggregation
+//! protocol and the PJRT model runtime.
+//!
+//! * [`data`] — synthetic datasets standing in for CIFAR-10 and the AT&T
+//!   face database (DESIGN.md documents the substitutions), plus the
+//!   i.i.d. and non-i.i.d. (shard) partitions of McMahan et al.;
+//! * [`rounds`] — the FL round loop: client selection, local SGD via the
+//!   HLO train step, quantization, the SA/CCESA aggregation round,
+//!   dequantization and the global update. An unreliable round keeps the
+//!   previous global model (§4.3.2 of the paper).
+
+pub mod data;
+pub mod rounds;

@@ -1,0 +1,125 @@
+//! GF(2^8) arithmetic with the AES polynomial x^8 + x^4 + x^3 + x + 1.
+//!
+//! Log/antilog tables over generator 3 give O(1) mul/div/inv.
+
+const POLY: u16 = 0x11B;
+
+/// Precomputed exp/log tables (built at first use).
+struct Tables {
+    exp: [u8; 512], // doubled to skip the mod-255 in mul
+    log: [u8; 256],
+}
+
+fn tables() -> &'static Tables {
+    use std::sync::OnceLock;
+    static T: OnceLock<Tables> = OnceLock::new();
+    T.get_or_init(|| {
+        let mut exp = [0u8; 512];
+        let mut log = [0u8; 256];
+        let mut x: u16 = 1;
+        for i in 0..255 {
+            exp[i] = x as u8;
+            log[x as usize] = i as u8;
+            // multiply x by the generator 3 = x + 1: x*2 ^ x
+            let x2 = x << 1;
+            x = (if x2 & 0x100 != 0 { x2 ^ POLY } else { x2 }) ^ x;
+        }
+        for i in 255..512 {
+            exp[i] = exp[i - 255];
+        }
+        Tables { exp, log }
+    })
+}
+
+/// Addition = XOR (characteristic 2).
+#[inline]
+pub fn add(a: u8, b: u8) -> u8 {
+    a ^ b
+}
+
+/// Multiplication via log tables.
+#[inline]
+pub fn mul(a: u8, b: u8) -> u8 {
+    if a == 0 || b == 0 {
+        return 0;
+    }
+    let t = tables();
+    t.exp[t.log[a as usize] as usize + t.log[b as usize] as usize]
+}
+
+/// Multiplicative inverse; panics on 0.
+#[inline]
+pub fn inv(a: u8) -> u8 {
+    assert!(a != 0, "inverse of zero in GF(256)");
+    let t = tables();
+    t.exp[255 - t.log[a as usize] as usize]
+}
+
+/// Division a/b.
+#[inline]
+pub fn div(a: u8, b: u8) -> u8 {
+    mul(a, inv(b))
+}
+
+/// Slow reference multiplication (Russian peasant) for cross-checks.
+pub fn mul_slow(mut a: u8, mut b: u8) -> u8 {
+    let mut r = 0u8;
+    while b != 0 {
+        if b & 1 != 0 {
+            r ^= a;
+        }
+        let hi = a & 0x80 != 0;
+        a <<= 1;
+        if hi {
+            a ^= (POLY & 0xFF) as u8;
+        }
+        b >>= 1;
+    }
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_mul_matches_slow_mul() {
+        for a in 0..=255u8 {
+            for b in [0u8, 1, 2, 3, 0x53, 0xCA, 255] {
+                assert_eq!(mul(a, b), mul_slow(a, b), "a={a} b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn known_aes_product() {
+        // classic AES example: 0x53 * 0xCA = 0x01
+        assert_eq!(mul(0x53, 0xCA), 0x01);
+        assert_eq!(inv(0x53), 0xCA);
+    }
+
+    #[test]
+    fn field_axioms_sampled() {
+        let elems = [1u8, 2, 3, 7, 0x1D, 0x80, 0xFE, 0xFF];
+        for &a in &elems {
+            assert_eq!(mul(a, 1), a);
+            assert_eq!(mul(a, inv(a)), 1);
+            assert_eq!(add(a, a), 0);
+            for &b in &elems {
+                assert_eq!(mul(a, b), mul(b, a));
+                for &c in &elems {
+                    assert_eq!(mul(a, add(b, c)), add(mul(a, b), mul(a, c)));
+                    assert_eq!(mul(mul(a, b), c), mul(a, mul(b, c)));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_nonzero_invertible() {
+        for a in 1..=255u8 {
+            assert_eq!(mul(a, inv(a)), 1, "a={a}");
+            assert_eq!(div(a, a), 1);
+        }
+    }
+}

@@ -1,0 +1,137 @@
+//! GF(2^16) arithmetic with the primitive polynomial
+//! x^16 + x^12 + x^3 + x + 1 (0x1100B), generator α = x (i.e. 2).
+//!
+//! 64 KiB log + 128 KiB exp tables, built once. This is the field used by
+//! the production Shamir implementation (supports up to 65535 share
+//! holders, comfortably covering the paper's n = 1000 experiments).
+
+const POLY: u32 = 0x1100B;
+
+struct Tables {
+    exp: Vec<u16>, // length 2*65535 to avoid mod in mul
+    log: Vec<u16>, // length 65536; log[0] unused
+}
+
+fn tables() -> &'static Tables {
+    use std::sync::OnceLock;
+    static T: OnceLock<Tables> = OnceLock::new();
+    T.get_or_init(|| {
+        let mut exp = vec![0u16; 2 * 65535];
+        let mut log = vec![0u16; 65536];
+        let mut x: u32 = 1;
+        for i in 0..65535usize {
+            exp[i] = x as u16;
+            log[x as usize] = i as u16;
+            x <<= 1;
+            if x & 0x10000 != 0 {
+                x ^= POLY;
+            }
+        }
+        for i in 65535..(2 * 65535) {
+            exp[i] = exp[i - 65535];
+        }
+        Tables { exp, log }
+    })
+}
+
+/// Addition = XOR.
+#[inline]
+pub fn add(a: u16, b: u16) -> u16 {
+    a ^ b
+}
+
+/// Multiplication via log/exp tables.
+#[inline]
+pub fn mul(a: u16, b: u16) -> u16 {
+    if a == 0 || b == 0 {
+        return 0;
+    }
+    let t = tables();
+    t.exp[t.log[a as usize] as usize + t.log[b as usize] as usize]
+}
+
+/// Multiplicative inverse; panics on 0.
+#[inline]
+pub fn inv(a: u16) -> u16 {
+    assert!(a != 0, "inverse of zero in GF(2^16)");
+    let t = tables();
+    t.exp[65535 - t.log[a as usize] as usize]
+}
+
+/// Division a/b.
+#[inline]
+pub fn div(a: u16, b: u16) -> u16 {
+    mul(a, inv(b))
+}
+
+/// Slow carry-less multiply + reduce, the correctness oracle for the tables.
+pub fn mul_slow(a: u16, b: u16) -> u16 {
+    let mut acc: u32 = 0;
+    let a = a as u32;
+    for bit in 0..16 {
+        if b & (1 << bit) != 0 {
+            acc ^= a << bit;
+        }
+    }
+    // reduce degree-31 polynomial mod POLY
+    for bit in (16..32).rev() {
+        if acc & (1 << bit) != 0 {
+            acc ^= POLY << (bit - 16);
+        }
+    }
+    acc as u16
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn generator_is_primitive() {
+        // the exp table covers all 65535 nonzero elements exactly once
+        let t = tables();
+        let mut seen = vec![false; 65536];
+        for i in 0..65535 {
+            let v = t.exp[i] as usize;
+            assert!(v != 0);
+            assert!(!seen[v], "exp cycle shorter than 65535 at {i}");
+            seen[v] = true;
+        }
+    }
+
+    #[test]
+    fn table_mul_matches_slow_mul_random() {
+        let mut rng = Rng::new(0x6F65536);
+        for _ in 0..2000 {
+            let a = rng.next_u32() as u16;
+            let b = rng.next_u32() as u16;
+            assert_eq!(mul(a, b), mul_slow(a, b), "a={a} b={b}");
+        }
+        assert_eq!(mul(0, 1234), 0);
+        assert_eq!(mul(1234, 0), 0);
+    }
+
+    #[test]
+    fn field_axioms_random() {
+        let mut rng = Rng::new(0xAB);
+        for _ in 0..500 {
+            let a = (rng.next_u32() as u16).max(1);
+            let b = (rng.next_u32() as u16).max(1);
+            let c = rng.next_u32() as u16;
+            assert_eq!(mul(a, b), mul(b, a));
+            assert_eq!(mul(mul(a, b), c), mul(a, mul(b, c)));
+            assert_eq!(mul(a, add(b, c)), add(mul(a, b), mul(a, c)));
+            assert_eq!(mul(a, inv(a)), 1);
+            assert_eq!(mul(a, 1), a);
+            assert_eq!(div(mul(a, b), b), a);
+        }
+    }
+
+    #[test]
+    fn inverse_edge_elements() {
+        for a in [1u16, 2, 3, 0x8000, 0xFFFF, 0x1001] {
+            assert_eq!(mul(a, inv(a)), 1, "a={a:#x}");
+        }
+    }
+}

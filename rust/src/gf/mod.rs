@@ -1,0 +1,12 @@
+//! Finite-field arithmetic for Shamir secret sharing.
+//!
+//! Two fields are provided:
+//! * [`gf256`] — GF(2^8), the classic byte-wise SSS field. Simple and fast,
+//!   but caps the number of share holders at 255; kept for small-n
+//!   deployments and as a cross-validation oracle.
+//! * [`gf65536`] — GF(2^16), the production field. The paper's experiments
+//!   run up to n = 1000 clients (Fig 5.2), beyond GF(2^8)'s capacity, so
+//!   shares are evaluated at x ∈ GF(2^16) \ {0} supporting n ≤ 65535.
+
+pub mod gf256;
+pub mod gf65536;

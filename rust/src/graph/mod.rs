@@ -1,0 +1,396 @@
+//! Assignment-graph machinery (Section 3 of the paper).
+//!
+//! The CCESA protocol is parameterized by an undirected *assignment graph*
+//! `G = (V, E)`: clients i and j exchange public keys and secret shares iff
+//! `{i,j} ∈ E`. SA (Bonawitz et al.) is the complete-graph special case.
+//!
+//! Generators:
+//! * [`Graph::complete`] — SA;
+//! * [`Graph::erdos_renyi`] — the paper's construction, `G(n, p)`;
+//! * [`Graph::harary`] — the k-connected construction of Bell et al. 2020,
+//!   included for the related-work comparison bench;
+//! * [`Graph::ring`], [`Graph::star`], [`Graph::empty`] — test topologies.
+//!
+//! Analysis helpers: connectivity, connected components, induced subgraphs
+//! (the `G_i = G − (V \ V_i)` evolution of the protocol), degree stats.
+
+use crate::util::rng::Rng;
+
+/// Undirected simple graph on vertices `0..n`, adjacency-list backed with
+/// a parallel bitset for O(1) membership tests.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Graph {
+    n: usize,
+    adj: Vec<Vec<usize>>,
+    bits: Vec<u64>, // n x n bitmatrix, row-major
+}
+
+impl Graph {
+    pub fn empty(n: usize) -> Graph {
+        let words_per_row = n.div_ceil(64);
+        Graph { n, adj: vec![Vec::new(); n], bits: vec![0u64; n * words_per_row] }
+    }
+
+    #[inline]
+    fn words_per_row(&self) -> usize {
+        self.n.div_ceil(64)
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Number of edges.
+    pub fn m(&self) -> usize {
+        self.adj.iter().map(|a| a.len()).sum::<usize>() / 2
+    }
+
+    #[inline]
+    pub fn has_edge(&self, i: usize, j: usize) -> bool {
+        debug_assert!(i < self.n && j < self.n);
+        let w = self.words_per_row();
+        self.bits[i * w + j / 64] & (1u64 << (j % 64)) != 0
+    }
+
+    /// Insert an undirected edge; no-op on duplicates and self-loops.
+    pub fn add_edge(&mut self, i: usize, j: usize) {
+        assert!(i < self.n && j < self.n, "edge ({i},{j}) out of range n={}", self.n);
+        if i == j || self.has_edge(i, j) {
+            return;
+        }
+        let w = self.words_per_row();
+        self.bits[i * w + j / 64] |= 1u64 << (j % 64);
+        self.bits[j * w + i / 64] |= 1u64 << (i % 64);
+        self.adj[i].push(j);
+        self.adj[j].push(i);
+    }
+
+    /// Neighbors of `i` (Adj(i) in the paper), unsorted.
+    #[inline]
+    pub fn neighbors(&self, i: usize) -> &[usize] {
+        &self.adj[i]
+    }
+
+    pub fn degree(&self, i: usize) -> usize {
+        self.adj[i].len()
+    }
+
+    // ----- generators ----------------------------------------------------
+
+    /// Complete graph K_n — the SA topology.
+    pub fn complete(n: usize) -> Graph {
+        let mut g = Graph::empty(n);
+        for i in 0..n {
+            for j in (i + 1)..n {
+                g.add_edge(i, j);
+            }
+        }
+        g
+    }
+
+    /// Erdős–Rényi G(n, p): each pair independently connected w.p. `p`.
+    pub fn erdos_renyi(n: usize, p: f64, rng: &mut Rng) -> Graph {
+        assert!((0.0..=1.0).contains(&p), "p={p} out of [0,1]");
+        let mut g = Graph::empty(n);
+        if p >= 1.0 {
+            return Graph::complete(n);
+        }
+        if p <= 0.0 || n < 2 {
+            return g;
+        }
+        // geometric skipping for sparse p: expected O(n²p) work
+        let ln_q = (1.0 - p).ln();
+        let total_pairs = n * (n - 1) / 2;
+        let mut idx: i64 = -1;
+        loop {
+            let u = rng.next_f64().max(1e-300);
+            let skip = (u.ln() / ln_q).floor() as i64 + 1;
+            idx += skip.max(1);
+            if idx as usize >= total_pairs {
+                break;
+            }
+            let (i, j) = pair_from_index(idx as usize, n);
+            g.add_edge(i, j);
+        }
+        g
+    }
+
+    /// Harary graph H_{k,n}: the minimal k-connected graph used by
+    /// Bell et al. (CCS'20). Implemented for even k (circulant with
+    /// offsets 1..k/2) plus the diameter chord when k is odd.
+    pub fn harary(n: usize, k: usize) -> Graph {
+        assert!(k < n, "harary requires k < n");
+        let mut g = Graph::empty(n);
+        let half = k / 2;
+        for i in 0..n {
+            for d in 1..=half {
+                g.add_edge(i, (i + d) % n);
+            }
+        }
+        if k % 2 == 1 {
+            for i in 0..n.div_ceil(2) {
+                g.add_edge(i, (i + n / 2) % n);
+            }
+        }
+        g
+    }
+
+    /// Cycle graph C_n.
+    pub fn ring(n: usize) -> Graph {
+        let mut g = Graph::empty(n);
+        if n >= 2 {
+            for i in 0..n {
+                g.add_edge(i, (i + 1) % n);
+            }
+        }
+        g
+    }
+
+    /// Star graph with center 0.
+    pub fn star(n: usize) -> Graph {
+        let mut g = Graph::empty(n);
+        for i in 1..n {
+            g.add_edge(0, i);
+        }
+        g
+    }
+
+    // ----- analysis -------------------------------------------------------
+
+    /// Induced subgraph on `keep` (must be sorted/deduped ids). Returns the
+    /// subgraph and the mapping from new ids to original ids.
+    pub fn induced(&self, keep: &[usize]) -> (Graph, Vec<usize>) {
+        let mut remap = vec![usize::MAX; self.n];
+        for (new, &old) in keep.iter().enumerate() {
+            assert!(old < self.n);
+            remap[old] = new;
+        }
+        let mut g = Graph::empty(keep.len());
+        for (new_i, &old_i) in keep.iter().enumerate() {
+            for &old_j in self.neighbors(old_i) {
+                let new_j = remap[old_j];
+                if new_j != usize::MAX && new_i < new_j {
+                    g.add_edge(new_i, new_j);
+                }
+            }
+        }
+        (g, keep.to_vec())
+    }
+
+    /// Connected components as sorted vertex lists (BFS).
+    pub fn components(&self) -> Vec<Vec<usize>> {
+        let mut seen = vec![false; self.n];
+        let mut comps = Vec::new();
+        let mut queue = std::collections::VecDeque::new();
+        for s in 0..self.n {
+            if seen[s] {
+                continue;
+            }
+            seen[s] = true;
+            queue.push_back(s);
+            let mut comp = vec![s];
+            while let Some(v) = queue.pop_front() {
+                for &u in self.neighbors(v) {
+                    if !seen[u] {
+                        seen[u] = true;
+                        comp.push(u);
+                        queue.push_back(u);
+                    }
+                }
+            }
+            comp.sort_unstable();
+            comps.push(comp);
+        }
+        comps
+    }
+
+    /// Is the graph connected? (Vacuously true for n ≤ 1.)
+    pub fn is_connected(&self) -> bool {
+        self.n <= 1 || self.components().len() == 1
+    }
+
+    /// Mean degree.
+    pub fn mean_degree(&self) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        self.adj.iter().map(|a| a.len() as f64).sum::<f64>() / self.n as f64
+    }
+
+    /// Min / max degree.
+    pub fn degree_range(&self) -> (usize, usize) {
+        let mut lo = usize::MAX;
+        let mut hi = 0;
+        for a in &self.adj {
+            lo = lo.min(a.len());
+            hi = hi.max(a.len());
+        }
+        if self.n == 0 {
+            (0, 0)
+        } else {
+            (lo, hi)
+        }
+    }
+}
+
+/// Map a linear index in [0, n(n-1)/2) to the (i, j) pair with i < j,
+/// enumerating row by row.
+fn pair_from_index(mut idx: usize, n: usize) -> (usize, usize) {
+    for i in 0..n {
+        let row = n - 1 - i;
+        if idx < row {
+            return (i, i + 1 + idx);
+        }
+        idx -= row;
+    }
+    unreachable!("pair index out of range")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn complete_graph_properties() {
+        let g = Graph::complete(5);
+        assert_eq!(g.m(), 10);
+        assert_eq!(g.degree_range(), (4, 4));
+        assert!(g.is_connected());
+        assert!(g.has_edge(0, 4) && g.has_edge(4, 0));
+        assert!(!g.has_edge(2, 2));
+    }
+
+    #[test]
+    fn add_edge_idempotent_no_self_loops() {
+        let mut g = Graph::empty(3);
+        g.add_edge(0, 1);
+        g.add_edge(1, 0);
+        g.add_edge(1, 1);
+        assert_eq!(g.m(), 1);
+        assert_eq!(g.degree(1), 1);
+    }
+
+    #[test]
+    fn pair_index_bijection() {
+        let n = 13;
+        let mut seen = std::collections::HashSet::new();
+        for idx in 0..n * (n - 1) / 2 {
+            let (i, j) = pair_from_index(idx, n);
+            assert!(i < j && j < n);
+            assert!(seen.insert((i, j)));
+        }
+    }
+
+    #[test]
+    fn erdos_renyi_edge_count_concentrates() {
+        let mut rng = Rng::new(0xE2);
+        let n = 300;
+        let p = 0.1;
+        let g = Graph::erdos_renyi(n, p, &mut rng);
+        let expect = p * (n * (n - 1) / 2) as f64;
+        let got = g.m() as f64;
+        assert!(
+            (got - expect).abs() < 4.0 * expect.sqrt() + 30.0,
+            "edges={got} expected≈{expect}"
+        );
+    }
+
+    #[test]
+    fn erdos_renyi_extremes() {
+        let mut rng = Rng::new(1);
+        assert_eq!(Graph::erdos_renyi(10, 0.0, &mut rng).m(), 0);
+        assert_eq!(Graph::erdos_renyi(10, 1.0, &mut rng).m(), 45);
+        assert_eq!(Graph::erdos_renyi(1, 0.5, &mut rng).m(), 0);
+        assert_eq!(Graph::erdos_renyi(0, 0.5, &mut rng).m(), 0);
+    }
+
+    #[test]
+    fn erdos_renyi_deterministic_in_seed() {
+        let g1 = Graph::erdos_renyi(50, 0.3, &mut Rng::new(7));
+        let g2 = Graph::erdos_renyi(50, 0.3, &mut Rng::new(7));
+        assert_eq!(g1, g2);
+    }
+
+    #[test]
+    fn erdos_renyi_above_connectivity_threshold_connected() {
+        // p = 3 ln n / n ≫ ln n / n ⇒ a.a.s. connected
+        let n = 200;
+        let p = 3.0 * (n as f64).ln() / n as f64;
+        let mut connected = 0;
+        for seed in 0..20 {
+            if Graph::erdos_renyi(n, p, &mut Rng::new(seed)).is_connected() {
+                connected += 1;
+            }
+        }
+        assert!(connected >= 19, "connected {connected}/20");
+    }
+
+    #[test]
+    fn harary_min_degree_k() {
+        for (n, k) in [(10usize, 4usize), (11, 4), (10, 5), (17, 3), (8, 2)] {
+            let g = Graph::harary(n, k);
+            let (lo, _) = g.degree_range();
+            assert!(lo >= k, "H_{{{k},{n}}} min degree {lo}");
+            assert!(g.is_connected());
+            // edge count ≈ ceil(kn/2)
+            assert!(g.m() <= (k * n + n) / 2 + 1);
+        }
+    }
+
+    #[test]
+    fn ring_and_star() {
+        let r = Graph::ring(6);
+        assert_eq!(r.m(), 6);
+        assert_eq!(r.degree_range(), (2, 2));
+        assert!(r.is_connected());
+        let s = Graph::star(6);
+        assert_eq!(s.m(), 5);
+        assert_eq!(s.degree(0), 5);
+        assert!(s.is_connected());
+    }
+
+    #[test]
+    fn components_and_connectivity() {
+        let mut g = Graph::empty(7);
+        g.add_edge(0, 1);
+        g.add_edge(1, 2);
+        g.add_edge(3, 4);
+        // 5, 6 isolated
+        let comps = g.components();
+        assert_eq!(comps.len(), 4);
+        assert_eq!(comps[0], vec![0, 1, 2]);
+        assert_eq!(comps[1], vec![3, 4]);
+        assert!(!g.is_connected());
+        assert!(Graph::empty(1).is_connected());
+        assert!(Graph::empty(0).is_connected());
+    }
+
+    #[test]
+    fn induced_subgraph_matches_paper_evolution() {
+        // G3 = G − (V \ V3): survivors keep exactly their mutual edges
+        let g = Graph::complete(6);
+        let keep = vec![0, 2, 5];
+        let (sub, map) = g.induced(&keep);
+        assert_eq!(sub.n(), 3);
+        assert_eq!(sub.m(), 3);
+        assert_eq!(map, keep);
+
+        let r = Graph::ring(6); // 0-1-2-3-4-5-0
+        let (sub, _) = r.induced(&[0, 1, 3, 4]);
+        // edges kept: (0,1), (3,4) → new ids (0,1), (2,3)
+        assert_eq!(sub.m(), 2);
+        assert!(sub.has_edge(0, 1));
+        assert!(sub.has_edge(2, 3));
+        assert!(!sub.is_connected());
+    }
+
+    #[test]
+    fn property_er_degree_distribution() {
+        // mean degree of G(n,p) ≈ (n-1)p
+        let n = 400;
+        let p = 0.2;
+        let g = Graph::erdos_renyi(n, p, &mut Rng::new(0xDE6));
+        let expect = (n - 1) as f64 * p;
+        assert!((g.mean_degree() - expect).abs() < 0.1 * expect);
+    }
+}

@@ -1,0 +1,30 @@
+//! # CCESA — Communication-Computation Efficient Secure Aggregation
+//!
+//! Reproduction of Choi, Sohn, Han & Moon (2020): privacy-preserving
+//! federated learning via secure aggregation over *sparse* (Erdős–Rényi)
+//! secret-sharing graphs, at 20–30% of the communication/computation cost
+//! of Bonawitz et al.'s complete-graph secure aggregation.
+//!
+//! Three-layer architecture (see DESIGN.md):
+//! * **L3 (this crate)** — the protocol engine, FL orchestrator, simnet,
+//!   analysis and attacks;
+//! * **L2 (python/compile/model.py)** — JAX train/eval/inversion steps,
+//!   AOT-lowered to HLO text;
+//! * **L1 (python/compile/kernels/)** — Pallas kernels called from L2.
+//!
+//! Python never runs on the request path: `runtime` loads the AOT
+//! artifacts via the PJRT C API and executes them from Rust.
+pub mod analysis;
+pub mod bench;
+pub mod attacks;
+pub mod coordinator;
+pub mod crypto;
+pub mod fl;
+pub mod gf;
+pub mod graph;
+pub mod masking;
+pub mod net;
+pub mod protocol;
+pub mod runtime;
+pub mod shamir;
+pub mod util;

@@ -1,0 +1,239 @@
+//! `ccesa` — the leader binary: analysis reports, single protocol rounds,
+//! and config-driven federated-learning runs.
+//!
+//! ```text
+//! ccesa analyze pstar          # Table F.4
+//! ccesa analyze costs          # Table 1 cost model
+//! ccesa analyze turbo          # §1 Turbo-aggregate comparison
+//! ccesa analyze montecarlo     # empirical P_e vs Theorems 5/6
+//! ccesa round --n 100 --p 0.64 --dim 10000   # one secure-agg round
+//! ccesa fl --config configs/quickstart.json  # config-driven FL run
+//! ```
+
+use anyhow::{anyhow, bail, Result};
+use ccesa::analysis::bounds::{
+    p_star, per_step_q, t_rule, table_f4, theorem5_reliability_bound, theorem6_privacy_bound,
+};
+use ccesa::analysis::costs::{table1_row, turbo_comparison_ratio};
+use ccesa::analysis::montecarlo::estimate_failure_rates;
+use ccesa::fl::data::{partition_iid, partition_noniid, SyntheticCifar};
+use ccesa::fl::rounds::{run_fl_mlp, Aggregation, FlConfig};
+use ccesa::protocol::dropout::DropoutModel;
+use ccesa::protocol::engine::run_round;
+use ccesa::protocol::{ProtocolConfig, Topology};
+use ccesa::runtime::mlp::MlpRuntime;
+use ccesa::runtime::Runtime;
+use ccesa::util::cli::Args;
+use ccesa::util::json::Json;
+use ccesa::util::rng::Rng;
+
+fn main() -> Result<()> {
+    ccesa::util::logging::init();
+    let args = Args::new(
+        "ccesa",
+        "Communication-Computation Efficient Secure Aggregation (Choi et al. 2020)\n\
+         subcommands: analyze {pstar|costs|turbo|montecarlo} | round | fl",
+    )
+    .flag("n", Some("100"), "number of clients")
+    .flag("p", None, "ER connection probability (default: p*(n, qtotal))")
+    .flag("t", None, "secret-sharing threshold (default: Remark 4 rule)")
+    .flag("dim", Some("10000"), "model dimension for `round`")
+    .flag("qtotal", Some("0.0"), "protocol-level dropout probability")
+    .flag("trials", Some("500"), "Monte-Carlo trials")
+    .flag("seed", Some("1"), "seed")
+    .flag("config", None, "JSON config path for `fl`")
+    .switch("sa", "use the complete graph (Bonawitz et al. SA)")
+    .parse();
+
+    let sub: Vec<&str> = args.positional().iter().map(|s| s.as_str()).collect();
+    match sub.first().copied() {
+        Some("analyze") => analyze(&args, sub.get(1).copied().unwrap_or("pstar")),
+        Some("round") => round(&args),
+        Some("fl") => fl(&args),
+        other => {
+            if let Some(o) = other {
+                eprintln!("unknown subcommand {o:?}\n");
+            }
+            eprintln!("{}", args.help_text());
+            Ok(())
+        }
+    }
+}
+
+fn analyze(args: &Args, what: &str) -> Result<()> {
+    match what {
+        "pstar" => {
+            println!("n, q_total, p* (Table F.4)");
+            for (n, qt, p) in table_f4() {
+                println!("{n},{qt},{p:.4}");
+            }
+        }
+        "costs" => {
+            for n in [100usize, 300, 500, 1000] {
+                println!("{}", table1_row(n, 10_000, p_star(n, 0.0)));
+            }
+        }
+        "turbo" => {
+            let r = turbo_comparison_ratio(1_000_000, 100, 32, 10);
+            println!(
+                "CCESA / Turbo-aggregate client bandwidth = {r:.4} (paper: ≈0.03) \
+                 at m=1e6, R=32, n=100, L=10, a_K=a_S=256"
+            );
+        }
+        "montecarlo" => {
+            let n: usize = args.req("n");
+            let qt: f64 = args.req("qtotal");
+            let trials: usize = args.req("trials");
+            let p = args.get::<f64>("p").unwrap_or_else(|| p_star(n, qt));
+            let t = args.get::<usize>("t").unwrap_or_else(|| t_rule(n, p));
+            let q = per_step_q(qt);
+            let est = estimate_failure_rates(n, p, q, t, trials, args.req("seed"));
+            println!(
+                "n={n} p={p:.4} t={t} q_total={qt} trials={trials}\n\
+                 empirical P_e(reliability) = {:.5}  (Theorem 5 bound {:.3e})\n\
+                 empirical P_e(privacy)     = {:.5}  (Theorem 6 bound {:.3e})",
+                est.p_e_reliability,
+                theorem5_reliability_bound(n, p, q, t),
+                est.p_e_privacy,
+                theorem6_privacy_bound(n, p, q),
+            );
+        }
+        other => bail!("unknown analyze target {other:?} (pstar|costs|turbo|montecarlo)"),
+    }
+    Ok(())
+}
+
+fn round(args: &Args) -> Result<()> {
+    let n: usize = args.req("n");
+    let dim: usize = args.req("dim");
+    let qt: f64 = args.req("qtotal");
+    let sa = args.get_bool("sa");
+    let p = args.get::<f64>("p").unwrap_or_else(|| p_star(n, qt));
+    let t = args
+        .get::<usize>("t")
+        .unwrap_or_else(|| if sa { n / 2 + 1 } else { t_rule(n, p) });
+    let topology = if sa { Topology::Complete } else { Topology::ErdosRenyi { p } };
+    let mut rng = Rng::new(args.req("seed"));
+    let models: Vec<Vec<u64>> = (0..n)
+        .map(|_| (0..dim).map(|_| rng.next_u64() & 0xFFFF_FFFF).collect())
+        .collect();
+    let cfg = ProtocolConfig {
+        n,
+        t,
+        mask_bits: 32,
+        dim,
+        topology,
+        dropout: if qt > 0.0 { DropoutModel::iid_from_total(qt) } else { DropoutModel::None },
+        seed: args.req("seed"),
+    };
+    let r = run_round(&cfg, &models)?;
+    println!(
+        "scheme={} n={n} t={t} p={:.4} dim={dim}\nreliable={} |V1..V4|={},{},{},{}\n\
+         sum==truth: {}\nbytes up/down per step: {:?} / {:?}\n\
+         client ms (mean): step0={:.3} step1={:.3} step2={:.3} step3={:.3}; server total={:.1} ms",
+        if sa { "SA" } else { "CCESA" },
+        if sa { 1.0 } else { p },
+        r.reliable,
+        r.sets.v1.len(),
+        r.sets.v2.len(),
+        r.sets.v3.len(),
+        r.sets.v4.len(),
+        r.sum.as_deref() == Some(&r.true_sum_v3[..]),
+        r.stats.bytes_up,
+        r.stats.bytes_down,
+        r.times.total_ms("client_step0") / n as f64,
+        r.times.total_ms("client_step1") / n as f64,
+        r.times.total_ms("client_step2") / n as f64,
+        r.times.total_ms("client_step3") / n as f64,
+        r.times.total_ms("server_step0")
+            + r.times.total_ms("server_step1")
+            + r.times.total_ms("server_step2")
+            + r.times.total_ms("server_finalize"),
+    );
+    Ok(())
+}
+
+fn fl(args: &Args) -> Result<()> {
+    let path: String = args
+        .get_str("config")
+        .ok_or_else(|| anyhow!("fl requires --config <path> (see configs/)"))?;
+    let text = std::fs::read_to_string(&path)?;
+    let j = Json::parse(&text).map_err(|e| anyhow!("parsing {path}: {e}"))?;
+
+    let n = j.get("clients").as_usize().unwrap_or(60);
+    let rounds = j.get("rounds").as_usize().unwrap_or(30);
+    let fraction = j.get("fraction").as_f64().unwrap_or(0.5);
+    let qt = j.get("qtotal").as_f64().unwrap_or(0.0);
+    let samples = j.get("samples").as_usize().unwrap_or(3000);
+    let noise = j.get("noise").as_f64().unwrap_or(0.4) as f32;
+    let seed = j.get("seed").as_u64().unwrap_or(7);
+    let noniid = j.get("noniid").as_bool().unwrap_or(false);
+    let scheme = j.get("scheme").as_str().unwrap_or("ccesa").to_string();
+
+    let rt = Runtime::cpu_default()?;
+    let mlp = MlpRuntime::load(&rt)?;
+    let mut rng = Rng::new(seed);
+    let (train, test) = SyntheticCifar::generate_split(
+        samples,
+        samples / 5,
+        mlp.dims.d,
+        mlp.dims.c,
+        noise,
+        &mut rng,
+    );
+    let parts = if noniid {
+        partition_noniid(&train, n, &mut rng)
+    } else {
+        partition_iid(&train, n, &mut rng)
+    };
+
+    let k = ((n as f64) * fraction).round().max(1.0) as usize;
+    let aggregation = match scheme.as_str() {
+        "plain" | "fedavg" => Aggregation::Plain,
+        "sa" => Aggregation::Secure {
+            topology: Topology::Complete,
+            t_override: Some(k / 2 + 1),
+            mask_bits: 32,
+            dropout: if qt > 0.0 { DropoutModel::iid_from_total(qt) } else { DropoutModel::None },
+        },
+        "ccesa" => {
+            let p = j.get("p").as_f64().unwrap_or_else(|| p_star(k, qt));
+            Aggregation::Secure {
+                topology: Topology::ErdosRenyi { p },
+                t_override: Some(t_rule(k, p).min(k.saturating_sub(1).max(1))),
+                mask_bits: 32,
+                dropout: if qt > 0.0 {
+                    DropoutModel::iid_from_total(qt)
+                } else {
+                    DropoutModel::None
+                },
+            }
+        }
+        other => bail!("unknown scheme {other:?} (plain|sa|ccesa)"),
+    };
+    let cfg = FlConfig {
+        n_clients: n,
+        rounds,
+        client_fraction: fraction,
+        local_epochs: j.get("local_epochs").as_usize().unwrap_or(2),
+        lr: j.get("lr").as_f64().unwrap_or(0.5) as f32,
+        clip: j.get("clip").as_f64().unwrap_or(4.0) as f32,
+        aggregation,
+        seed,
+    };
+    let hist = run_fl_mlp(&cfg, &mlp, &train, &parts, &test)?;
+    for l in &hist.logs {
+        println!(
+            "round={} loss={:.4} acc={:.4} reliable={}",
+            l.round, l.mean_local_loss, l.test_accuracy, l.reliable
+        );
+    }
+    println!(
+        "final_accuracy={:.4} unreliable={}/{} comm_MiB={:.2}",
+        hist.final_accuracy(),
+        hist.unreliable_rounds(),
+        rounds,
+        hist.total_stats.server_total() as f64 / (1024.0 * 1024.0)
+    );
+    Ok(())
+}

@@ -1,0 +1,244 @@
+//! Fixed-point quantization and masked-vector arithmetic over Z_{2^b}.
+//!
+//! Secure aggregation operates on integers modulo 2^b (the paper uses
+//! F_{2^16}; we default to b = 32 for training headroom — see DESIGN.md).
+//! The pipeline per round:
+//!
+//! 1. each client **quantizes** its f32 model delta into Z_{2^b} with a
+//!    shared (clip, scale) so that the modular sum of up to `n_max`
+//!    client vectors never wraps ambiguously;
+//! 2. clients add PRG masks (Eq. 3) — [`crate::crypto::prg`];
+//! 3. the server sums masked vectors mod 2^b, cancels masks (Eq. 4), and
+//!    **dequantizes** the exact integer sum back to f32.
+//!
+//! Signed values are centered: x ↦ round(x·scale) + 2^(b-1) is *not* used;
+//! instead we use two's-complement semantics (negative values wrap), which
+//! makes the sum decode exact as long as |Σ x_i|·scale < 2^(b-1).
+
+use crate::util::rng::Rng;
+
+/// Quantization parameters shared by all clients in a round.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Quantizer {
+    /// Mask/aggregation word width b (1..=64). Domain is Z_{2^b}.
+    pub bits: u32,
+    /// Values are clipped to [-clip, clip] before scaling.
+    pub clip: f32,
+    /// Multiplicative scale; chosen via [`Quantizer::for_sum_of`].
+    pub scale: f64,
+}
+
+impl Quantizer {
+    /// Build a quantizer that can represent the *sum* of up to `n_max`
+    /// clipped vectors without modular ambiguity:
+    /// scale = 2^(b-1) / (n_max · clip) with a 2× safety margin.
+    pub fn for_sum_of(bits: u32, clip: f32, n_max: usize) -> Quantizer {
+        assert!((2..=64).contains(&bits));
+        assert!(clip > 0.0 && n_max > 0);
+        let headroom = 2.0 * n_max as f64 * clip as f64;
+        let scale = (1u64 << (bits - 1)) as f64 / headroom;
+        Quantizer { bits, clip, scale }
+    }
+
+    #[inline]
+    pub fn modulus_mask(&self) -> u64 {
+        if self.bits == 64 {
+            u64::MAX
+        } else {
+            (1u64 << self.bits) - 1
+        }
+    }
+
+    /// Quantize one value to Z_{2^b} (two's complement wrap).
+    #[inline]
+    pub fn quantize_one(&self, x: f32) -> u64 {
+        let clipped = x.clamp(-self.clip, self.clip) as f64;
+        let v = (clipped * self.scale).round() as i64;
+        (v as u64) & self.modulus_mask()
+    }
+
+    /// Decode one aggregated word back to f64, interpreting the b-bit word
+    /// as two's complement.
+    #[inline]
+    pub fn dequantize_one(&self, w: u64) -> f64 {
+        let b = self.bits;
+        let half = 1u64 << (b - 1);
+        let w = w & self.modulus_mask();
+        let signed = if w >= half {
+            w as i64 - (self.modulus_mask() as i64 + 1)
+        } else {
+            w as i64
+        };
+        signed as f64 / self.scale
+    }
+
+    /// Quantize a vector.
+    pub fn quantize(&self, xs: &[f32]) -> Vec<u64> {
+        xs.iter().map(|&x| self.quantize_one(x)).collect()
+    }
+
+    /// Dequantize a vector of aggregated words.
+    pub fn dequantize(&self, ws: &[u64]) -> Vec<f64> {
+        ws.iter().map(|&w| self.dequantize_one(w)).collect()
+    }
+
+    /// Worst-case absolute rounding error of a sum of `k` quantized values.
+    pub fn sum_error_bound(&self, k: usize) -> f64 {
+        0.5 * k as f64 / self.scale
+    }
+}
+
+/// c = a + b (mod 2^bits), in place on `a`.
+pub fn add_assign(a: &mut [u64], b: &[u64], bits: u32) {
+    debug_assert_eq!(a.len(), b.len());
+    let mask = if bits == 64 { u64::MAX } else { (1u64 << bits) - 1 };
+    for (x, y) in a.iter_mut().zip(b) {
+        *x = x.wrapping_add(*y) & mask;
+    }
+}
+
+/// c = a − b (mod 2^bits), in place on `a`.
+pub fn sub_assign(a: &mut [u64], b: &[u64], bits: u32) {
+    debug_assert_eq!(a.len(), b.len());
+    let mask = if bits == 64 { u64::MAX } else { (1u64 << bits) - 1 };
+    for (x, y) in a.iter_mut().zip(b) {
+        *x = x.wrapping_sub(*y) & mask;
+    }
+}
+
+/// Random vector in Z_{2^bits} (test helper / privacy-attack baseline).
+pub fn random_vector(len: usize, bits: u32, rng: &mut Rng) -> Vec<u64> {
+    let mask = if bits == 64 { u64::MAX } else { (1u64 << bits) - 1 };
+    (0..len).map(|_| rng.next_u64() & mask).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantize_round_trip_single() {
+        let q = Quantizer::for_sum_of(32, 4.0, 100);
+        for x in [-4.0f32, -1.5, -1e-3, 0.0, 1e-3, 0.7, 3.999, 4.0] {
+            let w = q.quantize_one(x);
+            let back = q.dequantize_one(w);
+            assert!((back - x as f64).abs() < 1.0 / q.scale, "x={x} back={back}");
+        }
+    }
+
+    #[test]
+    fn clipping_applied() {
+        let q = Quantizer::for_sum_of(32, 1.0, 10);
+        assert_eq!(q.quantize_one(5.0), q.quantize_one(1.0));
+        assert_eq!(q.quantize_one(-5.0), q.quantize_one(-1.0));
+    }
+
+    #[test]
+    fn modular_sum_decodes_exactly() {
+        // sum of n quantized vectors, with masks added and removed, decodes
+        // to the true sum within rounding error
+        let n = 50;
+        let dim = 200;
+        let q = Quantizer::for_sum_of(32, 2.0, n);
+        let mut rng = Rng::new(0x9A5);
+        let vecs: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..dim).map(|_| rng.normal_f32(0.0, 0.5)).collect())
+            .collect();
+        let mut acc = vec![0u64; dim];
+        for v in &vecs {
+            let qv = q.quantize(v);
+            add_assign(&mut acc, &qv, q.bits);
+        }
+        let decoded = q.dequantize(&acc);
+        for d in 0..dim {
+            let truth: f64 = vecs.iter().map(|v| v[d].clamp(-2.0, 2.0) as f64).sum();
+            assert!(
+                (decoded[d] - truth).abs() <= q.sum_error_bound(n) + 1e-9,
+                "dim {d}: decoded={} truth={truth}",
+                decoded[d]
+            );
+        }
+    }
+
+    #[test]
+    fn negative_sum_wraps_correctly() {
+        let q = Quantizer::for_sum_of(16, 1.0, 4);
+        let mut acc = vec![0u64; 1];
+        for _ in 0..4 {
+            add_assign(&mut acc, &q.quantize(&[-1.0]), q.bits);
+        }
+        let s = q.dequantize(&acc)[0];
+        assert!((s + 4.0).abs() < q.sum_error_bound(4) + 1e-9, "s={s}");
+    }
+
+    #[test]
+    fn add_sub_are_inverse() {
+        let mut rng = Rng::new(0xC3);
+        for bits in [16u32, 32, 64] {
+            let a0 = random_vector(128, bits, &mut rng);
+            let b = random_vector(128, bits, &mut rng);
+            let mut a = a0.clone();
+            add_assign(&mut a, &b, bits);
+            sub_assign(&mut a, &b, bits);
+            assert_eq!(a, a0, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn mask_cancellation_identity() {
+        // the algebraic heart of secure aggregation: pairwise masks with
+        // the i<j sign convention cancel in the sum (Eq. 1 → Eq. 2)
+        use crate::crypto::prg::{apply_mask, NONCE_PAIRWISE};
+        let bits = 32;
+        let dim = 300;
+        let n = 6;
+        let mut rng = Rng::new(0x11);
+        // symmetric seeds s[i][j] = s[j][i]
+        let mut seeds = vec![vec![[0u8; 32]; n]; n];
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let mut s = [0u8; 32];
+                rng.fill_bytes(&mut s);
+                seeds[i][j] = s;
+                seeds[j][i] = s;
+            }
+        }
+        let q = Quantizer::for_sum_of(bits, 1.0, n);
+        let models: Vec<Vec<f32>> =
+            (0..n).map(|_| (0..dim).map(|_| rng.normal_f32(0.0, 0.2)).collect()).collect();
+        // each client masks
+        let mut total = vec![0u64; dim];
+        for i in 0..n {
+            let mut masked = q.quantize(&models[i]);
+            for j in 0..n {
+                if j == i {
+                    continue;
+                }
+                apply_mask(&mut masked, &seeds[i][j], &NONCE_PAIRWISE, bits, i > j);
+            }
+            add_assign(&mut total, &masked, bits);
+        }
+        // masks cancel: total == Σ quantized models
+        let mut expect = vec![0u64; dim];
+        for m in &models {
+            add_assign(&mut expect, &q.quantize(m), bits);
+        }
+        assert_eq!(total, expect);
+    }
+
+    #[test]
+    fn sum_error_bound_sane() {
+        let q = Quantizer::for_sum_of(32, 4.0, 1000);
+        // resolution fine enough for gradient sums
+        assert!(q.sum_error_bound(1000) < 1e-2);
+    }
+
+    #[test]
+    fn sixteen_bit_field_like_paper_table51() {
+        let q = Quantizer::for_sum_of(16, 1.0, 10);
+        let w = q.quantize_one(0.5);
+        assert!(w < 1 << 16);
+        let b = q.dequantize_one(w);
+        assert!((b - 0.5).abs() < 1.0 / q.scale);
+    }
+}

@@ -1,0 +1,148 @@
+//! Simulated star network between n clients and the server, with exact
+//! byte accounting per protocol step and direction.
+//!
+//! The paper's Table 1 and Appendix C are statements about *communication
+//! bandwidth*; this module is the measurement instrument: every protocol
+//! message declares its wire size and is charged to (step, direction,
+//! client). The Table-1 scaling bench then fits log–log slopes against n.
+
+/// Direction of a message on the star topology.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dir {
+    /// client → server
+    Up,
+    /// server → client
+    Down,
+}
+
+/// Byte/message counters for one protocol round.
+#[derive(Debug, Clone, Default)]
+pub struct NetStats {
+    /// bytes_up[step] — total client→server bytes in protocol step 0..=3
+    pub bytes_up: [u64; 4],
+    pub bytes_down: [u64; 4],
+    pub msgs_up: [u64; 4],
+    pub msgs_down: [u64; 4],
+    /// per-client totals across all steps (index = client id)
+    pub client_up: Vec<u64>,
+    pub client_down: Vec<u64>,
+}
+
+impl NetStats {
+    pub fn new(n: usize) -> NetStats {
+        NetStats {
+            client_up: vec![0; n],
+            client_down: vec![0; n],
+            ..Default::default()
+        }
+    }
+
+    /// Charge one message.
+    pub fn record(&mut self, step: usize, dir: Dir, client: usize, bytes: usize) {
+        assert!(step < 4, "protocol has steps 0..=3");
+        match dir {
+            Dir::Up => {
+                self.bytes_up[step] += bytes as u64;
+                self.msgs_up[step] += 1;
+                self.client_up[client] += bytes as u64;
+            }
+            Dir::Down => {
+                self.bytes_down[step] += bytes as u64;
+                self.msgs_down[step] += 1;
+                self.client_down[client] += bytes as u64;
+            }
+        }
+    }
+
+    /// Total bytes through the server (both directions, all steps).
+    pub fn server_total(&self) -> u64 {
+        self.bytes_up.iter().sum::<u64>() + self.bytes_down.iter().sum::<u64>()
+    }
+
+    /// Mean per-client bandwidth (up + down) over clients that sent
+    /// anything.
+    pub fn mean_client_total(&self) -> f64 {
+        let active: Vec<u64> = self
+            .client_up
+            .iter()
+            .zip(&self.client_down)
+            .map(|(u, d)| u + d)
+            .filter(|&t| t > 0)
+            .collect();
+        if active.is_empty() {
+            0.0
+        } else {
+            active.iter().sum::<u64>() as f64 / active.len() as f64
+        }
+    }
+
+    /// Max per-client bandwidth.
+    pub fn max_client_total(&self) -> u64 {
+        self.client_up
+            .iter()
+            .zip(&self.client_down)
+            .map(|(u, d)| u + d)
+            .max()
+            .unwrap_or(0)
+    }
+
+    pub fn merge(&mut self, other: &NetStats) {
+        for s in 0..4 {
+            self.bytes_up[s] += other.bytes_up[s];
+            self.bytes_down[s] += other.bytes_down[s];
+            self.msgs_up[s] += other.msgs_up[s];
+            self.msgs_down[s] += other.msgs_down[s];
+        }
+        if self.client_up.len() < other.client_up.len() {
+            self.client_up.resize(other.client_up.len(), 0);
+            self.client_down.resize(other.client_down.len(), 0);
+        }
+        for (i, (u, d)) in other.client_up.iter().zip(&other.client_down).enumerate() {
+            self.client_up[i] += u;
+            self.client_down[i] += d;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_totals() {
+        let mut s = NetStats::new(3);
+        s.record(0, Dir::Up, 0, 100);
+        s.record(0, Dir::Down, 0, 50);
+        s.record(2, Dir::Up, 1, 200);
+        assert_eq!(s.bytes_up[0], 100);
+        assert_eq!(s.bytes_down[0], 50);
+        assert_eq!(s.bytes_up[2], 200);
+        assert_eq!(s.server_total(), 350);
+        assert_eq!(s.client_up[0], 100);
+        assert_eq!(s.client_down[0], 50);
+        assert_eq!(s.max_client_total(), 200);
+        // mean over active clients (0 and 1)
+        assert!((s.mean_client_total() - 175.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_adds_counters() {
+        let mut a = NetStats::new(2);
+        a.record(1, Dir::Up, 0, 10);
+        let mut b = NetStats::new(2);
+        b.record(1, Dir::Up, 1, 20);
+        b.record(3, Dir::Down, 0, 5);
+        a.merge(&b);
+        assert_eq!(a.bytes_up[1], 30);
+        assert_eq!(a.bytes_down[3], 5);
+        assert_eq!(a.msgs_up[1], 2);
+        assert_eq!(a.client_up[1], 20);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_invalid_step() {
+        let mut s = NetStats::new(1);
+        s.record(4, Dir::Up, 0, 1);
+    }
+}

@@ -1,0 +1,354 @@
+//! Client-side state machine for Algorithm 1.
+//!
+//! A [`Client`] is driven through `step0_advertise → step1_share_keys →
+//! step2_masked_input → step3_unmask`. Any step may simply not be called
+//! (dropout); the state carries everything needed by later steps.
+
+use super::messages::*;
+use super::ClientId;
+use crate::crypto::aead;
+use crate::crypto::dh::{self, KeyPair, PublicKey};
+use crate::crypto::prg::{apply_mask, NONCE_PAIRWISE, NONCE_SELF};
+use crate::shamir::{self, Share};
+use crate::util::rng::Rng;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Per-pair AEAD nonce: direction-dependent so the shared key `c_{i,j}` is
+/// never reused with the same nonce for both directions.
+fn pair_nonce(from: ClientId, to: ClientId) -> [u8; 12] {
+    let mut n = [0u8; 12];
+    n[..4].copy_from_slice(&(from as u32).to_le_bytes());
+    n[4..8].copy_from_slice(&(to as u32).to_le_bytes());
+    n[8..12].copy_from_slice(b"shr1");
+    n
+}
+
+/// Client state across the four protocol steps.
+pub struct Client {
+    pub id: ClientId,
+    /// Encryption key pair (c_i^PK, c_i^SK).
+    pub c_keys: KeyPair,
+    /// Mask key pair (s_i^PK, s_i^SK).
+    pub s_keys: KeyPair,
+    /// Self-mask PRG seed b_i.
+    pub b_seed: [u8; 32],
+    t: usize,
+    mask_bits: u32,
+    /// Static neighborhood Adj(i) in the assignment graph.
+    neighbors: Vec<ClientId>,
+    /// Public keys received in the Step-0 bundle: j → (c_j^PK, s_j^PK).
+    peer_keys: BTreeMap<ClientId, (PublicKey, PublicKey)>,
+    /// Own (kept) shares of b_i and s_i^SK.
+    own_b_share: Option<Share>,
+    own_sk_share: Option<Share>,
+    /// Ciphertexts received in Step 1, by sender.
+    received: BTreeMap<ClientId, Vec<u8>>,
+    /// Neighbors that were alive in Step 1 (senders of `received`) — the
+    /// paper's V2 ∩ Adj(i), fixed when the delivery arrives.
+    alive_neighbors_v2: Vec<ClientId>,
+}
+
+impl Client {
+    /// Create a client with fresh keys. `neighbors` is Adj(id) in G.
+    pub fn new(
+        id: ClientId,
+        t: usize,
+        mask_bits: u32,
+        neighbors: Vec<ClientId>,
+        rng: &mut Rng,
+    ) -> Client {
+        let c_keys = KeyPair::generate(rng);
+        let s_keys = KeyPair::generate(rng);
+        let mut b_seed = [0u8; 32];
+        rng.fill_bytes(&mut b_seed);
+        Client {
+            id,
+            c_keys,
+            s_keys,
+            b_seed,
+            t,
+            mask_bits,
+            neighbors,
+            peer_keys: BTreeMap::new(),
+            own_b_share: None,
+            own_sk_share: None,
+            received: BTreeMap::new(),
+            alive_neighbors_v2: Vec::new(),
+        }
+    }
+
+    pub fn neighbors(&self) -> &[ClientId] {
+        &self.neighbors
+    }
+
+    /// **Step 0** — advertise public keys.
+    pub fn step0_advertise(&self) -> AdvertiseKeys {
+        AdvertiseKeys { id: self.id, c_pk: self.c_keys.pk, s_pk: self.s_keys.pk }
+    }
+
+    /// **Step 1** — receive the key bundle for Adj(i) ∩ V1, secret-share
+    /// `b_i` and `s_i^SK` among those neighbors (plus self), and upload the
+    /// AEAD-encrypted shares.
+    pub fn step1_share_keys(&mut self, bundle: &KeyBundle, rng: &mut Rng) -> Result<ShareUpload> {
+        for (id, c_pk, s_pk) in &bundle.entries {
+            self.peer_keys.insert(*id, (*c_pk, *s_pk));
+        }
+        // Share holders: alive neighbors (in the bundle) + self.
+        let mut holders: Vec<ClientId> =
+            bundle.entries.iter().map(|(id, _, _)| *id).collect();
+        holders.push(self.id);
+        holders.sort_unstable();
+        let points: Vec<u16> = holders.iter().map(|&h| shamir::point_for_client(h)).collect();
+        if self.t > points.len() {
+            bail!(
+                "client {}: threshold t={} exceeds |Adj(i)∩V1|+1={}",
+                self.id,
+                self.t,
+                points.len()
+            );
+        }
+        let b_shares = shamir::split(&self.b_seed, self.t, &points, rng)
+            .context("splitting b_i")?;
+        let sk_shares = shamir::split(&self.s_keys.sk, self.t, &points, rng)
+            .context("splitting s_i^SK")?;
+
+        let mut out = Vec::with_capacity(holders.len() - 1);
+        for ((holder, b), sk) in holders.iter().zip(b_shares).zip(sk_shares) {
+            if *holder == self.id {
+                self.own_b_share = Some(b);
+                self.own_sk_share = Some(sk);
+                continue;
+            }
+            let (c_pk, _) = self
+                .peer_keys
+                .get(holder)
+                .with_context(|| format!("missing public key for holder {holder}"))?;
+            let key = dh::agree_enc_key(&self.c_keys.sk, c_pk);
+            // plaintext: len-prefixed b-share || sk-share
+            let bb = b.to_bytes();
+            let sb = sk.to_bytes();
+            let mut pt = Vec::with_capacity(2 + bb.len() + sb.len());
+            pt.extend_from_slice(&(bb.len() as u16).to_le_bytes());
+            pt.extend_from_slice(&bb);
+            pt.extend_from_slice(&sb);
+            let ct = aead::seal(&key, &pair_nonce(self.id, *holder), b"ccesa-share", &pt);
+            out.push(EncryptedShare { from: self.id, to: *holder, ciphertext: ct });
+        }
+        Ok(ShareUpload { from: self.id, shares: out })
+    }
+
+    /// **Step 2** — receive the ciphertexts addressed to us (their senders
+    /// are exactly V2 ∩ Adj(i)), then mask the model per Eq. (3).
+    pub fn step2_masked_input(
+        &mut self,
+        delivery: &ShareDelivery,
+        model: &[u64],
+    ) -> Result<MaskedInput> {
+        for es in &delivery.shares {
+            if es.to != self.id {
+                bail!("misrouted ciphertext: to={} at client {}", es.to, self.id);
+            }
+            self.received.insert(es.from, es.ciphertext.clone());
+        }
+        self.alive_neighbors_v2 = self.received.keys().copied().collect();
+
+        let mask = if self.mask_bits == 64 {
+            u64::MAX
+        } else {
+            (1u64 << self.mask_bits) - 1
+        };
+        let mut masked: Vec<u64> = model.iter().map(|&w| w & mask).collect();
+        // self mask PRG(b_i)
+        apply_mask(&mut masked, &self.b_seed, &NONCE_SELF, self.mask_bits, false);
+        // pairwise masks ± PRG(s_{i,j}) for j ∈ V2 ∩ Adj(i)
+        for &j in &self.alive_neighbors_v2 {
+            let (_, s_pk) = self
+                .peer_keys
+                .get(&j)
+                .with_context(|| format!("no mask public key for neighbor {j}"))?;
+            let seed = dh::agree_mask_seed(&self.s_keys.sk, s_pk);
+            // sign convention: + if i < j, − if i > j
+            apply_mask(&mut masked, &seed, &NONCE_PAIRWISE, self.mask_bits, self.id > j);
+        }
+        Ok(MaskedInput { id: self.id, masked, bits: self.mask_bits })
+    }
+
+    /// **Step 3** — after learning V3, decrypt the stored ciphertexts and
+    /// reveal to the server: `b`-shares of surviving owners, `s^SK`-shares
+    /// of owners that dropped between Steps 1 and 2.
+    pub fn step3_unmask(&mut self, announce: &SurvivorAnnounce) -> Result<UnmaskShares> {
+        let v3 = &announce.v3;
+        let in_v3 = |id: ClientId| v3.binary_search(&id).is_ok();
+        let mut shares: Vec<(ClientId, ShareKind, Share)> = Vec::new();
+
+        // own share of b_i (we are in V3 if we got this far)
+        if in_v3(self.id) {
+            if let Some(b) = &self.own_b_share {
+                shares.push((self.id, ShareKind::SelfMask, b.clone()));
+            }
+        }
+        for (&owner, ct) in &self.received {
+            let (c_pk, _) = self
+                .peer_keys
+                .get(&owner)
+                .with_context(|| format!("no enc public key for owner {owner}"))?;
+            let key = dh::agree_enc_key(&self.c_keys.sk, c_pk);
+            let pt = aead::open(&key, &pair_nonce(owner, self.id), b"ccesa-share", ct)
+                .with_context(|| format!("decrypting shares from {owner}"))?;
+            if pt.len() < 2 {
+                bail!("short share plaintext from {owner}");
+            }
+            let blen = u16::from_le_bytes([pt[0], pt[1]]) as usize;
+            if pt.len() < 2 + blen {
+                bail!("truncated share plaintext from {owner}");
+            }
+            let b_share = Share::from_bytes(&pt[2..2 + blen])
+                .map_err(|e| anyhow::anyhow!("bad b-share from {owner}: {e}"))?;
+            let sk_share = Share::from_bytes(&pt[2 + blen..])
+                .map_err(|e| anyhow::anyhow!("bad sk-share from {owner}: {e}"))?;
+            if in_v3(owner) {
+                shares.push((owner, ShareKind::SelfMask, b_share));
+            } else {
+                // owner uploaded shares (∈ V2) but no masked input (∉ V3)
+                shares.push((owner, ShareKind::SecretKey, sk_share));
+            }
+        }
+        Ok(UnmaskShares { from: self.id, shares })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(id: ClientId, t: usize, neighbors: Vec<ClientId>, seed: u64) -> Client {
+        Client::new(id, t, 32, neighbors, &mut Rng::new(seed))
+    }
+
+    fn bundle_for(clients: &[&Client]) -> KeyBundle {
+        KeyBundle {
+            entries: clients
+                .iter()
+                .map(|c| (c.id, c.c_keys.pk, c.s_keys.pk))
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn step0_exposes_only_public_keys() {
+        let c = mk(3, 2, vec![0, 1], 9);
+        let adv = c.step0_advertise();
+        assert_eq!(adv.id, 3);
+        assert_eq!(adv.c_pk, c.c_keys.pk);
+        assert_eq!(adv.s_pk, c.s_keys.pk);
+    }
+
+    #[test]
+    fn step1_encrypts_one_pair_per_neighbor_and_keeps_self_share() {
+        let mut rng = Rng::new(4);
+        let mut a = mk(0, 2, vec![1, 2], 1);
+        let b = mk(1, 2, vec![0, 2], 2);
+        let c = mk(2, 2, vec![0, 1], 3);
+        let up = a.step1_share_keys(&bundle_for(&[&b, &c]), &mut rng).unwrap();
+        assert_eq!(up.shares.len(), 2);
+        assert!(a.own_b_share.is_some() && a.own_sk_share.is_some());
+        // ciphertext = 2 len + 2 shares (34B each) + tag
+        assert_eq!(up.shares[0].ciphertext.len(), 2 + 34 + 34 + 16);
+    }
+
+    #[test]
+    fn step1_rejects_too_high_threshold() {
+        let mut rng = Rng::new(4);
+        let mut a = mk(0, 5, vec![1], 1);
+        let b = mk(1, 5, vec![0], 2);
+        assert!(a.step1_share_keys(&bundle_for(&[&b]), &mut rng).is_err());
+    }
+
+    #[test]
+    fn share_round_trip_between_two_clients() {
+        // client 0 encrypts for client 1; client 1 decrypts in step 3
+        let mut rng = Rng::new(77);
+        let mut a = mk(0, 2, vec![1], 10);
+        let mut b = mk(1, 2, vec![0], 11);
+        let ba = bundle_for(&[&b]);
+        let bb = bundle_for(&[&a]);
+        let up_a = a.step1_share_keys(&ba, &mut rng).unwrap();
+        let _up_b = b.step1_share_keys(&bb, &mut rng).unwrap();
+
+        // deliver a's ciphertext to b, b masks
+        let delivery = ShareDelivery { to: 1, shares: up_a.shares.clone() };
+        let model = vec![5u64; 8];
+        let _ = b.step2_masked_input(&delivery, &model).unwrap();
+
+        // both 0 and 1 in V3 ⇒ b reveals a SelfMask share of owner 0
+        let um = b.step3_unmask(&SurvivorAnnounce { v3: vec![0, 1] }).unwrap();
+        let kinds: Vec<_> = um.shares.iter().map(|(o, k, _)| (*o, *k)).collect();
+        assert!(kinds.contains(&(0, ShareKind::SelfMask)));
+        assert!(kinds.contains(&(1, ShareKind::SelfMask))); // own share
+
+        // if owner 0 dropped after step 1 ⇒ SecretKey share instead
+        let mut b2 = mk(1, 2, vec![0], 11);
+        let _ = b2.step1_share_keys(&bb, &mut rng).unwrap();
+        let _ = b2.step2_masked_input(&delivery, &model).unwrap();
+        let um2 = b2.step3_unmask(&SurvivorAnnounce { v3: vec![1] }).unwrap();
+        let kinds2: Vec<_> = um2.shares.iter().map(|(o, k, _)| (*o, *k)).collect();
+        assert!(kinds2.contains(&(0, ShareKind::SecretKey)));
+        assert!(!kinds2.iter().any(|(o, k)| *o == 0 && *k == ShareKind::SelfMask));
+    }
+
+    #[test]
+    fn step2_mask_is_reversible_with_seeds() {
+        use crate::crypto::prg::{apply_mask, NONCE_PAIRWISE, NONCE_SELF};
+        let mut rng = Rng::new(5);
+        let mut a = mk(0, 2, vec![1], 20);
+        let b = mk(1, 2, vec![0], 21);
+        let _ = a.step1_share_keys(&bundle_for(&[&b]), &mut rng).unwrap();
+        // fake a delivery from b so that b counts as alive
+        let mut bmate = mk(1, 2, vec![0], 21);
+        let _ = bmate.step1_share_keys(&bundle_for(&[&a]), &mut rng).unwrap();
+        let model = vec![100u64; 16];
+        let up_b = {
+            let mut tmp = mk(1, 2, vec![0], 21);
+            tmp.step1_share_keys(&bundle_for(&[&a]), &mut rng).unwrap()
+        };
+        let masked = a
+            .step2_masked_input(&ShareDelivery { to: 0, shares: up_b.shares }, &model)
+            .unwrap();
+        // remove masks manually: PRG(b_0) and +PRG(s_01) (0 < 1 ⇒ plus)
+        let mut rec = masked.masked.clone();
+        apply_mask(&mut rec, &a.b_seed, &NONCE_SELF, 32, true);
+        let seed = dh::agree_mask_seed(&a.s_keys.sk, &b.s_keys.pk);
+        apply_mask(&mut rec, &seed, &NONCE_PAIRWISE, 32, true);
+        assert_eq!(rec, model);
+        assert_ne!(masked.masked, model, "mask must actually hide the model");
+    }
+
+    #[test]
+    fn step3_rejects_tampered_ciphertext() {
+        let mut rng = Rng::new(6);
+        let mut a = mk(0, 2, vec![1], 30);
+        let mut b = mk(1, 2, vec![0], 31);
+        let up_a = a.step1_share_keys(&bundle_for(&[&b]), &mut rng).unwrap();
+        let _ = b.step1_share_keys(&bundle_for(&[&a]), &mut rng).unwrap();
+        let mut shares = up_a.shares.clone();
+        shares[0].ciphertext[5] ^= 0xFF;
+        let _ = b
+            .step2_masked_input(&ShareDelivery { to: 1, shares }, &[0u64; 4])
+            .unwrap();
+        assert!(b.step3_unmask(&SurvivorAnnounce { v3: vec![0, 1] }).is_err());
+    }
+
+    #[test]
+    fn step2_rejects_misrouted_delivery() {
+        let mut rng = Rng::new(7);
+        let mut a = mk(0, 1, vec![1], 40);
+        let b = mk(1, 1, vec![0], 41);
+        let _ = a.step1_share_keys(&bundle_for(&[&b]), &mut rng).unwrap();
+        let bad = ShareDelivery {
+            to: 0,
+            shares: vec![EncryptedShare { from: 1, to: 2, ciphertext: vec![0; 32] }],
+        };
+        assert!(a.step2_masked_input(&bad, &[0u64; 4]).is_err());
+    }
+}

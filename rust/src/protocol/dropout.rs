@@ -1,0 +1,82 @@
+//! Client dropout models.
+//!
+//! The paper's analysis (§4.3) assumes each client drops independently
+//! with probability q at each of the protocol's steps; the total dropout
+//! probability is `q_total = 1 − (1−q)^4`. Targeted dropout is provided
+//! for adversarial tests (e.g. forcing Theorem-1 violations).
+
+use super::ClientId;
+use crate::util::rng::Rng;
+
+/// Which clients fail at a given step.
+#[derive(Debug, Clone)]
+pub enum DropoutModel {
+    /// No failures.
+    None,
+    /// Each surviving client independently drops with probability `q`
+    /// at each step (4 opportunities: paper's Steps 0–3 responses).
+    Iid { q: f64 },
+    /// Explicit sets of clients that drop at each step (0..=3).
+    Targeted { per_step: [Vec<ClientId>; 4] },
+}
+
+impl DropoutModel {
+    /// Convert the paper's protocol-level dropout `q_total` into the
+    /// per-step q: q_total = 1 − (1−q)^4.
+    pub fn iid_from_total(q_total: f64) -> DropoutModel {
+        assert!((0.0..1.0).contains(&q_total));
+        DropoutModel::Iid { q: 1.0 - (1.0 - q_total).powf(0.25) }
+    }
+
+    /// Does `client` (currently alive) survive `step`?
+    pub fn survives(&self, step: usize, client: ClientId, rng: &mut Rng) -> bool {
+        match self {
+            DropoutModel::None => true,
+            DropoutModel::Iid { q } => !rng.bernoulli(*q),
+            DropoutModel::Targeted { per_step } => !per_step[step].contains(&client),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_never_drops() {
+        let mut rng = Rng::new(1);
+        let m = DropoutModel::None;
+        assert!((0..4).all(|s| m.survives(s, 0, &mut rng)));
+    }
+
+    #[test]
+    fn iid_frequency_matches_q() {
+        let mut rng = Rng::new(2);
+        let m = DropoutModel::Iid { q: 0.25 };
+        let n = 20_000;
+        let dropped = (0..n).filter(|&i| !m.survives(0, i, &mut rng)).count();
+        assert!((dropped as f64 / n as f64 - 0.25).abs() < 0.02);
+    }
+
+    #[test]
+    fn iid_from_total_composes() {
+        let q_total = 0.1;
+        let DropoutModel::Iid { q } = DropoutModel::iid_from_total(q_total) else {
+            panic!()
+        };
+        let survive_all = (1.0 - q).powi(4);
+        assert!((survive_all - (1.0 - q_total)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn targeted_drops_exactly() {
+        let m = DropoutModel::Targeted {
+            per_step: [vec![1], vec![], vec![2, 3], vec![]],
+        };
+        let mut rng = Rng::new(3);
+        assert!(!m.survives(0, 1, &mut rng));
+        assert!(m.survives(0, 2, &mut rng));
+        assert!(!m.survives(2, 3, &mut rng));
+        assert!(m.survives(3, 3, &mut rng));
+    }
+}

@@ -1,0 +1,408 @@
+//! Synchronous single-round protocol driver.
+//!
+//! Wires `n` [`Client`]s and one [`Server`] through the byte-accounted
+//! simnet with dropout injection, producing a [`RoundResult`] that carries
+//! the aggregate, survivor sets, communication stats, per-step timings and
+//! the eavesdropper transcript. The threaded deployment shape lives in
+//! `crate::coordinator`; this engine is the deterministic core both use.
+
+use super::adversary::Transcript;
+use super::client::Client;
+use super::messages::*;
+use super::server::{theorem1_predicate, RoundOutput, Server};
+use super::{ClientId, ProtocolConfig, SurvivorSets};
+use crate::net::{Dir, NetStats};
+use crate::util::rng::Rng;
+use crate::util::timer::StepTimes;
+use anyhow::Result;
+
+/// Everything observable about one protocol round.
+#[derive(Debug)]
+pub struct RoundResult {
+    /// Σ_{i∈V3} θ_i mod 2^b if the round was reliable.
+    pub sum: Option<Vec<u64>>,
+    pub reliable: bool,
+    pub sets: SurvivorSets,
+    pub stats: NetStats,
+    pub times: StepTimes,
+    /// What an eavesdropper on every link saw (Definition 2's E).
+    pub transcript: Transcript,
+    /// Ground truth Σ_{i∈V3} θ_i (oracle for tests/experiments; computed
+    /// from the plaintext inputs, never transmitted).
+    pub true_sum_v3: Vec<u64>,
+    /// Whether Theorem 1's predicate held (must equal `reliable`).
+    pub theorem1_holds: bool,
+}
+
+/// Run one full aggregation round over quantized inputs
+/// (`models[i].len() == cfg.dim` for every client i).
+pub fn run_round(cfg: &ProtocolConfig, models: &[Vec<u64>]) -> Result<RoundResult> {
+    assert_eq!(models.len(), cfg.n, "one model vector per client");
+    for (i, m) in models.iter().enumerate() {
+        assert_eq!(m.len(), cfg.dim, "client {i} model dimension");
+    }
+    let mut rng = Rng::new(cfg.seed);
+    let graph = cfg.topology.build(cfg.n, &mut rng);
+    let mut dropout_rng = rng.split(0xD20);
+
+    let mut clients: Vec<Client> = (0..cfg.n)
+        .map(|i| {
+            let mut crng = rng.split(0xC11E27 + i as u64);
+            Client::new(i, cfg.t, cfg.mask_bits, graph.neighbors(i).to_vec(), &mut crng)
+        })
+        .collect();
+    let mut server = Server::new(cfg.n, cfg.t, cfg.mask_bits, cfg.dim, graph.clone());
+    let mut stats = NetStats::new(cfg.n);
+    let mut times = StepTimes::new();
+    let mut alive: Vec<bool> = vec![true; cfg.n];
+
+    // ---- Step 0: advertise keys -----------------------------------------
+    let mut advs = Vec::new();
+    times.time("client_step0", || {
+        for c in &clients {
+            if alive[c.id] && cfg.dropout.survives(0, c.id, &mut dropout_rng) {
+                let a = c.step0_advertise();
+                stats.record(0, Dir::Up, c.id, a.size_bytes());
+                advs.push(a);
+            } else {
+                alive[c.id] = false;
+            }
+        }
+    });
+    let bundles = times.time("server_step0", || server.step0_route_keys(advs))?;
+    for (id, b) in &bundles {
+        stats.record(0, Dir::Down, *id, b.size_bytes());
+    }
+
+    // ---- Step 1: share keys ---------------------------------------------
+    let mut uploads = Vec::new();
+    times.time("client_step1", || -> Result<()> {
+        for (id, bundle) in &bundles {
+            if alive[*id] && cfg.dropout.survives(1, *id, &mut dropout_rng) {
+                let mut srng = rng.split(0x5A12E + *id as u64);
+                match clients[*id].step1_share_keys(bundle, &mut srng) {
+                    Ok(up) => {
+                        stats.record(1, Dir::Up, *id, up.size_bytes());
+                        uploads.push(up);
+                    }
+                    Err(e) => {
+                        // A client whose live neighborhood is smaller than t
+                        // cannot share securely (Remark 4) — it withdraws
+                        // from the round rather than weakening its threshold.
+                        log::debug!("client {id} withdraws in step 1: {e}");
+                        alive[*id] = false;
+                    }
+                }
+            } else {
+                alive[*id] = false;
+            }
+        }
+        Ok(())
+    })?;
+    // transcript: the adversary sees who uploaded (V2) and the ciphertexts
+    let observed_v2: Vec<ClientId> = {
+        let mut v: Vec<ClientId> = uploads.iter().map(|u| u.from).collect();
+        v.sort_unstable();
+        v
+    };
+    let deliveries = times.time("server_step1", || server.step1_route_shares(uploads))?;
+    for (id, d) in &deliveries {
+        stats.record(1, Dir::Down, *id, d.size_bytes());
+    }
+
+    // ---- Step 2: masked input collection ----------------------------------
+    let mut masked_inputs = Vec::new();
+    times.time("client_step2", || -> Result<()> {
+        for (id, delivery) in &deliveries {
+            if alive[*id] && cfg.dropout.survives(2, *id, &mut dropout_rng) {
+                let mi = clients[*id].step2_masked_input(delivery, &models[*id])?;
+                stats.record(2, Dir::Up, *id, mi.size_bytes());
+                masked_inputs.push(mi);
+            } else {
+                alive[*id] = false;
+            }
+        }
+        Ok(())
+    })?;
+    let observed_masked: Vec<(ClientId, Vec<u64>)> =
+        masked_inputs.iter().map(|m| (m.id, m.masked.clone())).collect();
+    let announce = times.time("server_step2", || server.step2_collect_masked(masked_inputs))?;
+    for &id in &announce.v3 {
+        stats.record(2, Dir::Down, id, announce.size_bytes());
+    }
+
+    // ---- Step 3: unmasking -------------------------------------------------
+    let mut responses = Vec::new();
+    times.time("client_step3", || -> Result<()> {
+        for &id in &announce.v3 {
+            if alive[id] && cfg.dropout.survives(3, id, &mut dropout_rng) {
+                let um = clients[id].step3_unmask(&announce)?;
+                stats.record(3, Dir::Up, id, um.size_bytes());
+                responses.push(um);
+            } else {
+                alive[id] = false;
+            }
+        }
+        Ok(())
+    })?;
+    let observed_unmask: Vec<(ClientId, ClientId, ShareKind, crate::shamir::Share)> = responses
+        .iter()
+        .flat_map(|r| {
+            r.shares
+                .iter()
+                .map(move |(owner, kind, sh)| (r.from, *owner, *kind, sh.clone()))
+        })
+        .collect();
+
+    let RoundOutput { sum, reliable, sets } =
+        times.time("server_finalize", || server.finalize(responses))?;
+
+    // Ground truth over V3 for validation.
+    let modmask = if cfg.mask_bits == 64 {
+        u64::MAX
+    } else {
+        (1u64 << cfg.mask_bits) - 1
+    };
+    let mut true_sum = vec![0u64; cfg.dim];
+    for &i in &sets.v3 {
+        for (a, x) in true_sum.iter_mut().zip(&models[i]) {
+            *a = a.wrapping_add(*x) & modmask;
+        }
+    }
+
+    let theorem1_holds = theorem1_predicate(&graph, &sets, cfg.t);
+
+    let transcript = Transcript {
+        n: cfg.n,
+        t: cfg.t,
+        mask_bits: cfg.mask_bits,
+        dim: cfg.dim,
+        graph,
+        keys: server.advertised_keys().clone(),
+        v2: observed_v2,
+        v3: sets.v3.clone(),
+        masked: observed_masked,
+        unmask_shares: observed_unmask,
+    };
+
+    Ok(RoundResult {
+        sum,
+        reliable,
+        sets,
+        stats,
+        times,
+        transcript,
+        true_sum_v3: true_sum,
+        theorem1_holds,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::dropout::DropoutModel;
+    use crate::protocol::Topology;
+
+    fn models(n: usize, dim: usize, seed: u64) -> Vec<Vec<u64>> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| (0..dim).map(|_| rng.next_u64() & 0xFFFF_FFFF).collect())
+            .collect()
+    }
+
+    #[test]
+    fn sa_no_dropout_recovers_exact_sum() {
+        let n = 8;
+        let dim = 50;
+        let cfg = ProtocolConfig::new(n, 5, dim, Topology::Complete, 42);
+        let m = models(n, dim, 7);
+        let r = run_round(&cfg, &m).unwrap();
+        assert!(r.reliable);
+        assert!(r.theorem1_holds);
+        assert_eq!(r.sets.v3.len(), n);
+        assert_eq!(r.sum.as_ref().unwrap(), &r.true_sum_v3);
+    }
+
+    #[test]
+    fn ccesa_er_no_dropout_recovers_exact_sum() {
+        let n = 20;
+        let dim = 30;
+        let cfg = ProtocolConfig {
+            topology: Topology::ErdosRenyi { p: 0.7 },
+            ..ProtocolConfig::new(n, 6, dim, Topology::Complete, 1234)
+        };
+        let m = models(n, dim, 8);
+        let r = run_round(&cfg, &m).unwrap();
+        assert!(r.reliable, "sets={:?}", r.sets);
+        assert_eq!(r.sum.as_ref().unwrap(), &r.true_sum_v3);
+    }
+
+    #[test]
+    fn dropout_after_step1_still_recovers() {
+        // clients 2 and 5 upload shares but never send masked input:
+        // the server must reconstruct their s^SK and cancel pairwise masks
+        let n = 10;
+        let dim = 40;
+        let cfg = ProtocolConfig {
+            dropout: DropoutModel::Targeted {
+                per_step: [vec![], vec![], vec![2, 5], vec![]],
+            },
+            ..ProtocolConfig::new(n, 4, dim, Topology::Complete, 99)
+        };
+        let m = models(n, dim, 9);
+        let r = run_round(&cfg, &m).unwrap();
+        assert!(r.reliable);
+        assert_eq!(r.sets.v3.len(), n - 2);
+        assert!(!SurvivorSets::contains(&r.sets.v3, 2));
+        assert_eq!(r.sum.as_ref().unwrap(), &r.true_sum_v3);
+    }
+
+    #[test]
+    fn dropout_at_every_step_recovers() {
+        let n = 14;
+        let dim = 25;
+        let cfg = ProtocolConfig {
+            dropout: DropoutModel::Targeted {
+                per_step: [vec![0], vec![1], vec![2], vec![3]],
+            },
+            ..ProtocolConfig::new(n, 5, dim, Topology::Complete, 77)
+        };
+        let m = models(n, dim, 10);
+        let r = run_round(&cfg, &m).unwrap();
+        assert!(r.reliable);
+        // v3 excludes 0,1,2 (dropped before masked input); 3 is in V3 but
+        // not V4
+        assert_eq!(r.sets.v3.len(), n - 3);
+        assert_eq!(r.sets.v4.len(), n - 4);
+        assert_eq!(r.sum.as_ref().unwrap(), &r.true_sum_v3);
+    }
+
+    #[test]
+    fn unreliable_when_too_few_unmaskers() {
+        // t=8 of n=10; drop 4 clients at step 3 → only 6 < t respond,
+        // b_i cannot be reconstructed
+        let n = 10;
+        let cfg = ProtocolConfig {
+            dropout: DropoutModel::Targeted {
+                per_step: [vec![], vec![], vec![], vec![0, 1, 2, 3]],
+            },
+            ..ProtocolConfig::new(n, 8, 10, Topology::Complete, 5)
+        };
+        let m = models(n, 10, 11);
+        let r = run_round(&cfg, &m).unwrap();
+        assert!(!r.reliable);
+        assert!(r.sum.is_none());
+        assert!(!r.theorem1_holds);
+    }
+
+    #[test]
+    fn engine_reliability_matches_theorem1_on_random_instances() {
+        // the implementation must agree with the theorem exactly
+        let mut agree = 0;
+        let mut reliable_count = 0;
+        let trials = 40;
+        for seed in 0..trials {
+            let n = 12;
+            let cfg = ProtocolConfig {
+                mask_bits: 32,
+                dropout: DropoutModel::Iid { q: 0.12 },
+                ..ProtocolConfig::new(
+                    n,
+                    5,
+                    8,
+                    Topology::ErdosRenyi { p: 0.6 },
+                    1000 + seed,
+                )
+            };
+            let m = models(n, 8, seed);
+            match run_round(&cfg, &m) {
+                Ok(r) => {
+                    assert_eq!(
+                        r.reliable, r.theorem1_holds,
+                        "seed={seed} sets={:?}",
+                        r.sets
+                    );
+                    if r.reliable {
+                        assert_eq!(r.sum.as_ref().unwrap(), &r.true_sum_v3, "seed={seed}");
+                        reliable_count += 1;
+                    }
+                    agree += 1;
+                }
+                Err(_) => {
+                    // |V_k| < t aborts are legitimate unreliable outcomes
+                    agree += 1;
+                }
+            }
+        }
+        assert_eq!(agree, trials);
+        assert!(reliable_count > 0, "at least some rounds must succeed");
+    }
+
+    #[test]
+    fn sixteen_bit_masking_domain() {
+        let n = 6;
+        let dim = 20;
+        let mut cfg = ProtocolConfig::new(n, 3, dim, Topology::Complete, 3);
+        cfg.mask_bits = 16;
+        let mut rng = Rng::new(12);
+        let m: Vec<Vec<u64>> = (0..n)
+            .map(|_| (0..dim).map(|_| rng.next_u64() & 0xFFFF).collect())
+            .collect();
+        let r = run_round(&cfg, &m).unwrap();
+        assert!(r.reliable);
+        assert_eq!(r.sum.as_ref().unwrap(), &r.true_sum_v3);
+        assert!(r.sum.unwrap().iter().all(|&x| x < (1 << 16)));
+    }
+
+    #[test]
+    fn comm_bytes_scale_with_topology() {
+        // CCESA at p≈0.5 must use materially less bandwidth than SA
+        let n = 40;
+        let dim = 100;
+        let m = models(n, dim, 13);
+        let sa = run_round(&ProtocolConfig::new(n, 8, dim, Topology::Complete, 21), &m).unwrap();
+        let cc = run_round(
+            &ProtocolConfig {
+                topology: Topology::ErdosRenyi { p: 0.5 },
+                ..ProtocolConfig::new(n, 8, dim, Topology::Complete, 21)
+            },
+            &m,
+        )
+        .unwrap();
+        assert!(cc.reliable && sa.reliable);
+        // key/share traffic (steps 0,1,3) shrinks ≈ p; step 2 masked input
+        // is identical
+        let sa_key_traffic: u64 = sa.stats.bytes_up[0]
+            + sa.stats.bytes_down[0]
+            + sa.stats.bytes_up[1]
+            + sa.stats.bytes_down[1]
+            + sa.stats.bytes_up[3];
+        let cc_key_traffic: u64 = cc.stats.bytes_up[0]
+            + cc.stats.bytes_down[0]
+            + cc.stats.bytes_up[1]
+            + cc.stats.bytes_down[1]
+            + cc.stats.bytes_up[3];
+        assert!(
+            (cc_key_traffic as f64) < 0.7 * sa_key_traffic as f64,
+            "ccesa={cc_key_traffic} sa={sa_key_traffic}"
+        );
+        assert_eq!(cc.stats.bytes_up[2], sa.stats.bytes_up[2]);
+    }
+
+    #[test]
+    fn transcript_captures_public_view() {
+        let n = 6;
+        let cfg = ProtocolConfig::new(n, 3, 5, Topology::Complete, 17);
+        let m = models(n, 5, 14);
+        let r = run_round(&cfg, &m).unwrap();
+        let t = &r.transcript;
+        assert_eq!(t.v3.len(), n);
+        assert_eq!(t.masked.len(), n);
+        assert_eq!(t.keys.len(), n);
+        assert!(!t.unmask_shares.is_empty());
+        // the transcript must NOT contain any plaintext model
+        for (i, (_, masked)) in t.masked.iter().enumerate() {
+            assert_ne!(masked, &m[i], "masked input equals plaintext model");
+        }
+    }
+}

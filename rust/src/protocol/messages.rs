@@ -1,0 +1,181 @@
+//! Protocol wire messages with exact byte accounting.
+//!
+//! Sizes follow Appendix C's model: public keys cost `a_K` bytes each,
+//! secret shares `a_S` bytes (2-byte evaluation point + 2 bytes per u16
+//! chunk of the 32-byte secret), masked models `m · R/8` bytes. Framing
+//! overhead (ids, lengths) is charged explicitly so measured bandwidth is
+//! honest rather than formula-driven.
+
+use super::ClientId;
+use crate::crypto::dh::PublicKey;
+use crate::shamir::Share;
+
+/// Bytes per public key (x25519).
+pub const A_K: usize = 32;
+/// Bytes per Shamir share of a 32-byte secret: 2 (x) + 16·2 (chunks).
+pub const A_S: usize = 34;
+/// Bytes per client id on the wire.
+pub const ID_BYTES: usize = 4;
+/// AEAD tag bytes.
+pub const TAG_BYTES: usize = 16;
+
+/// Step 0, client → server: advertise both public keys.
+#[derive(Debug, Clone)]
+pub struct AdvertiseKeys {
+    pub id: ClientId,
+    pub c_pk: PublicKey,
+    pub s_pk: PublicKey,
+}
+
+impl AdvertiseKeys {
+    pub fn size_bytes(&self) -> usize {
+        ID_BYTES + 2 * A_K
+    }
+}
+
+/// Step 0, server → client j: the public keys of Adj(j) ∩ V1.
+#[derive(Debug, Clone)]
+pub struct KeyBundle {
+    pub entries: Vec<(ClientId, PublicKey, PublicKey)>,
+}
+
+impl KeyBundle {
+    pub fn size_bytes(&self) -> usize {
+        self.entries.len() * (ID_BYTES + 2 * A_K)
+    }
+}
+
+/// An encrypted pair of shares (b_{i,j}, s^{SK}_{i,j}) for one recipient.
+#[derive(Debug, Clone)]
+pub struct EncryptedShare {
+    pub from: ClientId,
+    pub to: ClientId,
+    /// AEAD ciphertext of `b_share.to_bytes() || sk_share.to_bytes()`.
+    pub ciphertext: Vec<u8>,
+}
+
+impl EncryptedShare {
+    pub fn size_bytes(&self) -> usize {
+        2 * ID_BYTES + self.ciphertext.len()
+    }
+}
+
+/// Step 1, client → server: encrypted shares for every neighbor.
+#[derive(Debug, Clone)]
+pub struct ShareUpload {
+    pub from: ClientId,
+    pub shares: Vec<EncryptedShare>,
+}
+
+impl ShareUpload {
+    pub fn size_bytes(&self) -> usize {
+        ID_BYTES + self.shares.iter().map(|s| s.size_bytes()).sum::<usize>()
+    }
+}
+
+/// Step 1, server → client j: the ciphertexts addressed to j.
+#[derive(Debug, Clone)]
+pub struct ShareDelivery {
+    pub to: ClientId,
+    pub shares: Vec<EncryptedShare>,
+}
+
+impl ShareDelivery {
+    pub fn size_bytes(&self) -> usize {
+        ID_BYTES + self.shares.iter().map(|s| s.size_bytes()).sum::<usize>()
+    }
+}
+
+/// Step 2, client → server: the masked model θ̃_i (Eq. 3).
+#[derive(Debug, Clone)]
+pub struct MaskedInput {
+    pub id: ClientId,
+    pub masked: Vec<u64>,
+    /// Wire width of each element (the aggregation domain Z_{2^bits}).
+    pub bits: u32,
+}
+
+impl MaskedInput {
+    pub fn size_bytes(&self) -> usize {
+        ID_BYTES + (self.masked.len() * self.bits.div_ceil(8) as usize)
+    }
+}
+
+/// Step 2, server → client: the survivor set V3.
+#[derive(Debug, Clone)]
+pub struct SurvivorAnnounce {
+    pub v3: Vec<ClientId>,
+}
+
+impl SurvivorAnnounce {
+    pub fn size_bytes(&self) -> usize {
+        self.v3.len() * ID_BYTES
+    }
+}
+
+/// What secret a Step-3 share reveals.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ShareKind {
+    /// Share of the PRG seed b_owner (owner survived to V3).
+    SelfMask,
+    /// Share of s^SK_owner (owner dropped in V2 \ V3).
+    SecretKey,
+}
+
+/// Step 3, client → server: plaintext shares enabling unmasking.
+#[derive(Debug, Clone)]
+pub struct UnmaskShares {
+    pub from: ClientId,
+    /// (owner, kind, share)
+    pub shares: Vec<(ClientId, ShareKind, Share)>,
+}
+
+impl UnmaskShares {
+    pub fn size_bytes(&self) -> usize {
+        ID_BYTES
+            + self
+                .shares
+                .iter()
+                .map(|(_, _, s)| ID_BYTES + 1 + s.size_bytes())
+                .sum::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn share() -> Share {
+        Share { x: 1, y: vec![0u16; 16] }
+    }
+
+    #[test]
+    fn sizes_follow_appendix_c_model() {
+        let adv = AdvertiseKeys { id: 0, c_pk: [0; 32], s_pk: [0; 32] };
+        assert_eq!(adv.size_bytes(), 4 + 64);
+
+        let bundle = KeyBundle { entries: vec![(1, [0; 32], [0; 32]); 7] };
+        assert_eq!(bundle.size_bytes(), 7 * 68);
+
+        assert_eq!(share().size_bytes(), A_S);
+
+        let mi = MaskedInput { id: 3, masked: vec![0; 100], bits: 32 };
+        assert_eq!(mi.size_bytes(), 4 + 400);
+        let mi16 = MaskedInput { id: 3, masked: vec![0; 100], bits: 16 };
+        assert_eq!(mi16.size_bytes(), 4 + 200);
+
+        let um = UnmaskShares {
+            from: 0,
+            shares: vec![(1, ShareKind::SelfMask, share()), (2, ShareKind::SecretKey, share())],
+        };
+        assert_eq!(um.size_bytes(), 4 + 2 * (4 + 1 + A_S));
+    }
+
+    #[test]
+    fn encrypted_share_size_tracks_ciphertext() {
+        let e = EncryptedShare { from: 0, to: 1, ciphertext: vec![0u8; 2 * A_S + TAG_BYTES] };
+        assert_eq!(e.size_bytes(), 8 + 68 + 16);
+        let up = ShareUpload { from: 0, shares: vec![e.clone(), e] };
+        assert_eq!(up.size_bytes(), 4 + 2 * 92);
+    }
+}

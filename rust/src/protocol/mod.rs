@@ -1,0 +1,107 @@
+//! The CCESA / SA secure-aggregation protocol (Algorithm 1 of the paper).
+//!
+//! Module layout:
+//! * [`messages`] — wire messages with exact byte sizes;
+//! * [`client`] — the client state machine (Steps 0–3);
+//! * [`server`] — the server state machine: collection, Shamir
+//!   reconstruction, mask cancellation (Eq. 4), Theorem-1 reliability
+//!   detection;
+//! * [`engine`] — single-round synchronous driver wiring n clients and the
+//!   server through the byte-accounted simnet with dropout injection;
+//! * [`dropout`] — dropout models (i.i.d. per-step q, targeted, none);
+//! * [`adversary`] — the eavesdropper of Definition 2 and the constructive
+//!   privacy attack from the converse of Theorem 2.
+//!
+//! SA (Bonawitz et al. 2017) is obtained with [`Topology::Complete`]; the
+//! paper's scheme with [`Topology::ErdosRenyi`].
+
+pub mod adversary;
+pub mod client;
+pub mod dropout;
+pub mod engine;
+pub mod messages;
+pub mod server;
+
+use crate::graph::Graph;
+use crate::util::rng::Rng;
+
+/// Client identifier: index in 0..n.
+pub type ClientId = usize;
+
+/// Assignment-graph family.
+#[derive(Debug, Clone)]
+pub enum Topology {
+    /// Complete graph — conventional SA.
+    Complete,
+    /// Erdős–Rényi G(n, p) — the paper's CCESA.
+    ErdosRenyi { p: f64 },
+    /// Harary H_{k,n} — Bell et al. 2020 comparison.
+    Harary { k: usize },
+    /// Explicit graph (tests, ablations).
+    Custom(Graph),
+}
+
+impl Topology {
+    /// Materialize the assignment graph (deterministic in `rng`).
+    pub fn build(&self, n: usize, rng: &mut Rng) -> Graph {
+        match self {
+            Topology::Complete => Graph::complete(n),
+            Topology::ErdosRenyi { p } => Graph::erdos_renyi(n, *p, rng),
+            Topology::Harary { k } => Graph::harary(n, *k),
+            Topology::Custom(g) => {
+                assert_eq!(g.n(), n, "custom topology size mismatch");
+                g.clone()
+            }
+        }
+    }
+}
+
+/// Static protocol parameters for one aggregation round.
+#[derive(Debug, Clone)]
+pub struct ProtocolConfig {
+    /// Number of clients n.
+    pub n: usize,
+    /// Secret-sharing threshold t (same for all clients; Remark 4 gives the
+    /// design rule — see `analysis::bounds::t_rule`).
+    pub t: usize,
+    /// Masked-domain width b: aggregation in Z_{2^b}.
+    pub mask_bits: u32,
+    /// Model dimension m.
+    pub dim: usize,
+    /// Assignment-graph family.
+    pub topology: Topology,
+    /// Dropout model applied per step.
+    pub dropout: dropout::DropoutModel,
+    /// Master seed (graph, keys, shares, dropout all derive from it).
+    pub seed: u64,
+}
+
+impl ProtocolConfig {
+    /// Convenience constructor with no dropout.
+    pub fn new(n: usize, t: usize, dim: usize, topology: Topology, seed: u64) -> Self {
+        ProtocolConfig {
+            n,
+            t,
+            mask_bits: 32,
+            dim,
+            topology,
+            dropout: dropout::DropoutModel::None,
+            seed,
+        }
+    }
+}
+
+/// The surviving client sets after each step (paper notation V1 ⊇ … ⊇ V4).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct SurvivorSets {
+    pub v1: Vec<ClientId>,
+    pub v2: Vec<ClientId>,
+    pub v3: Vec<ClientId>,
+    pub v4: Vec<ClientId>,
+}
+
+impl SurvivorSets {
+    pub fn contains(set: &[ClientId], id: ClientId) -> bool {
+        set.binary_search(&id).is_ok()
+    }
+}

@@ -1,0 +1,400 @@
+//! Server-side state machine: collection, routing, Shamir reconstruction
+//! and mask cancellation (Eq. 4), with Theorem-1 reliability detection.
+//!
+//! The server is *honest-but-curious infrastructure* in the paper's model:
+//! it routes ciphertexts it cannot read and learns only the aggregate. The
+//! structural guard [`Server::finalize`] enforces that it never combines
+//! `b_i` and `s_i^SK` shares for the same owner (the unmasking attack of
+//! Appendix E is modeled separately in `protocol::adversary`).
+
+use super::messages::*;
+use super::{ClientId, SurvivorSets};
+use crate::crypto::dh::{self, PublicKey};
+use crate::crypto::prg::{apply_mask, NONCE_PAIRWISE, NONCE_SELF};
+use crate::graph::Graph;
+use crate::shamir::{self, Share};
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// Outcome of one aggregation round at the server.
+#[derive(Debug, Clone)]
+pub struct RoundOutput {
+    /// Σ_{i∈V3} θ_i in Z_{2^b}, or `None` if the round is unreliable
+    /// (Theorem 1 predicate violated — the server *detects* this).
+    pub sum: Option<Vec<u64>>,
+    /// True iff the server could cancel every mask.
+    pub reliable: bool,
+    pub sets: SurvivorSets,
+}
+
+/// Server state across one round.
+pub struct Server {
+    n: usize,
+    t: usize,
+    mask_bits: u32,
+    dim: usize,
+    graph: Graph,
+    /// advertised keys: id → (c_pk, s_pk)
+    keys: BTreeMap<ClientId, (PublicKey, PublicKey)>,
+    /// step-1 ciphertexts routed by recipient
+    outbox: BTreeMap<ClientId, Vec<EncryptedShare>>,
+    /// masked inputs by sender
+    masked: BTreeMap<ClientId, Vec<u64>>,
+    /// step-3 shares: (owner, kind) → shares received
+    shares: BTreeMap<(ClientId, ShareKind), Vec<Share>>,
+    sets: SurvivorSets,
+}
+
+impl Server {
+    pub fn new(n: usize, t: usize, mask_bits: u32, dim: usize, graph: Graph) -> Server {
+        assert_eq!(graph.n(), n);
+        Server {
+            n,
+            t,
+            mask_bits,
+            dim,
+            graph,
+            keys: BTreeMap::new(),
+            outbox: BTreeMap::new(),
+            masked: BTreeMap::new(),
+            shares: BTreeMap::new(),
+            sets: SurvivorSets::default(),
+        }
+    }
+
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    pub fn sets(&self) -> &SurvivorSets {
+        &self.sets
+    }
+
+    /// Advertised public keys (the adversary model makes these public).
+    pub fn advertised_keys(&self) -> &BTreeMap<ClientId, (PublicKey, PublicKey)> {
+        &self.keys
+    }
+
+    /// **Step 0** — collect advertisements (their senders form V1) and
+    /// build per-client key bundles restricted to Adj(j) ∩ V1.
+    pub fn step0_route_keys(
+        &mut self,
+        advertisements: Vec<AdvertiseKeys>,
+    ) -> Result<Vec<(ClientId, KeyBundle)>> {
+        for adv in advertisements {
+            if adv.id >= self.n {
+                bail!("advertisement from unknown client {}", adv.id);
+            }
+            self.keys.insert(adv.id, (adv.c_pk, adv.s_pk));
+        }
+        self.sets.v1 = self.keys.keys().copied().collect();
+        if self.sets.v1.len() < self.t {
+            bail!(
+                "|V1|={} < t={}: not enough clients to continue",
+                self.sets.v1.len(),
+                self.t
+            );
+        }
+        Ok(self
+            .sets
+            .v1
+            .iter()
+            .map(|&j| {
+                let entries = self
+                    .graph
+                    .neighbors(j)
+                    .iter()
+                    .filter_map(|&i| self.keys.get(&i).map(|(c, s)| (i, *c, *s)))
+                    .collect();
+                (j, KeyBundle { entries })
+            })
+            .collect())
+    }
+
+    /// **Step 1** — collect encrypted-share uploads (senders form V2) and
+    /// route each ciphertext to its recipient.
+    pub fn step1_route_shares(
+        &mut self,
+        uploads: Vec<ShareUpload>,
+    ) -> Result<Vec<(ClientId, ShareDelivery)>> {
+        for up in uploads {
+            if !SurvivorSets::contains(&self.sets.v1, up.from) {
+                bail!("share upload from client {} not in V1", up.from);
+            }
+            for es in up.shares {
+                if es.from != up.from {
+                    bail!("spoofed share sender {} != {}", es.from, up.from);
+                }
+                self.outbox.entry(es.to).or_default().push(es);
+            }
+            self.sets.v2.push(up.from);
+        }
+        self.sets.v2.sort_unstable();
+        if self.sets.v2.len() < self.t {
+            bail!("|V2|={} < t={}", self.sets.v2.len(), self.t);
+        }
+        // deliver only to V2 members (others have dropped)
+        let v2 = self.sets.v2.clone();
+        Ok(v2
+            .iter()
+            .map(|&j| {
+                let shares: Vec<EncryptedShare> = self
+                    .outbox
+                    .remove(&j)
+                    .unwrap_or_default()
+                    .into_iter()
+                    .filter(|es| SurvivorSets::contains(&v2, es.from))
+                    .collect();
+                (j, ShareDelivery { to: j, shares })
+            })
+            .collect())
+    }
+
+    /// **Step 2** — collect masked inputs (senders form V3) and announce
+    /// the survivor set.
+    pub fn step2_collect_masked(
+        &mut self,
+        inputs: Vec<MaskedInput>,
+    ) -> Result<SurvivorAnnounce> {
+        for mi in inputs {
+            if !SurvivorSets::contains(&self.sets.v2, mi.id) {
+                bail!("masked input from client {} not in V2", mi.id);
+            }
+            if mi.masked.len() != self.dim || mi.bits != self.mask_bits {
+                bail!(
+                    "masked input shape mismatch from {}: len={} bits={}",
+                    mi.id,
+                    mi.masked.len(),
+                    mi.bits
+                );
+            }
+            self.masked.insert(mi.id, mi.masked);
+            self.sets.v3.push(mi.id);
+        }
+        self.sets.v3.sort_unstable();
+        if self.sets.v3.len() < self.t {
+            bail!("|V3|={} < t={}", self.sets.v3.len(), self.t);
+        }
+        Ok(SurvivorAnnounce { v3: self.sets.v3.clone() })
+    }
+
+    /// V3⁺ of Theorem 1: V3 plus the V2-neighbors of V3.
+    pub fn v3_plus(graph: &Graph, v2: &[ClientId], v3: &[ClientId]) -> Vec<ClientId> {
+        let mut out: Vec<ClientId> = v3.to_vec();
+        for &i in v2 {
+            if SurvivorSets::contains(v3, i) {
+                continue;
+            }
+            if graph.neighbors(i).iter().any(|&j| SurvivorSets::contains(v3, j)) {
+                out.push(i);
+            }
+        }
+        out.sort_unstable();
+        out
+    }
+
+    /// **Step 3** — collect unmasking shares (senders form V4), reconstruct
+    /// the needed secrets, cancel masks per Eq. (4).
+    pub fn finalize(&mut self, responses: Vec<UnmaskShares>) -> Result<RoundOutput> {
+        for resp in responses {
+            if !SurvivorSets::contains(&self.sets.v3, resp.from) {
+                bail!("unmask response from client {} not in V3", resp.from);
+            }
+            self.sets.v4.push(resp.from);
+            for (owner, kind, share) in resp.shares {
+                self.shares.entry((owner, kind)).or_default().push(share);
+            }
+        }
+        self.sets.v4.sort_unstable();
+
+        // Structural guard: refuse to hold both kinds for one owner.
+        for &(owner, kind) in self.shares.keys() {
+            let other = match kind {
+                ShareKind::SelfMask => ShareKind::SecretKey,
+                ShareKind::SecretKey => ShareKind::SelfMask,
+            };
+            if self.shares.contains_key(&(owner, other)) {
+                bail!(
+                    "protocol violation: both b and s^SK shares for owner {owner} \
+                     (would enable the unmasking attack)"
+                );
+            }
+        }
+
+        let sets = self.sets.clone();
+        if sets.v4.len() < self.t {
+            return Ok(RoundOutput { sum: None, reliable: false, sets });
+        }
+
+        // Aggregate masked inputs.
+        let mask = if self.mask_bits == 64 {
+            u64::MAX
+        } else {
+            (1u64 << self.mask_bits) - 1
+        };
+        let mut acc = vec![0u64; self.dim];
+        for v in self.masked.values() {
+            for (a, x) in acc.iter_mut().zip(v) {
+                *a = a.wrapping_add(*x) & mask;
+            }
+        }
+
+        // Cancel self masks: reconstruct b_i for all i ∈ V3.
+        for &i in &sets.v3 {
+            let Some(shares) = self.shares.get(&(i, ShareKind::SelfMask)) else {
+                return Ok(RoundOutput { sum: None, reliable: false, sets });
+            };
+            if shares.len() < self.t {
+                return Ok(RoundOutput { sum: None, reliable: false, sets });
+            }
+            let b: [u8; 32] = match shamir::reconstruct(shares, self.t, 32) {
+                Ok(v) => v.try_into().unwrap(),
+                Err(_) => return Ok(RoundOutput { sum: None, reliable: false, sets }),
+            };
+            apply_mask(&mut acc, &b, &NONCE_SELF, self.mask_bits, true);
+        }
+
+        // Cancel pairwise masks left by V2\V3 dropouts adjacent to V3:
+        // reconstruct s_i^SK and recompute PRG(s_{i,j}).
+        let dropped: Vec<ClientId> = sets
+            .v2
+            .iter()
+            .copied()
+            .filter(|i| !SurvivorSets::contains(&sets.v3, *i))
+            .collect();
+        for &i in &dropped {
+            let alive_neigh: Vec<ClientId> = self
+                .graph
+                .neighbors(i)
+                .iter()
+                .copied()
+                .filter(|j| SurvivorSets::contains(&sets.v3, *j))
+                .collect();
+            if alive_neigh.is_empty() {
+                continue; // i ∉ V3⁺: its masks never entered any θ̃
+            }
+            let Some(shares) = self.shares.get(&(i, ShareKind::SecretKey)) else {
+                return Ok(RoundOutput { sum: None, reliable: false, sets });
+            };
+            if shares.len() < self.t {
+                return Ok(RoundOutput { sum: None, reliable: false, sets });
+            }
+            let sk: [u8; 32] = match shamir::reconstruct(shares, self.t, 32) {
+                Ok(v) => v.try_into().unwrap(),
+                Err(_) => return Ok(RoundOutput { sum: None, reliable: false, sets }),
+            };
+            let sk = crate::crypto::x25519::clamp_scalar(sk);
+            for &j in &alive_neigh {
+                let Some((_, s_pk_j)) = self.keys.get(&j) else {
+                    return Ok(RoundOutput { sum: None, reliable: false, sets });
+                };
+                let seed = dh::agree_mask_seed(&sk, s_pk_j);
+                // The survivor j applied sign(j<i ? + : −); cancel it.
+                apply_mask(&mut acc, &seed, &NONCE_PAIRWISE, self.mask_bits, j < i);
+            }
+        }
+
+        Ok(RoundOutput { sum: Some(acc), reliable: true, sets })
+    }
+}
+
+/// The Theorem-1 predicate, evaluated from the graph and survivor sets:
+/// the round is reliable iff every i ∈ V3⁺ is informative, i.e.
+/// |(Adj(i) ∪ {i}) ∩ V4| ≥ t.
+pub fn theorem1_predicate(graph: &Graph, sets: &SurvivorSets, t: usize) -> bool {
+    let v3p = Server::v3_plus(graph, &sets.v2, &sets.v3);
+    v3p.iter().all(|&i| {
+        let mut holders = graph
+            .neighbors(i)
+            .iter()
+            .filter(|&&j| SurvivorSets::contains(&sets.v4, j))
+            .count();
+        if SurvivorSets::contains(&sets.v4, i) {
+            holders += 1;
+        }
+        holders >= t
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+
+    #[test]
+    fn v3_plus_includes_dropped_neighbors_of_survivors() {
+        // path 0-1-2, plus isolated 3; v2 = all, v3 = {0, 2}
+        let mut g = Graph::empty(4);
+        g.add_edge(0, 1);
+        g.add_edge(1, 2);
+        let v2 = vec![0, 1, 2, 3];
+        let v3 = vec![0, 2];
+        let v3p = Server::v3_plus(&g, &v2, &v3);
+        assert_eq!(v3p, vec![0, 1, 2]); // 1 is a V2-neighbor of V3; 3 is not
+    }
+
+    #[test]
+    fn theorem1_predicate_cases() {
+        let g = Graph::complete(4);
+        let full = SurvivorSets {
+            v1: vec![0, 1, 2, 3],
+            v2: vec![0, 1, 2, 3],
+            v3: vec![0, 1, 2, 3],
+            v4: vec![0, 1, 2, 3],
+        };
+        assert!(theorem1_predicate(&g, &full, 3));
+        // only 2 respond in step 3 → not informative for t=3
+        let thin = SurvivorSets { v4: vec![0, 1], ..full.clone() };
+        assert!(!theorem1_predicate(&g, &thin, 3));
+        // exactly t respond
+        let edge = SurvivorSets { v4: vec![0, 1, 2], ..full };
+        assert!(theorem1_predicate(&g, &edge, 3));
+    }
+
+    #[test]
+    fn server_rejects_protocol_violations() {
+        let g = Graph::complete(3);
+        let mut s = Server::new(3, 2, 32, 4, g);
+        // unknown client id
+        assert!(s
+            .step0_route_keys(vec![AdvertiseKeys { id: 9, c_pk: [0; 32], s_pk: [0; 32] }])
+            .is_err());
+        // below threshold
+        let mut s2 = Server::new(3, 3, 32, 4, Graph::complete(3));
+        assert!(s2
+            .step0_route_keys(vec![AdvertiseKeys { id: 0, c_pk: [0; 32], s_pk: [0; 32] }])
+            .is_err());
+    }
+
+    #[test]
+    fn unmasking_attack_guard_trips() {
+        let g = Graph::complete(3);
+        let mut s = Server::new(3, 1, 32, 1, g);
+        let advs = (0..3)
+            .map(|id| AdvertiseKeys { id, c_pk: [id as u8; 32], s_pk: [id as u8; 32] })
+            .collect();
+        let _ = s.step0_route_keys(advs).unwrap();
+        let _ = s
+            .step1_route_shares(
+                (0..3).map(|id| ShareUpload { from: id, shares: vec![] }).collect(),
+            )
+            .unwrap();
+        let _ = s
+            .step2_collect_masked(
+                (0..3)
+                    .map(|id| MaskedInput { id, masked: vec![0], bits: 32 })
+                    .collect(),
+            )
+            .unwrap();
+        // malicious: both kinds for owner 0
+        let sh = Share { x: 1, y: vec![0; 16] };
+        let bad = vec![UnmaskShares {
+            from: 0,
+            shares: vec![
+                (0, ShareKind::SelfMask, sh.clone()),
+                (0, ShareKind::SecretKey, sh),
+            ],
+        }];
+        assert!(s.finalize(bad).is_err());
+    }
+}

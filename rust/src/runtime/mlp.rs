@@ -1,0 +1,171 @@
+//! MLP model runtime: typed wrapper over the `mlp_train` / `mlp_eval`
+//! HLO executables, plus the flat-parameter view used by secure
+//! aggregation (quantize → mask → aggregate → dequantize operates on the
+//! flattened f32 vector).
+
+use super::{scalar_f32, to_f32, to_i32, HloExecutable, Input, MlpDims, Runtime};
+use crate::util::rng::Rng;
+use anyhow::{bail, Result};
+
+/// MLP parameters (w1, b1, w2, b2) in row-major order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MlpParams {
+    pub dims: MlpDims,
+    pub w1: Vec<f32>,
+    pub b1: Vec<f32>,
+    pub w2: Vec<f32>,
+    pub b2: Vec<f32>,
+}
+
+impl MlpParams {
+    /// He/Xavier-style init, deterministic in `rng`.
+    pub fn init(dims: MlpDims, rng: &mut Rng) -> MlpParams {
+        let s1 = (2.0 / dims.d as f32).sqrt();
+        let s2 = (1.0 / dims.h as f32).sqrt();
+        MlpParams {
+            dims,
+            w1: (0..dims.d * dims.h).map(|_| rng.normal_f32(0.0, s1)).collect(),
+            b1: vec![0.0; dims.h],
+            w2: (0..dims.h * dims.c).map(|_| rng.normal_f32(0.0, s2)).collect(),
+            b2: vec![0.0; dims.c],
+        }
+    }
+
+    pub fn zeros(dims: MlpDims) -> MlpParams {
+        MlpParams {
+            dims,
+            w1: vec![0.0; dims.d * dims.h],
+            b1: vec![0.0; dims.h],
+            w2: vec![0.0; dims.h * dims.c],
+            b2: vec![0.0; dims.c],
+        }
+    }
+
+    /// Flatten to a single vector (the secure-aggregation payload).
+    pub fn flatten(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.dims.param_count());
+        out.extend_from_slice(&self.w1);
+        out.extend_from_slice(&self.b1);
+        out.extend_from_slice(&self.w2);
+        out.extend_from_slice(&self.b2);
+        out
+    }
+
+    /// Rebuild from a flat vector.
+    pub fn from_flat(dims: MlpDims, flat: &[f32]) -> Result<MlpParams> {
+        if flat.len() != dims.param_count() {
+            bail!("flat length {} != param count {}", flat.len(), dims.param_count());
+        }
+        let (a, rest) = flat.split_at(dims.d * dims.h);
+        let (b, rest) = rest.split_at(dims.h);
+        let (c, d) = rest.split_at(dims.h * dims.c);
+        Ok(MlpParams {
+            dims,
+            w1: a.to_vec(),
+            b1: b.to_vec(),
+            w2: c.to_vec(),
+            b2: d.to_vec(),
+        })
+    }
+}
+
+/// Compiled MLP executables.
+pub struct MlpRuntime {
+    pub dims: MlpDims,
+    train: HloExecutable,
+    eval: HloExecutable,
+}
+
+impl MlpRuntime {
+    pub fn load(rt: &Runtime) -> Result<MlpRuntime> {
+        Ok(MlpRuntime {
+            dims: rt.manifest.mlp_dims(),
+            train: rt.load("mlp_train")?,
+            eval: rt.load("mlp_eval")?,
+        })
+    }
+
+    fn param_inputs(&self, p: &MlpParams) -> Vec<Input> {
+        let d = self.dims;
+        vec![
+            Input::F32(p.w1.clone(), vec![d.d as i64, d.h as i64]),
+            Input::F32(p.b1.clone(), vec![d.h as i64]),
+            Input::F32(p.w2.clone(), vec![d.h as i64, d.c as i64]),
+            Input::F32(p.b2.clone(), vec![d.c as i64]),
+        ]
+    }
+
+    /// One SGD step over a batch; updates `p` in place and returns the loss.
+    /// `x`: batch·d features, `y_onehot`: batch·c.
+    pub fn train_step(
+        &self,
+        p: &mut MlpParams,
+        x: &[f32],
+        y_onehot: &[f32],
+        lr: f32,
+    ) -> Result<f32> {
+        let d = self.dims;
+        if x.len() != d.batch * d.d || y_onehot.len() != d.batch * d.c {
+            bail!("train batch shape mismatch");
+        }
+        let mut inputs = self.param_inputs(p);
+        inputs.push(Input::F32(x.to_vec(), vec![d.batch as i64, d.d as i64]));
+        inputs.push(Input::F32(y_onehot.to_vec(), vec![d.batch as i64, d.c as i64]));
+        inputs.push(Input::ScalarF32(lr));
+        let outs = self.train.run(&inputs)?;
+        p.w1 = to_f32(&outs[0])?;
+        p.b1 = to_f32(&outs[1])?;
+        p.w2 = to_f32(&outs[2])?;
+        p.b2 = to_f32(&outs[3])?;
+        scalar_f32(&outs[4])
+    }
+
+    /// Count correct predictions over one batch.
+    pub fn eval_batch(&self, p: &MlpParams, x: &[f32], labels: &[i32]) -> Result<usize> {
+        let d = self.dims;
+        if x.len() != d.batch * d.d || labels.len() != d.batch {
+            bail!("eval batch shape mismatch");
+        }
+        let mut inputs = self.param_inputs(p);
+        inputs.push(Input::F32(x.to_vec(), vec![d.batch as i64, d.d as i64]));
+        inputs.push(Input::I32(labels.to_vec(), vec![d.batch as i64]));
+        let outs = self.eval.run(&inputs)?;
+        Ok(to_i32(&outs[0])?[0] as usize)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> MlpDims {
+        MlpDims { batch: 32, d: 192, h: 256, c: 10 }
+    }
+
+    #[test]
+    fn flatten_round_trip() {
+        let mut rng = Rng::new(5);
+        let p = MlpParams::init(dims(), &mut rng);
+        let flat = p.flatten();
+        assert_eq!(flat.len(), dims().param_count());
+        let q = MlpParams::from_flat(dims(), &flat).unwrap();
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn from_flat_rejects_bad_length() {
+        assert!(MlpParams::from_flat(dims(), &[0.0; 7]).is_err());
+    }
+
+    #[test]
+    fn init_is_scaled_and_deterministic() {
+        let p1 = MlpParams::init(dims(), &mut Rng::new(1));
+        let p2 = MlpParams::init(dims(), &mut Rng::new(1));
+        assert_eq!(p1, p2);
+        let var: f32 =
+            p1.w1.iter().map(|x| x * x).sum::<f32>() / p1.w1.len() as f32;
+        let expect = 2.0 / dims().d as f32;
+        assert!((var - expect).abs() < 0.3 * expect, "var={var} expect={expect}");
+        assert!(p1.b1.iter().all(|&b| b == 0.0));
+    }
+}

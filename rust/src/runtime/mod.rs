@@ -1,0 +1,245 @@
+//! PJRT runtime: load the AOT HLO-text artifacts and execute them from
+//! Rust. Python never runs on this path.
+//!
+//! The flow (see /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! Artifacts are described by `artifacts/manifest.json` (shapes, dtypes,
+//! output arity), emitted by `python/compile/aot.py`.
+
+pub mod mlp;
+pub mod softreg;
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Typed input value for an HLO executable.
+#[derive(Debug, Clone)]
+pub enum Input {
+    F32(Vec<f32>, Vec<i64>),
+    I32(Vec<i32>, Vec<i64>),
+    U32(Vec<u32>, Vec<i64>),
+    ScalarF32(f32),
+}
+
+impl Input {
+    fn to_literal(&self) -> Result<xla::Literal> {
+        Ok(match self {
+            Input::F32(data, shape) => xla::Literal::vec1(data).reshape(shape)?,
+            Input::I32(data, shape) => xla::Literal::vec1(data).reshape(shape)?,
+            Input::U32(data, shape) => xla::Literal::vec1(data).reshape(shape)?,
+            Input::ScalarF32(v) => xla::Literal::scalar(*v),
+        })
+    }
+}
+
+/// The parsed artifact manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    json: Json,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+        let json = Json::parse(&text).map_err(|e| anyhow!("parsing manifest: {e}"))?;
+        if json.get("format").as_str() != Some("hlo-text/v1") {
+            bail!("unsupported manifest format");
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), json })
+    }
+
+    /// Default artifact directory: $CCESA_ARTIFACTS or ./artifacts.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("CCESA_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn mlp_dims(&self) -> MlpDims {
+        let m = self.json.get("mlp");
+        MlpDims {
+            batch: m.get("batch").as_usize().unwrap_or(32),
+            d: m.get("d").as_usize().unwrap_or(192),
+            h: m.get("h").as_usize().unwrap_or(256),
+            c: m.get("c").as_usize().unwrap_or(10),
+        }
+    }
+
+    pub fn face_dims(&self) -> FaceDims {
+        let f = self.json.get("face");
+        FaceDims {
+            batch: f.get("batch").as_usize().unwrap_or(20),
+            d: f.get("d").as_usize().unwrap_or(1024),
+            c: f.get("c").as_usize().unwrap_or(40),
+        }
+    }
+
+    pub fn agg_dims(&self) -> (usize, usize) {
+        let a = self.json.get("agg");
+        (
+            a.get("clients").as_usize().unwrap_or(64),
+            a.get("m").as_usize().unwrap_or(65536),
+        )
+    }
+
+    fn artifact_file(&self, name: &str) -> Result<PathBuf> {
+        let file = self
+            .json
+            .at(&["artifacts", name, "file"])
+            .as_str()
+            .ok_or_else(|| anyhow!("artifact {name} missing from manifest"))?;
+        Ok(self.dir.join(file))
+    }
+
+    fn num_outputs(&self, name: &str) -> usize {
+        self.json
+            .at(&["artifacts", name, "num_outputs"])
+            .as_usize()
+            .unwrap_or(1)
+    }
+}
+
+/// MLP AOT dimensions (fixed at lowering time).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MlpDims {
+    pub batch: usize,
+    pub d: usize,
+    pub h: usize,
+    pub c: usize,
+}
+
+impl MlpDims {
+    pub fn param_count(&self) -> usize {
+        self.d * self.h + self.h + self.h * self.c + self.c
+    }
+}
+
+/// Face-model AOT dimensions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaceDims {
+    pub batch: usize,
+    pub d: usize,
+    pub c: usize,
+}
+
+impl FaceDims {
+    pub fn param_count(&self) -> usize {
+        self.d * self.c + self.c
+    }
+}
+
+/// A compiled HLO executable plus its output arity.
+pub struct HloExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+    pub num_outputs: usize,
+}
+
+impl HloExecutable {
+    /// Execute with typed inputs; returns the decomposed output tuple.
+    pub fn run(&self, inputs: &[Input]) -> Result<Vec<xla::Literal>> {
+        let lits: Vec<xla::Literal> =
+            inputs.iter().map(|i| i.to_literal()).collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True
+        let outs = result.to_tuple()?;
+        if outs.len() != self.num_outputs {
+            bail!(
+                "{}: expected {} outputs, got {}",
+                self.name,
+                self.num_outputs,
+                outs.len()
+            );
+        }
+        Ok(outs)
+    }
+}
+
+/// Output extraction helpers.
+pub fn to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+pub fn to_i32(lit: &xla::Literal) -> Result<Vec<i32>> {
+    Ok(lit.to_vec::<i32>()?)
+}
+pub fn to_u32(lit: &xla::Literal) -> Result<Vec<u32>> {
+    Ok(lit.to_vec::<u32>()?)
+}
+pub fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    let v = lit.to_vec::<f32>()?;
+    v.first().copied().ok_or_else(|| anyhow!("empty literal"))
+}
+
+/// The PJRT runtime: one CPU client plus the manifest.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and load the manifest from `dir`.
+    pub fn cpu(dir: &Path) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu()?;
+        let manifest = Manifest::load(dir)?;
+        Ok(Runtime { client, manifest })
+    }
+
+    /// Create from the default artifact directory.
+    pub fn cpu_default() -> Result<Runtime> {
+        Self::cpu(&Manifest::default_dir())
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one artifact.
+    pub fn load(&self, name: &str) -> Result<HloExecutable> {
+        let path = self.manifest.artifact_file(name)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(HloExecutable {
+            exe,
+            name: name.to_string(),
+            num_outputs: self.manifest.num_outputs(name),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses_when_artifacts_exist() {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        let dims = m.mlp_dims();
+        assert!(dims.d > 0 && dims.h > 0 && dims.c > 1);
+        assert!(dims.param_count() > 1000);
+        assert!(m.artifact_file("mlp_train").unwrap().exists());
+        assert_eq!(m.num_outputs("mlp_train"), 5);
+    }
+
+    #[test]
+    fn input_literal_shapes() {
+        let i = Input::F32(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]);
+        let lit = i.to_literal().unwrap();
+        assert_eq!(lit.element_count(), 4);
+        let s = Input::ScalarF32(7.5).to_literal().unwrap();
+        assert_eq!(s.element_count(), 1);
+        let u = Input::U32(vec![1, 2, 3], vec![3]).to_literal().unwrap();
+        assert_eq!(u.to_vec::<u32>().unwrap(), vec![1, 2, 3]);
+    }
+}

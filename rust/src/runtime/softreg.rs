@@ -1,0 +1,137 @@
+//! Softmax-regression (face model) runtime: wraps the `softreg_train`,
+//! `softreg_predict` and `inversion` HLO executables. This is the model
+//! of the paper's privacy experiments (Fig 2 / A.4, Tables 5.2 / A.3),
+//! matching the Fredrikson et al. model-inversion setting.
+
+use super::{scalar_f32, to_f32, FaceDims, HloExecutable, Input, Runtime};
+use anyhow::{bail, Result};
+
+/// Softmax-regression parameters (w: d×c row-major, b: c).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SoftregParams {
+    pub dims: FaceDims,
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+}
+
+impl SoftregParams {
+    pub fn zeros(dims: FaceDims) -> SoftregParams {
+        SoftregParams { dims, w: vec![0.0; dims.d * dims.c], b: vec![0.0; dims.c] }
+    }
+
+    pub fn flatten(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.dims.param_count());
+        out.extend_from_slice(&self.w);
+        out.extend_from_slice(&self.b);
+        out
+    }
+
+    pub fn from_flat(dims: FaceDims, flat: &[f32]) -> Result<SoftregParams> {
+        if flat.len() != dims.param_count() {
+            bail!("flat length {} != param count {}", flat.len(), dims.param_count());
+        }
+        let (w, b) = flat.split_at(dims.d * dims.c);
+        Ok(SoftregParams { dims, w: w.to_vec(), b: b.to_vec() })
+    }
+}
+
+pub struct SoftregRuntime {
+    pub dims: FaceDims,
+    train: HloExecutable,
+    predict: HloExecutable,
+    inversion: HloExecutable,
+}
+
+impl SoftregRuntime {
+    pub fn load(rt: &Runtime) -> Result<SoftregRuntime> {
+        Ok(SoftregRuntime {
+            dims: rt.manifest.face_dims(),
+            train: rt.load("softreg_train")?,
+            predict: rt.load("softreg_predict")?,
+            inversion: rt.load("inversion")?,
+        })
+    }
+
+    /// One SGD step; updates `p` in place, returns the loss.
+    pub fn train_step(
+        &self,
+        p: &mut SoftregParams,
+        x: &[f32],
+        y_onehot: &[f32],
+        lr: f32,
+    ) -> Result<f32> {
+        let d = self.dims;
+        if x.len() != d.batch * d.d || y_onehot.len() != d.batch * d.c {
+            bail!("softreg train batch shape mismatch");
+        }
+        let inputs = vec![
+            Input::F32(p.w.clone(), vec![d.d as i64, d.c as i64]),
+            Input::F32(p.b.clone(), vec![d.c as i64]),
+            Input::F32(x.to_vec(), vec![d.batch as i64, d.d as i64]),
+            Input::F32(y_onehot.to_vec(), vec![d.batch as i64, d.c as i64]),
+            Input::ScalarF32(lr),
+        ];
+        let outs = self.train.run(&inputs)?;
+        p.w = to_f32(&outs[0])?;
+        p.b = to_f32(&outs[1])?;
+        scalar_f32(&outs[2])
+    }
+
+    /// Class probabilities for one batch (batch·c, row-major).
+    pub fn predict(&self, p: &SoftregParams, x: &[f32]) -> Result<Vec<f32>> {
+        let d = self.dims;
+        if x.len() != d.batch * d.d {
+            bail!("predict batch shape mismatch");
+        }
+        let inputs = vec![
+            Input::F32(p.w.clone(), vec![d.d as i64, d.c as i64]),
+            Input::F32(p.b.clone(), vec![d.c as i64]),
+            Input::F32(x.to_vec(), vec![d.batch as i64, d.d as i64]),
+        ];
+        let outs = self.predict.run(&inputs)?;
+        to_f32(&outs[0])
+    }
+
+    /// One model-inversion gradient step on the input image (batch=1).
+    /// Returns (x', loss).
+    pub fn inversion_step(
+        &self,
+        p: &SoftregParams,
+        x: &[f32],
+        target_onehot: &[f32],
+        step_size: f32,
+    ) -> Result<(Vec<f32>, f32)> {
+        let d = self.dims;
+        if x.len() != d.d || target_onehot.len() != d.c {
+            bail!("inversion shape mismatch");
+        }
+        let inputs = vec![
+            Input::F32(p.w.clone(), vec![d.d as i64, d.c as i64]),
+            Input::F32(p.b.clone(), vec![d.c as i64]),
+            Input::F32(x.to_vec(), vec![1, d.d as i64]),
+            Input::F32(target_onehot.to_vec(), vec![1, d.c as i64]),
+            Input::ScalarF32(step_size),
+        ];
+        let outs = self.inversion.run(&inputs)?;
+        Ok((to_f32(&outs[0])?, scalar_f32(&outs[1])?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> FaceDims {
+        FaceDims { batch: 20, d: 1024, c: 40 }
+    }
+
+    #[test]
+    fn flatten_round_trip() {
+        let mut p = SoftregParams::zeros(dims());
+        p.w[17] = 3.25;
+        p.b[5] = -1.5;
+        let q = SoftregParams::from_flat(dims(), &p.flatten()).unwrap();
+        assert_eq!(p, q);
+        assert!(SoftregParams::from_flat(dims(), &[0.0; 3]).is_err());
+    }
+}

@@ -1,0 +1,200 @@
+//! Declarative command-line flag parsing (clap is unavailable offline).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! arguments, defaults, and auto-generated `--help`.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+#[derive(Debug, Clone)]
+struct FlagSpec {
+    name: &'static str,
+    help: &'static str,
+    default: Option<String>,
+    boolean: bool,
+}
+
+/// A small declarative argument parser.
+#[derive(Debug, Default)]
+pub struct Args {
+    program: String,
+    about: &'static str,
+    specs: Vec<FlagSpec>,
+    values: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    pub fn new(program: &str, about: &'static str) -> Self {
+        Args { program: program.to_string(), about, ..Default::default() }
+    }
+
+    /// Declare a flag taking a value, with an optional default.
+    pub fn flag(mut self, name: &'static str, default: Option<&str>, help: &'static str) -> Self {
+        self.specs.push(FlagSpec {
+            name,
+            help,
+            default: default.map(|s| s.to_string()),
+            boolean: false,
+        });
+        self
+    }
+
+    /// Declare a boolean switch (present = true).
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(FlagSpec { name, help, default: None, boolean: true });
+        self
+    }
+
+    /// Parse an explicit token list (tests) — returns Err(help) on `--help`
+    /// or parse failure.
+    pub fn parse_from<I: IntoIterator<Item = String>>(mut self, args: I) -> Result<Args, String> {
+        let mut it = args.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if tok == "--help" || tok == "-h" {
+                return Err(self.help_text());
+            }
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| format!("unknown flag --{name}\n\n{}", self.help_text()))?
+                    .clone();
+                let value = if spec.boolean {
+                    if inline.is_some() {
+                        return Err(format!("--{name} is a switch and takes no value"));
+                    }
+                    "true".to_string()
+                } else {
+                    match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("flag --{name} requires a value"))?,
+                    }
+                };
+                self.values.insert(name, value);
+            } else {
+                self.positional.push(tok);
+            }
+        }
+        Ok(self)
+    }
+
+    /// Parse from `std::env::args()`, printing help and exiting on demand.
+    pub fn parse(self) -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        match self.parse_from(argv) {
+            Ok(a) => a,
+            Err(msg) => {
+                eprintln!("{msg}");
+                std::process::exit(if msg.starts_with("usage:") { 0 } else { 2 });
+            }
+        }
+    }
+
+    fn lookup(&self, name: &str) -> Option<String> {
+        if let Some(v) = self.values.get(name) {
+            return Some(v.clone());
+        }
+        self.specs.iter().find(|s| s.name == name).and_then(|s| s.default.clone())
+    }
+
+    pub fn get_str(&self, name: &str) -> Option<String> {
+        self.lookup(name)
+    }
+
+    pub fn get<T: std::str::FromStr>(&self, name: &str) -> Option<T> {
+        self.lookup(name).and_then(|v| v.parse().ok())
+    }
+
+    /// Value with declared default; panics if the flag was never declared
+    /// and has no default (programming error, not user error).
+    pub fn req<T: std::str::FromStr>(&self, name: &str) -> T
+    where
+        T::Err: std::fmt::Debug,
+    {
+        let v = self
+            .lookup(name)
+            .unwrap_or_else(|| panic!("required flag --{name} missing and has no default"));
+        v.parse().unwrap_or_else(|e| panic!("invalid value for --{name}: {v:?} ({e:?})"))
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        self.lookup(name).map(|v| v == "true" || v == "1").unwrap_or(false)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "usage: {} [flags] [args]\n\n{}\n\nflags:", self.program, self.about);
+        for spec in &self.specs {
+            let kind = if spec.boolean { "" } else { " <value>" };
+            let dflt = spec
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            let _ = writeln!(s, "  --{}{kind}\n      {}{dflt}", spec.name, spec.help);
+        }
+        let _ = writeln!(s, "  --help\n      show this message");
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(toks: &[&str]) -> Vec<String> {
+        toks.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn base() -> Args {
+        Args::new("test", "about")
+            .flag("n", Some("100"), "clients")
+            .flag("p", None, "probability")
+            .switch("verbose", "noise")
+    }
+
+    #[test]
+    fn parses_values_and_defaults() {
+        let a = base().parse_from(argv(&["--n", "50", "--p=0.3"])).unwrap();
+        assert_eq!(a.req::<usize>("n"), 50);
+        assert_eq!(a.get::<f64>("p"), Some(0.3));
+        assert!(!a.get_bool("verbose"));
+
+        let a = base().parse_from(argv(&[])).unwrap();
+        assert_eq!(a.req::<usize>("n"), 100);
+        assert_eq!(a.get::<f64>("p"), None);
+    }
+
+    #[test]
+    fn switch_and_positional() {
+        let a = base().parse_from(argv(&["--verbose", "cmd", "x"])).unwrap();
+        assert!(a.get_bool("verbose"));
+        assert_eq!(a.positional(), &["cmd".to_string(), "x".to_string()]);
+    }
+
+    #[test]
+    fn rejects_unknown_and_missing_value() {
+        assert!(base().parse_from(argv(&["--bogus"])).is_err());
+        assert!(base().parse_from(argv(&["--p"])).is_err());
+        assert!(base().parse_from(argv(&["--verbose=1"])).is_err());
+    }
+
+    #[test]
+    fn help_lists_flags() {
+        let err = base().parse_from(argv(&["--help"])).unwrap_err();
+        assert!(err.contains("--n"));
+        assert!(err.contains("[default: 100]"));
+    }
+}

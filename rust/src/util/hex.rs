@@ -1,0 +1,65 @@
+//! Hex encoding/decoding (test vectors, key display, transcript dumps).
+
+/// Encode bytes as lowercase hex.
+pub fn encode(bytes: &[u8]) -> String {
+    const HEX: &[u8; 16] = b"0123456789abcdef";
+    let mut out = String::with_capacity(bytes.len() * 2);
+    for &b in bytes {
+        out.push(HEX[(b >> 4) as usize] as char);
+        out.push(HEX[(b & 0xf) as usize] as char);
+    }
+    out
+}
+
+/// Decode a hex string (case-insensitive, no separators).
+pub fn decode(s: &str) -> Result<Vec<u8>, String> {
+    let s = s.trim();
+    if s.len() % 2 != 0 {
+        return Err(format!("odd-length hex string ({})", s.len()));
+    }
+    fn nibble(c: u8) -> Result<u8, String> {
+        match c {
+            b'0'..=b'9' => Ok(c - b'0'),
+            b'a'..=b'f' => Ok(c - b'a' + 10),
+            b'A'..=b'F' => Ok(c - b'A' + 10),
+            _ => Err(format!("invalid hex char {:?}", c as char)),
+        }
+    }
+    let b = s.as_bytes();
+    (0..s.len() / 2)
+        .map(|i| Ok(nibble(b[2 * i])? << 4 | nibble(b[2 * i + 1])?))
+        .collect()
+}
+
+/// Decode into a fixed-size array.
+pub fn decode_array<const N: usize>(s: &str) -> Result<[u8; N], String> {
+    let v = decode(s)?;
+    v.try_into().map_err(|v: Vec<u8>| format!("expected {N} bytes, got {}", v.len()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip() {
+        let data: Vec<u8> = (0..=255).collect();
+        assert_eq!(decode(&encode(&data)).unwrap(), data);
+    }
+
+    #[test]
+    fn known_values() {
+        assert_eq!(encode(&[0xde, 0xad, 0xbe, 0xef]), "deadbeef");
+        assert_eq!(decode("DEADbeef").unwrap(), vec![0xde, 0xad, 0xbe, 0xef]);
+        assert_eq!(encode(&[]), "");
+        assert_eq!(decode("").unwrap(), Vec::<u8>::new());
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(decode("abc").is_err());
+        assert!(decode("zz").is_err());
+        assert!(decode_array::<4>("aabb").is_err());
+        assert_eq!(decode_array::<2>("aabb").unwrap(), [0xaa, 0xbb]);
+    }
+}

@@ -1,0 +1,85 @@
+//! Minimal leveled logger implementing the `log` facade.
+//!
+//! `env_logger` is unavailable offline; this provides the same ergonomics:
+//! level from `CCESA_LOG` (error|warn|info|debug|trace), timestamps relative
+//! to process start, module targets.
+
+use log::{Level, LevelFilter, Log, Metadata, Record};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+struct Logger {
+    start: Instant,
+    level: LevelFilter,
+}
+
+impl Log for Logger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= self.level
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = self.start.elapsed().as_secs_f64();
+        let lvl = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("[{t:9.3}s {lvl} {}] {}", record.target(), record.args());
+    }
+
+    fn flush(&self) {}
+}
+
+static LOGGER: OnceLock<Logger> = OnceLock::new();
+
+/// Parse a level name; defaults to Info on unknown input.
+pub fn parse_level(s: &str) -> LevelFilter {
+    match s.to_ascii_lowercase().as_str() {
+        "off" => LevelFilter::Off,
+        "error" => LevelFilter::Error,
+        "warn" => LevelFilter::Warn,
+        "debug" => LevelFilter::Debug,
+        "trace" => LevelFilter::Trace,
+        _ => LevelFilter::Info,
+    }
+}
+
+/// Install the logger once; level from `CCESA_LOG` env (default info).
+/// Safe to call multiple times.
+pub fn init() {
+    init_with(parse_level(&std::env::var("CCESA_LOG").unwrap_or_default()))
+}
+
+pub fn init_with(level: LevelFilter) {
+    let logger = LOGGER.get_or_init(|| Logger { start: Instant::now(), level });
+    // set_logger fails if already set — that's fine.
+    let _ = log::set_logger(logger);
+    log::set_max_level(logger.level);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parsing() {
+        assert_eq!(parse_level("error"), LevelFilter::Error);
+        assert_eq!(parse_level("TRACE"), LevelFilter::Trace);
+        assert_eq!(parse_level(""), LevelFilter::Info);
+        assert_eq!(parse_level("bogus"), LevelFilter::Info);
+        assert_eq!(parse_level("off"), LevelFilter::Off);
+    }
+
+    #[test]
+    fn init_is_idempotent() {
+        init_with(LevelFilter::Warn);
+        init_with(LevelFilter::Debug); // second call must not panic
+        log::info!("smoke");
+    }
+}

@@ -1,0 +1,12 @@
+//! Utility substrates built from scratch for the offline environment:
+//! deterministic RNG, hex encoding, JSON (config + artifact manifests),
+//! CLI flag parsing, descriptive statistics and regression fits, timers
+//! and a minimal leveled logger.
+
+pub mod cli;
+pub mod hex;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+pub mod timer;

@@ -1,0 +1,286 @@
+//! Deterministic random number generation.
+//!
+//! All stochastic components of the system (Erdős–Rényi graph sampling,
+//! dropout injection, key generation, dataset synthesis, client selection)
+//! draw from this module so that every experiment is exactly reproducible
+//! from a single 64-bit seed recorded in the config.
+//!
+//! The core generator is the ChaCha20 block function (RFC 8439) run in
+//! counter mode over a key derived from the seed with SplitMix64 — the same
+//! primitive the protocol uses as `PRG(·)`, but with an independent domain
+//! separation constant so simulation randomness never collides with
+//! protocol mask streams.
+
+use crate::crypto::chacha20::ChaCha20;
+
+/// SplitMix64 step: the standard seeding mixer (Steele et al.).
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Deterministic ChaCha20-backed RNG.
+///
+/// Buffers one 64-byte ChaCha block at a time; `next_u64` drains the buffer
+/// 8 bytes per call. Cloning an `Rng` forks an identical stream; use
+/// [`Rng::split`] to derive an independent stream instead.
+#[derive(Clone)]
+pub struct Rng {
+    core: ChaCha20,
+    buf: [u8; 64],
+    pos: usize,
+    counter: u32,
+}
+
+impl Rng {
+    /// Create an RNG from a 64-bit seed.
+    pub fn new(seed: u64) -> Self {
+        let mut s = seed;
+        let mut key = [0u8; 32];
+        for chunk in key.chunks_mut(8) {
+            chunk.copy_from_slice(&splitmix64(&mut s).to_le_bytes());
+        }
+        // Domain-separated nonce: "sim" randomness, not protocol masks.
+        let nonce = *b"ccesa-sim\0\0\0";
+        Self { core: ChaCha20::new(&key, &nonce), buf: [0u8; 64], pos: 64, counter: 0 }
+    }
+
+    /// Create an RNG directly from a 32-byte key (used by the protocol PRG).
+    pub fn from_key(key: &[u8; 32], nonce: &[u8; 12]) -> Self {
+        Self { core: ChaCha20::new(key, nonce), buf: [0u8; 64], pos: 64, counter: 0 }
+    }
+
+    /// Derive an independent child stream; deterministic in (self, tag).
+    pub fn split(&mut self, tag: u64) -> Rng {
+        Rng::new(self.next_u64() ^ tag.wrapping_mul(0xA24B_AED4_963E_E407))
+    }
+
+    #[inline]
+    fn refill(&mut self) {
+        self.core.block(self.counter, &mut self.buf);
+        self.counter = self.counter.wrapping_add(1);
+        self.pos = 0;
+    }
+
+    /// Next uniform u64.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        if self.pos + 8 > 64 {
+            self.refill();
+        }
+        let v = u64::from_le_bytes(self.buf[self.pos..self.pos + 8].try_into().unwrap());
+        self.pos += 8;
+        v
+    }
+
+    /// Next uniform u32.
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        self.next_u64() as u32
+    }
+
+    /// Fill a byte slice with uniform random bytes.
+    pub fn fill_bytes(&mut self, out: &mut [u8]) {
+        let mut i = 0;
+        while i < out.len() {
+            if self.pos >= 64 {
+                self.refill();
+            }
+            let n = (out.len() - i).min(64 - self.pos);
+            out[i..i + n].copy_from_slice(&self.buf[self.pos..self.pos + n]);
+            self.pos += n;
+            i += n;
+        }
+    }
+
+    /// Uniform in [0, bound) without modulo bias (Lemire rejection).
+    pub fn gen_range(&mut self, bound: u64) -> u64 {
+        assert!(bound > 0, "gen_range bound must be positive");
+        let mut x = self.next_u64();
+        let mut m = (x as u128).wrapping_mul(bound as u128);
+        let mut lo = m as u64;
+        if lo < bound {
+            let t = bound.wrapping_neg() % bound;
+            while lo < t {
+                x = self.next_u64();
+                m = (x as u128).wrapping_mul(bound as u128);
+                lo = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Bernoulli(p) draw.
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Standard normal via Box–Muller (one value per call; simple, adequate
+    /// for dataset synthesis — not on any protocol hot path).
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.next_f64();
+            if u1 > 1e-300 {
+                let u2 = self.next_f64();
+                return (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Normal with mean/std as f32 (dataset synthesis convenience).
+    pub fn normal_f32(&mut self, mean: f32, std: f32) -> f32 {
+        mean + std * self.normal() as f32
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.gen_range(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample k distinct indices from [0, n) (Floyd's algorithm for small k,
+    /// shuffle for large k).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "cannot sample {k} from {n}");
+        if k * 4 >= n {
+            let mut all: Vec<usize> = (0..n).collect();
+            self.shuffle(&mut all);
+            all.truncate(k);
+            all.sort_unstable();
+            return all;
+        }
+        let mut chosen = std::collections::BTreeSet::new();
+        for j in (n - k)..n {
+            let t = self.gen_range(j as u64 + 1) as usize;
+            if !chosen.insert(t) {
+                chosen.insert(j);
+            }
+        }
+        chosen.into_iter().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn split_streams_are_independent_and_deterministic() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        let mut ca = a.split(1);
+        let mut cb = b.split(1);
+        for _ in 0..100 {
+            assert_eq!(ca.next_u64(), cb.next_u64());
+        }
+        let mut c2 = Rng::new(7).split(2);
+        assert_ne!(Rng::new(7).split(1).next_u64(), c2.next_u64());
+    }
+
+    #[test]
+    fn gen_range_in_bounds_and_covers() {
+        let mut r = Rng::new(3);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = r.gen_range(10) as usize;
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all residues hit in 1000 draws");
+    }
+
+    #[test]
+    fn uniform_mean_is_half() {
+        let mut r = Rng::new(9);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| r.next_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(11);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn bernoulli_frequency() {
+        let mut r = Rng::new(13);
+        let hits = (0..10_000).filter(|_| r.bernoulli(0.3)).count();
+        assert!((hits as f64 / 10_000.0 - 0.3).abs() < 0.02);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(17);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>(), "100-element identity shuffle");
+    }
+
+    #[test]
+    fn sample_indices_distinct_sorted() {
+        let mut r = Rng::new(19);
+        for (n, k) in [(100usize, 5usize), (100, 80), (10, 10), (1, 1), (50, 0)] {
+            let s = r.sample_indices(n, k);
+            assert_eq!(s.len(), k);
+            assert!(s.windows(2).all(|w| w[0] < w[1]), "distinct+sorted");
+            assert!(s.iter().all(|&i| i < n));
+        }
+    }
+
+    #[test]
+    fn fill_bytes_matches_next_u64_stream() {
+        let mut a = Rng::new(23);
+        let mut b = Rng::new(23);
+        let mut buf = [0u8; 24];
+        a.fill_bytes(&mut buf);
+        for chunk in buf.chunks(8) {
+            assert_eq!(u64::from_le_bytes(chunk.try_into().unwrap()), b.next_u64());
+        }
+    }
+}

@@ -1,0 +1,153 @@
+//! Descriptive statistics and regression fits.
+//!
+//! Used by the bench harness (medians, percentiles), the Table-1 scaling
+//! experiment (log–log slope fits for asymptotic-complexity validation),
+//! and accuracy reporting.
+
+/// Summary statistics of a sample.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        assert!(!xs.is_empty(), "summary of empty sample");
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            p50: percentile_sorted(&sorted, 0.50),
+            p95: percentile_sorted(&sorted, 0.95),
+            max: sorted[n - 1],
+        }
+    }
+}
+
+/// Percentile (linear interpolation) of an already-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty() && (0.0..=1.0).contains(&q));
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&s, 0.5)
+}
+
+/// Ordinary least squares fit y = a + b·x. Returns (a, b, r²).
+pub fn linear_fit(xs: &[f64], ys: &[f64]) -> (f64, f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() >= 2);
+    let n = xs.len() as f64;
+    let mx = mean(xs);
+    let my = mean(ys);
+    let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+    let sxx: f64 = xs.iter().map(|x| (x - mx) * (x - mx)).sum();
+    let syy: f64 = ys.iter().map(|y| (y - my) * (y - my)).sum();
+    let b = sxy / sxx;
+    let a = my - b * mx;
+    let r2 = if syy == 0.0 { 1.0 } else { (sxy * sxy) / (sxx * syy) };
+    let _ = n;
+    (a, b, r2)
+}
+
+/// Fit y = c·x^k via log–log OLS; returns (k, r²).
+///
+/// This is how the Table-1 scaling benches validate asymptotics: measured
+/// client bandwidth vs n should fit slope ≈ 0.5–0.6 for CCESA (√(n log n))
+/// and ≈ 1.0 for SA.
+pub fn power_law_exponent(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    let lx: Vec<f64> = xs.iter().map(|x| x.ln()).collect();
+    let ly: Vec<f64> = ys.iter().map(|y| y.ln()).collect();
+    let (_, k, r2) = linear_fit(&lx, &ly);
+    (k, r2)
+}
+
+/// Binomial confidence half-width (normal approx) for a proportion.
+pub fn proportion_ci95(p_hat: f64, n: usize) -> f64 {
+    1.96 * (p_hat * (1.0 - p_hat) / n as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_known_sample() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert!((s.p50 - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.std - (2.0f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let s = [10.0, 20.0, 30.0, 40.0];
+        assert!((percentile_sorted(&s, 0.0) - 10.0).abs() < 1e-12);
+        assert!((percentile_sorted(&s, 1.0) - 40.0).abs() < 1e-12);
+        assert!((percentile_sorted(&s, 0.5) - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn linear_fit_exact_line() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 + 2.0 * x).collect();
+        let (a, b, r2) = linear_fit(&xs, &ys);
+        assert!((a - 3.0).abs() < 1e-10);
+        assert!((b - 2.0).abs() < 1e-10);
+        assert!((r2 - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn power_law_recovers_exponent() {
+        let xs = [10.0f64, 100.0, 1000.0, 10000.0];
+        let ys: Vec<f64> = xs.iter().map(|x| 5.0 * x.powf(1.5)).collect();
+        let (k, r2) = power_law_exponent(&xs, &ys);
+        assert!((k - 1.5).abs() < 1e-9, "k={k}");
+        assert!(r2 > 0.999999);
+    }
+
+    #[test]
+    fn sqrt_nlogn_fits_between_half_and_one() {
+        // sanity for the Table-1 methodology: √(n log n) has local log-log
+        // slope slightly above 0.5 over our n range.
+        let xs: Vec<f64> = [50.0, 100.0, 200.0, 400.0, 800.0, 1600.0].to_vec();
+        let ys: Vec<f64> = xs.iter().map(|n| (n * n.ln()).sqrt()).collect();
+        let (k, _) = power_law_exponent(&xs, &ys);
+        assert!(k > 0.5 && k < 0.75, "k={k}");
+    }
+
+    #[test]
+    fn median_odd_even() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+    }
+}

@@ -1,0 +1,119 @@
+//! Wall-clock timers and a scoped stopwatch for per-step protocol timing
+//! (Table 5.1 reproduces per-step client/server running time).
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Simple stopwatch.
+#[derive(Debug, Clone, Copy)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+    pub fn elapsed_us(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e6
+    }
+}
+
+/// Accumulates named durations; used to attribute protocol wall time to
+/// Steps 0–3 separately for client and server roles.
+#[derive(Debug, Default, Clone)]
+pub struct StepTimes {
+    totals: BTreeMap<&'static str, Duration>,
+    counts: BTreeMap<&'static str, u64>,
+}
+
+impl StepTimes {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under a named bucket.
+    pub fn time<R>(&mut self, name: &'static str, f: impl FnOnce() -> R) -> R {
+        let t = Instant::now();
+        let r = f();
+        self.add(name, t.elapsed());
+        r
+    }
+
+    pub fn add(&mut self, name: &'static str, d: Duration) {
+        *self.totals.entry(name).or_default() += d;
+        *self.counts.entry(name).or_default() += 1;
+    }
+
+    pub fn merge(&mut self, other: &StepTimes) {
+        for (k, v) in &other.totals {
+            *self.totals.entry(k).or_default() += *v;
+        }
+        for (k, c) in &other.counts {
+            *self.counts.entry(k).or_default() += *c;
+        }
+    }
+
+    pub fn total_ms(&self, name: &str) -> f64 {
+        self.totals.get(name).map(|d| d.as_secs_f64() * 1e3).unwrap_or(0.0)
+    }
+
+    /// Mean per-invocation milliseconds.
+    pub fn mean_ms(&self, name: &str) -> f64 {
+        let c = self.counts.get(name).copied().unwrap_or(0);
+        if c == 0 {
+            0.0
+        } else {
+            self.total_ms(name) / c as f64
+        }
+    }
+
+    pub fn names(&self) -> Vec<&'static str> {
+        self.totals.keys().copied().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotonic() {
+        let t = Timer::start();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(t.elapsed_ms() >= 1.0);
+        assert!(t.elapsed_us() >= t.elapsed_ms()); // µs number ≥ ms number
+    }
+
+    #[test]
+    fn step_times_accumulate_and_merge() {
+        let mut s = StepTimes::new();
+        s.add("step0", Duration::from_millis(10));
+        s.add("step0", Duration::from_millis(20));
+        s.add("step1", Duration::from_millis(5));
+        assert!((s.total_ms("step0") - 30.0).abs() < 1e-9);
+        assert!((s.mean_ms("step0") - 15.0).abs() < 1e-9);
+        assert_eq!(s.total_ms("nope"), 0.0);
+        assert_eq!(s.mean_ms("nope"), 0.0);
+
+        let mut t = StepTimes::new();
+        t.add("step1", Duration::from_millis(5));
+        t.merge(&s);
+        assert!((t.total_ms("step1") - 10.0).abs() < 1e-9);
+        assert_eq!(t.names(), vec!["step0", "step1"]);
+    }
+
+    #[test]
+    fn time_closure_returns_value() {
+        let mut s = StepTimes::new();
+        let v = s.time("work", || 7 * 6);
+        assert_eq!(v, 42);
+        assert!(s.total_ms("work") >= 0.0);
+    }
+}

@@ -1,0 +1,170 @@
+//! End-to-end federated learning through all three layers: synthetic data
+//! → local SGD via the Pallas/JAX AOT train step on PJRT → SA/CCESA
+//! secure aggregation → global model update.
+//!
+//! These are scaled-down versions of the experiments the examples run in
+//! full (Fig 5.2 / quickstart): small client counts and few rounds keep
+//! CI time bounded while still proving the layers compose.
+
+use ccesa::fl::data::{partition_iid, SyntheticCifar};
+use ccesa::fl::rounds::{run_fl_mlp, Aggregation, FlConfig};
+use ccesa::protocol::dropout::DropoutModel;
+use ccesa::protocol::Topology;
+use ccesa::runtime::mlp::MlpRuntime;
+use ccesa::runtime::{Manifest, Runtime};
+use ccesa::util::rng::Rng;
+
+fn setup() -> Option<(Runtime, MlpRuntime)> {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    let rt = Runtime::cpu(&dir).expect("PJRT client");
+    let mlp = MlpRuntime::load(&rt).expect("mlp artifacts");
+    Some((rt, mlp))
+}
+
+fn base_cfg(aggregation: Aggregation) -> FlConfig {
+    FlConfig {
+        n_clients: 10,
+        rounds: 8,
+        client_fraction: 0.8,
+        local_epochs: 2,
+        lr: 0.5,
+        clip: 4.0,
+        aggregation,
+        seed: 0xF1E2D,
+    }
+}
+
+#[test]
+fn fedavg_plain_learns() {
+    let Some((_rt, mlp)) = setup() else { return };
+    let mut rng = Rng::new(1);
+    let dims = mlp.dims;
+    let (train, test) =
+        SyntheticCifar::generate_split(600, 160, dims.d, dims.c, 0.35, &mut rng);
+    let parts = partition_iid(&train, 10, &mut rng);
+    let hist = run_fl_mlp(&base_cfg(Aggregation::Plain), &mlp, &train, &parts, &test).unwrap();
+    let acc = hist.final_accuracy();
+    assert!(acc > 0.5, "fedavg accuracy {acc}");
+    assert_eq!(hist.unreliable_rounds(), 0);
+}
+
+#[test]
+fn secure_sa_matches_plain_within_quantization() {
+    let Some((_rt, mlp)) = setup() else { return };
+    let mut rng = Rng::new(2);
+    let dims = mlp.dims;
+    let (train, test) =
+        SyntheticCifar::generate_split(600, 160, dims.d, dims.c, 0.35, &mut rng);
+    let parts = partition_iid(&train, 10, &mut rng);
+
+    let plain = run_fl_mlp(&base_cfg(Aggregation::Plain), &mlp, &train, &parts, &test).unwrap();
+    let secure = run_fl_mlp(
+        &base_cfg(Aggregation::Secure {
+            topology: Topology::Complete,
+            t_override: None,
+            mask_bits: 32,
+            dropout: DropoutModel::None,
+        }),
+        &mlp,
+        &train,
+        &parts,
+        &test,
+    )
+    .unwrap();
+    assert_eq!(secure.unreliable_rounds(), 0);
+    let da = (plain.final_accuracy() - secure.final_accuracy()).abs();
+    assert!(
+        da < 0.08,
+        "SA accuracy diverged from plain: {} vs {}",
+        secure.final_accuracy(),
+        plain.final_accuracy()
+    );
+    // secure aggregation must actually cost bandwidth
+    assert!(secure.total_stats.server_total() > 0);
+}
+
+#[test]
+fn ccesa_er_graph_learns_with_dropout() {
+    let Some((_rt, mlp)) = setup() else { return };
+    let mut rng = Rng::new(3);
+    let dims = mlp.dims;
+    let (train, test) =
+        SyntheticCifar::generate_split(600, 160, dims.d, dims.c, 0.35, &mut rng);
+    let parts = partition_iid(&train, 10, &mut rng);
+
+    let mut cfg = base_cfg(Aggregation::Secure {
+        topology: Topology::ErdosRenyi { p: 0.9 },
+        t_override: Some(3),
+        mask_bits: 32,
+        dropout: DropoutModel::Iid { q: 0.03 },
+    });
+    cfg.rounds = 6;
+    let hist = run_fl_mlp(&cfg, &mlp, &train, &parts, &test).unwrap();
+    let acc = hist.final_accuracy();
+    // a couple of unreliable rounds are tolerable; learning must proceed
+    assert!(acc > 0.45, "ccesa accuracy {acc}");
+    assert!(hist.unreliable_rounds() <= 3);
+}
+
+#[test]
+fn ccesa_comm_cheaper_than_sa_per_round() {
+    let Some((_rt, mlp)) = setup() else { return };
+    let mut rng = Rng::new(4);
+    let dims = mlp.dims;
+    let (train, test) =
+        SyntheticCifar::generate_split(400, 96, dims.d, dims.c, 0.35, &mut rng);
+    let n = 16;
+    let parts = partition_iid(&train, n, &mut rng);
+
+    let mk = |agg| {
+        let mut c = base_cfg(agg);
+        c.n_clients = n;
+        c.rounds = 2;
+        c.client_fraction = 1.0;
+        c
+    };
+    let sa = run_fl_mlp(
+        &mk(Aggregation::Secure {
+            topology: Topology::Complete,
+            t_override: None,
+            mask_bits: 32,
+            dropout: DropoutModel::None,
+        }),
+        &mlp,
+        &train,
+        &parts,
+        &test,
+    )
+    .unwrap();
+    let cc = run_fl_mlp(
+        &mk(Aggregation::Secure {
+            topology: Topology::ErdosRenyi { p: 0.5 },
+            t_override: Some(4),
+            mask_bits: 32,
+            dropout: DropoutModel::None,
+        }),
+        &mlp,
+        &train,
+        &parts,
+        &test,
+    )
+    .unwrap();
+    // total non-model traffic (keys+shares): steps 0,1,3 — CCESA < SA
+    let key_traffic = |h: &ccesa::fl::rounds::FlHistory| {
+        h.total_stats.bytes_up[0]
+            + h.total_stats.bytes_down[0]
+            + h.total_stats.bytes_up[1]
+            + h.total_stats.bytes_down[1]
+            + h.total_stats.bytes_up[3]
+    };
+    assert!(
+        key_traffic(&cc) < key_traffic(&sa),
+        "ccesa {} >= sa {}",
+        key_traffic(&cc),
+        key_traffic(&sa)
+    );
+}

@@ -1,0 +1,176 @@
+//! Property-style integration tests pinning the paper's theorems against
+//! the full implementation (crypto included), plus cross-layer invariants
+//! that unit tests cannot see.
+
+use ccesa::analysis::bounds::{p_star, per_step_q, t_rule};
+use ccesa::analysis::montecarlo::estimate_failure_rates;
+use ccesa::protocol::adversary::{attack, theorem2_private, unmasking_attack_feasible};
+use ccesa::protocol::dropout::DropoutModel;
+use ccesa::protocol::engine::run_round;
+use ccesa::protocol::{ProtocolConfig, Topology};
+use ccesa::util::rng::Rng;
+
+fn models(n: usize, dim: usize, seed: u64) -> Vec<Vec<u64>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| (0..dim).map(|_| rng.next_u64() & 0xFFFF_FFFF).collect())
+        .collect()
+}
+
+/// Theorem 1 ⟺ implementation, with the full crypto stack, across a
+/// randomized sweep of topologies / thresholds / dropout regimes.
+#[test]
+fn theorem1_iff_reliability_full_stack_sweep() {
+    let mut checked = 0;
+    for seed in 0..30u64 {
+        let mut meta = Rng::new(7000 + seed);
+        let n = 8 + meta.gen_range(10) as usize;
+        let p = 0.35 + 0.6 * meta.next_f64();
+        let t = 2 + meta.gen_range(5) as usize;
+        let q = 0.12 * meta.next_f64();
+        let cfg = ProtocolConfig {
+            mask_bits: 32,
+            dropout: DropoutModel::Iid { q },
+            ..ProtocolConfig::new(n, t, 6, Topology::ErdosRenyi { p }, seed)
+        };
+        let m = models(n, 6, seed);
+        if let Ok(r) = run_round(&cfg, &m) {
+            assert_eq!(r.reliable, r.theorem1_holds, "seed={seed} sets={:?}", r.sets);
+            if r.reliable {
+                assert_eq!(r.sum.as_ref().unwrap(), &r.true_sum_v3, "seed={seed}");
+            }
+            checked += 1;
+        }
+    }
+    assert!(checked >= 15, "too many aborted rounds ({checked} checked)");
+}
+
+/// Theorem 2 ⟺ the constructive eavesdropper attack, full stack.
+#[test]
+fn theorem2_iff_attack_full_stack_sweep() {
+    let mut outcomes = [0usize; 2];
+    for seed in 0..40u64 {
+        let mut meta = Rng::new(9000 + seed);
+        let n = 10 + meta.gen_range(8) as usize;
+        let p = 0.15 + 0.25 * meta.next_f64();
+        let cfg = ProtocolConfig {
+            dropout: DropoutModel::Iid { q: 0.05 },
+            ..ProtocolConfig::new(n, 2, 4, Topology::ErdosRenyi { p }, 50 + seed)
+        };
+        let m = models(n, 4, seed);
+        let Ok(r) = run_round(&cfg, &m) else { continue };
+        let breaches = attack(&r.transcript);
+        let private = theorem2_private(&r.transcript, &r.sets.v4);
+        assert_eq!(breaches.is_empty(), private, "seed={seed}");
+        outcomes[usize::from(private)] += 1;
+        for b in &breaches {
+            let mut expect = vec![0u64; 4];
+            for &i in &b.subset {
+                for (a, x) in expect.iter_mut().zip(&m[i]) {
+                    *a = a.wrapping_add(*x) & 0xFFFF_FFFF;
+                }
+            }
+            assert_eq!(b.partial_sum, expect, "seed={seed}: wrong recovered sum");
+        }
+    }
+    assert!(outcomes[0] > 0, "converse never exercised");
+    assert!(outcomes[1] > 0, "forward direction never exercised");
+}
+
+/// At p = p*(n, q_total) with Remark-4 t, rounds are a.s. reliable and
+/// private — the paper's headline operating point, on the full stack.
+#[test]
+fn operating_point_p_star_is_reliable_and_private() {
+    let n = 60;
+    let q_total = 0.05;
+    let p = p_star(n, q_total); // well above threshold for n=60
+    let t = t_rule(n, p).min(n / 2);
+    let q = per_step_q(q_total);
+    let mut reliable = 0;
+    let mut private = 0;
+    let trials = 12;
+    for seed in 0..trials {
+        let cfg = ProtocolConfig {
+            dropout: DropoutModel::Iid { q },
+            ..ProtocolConfig::new(n, t, 8, Topology::ErdosRenyi { p }, 300 + seed)
+        };
+        let m = models(n, 8, seed);
+        let Ok(r) = run_round(&cfg, &m) else { continue };
+        if r.reliable {
+            reliable += 1;
+        }
+        if attack(&r.transcript).is_empty() {
+            private += 1;
+        }
+    }
+    assert!(reliable >= trials - 1, "reliable {reliable}/{trials}");
+    assert_eq!(private, trials, "privacy breached at p*");
+}
+
+/// Remark 4's t defeats the unmasking attack: with t from the rule, no
+/// node has 2t live closed-neighbors.
+#[test]
+fn remark4_t_blocks_unmasking_attack() {
+    for n in [40usize, 100, 200] {
+        let p = p_star(n, 0.0);
+        let t = t_rule(n, p);
+        let mut feasible = 0usize;
+        let mut total = 0usize;
+        for seed in 0..10u64 {
+            let mut rng = Rng::new(4000 + seed);
+            let g = ccesa::graph::Graph::erdos_renyi(n, p, &mut rng);
+            let v4: Vec<usize> = (0..n).collect(); // worst case: nobody drops
+            for i in 0..n {
+                total += 1;
+                if unmasking_attack_feasible(&g, &v4, t, i) {
+                    feasible += 1;
+                }
+            }
+        }
+        // Prop. 1: asymptotically almost surely zero; allow a whisker
+        assert!(
+            (feasible as f64) < 0.01 * total as f64,
+            "n={n}: unmasking feasible for {feasible}/{total}"
+        );
+    }
+}
+
+/// Monte-Carlo failure rates at the Fig 4.1 operating points stay within
+/// the plotted bounds (reliability ≤ ~1e-2, privacy ≈ 0).
+#[test]
+fn fig41_operating_points_empirically_safe() {
+    for (n, q_total) in [(100usize, 0.0f64), (100, 0.1), (200, 0.05)] {
+        let p = p_star(n, q_total);
+        let q = per_step_q(q_total);
+        let t = t_rule(n, p);
+        let est = estimate_failure_rates(n, p, q, t, 300, 42);
+        assert!(
+            est.p_e_reliability <= 0.05,
+            "n={n} q={q_total}: rel fail {}",
+            est.p_e_reliability
+        );
+        assert!(
+            est.p_e_privacy <= 0.01,
+            "n={n} q={q_total}: priv fail {}",
+            est.p_e_privacy
+        );
+    }
+}
+
+/// SA is CCESA with the complete graph: byte accounting must coincide with
+/// an explicit K_n custom topology.
+#[test]
+fn sa_equals_ccesa_on_complete_graph() {
+    let n = 12;
+    let dim = 20;
+    let m = models(n, dim, 77);
+    let a = run_round(&ProtocolConfig::new(n, 5, dim, Topology::Complete, 9), &m).unwrap();
+    let g = ccesa::graph::Graph::complete(n);
+    let b = run_round(
+        &ProtocolConfig::new(n, 5, dim, Topology::Custom(g), 9),
+        &m,
+    )
+    .unwrap();
+    assert_eq!(a.sum, b.sum);
+    assert_eq!(a.stats.server_total(), b.stats.server_total());
+}

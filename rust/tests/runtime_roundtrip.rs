@@ -1,0 +1,181 @@
+//! Integration test: the full python-AOT → rust-PJRT path.
+//!
+//! Loads every artifact, compiles it on the CPU PJRT client, executes it
+//! with concrete inputs, and checks numerics against Rust-side oracles.
+//! This is the authoritative proof that L1/L2 (Pallas + JAX) and L3 (this
+//! crate) compose. Skips (with a loud message) if `make artifacts` has not
+//! been run.
+
+use ccesa::runtime::mlp::{MlpParams, MlpRuntime};
+use ccesa::runtime::softreg::{SoftregParams, SoftregRuntime};
+use ccesa::runtime::{to_u32, Input, Manifest, Runtime};
+use ccesa::util::rng::Rng;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::cpu(&dir).expect("PJRT CPU client"))
+}
+
+fn onehot(labels: &[usize], c: usize) -> Vec<f32> {
+    let mut out = vec![0.0; labels.len() * c];
+    for (i, &y) in labels.iter().enumerate() {
+        out[i * c + y] = 1.0;
+    }
+    out
+}
+
+#[test]
+fn mlp_train_step_learns_through_pjrt() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mlp = MlpRuntime::load(&rt).expect("load mlp artifacts");
+    let dims = mlp.dims;
+    let mut rng = Rng::new(0xE2E);
+    let mut params = MlpParams::init(dims, &mut rng);
+
+    // deterministic separable batch: class mean embedded in features
+    let labels: Vec<usize> = (0..dims.batch).map(|i| i % dims.c).collect();
+    let mut x = vec![0.0f32; dims.batch * dims.d];
+    for (i, &y) in labels.iter().enumerate() {
+        for j in 0..dims.d {
+            x[i * dims.d + j] =
+                0.3 * rng.normal() as f32 + if j % dims.c == y { 1.0 } else { 0.0 };
+        }
+    }
+    let y1h = onehot(&labels, dims.c);
+
+    let mut losses = Vec::new();
+    for _ in 0..8 {
+        let loss = mlp.train_step(&mut params, &x, &y1h, 0.5).expect("train step");
+        assert!(loss.is_finite());
+        losses.push(loss);
+    }
+    assert!(
+        losses.last().unwrap() < &(0.8 * losses[0]),
+        "loss did not decrease: {losses:?}"
+    );
+
+    let labels_i32: Vec<i32> = labels.iter().map(|&l| l as i32).collect();
+    let correct = mlp.eval_batch(&params, &x, &labels_i32).expect("eval");
+    assert!(correct > dims.batch / 2, "correct={correct}/{}", dims.batch);
+}
+
+#[test]
+fn softreg_train_predict_and_invert_through_pjrt() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let sr = SoftregRuntime::load(&rt).expect("load softreg artifacts");
+    let dims = sr.dims;
+    let mut rng = Rng::new(0xFACE5);
+
+    // class templates in [0,1]^d; training batch cycles through classes
+    let templates: Vec<Vec<f32>> = (0..dims.c)
+        .map(|_| (0..dims.d).map(|_| rng.next_f32()).collect())
+        .collect();
+    let labels: Vec<usize> = (0..dims.batch).map(|i| i % dims.c).collect();
+    let mut x = vec![0.0f32; dims.batch * dims.d];
+    for (i, &y) in labels.iter().enumerate() {
+        for j in 0..dims.d {
+            x[i * dims.d + j] =
+                (templates[y][j] + 0.05 * rng.normal() as f32).clamp(0.0, 1.0);
+        }
+    }
+    let y1h = onehot(&labels, dims.c);
+
+    let mut params = SoftregParams::zeros(dims);
+    let mut first = f32::INFINITY;
+    let mut last = f32::INFINITY;
+    for step in 0..60 {
+        last = sr.train_step(&mut params, &x, &y1h, 1.0).expect("train");
+        if step == 0 {
+            first = last;
+        }
+    }
+    assert!(last < first, "loss {first} -> {last}");
+
+    // prediction: rows sum to 1
+    let probs = sr.predict(&params, &x).expect("predict");
+    for row in probs.chunks(dims.c) {
+        let s: f32 = row.iter().sum();
+        assert!((s - 1.0).abs() < 1e-4, "row sum {s}");
+    }
+
+    // inversion attack recovers the target template better than others
+    let target = 3usize;
+    let mut t1h = vec![0.0f32; dims.c];
+    t1h[target] = 1.0;
+    let mut img = vec![0.5f32; dims.d];
+    for _ in 0..60 {
+        let (next, loss) = sr.inversion_step(&params, &img, &t1h, 5.0).expect("invert");
+        assert!(loss.is_finite());
+        img = next;
+    }
+    let cos = |a: &[f32], b: &[f32]| {
+        let ma = a.iter().sum::<f32>() / a.len() as f32;
+        let mb = b.iter().sum::<f32>() / b.len() as f32;
+        let num: f32 = a.iter().zip(b).map(|(x, y)| (x - ma) * (y - mb)).sum();
+        let da: f32 = a.iter().map(|x| (x - ma) * (x - ma)).sum::<f32>().sqrt();
+        let db: f32 = b.iter().map(|y| (y - mb) * (y - mb)).sum::<f32>().sqrt();
+        num / (da * db + 1e-9)
+    };
+    let sim_target = cos(&img, &templates[target]);
+    let max_other = (0..dims.c)
+        .filter(|&k| k != target)
+        .map(|k| cos(&img, &templates[k]))
+        .fold(f32::NEG_INFINITY, f32::max);
+    assert!(
+        sim_target > max_other,
+        "inversion failed: target sim {sim_target} <= other {max_other}"
+    );
+}
+
+#[test]
+fn masked_sum_artifact_matches_rust_aggregation() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let exe = rt.load("masked_sum").expect("load masked_sum");
+    let (clients, m) = rt.manifest.agg_dims();
+    let mut rng = Rng::new(0xA66);
+    let stacked: Vec<u32> = (0..clients * m).map(|_| rng.next_u32()).collect();
+
+    let outs = exe
+        .run(&[Input::U32(stacked.clone(), vec![clients as i64, m as i64])])
+        .expect("execute");
+    let got = to_u32(&outs[0]).expect("u32 output");
+
+    // Rust oracle: wrapping column sum
+    let mut expect = vec![0u32; m];
+    for c in 0..clients {
+        for j in 0..m {
+            expect[j] = expect[j].wrapping_add(stacked[c * m + j]);
+        }
+    }
+    assert_eq!(got, expect);
+}
+
+#[test]
+fn quantize_artifact_matches_rust_quantizer() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let exe = rt.load("quantize").expect("load quantize");
+    let (clients, m) = rt.manifest.agg_dims();
+    // aot.py fixes clip=4.0 and scale = 2^31 / (2 * clients * 4.0)
+    let q = ccesa::masking::Quantizer::for_sum_of(32, 4.0, clients);
+    let mut rng = Rng::new(0x9A);
+    let xs: Vec<f32> = (0..m).map(|_| rng.normal_f32(0.0, 1.5)).collect();
+    let outs = exe
+        .run(&[Input::F32(xs.clone(), vec![m as i64])])
+        .expect("execute quantize");
+    let words = to_u32(&outs[0]).expect("u32 out");
+    // dequantizing the kernel's words recovers the input within one step
+    // of the quantizer resolution (rounding-mode differences allowed)
+    let step = 1.0 / q.scale;
+    for (i, (&w, &x)) in words.iter().zip(&xs).enumerate() {
+        let back = q.dequantize_one(w as u64);
+        let expect = x.clamp(-4.0, 4.0) as f64;
+        assert!(
+            (back - expect).abs() <= step + 1e-9,
+            "i={i}: x={x} back={back} step={step}"
+        );
+    }
+}
