@@ -1,0 +1,101 @@
+//! Scenario sweep: the reliability/privacy claims under every churn model
+//! the `sim` subsystem knows, at the paper's operating point p = p*(n),
+//! plus a randomized engine↔coordinator differential check.
+//!
+//! Per churn model: reliable/aborted/breached round counts, Theorem-1
+//! agreement, and total traffic through the server. The differential rows
+//! confirm the threaded deployment shape is bit-identical to the engine on
+//! every generated scenario (and shrink + report any divergence).
+//!
+//! ```bash
+//! cargo run --release --example scenario_sweep
+//! cargo run --release --example scenario_sweep -- --n 100 --rounds 6 --diff 50
+//! ```
+
+use ccesa::analysis::bounds::p_star;
+use ccesa::protocol::Topology;
+use ccesa::sim::{
+    run_campaign, run_differential, AdversarySpec, ChurnModel, Driver, Scenario, ThresholdRule,
+    TopologySchedule,
+};
+use ccesa::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    ccesa::util::logging::init();
+    let args = Args::new("scenario_sweep", "churn-model sweep + differential harness")
+        .flag("n", Some("60"), "clients per scenario")
+        .flag("rounds", Some("4"), "rounds per campaign")
+        .flag("seed", Some("7"), "base seed")
+        .flag("diff", Some("25"), "randomized differential scenarios (0 = skip)")
+        .parse();
+    let n: usize = args.req("n");
+    let rounds: usize = args.req("rounds");
+    let seed: u64 = args.req("seed");
+    let p = p_star(n, 0.05);
+
+    let churns: Vec<(&str, ChurnModel)> = vec![
+        ("none", ChurnModel::None),
+        ("iid q=3%", ChurnModel::Iid { q: 0.03 }),
+        (
+            "bursty",
+            ChurnModel::Bursty { q_calm: 0.01, q_storm: 0.2, p_enter: 0.35, p_exit: 0.5 },
+        ),
+        (
+            "regional",
+            ChurnModel::CorrelatedRegional { regions: 4, q_region: 0.15, q_local: 0.01 },
+        ),
+        ("adaptive", ChurnModel::TargetedAdaptive { count: n / 20 + 1, step: 2 }),
+    ];
+
+    println!("== scenario sweep: n={n} rounds={rounds} ER p*={p:.3} ==");
+    println!(
+        "{:<10} {:>8} {:>8} {:>8} {:>8} {:>10} {:>12}",
+        "churn", "reliable", "aborted", "breached", "exposed", "thm1 viol", "server KiB"
+    );
+    for (label, churn) in churns {
+        let sc = Scenario {
+            name: label.to_string(),
+            n,
+            dim: 128,
+            mask_bits: 32,
+            rounds,
+            topology: TopologySchedule::Static(Topology::ErdosRenyi { p }),
+            churn,
+            adversary: AdversarySpec::Colluding((0..n / 10).collect()),
+            threshold: ThresholdRule::Auto,
+            clip: 4.0,
+            seed,
+        };
+        let rep = run_campaign(&sc, Driver::Engine)?;
+        println!(
+            "{:<10} {:>8} {:>8} {:>8} {:>8} {:>10} {:>12.1}",
+            label,
+            rep.reliable_rounds(),
+            rep.aborted_rounds(),
+            rep.breached_rounds(),
+            rep.exposed_honest_total(),
+            rep.theorem1_violations(),
+            rep.total_stats.server_total() as f64 / 1024.0,
+        );
+    }
+
+    let diff_count: usize = args.req("diff");
+    if diff_count > 0 {
+        println!("\n== differential: {diff_count} random scenarios, engine vs coordinator ==");
+        let report = run_differential(seed.wrapping_mul(0x9E37_79B9), diff_count);
+        println!(
+            "scenarios={} rounds={} mismatches={}",
+            report.scenarios_run,
+            report.rounds_run,
+            report.failures.len()
+        );
+        for f in &report.failures {
+            println!(
+                "MISMATCH seed={:#x} round={} field={}: {}\n  shrunk repro: {:?}",
+                f.mismatch.seed, f.mismatch.round, f.mismatch.field, f.mismatch.detail, f.shrunk
+            );
+        }
+        anyhow::ensure!(report.ok(), "differential harness found divergences");
+    }
+    Ok(())
+}

@@ -1,0 +1,61 @@
+//! Campaign throughput at production scale: full scenario rounds per
+//! second through the sync engine and the threaded coordinator, up to
+//! n ≈ 1000 clients (the paper's largest regime).
+//!
+//! The Harary topology keeps the per-client degree fixed (8), so the cost
+//! per round scales linearly in n and the rounds/s numbers compare across
+//! population sizes. `CCESA_BENCH_BUDGET_MS` caps the per-case measurement
+//! budget (one warmup iteration per case still runs — the floor for the
+//! n=1000 cases is a handful of full campaign rounds).
+//!
+//! ```bash
+//! cargo bench --bench campaign_throughput
+//! CCESA_BENCH_BUDGET_MS=500 cargo bench --bench campaign_throughput
+//! ```
+
+use ccesa::bench::{black_box, Bench};
+use ccesa::protocol::Topology;
+use ccesa::sim::{
+    run_campaign, AdversarySpec, ChurnModel, Driver, Scenario, ThresholdRule, TopologySchedule,
+};
+
+fn scenario(n: usize, rounds: usize) -> Scenario {
+    Scenario {
+        name: format!("bench-n{n}"),
+        n,
+        dim: 64,
+        mask_bits: 32,
+        rounds,
+        topology: TopologySchedule::Static(Topology::Harary { k: 8 }),
+        churn: ChurnModel::Iid { q: 0.005 },
+        adversary: AdversarySpec::Eavesdropper,
+        threshold: ThresholdRule::Fixed(4),
+        clip: 4.0,
+        seed: 0xBE2C,
+    }
+}
+
+fn main() {
+    let mut b = Bench::new("campaign_throughput");
+
+    for &n in &[100usize, 400, 1000] {
+        let sc = scenario(n, 1);
+        b.throughput(&format!("campaign round n={n} (engine)"), n as f64, "client/s", || {
+            black_box(run_campaign(&sc, Driver::Engine).unwrap());
+        });
+    }
+
+    for &n in &[100usize, 1000] {
+        let sc = scenario(n, 1);
+        b.throughput(
+            &format!("campaign round n={n} (coordinator)"),
+            n as f64,
+            "client/s",
+            || {
+                black_box(run_campaign(&sc, Driver::Coordinator).unwrap());
+            },
+        );
+    }
+
+    b.report();
+}

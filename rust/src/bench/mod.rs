@@ -58,14 +58,26 @@ impl Bench {
     pub fn new(group: &str) -> Self {
         // CCESA_BENCH_FAST=1 shrinks budgets (used by `make test` smoke).
         let fast = std::env::var("CCESA_BENCH_FAST").ok().as_deref() == Some("1");
-        Bench {
+        let mut b = Bench {
             group: group.to_string(),
             warmup: if fast { Duration::from_millis(20) } else { Duration::from_millis(200) },
             budget: if fast { Duration::from_millis(100) } else { Duration::from_secs(1) },
             min_iters: 5,
             max_iters: 1_000_000,
             results: Vec::new(),
+        };
+        // CCESA_BENCH_BUDGET_MS overrides the per-case budget, and shrinks
+        // warmup/min_iters with it so the cap is real for expensive cases
+        // (campaign benches at n≈1000 cost seconds per iteration). One
+        // warmup iteration always runs — that is the calibration floor.
+        if let Some(ms) =
+            std::env::var("CCESA_BENCH_BUDGET_MS").ok().and_then(|v| v.parse::<u64>().ok())
+        {
+            b.budget = Duration::from_millis(ms);
+            b.warmup = b.warmup.min(Duration::from_millis(ms / 4));
+            b.min_iters = 1;
         }
+        b
     }
 
     /// Benchmark a closure; returns median seconds per iteration.

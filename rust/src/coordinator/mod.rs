@@ -53,7 +53,7 @@ pub struct CoordRoundResult {
 pub fn run_round_threaded(cfg: &ProtocolConfig, models: &[Vec<u64>]) -> Result<CoordRoundResult> {
     assert_eq!(models.len(), cfg.n);
     let mut rng = Rng::new(cfg.seed);
-    let graph = cfg.topology.build(cfg.n, &mut rng);
+    let graph = cfg.build_graph_with(&mut rng);
     let mut dropout_rng = rng.split(0xD20);
 
     // Pre-draw dropout decisions in the engine's order so None/Targeted
@@ -139,91 +139,106 @@ pub fn run_round_threaded(cfg: &ProtocolConfig, models: &[Vec<u64>]) -> Result<C
         }
         drop(tx_up);
 
-        let mut server = Server::new(cfg.n, cfg.t, cfg.mask_bits, cfg.dim, graph.clone());
-        let mut stats = NetStats::new(cfg.n);
+        // The server phases run in an inner closure so that EVERY exit path
+        // — including a mid-protocol abort like |V_k| < t — falls through to
+        // the wake-up loop below. Without it, an early `?` return would
+        // leave worker threads parked on `rx_down.recv()` with their senders
+        // still alive, and `thread::scope` would deadlock joining them.
+        let result = (|| -> Result<CoordRoundResult> {
+            let mut server = Server::new(cfg.n, cfg.t, cfg.mask_bits, cfg.dim, graph.clone());
+            let mut stats = NetStats::new(cfg.n);
 
-        // ---- phase 0: every client reports (advert or drop)
-        let mut advs = Vec::new();
-        for _ in 0..cfg.n {
-            match rx_up.recv().map_err(|_| anyhow!("client channel closed"))? {
-                Up::Adv(a) => {
-                    stats.record(0, Dir::Up, a.id, a.size_bytes());
-                    advs.push(a);
+            // ---- phase 0: every client reports (advert or drop)
+            let mut advs = Vec::new();
+            for _ in 0..cfg.n {
+                match rx_up.recv().map_err(|_| anyhow!("client channel closed"))? {
+                    Up::Adv(a) => {
+                        stats.record(0, Dir::Up, a.id, a.size_bytes());
+                        advs.push(a);
+                    }
+                    Up::Dropped(id, step) => log::trace!("client {id} dropped at step {step}"),
+                    Up::Failed(id, step, e) => log::debug!("client {id} failed step {step}: {e}"),
+                    _ => return Err(anyhow!("protocol order violation in phase 0")),
                 }
-                Up::Dropped(id, step) => log::trace!("client {id} dropped at step {step}"),
-                Up::Failed(id, step, e) => log::debug!("client {id} failed step {step}: {e}"),
-                _ => return Err(anyhow!("protocol order violation in phase 0")),
             }
-        }
-        let bundles = server.step0_route_keys(advs)?;
-        let expect1 = bundles.len();
-        for (id, b) in bundles {
-            stats.record(0, Dir::Down, id, b.size_bytes());
-            let _ = to_clients[&id].send(Down::Bundle(b));
-        }
+            // deterministic drain order regardless of thread scheduling
+            advs.sort_by_key(|a| a.id);
+            let bundles = server.step0_route_keys(advs)?;
+            let expect1 = bundles.len();
+            for (id, b) in bundles {
+                stats.record(0, Dir::Down, id, b.size_bytes());
+                let _ = to_clients[&id].send(Down::Bundle(b));
+            }
 
-        // ---- phase 1
-        let mut uploads = Vec::new();
-        for _ in 0..expect1 {
-            match rx_up.recv()? {
-                Up::Shares(u) => {
-                    stats.record(1, Dir::Up, u.from, u.size_bytes());
-                    uploads.push(u);
+            // ---- phase 1
+            let mut uploads = Vec::new();
+            for _ in 0..expect1 {
+                match rx_up.recv()? {
+                    Up::Shares(u) => {
+                        stats.record(1, Dir::Up, u.from, u.size_bytes());
+                        uploads.push(u);
+                    }
+                    Up::Dropped(id, step) => log::trace!("client {id} dropped at step {step}"),
+                    Up::Failed(id, step, e) => {
+                        log::debug!("client {id} withdrew step {step}: {e}")
+                    }
+                    _ => return Err(anyhow!("protocol order violation in phase 1")),
                 }
-                Up::Dropped(id, step) => log::trace!("client {id} dropped at step {step}"),
-                Up::Failed(id, step, e) => log::debug!("client {id} withdrew step {step}: {e}"),
-                _ => return Err(anyhow!("protocol order violation in phase 1")),
             }
-        }
-        // deterministic collection order regardless of thread scheduling
-        uploads.sort_by_key(|u| u.from);
-        let deliveries = server.step1_route_shares(uploads)?;
-        let expect2 = deliveries.len();
-        for (id, d) in deliveries {
-            stats.record(1, Dir::Down, id, d.size_bytes());
-            let _ = to_clients[&id].send(Down::Delivery(d));
-        }
+            uploads.sort_by_key(|u| u.from);
+            let deliveries = server.step1_route_shares(uploads)?;
+            let expect2 = deliveries.len();
+            for (id, d) in deliveries {
+                stats.record(1, Dir::Down, id, d.size_bytes());
+                let _ = to_clients[&id].send(Down::Delivery(d));
+            }
 
-        // ---- phase 2
-        let mut masked = Vec::new();
-        for _ in 0..expect2 {
-            match rx_up.recv()? {
-                Up::Masked(m) => {
-                    stats.record(2, Dir::Up, m.id, m.size_bytes());
-                    masked.push(m);
+            // ---- phase 2
+            let mut masked = Vec::new();
+            for _ in 0..expect2 {
+                match rx_up.recv()? {
+                    Up::Masked(m) => {
+                        stats.record(2, Dir::Up, m.id, m.size_bytes());
+                        masked.push(m);
+                    }
+                    Up::Dropped(id, step) => log::trace!("client {id} dropped at step {step}"),
+                    Up::Failed(id, step, e) => log::debug!("client {id} failed step {step}: {e}"),
+                    _ => return Err(anyhow!("protocol order violation in phase 2")),
                 }
-                Up::Dropped(id, step) => log::trace!("client {id} dropped at step {step}"),
-                Up::Failed(id, step, e) => log::debug!("client {id} failed step {step}: {e}"),
-                _ => return Err(anyhow!("protocol order violation in phase 2")),
             }
-        }
-        masked.sort_by_key(|m| m.id);
-        let announce = server.step2_collect_masked(masked)?;
-        let expect3 = announce.v3.len();
-        for &id in &announce.v3 {
-            stats.record(2, Dir::Down, id, announce.size_bytes());
-            let _ = to_clients[&id].send(Down::Announce(announce.clone()));
-        }
+            masked.sort_by_key(|m| m.id);
+            let announce = server.step2_collect_masked(masked)?;
+            let expect3 = announce.v3.len();
+            for &id in &announce.v3 {
+                stats.record(2, Dir::Down, id, announce.size_bytes());
+                let _ = to_clients[&id].send(Down::Announce(announce.clone()));
+            }
 
-        // ---- phase 3
-        let mut responses = Vec::new();
-        for _ in 0..expect3 {
-            match rx_up.recv()? {
-                Up::Unmask(u) => {
-                    stats.record(3, Dir::Up, u.from, u.size_bytes());
-                    responses.push(u);
+            // ---- phase 3
+            let mut responses = Vec::new();
+            for _ in 0..expect3 {
+                match rx_up.recv()? {
+                    Up::Unmask(u) => {
+                        stats.record(3, Dir::Up, u.from, u.size_bytes());
+                        responses.push(u);
+                    }
+                    Up::Dropped(id, step) => log::trace!("client {id} dropped at step {step}"),
+                    Up::Failed(id, step, e) => log::debug!("client {id} failed step {step}: {e}"),
+                    _ => return Err(anyhow!("protocol order violation in phase 3")),
                 }
-                Up::Dropped(id, step) => log::trace!("client {id} dropped at step {step}"),
-                Up::Failed(id, step, e) => log::debug!("client {id} failed step {step}: {e}"),
-                _ => return Err(anyhow!("protocol order violation in phase 3")),
             }
-        }
-        responses.sort_by_key(|r| r.from);
-        let RoundOutput { sum, reliable, sets } = server.finalize(responses)?;
+            responses.sort_by_key(|r| r.from);
+            let RoundOutput { sum, reliable, sets } = server.finalize(responses)?;
+            Ok(CoordRoundResult { sum, reliable, sets, stats })
+        })();
+
+        // Unblock every worker that is still waiting for its next phase
+        // input: Finish fails the worker's expected-message pattern match,
+        // so it exits; workers that already returned just drop the send.
         for tx in to_clients.values() {
             let _ = tx.send(Down::Finish);
         }
-        Ok(CoordRoundResult { sum, reliable, sets, stats })
+        result
     })
 }
 
@@ -288,6 +303,38 @@ mod tests {
             }
         }
         assert_eq!(r.sum.unwrap(), expect);
+    }
+
+    #[test]
+    fn aborted_round_terminates_and_errors() {
+        // every client dropping at step 0 leaves |V1| = 0 < t: the server
+        // aborts mid-protocol; the call must return Err rather than
+        // deadlock joining workers that never got their phase input
+        let n = 6;
+        let cfg = ProtocolConfig {
+            dropout: DropoutModel::Targeted {
+                per_step: [(0..n).collect(), vec![], vec![], vec![]],
+            },
+            ..ProtocolConfig::new(n, 3, 4, Topology::Complete, 3)
+        };
+        let m = models(n, 4, 3);
+        assert!(run_round_threaded(&cfg, &m).is_err());
+    }
+
+    #[test]
+    fn abort_after_step1_terminates_and_errors() {
+        // all clients past V1 drop at step 2 → |V3| = 0 < t: abort happens
+        // after workers have consumed one phase input — the late-phase
+        // unblocking path
+        let n = 5;
+        let cfg = ProtocolConfig {
+            dropout: DropoutModel::Targeted {
+                per_step: [vec![], vec![], (0..n).collect(), vec![]],
+            },
+            ..ProtocolConfig::new(n, 2, 4, Topology::Complete, 4)
+        };
+        let m = models(n, 4, 4);
+        assert!(run_round_threaded(&cfg, &m).is_err());
     }
 
     #[test]

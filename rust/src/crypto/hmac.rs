@@ -67,20 +67,35 @@ mod tests {
     }
 
     #[test]
-    fn cross_check_hmac_crate() {
-        use hmac::{Hmac, Mac};
-        type H = Hmac<sha2::Sha256>;
-        let mut rng = crate::util::rng::Rng::new(0xFEED);
-        for (klen, mlen) in [(0usize, 0usize), (16, 100), (64, 64), (65, 1), (200, 1000)] {
-            let mut key = vec![0u8; klen];
-            let mut msg = vec![0u8; mlen];
-            rng.fill_bytes(&mut key);
-            rng.fill_bytes(&mut msg);
-            let ours = hmac_sha256(&key, &msg);
-            let mut mac = H::new_from_slice(&key).unwrap();
-            mac.update(&msg);
-            let theirs: [u8; 32] = mac.finalize().into_bytes().into();
-            assert_eq!(ours, theirs, "klen={klen} mlen={mlen}");
-        }
+    fn rfc4231_case3_repeated_bytes() {
+        let key = [0xaa; 20];
+        let out = hmac_sha256(&key, &[0xdd; 50]);
+        assert_eq!(
+            hex::encode(&out),
+            "773ea91e36800e46854db8ebd09181a72959098b3ef8c122d9635514ced565fe"
+        );
+    }
+
+    #[test]
+    fn rfc4231_case4_25_byte_key() {
+        let key: Vec<u8> = (1..=25).collect();
+        let out = hmac_sha256(&key, &[0xcd; 50]);
+        assert_eq!(
+            hex::encode(&out),
+            "82558a389a443c0ea4cc819899f2083a85f0faa3e578f8077a2e3ff46729665b"
+        );
+    }
+
+    #[test]
+    fn rfc4231_case7_long_key_long_data() {
+        let key = [0xaa; 131];
+        let msg = b"This is a test using a larger than block-size key and a \
+larger than block-size data. The key needs to be hashed before being used \
+by the HMAC algorithm.";
+        let out = hmac_sha256(&key, msg);
+        assert_eq!(
+            hex::encode(&out),
+            "9b09ffa71b942fcb27635fbcd5b0e944bfdc63644f0713938a7f51535c3a35e2"
+        );
     }
 }

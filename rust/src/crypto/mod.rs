@@ -13,8 +13,10 @@
 //! 4. **t-out-of-n secret sharing** — lives in [`crate::shamir`] over
 //!    GF(2^16) (supports n up to 65534, needed for the n=1000 experiments).
 //!
-//! Every primitive is validated against RFC/NIST test vectors, and SHA-256 /
-//! HMAC additionally against the RustCrypto crates (dev-dependencies only).
+//! Every primitive is validated against RFC/NIST test vectors, both in unit
+//! tests here and through the public API in `rust/tests/crypto_vectors.rs`
+//! (the golden-vector suite), keeping the crate free of external crypto
+//! dependencies.
 
 pub mod aead;
 pub mod chacha20;

@@ -182,15 +182,28 @@ mod tests {
     }
 
     #[test]
-    fn cross_check_sha2_crate() {
-        use sha2::Digest;
-        let mut rng = crate::util::rng::Rng::new(0xC0FFEE);
-        for len in [0usize, 1, 31, 32, 63, 64, 65, 127, 1000, 4096] {
-            let mut data = vec![0u8; len];
-            rng.fill_bytes(&mut data);
-            let ours = sha256(&data);
-            let theirs: [u8; 32] = sha2::Sha256::digest(&data).into();
-            assert_eq!(ours, theirs, "len={len}");
+    fn fips_180_4_two_block_message() {
+        // 896-bit NIST long-message example.
+        assert_eq!(
+            hex::encode(&sha256(
+                b"abcdefghbcdefghicdefghijdefghijkefghijklfghijklmghijklmn\
+hijklmnoijklmnopjklmnopqklmnopqrlmnopqrsmnopqrstnopqrstu"
+            )),
+            "cf5b16a778af8380036ce59e7b0492370b249b11e8f07a51afac45037afee9d1"
+        );
+    }
+
+    #[test]
+    fn padding_boundaries() {
+        // message lengths straddling the 55/56-byte padding boundary and the
+        // 64-byte block boundary must all agree with incremental hashing
+        for len in [55usize, 56, 57, 63, 64, 65, 119, 120, 128] {
+            let data = vec![0x61u8; len];
+            let mut h = Sha256::new();
+            for b in &data {
+                h.update(std::slice::from_ref(b));
+            }
+            assert_eq!(h.finalize(), sha256(&data), "len={len}");
         }
     }
 }

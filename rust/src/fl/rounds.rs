@@ -77,6 +77,75 @@ impl FlHistory {
     }
 }
 
+/// Outcome of one secure-aggregation step over f32 updates.
+#[derive(Debug, Clone)]
+pub struct SecureMeanOutcome {
+    /// Dequantized mean over V3, when the round was reliable.
+    pub mean: Option<Vec<f32>>,
+    pub reliable: bool,
+    /// Traffic charged to the round; `None` if the protocol aborted before
+    /// any accounting (|V_k| < t).
+    pub stats: Option<NetStats>,
+    /// |V3| — the clients whose updates entered the mean.
+    pub survivors: usize,
+    /// The abort error when the protocol gave up mid-round; callers log it
+    /// with their round context.
+    pub abort: Option<String>,
+}
+
+impl SecureMeanOutcome {
+    /// Round bookkeeping shared by every FL loop: log an abort with its
+    /// round number, merge this round's traffic into `total`, and return
+    /// the (bytes_up, bytes_down) charged.
+    pub fn charge(&self, round: usize, total: &mut NetStats) -> (u64, u64) {
+        if let Some(e) = &self.abort {
+            log::warn!("round {round}: protocol aborted: {e}");
+        }
+        match &self.stats {
+            Some(stats) => {
+                total.merge(stats);
+                (stats.bytes_up.iter().sum(), stats.bytes_down.iter().sum())
+            }
+            None => (0, 0),
+        }
+    }
+}
+
+/// Quantize the updates, run one secure round, and decode the V3 mean —
+/// the Secure arm of [`run_fl_mlp`], shared with scenario campaigns
+/// ([`run_fl_scenario`]).
+pub fn secure_mean(locals: &[Vec<f32>], q: &Quantizer, pcfg: &ProtocolConfig) -> SecureMeanOutcome {
+    let models: Vec<Vec<u64>> = locals.iter().map(|l| q.quantize(l)).collect();
+    match run_round(pcfg, &models) {
+        Ok(RoundResult { sum: Some(sum), sets, stats, .. }) => {
+            let denom = sets.v3.len().max(1) as f64;
+            let mean: Vec<f32> =
+                q.dequantize(&sum).iter().map(|v| (v / denom) as f32).collect();
+            SecureMeanOutcome {
+                mean: Some(mean),
+                reliable: true,
+                stats: Some(stats),
+                survivors: sets.v3.len(),
+                abort: None,
+            }
+        }
+        Ok(RoundResult { sum: None, sets, stats, .. }) => SecureMeanOutcome {
+            mean: None,
+            reliable: false,
+            stats: Some(stats),
+            survivors: sets.v3.len(),
+            abort: None,
+        },
+        Err(e) => SecureMeanOutcome {
+            mean: None,
+            reliable: false,
+            stats: None,
+            survivors: 0,
+            abort: Some(e.to_string()),
+        },
+    }
+}
+
 /// Test-set accuracy using the fixed-batch eval executable.
 pub fn eval_accuracy(mlp: &MlpRuntime, params: &MlpParams, test: &Dataset) -> Result<f64> {
     let b = mlp.dims.batch;
@@ -175,7 +244,6 @@ pub fn run_fl_mlp(
             }
             Aggregation::Secure { topology, t_override, mask_bits, dropout } => {
                 let q = Quantizer::for_sum_of(*mask_bits, cfg.clip, k);
-                let models: Vec<Vec<u64>> = locals.iter().map(|l| q.quantize(l)).collect();
                 let t = t_override.unwrap_or_else(|| match topology {
                     Topology::Complete => k / 2 + 1,
                     Topology::ErdosRenyi { p } => t_rule(k, *p).min(k),
@@ -191,27 +259,13 @@ pub fn run_fl_mlp(
                     dropout: dropout.clone(),
                     seed: cfg.seed ^ (round as u64).wrapping_mul(0x9E3779B97F4A7C15),
                 };
-                match run_round(&pcfg, &models) {
-                    Ok(RoundResult { sum: Some(sum), sets, stats, .. }) => {
-                        let denom = sets.v3.len().max(1) as f64;
-                        let mean: Vec<f32> =
-                            q.dequantize(&sum).iter().map(|v| (v / denom) as f32).collect();
-                        let up = stats.bytes_up.iter().sum();
-                        let down = stats.bytes_down.iter().sum();
-                        history.total_stats.merge(&stats);
-                        (Some(MlpParams::from_flat(mlp.dims, &mean)?), true, up, down)
-                    }
-                    Ok(RoundResult { sum: None, stats, .. }) => {
-                        let up = stats.bytes_up.iter().sum();
-                        let down = stats.bytes_down.iter().sum();
-                        history.total_stats.merge(&stats);
-                        (None, false, up, down)
-                    }
-                    Err(e) => {
-                        log::warn!("round {round}: protocol aborted: {e}");
-                        (None, false, 0, 0)
-                    }
-                }
+                let outcome = secure_mean(&locals, &q, &pcfg);
+                let (up, down) = outcome.charge(round, &mut history.total_stats);
+                let new_global = match outcome.mean {
+                    Some(mean) => Some(MlpParams::from_flat(mlp.dims, &mean)?),
+                    None => None,
+                };
+                (new_global, outcome.reliable, up, down)
             }
         };
 
@@ -235,3 +289,182 @@ pub fn run_fl_mlp(
     }
     Ok(history)
 }
+
+/// Per-round record of a scenario-driven FL campaign.
+#[derive(Debug, Clone)]
+pub struct ScenarioRoundLog {
+    pub round: usize,
+    pub reliable: bool,
+    pub survivors: usize,
+    pub bytes_up: u64,
+    pub bytes_down: u64,
+}
+
+/// Outcome of [`run_fl_scenario`].
+#[derive(Debug, Clone)]
+pub struct ScenarioFlHistory {
+    /// The global model after the last round.
+    pub global: Vec<f32>,
+    pub logs: Vec<ScenarioRoundLog>,
+    pub total_stats: NetStats,
+}
+
+impl ScenarioFlHistory {
+    pub fn unreliable_rounds(&self) -> usize {
+        self.logs.iter().filter(|l| !l.reliable).count()
+    }
+}
+
+/// Drive a [`crate::sim::Scenario`] campaign through the FL update loop
+/// with a pluggable local-update oracle — no PJRT runtime required.
+///
+/// Per round, every client produces a `dim`-length f32 update via
+/// `local_update(round, client, &global, rng)`; the updates then take the
+/// full secure path (quantize → SA/CCESA round under the scenario's
+/// topology and compiled churn schedule → dequantized V3 mean) and the mean
+/// is *added* to the global model. An unreliable round leaves the global
+/// unchanged (§4.3.2). This is how scale experiments exercise multi-round
+/// training dynamics (churn-induced stalls, topology ramps) without the
+/// AOT-artifact dependency of [`run_fl_mlp`].
+pub fn run_fl_scenario<F>(sc: &crate::sim::Scenario, mut local_update: F) -> Result<ScenarioFlHistory>
+where
+    F: FnMut(usize, usize, &[f32], &mut Rng) -> Vec<f32>,
+{
+    let plans = sc.compile();
+    let q = Quantizer::for_sum_of(sc.mask_bits, sc.clip, sc.n);
+    let mut history = ScenarioFlHistory {
+        global: vec![0.0f32; sc.dim],
+        logs: Vec::with_capacity(plans.len()),
+        total_stats: NetStats::new(sc.n),
+    };
+    let mut rng = Rng::new(sc.seed ^ 0xF1);
+    for plan in &plans {
+        let locals: Vec<Vec<f32>> = (0..sc.n)
+            .map(|client| {
+                let mut crng = rng.split(0x10CA1 + client as u64);
+                let update = local_update(plan.round, client, &history.global, &mut crng);
+                assert_eq!(update.len(), sc.dim, "client {client} update dimension");
+                update
+            })
+            .collect();
+        let outcome = secure_mean(&locals, &q, &plan.cfg);
+        let (up, down) = outcome.charge(plan.round, &mut history.total_stats);
+        if let Some(mean) = &outcome.mean {
+            for (g, m) in history.global.iter_mut().zip(mean) {
+                *g += m;
+            }
+        }
+        history.logs.push(ScenarioRoundLog {
+            round: plan.round,
+            reliable: outcome.reliable,
+            survivors: outcome.survivors,
+            bytes_up: up,
+            bytes_down: down,
+        });
+    }
+    Ok(history)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{AdversarySpec, ChurnModel, Scenario, ThresholdRule, TopologySchedule};
+
+    fn scenario(n: usize, rounds: usize, churn: ChurnModel) -> Scenario {
+        Scenario {
+            name: "fl-scenario-test".to_string(),
+            n,
+            dim: 5,
+            mask_bits: 32,
+            rounds,
+            topology: TopologySchedule::Static(Topology::Complete),
+            churn,
+            adversary: AdversarySpec::Eavesdropper,
+            threshold: ThresholdRule::Fixed(n / 2 + 1),
+            clip: 4.0,
+            seed: 0xF15C,
+        }
+    }
+
+    #[test]
+    fn secure_mean_matches_plain_mean_within_quantization() {
+        let n = 8;
+        let dim = 12;
+        let mut rng = Rng::new(4);
+        let locals: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..dim).map(|_| rng.normal_f32(0.0, 0.5)).collect())
+            .collect();
+        let q = Quantizer::for_sum_of(32, 4.0, n);
+        let pcfg = ProtocolConfig::new(n, n / 2 + 1, dim, Topology::Complete, 77);
+        let outcome = secure_mean(&locals, &q, &pcfg);
+        assert!(outcome.reliable);
+        assert_eq!(outcome.survivors, n);
+        let mean = outcome.mean.unwrap();
+        let tol = (q.sum_error_bound(n) / n as f64 + 1e-6) as f32;
+        for d in 0..dim {
+            let plain: f32 = locals.iter().map(|l| l[d]).sum::<f32>() / n as f32;
+            assert!((mean[d] - plain).abs() <= tol, "dim {d}: {} vs {plain}", mean[d]);
+        }
+    }
+
+    #[test]
+    fn secure_mean_abort_reports_unreliable() {
+        let locals = vec![vec![0.5f32; 4]; 3];
+        let q = Quantizer::for_sum_of(32, 4.0, 3);
+        // t > n: |V1| < t already in step 0, so the server aborts
+        let pcfg = ProtocolConfig::new(3, 5, 4, Topology::Complete, 1);
+        let outcome = secure_mean(&locals, &q, &pcfg);
+        assert!(!outcome.reliable);
+        assert!(outcome.mean.is_none());
+        assert!(outcome.abort.is_some(), "abort reason must be surfaced");
+    }
+
+    #[test]
+    fn fl_scenario_accumulates_round_means() {
+        let n = 6;
+        let rounds = 4;
+        let sc = scenario(n, rounds, ChurnModel::None);
+        // client c always pushes a constant update of (c+1)/10
+        let hist = run_fl_scenario(&sc, |_, client, _, _| {
+            vec![(client as f32 + 1.0) / 10.0; 5]
+        })
+        .unwrap();
+        assert_eq!(hist.logs.len(), rounds);
+        assert_eq!(hist.unreliable_rounds(), 0);
+        let per_round_mean: f32 =
+            (1..=n).map(|c| c as f32 / 10.0).sum::<f32>() / n as f32;
+        let expect = per_round_mean * rounds as f32;
+        for g in &hist.global {
+            assert!((g - expect).abs() < 5e-3, "global {g} vs {expect}");
+        }
+        assert!(hist.total_stats.server_total() > 0);
+    }
+
+    #[test]
+    fn fl_scenario_unreliable_round_keeps_global() {
+        let n = 6;
+        // round 0 loses 4 of 6 clients at step 3 → |V4| = 2 < t → unreliable
+        let script = vec![
+            [vec![], vec![], vec![], vec![0, 1, 2, 3]],
+            [vec![], vec![], vec![], vec![]],
+        ];
+        let sc = scenario(n, 2, ChurnModel::Scripted { rounds: script });
+        let hist = run_fl_scenario(&sc, |_, _, _, _| vec![1.0f32; 5]).unwrap();
+        assert!(!hist.logs[0].reliable);
+        assert!(hist.logs[1].reliable);
+        // only the reliable round contributed its mean (= 1.0)
+        for g in &hist.global {
+            assert!((g - 1.0).abs() < 5e-3, "global {g}");
+        }
+    }
+
+    #[test]
+    fn fl_scenario_sees_running_global() {
+        let sc = scenario(5, 3, ChurnModel::None);
+        // update = current global's first element + 1, so the global grows
+        // 1, 2, 4 → the oracle genuinely observes the evolving model
+        let hist = run_fl_scenario(&sc, |_, _, global, _| vec![global[0] + 1.0; 5]).unwrap();
+        assert!((hist.global[0] - 7.0).abs() < 0.05, "global {}", hist.global[0]);
+    }
+}
+

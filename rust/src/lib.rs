@@ -27,4 +27,5 @@ pub mod net;
 pub mod protocol;
 pub mod runtime;
 pub mod shamir;
+pub mod sim;
 pub mod util;

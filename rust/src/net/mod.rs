@@ -16,7 +16,11 @@ pub enum Dir {
 }
 
 /// Byte/message counters for one protocol round.
-#[derive(Debug, Clone, Default)]
+///
+/// `PartialEq`/`Eq` support the differential harness (`sim::differential`),
+/// which asserts that the sync engine and the threaded coordinator charge
+/// bit-identical traffic for the same round.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct NetStats {
     /// bytes_up[step] — total client→server bytes in protocol step 0..=3
     pub bytes_up: [u64; 4],

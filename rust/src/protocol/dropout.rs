@@ -36,6 +36,26 @@ impl DropoutModel {
             DropoutModel::Targeted { per_step } => !per_step[step].contains(&client),
         }
     }
+
+    /// Pre-draw every (step, client) decision into an explicit per-step
+    /// schedule, step-major over all `n` clients.
+    ///
+    /// Replay hook for the `sim` subsystem: a stochastic model becomes a
+    /// [`DropoutModel::Targeted`] schedule that is rng-free, so the same
+    /// failures replay bit-identically through both the sync engine and the
+    /// threaded coordinator (whose lazy draw orders otherwise differ), and a
+    /// failing schedule can be shrunk and reported as data.
+    pub fn materialize(&self, n: usize, rng: &mut Rng) -> [Vec<ClientId>; 4] {
+        let mut per_step: [Vec<ClientId>; 4] = std::array::from_fn(|_| Vec::new());
+        for (step, drops) in per_step.iter_mut().enumerate() {
+            for client in 0..n {
+                if !self.survives(step, client, rng) {
+                    drops.push(client);
+                }
+            }
+        }
+        per_step
+    }
 }
 
 #[cfg(test)]
@@ -66,6 +86,29 @@ mod tests {
         };
         let survive_all = (1.0 - q).powi(4);
         assert!((survive_all - (1.0 - q_total)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn materialize_matches_model() {
+        // Targeted materializes to itself; Iid materializes to the exact
+        // decisions an identically-seeded rng would draw in the same order.
+        let t = DropoutModel::Targeted { per_step: [vec![1], vec![], vec![2, 3], vec![]] };
+        let m = t.materialize(5, &mut Rng::new(0));
+        assert_eq!(m, [vec![1], vec![], vec![2, 3], vec![]]);
+
+        let iid = DropoutModel::Iid { q: 0.3 };
+        let sched = iid.materialize(50, &mut Rng::new(9));
+        let mut rng = Rng::new(9);
+        for step in 0..4 {
+            for client in 0..50 {
+                let survived = iid.survives(step, client, &mut rng);
+                assert_eq!(survived, !sched[step].contains(&client), "step={step} c={client}");
+            }
+        }
+        assert!(sched.iter().any(|s| !s.is_empty()), "q=0.3 must drop someone");
+
+        let none = DropoutModel::None.materialize(10, &mut Rng::new(1));
+        assert!(none.iter().all(|s| s.is_empty()));
     }
 
     #[test]

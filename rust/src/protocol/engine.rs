@@ -42,7 +42,7 @@ pub fn run_round(cfg: &ProtocolConfig, models: &[Vec<u64>]) -> Result<RoundResul
         assert_eq!(m.len(), cfg.dim, "client {i} model dimension");
     }
     let mut rng = Rng::new(cfg.seed);
-    let graph = cfg.topology.build(cfg.n, &mut rng);
+    let graph = cfg.build_graph_with(&mut rng);
     let mut dropout_rng = rng.split(0xD20);
 
     let mut clients: Vec<Client> = (0..cfg.n)

@@ -89,6 +89,22 @@ impl ProtocolConfig {
             seed,
         }
     }
+
+    /// Materialize the assignment graph from an explicit RNG — the single
+    /// construction point shared by the sync engine and the threaded
+    /// coordinator, so the two drivers can never diverge on topology.
+    pub fn build_graph_with(&self, rng: &mut crate::util::rng::Rng) -> Graph {
+        self.topology.build(self.n, rng)
+    }
+
+    /// Replay helper: the exact graph a round under this config runs on.
+    /// Both drivers derive their graph from the first draws of
+    /// `Rng::new(seed)`, so external observers (the `sim` scenario compiler,
+    /// adaptive churn models, shrinker reports) can reconstruct it without
+    /// running the round.
+    pub fn build_graph(&self) -> Graph {
+        self.build_graph_with(&mut crate::util::rng::Rng::new(self.seed))
+    }
 }
 
 /// The surviving client sets after each step (paper notation V1 ⊇ … ⊇ V4).

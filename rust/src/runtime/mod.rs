@@ -9,6 +9,23 @@
 pub mod mlp;
 pub mod softreg;
 
+// The `xla::` paths below resolve to the real PJRT bindings only when the
+// `xla-runtime` feature is enabled (the `xla` crate dependency must then be
+// added to Cargo.toml); the hermetic default build routes them to the
+// in-tree stub, whose client constructor reports the runtime unavailable.
+#[cfg(not(feature = "xla-runtime"))]
+#[path = "xla_stub.rs"]
+pub mod xla;
+
+// Fail fast with instructions instead of a wall of unresolved `xla::` paths
+// when the feature is flipped on without wiring up the dependency.
+#[cfg(feature = "xla-runtime")]
+compile_error!(
+    "the `xla-runtime` feature needs the real PJRT bindings: add the `xla` \
+     crate to rust/Cargo.toml's [dependencies] and delete this guard \
+     (runtime/mod.rs); the default build uses the in-tree stub instead"
+);
+
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Context, Result};
 use std::path::{Path, PathBuf};

@@ -1,0 +1,229 @@
+//! Hermetic stand-in for the external `xla` (PJRT) crate.
+//!
+//! The default build must work in environments without the XLA C library or
+//! its Rust bindings, so `runtime` resolves its `xla::` paths to this module
+//! unless the `xla-runtime` feature is enabled (see `runtime/mod.rs`).
+//!
+//! [`Literal`] is fully functional — it is plain host memory, and the
+//! `Input`/extraction plumbing in `runtime` is unit-tested against it.
+//! Everything that would need a real PJRT client ([`PjRtClient::cpu`],
+//! compilation, execution) returns [`XlaError::Unavailable`], which callers
+//! surface as "artifacts runtime unavailable" and tests treat as a skip.
+
+use thiserror::Error;
+
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum XlaError {
+    #[error("PJRT runtime unavailable: {0} (rebuild with `--features xla-runtime` and the real `xla` crate)")]
+    Unavailable(&'static str),
+    #[error("cannot reshape {count} elements to {dims:?}")]
+    Shape { count: usize, dims: Vec<i64> },
+    #[error("literal element type mismatch")]
+    ElementType,
+}
+
+/// Typed storage behind a [`Literal`].
+#[derive(Debug, Clone)]
+pub enum LiteralData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+}
+
+/// Element types a [`Literal`] can hold.
+pub trait Element: Copy {
+    fn into_data(v: Vec<Self>) -> LiteralData;
+    fn from_data(d: &LiteralData) -> Option<Vec<Self>>;
+}
+
+impl Element for f32 {
+    fn into_data(v: Vec<Self>) -> LiteralData {
+        LiteralData::F32(v)
+    }
+    fn from_data(d: &LiteralData) -> Option<Vec<Self>> {
+        match d {
+            LiteralData::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl Element for i32 {
+    fn into_data(v: Vec<Self>) -> LiteralData {
+        LiteralData::I32(v)
+    }
+    fn from_data(d: &LiteralData) -> Option<Vec<Self>> {
+        match d {
+            LiteralData::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl Element for u32 {
+    fn into_data(v: Vec<Self>) -> LiteralData {
+        LiteralData::U32(v)
+    }
+    fn from_data(d: &LiteralData) -> Option<Vec<Self>> {
+        match d {
+            LiteralData::U32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+/// Host-memory literal mirroring `xla::Literal`'s API surface used by
+/// `runtime`.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data: LiteralData,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: Element>(data: &[T]) -> Literal {
+        let n = data.len() as i64;
+        Literal { data: T::into_data(data.to_vec()), dims: vec![n] }
+    }
+
+    /// Rank-0 f32 literal.
+    pub fn scalar(v: f32) -> Literal {
+        Literal { data: LiteralData::F32(vec![v]), dims: Vec::new() }
+    }
+
+    /// Reinterpret the element buffer under new dimensions. Every dimension
+    /// must be non-negative and their product must equal the element count
+    /// (overflow-checked), mirroring real XLA's validation.
+    pub fn reshape(self, dims: &[i64]) -> Result<Literal, XlaError> {
+        let count = self.element_count();
+        let want = dims.iter().try_fold(1i64, |acc, &d| {
+            if d < 0 {
+                None
+            } else {
+                acc.checked_mul(d)
+            }
+        });
+        match want {
+            Some(w) if w as usize == count => {
+                Ok(Literal { data: self.data, dims: dims.to_vec() })
+            }
+            _ => Err(XlaError::Shape { count, dims: dims.to_vec() }),
+        }
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.data {
+            LiteralData::F32(v) => v.len(),
+            LiteralData::I32(v) => v.len(),
+            LiteralData::U32(v) => v.len(),
+        }
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Extract the elements, checking the stored type.
+    pub fn to_vec<T: Element>(&self) -> Result<Vec<T>, XlaError> {
+        T::from_data(&self.data).ok_or(XlaError::ElementType)
+    }
+
+    /// Decompose a tuple literal. The stub never produces tuples (they only
+    /// come out of executions, which need a real client).
+    pub fn to_tuple(self) -> Result<Vec<Literal>, XlaError> {
+        Err(XlaError::Unavailable("tuple literals come from PJRT executions"))
+    }
+}
+
+/// Parsed HLO module handle (inert in the stub).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, XlaError> {
+        Err(XlaError::Unavailable("HLO parsing needs the XLA library"))
+    }
+}
+
+/// Computation handle (inert in the stub).
+#[derive(Debug, Clone)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device buffer handle (inert in the stub).
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        Err(XlaError::Unavailable("no device buffers without a PJRT client"))
+    }
+}
+
+/// Compiled executable handle (inert in the stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[Literal]) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        Err(XlaError::Unavailable("execution needs the XLA library"))
+    }
+}
+
+/// PJRT client handle. [`PjRtClient::cpu`] always fails in the stub, so the
+/// inert handles above are unreachable in practice.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, XlaError> {
+        Err(XlaError::Unavailable("built without the `xla-runtime` feature"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
+        Err(XlaError::Unavailable("compilation needs the XLA library"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_round_trip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(l.element_count(), 4);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(r.to_vec::<i32>(), Err(XlaError::ElementType));
+        assert!(Literal::vec1(&[1u32, 2]).reshape(&[3]).is_err());
+        // negative dims must be rejected even when their product matches
+        assert!(Literal::vec1(&[1.0f32; 4]).reshape(&[-2, -2]).is_err());
+    }
+
+    #[test]
+    fn scalar_is_rank_zero() {
+        let s = Literal::scalar(7.5);
+        assert_eq!(s.element_count(), 1);
+        assert!(s.dims().is_empty());
+        assert_eq!(s.to_vec::<f32>().unwrap(), vec![7.5]);
+    }
+
+    #[test]
+    fn client_reports_unavailable() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("xla-runtime"));
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+    }
+}

@@ -1,0 +1,255 @@
+//! Multi-round campaign runner: drive a compiled [`Scenario`] through
+//! either round driver and aggregate what happened.
+//!
+//! The engine driver additionally scores each round's transcript with the
+//! Definition-2 eavesdropper attack and checks Theorem 1's predicate
+//! against the implementation — a campaign is simultaneously a reliability
+//! experiment (§4.3), a privacy experiment (§4.4) and a regression suite.
+
+use super::scenario::{RoundPlan, Scenario};
+use crate::coordinator::run_round_threaded;
+use crate::net::NetStats;
+use crate::protocol::adversary::{attack, Breach};
+use crate::protocol::engine::run_round;
+use crate::protocol::{ClientId, SurvivorSets};
+use anyhow::Result;
+
+/// Which round driver executes the campaign.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Driver {
+    /// The deterministic synchronous engine (`protocol::engine`).
+    Engine,
+    /// The threaded coordinator (one worker thread per client).
+    Coordinator,
+}
+
+/// Everything recorded about one campaign round.
+#[derive(Debug, Clone)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// The server aborted before finalize (|V_k| < t at some step).
+    pub aborted: bool,
+    pub reliable: bool,
+    pub sum: Option<Vec<u64>>,
+    pub sets: SurvivorSets,
+    pub stats: NetStats,
+    /// Engine driver only: whether Theorem 1's predicate agreed with the
+    /// implementation's reliability outcome.
+    pub theorem1_agrees: Option<bool>,
+    /// Engine driver only: partial-sum breaches the Definition-2
+    /// eavesdropper extracted from this round's transcript.
+    pub breaches: usize,
+    /// Engine driver only: honest clients whose individual model the
+    /// scenario's colluding set reads off a breached partial sum.
+    pub exposed_honest: usize,
+}
+
+impl RoundRecord {
+    fn aborted(round: usize, n: usize) -> RoundRecord {
+        RoundRecord {
+            round,
+            aborted: true,
+            reliable: false,
+            sum: None,
+            sets: SurvivorSets::default(),
+            stats: NetStats::new(n),
+            theorem1_agrees: None,
+            breaches: 0,
+            exposed_honest: 0,
+        }
+    }
+}
+
+/// Aggregated campaign outcome.
+#[derive(Debug, Clone)]
+pub struct CampaignReport {
+    pub scenario: String,
+    pub seed: u64,
+    pub driver: Driver,
+    pub records: Vec<RoundRecord>,
+    pub total_stats: NetStats,
+}
+
+impl CampaignReport {
+    pub fn rounds(&self) -> usize {
+        self.records.len()
+    }
+    pub fn reliable_rounds(&self) -> usize {
+        self.records.iter().filter(|r| r.reliable).count()
+    }
+    pub fn aborted_rounds(&self) -> usize {
+        self.records.iter().filter(|r| r.aborted).count()
+    }
+    pub fn breached_rounds(&self) -> usize {
+        self.records.iter().filter(|r| r.breaches > 0).count()
+    }
+    pub fn exposed_honest_total(&self) -> usize {
+        self.records.iter().map(|r| r.exposed_honest).sum()
+    }
+    /// Rounds where the implementation disagreed with Theorem 1 — any
+    /// nonzero value is a bug.
+    pub fn theorem1_violations(&self) -> usize {
+        self.records
+            .iter()
+            .filter(|r| r.theorem1_agrees == Some(false))
+            .count()
+    }
+    pub fn one_line(&self) -> String {
+        format!(
+            "{}: {} rounds, {} reliable, {} aborted, {} breached, {} exposed, {:.1} KiB through server",
+            self.scenario,
+            self.rounds(),
+            self.reliable_rounds(),
+            self.aborted_rounds(),
+            self.breached_rounds(),
+            self.exposed_honest_total(),
+            self.total_stats.server_total() as f64 / 1024.0,
+        )
+    }
+}
+
+/// How many breaches expose exactly one honest client to the colluders.
+fn exposed_honest(breaches: &[Breach], colluders: &[ClientId]) -> usize {
+    breaches
+        .iter()
+        .filter(|b| b.subset.iter().filter(|i| !colluders.contains(i)).count() == 1)
+        .count()
+}
+
+/// Run one pre-compiled round plan through the chosen driver.
+pub fn run_plan(
+    plan: &RoundPlan,
+    models: &[Vec<u64>],
+    driver: Driver,
+    colluders: &[ClientId],
+) -> RoundRecord {
+    match driver {
+        Driver::Engine => match run_round(&plan.cfg, models) {
+            Ok(r) => {
+                let breaches = attack(&r.transcript);
+                RoundRecord {
+                    round: plan.round,
+                    aborted: false,
+                    reliable: r.reliable,
+                    sum: r.sum,
+                    sets: r.sets,
+                    stats: r.stats,
+                    theorem1_agrees: Some(r.theorem1_holds == r.reliable),
+                    breaches: breaches.len(),
+                    exposed_honest: exposed_honest(&breaches, colluders),
+                }
+            }
+            Err(_) => RoundRecord::aborted(plan.round, plan.cfg.n),
+        },
+        Driver::Coordinator => match run_round_threaded(&plan.cfg, models) {
+            Ok(r) => RoundRecord {
+                round: plan.round,
+                aborted: false,
+                reliable: r.reliable,
+                sum: r.sum,
+                sets: r.sets,
+                stats: r.stats,
+                theorem1_agrees: None,
+                breaches: 0,
+                exposed_honest: 0,
+            },
+            Err(_) => RoundRecord::aborted(plan.round, plan.cfg.n),
+        },
+    }
+}
+
+/// Run a full scenario campaign through the chosen driver.
+pub fn run_campaign(sc: &Scenario, driver: Driver) -> Result<CampaignReport> {
+    let plans = sc.compile();
+    let colluders = sc.adversary.colluders();
+    let mut records = Vec::with_capacity(plans.len());
+    let mut total_stats = NetStats::new(sc.n);
+    for plan in &plans {
+        let models = sc.round_models(plan.round);
+        let record = run_plan(plan, &models, driver, colluders);
+        total_stats.merge(&record.stats);
+        records.push(record);
+    }
+    Ok(CampaignReport { scenario: sc.name.clone(), seed: sc.seed, driver, records, total_stats })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::churn::ChurnModel;
+    use super::super::scenario::{AdversarySpec, ThresholdRule, TopologySchedule};
+    use crate::protocol::Topology;
+
+    fn scenario(churn: ChurnModel, rounds: usize) -> Scenario {
+        Scenario {
+            name: "campaign-test".to_string(),
+            n: 10,
+            dim: 6,
+            mask_bits: 32,
+            rounds,
+            topology: TopologySchedule::Static(Topology::Complete),
+            churn,
+            adversary: AdversarySpec::Eavesdropper,
+            threshold: ThresholdRule::Fixed(4),
+            clip: 4.0,
+            seed: 0xCA3F,
+        }
+    }
+
+    #[test]
+    fn churn_free_campaign_is_fully_reliable() {
+        let sc = scenario(ChurnModel::None, 4);
+        let rep = run_campaign(&sc, Driver::Engine).unwrap();
+        assert_eq!(rep.rounds(), 4);
+        assert_eq!(rep.reliable_rounds(), 4);
+        assert_eq!(rep.aborted_rounds(), 0);
+        assert_eq!(rep.theorem1_violations(), 0);
+        assert!(rep.total_stats.server_total() > 0);
+        // every round's sum is the true V3 sum of that round's models
+        for rec in &rep.records {
+            let models = sc.round_models(rec.round);
+            let mut expect = vec![0u64; sc.dim];
+            for &i in &rec.sets.v3 {
+                for (a, x) in expect.iter_mut().zip(&models[i]) {
+                    *a = a.wrapping_add(*x) & 0xFFFF_FFFF;
+                }
+            }
+            assert_eq!(rec.sum.as_ref().unwrap(), &expect, "round {}", rec.round);
+        }
+    }
+
+    #[test]
+    fn whole_cohort_churn_aborts_not_panics() {
+        let script = vec![[(0..10).collect::<Vec<_>>(), vec![], vec![], vec![]]];
+        let sc = scenario(ChurnModel::Scripted { rounds: script }, 2);
+        let rep = run_campaign(&sc, Driver::Engine).unwrap();
+        assert!(rep.records[0].aborted);
+        assert!(!rep.records[1].aborted, "round 2 is failure-free and recovers");
+        assert_eq!(rep.aborted_rounds(), 1);
+    }
+
+    #[test]
+    fn coordinator_driver_reports_same_shape() {
+        let sc = scenario(ChurnModel::TargetedAdaptive { count: 1, step: 2 }, 2);
+        let e = run_campaign(&sc, Driver::Engine).unwrap();
+        let c = run_campaign(&sc, Driver::Coordinator).unwrap();
+        assert_eq!(e.rounds(), c.rounds());
+        for (re, rc) in e.records.iter().zip(&c.records) {
+            assert_eq!(re.sum, rc.sum, "round {}", re.round);
+            assert_eq!(re.sets, rc.sets, "round {}", re.round);
+            assert_eq!(re.stats, rc.stats, "round {}", re.round);
+        }
+    }
+
+    #[test]
+    fn exposed_honest_counts_singletons() {
+        let b = |subset: Vec<usize>| Breach { subset, partial_sum: vec![] };
+        let breaches = vec![b(vec![0, 1, 2]), b(vec![3, 4]), b(vec![5])];
+        // colluders {1, 2, 4}: first breach leaves honest {0} → exposed;
+        // second leaves honest {3} → exposed; third leaves honest {5} →
+        // exposed (a singleton component is public anyway)
+        assert_eq!(exposed_honest(&breaches, &[1, 2, 4]), 3);
+        // no colluders: only the singleton component exposes a model
+        assert_eq!(exposed_honest(&breaches, &[]), 1);
+    }
+}

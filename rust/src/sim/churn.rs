@@ -1,0 +1,209 @@
+//! Multi-round churn models, beyond the per-step [`DropoutModel`].
+//!
+//! The protocol layer only understands one round of per-step failures; real
+//! deployments churn across rounds in structured ways — flash crowds
+//! leaving, rack outages, adversaries picking off hubs. Each model here
+//! *compiles* to one explicit per-step schedule per round (consumed as
+//! [`DropoutModel::Targeted`]), which buys two properties at once:
+//!
+//! 1. **driver equivalence** — targeted schedules are rng-free, so the sync
+//!    engine and the threaded coordinator (whose lazy draw orders differ)
+//!    see bit-identical failures; the differential harness depends on this;
+//! 2. **replayability** — a compiled schedule is plain data: the shrinker
+//!    can minimize it and a report can quote it verbatim.
+//!
+//! [`DropoutModel`]: crate::protocol::dropout::DropoutModel
+
+use crate::graph::Graph;
+use crate::protocol::ClientId;
+use crate::util::rng::Rng;
+
+/// Per-round client-failure process for a scenario campaign.
+#[derive(Debug, Clone)]
+pub enum ChurnModel {
+    /// No failures.
+    None,
+    /// Every client independently drops with probability `q` at each of the
+    /// four protocol steps of every round (the paper's §4.3 model, extended
+    /// across rounds).
+    Iid { q: f64 },
+    /// Two-state Markov weather: each round is calm or stormy. A calm round
+    /// becomes stormy with probability `p_enter`; a stormy round calms down
+    /// with probability `p_exit`. Clients drop i.i.d. per step with
+    /// `q_calm` or `q_storm` according to the round's state — dropout
+    /// arrives in correlated bursts, the regime Theorem 5's i.i.d. bound
+    /// does not cover.
+    Bursty { q_calm: f64, q_storm: f64, p_enter: f64, p_exit: f64 },
+    /// Clients are partitioned into `regions` contiguous blocks. Each round
+    /// every region fails wholesale with probability `q_region` (all its
+    /// members drop at step 0 — a rack or regional outage), and every
+    /// client additionally drops i.i.d. per step with `q_local`.
+    CorrelatedRegional { regions: usize, q_region: f64, q_local: f64 },
+    /// An adaptive adversary that each round knocks out the `count`
+    /// highest-degree clients of that round's assignment graph at protocol
+    /// step `step` (0..=3) — targeting hubs maximizes damage to Theorem 1's
+    /// informativeness predicate.
+    TargetedAdaptive { count: usize, step: usize },
+    /// Explicit per-round schedules (replay and shrinker output). Rounds
+    /// beyond the script run failure-free.
+    Scripted { rounds: Vec<[Vec<ClientId>; 4]> },
+}
+
+impl ChurnModel {
+    /// Compile the model into one explicit per-step dropout schedule per
+    /// round. `graphs[r]` is round r's assignment graph (only
+    /// [`ChurnModel::TargetedAdaptive`] inspects it). Deterministic in
+    /// `rng`; the number of rounds is `graphs.len()`.
+    pub fn compile(&self, n: usize, graphs: &[Graph], rng: &mut Rng) -> Vec<[Vec<ClientId>; 4]> {
+        let mut out = Vec::with_capacity(graphs.len());
+        let mut stormy = false;
+        for (round, graph) in graphs.iter().enumerate() {
+            let mut drops: [Vec<ClientId>; 4] = std::array::from_fn(|_| Vec::new());
+            match self {
+                ChurnModel::None => {}
+                ChurnModel::Iid { q } => {
+                    iid_drops(&mut drops, n, *q, rng);
+                }
+                ChurnModel::Bursty { q_calm, q_storm, p_enter, p_exit } => {
+                    stormy = if stormy {
+                        !rng.bernoulli(*p_exit)
+                    } else {
+                        rng.bernoulli(*p_enter)
+                    };
+                    iid_drops(&mut drops, n, if stormy { *q_storm } else { *q_calm }, rng);
+                }
+                ChurnModel::CorrelatedRegional { regions, q_region, q_local } => {
+                    let regions = (*regions).clamp(1, n.max(1));
+                    for r in 0..regions {
+                        if rng.bernoulli(*q_region) {
+                            drops[0].extend(r * n / regions..(r + 1) * n / regions);
+                        }
+                    }
+                    iid_drops(&mut drops, n, *q_local, rng);
+                }
+                ChurnModel::TargetedAdaptive { count, step } => {
+                    let step = (*step).min(3);
+                    let mut by_degree: Vec<ClientId> = (0..n).collect();
+                    // highest degree first; ties broken by id for determinism
+                    by_degree.sort_by_key(|&c| std::cmp::Reverse((graph.degree(c), c)));
+                    by_degree.truncate((*count).min(n));
+                    by_degree.sort_unstable();
+                    drops[step] = by_degree;
+                }
+                ChurnModel::Scripted { rounds } => {
+                    if let Some(s) = rounds.get(round) {
+                        drops = s.clone();
+                    }
+                }
+            }
+            out.push(drops);
+        }
+        out
+    }
+}
+
+/// Add i.i.d. per-step drops (duplicates against already-scheduled drops are
+/// harmless: `Targeted` only tests membership).
+fn iid_drops(drops: &mut [Vec<ClientId>; 4], n: usize, q: f64, rng: &mut Rng) {
+    for step_drops in drops.iter_mut() {
+        for client in 0..n {
+            if rng.bernoulli(q) {
+                step_drops.push(client);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn graphs(n: usize, rounds: usize) -> Vec<Graph> {
+        (0..rounds).map(|_| Graph::complete(n)).collect()
+    }
+
+    #[test]
+    fn none_compiles_empty() {
+        let g = graphs(10, 3);
+        let s = ChurnModel::None.compile(10, &g, &mut Rng::new(1));
+        assert_eq!(s.len(), 3);
+        assert!(s.iter().all(|round| round.iter().all(|step| step.is_empty())));
+    }
+
+    #[test]
+    fn compile_is_deterministic() {
+        let g = graphs(20, 4);
+        let m = ChurnModel::Bursty { q_calm: 0.02, q_storm: 0.3, p_enter: 0.5, p_exit: 0.5 };
+        let a = m.compile(20, &g, &mut Rng::new(7));
+        let b = m.compile(20, &g, &mut Rng::new(7));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn iid_rate_roughly_q() {
+        let rounds = 50;
+        let n = 40;
+        let g = graphs(n, rounds);
+        let s = ChurnModel::Iid { q: 0.2 }.compile(n, &g, &mut Rng::new(3));
+        let dropped: usize = s.iter().flat_map(|r| r.iter()).map(|d| d.len()).sum();
+        let total = (rounds * 4 * n) as f64;
+        assert!((dropped as f64 / total - 0.2).abs() < 0.02, "rate {}", dropped as f64 / total);
+    }
+
+    #[test]
+    fn bursty_has_calm_and_storm_rounds() {
+        let rounds = 60;
+        let n = 30;
+        let g = graphs(n, rounds);
+        let m = ChurnModel::Bursty { q_calm: 0.0, q_storm: 0.5, p_enter: 0.3, p_exit: 0.5 };
+        let s = m.compile(n, &g, &mut Rng::new(11));
+        let per_round: Vec<usize> =
+            s.iter().map(|r| r.iter().map(|d| d.len()).sum()).collect();
+        let calm = per_round.iter().filter(|&&d| d == 0).count();
+        let stormy = per_round.iter().filter(|&&d| d > n / 4).count();
+        assert!(calm > 0, "no calm rounds");
+        assert!(stormy > 0, "no stormy rounds");
+    }
+
+    #[test]
+    fn regional_outage_drops_contiguous_block() {
+        let n = 30;
+        let g = graphs(n, 200);
+        let m = ChurnModel::CorrelatedRegional { regions: 3, q_region: 0.2, q_local: 0.0 };
+        let s = m.compile(n, &g, &mut Rng::new(5));
+        let mut saw_outage = false;
+        for round in &s {
+            if round[0].is_empty() {
+                continue;
+            }
+            saw_outage = true;
+            // step-0 drops are whole 10-client blocks
+            assert_eq!(round[0].len() % 10, 0, "partial region {:?}", round[0]);
+            for chunk in round[0].chunks(10) {
+                assert!(chunk.windows(2).all(|w| w[1] == w[0] + 1), "gap in {chunk:?}");
+                assert_eq!(chunk[0] % 10, 0);
+            }
+        }
+        assert!(saw_outage, "q_region=0.2 over 200 rounds must fire");
+    }
+
+    #[test]
+    fn targeted_adaptive_hits_highest_degree() {
+        let n = 8;
+        let mut g = Graph::ring(n);
+        g.add_edge(0, 4); // 0 and 4 now have degree 3, everyone else 2
+        let m = ChurnModel::TargetedAdaptive { count: 2, step: 1 };
+        let s = m.compile(n, &[g], &mut Rng::new(1));
+        assert_eq!(s[0][1], vec![0, 4]);
+        assert!(s[0][0].is_empty() && s[0][2].is_empty() && s[0][3].is_empty());
+    }
+
+    #[test]
+    fn scripted_replays_and_pads() {
+        let script = vec![[vec![1], vec![], vec![2], vec![]]];
+        let m = ChurnModel::Scripted { rounds: script.clone() };
+        let s = m.compile(5, &graphs(5, 2), &mut Rng::new(1));
+        assert_eq!(s[0], script[0]);
+        assert!(s[1].iter().all(|d| d.is_empty()), "past the script: failure-free");
+    }
+}

@@ -1,0 +1,36 @@
+//! Scenario simulation subsystem: declarative multi-round campaigns,
+//! pluggable churn models, and the engine↔coordinator differential harness.
+//!
+//! The paper's claims (Theorems 1–6, the §5 experiments) are statements
+//! about what happens across *many* rounds under dropout, churn and
+//! collusion. This module makes those regimes first-class:
+//!
+//! * [`scenario`] — a [`Scenario`] spec (population, topology schedule,
+//!   churn, adversary, quantizer config, rounds) compiled into rng-free
+//!   [`scenario::RoundPlan`]s for exact replay;
+//! * [`churn`] — multi-round churn processes (i.i.d., bursty Markov,
+//!   correlated-regional outages, targeted-adaptive hub attacks, scripted)
+//!   compiled to explicit per-step schedules;
+//! * [`campaign`] — runs a scenario through either round driver, scoring
+//!   reliability, Theorem-1 agreement and eavesdropper/collusion privacy;
+//! * [`differential`] — asserts both drivers produce bit-identical sums,
+//!   survivor sets and [`crate::net::NetStats`] on randomized scenarios,
+//!   with a shrinker that minimizes failures to a reportable seed.
+//!
+//! Every future scale or performance PR validates against this substrate:
+//! change a driver, run the differential; add a churn regime, add a variant
+//! here and every harness picks it up.
+
+pub mod campaign;
+pub mod churn;
+pub mod differential;
+pub mod scenario;
+
+pub use campaign::{run_campaign, run_plan, CampaignReport, Driver, RoundRecord};
+pub use churn::ChurnModel;
+pub use differential::{
+    diff_scenario, run_differential, shrink, DifferentialReport, Failure, Mismatch,
+};
+pub use scenario::{
+    random_scenario, AdversarySpec, RoundPlan, Scenario, ThresholdRule, TopologySchedule,
+};

@@ -1,0 +1,347 @@
+//! Declarative scenario specs and their compilation into replayable round
+//! plans.
+//!
+//! A [`Scenario`] describes a whole campaign — population, per-round
+//! topology schedule, churn process, adversary, quantizer config, round
+//! count — as data. [`Scenario::compile`] pre-draws all stochastic choices
+//! into [`RoundPlan`]s whose dropout is an explicit
+//! [`DropoutModel::Targeted`] schedule, so the same plan replays
+//! bit-identically through `protocol::engine` and `coordinator`, and a
+//! failing scenario shrinks to a quotable seed (`sim::differential`).
+
+use super::churn::ChurnModel;
+use crate::analysis::bounds::t_rule;
+use crate::graph::Graph;
+use crate::protocol::dropout::DropoutModel;
+use crate::protocol::{ClientId, ProtocolConfig, Topology};
+use crate::util::rng::Rng;
+
+/// Which collusion the privacy scoring assumes.
+#[derive(Debug, Clone)]
+pub enum AdversarySpec {
+    /// The passive eavesdropper of Definition 2, alone.
+    Eavesdropper,
+    /// Eavesdropper whose operator additionally knows the plaintext inputs
+    /// of these clients: a breached partial sum over a subset whose honest
+    /// remainder is a single client exposes that client's model exactly.
+    Colluding(Vec<ClientId>),
+}
+
+impl AdversarySpec {
+    pub fn colluders(&self) -> &[ClientId] {
+        match self {
+            AdversarySpec::Eavesdropper => &[],
+            AdversarySpec::Colluding(ids) => ids,
+        }
+    }
+}
+
+/// How the secret-sharing threshold is chosen each round.
+#[derive(Debug, Clone)]
+pub enum ThresholdRule {
+    /// Use this t for every round.
+    Fixed(usize),
+    /// Per-topology design rule, mirroring `fl::rounds`: Remark 4's
+    /// `t_rule` for Erdős–Rényi, ⌊n/2⌋+1 for the complete graph, half the
+    /// degree plus one for Harary.
+    Auto,
+}
+
+/// Per-round assignment-graph schedule.
+#[derive(Debug, Clone)]
+pub enum TopologySchedule {
+    /// The same family every round.
+    Static(Topology),
+    /// Round-robin over the list (models between-round reconfiguration).
+    /// Must be non-empty.
+    Rotating(Vec<Topology>),
+    /// Erdős–Rényi with the connection probability ramping linearly:
+    /// round r uses p = clamp(p0 + r·dp, 0, 1) — densifying or sparsifying
+    /// deployments.
+    ErRamp { p0: f64, dp: f64 },
+}
+
+impl TopologySchedule {
+    pub fn topology_for(&self, round: usize) -> Topology {
+        match self {
+            TopologySchedule::Static(t) => t.clone(),
+            TopologySchedule::Rotating(ts) => {
+                assert!(!ts.is_empty(), "empty rotating topology schedule");
+                ts[round % ts.len()].clone()
+            }
+            TopologySchedule::ErRamp { p0, dp } => {
+                Topology::ErdosRenyi { p: (p0 + dp * round as f64).clamp(0.0, 1.0) }
+            }
+        }
+    }
+}
+
+/// A declarative multi-round campaign spec. Everything derives from `seed`.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub name: String,
+    /// Client population per round.
+    pub n: usize,
+    /// Model dimension.
+    pub dim: usize,
+    /// Aggregation domain width b (Z_{2^b}).
+    pub mask_bits: u32,
+    /// Number of aggregation rounds.
+    pub rounds: usize,
+    pub topology: TopologySchedule,
+    pub churn: ChurnModel,
+    pub adversary: AdversarySpec,
+    pub threshold: ThresholdRule,
+    /// Quantizer clip used when the campaign drives f32 updates through
+    /// `fl::rounds::run_fl_scenario` (protocol-level campaigns over u64
+    /// inputs ignore it).
+    pub clip: f32,
+    pub seed: u64,
+}
+
+/// One round, fully materialized: a config whose dropout is an explicit
+/// targeted schedule, plus the assignment graph that config builds —
+/// everything needed to replay or inspect the round without re-drawing
+/// randomness.
+#[derive(Debug, Clone)]
+pub struct RoundPlan {
+    pub round: usize,
+    pub cfg: ProtocolConfig,
+    pub graph: Graph,
+}
+
+impl Scenario {
+    /// Resolve the threshold for one round's topology.
+    pub fn resolve_t(&self, topo: &Topology) -> usize {
+        match &self.threshold {
+            ThresholdRule::Fixed(t) => *t,
+            ThresholdRule::Auto => match topo {
+                Topology::Complete => self.n / 2 + 1,
+                Topology::ErdosRenyi { p } => t_rule(self.n, *p).min(self.n),
+                Topology::Harary { k } => (k / 2 + 1).max(2),
+                Topology::Custom(_) => self.n / 2 + 1,
+            },
+        }
+    }
+
+    fn round_seed(&self, round: usize) -> u64 {
+        self.seed ^ (round as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+    }
+
+    /// Deterministic per-round client inputs: full-entropy words in
+    /// Z_{2^mask_bits}.
+    pub fn round_models(&self, round: usize) -> Vec<Vec<u64>> {
+        let modmask = if self.mask_bits == 64 {
+            u64::MAX
+        } else {
+            (1u64 << self.mask_bits) - 1
+        };
+        let mut rng = Rng::new(self.round_seed(round) ^ 0x0DE1);
+        (0..self.n)
+            .map(|_| (0..self.dim).map(|_| rng.next_u64() & modmask).collect())
+            .collect()
+    }
+
+    /// Compile into per-round plans. Stochastic churn is pre-drawn here
+    /// (graphs are built first so adaptive churn can see degrees), after
+    /// which every plan is rng-free data.
+    pub fn compile(&self) -> Vec<RoundPlan> {
+        let mut cfgs = Vec::with_capacity(self.rounds);
+        let mut graphs = Vec::with_capacity(self.rounds);
+        for round in 0..self.rounds {
+            let topo = self.topology.topology_for(round);
+            let t = self.resolve_t(&topo);
+            let cfg = ProtocolConfig {
+                n: self.n,
+                t,
+                mask_bits: self.mask_bits,
+                dim: self.dim,
+                topology: topo,
+                dropout: DropoutModel::None,
+                seed: self.round_seed(round),
+            };
+            graphs.push(cfg.build_graph());
+            cfgs.push(cfg);
+        }
+        let mut churn_rng = Rng::new(self.seed ^ 0xC4021);
+        let schedules = self.churn.compile(self.n, &graphs, &mut churn_rng);
+        cfgs.into_iter()
+            .zip(graphs)
+            .zip(schedules)
+            .enumerate()
+            .map(|(round, ((mut cfg, graph), per_step))| {
+                cfg.dropout = DropoutModel::Targeted { per_step };
+                RoundPlan { round, cfg, graph }
+            })
+            .collect()
+    }
+}
+
+/// Seeded random scenario for the differential harness: small populations
+/// (both drivers stay fast), mixed topology schedules, every churn model,
+/// occasional collusion, thresholds both sane and deliberately too high
+/// (aborts are an outcome the drivers must agree on too).
+pub fn random_scenario(seed: u64) -> Scenario {
+    let mut rng = Rng::new(seed ^ 0x5CEA_A210);
+    let n = 5 + rng.gen_range(9) as usize; // 5..=13
+    let dim = 1 + rng.gen_range(24) as usize; // 1..=24
+    let mask_bits = [16u32, 32, 32, 64][rng.gen_range(4) as usize];
+    let rounds = 1 + rng.gen_range(3) as usize; // 1..=3
+    let topology = match rng.gen_range(5) {
+        0 => TopologySchedule::Static(Topology::Complete),
+        1 => TopologySchedule::Static(Topology::ErdosRenyi { p: 0.5 + 0.5 * rng.next_f64() }),
+        2 => {
+            let k = 2 + rng.gen_range((n - 3) as u64) as usize; // 2..=n-2
+            TopologySchedule::Static(Topology::Harary { k })
+        }
+        3 => TopologySchedule::Rotating(vec![
+            Topology::Complete,
+            Topology::ErdosRenyi { p: 0.6 + 0.4 * rng.next_f64() },
+        ]),
+        _ => TopologySchedule::ErRamp { p0: 0.5 + 0.3 * rng.next_f64(), dp: 0.1 },
+    };
+    let churn = match rng.gen_range(5) {
+        0 => ChurnModel::None,
+        1 => ChurnModel::Iid { q: 0.08 * rng.next_f64() },
+        2 => ChurnModel::Bursty { q_calm: 0.02, q_storm: 0.25, p_enter: 0.4, p_exit: 0.5 },
+        3 => ChurnModel::CorrelatedRegional {
+            regions: 2 + rng.gen_range(2) as usize,
+            q_region: 0.15,
+            q_local: 0.02,
+        },
+        _ => ChurnModel::TargetedAdaptive {
+            count: 1 + rng.gen_range(2) as usize,
+            step: rng.gen_range(4) as usize,
+        },
+    };
+    let adversary = if rng.bernoulli(0.3) {
+        let count = (1 + rng.gen_range(2) as usize).min(n);
+        AdversarySpec::Colluding(rng.sample_indices(n, count))
+    } else {
+        AdversarySpec::Eavesdropper
+    };
+    let threshold = if rng.bernoulli(0.5) {
+        ThresholdRule::Fixed(2 + rng.gen_range((n / 2) as u64) as usize)
+    } else {
+        ThresholdRule::Auto
+    };
+    Scenario {
+        name: format!("random-{seed:#x}"),
+        n,
+        dim,
+        mask_bits,
+        rounds,
+        topology,
+        churn,
+        adversary,
+        threshold,
+        clip: 4.0,
+        seed,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> Scenario {
+        Scenario {
+            name: "base".to_string(),
+            n: 8,
+            dim: 4,
+            mask_bits: 32,
+            rounds: 3,
+            topology: TopologySchedule::Static(Topology::Complete),
+            churn: ChurnModel::Iid { q: 0.1 },
+            adversary: AdversarySpec::Eavesdropper,
+            threshold: ThresholdRule::Fixed(3),
+            clip: 4.0,
+            seed: 42,
+        }
+    }
+
+    #[test]
+    fn compile_is_deterministic_and_targeted() {
+        let sc = base();
+        let a = sc.compile();
+        let b = sc.compile();
+        assert_eq!(a.len(), 3);
+        for (pa, pb) in a.iter().zip(&b) {
+            assert_eq!(pa.graph, pb.graph);
+            assert_eq!(pa.cfg.seed, pb.cfg.seed);
+            let (DropoutModel::Targeted { per_step: sa }, DropoutModel::Targeted { per_step: sb }) =
+                (&pa.cfg.dropout, &pb.cfg.dropout)
+            else {
+                panic!("compiled dropout must be Targeted");
+            };
+            assert_eq!(sa, sb);
+        }
+        // different rounds get different seeds (graphs/models decorrelate)
+        assert_ne!(a[0].cfg.seed, a[1].cfg.seed);
+    }
+
+    #[test]
+    fn round_models_respect_mask_bits() {
+        let mut sc = base();
+        sc.mask_bits = 16;
+        let m = sc.round_models(0);
+        assert_eq!(m.len(), sc.n);
+        assert!(m.iter().flatten().all(|&x| x < (1 << 16)));
+        // deterministic and round-dependent
+        assert_eq!(sc.round_models(1), sc.round_models(1));
+        assert_ne!(sc.round_models(0), sc.round_models(1));
+    }
+
+    #[test]
+    fn topology_schedules_resolve() {
+        let rot = TopologySchedule::Rotating(vec![
+            Topology::Complete,
+            Topology::ErdosRenyi { p: 0.7 },
+        ]);
+        assert!(matches!(rot.topology_for(0), Topology::Complete));
+        assert!(matches!(rot.topology_for(1), Topology::ErdosRenyi { .. }));
+        assert!(matches!(rot.topology_for(2), Topology::Complete));
+
+        let ramp = TopologySchedule::ErRamp { p0: 0.9, dp: 0.2 };
+        let Topology::ErdosRenyi { p } = ramp.topology_for(3) else { panic!() };
+        assert!((p - 1.0).abs() < 1e-12, "ramp must clamp to 1, got {p}");
+    }
+
+    #[test]
+    fn auto_threshold_mirrors_fl_rules() {
+        let sc = Scenario { threshold: ThresholdRule::Auto, ..base() };
+        assert_eq!(sc.resolve_t(&Topology::Complete), sc.n / 2 + 1);
+        assert_eq!(sc.resolve_t(&Topology::Harary { k: 6 }), 4);
+        let t_er = sc.resolve_t(&Topology::ErdosRenyi { p: 0.8 });
+        assert!(t_er >= 2 && t_er <= sc.n);
+    }
+
+    #[test]
+    fn random_scenarios_are_deterministic_and_varied() {
+        for seed in 0..50u64 {
+            let a = random_scenario(seed);
+            let b = random_scenario(seed);
+            assert_eq!(format!("{a:?}"), format!("{b:?}"), "seed={seed}");
+            assert!((5..=13).contains(&a.n));
+            assert!((1..=3).contains(&a.rounds));
+            // every scenario must compile without panicking
+            let plans = a.compile();
+            assert_eq!(plans.len(), a.rounds);
+            for plan in &plans {
+                assert_eq!(plan.graph.n(), a.n);
+            }
+        }
+        // the space is actually sampled: at least two distinct churn kinds
+        let kinds: std::collections::BTreeSet<u8> = (0..50u64)
+            .map(|s| match random_scenario(s).churn {
+                ChurnModel::None => 0,
+                ChurnModel::Iid { .. } => 1,
+                ChurnModel::Bursty { .. } => 2,
+                ChurnModel::CorrelatedRegional { .. } => 3,
+                ChurnModel::TargetedAdaptive { .. } => 4,
+                ChurnModel::Scripted { .. } => 5,
+            })
+            .collect();
+        assert!(kinds.len() >= 4, "churn kinds seen: {kinds:?}");
+    }
+}

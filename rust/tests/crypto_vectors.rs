@@ -1,0 +1,301 @@
+//! Golden-vector suite for the hand-rolled crypto, through the public API.
+//!
+//! Unit tests inside each module already pin most primitives; this file is
+//! the integration-level contract: the exact byte-for-byte RFC/NIST vectors
+//! a re-implementation (or a perf rewrite of a hot path) must keep passing,
+//! with no access to crate internals.
+//!
+//! Sources: RFC 8439 (ChaCha20, Poly1305, AEAD), RFC 5869 (HKDF-SHA256),
+//! RFC 4231 (HMAC-SHA256), RFC 7748 (X25519), FIPS 180-4 (SHA-256).
+
+use ccesa::crypto::chacha20::ChaCha20;
+use ccesa::crypto::hkdf;
+use ccesa::crypto::hmac::hmac_sha256;
+use ccesa::crypto::poly1305::poly1305;
+use ccesa::crypto::sha256::{sha256, Sha256};
+use ccesa::crypto::x25519::{public_key, x25519, BASEPOINT};
+use ccesa::crypto::{aead, dh};
+use ccesa::util::hex;
+
+// ---------------------------------------------------------------- ChaCha20
+
+/// RFC 8439 §2.4.2: keystream encryption with counter = 1.
+#[test]
+fn chacha20_rfc8439_encryption() {
+    let key = hex::decode_array::<32>(
+        "000102030405060708090a0b0c0d0e0f101112131415161718191a1b1c1d1e1f",
+    )
+    .unwrap();
+    let nonce = hex::decode_array::<12>("000000000000004a00000000").unwrap();
+    let mut data = b"Ladies and Gentlemen of the class of '99: If I could offer you \
+only one tip for the future, sunscreen would be it."
+        .to_vec();
+    ChaCha20::new(&key, &nonce).apply_keystream(1, &mut data);
+    assert_eq!(
+        hex::encode(&data),
+        "6e2e359a2568f98041ba0728dd0d6981e97e7aec1d4360c20a27afccfd9fae0b\
+         f91b65c5524733ab8f593dabcd62b3571639d624e65152ab8f530c359f0861d8\
+         07ca0dbf500d6a6156a38e088a22b65e52bc514d16ccf806818ce91ab7793736\
+         5af90bbf74a35be6b40b8eedf2785e42874d"
+    );
+}
+
+/// RFC 8439 §2.3.2: the raw block function.
+#[test]
+fn chacha20_rfc8439_block() {
+    let key = hex::decode_array::<32>(
+        "000102030405060708090a0b0c0d0e0f101112131415161718191a1b1c1d1e1f",
+    )
+    .unwrap();
+    let nonce = hex::decode_array::<12>("000000090000004a00000000").unwrap();
+    let mut block = [0u8; 64];
+    ChaCha20::new(&key, &nonce).block(1, &mut block);
+    assert_eq!(
+        hex::encode(&block),
+        "10f1e7e4d13b5915500fdd1fa32071c4c7d1f4c733c068030422aa9ac3d46c4e\
+         d2826446079faa0914c2d705d98b02a2b5129cd1de164eb9cbd083e8a2503c4e"
+    );
+}
+
+// ---------------------------------------------------------------- Poly1305
+
+/// RFC 8439 §2.5.2.
+#[test]
+fn poly1305_rfc8439() {
+    let key = hex::decode_array::<32>(
+        "85d6be7857556d337f4452fe42d506a80103808afb0db2fd4abff6af4149f51b",
+    )
+    .unwrap();
+    let tag = poly1305(&key, b"Cryptographic Forum Research Group");
+    assert_eq!(hex::encode(&tag), "a8061dc1305136c6c22b8baf0c0127a9");
+}
+
+// ---------------------------------------------------------------- AEAD
+
+/// RFC 8439 §2.8.2: ChaCha20-Poly1305 seal, and open on the golden output.
+#[test]
+fn aead_rfc8439_seal_and_open() {
+    let key = hex::decode_array::<32>(
+        "808182838485868788898a8b8c8d8e8f909192939495969798999a9b9c9d9e9f",
+    )
+    .unwrap();
+    let nonce = hex::decode_array::<12>("070000004041424344454647").unwrap();
+    let aad = hex::decode("50515253c0c1c2c3c4c5c6c7").unwrap();
+    let pt = b"Ladies and Gentlemen of the class of '99: If I could offer you \
+only one tip for the future, sunscreen would be it.";
+    let sealed = aead::seal(&key, &nonce, &aad, pt);
+    assert_eq!(
+        hex::encode(&sealed),
+        "d31a8d34648e60db7b86afbc53ef7ec2a4aded51296e08fea9e2b5a736ee62d6\
+         3dbea45e8ca9671282fafb69da92728b1a71de0a9e060b2905d6a5b67ecd3b36\
+         92ddbd7f2d778b8c9803aee328091b58fab324e4fad675945585808b4831d7bc\
+         3ff4def08e4b7a9de576d26586cec64b6116\
+         1ae10b594f09e26a7e902ecbd0600691"
+    );
+    assert_eq!(aead::open(&key, &nonce, &aad, &sealed).unwrap(), pt.to_vec());
+    // a flipped tag bit must fail authentication
+    let mut bad = sealed;
+    let last = bad.len() - 1;
+    bad[last] ^= 1;
+    assert!(aead::open(&key, &nonce, &aad, &bad).is_err());
+}
+
+// ---------------------------------------------------------------- SHA-256
+
+/// FIPS 180-4 examples plus the empty string.
+#[test]
+fn sha256_fips_vectors() {
+    for (msg, digest) in [
+        (
+            &b""[..],
+            "e3b0c44298fc1c149afbf4c8996fb92427ae41e4649b934ca495991b7852b855",
+        ),
+        (
+            &b"abc"[..],
+            "ba7816bf8f01cfea414140de5dae2223b00361a396177a9cb410ff61f20015ad",
+        ),
+        (
+            &b"abcdbcdecdefdefgefghfghighijhijkijkljklmklmnlmnomnopnopq"[..],
+            "248d6a61d20638b8e5c026930c3e6039a33ce45964ff2167f6ecedd419db06c1",
+        ),
+    ] {
+        assert_eq!(hex::encode(&sha256(msg)), digest);
+    }
+}
+
+/// The one-million-'a' FIPS vector, streamed incrementally.
+#[test]
+fn sha256_million_a_streaming() {
+    let mut h = Sha256::new();
+    for _ in 0..20_000 {
+        h.update(&[b'a'; 50]);
+    }
+    assert_eq!(
+        hex::encode(&h.finalize()),
+        "cdc76e5c9914fb9281a1c7e284d73e67f1809a48a497200e046d39ccc7112cd0"
+    );
+}
+
+// ---------------------------------------------------------------- HMAC
+
+/// RFC 4231 test cases 1, 2 and 6.
+#[test]
+fn hmac_sha256_rfc4231() {
+    let out = hmac_sha256(&[0x0b; 20], b"Hi There");
+    assert_eq!(
+        hex::encode(&out),
+        "b0344c61d8db38535ca8afceaf0bf12b881dc200c9833da726e9376c2e32cff7"
+    );
+    let out = hmac_sha256(b"Jefe", b"what do ya want for nothing?");
+    assert_eq!(
+        hex::encode(&out),
+        "5bdcc146bf60754e6a042426089575c75a003f089d2739839dec58b964ec3843"
+    );
+    let out = hmac_sha256(
+        &[0xaa; 131],
+        b"Test Using Larger Than Block-Size Key - Hash Key First",
+    );
+    assert_eq!(
+        hex::encode(&out),
+        "60e431591ee0b67f0d8a26aacbf5b77f8e0bc6213728c5140546040f0ee37f54"
+    );
+}
+
+// ---------------------------------------------------------------- HKDF
+
+/// RFC 5869 Test Case 1 (basic).
+#[test]
+fn hkdf_rfc5869_case1() {
+    let ikm = [0x0b; 22];
+    let salt = hex::decode("000102030405060708090a0b0c").unwrap();
+    let info = hex::decode("f0f1f2f3f4f5f6f7f8f9").unwrap();
+    let prk = hkdf::extract(&salt, &ikm);
+    assert_eq!(
+        hex::encode(&prk),
+        "077709362c2e32df0ddc3f0dc47bba6390b6c73bb50f9c3122ec844ad7c2b3e5"
+    );
+    let mut okm = [0u8; 42];
+    hkdf::expand(&prk, &info, &mut okm);
+    assert_eq!(
+        hex::encode(&okm),
+        "3cb25f25faacd57a90434f64d0362f2a2d2d0a90cf1a5a4c5db02d56ecc4c5bf34007208d5b887185865"
+    );
+}
+
+/// RFC 5869 Test Case 2 (longer inputs, multi-block expand).
+#[test]
+fn hkdf_rfc5869_case2() {
+    let ikm: Vec<u8> = (0x00..=0x4f).collect();
+    let salt: Vec<u8> = (0x60..=0xaf).collect();
+    let info: Vec<u8> = (0xb0..=0xff).collect();
+    let prk = hkdf::extract(&salt, &ikm);
+    assert_eq!(
+        hex::encode(&prk),
+        "06a6b88c5853361a06104c9ceb35b45cef760014904671014a193f40c15fc244"
+    );
+    let mut okm = [0u8; 82];
+    hkdf::expand(&prk, &info, &mut okm);
+    assert_eq!(
+        hex::encode(&okm),
+        "b11e398dc80327a1c8e7f78c596a49344f012eda2d4efad8a050cc4c19afa97c\
+         59045a99cac7827271cb41c65e590e09da3275600c2f09b8367793a9aca3db71\
+         cc30c58179ec3e87c14c01d5c1f3434f1d87"
+    );
+}
+
+/// RFC 5869 Test Case 3 (zero-length salt and info).
+#[test]
+fn hkdf_rfc5869_case3() {
+    let ikm = [0x0b; 22];
+    let prk = hkdf::extract(&[], &ikm);
+    let mut okm = [0u8; 42];
+    hkdf::expand(&prk, &[], &mut okm);
+    assert_eq!(
+        hex::encode(&okm),
+        "8da4e775a563c18f715f802a063c5a31b8a11f5c5ee1879ec3454e5f3c738d2d9d201395faa4b61a96c8"
+    );
+}
+
+// ---------------------------------------------------------------- X25519
+
+/// RFC 7748 §5.2 scalar-multiplication vectors.
+#[test]
+fn x25519_rfc7748_scalarmult() {
+    let k = hex::decode_array::<32>(
+        "a546e36bf0527c9d3b16154b82465edd62144c0ac1fc5a18506a2244ba449ac4",
+    )
+    .unwrap();
+    let u = hex::decode_array::<32>(
+        "e6db6867583030db3594c1a424b15f7c726624ec26b3353b10a903a6d0ab1c4c",
+    )
+    .unwrap();
+    assert_eq!(
+        hex::encode(&x25519(&k, &u)),
+        "c3da55379de9c6908e94ea4df28d084f32eccf03491c71f754b4075577a28552"
+    );
+    let k = hex::decode_array::<32>(
+        "4b66e9d4d1b4673c5ad22691957d6af5c11b6421e0ea01d42ca4169e7918ba0d",
+    )
+    .unwrap();
+    let u = hex::decode_array::<32>(
+        "e5210f12786811d3f4b7959d0538ae2c31dbe7106fc03c3efc4cd549c715a493",
+    )
+    .unwrap();
+    assert_eq!(
+        hex::encode(&x25519(&k, &u)),
+        "95cbde9476e8907d7aade45cb4b873f88b595a68799fa152e6f8f7647aac7957"
+    );
+}
+
+/// RFC 7748 §6.1 Diffie-Hellman: Alice and Bob derive the same secret.
+#[test]
+fn x25519_rfc7748_dh() {
+    let alice_sk = hex::decode_array::<32>(
+        "77076d0a7318a57d3c16c17251b26645df4c2f87ebc0992ab177fba51db92c2a",
+    )
+    .unwrap();
+    let bob_sk = hex::decode_array::<32>(
+        "5dab087e624a8a4b79e17f8b83800ee66f3bb1292618b6fd1c2f8b27ff88e0eb",
+    )
+    .unwrap();
+    let bob_pk = public_key(&bob_sk);
+    assert_eq!(
+        hex::encode(&bob_pk),
+        "de9edb7d7b7dc1b4d35b61c2ece435373f8343c85b78674dadfc7e146f882b4f"
+    );
+    let alice_pk = public_key(&alice_sk);
+    let shared = x25519(&alice_sk, &bob_pk);
+    assert_eq!(shared, x25519(&bob_sk, &alice_pk));
+    assert_eq!(
+        hex::encode(&shared),
+        "4a5d9d5ba4ce2de1728e3bf480350f25e07e21c947d19e3376f09b3c1e161742"
+    );
+    assert_eq!(hex::encode(&x25519(&alice_sk, &BASEPOINT)), hex::encode(&alice_pk));
+}
+
+// -------------------------------------------------- protocol KDF contract
+
+/// The protocol's key-agreement outputs are pinned down to domain
+/// separation: same DH point, different info strings, different keys — and
+/// both equal HKDF("ccesa/v1", point, info) computed through the public
+/// HKDF API.
+#[test]
+fn dh_kdf_domain_separation_contract() {
+    let alice_sk = hex::decode_array::<32>(
+        "77076d0a7318a57d3c16c17251b26645df4c2f87ebc0992ab177fba51db92c2a",
+    )
+    .unwrap();
+    let bob_sk = hex::decode_array::<32>(
+        "5dab087e624a8a4b79e17f8b83800ee66f3bb1292618b6fd1c2f8b27ff88e0eb",
+    )
+    .unwrap();
+    let bob_pk = public_key(&bob_sk);
+    let point = dh::shared_point(&alice_sk, &bob_pk);
+    let mask = dh::agree_mask_seed(&alice_sk, &bob_pk);
+    let enc = dh::agree_enc_key(&alice_sk, &bob_pk);
+    assert_ne!(mask, enc);
+    assert_eq!(mask, hkdf::hkdf32(b"ccesa/v1", &point, b"mask-seed"));
+    assert_eq!(enc, hkdf::hkdf32(b"ccesa/v1", &point, b"enc-key"));
+    // symmetric for the peer
+    assert_eq!(mask, dh::agree_mask_seed(&bob_sk, &public_key(&alice_sk)));
+}

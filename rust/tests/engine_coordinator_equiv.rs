@@ -1,0 +1,147 @@
+//! Determinism regression suite: `engine::run_round` and the threaded
+//! `coordinator` must produce bit-identical `RoundResult` essentials (sum,
+//! survivor sets, NetStats) for the same seed under rng-free dropout
+//! models, exactly as the coordinator module docs promise — and each driver
+//! must be bit-identical to itself across reruns.
+
+use ccesa::coordinator::run_round_threaded;
+use ccesa::protocol::dropout::DropoutModel;
+use ccesa::protocol::engine::run_round;
+use ccesa::protocol::{ProtocolConfig, Topology};
+use ccesa::util::rng::Rng;
+
+fn models(n: usize, dim: usize, seed: u64) -> Vec<Vec<u64>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| (0..dim).map(|_| rng.next_u64() & 0xFFFF_FFFF).collect())
+        .collect()
+}
+
+fn assert_equivalent(cfg: &ProtocolConfig, m: &[Vec<u64>], label: &str) {
+    let sync = run_round(cfg, m).unwrap();
+    let threaded = run_round_threaded(cfg, m).unwrap();
+    assert_eq!(threaded.reliable, sync.reliable, "{label}: reliable");
+    assert_eq!(threaded.sets, sync.sets, "{label}: survivor sets");
+    assert_eq!(threaded.sum, sync.sum, "{label}: sum");
+    assert_eq!(threaded.stats, sync.stats, "{label}: NetStats");
+}
+
+#[test]
+fn bit_identical_no_dropout_across_topologies() {
+    let n = 14;
+    let dim = 24;
+    let m = models(n, dim, 11);
+    for (label, topology) in [
+        ("complete", Topology::Complete),
+        ("er", Topology::ErdosRenyi { p: 0.75 }),
+        ("harary", Topology::Harary { k: 6 }),
+    ] {
+        let cfg = ProtocolConfig::new(n, 5, dim, topology, 3001);
+        assert_equivalent(&cfg, &m, label);
+    }
+}
+
+#[test]
+fn bit_identical_under_targeted_dropout() {
+    let n = 12;
+    let dim = 10;
+    let m = models(n, dim, 12);
+    // dropouts at every step, including one client that uploads shares but
+    // never sends its masked input (the s^SK reconstruction path)
+    let cfg = ProtocolConfig {
+        dropout: DropoutModel::Targeted {
+            per_step: [vec![0], vec![4], vec![7, 8], vec![11]],
+        },
+        ..ProtocolConfig::new(n, 4, dim, Topology::ErdosRenyi { p: 0.85 }, 3002)
+    };
+    assert_equivalent(&cfg, &m, "targeted");
+}
+
+#[test]
+fn bit_identical_under_materialized_iid() {
+    // a stochastic model becomes driver-independent once materialized —
+    // the mechanism the sim scenario compiler relies on
+    let n = 13;
+    let dim = 8;
+    let m = models(n, dim, 13);
+    let iid = DropoutModel::Iid { q: 0.12 };
+    let per_step = iid.materialize(n, &mut Rng::new(0xAB));
+    let cfg = ProtocolConfig {
+        dropout: DropoutModel::Targeted { per_step },
+        ..ProtocolConfig::new(n, 4, dim, Topology::ErdosRenyi { p: 0.9 }, 3003)
+    };
+    assert_equivalent(&cfg, &m, "materialized-iid");
+}
+
+#[test]
+fn engine_rerun_is_bit_identical() {
+    let n = 10;
+    let dim = 16;
+    let cfg = ProtocolConfig {
+        dropout: DropoutModel::Targeted { per_step: [vec![], vec![2], vec![5], vec![]] },
+        ..ProtocolConfig::new(n, 4, dim, Topology::ErdosRenyi { p: 0.8 }, 3004)
+    };
+    let m = models(n, dim, 14);
+    let a = run_round(&cfg, &m).unwrap();
+    let b = run_round(&cfg, &m).unwrap();
+    assert_eq!(a.sum, b.sum);
+    assert_eq!(a.sets, b.sets);
+    assert_eq!(a.stats, b.stats);
+    assert_eq!(a.reliable, b.reliable);
+    assert_eq!(a.theorem1_holds, b.theorem1_holds);
+    assert_eq!(a.true_sum_v3, b.true_sum_v3);
+    // the adversary's view is identical too: same keys, same ciphertext
+    // metadata, same revealed shares
+    assert_eq!(a.transcript.keys, b.transcript.keys);
+    assert_eq!(a.transcript.masked, b.transcript.masked);
+    assert_eq!(a.transcript.unmask_shares, b.transcript.unmask_shares);
+}
+
+#[test]
+fn coordinator_rerun_is_bit_identical() {
+    let n = 11;
+    let dim = 12;
+    let cfg = ProtocolConfig {
+        dropout: DropoutModel::Targeted { per_step: [vec![1], vec![], vec![6], vec![9]] },
+        ..ProtocolConfig::new(n, 4, dim, Topology::Complete, 3005)
+    };
+    let m = models(n, dim, 15);
+    let a = run_round_threaded(&cfg, &m).unwrap();
+    let b = run_round_threaded(&cfg, &m).unwrap();
+    assert_eq!(a.sum, b.sum);
+    assert_eq!(a.sets, b.sets);
+    assert_eq!(a.stats, b.stats);
+}
+
+#[test]
+fn both_drivers_abort_identically() {
+    // |V2| < t after mass step-1 dropout: the engine errors; the
+    // coordinator must error too (and terminate — regression for the
+    // worker-unblocking fix) rather than deadlock or return a result
+    let n = 8;
+    let cfg = ProtocolConfig {
+        dropout: DropoutModel::Targeted {
+            per_step: [vec![], (0..6).collect(), vec![], vec![]],
+        },
+        ..ProtocolConfig::new(n, 5, 6, Topology::Complete, 3006)
+    };
+    let m = models(n, 6, 16);
+    assert!(run_round(&cfg, &m).is_err(), "engine must abort");
+    assert!(run_round_threaded(&cfg, &m).is_err(), "coordinator must abort");
+}
+
+#[test]
+fn sixteen_and_sixty_four_bit_domains_equivalent() {
+    let n = 9;
+    let dim = 7;
+    for bits in [16u32, 64] {
+        let mut cfg = ProtocolConfig::new(n, 4, dim, Topology::Complete, 3007);
+        cfg.mask_bits = bits;
+        let modmask = if bits == 64 { u64::MAX } else { (1u64 << bits) - 1 };
+        let mut rng = Rng::new(17);
+        let m: Vec<Vec<u64>> = (0..n)
+            .map(|_| (0..dim).map(|_| rng.next_u64() & modmask).collect())
+            .collect();
+        assert_equivalent(&cfg, &m, &format!("bits={bits}"));
+    }
+}

@@ -4,10 +4,12 @@
 
 use ccesa::analysis::bounds::{p_star, per_step_q, t_rule};
 use ccesa::analysis::montecarlo::estimate_failure_rates;
+use ccesa::gf::gf65536 as gf;
 use ccesa::protocol::adversary::{attack, theorem2_private, unmasking_attack_feasible};
 use ccesa::protocol::dropout::DropoutModel;
 use ccesa::protocol::engine::run_round;
 use ccesa::protocol::{ProtocolConfig, Topology};
+use ccesa::shamir::{self, Share};
 use ccesa::util::rng::Rng;
 
 fn models(n: usize, dim: usize, seed: u64) -> Vec<Vec<u64>> {
@@ -154,6 +156,109 @@ fn fig41_operating_points_empirically_safe() {
             "n={n} q={q_total}: priv fail {}",
             est.p_e_privacy
         );
+    }
+}
+
+/// Shamir over GF(2^16), property 1: across randomized (K, t, n) sweeps,
+/// *every* t-subset sampled reconstructs the exact secret — not just the
+/// first t shares the unit tests use.
+#[test]
+fn shamir_any_t_subset_reconstructs_randomized_sweep() {
+    let mut rng = Rng::new(0x5AA1);
+    for trial in 0..40u64 {
+        let n = 3 + rng.gen_range(40) as usize; // holders
+        let t = 2 + rng.gen_range((n - 1) as u64) as usize; // threshold 2..=n
+        let klen = 1 + rng.gen_range(48) as usize; // secret bytes
+        let mut secret = vec![0u8; klen];
+        rng.fill_bytes(&mut secret);
+        // non-contiguous evaluation points exercise arbitrary client ids
+        let points: Vec<u16> = (0..n).map(|i| (3 * i + 1) as u16).collect();
+        let shares = shamir::split(&secret, t, &points, &mut rng).unwrap();
+        for _ in 0..4 {
+            let idx = rng.sample_indices(n, t);
+            let picked: Vec<Share> = idx.iter().map(|&i| shares[i].clone()).collect();
+            assert_eq!(
+                shamir::reconstruct(&picked, t, klen).unwrap(),
+                secret,
+                "trial={trial} n={n} t={t} K={klen} subset={idx:?}"
+            );
+        }
+    }
+}
+
+/// Shamir over GF(2^16), property 2: any (t−1)-subset is consistent with
+/// EVERY candidate secret. Reconstruction is linear in a forged t-th share,
+/// so for each candidate chunk value we can solve for the forged evaluation
+/// that makes reconstruction yield exactly that candidate — if the solution
+/// always exists and verifies, the t−1 real shares pin down nothing.
+#[test]
+fn shamir_t_minus_one_consistent_with_every_secret() {
+    let mut rng = Rng::new(0x5AA2);
+    for trial in 0..25u64 {
+        let n = 3 + rng.gen_range(12) as usize;
+        let t = 2 + rng.gen_range((n - 1) as u64) as usize;
+        let mut secret = [0u8; 2]; // one GF(2^16) chunk
+        rng.fill_bytes(&mut secret);
+        let points: Vec<u16> = (1..=n as u16).collect();
+        let shares = shamir::split(&secret, t, &points, &mut rng).unwrap();
+        let idx = rng.sample_indices(n, t - 1);
+        let known: Vec<Share> = idx.iter().map(|&i| shares[i].clone()).collect();
+        let forged_x = (n + 7) as u16; // fresh evaluation point
+
+        // reconstruction(y) = base ⊕ coeff·y: probe y = 0 and y = 1
+        let rec = |y: u16| -> u16 {
+            let mut picked = known.clone();
+            picked.push(Share { x: forged_x, y: vec![y] });
+            let b = shamir::reconstruct(&picked, t, 2).unwrap();
+            u16::from_le_bytes([b[0], b[1]])
+        };
+        let base = rec(0);
+        let coeff = gf::add(rec(1), base);
+        assert_ne!(coeff, 0, "trial={trial}: forged share must influence the result");
+
+        for candidate in [0u16, 1, 0x1234, 0xFFFF, u16::from_le_bytes(secret)] {
+            let y = gf::div(gf::add(candidate, base), coeff);
+            assert_eq!(
+                rec(y),
+                candidate,
+                "trial={trial} n={n} t={t}: candidate {candidate:#06x} inconsistent \
+                 with {} real shares",
+                t - 1
+            );
+        }
+    }
+}
+
+/// Shamir + engine: the t-threshold is sharp on the full stack. At
+/// |V4| = t the round recovers; at |V4| = t−1 it is detected unreliable —
+/// across randomized (n, t).
+#[test]
+fn shamir_threshold_sharpness_through_engine() {
+    let mut meta = Rng::new(0x5AA3);
+    for trial in 0..8u64 {
+        let n = 6 + meta.gen_range(8) as usize;
+        let t = 3 + meta.gen_range(3) as usize;
+        if t >= n {
+            continue;
+        }
+        for &(keep, expect_reliable) in &[(t, true), (t - 1, false)] {
+            let drop_at_3: Vec<usize> = (keep..n).collect();
+            let cfg = ProtocolConfig {
+                dropout: DropoutModel::Targeted {
+                    per_step: [vec![], vec![], vec![], drop_at_3],
+                },
+                ..ProtocolConfig::new(n, t, 4, Topology::Complete, 9100 + trial)
+            };
+            let m = models(n, 4, trial);
+            let r = run_round(&cfg, &m).unwrap();
+            assert_eq!(r.sets.v4.len(), keep, "trial={trial}");
+            assert_eq!(r.reliable, expect_reliable, "trial={trial} n={n} t={t} keep={keep}");
+            if expect_reliable {
+                assert_eq!(r.sum.as_ref().unwrap(), &r.true_sum_v3);
+            } else {
+                assert!(r.sum.is_none());
+            }
+        }
     }
 }
 
