@@ -1,0 +1,144 @@
+//! The multi-core aggregation pipeline at the acceptance scale (n = 128,
+//! dim = 2^17): server-style unmasking — masked-input summation plus every
+//! mask-cancellation job — swept over worker counts, against the serial
+//! baseline, plus batched-vs-per-owner Shamir reconstruction.
+//!
+//! Always emits a machine-readable `BENCH_aggregate.json` (override with
+//! `--json PATH` or `CCESA_BENCH_JSON`) so the repo's bench trajectory is
+//! populated: median/p95 per case, host core count, and the thread sweep
+//! (thread count is encoded in each case name).
+
+use ccesa::bench::{black_box, json_sink, Bench};
+use ccesa::crypto::prg::{apply_mask, apply_mask_jobs_range, MaskJob};
+use ccesa::masking::random_vector;
+use ccesa::par;
+use ccesa::shamir;
+use ccesa::util::mod_mask;
+use ccesa::util::rng::Rng;
+
+const N: usize = 128;
+const DIM: usize = 1 << 17;
+const BITS: u32 = 32;
+/// Pairwise streams left by simulated V2∖V3 dropouts.
+const PAIRWISE_JOBS: usize = 16;
+
+/// The planned mask-cancellation jobs of one server finalize: n self masks
+/// + the dropouts' pairwise masks.
+fn mask_jobs() -> Vec<MaskJob> {
+    let mut jobs = Vec::with_capacity(N + PAIRWISE_JOBS);
+    for i in 0..N {
+        let mut seed = [0u8; 32];
+        seed[0] = i as u8;
+        seed[1] = 0x5E;
+        jobs.push(MaskJob { seed, pairwise: false, negate: true });
+    }
+    for k in 0..PAIRWISE_JOBS {
+        let mut seed = [0u8; 32];
+        seed[0] = k as u8;
+        seed[1] = 0xFA;
+        jobs.push(MaskJob { seed, pairwise: true, negate: k % 2 == 0 });
+    }
+    jobs
+}
+
+fn unmask_serial(acc: &mut [u64], inputs: &[Vec<u64>], jobs: &[MaskJob]) {
+    let mask = mod_mask(BITS);
+    acc.fill(0);
+    for v in inputs {
+        for (a, x) in acc.iter_mut().zip(v.iter()) {
+            *a = a.wrapping_add(*x) & mask;
+        }
+    }
+    for job in jobs {
+        apply_mask(acc, &job.seed, job.nonce(), BITS, job.negate);
+    }
+}
+
+fn unmask_parallel(acc: &mut [u64], inputs: &[Vec<u64>], jobs: &[MaskJob], threads: usize) {
+    let mask = mod_mask(BITS);
+    par::for_each_slice(acc, threads, |offset, slice| {
+        let n = slice.len();
+        slice.fill(0);
+        for v in inputs {
+            for (a, x) in slice.iter_mut().zip(v[offset..offset + n].iter()) {
+                *a = a.wrapping_add(*x) & mask;
+            }
+        }
+        apply_mask_jobs_range(slice, jobs, BITS, offset);
+    });
+}
+
+fn main() {
+    let mut b = Bench::new("aggregate_pipeline");
+    let mut rng = Rng::new(0xA66);
+
+    let inputs: Vec<Vec<u64>> = (0..N).map(|_| random_vector(DIM, BITS, &mut rng)).collect();
+    let jobs = mask_jobs();
+
+    // Sanity: every thread count is bit-identical to the serial pass.
+    let mut serial = vec![0u64; DIM];
+    unmask_serial(&mut serial, &inputs, &jobs);
+    for threads in [1usize, 2, 4, 8] {
+        let mut par_acc = vec![0u64; DIM];
+        unmask_parallel(&mut par_acc, &inputs, &jobs, threads);
+        assert_eq!(par_acc, serial, "threads={threads} diverged from serial");
+    }
+
+    let mut acc = vec![0u64; DIM];
+    b.throughput(
+        &format!("unmask n={N} dim={DIM} serial"),
+        (jobs.len() * DIM * 4) as f64,
+        "B/s",
+        || {
+            unmask_serial(&mut acc, &inputs, &jobs);
+            black_box(acc[0]);
+        },
+    );
+    for threads in [1usize, 2, 4, 8] {
+        b.throughput(
+            &format!("unmask n={N} dim={DIM} threads={threads}"),
+            (jobs.len() * DIM * 4) as f64,
+            "B/s",
+            || {
+                unmask_parallel(&mut acc, &inputs, &jobs, threads);
+                black_box(acc[0]);
+            },
+        );
+    }
+
+    // Shamir reconstruction: per-owner O(t²) solve vs one basis per
+    // distinct holder set. All owners share one holder set — the common
+    // no-dropout round shape.
+    let t = 64;
+    let points: Vec<u16> = (1..=N as u16).collect();
+    let owners: Vec<Vec<shamir::Share>> = (0..N)
+        .map(|_| {
+            let mut secret = [0u8; 32];
+            rng.fill_bytes(&mut secret);
+            shamir::split(&secret, t, &points, &mut rng).unwrap()
+        })
+        .collect();
+    let jobs_shamir: Vec<&[shamir::Share]> = owners.iter().map(|s| &s[..t]).collect();
+    b.bench(&format!("shamir per-owner n={N} t={t}"), || {
+        for shares in &jobs_shamir {
+            black_box(shamir::reconstruct(shares, t, 32).unwrap());
+        }
+    });
+    b.bench(&format!("shamir batched n={N} t={t}"), || {
+        let batch = shamir::reconstruct_batch(&jobs_shamir, t, 32).unwrap();
+        assert_eq!(batch.bases_computed, 1);
+        black_box(batch.secrets.len());
+    });
+
+    b.report();
+    // cargo runs bench binaries with cwd = the package root (rust/);
+    // anchor the default artifact at the workspace root so CI and humans
+    // find it where the repo documents it.
+    let default_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_aggregate.json");
+    if let Some(path) = json_sink(Some(default_path)) {
+        match b.write_json(&path) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => eprintln!("failed to write {path}: {e}"),
+        }
+    }
+}

@@ -67,9 +67,7 @@ fn main() {
         (64 * 10_000 * 4) as f64,
         "B/s",
         || {
-            for a in agg.iter_mut() {
-                *a = 0;
-            }
+            agg.fill(0);
             for v in &vecs {
                 add_assign(&mut agg, v, 32);
             }

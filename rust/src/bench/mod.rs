@@ -13,6 +13,7 @@
 //! b.report();
 //! ```
 
+use crate::util::json::Json;
 use crate::util::stats::Summary;
 use std::time::{Duration, Instant};
 
@@ -28,6 +29,24 @@ pub struct BenchResult {
 impl BenchResult {
     pub fn median_s(&self) -> f64 {
         self.summary.p50
+    }
+
+    /// Machine-readable form of one result row.
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("name", Json::str(&self.name)),
+            ("iters", Json::Num(self.iters as f64)),
+            ("median_s", Json::Num(self.summary.p50)),
+            ("p95_s", Json::Num(self.summary.p95)),
+            ("mean_s", Json::Num(self.summary.mean)),
+            ("min_s", Json::Num(self.summary.min)),
+            ("max_s", Json::Num(self.summary.max)),
+        ];
+        if let Some((amount, unit)) = self.throughput_label {
+            fields.push(("throughput", Json::Num(amount / self.summary.p50)));
+            fields.push(("throughput_unit", Json::str(unit)));
+        }
+        Json::obj(fields)
     }
 }
 
@@ -146,6 +165,30 @@ impl Bench {
         median
     }
 
+    /// Machine-readable report: group name, host parallelism, the
+    /// `CCESA_THREADS` default the run used, and every case's statistics.
+    /// This is what populates the repo's bench trajectory
+    /// (`BENCH_aggregate.json` & friends).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("group", Json::str(&self.group)),
+            (
+                "host_cores",
+                Json::Num(
+                    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) as f64,
+                ),
+            ),
+            ("default_threads", Json::Num(crate::par::threads() as f64)),
+            ("results", Json::arr(self.results.iter().map(|r| r.to_json()))),
+        ])
+    }
+
+    /// Write the JSON report to `path` (pretty enough for diffing: one
+    /// trailing newline, deterministic key order via `util::json`).
+    pub fn write_json(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_json()))
+    }
+
     /// Print a formatted report for the group.
     pub fn report(&self) {
         println!("\n== bench group: {} ==", self.group);
@@ -180,6 +223,30 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Where a bench binary should write its JSON report, if anywhere:
+/// `--json PATH` / `--json=PATH` in the binary's args (after `cargo bench
+/// -- …`) wins, then the `CCESA_BENCH_JSON` env var, then `default`
+/// (benches with a canonical artifact, e.g. `BENCH_aggregate.json`, pass
+/// one; ad-hoc benches pass `None` and stay stdout-only).
+pub fn json_sink(default: Option<&str>) -> Option<String> {
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        if a == "--json" {
+            if let Some(p) = args.next() {
+                return Some(p);
+            }
+        } else if let Some(p) = a.strip_prefix("--json=") {
+            return Some(p.to_string());
+        }
+    }
+    if let Ok(p) = std::env::var("CCESA_BENCH_JSON") {
+        if !p.is_empty() {
+            return Some(p);
+        }
+    }
+    default.map(str::to_string)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -212,6 +279,27 @@ mod tests {
             black_box(s);
         });
         assert!(pricey > cheap, "pricey={pricey} cheap={cheap}");
+    }
+
+    #[test]
+    fn json_report_round_trips() {
+        std::env::set_var("CCESA_BENCH_FAST", "1");
+        let mut b = Bench::new("jsontest");
+        b.throughput("case", 1024.0, "B/s", || {
+            black_box(2u64 + 2);
+        });
+        let j = b.to_json();
+        let parsed = crate::util::json::Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("group").as_str(), Some("jsontest"));
+        assert!(parsed.get("host_cores").as_u64().unwrap() >= 1);
+        assert!(parsed.get("default_threads").as_u64().unwrap() >= 1);
+        let results = parsed.get("results").as_arr().unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].get("name").as_str(), Some("case"));
+        assert!(results[0].get("median_s").as_f64().unwrap() > 0.0);
+        assert!(results[0].get("p95_s").as_f64().unwrap() > 0.0);
+        assert!(results[0].get("throughput").as_f64().unwrap() > 0.0);
+        assert_eq!(results[0].get("throughput_unit").as_str(), Some("B/s"));
     }
 
     #[test]

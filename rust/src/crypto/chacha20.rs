@@ -4,6 +4,18 @@
 //! Z_{2^b} mask vectors — the hot path of Step 2 — and (b) the cipher half
 //! of the ChaCha20-Poly1305 AEAD, and (c) the simulation RNG core.
 
+/// Keystream words (u32) produced per 64-byte ChaCha20 block.
+///
+/// The seekability contract of `crypto::prg`: keystream word `w` of a
+/// stream lives in block `w / WORDS_PER_BLOCK` at lane `w %
+/// WORDS_PER_BLOCK`, so any word offset is reachable by seeking the block
+/// counter — no prefix of the stream ever needs to be generated.
+pub const WORDS_PER_BLOCK: usize = 16;
+
+/// Blocks per vectorized batch ([`ChaCha20::block_words_x16`]), the widest
+/// lock-step expansion (one AVX-512 register per state word).
+pub const BATCH_BLOCKS: usize = 16;
+
 /// ChaCha20 keystream generator for a fixed (key, nonce).
 #[derive(Clone)]
 pub struct ChaCha20 {
@@ -260,6 +272,23 @@ only one tip for the future, sunscreen would be it.";
         let mut single = [0u32; 16];
         c.block_words(u32::MAX, &mut single);
         assert_eq!(&quad[16..32], &single[..]);
+    }
+
+    #[test]
+    fn batched_blocks_are_counter_seekable() {
+        // a batch started at an arbitrary counter equals the scalar blocks
+        // at the same counters — the invariant the mask sharding relies on
+        let c = ChaCha20::new(&[0x33u8; 32], &[4u8; 12]);
+        for start in [0u32, 1, 7, 16, 1000] {
+            let mut batch = [0u32; 16 * BATCH_BLOCKS];
+            c.block_words_x16(start, &mut batch);
+            for b in 0..BATCH_BLOCKS as u32 {
+                let mut single = [0u32; WORDS_PER_BLOCK];
+                c.block_words(start + b, &mut single);
+                let lo = (b as usize) * WORDS_PER_BLOCK;
+                assert_eq!(&batch[lo..lo + WORDS_PER_BLOCK], &single[..], "start={start} b={b}");
+            }
+        }
     }
 
     #[test]

@@ -7,47 +7,91 @@
 //! Implementation: ChaCha20 keystream consumed as little-endian u32 words
 //! (or u64 pairs), truncated to the masking modulus 2^b. Domain-separated
 //! nonces keep pairwise-mask streams distinct from self-mask streams.
+//!
+//! **Counter-seekability.** Element `e` of the mask vector consumes a fixed
+//! keystream position — word `e` (b ≤ 32) or words `2e, 2e+1` (b > 32) —
+//! so the stream can be entered mid-vector by seeking the ChaCha20 block
+//! counter to `e / elems_per_block`. [`apply_mask_range`] and
+//! [`expand_masks_at`] expose this: the mask pipeline shards one vector
+//! across workers (`crate::par`), each regenerating exactly the keystream
+//! range its slice consumes, with output bit-identical to the serial pass.
+//! The serial [`apply_mask`] / [`expand_masks`] are the `start = 0` case of
+//! the range APIs, so the two can never diverge.
 
-use super::chacha20::ChaCha20;
+use super::chacha20::{ChaCha20, BATCH_BLOCKS, WORDS_PER_BLOCK};
+use crate::util::mod_mask;
 
 /// Nonce for pairwise masks PRG(s_{i,j}).
 pub const NONCE_PAIRWISE: [u8; 12] = *b"ccesa-pair\0\0";
 /// Nonce for self masks PRG(b_i).
 pub const NONCE_SELF: [u8; 12] = *b"ccesa-self\0\0";
 
-/// Expand `seed` into `out.len()` u64 words, each reduced mod 2^bits.
+/// Keystream words per vectorized batch (16 blocks × 16 words).
+const BATCH_WORDS: usize = BATCH_BLOCKS * WORDS_PER_BLOCK;
+/// Elements per block on the wide (b > 32) path: two u32 words each.
+const WIDE_PER_BLOCK: usize = WORDS_PER_BLOCK / 2;
+
+/// Expand elements `start .. start + out.len()` of `PRG(seed)` into `out`,
+/// each reduced mod 2^bits — `out` is a window of the conceptual full mask
+/// vector. `expand_masks_at(seed, nonce, bits, 0, out)` is the classic
+/// full-vector expansion; for any split point s,
+/// `expand_masks_at(.., 0, &mut v[..s])` + `expand_masks_at(.., s, &mut
+/// v[s..])` produces bit-identical `v`.
 ///
-/// `bits` ∈ [1, 64]. The masked aggregation domain is Z_{2^bits}; the
-/// protocol default is 32 (training headroom), the Table 5.1 runtime bench
-/// mirrors the paper's 2^16 field.
-pub fn expand_masks(seed: &[u8; 32], nonce: &[u8; 12], bits: u32, out: &mut [u64]) {
-    assert!((1..=64).contains(&bits), "mask width must be in 1..=64");
+/// `bits` ∈ [1, 64] (see [`crate::util::mod_mask`]); the protocol default
+/// is 32 (training headroom), the Table 5.1 runtime bench mirrors the
+/// paper's 2^16 field.
+pub fn expand_masks_at(
+    seed: &[u8; 32],
+    nonce: &[u8; 12],
+    bits: u32,
+    start: usize,
+    out: &mut [u64],
+) {
+    let modmask = mod_mask(bits);
     let cipher = ChaCha20::new(seed, nonce);
-    let modmask: u64 = if bits == 64 { u64::MAX } else { (1u64 << bits) - 1 };
-    let mut counter = 0u32;
+    let len = out.len();
     if bits <= 32 {
         // one u32 of keystream per element; 16-block batches (§Perf)
-        let mut quad = [0u32; 256];
-        for chunk in out.chunks_mut(256) {
-            cipher.block_words_x16(counter, &mut quad);
-            counter = counter.wrapping_add(16);
-            for (o, w) in chunk.iter_mut().zip(quad.iter()) {
+        let mut batch = [0u32; BATCH_WORDS];
+        let mut counter = (start / WORDS_PER_BLOCK) as u32;
+        let mut skip = start % WORDS_PER_BLOCK;
+        let mut pos = 0usize;
+        while pos < len {
+            cipher.block_words_x16(counter, &mut batch);
+            counter = counter.wrapping_add(BATCH_BLOCKS as u32);
+            let take = (BATCH_WORDS - skip).min(len - pos);
+            for (o, w) in out[pos..pos + take].iter_mut().zip(batch[skip..skip + take].iter()) {
                 *o = *w as u64 & modmask;
             }
+            skip = 0;
+            pos += take;
         }
     } else {
-        let mut words = [0u32; 16];
-        // two u32s per element
-        for chunk in out.chunks_mut(8) {
+        // two u32s per element, one block per 8 elements
+        let mut words = [0u32; WORDS_PER_BLOCK];
+        let mut counter = (start / WIDE_PER_BLOCK) as u32;
+        let mut skip = start % WIDE_PER_BLOCK;
+        let mut pos = 0usize;
+        while pos < len {
             cipher.block_words(counter, &mut words);
             counter = counter.wrapping_add(1);
-            for (k, o) in chunk.iter_mut().enumerate() {
-                let lo = words[2 * k] as u64;
-                let hi = words[2 * k + 1] as u64;
+            let take = (WIDE_PER_BLOCK - skip).min(len - pos);
+            for (k, o) in out[pos..pos + take].iter_mut().enumerate() {
+                let lo = words[2 * (skip + k)] as u64;
+                let hi = words[2 * (skip + k) + 1] as u64;
                 *o = (lo | (hi << 32)) & modmask;
             }
+            skip = 0;
+            pos += take;
         }
     }
+}
+
+/// Expand `seed` into `out.len()` u64 words, each reduced mod 2^bits —
+/// the full-vector (`start = 0`) case of [`expand_masks_at`].
+pub fn expand_masks(seed: &[u8; 32], nonce: &[u8; 12], bits: u32, out: &mut [u64]) {
+    expand_masks_at(seed, nonce, bits, 0, out);
 }
 
 /// Allocating convenience wrapper.
@@ -57,57 +101,113 @@ pub fn prg(seed: &[u8; 32], nonce: &[u8; 12], bits: u32, len: usize) -> Vec<u64>
     out
 }
 
-/// Add `PRG(seed)` into `acc` in place with sign `+1`/`-1` mod 2^bits,
-/// without materializing the mask vector. This fused form is what Step 2
-/// and the server's unmasking use after the perf pass — one pass over the
-/// accumulator per mask, no temporary allocation.
-pub fn apply_mask(
+/// Add elements `start .. start + acc.len()` of `PRG(seed)` into `acc` in
+/// place with sign `+1`/`-1` mod 2^bits, without materializing the mask
+/// vector. This fused, counter-seekable form is what Step 2 and the
+/// server's unmasking use: `acc` is a disjoint shard of the accumulator,
+/// `start` its offset in the full vector, and the worker seeks the ChaCha20
+/// block counter to regenerate exactly the keystream range the shard
+/// consumes. For any partition of the vector, composing the shards is
+/// bit-identical to the serial `apply_mask` because Z_{2^b} addition is
+/// elementwise and each element sees the same keystream word either way.
+pub fn apply_mask_range(
     acc: &mut [u64],
     seed: &[u8; 32],
     nonce: &[u8; 12],
     bits: u32,
     negate: bool,
+    start: usize,
 ) {
-    assert!((1..=64).contains(&bits));
+    let modmask = mod_mask(bits);
     let cipher = ChaCha20::new(seed, nonce);
-    let modmask: u64 = if bits == 64 { u64::MAX } else { (1u64 << bits) - 1 };
-    let mut counter = 0u32;
+    let len = acc.len();
     if bits <= 32 {
-        // §Perf: 8-block keystream batches (quarter rounds vectorize to
+        // §Perf: 16-block keystream batches (quarter rounds vectorize to
         // one AVX2/AVX-512 op per state word across blocks).
-        let mut quad = [0u32; 256];
-        let mut chunks = acc.chunks_exact_mut(256);
-        for chunk in chunks.by_ref() {
-            cipher.block_words_x16(counter, &mut quad);
-            counter = counter.wrapping_add(16);
+        let mut batch = [0u32; BATCH_WORDS];
+        let mut counter = (start / WORDS_PER_BLOCK) as u32;
+        let mut skip = start % WORDS_PER_BLOCK;
+        let mut pos = 0usize;
+        while pos < len {
+            cipher.block_words_x16(counter, &mut batch);
+            counter = counter.wrapping_add(BATCH_BLOCKS as u32);
+            let take = (BATCH_WORDS - skip).min(len - pos);
+            let ks = &batch[skip..skip + take];
+            let chunk = &mut acc[pos..pos + take];
             if negate {
-                for (a, w) in chunk.iter_mut().zip(quad.iter()) {
+                for (a, w) in chunk.iter_mut().zip(ks.iter()) {
                     *a = a.wrapping_sub(*w as u64 & modmask) & modmask;
                 }
             } else {
-                for (a, w) in chunk.iter_mut().zip(quad.iter()) {
+                for (a, w) in chunk.iter_mut().zip(ks.iter()) {
                     *a = a.wrapping_add(*w as u64 & modmask) & modmask;
                 }
             }
-        }
-        let rem = chunks.into_remainder();
-        if !rem.is_empty() {
-            cipher.block_words_x16(counter, &mut quad);
-            for (a, w) in rem.iter_mut().zip(quad.iter()) {
-                let m = *w as u64 & modmask;
-                *a = if negate { a.wrapping_sub(m) } else { a.wrapping_add(m) } & modmask;
-            }
+            skip = 0;
+            pos += take;
         }
     } else {
-        let mut words = [0u32; 16];
-        for chunk in acc.chunks_mut(8) {
+        let mut words = [0u32; WORDS_PER_BLOCK];
+        let mut counter = (start / WIDE_PER_BLOCK) as u32;
+        let mut skip = start % WIDE_PER_BLOCK;
+        let mut pos = 0usize;
+        while pos < len {
             cipher.block_words(counter, &mut words);
             counter = counter.wrapping_add(1);
-            for (k, a) in chunk.iter_mut().enumerate() {
-                let m = ((words[2 * k] as u64) | ((words[2 * k + 1] as u64) << 32)) & modmask;
+            let take = (WIDE_PER_BLOCK - skip).min(len - pos);
+            for (k, a) in acc[pos..pos + take].iter_mut().enumerate() {
+                let lo = words[2 * (skip + k)] as u64;
+                let hi = words[2 * (skip + k) + 1] as u64;
+                let m = (lo | (hi << 32)) & modmask;
                 *a = if negate { a.wrapping_sub(m) } else { a.wrapping_add(m) } & modmask;
             }
+            skip = 0;
+            pos += take;
         }
+    }
+}
+
+/// Add `PRG(seed)` into `acc` in place with sign `+1`/`-1` mod 2^bits —
+/// the full-vector (`start = 0`) case of [`apply_mask_range`].
+pub fn apply_mask(acc: &mut [u64], seed: &[u8; 32], nonce: &[u8; 12], bits: u32, negate: bool) {
+    apply_mask_range(acc, seed, nonce, bits, negate, 0);
+}
+
+/// One planned mask application: a PRG stream (seed + domain-separating
+/// nonce kind) added into the accumulator with a sign.
+///
+/// The plan-then-execute pipelines (client Step 2, server unmasking, the
+/// aggregate bench) all express their mask work as a job list and replay
+/// it per shard via [`apply_mask_jobs_range`] — one definition of the
+/// nonce selection and sharding convention, so the bit-identity contract
+/// cannot drift between call sites.
+#[derive(Debug, Clone)]
+pub struct MaskJob {
+    pub seed: [u8; 32],
+    /// Pairwise-mask stream ([`NONCE_PAIRWISE`]) vs self-mask
+    /// ([`NONCE_SELF`]).
+    pub pairwise: bool,
+    pub negate: bool,
+}
+
+impl MaskJob {
+    /// The domain-separating nonce this job's stream expands under.
+    #[inline]
+    pub fn nonce(&self) -> &'static [u8; 12] {
+        if self.pairwise {
+            &NONCE_PAIRWISE
+        } else {
+            &NONCE_SELF
+        }
+    }
+}
+
+/// Apply every job's keystream range to `acc`, a shard whose first element
+/// is at `start` in the full vector. Composing shards over any partition is
+/// bit-identical to applying all jobs serially over the whole vector.
+pub fn apply_mask_jobs_range(acc: &mut [u64], jobs: &[MaskJob], bits: u32, start: usize) {
+    for job in jobs {
+        apply_mask_range(acc, &job.seed, job.nonce(), bits, job.negate, start);
     }
 }
 
@@ -171,6 +271,43 @@ mod tests {
             // negation cancels
             apply_mask(&mut via_apply, &seed, &NONCE_PAIRWISE, bits, true);
             assert_eq!(via_apply, base, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn expand_masks_at_window_equals_full_expansion() {
+        // arbitrary windows of the stream equal the same slice of the full
+        // vector, for both keystream layouts
+        let seed = [0x5Eu8; 32];
+        for bits in [16u32, 32, 48, 64] {
+            let full = prg(&seed, &NONCE_SELF, bits, 1200);
+            for (start, len) in
+                [(0usize, 7usize), (1, 16), (15, 2), (255, 258), (256, 256), (511, 300), (1199, 1)]
+            {
+                let mut window = vec![0u64; len];
+                expand_masks_at(&seed, &NONCE_SELF, bits, start, &mut window);
+                assert_eq!(&window[..], &full[start..start + len], "bits={bits} start={start}");
+            }
+        }
+    }
+
+    #[test]
+    fn apply_mask_range_composes_to_serial() {
+        // splitting the accumulator at any point and applying the two
+        // ranges equals one serial pass — the §Perf sharding invariant
+        let seed = [0xA1u8; 32];
+        for bits in [16u32, 32, 48, 64] {
+            let modm = crate::util::mod_mask(bits);
+            let base: Vec<u64> = (0..600u64).map(|i| (i * 2654435761) & modm).collect();
+            let mut serial = base.clone();
+            apply_mask(&mut serial, &seed, &NONCE_PAIRWISE, bits, false);
+            for split in [0usize, 1, 16, 255, 256, 257, 512, 599, 600] {
+                let mut sharded = base.clone();
+                let (lo, hi) = sharded.split_at_mut(split);
+                apply_mask_range(lo, &seed, &NONCE_PAIRWISE, bits, false, 0);
+                apply_mask_range(hi, &seed, &NONCE_PAIRWISE, bits, false, split);
+                assert_eq!(sharded, serial, "bits={bits} split={split}");
+            }
         }
     }
 

@@ -24,6 +24,7 @@ pub mod gf;
 pub mod graph;
 pub mod masking;
 pub mod net;
+pub mod par;
 pub mod protocol;
 pub mod runtime;
 pub mod shamir;

@@ -15,7 +15,7 @@
 //! instead we use two's-complement semantics (negative values wrap), which
 //! makes the sum decode exact as long as |Σ x_i|·scale < 2^(b-1).
 
-use crate::util::rng::Rng;
+use crate::util::{mod_mask, rng::Rng};
 
 /// Quantization parameters shared by all clients in a round.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -32,8 +32,12 @@ impl Quantizer {
     /// Build a quantizer that can represent the *sum* of up to `n_max`
     /// clipped vectors without modular ambiguity:
     /// scale = 2^(b-1) / (n_max · clip) with a 2× safety margin.
+    ///
+    /// The raw masked domain ([`crate::util::mod_mask`]) allows b ∈ 1..=64;
+    /// the quantizer additionally needs b ≥ 2 because one bit is the
+    /// two's-complement sign.
     pub fn for_sum_of(bits: u32, clip: f32, n_max: usize) -> Quantizer {
-        assert!((2..=64).contains(&bits));
+        assert!((2..=64).contains(&bits), "quantizer needs a sign bit: bits must be in 2..=64");
         assert!(clip > 0.0 && n_max > 0);
         let headroom = 2.0 * n_max as f64 * clip as f64;
         let scale = (1u64 << (bits - 1)) as f64 / headroom;
@@ -42,11 +46,7 @@ impl Quantizer {
 
     #[inline]
     pub fn modulus_mask(&self) -> u64 {
-        if self.bits == 64 {
-            u64::MAX
-        } else {
-            (1u64 << self.bits) - 1
-        }
+        mod_mask(self.bits)
     }
 
     /// Quantize one value to Z_{2^b} (two's complement wrap).
@@ -91,7 +91,7 @@ impl Quantizer {
 /// c = a + b (mod 2^bits), in place on `a`.
 pub fn add_assign(a: &mut [u64], b: &[u64], bits: u32) {
     debug_assert_eq!(a.len(), b.len());
-    let mask = if bits == 64 { u64::MAX } else { (1u64 << bits) - 1 };
+    let mask = mod_mask(bits);
     for (x, y) in a.iter_mut().zip(b) {
         *x = x.wrapping_add(*y) & mask;
     }
@@ -100,7 +100,7 @@ pub fn add_assign(a: &mut [u64], b: &[u64], bits: u32) {
 /// c = a − b (mod 2^bits), in place on `a`.
 pub fn sub_assign(a: &mut [u64], b: &[u64], bits: u32) {
     debug_assert_eq!(a.len(), b.len());
-    let mask = if bits == 64 { u64::MAX } else { (1u64 << bits) - 1 };
+    let mask = mod_mask(bits);
     for (x, y) in a.iter_mut().zip(b) {
         *x = x.wrapping_sub(*y) & mask;
     }
@@ -108,7 +108,7 @@ pub fn sub_assign(a: &mut [u64], b: &[u64], bits: u32) {
 
 /// Random vector in Z_{2^bits} (test helper / privacy-attack baseline).
 pub fn random_vector(len: usize, bits: u32, rng: &mut Rng) -> Vec<u64> {
-    let mask = if bits == 64 { u64::MAX } else { (1u64 << bits) - 1 };
+    let mask = mod_mask(bits);
     (0..len).map(|_| rng.next_u64() & mask).collect()
 }
 

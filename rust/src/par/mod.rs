@@ -1,0 +1,229 @@
+//! Dependency-free parallel execution layer (`std::thread::scope` only).
+//!
+//! The masking/unmasking hot path is embarrassingly parallel *by element*:
+//! Z_{2^b} addition is elementwise, and the ChaCha20 PRG is counter-seekable
+//! (`crypto::prg::apply_mask_range`), so a mask vector can be sharded into
+//! disjoint contiguous slices and each worker can regenerate exactly the
+//! keystream range its slice consumes. No atomics or locks touch the data:
+//! every worker owns a disjoint `&mut` slice (enforced by `split_at_mut`),
+//! and the result is bit-identical to the serial pass for *any* partition
+//! because per-element operation order is unchanged.
+//!
+//! Thread count selection: explicit argument everywhere (config-selectable
+//! by callers), with [`threads`] as the process-wide default — the
+//! `CCESA_THREADS` environment variable if set, else the host parallelism.
+
+use std::ops::Range;
+use std::sync::OnceLock;
+
+/// Process-wide default worker count: `CCESA_THREADS` if set to a positive
+/// integer, else `std::thread::available_parallelism()`, else 1. Cached on
+/// first use (the hot path asks per round).
+pub fn threads() -> usize {
+    static CACHE: OnceLock<usize> = OnceLock::new();
+    *CACHE.get_or_init(|| {
+        if let Ok(v) = std::env::var("CCESA_THREADS") {
+            if let Ok(n) = v.trim().parse::<usize>() {
+                if n >= 1 {
+                    return n;
+                }
+            }
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    })
+}
+
+/// Minimum elements a worker should own before sharding is worth a thread
+/// spawn: ~32 KiB of keystream at b ≤ 32 versus tens of µs of spawn+join.
+/// Below this, the protocol paths run the serial (1-chunk) case — still
+/// bit-identical, just without the spawn overhead the simulation suite's
+/// tiny dims would otherwise pay.
+pub const MIN_SHARD_LEN: usize = 8192;
+
+/// Default worker count for an `len`-element vector: [`threads`] capped so
+/// every worker owns at least [`MIN_SHARD_LEN`] elements (1 for short
+/// vectors).
+pub fn threads_for_len(len: usize) -> usize {
+    threads().min(len / MIN_SHARD_LEN).max(1)
+}
+
+/// Deterministic partition of `0..len` into at most `max_chunks` contiguous,
+/// disjoint, in-order ranges covering every index exactly once. The first
+/// `len % k` chunks are one element longer (balanced to ±1). `len == 0`
+/// yields no chunks.
+pub fn partition(len: usize, max_chunks: usize) -> Vec<Range<usize>> {
+    if len == 0 {
+        return Vec::new();
+    }
+    let k = max_chunks.clamp(1, len);
+    let base = len / k;
+    let extra = len % k;
+    let mut out = Vec::with_capacity(k);
+    let mut start = 0;
+    for i in 0..k {
+        let size = base + usize::from(i < extra);
+        out.push(start..start + size);
+        start += size;
+    }
+    debug_assert_eq!(start, len);
+    out
+}
+
+/// Run `f(offset, chunk)` over disjoint contiguous chunks of `data`, one
+/// worker per chunk, at most `threads` workers. `offset` is the chunk's
+/// start index in `data`, so counter-seekable consumers can resume streams
+/// mid-vector. With one chunk (or `threads <= 1`) the closure runs inline
+/// on the caller's thread — no spawn overhead on the serial path.
+pub fn for_each_slice<T, F>(data: &mut [T], threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let ranges = partition(data.len(), threads);
+    match ranges.len() {
+        0 => {}
+        1 => f(0, data),
+        _ => {
+            std::thread::scope(|s| {
+                let mut rest = data;
+                for r in &ranges {
+                    let (head, tail) = std::mem::take(&mut rest).split_at_mut(r.len());
+                    rest = tail;
+                    let fref = &f;
+                    let offset = r.start;
+                    s.spawn(move || fref(offset, head));
+                }
+            });
+        }
+    }
+}
+
+/// Evaluate `f(0), …, f(n - 1)` on up to `threads` workers and return the
+/// results in index order. Work is claimed dynamically (an atomic cursor —
+/// scheduling only, the job results never race), and the output order is
+/// fixed by index, so the result is deterministic for any interleaving.
+pub fn map_indexed<R, F>(n: usize, threads: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    let k = threads.clamp(1, n.max(1));
+    if n == 0 {
+        return Vec::new();
+    }
+    if k <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let cursor = std::sync::atomic::AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..k)
+            .map(|_| {
+                s.spawn(|| {
+                    let mut local: Vec<(usize, R)> = Vec::new();
+                    loop {
+                        let i = cursor.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        local.push((i, f(i)));
+                    }
+                    local
+                })
+            })
+            .collect();
+        let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        for h in handles {
+            for (i, r) in h.join().expect("par worker panicked") {
+                slots[i] = Some(r);
+            }
+        }
+        slots.into_iter().map(|o| o.expect("par job not executed")).collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_covers_disjoint_ordered() {
+        for len in [0usize, 1, 2, 7, 256, 257, 600, 1000] {
+            for k in [1usize, 2, 3, 4, 8, 64] {
+                let ranges = partition(len, k);
+                if len == 0 {
+                    assert!(ranges.is_empty());
+                    continue;
+                }
+                assert!(ranges.len() <= k && ranges.len() <= len);
+                let mut next = 0;
+                for r in &ranges {
+                    assert_eq!(r.start, next, "len={len} k={k}");
+                    assert!(!r.is_empty());
+                    next = r.end;
+                }
+                assert_eq!(next, len);
+                // balanced to ±1
+                let sizes: Vec<usize> = ranges.iter().map(|r| r.len()).collect();
+                let (mn, mx) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+                assert!(mx - mn <= 1, "len={len} k={k} sizes={sizes:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn partition_is_deterministic() {
+        assert_eq!(partition(600, 8), partition(600, 8));
+        assert_eq!(partition(5, 2), vec![0..3, 3..5]);
+    }
+
+    #[test]
+    fn for_each_slice_offsets_are_global() {
+        for threads in [1usize, 2, 4, 8] {
+            let mut data = vec![0usize; 601];
+            for_each_slice(&mut data, threads, |offset, chunk| {
+                for (i, x) in chunk.iter_mut().enumerate() {
+                    *x = offset + i;
+                }
+            });
+            let expect: Vec<usize> = (0..601).collect();
+            assert_eq!(data, expect, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn for_each_slice_empty_and_tiny() {
+        let mut empty: Vec<u8> = Vec::new();
+        for_each_slice(&mut empty, 4, |_, _| panic!("must not run on empty input"));
+        let mut one = vec![7u8];
+        for_each_slice(&mut one, 4, |off, c| {
+            assert_eq!(off, 0);
+            c[0] += 1;
+        });
+        assert_eq!(one, vec![8]);
+    }
+
+    #[test]
+    fn map_indexed_preserves_order() {
+        for threads in [1usize, 2, 4, 8] {
+            let out = map_indexed(37, threads, |i| i * i);
+            let expect: Vec<usize> = (0..37).map(|i| i * i).collect();
+            assert_eq!(out, expect, "threads={threads}");
+        }
+        assert!(map_indexed(0, 4, |i| i).is_empty());
+    }
+
+    #[test]
+    fn threads_is_positive() {
+        assert!(threads() >= 1);
+    }
+
+    #[test]
+    fn threads_for_len_scales_with_work() {
+        assert_eq!(threads_for_len(0), 1);
+        assert_eq!(threads_for_len(MIN_SHARD_LEN - 1), 1);
+        let big = threads_for_len(MIN_SHARD_LEN * 64);
+        assert!(big >= 1 && big <= threads());
+        // never more workers than MIN_SHARD_LEN-sized shards
+        assert!(threads_for_len(MIN_SHARD_LEN * 2) <= 2);
+    }
+}

@@ -75,11 +75,7 @@ pub fn attack(tr: &Transcript) -> Vec<Breach> {
         return Vec::new(); // connected ⇒ Lemma 1 ⇒ private
     }
 
-    let modmask = if tr.mask_bits == 64 {
-        u64::MAX
-    } else {
-        (1u64 << tr.mask_bits) - 1
-    };
+    let modmask = crate::util::mod_mask(tr.mask_bits);
     let mut breaches = Vec::new();
 
     'component: for comp in &comps {

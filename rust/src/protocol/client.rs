@@ -8,7 +8,7 @@ use super::messages::*;
 use super::ClientId;
 use crate::crypto::aead;
 use crate::crypto::dh::{self, KeyPair, PublicKey};
-use crate::crypto::prg::{apply_mask, NONCE_PAIRWISE, NONCE_SELF};
+use crate::crypto::prg::{apply_mask_jobs_range, MaskJob};
 use crate::shamir::{self, Share};
 use crate::util::rng::Rng;
 use anyhow::{bail, Context, Result};
@@ -140,6 +140,12 @@ impl Client {
 
     /// **Step 2** — receive the ciphertexts addressed to us (their senders
     /// are exactly V2 ∩ Adj(i)), then mask the model per Eq. (3).
+    ///
+    /// §Perf: plan-then-execute. The d+1 mask seeds (self + one DH
+    /// agreement per alive neighbor) are derived first; then one parallel
+    /// pass shards the model vector across workers, each applying every
+    /// seed's keystream range to its disjoint slice
+    /// (`prg::apply_mask_range`) — bit-identical to the serial pass.
     pub fn step2_masked_input(
         &mut self,
         delivery: &ShareDelivery,
@@ -153,25 +159,28 @@ impl Client {
         }
         self.alive_neighbors_v2 = self.received.keys().copied().collect();
 
-        let mask = if self.mask_bits == 64 {
-            u64::MAX
-        } else {
-            (1u64 << self.mask_bits) - 1
-        };
-        let mut masked: Vec<u64> = model.iter().map(|&w| w & mask).collect();
-        // self mask PRG(b_i)
-        apply_mask(&mut masked, &self.b_seed, &NONCE_SELF, self.mask_bits, false);
-        // pairwise masks ± PRG(s_{i,j}) for j ∈ V2 ∩ Adj(i)
+        // Plan: self mask PRG(b_i), then pairwise masks ± PRG(s_{i,j}) for
+        // j ∈ V2 ∩ Adj(i); sign convention: + if i < j, − if i > j.
+        let mut jobs: Vec<MaskJob> = Vec::with_capacity(1 + self.alive_neighbors_v2.len());
+        jobs.push(MaskJob { seed: self.b_seed, pairwise: false, negate: false });
         for &j in &self.alive_neighbors_v2 {
             let (_, s_pk) = self
                 .peer_keys
                 .get(&j)
                 .with_context(|| format!("no mask public key for neighbor {j}"))?;
             let seed = dh::agree_mask_seed(&self.s_keys.sk, s_pk);
-            // sign convention: + if i < j, − if i > j
-            apply_mask(&mut masked, &seed, &NONCE_PAIRWISE, self.mask_bits, self.id > j);
+            jobs.push(MaskJob { seed, pairwise: true, negate: self.id > j });
         }
-        Ok(MaskedInput { id: self.id, masked, bits: self.mask_bits })
+
+        // Execute: one parallel pass over disjoint model slices.
+        let bits = self.mask_bits;
+        let mask = crate::util::mod_mask(bits);
+        let mut masked: Vec<u64> = model.iter().map(|&w| w & mask).collect();
+        let workers = crate::par::threads_for_len(masked.len());
+        crate::par::for_each_slice(&mut masked, workers, |offset, slice| {
+            apply_mask_jobs_range(slice, &jobs, bits, offset);
+        });
+        Ok(MaskedInput { id: self.id, masked, bits })
     }
 
     /// **Step 3** — after learning V3, decrypt the stored ciphertexts and

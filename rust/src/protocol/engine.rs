@@ -158,11 +158,7 @@ pub fn run_round(cfg: &ProtocolConfig, models: &[Vec<u64>]) -> Result<RoundResul
         times.time("server_finalize", || server.finalize(responses))?;
 
     // Ground truth over V3 for validation.
-    let modmask = if cfg.mask_bits == 64 {
-        u64::MAX
-    } else {
-        (1u64 << cfg.mask_bits) - 1
-    };
+    let modmask = crate::util::mod_mask(cfg.mask_bits);
     let mut true_sum = vec![0u64; cfg.dim];
     for &i in &sets.v3 {
         for (a, x) in true_sum.iter_mut().zip(&models[i]) {

@@ -10,7 +10,7 @@
 use super::messages::*;
 use super::{ClientId, SurvivorSets};
 use crate::crypto::dh::{self, PublicKey};
-use crate::crypto::prg::{apply_mask, NONCE_PAIRWISE, NONCE_SELF};
+use crate::crypto::prg::{apply_mask_jobs_range, MaskJob};
 use crate::graph::Graph;
 use crate::shamir::{self, Share};
 use anyhow::{bail, Result};
@@ -195,6 +195,17 @@ impl Server {
 
     /// **Step 3** — collect unmasking shares (senders form V4), reconstruct
     /// the needed secrets, cancel masks per Eq. (4).
+    ///
+    /// §Perf: plan-then-execute. The method first *plans* — batch-
+    /// reconstructs every needed secret ([`shamir::reconstruct_batch`]: one
+    /// Lagrange basis per distinct holder set) and collects every mask-
+    /// cancellation job (self masks for V3, pairwise seeds for V2∖V3
+    /// dropouts adjacent to V3) — then *executes* one parallel pass where
+    /// each worker owns a disjoint accumulator slice and applies every
+    /// job's keystream range to it (`prg::apply_mask_range`). No atomics or
+    /// locks: slices are disjoint, and the result is bit-identical to the
+    /// serial pass because Z_{2^b} addition is elementwise and each element
+    /// sees the same keystream words in the same order.
     pub fn finalize(&mut self, responses: Vec<UnmaskShares>) -> Result<RoundOutput> {
         for resp in responses {
             if !SurvivorSets::contains(&self.sets.v3, resp.from) {
@@ -226,20 +237,9 @@ impl Server {
             return Ok(RoundOutput { sum: None, reliable: false, sets });
         }
 
-        // Aggregate masked inputs.
-        let mask = if self.mask_bits == 64 {
-            u64::MAX
-        } else {
-            (1u64 << self.mask_bits) - 1
-        };
-        let mut acc = vec![0u64; self.dim];
-        for v in self.masked.values() {
-            for (a, x) in acc.iter_mut().zip(v) {
-                *a = a.wrapping_add(*x) & mask;
-            }
-        }
-
-        // Cancel self masks: reconstruct b_i for all i ∈ V3.
+        // ---- Plan: collect reconstruction jobs ---------------------------
+        // Self masks: b_i for every i ∈ V3.
+        let mut b_jobs: Vec<&[Share]> = Vec::with_capacity(sets.v3.len());
         for &i in &sets.v3 {
             let Some(shares) = self.shares.get(&(i, ShareKind::SelfMask)) else {
                 return Ok(RoundOutput { sum: None, reliable: false, sets });
@@ -247,21 +247,17 @@ impl Server {
             if shares.len() < self.t {
                 return Ok(RoundOutput { sum: None, reliable: false, sets });
             }
-            let b: [u8; 32] = match shamir::reconstruct(shares, self.t, 32) {
-                Ok(v) => v.try_into().unwrap(),
-                Err(_) => return Ok(RoundOutput { sum: None, reliable: false, sets }),
-            };
-            apply_mask(&mut acc, &b, &NONCE_SELF, self.mask_bits, true);
+            b_jobs.push(shares);
         }
-
-        // Cancel pairwise masks left by V2\V3 dropouts adjacent to V3:
-        // reconstruct s_i^SK and recompute PRG(s_{i,j}).
+        // Pairwise masks left by V2\V3 dropouts adjacent to V3: s_i^SK.
         let dropped: Vec<ClientId> = sets
             .v2
             .iter()
             .copied()
             .filter(|i| !SurvivorSets::contains(&sets.v3, *i))
             .collect();
+        let mut sk_jobs: Vec<&[Share]> = Vec::new();
+        let mut sk_owners: Vec<(ClientId, Vec<ClientId>)> = Vec::new();
         for &i in &dropped {
             let alive_neigh: Vec<ClientId> = self
                 .graph
@@ -279,20 +275,67 @@ impl Server {
             if shares.len() < self.t {
                 return Ok(RoundOutput { sum: None, reliable: false, sets });
             }
-            let sk: [u8; 32] = match shamir::reconstruct(shares, self.t, 32) {
-                Ok(v) => v.try_into().unwrap(),
-                Err(_) => return Ok(RoundOutput { sum: None, reliable: false, sets }),
+            sk_jobs.push(shares);
+            sk_owners.push((i, alive_neigh));
+        }
+
+        // Batched Shamir: one Lagrange basis per distinct holder set,
+        // reused across all owners and all 16 chunks of each 32-byte
+        // secret. In the common no-dropout complete-graph round this is a
+        // single O(t²) solve for the whole step instead of |V3| of them.
+        let b_secrets = match shamir::reconstruct_batch(&b_jobs, self.t, 32) {
+            Ok(batch) => batch.secrets,
+            Err(_) => return Ok(RoundOutput { sum: None, reliable: false, sets }),
+        };
+        let sk_secrets = match shamir::reconstruct_batch(&sk_jobs, self.t, 32) {
+            Ok(batch) => batch.secrets,
+            Err(_) => return Ok(RoundOutput { sum: None, reliable: false, sets }),
+        };
+
+        // Mask-cancellation job list, in the exact order the serial path
+        // applied them: V3 self masks (ascending id), then per dropped
+        // owner its surviving neighbors' pairwise seeds.
+        let mut jobs: Vec<MaskJob> = Vec::with_capacity(b_secrets.len());
+        for b in b_secrets {
+            // A malformed (short-y) share set reconstructs to the wrong
+            // length; treat it as an unreliable round, not a panic.
+            let Ok(seed) = <[u8; 32]>::try_from(b) else {
+                return Ok(RoundOutput { sum: None, reliable: false, sets });
+            };
+            jobs.push(MaskJob { seed, pairwise: false, negate: true });
+        }
+        for ((i, alive_neigh), skv) in sk_owners.iter().zip(sk_secrets) {
+            let Ok(sk) = <[u8; 32]>::try_from(skv) else {
+                return Ok(RoundOutput { sum: None, reliable: false, sets });
             };
             let sk = crate::crypto::x25519::clamp_scalar(sk);
-            for &j in &alive_neigh {
+            for &j in alive_neigh {
                 let Some((_, s_pk_j)) = self.keys.get(&j) else {
                     return Ok(RoundOutput { sum: None, reliable: false, sets });
                 };
                 let seed = dh::agree_mask_seed(&sk, s_pk_j);
                 // The survivor j applied sign(j<i ? + : −); cancel it.
-                apply_mask(&mut acc, &seed, &NONCE_PAIRWISE, self.mask_bits, j < i);
+                jobs.push(MaskJob { seed, pairwise: true, negate: j < *i });
             }
         }
+
+        // ---- Execute: one parallel pass over disjoint accumulator slices.
+        // Each worker sums the masked inputs over its slice, then applies
+        // every job's keystream range at the slice's offset.
+        let mask = crate::util::mod_mask(self.mask_bits);
+        let bits = self.mask_bits;
+        let masked: Vec<&Vec<u64>> = self.masked.values().collect();
+        let mut acc = vec![0u64; self.dim];
+        let workers = crate::par::threads_for_len(self.dim);
+        crate::par::for_each_slice(&mut acc, workers, |offset, slice| {
+            let n = slice.len();
+            for v in &masked {
+                for (a, x) in slice.iter_mut().zip(v[offset..offset + n].iter()) {
+                    *a = a.wrapping_add(*x) & mask;
+                }
+            }
+            apply_mask_jobs_range(slice, &jobs, bits, offset);
+        });
 
         Ok(RoundOutput { sum: Some(acc), reliable: true, sets })
     }

@@ -150,54 +150,168 @@ fn eval_poly(poly: &[u16], x: u16) -> u16 {
     acc
 }
 
+/// Precomputed Lagrange interpolation weights at x = 0 for one fixed,
+/// ordered holder set.
+///
+/// Computing the weights is the O(t²) part of reconstruction; applying
+/// them to a share vector is O(t·m). In the server's Step-3 hot path many
+/// owners share the *same* holder set (every surviving neighbor sent its
+/// share), so [`reconstruct_batch`] computes one basis per distinct set and
+/// reuses it across all owners — and within one owner across all ⌈K/2⌉
+/// secret chunks.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LagrangeBasis {
+    /// Evaluation points, in the order shares must be supplied.
+    xs: Vec<u16>,
+    /// weights[i] = Π_{j≠i} x_j / (x_j − x_i); in GF(2^k) subtraction is
+    /// XOR.
+    weights: Vec<u16>,
+}
+
+impl LagrangeBasis {
+    /// Build the basis at x = 0 for the given (distinct, nonzero, ordered)
+    /// evaluation points.
+    pub fn at_zero(points: &[u16]) -> Result<LagrangeBasis, ShamirError> {
+        if points.is_empty() {
+            return Err(ShamirError::BadParameters);
+        }
+        {
+            let mut seen = std::collections::HashSet::with_capacity(points.len());
+            for &x in points {
+                if x == 0 {
+                    return Err(ShamirError::BadParameters);
+                }
+                if !seen.insert(x) {
+                    return Err(ShamirError::DuplicatePoint { x });
+                }
+            }
+        }
+        let t = points.len();
+        let mut weights = vec![0u16; t];
+        for i in 0..t {
+            let mut num = 1u16;
+            let mut den = 1u16;
+            for j in 0..t {
+                if i != j {
+                    num = gf::mul(num, points[j]);
+                    den = gf::mul(den, gf::add(points[j], points[i]));
+                }
+            }
+            weights[i] = gf::div(num, den);
+        }
+        Ok(LagrangeBasis { xs: points.to_vec(), weights })
+    }
+
+    /// The evaluation points this basis interpolates, in supply order.
+    pub fn points(&self) -> &[u16] {
+        &self.xs
+    }
+
+    /// Interpolate a `secret_len`-byte secret from shares aligned with
+    /// [`LagrangeBasis::points`] (same x's, same order).
+    pub fn reconstruct(
+        &self,
+        shares: &[Share],
+        secret_len: usize,
+    ) -> Result<Vec<u8>, ShamirError> {
+        let t = self.xs.len();
+        if shares.len() != t {
+            return Err(ShamirError::NotEnoughShares { t, got: shares.len() });
+        }
+        let m = shares[0].y.len();
+        if shares.iter().any(|s| s.y.len() != m) {
+            return Err(ShamirError::InconsistentLengths);
+        }
+        for (s, &x) in shares.iter().zip(&self.xs) {
+            if s.x != x {
+                return Err(ShamirError::BadParameters);
+            }
+        }
+        let mut chunks = vec![0u16; m];
+        for (share, &li) in shares.iter().zip(&self.weights) {
+            for (c, &y) in share.y.iter().enumerate() {
+                chunks[c] = gf::add(chunks[c], gf::mul(li, y));
+            }
+        }
+        Ok(from_chunks(&chunks, secret_len))
+    }
+}
+
 /// Reconstruct a `secret_len`-byte secret from at least `t` shares.
 ///
 /// Exactly the first `t` distinct shares are used (Lagrange interpolation
 /// at x = 0). Extra shares are ignored — reconstruction cost is O(t²+t·m),
-/// which matters for the server's Step-3 hot path.
+/// which matters for the server's Step-3 hot path; when many owners share
+/// a holder set, [`reconstruct_batch`] amortizes the O(t²) part.
 pub fn reconstruct(
     shares: &[Share],
     t: usize,
     secret_len: usize,
 ) -> Result<Vec<u8>, ShamirError> {
+    if t == 0 {
+        return Err(ShamirError::BadParameters);
+    }
     if shares.len() < t {
         return Err(ShamirError::NotEnoughShares { t, got: shares.len() });
     }
     let used = &shares[..t];
-    let m = used[0].y.len();
-    if used.iter().any(|s| s.y.len() != m) {
-        return Err(ShamirError::InconsistentLengths);
+    let points: Vec<u16> = used.iter().map(|s| s.x).collect();
+    let basis = LagrangeBasis::at_zero(&points)?;
+    basis.reconstruct(used, secret_len)
+}
+
+/// Result of a batched reconstruction.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BatchReconstruction {
+    /// One secret per job, in job order — each bit-identical to what the
+    /// per-owner [`reconstruct`] returns for the same shares.
+    pub secrets: Vec<Vec<u8>>,
+    /// How many distinct Lagrange bases were computed — exactly one per
+    /// distinct (ordered) holder set among the jobs. The unmasking tests
+    /// assert on this: mixed holder sets must never share a basis, and
+    /// identical holder sets must never recompute one.
+    pub bases_computed: usize,
+}
+
+/// Reconstruct many `secret_len`-byte secrets at once, grouping jobs by
+/// identical holder set (the first `t` shares' evaluation points, in
+/// order) and computing one Lagrange basis per group.
+///
+/// In the server's Step-3 regime — n owners whose shares arrive from the
+/// same V4 survivors — this collapses n O(t²) basis solves into one,
+/// leaving n·O(t·m) weight applications. Falls back gracefully: jobs with
+/// unique holder sets each get their own basis and cost exactly the
+/// per-owner path.
+pub fn reconstruct_batch(
+    jobs: &[&[Share]],
+    t: usize,
+    secret_len: usize,
+) -> Result<BatchReconstruction, ShamirError> {
+    if t == 0 {
+        return Err(ShamirError::BadParameters);
     }
-    {
-        let mut seen = std::collections::HashSet::with_capacity(t);
-        for s in used {
-            if !seen.insert(s.x) {
-                return Err(ShamirError::DuplicatePoint { x: s.x });
+    let mut bases: Vec<LagrangeBasis> = Vec::new();
+    let mut by_points: std::collections::HashMap<Vec<u16>, usize> =
+        std::collections::HashMap::new();
+    let mut secrets = Vec::with_capacity(jobs.len());
+    for shares in jobs {
+        if shares.len() < t {
+            return Err(ShamirError::NotEnoughShares { t, got: shares.len() });
+        }
+        let used = &shares[..t];
+        let points: Vec<u16> = used.iter().map(|s| s.x).collect();
+        let idx = match by_points.get(&points) {
+            Some(&idx) => idx,
+            None => {
+                let basis = LagrangeBasis::at_zero(&points)?;
+                bases.push(basis);
+                by_points.insert(points, bases.len() - 1);
+                bases.len() - 1
             }
-        }
+        };
+        secrets.push(bases[idx].reconstruct(used, secret_len)?);
     }
-    // Lagrange basis at 0: L_i = Π_{j≠i} x_j / (x_j − x_i); in GF(2^k)
-    // subtraction is XOR.
-    let mut lagrange = vec![0u16; t];
-    for i in 0..t {
-        let mut num = 1u16;
-        let mut den = 1u16;
-        for j in 0..t {
-            if i != j {
-                num = gf::mul(num, used[j].x);
-                den = gf::mul(den, gf::add(used[j].x, used[i].x));
-            }
-        }
-        lagrange[i] = gf::div(num, den);
-    }
-    let mut chunks = vec![0u16; m];
-    for (i, share) in used.iter().enumerate() {
-        let li = lagrange[i];
-        for (c, &y) in share.y.iter().enumerate() {
-            chunks[c] = gf::add(chunks[c], gf::mul(li, y));
-        }
-    }
-    Ok(from_chunks(&chunks, secret_len))
+    Ok(BatchReconstruction { secrets, bases_computed: bases.len() })
 }
 
 /// Standard evaluation point for a client id (id + 1, avoiding 0).
@@ -349,6 +463,129 @@ mod tests {
                 "trial={trial} n={n} t={t}"
             );
         }
+    }
+
+    #[test]
+    fn lagrange_basis_matches_reconstruct() {
+        let mut r = rng();
+        let secret = b"basis equality secret 0123456789";
+        let points: Vec<u16> = (1..=9).collect();
+        let t = 5;
+        let shares = split(secret, t, &points, &mut r).unwrap();
+        let xs: Vec<u16> = shares[..t].iter().map(|s| s.x).collect();
+        let basis = LagrangeBasis::at_zero(&xs).unwrap();
+        assert_eq!(basis.points(), &xs[..]);
+        assert_eq!(
+            basis.reconstruct(&shares[..t], secret.len()).unwrap(),
+            reconstruct(&shares[..t], t, secret.len()).unwrap()
+        );
+        // misaligned shares are rejected, not silently mis-weighted
+        let mut wrong_order: Vec<Share> = shares[..t].to_vec();
+        wrong_order.swap(0, 1);
+        assert_eq!(
+            basis.reconstruct(&wrong_order, secret.len()),
+            Err(ShamirError::BadParameters)
+        );
+    }
+
+    #[test]
+    fn lagrange_basis_rejects_bad_points() {
+        assert_eq!(LagrangeBasis::at_zero(&[]), Err(ShamirError::BadParameters));
+        assert_eq!(LagrangeBasis::at_zero(&[1, 0]), Err(ShamirError::BadParameters));
+        assert_eq!(
+            LagrangeBasis::at_zero(&[3, 3]),
+            Err(ShamirError::DuplicatePoint { x: 3 })
+        );
+    }
+
+    #[test]
+    fn batch_matches_individual_across_random_groupings() {
+        // randomized property: owners with randomized holder subsets —
+        // some identical, some distinct — reconstruct identically through
+        // the batched and the per-owner paths, and the batch computes
+        // exactly one basis per distinct holder set
+        let mut r = Rng::new(0xBA7C);
+        for trial in 0..15 {
+            let n = 6 + (r.gen_range(12) as usize);
+            let t = 2 + (r.gen_range((n - 2) as u64) as usize);
+            let owners = 3 + (r.gen_range(6) as usize);
+            let points: Vec<u16> = (1..=n as u16).collect();
+            // a small pool of holder subsets; owners draw from it so some
+            // groups repeat
+            let pool: Vec<Vec<usize>> =
+                (0..3).map(|_| r.sample_indices(n, t)).collect();
+            let mut jobs_owned: Vec<Vec<Share>> = Vec::new();
+            let mut secrets_truth: Vec<Vec<u8>> = Vec::new();
+            let mut distinct: std::collections::BTreeSet<Vec<u16>> =
+                std::collections::BTreeSet::new();
+            for _ in 0..owners {
+                let mut secret = vec![0u8; 32];
+                r.fill_bytes(&mut secret);
+                let shares = split(&secret, t, &points, &mut r).unwrap();
+                let subset = &pool[r.gen_range(3) as usize];
+                let picked: Vec<Share> =
+                    subset.iter().map(|&i| shares[i].clone()).collect();
+                distinct.insert(picked.iter().map(|s| s.x).collect());
+                jobs_owned.push(picked);
+                secrets_truth.push(secret);
+            }
+            let jobs: Vec<&[Share]> = jobs_owned.iter().map(|j| j.as_slice()).collect();
+            let batch = reconstruct_batch(&jobs, t, 32).unwrap();
+            assert_eq!(batch.secrets.len(), owners, "trial={trial}");
+            for (k, job) in jobs.iter().enumerate() {
+                assert_eq!(batch.secrets[k], secrets_truth[k], "trial={trial} owner={k}");
+                assert_eq!(
+                    batch.secrets[k],
+                    reconstruct(job, t, 32).unwrap(),
+                    "trial={trial} owner={k}"
+                );
+            }
+            assert_eq!(
+                batch.bases_computed,
+                distinct.len(),
+                "trial={trial}: one basis per distinct holder set"
+            );
+        }
+    }
+
+    #[test]
+    fn mixed_holder_sets_never_share_a_basis() {
+        // regression: two owners whose holder sets differ (even by order)
+        // must get separate bases; identical sets must share one
+        let mut r = rng();
+        let points: Vec<u16> = (1..=8).collect();
+        let t = 3;
+        let s1 = split(&[1u8; 32], t, &points, &mut r).unwrap();
+        let s2 = split(&[2u8; 32], t, &points, &mut r).unwrap();
+        let s3 = split(&[3u8; 32], t, &points, &mut r).unwrap();
+
+        // same holder set {1,2,3} for owners 1 and 2 → one basis
+        let same = reconstruct_batch(&[&s1[..3], &s2[..3]], t, 32).unwrap();
+        assert_eq!(same.bases_computed, 1);
+        assert_eq!(same.secrets[0], vec![1u8; 32]);
+        assert_eq!(same.secrets[1], vec![2u8; 32]);
+
+        // different holder sets {1,2,3} vs {4,5,6} → two bases
+        let mixed = reconstruct_batch(&[&s1[..3], &s3[3..6]], t, 32).unwrap();
+        assert_eq!(mixed.bases_computed, 2);
+        assert_eq!(mixed.secrets[1], vec![3u8; 32]);
+
+        // same set, different supply order → separate (order-keyed) bases,
+        // still exact
+        let reordered: Vec<Share> = vec![s2[2].clone(), s2[0].clone(), s2[1].clone()];
+        let ord = reconstruct_batch(&[&s1[..3], &reordered[..]], t, 32).unwrap();
+        assert_eq!(ord.bases_computed, 2);
+        assert_eq!(ord.secrets[1], vec![2u8; 32]);
+
+        // errors propagate: short job
+        assert_eq!(
+            reconstruct_batch(&[&s1[..2]], t, 32),
+            Err(ShamirError::NotEnoughShares { t: 3, got: 2 })
+        );
+        // empty batch is fine and computes nothing
+        let empty = reconstruct_batch(&[], t, 32).unwrap();
+        assert_eq!(empty.bases_computed, 0);
+        assert!(empty.secrets.is_empty());
     }
 
     #[test]

@@ -159,16 +159,37 @@ pub fn run_plan(
 }
 
 /// Run a full scenario campaign through the chosen driver.
+///
+/// §Perf: compiled plans are rng-free data, so rounds are independent —
+/// each round's per-client work (model materialization, the full protocol
+/// round, transcript scoring) runs on a `crate::par` worker. Records are
+/// merged back in round order, so the report (including the `NetStats`
+/// accumulation order) is bit-identical to the serial runner's.
 pub fn run_campaign(sc: &Scenario, driver: Driver) -> Result<CampaignReport> {
     let plans = sc.compile();
     let colluders = sc.adversary.colluders();
-    let mut records = Vec::with_capacity(plans.len());
-    let mut total_stats = NetStats::new(sc.n);
-    for plan in &plans {
+    let workers = match driver {
+        // Rounds whose vectors are too short to shard internally (the
+        // simulation regime — exactly the rounds step2/finalize run
+        // serially) parallelize across rounds here. Rounds that do shard
+        // internally run one at a time: parallelizing both levels would
+        // oversubscribe CPU ~threads² and hold several rounds' full model
+        // sets in memory at once.
+        Driver::Engine if crate::par::threads_for_len(sc.dim) == 1 => crate::par::threads(),
+        Driver::Engine => 1,
+        // the coordinator already spawns one worker thread per client;
+        // running its rounds concurrently would multiply that by the
+        // round count (n=1000 campaigns → thousands of threads)
+        Driver::Coordinator => 1,
+    };
+    let records = crate::par::map_indexed(plans.len(), workers, |i| {
+        let plan = &plans[i];
         let models = sc.round_models(plan.round);
-        let record = run_plan(plan, &models, driver, colluders);
+        run_plan(plan, &models, driver, colluders)
+    });
+    let mut total_stats = NetStats::new(sc.n);
+    for record in &records {
         total_stats.merge(&record.stats);
-        records.push(record);
     }
     Ok(CampaignReport { scenario: sc.name.clone(), seed: sc.seed, driver, records, total_stats })
 }

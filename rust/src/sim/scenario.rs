@@ -131,11 +131,7 @@ impl Scenario {
     /// Deterministic per-round client inputs: full-entropy words in
     /// Z_{2^mask_bits}.
     pub fn round_models(&self, round: usize) -> Vec<Vec<u64>> {
-        let modmask = if self.mask_bits == 64 {
-            u64::MAX
-        } else {
-            (1u64 << self.mask_bits) - 1
-        };
+        let modmask = crate::util::mod_mask(self.mask_bits);
         let mut rng = Rng::new(self.round_seed(round) ^ 0x0DE1);
         (0..self.n)
             .map(|_| (0..self.dim).map(|_| rng.next_u64() & modmask).collect())

@@ -10,3 +10,48 @@ pub mod logging;
 pub mod rng;
 pub mod stats;
 pub mod timer;
+
+/// The modulus mask of the aggregation domain Z_{2^bits}.
+///
+/// **This is the single definition of the mask-width domain:** `bits`
+/// ∈ [1, 64], where 64 means the full u64 word. Every module that
+/// reduces values into the masked domain (`masking`, `crypto::prg`,
+/// `protocol::{client,server,engine}`, `sim`) goes through this helper
+/// rather than re-deriving `(1 << bits) - 1` inline. The quantizer
+/// additionally requires `bits ≥ 2` because it spends one bit on the
+/// two's-complement sign (see `masking::Quantizer`).
+#[inline]
+pub fn mod_mask(bits: u32) -> u64 {
+    assert!((1..=64).contains(&bits), "mask width must be in 1..=64, got {bits}");
+    if bits == 64 {
+        u64::MAX
+    } else {
+        (1u64 << bits) - 1
+    }
+}
+
+#[cfg(test)]
+mod mod_mask_tests {
+    use super::mod_mask;
+
+    #[test]
+    fn boundary_widths() {
+        assert_eq!(mod_mask(1), 1);
+        assert_eq!(mod_mask(16), 0xFFFF);
+        assert_eq!(mod_mask(32), 0xFFFF_FFFF);
+        assert_eq!(mod_mask(63), u64::MAX >> 1);
+        assert_eq!(mod_mask(64), u64::MAX);
+    }
+
+    #[test]
+    #[should_panic(expected = "mask width")]
+    fn rejects_zero() {
+        mod_mask(0);
+    }
+
+    #[test]
+    #[should_panic(expected = "mask width")]
+    fn rejects_over_64() {
+        mod_mask(65);
+    }
+}

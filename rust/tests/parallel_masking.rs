@@ -1,0 +1,130 @@
+//! Parallel-vs-serial bit-identity of the mask pipeline.
+//!
+//! The multi-core unmasking path (`par::for_each_slice` +
+//! `prg::apply_mask_range`) claims exact equality with the serial pass for
+//! every partition, offset, thread count, vector length (including the
+//! 256-word x16-batch boundary and the remainder tail) and mask width.
+//! These tests are that claim.
+
+use ccesa::crypto::prg::{
+    apply_mask, apply_mask_range, expand_masks, expand_masks_at, NONCE_PAIRWISE, NONCE_SELF,
+};
+use ccesa::par;
+use ccesa::util::mod_mask;
+use ccesa::util::rng::Rng;
+
+fn base_vector(len: usize, bits: u32, salt: u64) -> Vec<u64> {
+    let modm = mod_mask(bits);
+    let mut rng = Rng::new(0xB0_0F ^ salt);
+    (0..len).map(|_| rng.next_u64() & modm).collect()
+}
+
+/// Sweep every length 0..=600 — crossing the 256-word x16-batch boundary
+/// at 256 and 512 and exercising the remainder tail everywhere else — and
+/// every deterministic partition into 1/2/4/8 shards: composing
+/// `apply_mask_range` over the shards must equal the serial `apply_mask`.
+#[test]
+fn sharded_apply_equals_serial_for_all_lengths_and_threads() {
+    let seed = [0xC4u8; 32];
+    for bits in [16u32, 32, 64] {
+        for len in 0..=600usize {
+            let base = base_vector(len, bits, len as u64);
+            let mut serial = base.clone();
+            apply_mask(&mut serial, &seed, &NONCE_PAIRWISE, bits, len % 2 == 0);
+            for threads in [1usize, 2, 4, 8] {
+                let mut sharded = base.clone();
+                for r in par::partition(len, threads) {
+                    apply_mask_range(
+                        &mut sharded[r.start..r.end],
+                        &seed,
+                        &NONCE_PAIRWISE,
+                        bits,
+                        len % 2 == 0,
+                        r.start,
+                    );
+                }
+                assert_eq!(
+                    sharded, serial,
+                    "bits={bits} len={len} threads={threads}"
+                );
+            }
+        }
+    }
+}
+
+/// The same equality through real worker threads (`par::for_each_slice`),
+/// at lengths that straddle the batch boundary and the tail.
+#[test]
+fn threaded_apply_equals_serial() {
+    let seed = [0x77u8; 32];
+    for bits in [16u32, 32, 48, 64] {
+        for len in [0usize, 1, 255, 256, 257, 511, 513, 600, 4096, 5000] {
+            let base = base_vector(len, bits, 0x7E ^ len as u64);
+            let mut serial = base.clone();
+            apply_mask(&mut serial, &seed, &NONCE_SELF, bits, false);
+            for threads in [1usize, 2, 4, 8] {
+                let mut acc = base.clone();
+                par::for_each_slice(&mut acc, threads, |offset, slice| {
+                    apply_mask_range(slice, &seed, &NONCE_SELF, bits, false, offset);
+                });
+                assert_eq!(acc, serial, "bits={bits} len={len} threads={threads}");
+            }
+        }
+    }
+}
+
+/// Arbitrary (start, len) windows — not just partition boundaries — match
+/// the same slice of the full serial expansion, for both keystream layouts
+/// (one word per element at b ≤ 32, two at b > 32).
+#[test]
+fn arbitrary_shard_offsets_match_serial_expansion() {
+    let seed = [0x0Du8; 32];
+    let mut rng = Rng::new(0x0FF5E7);
+    for bits in [16u32, 32, 48, 64] {
+        let total = 1500usize;
+        let mut full = vec![0u64; total];
+        expand_masks(&seed, &NONCE_PAIRWISE, bits, &mut full);
+        for _ in 0..40 {
+            let start = rng.gen_range(total as u64) as usize;
+            let len = rng.gen_range((total - start) as u64 + 1) as usize;
+            let mut window = vec![0u64; len];
+            expand_masks_at(&seed, &NONCE_PAIRWISE, bits, start, &mut window);
+            assert_eq!(
+                &window[..],
+                &full[start..start + len],
+                "bits={bits} start={start} len={len}"
+            );
+
+            // and the fused form: applying the window range onto a base
+            // equals adding the full expansion's slice manually
+            let modm = mod_mask(bits);
+            let base = base_vector(len, bits, (start * 31 + len) as u64);
+            let mut fused = base.clone();
+            apply_mask_range(&mut fused, &seed, &NONCE_PAIRWISE, bits, true, start);
+            let manual: Vec<u64> = base
+                .iter()
+                .zip(&full[start..start + len])
+                .map(|(b, m)| b.wrapping_sub(*m) & modm)
+                .collect();
+            assert_eq!(fused, manual, "bits={bits} start={start} len={len}");
+        }
+    }
+}
+
+/// A mask applied sharded and removed serially (or vice versa) cancels
+/// exactly — the round-trip the server/client pair performs every round.
+#[test]
+fn sharded_apply_serial_remove_round_trip() {
+    let seed = [0xEEu8; 32];
+    for bits in [16u32, 32, 64] {
+        let len = 777usize;
+        let base = base_vector(len, bits, 0xE0);
+        let mut acc = base.clone();
+        par::for_each_slice(&mut acc, 4, |offset, slice| {
+            apply_mask_range(slice, &seed, &NONCE_SELF, bits, false, offset);
+        });
+        assert_ne!(acc, base, "mask must change the vector");
+        apply_mask(&mut acc, &seed, &NONCE_SELF, bits, true);
+        assert_eq!(acc, base, "bits={bits}");
+    }
+}
