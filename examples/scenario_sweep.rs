@@ -15,7 +15,7 @@
 use ccesa::analysis::bounds::p_star;
 use ccesa::protocol::Topology;
 use ccesa::sim::{
-    run_campaign, run_differential, AdversarySpec, ChurnModel, Driver, Scenario, ThresholdRule,
+    run_campaign, run_differential, AdversarySpec, ChurnModel, Executor, Scenario, ThresholdRule,
     TopologySchedule,
 };
 use ccesa::util::cli::Args;
@@ -66,7 +66,7 @@ fn main() -> anyhow::Result<()> {
             clip: 4.0,
             seed,
         };
-        let rep = run_campaign(&sc, Driver::Engine)?;
+        let rep = run_campaign(&sc, Executor::Engine)?;
         println!(
             "{:<10} {:>8} {:>8} {:>8} {:>8} {:>10} {:>12.1}",
             label,

@@ -8,7 +8,7 @@
 //! populated: median/p95 per case, host core count, and the thread sweep
 //! (thread count is encoded in each case name).
 
-use ccesa::bench::{black_box, json_sink, Bench};
+use ccesa::bench::{black_box, Bench};
 use ccesa::crypto::prg::{apply_mask, apply_mask_jobs_range, MaskJob};
 use ccesa::masking::random_vector;
 use ccesa::par;
@@ -134,11 +134,5 @@ fn main() {
     // cargo runs bench binaries with cwd = the package root (rust/);
     // anchor the default artifact at the workspace root so CI and humans
     // find it where the repo documents it.
-    let default_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_aggregate.json");
-    if let Some(path) = json_sink(Some(default_path)) {
-        match b.write_json(&path) {
-            Ok(()) => println!("wrote {path}"),
-            Err(e) => eprintln!("failed to write {path}: {e}"),
-        }
-    }
+    b.write_report_to_sink(concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_aggregate.json"));
 }

@@ -1,22 +1,28 @@
 //! Campaign throughput at production scale: full scenario rounds per
-//! second through the sync engine and the threaded coordinator, up to
-//! n ≈ 1000 clients (the paper's largest regime).
+//! second through the sync engine, the thread-per-client coordinator, and
+//! the worker-pool event loop, up to n ≈ 1000 clients — plus an n = 10⁵
+//! smoke path for the event loop, the regime the thread-per-client shape
+//! cannot reach at all.
 //!
 //! The Harary topology keeps the per-client degree fixed (8), so the cost
 //! per round scales linearly in n and the rounds/s numbers compare across
 //! population sizes. `CCESA_BENCH_BUDGET_MS` caps the per-case measurement
 //! budget (one warmup iteration per case still runs — the floor for the
-//! n=1000 cases is a handful of full campaign rounds).
+//! n=1000 cases is a handful of full campaign rounds). The n = 10⁵ case
+//! costs seconds per iteration and only runs with `CCESA_BENCH_FULL=1`;
+//! CI exercises the same scale through the ignored
+//! `event_loop_n100k_round` test instead.
 //!
 //! ```bash
 //! cargo bench --bench campaign_throughput
 //! CCESA_BENCH_BUDGET_MS=500 cargo bench --bench campaign_throughput
+//! CCESA_BENCH_FULL=1 cargo bench --bench campaign_throughput
 //! ```
 
 use ccesa::bench::{black_box, Bench};
 use ccesa::protocol::Topology;
 use ccesa::sim::{
-    run_campaign, AdversarySpec, ChurnModel, Driver, Scenario, ThresholdRule, TopologySchedule,
+    run_campaign, AdversarySpec, ChurnModel, Executor, Scenario, ThresholdRule, TopologySchedule,
 };
 
 fn scenario(n: usize, rounds: usize) -> Scenario {
@@ -41,21 +47,37 @@ fn main() {
     for &n in &[100usize, 400, 1000] {
         let sc = scenario(n, 1);
         b.throughput(&format!("campaign round n={n} (engine)"), n as f64, "client/s", || {
-            black_box(run_campaign(&sc, Driver::Engine).unwrap());
+            black_box(run_campaign(&sc, Executor::Engine).unwrap());
         });
     }
 
+    // the two deployment shapes, side by side at the same populations
     for &n in &[100usize, 1000] {
         let sc = scenario(n, 1);
-        b.throughput(
-            &format!("campaign round n={n} (coordinator)"),
-            n as f64,
-            "client/s",
-            || {
-                black_box(run_campaign(&sc, Driver::Coordinator).unwrap());
-            },
-        );
+        b.throughput(&format!("campaign round n={n} (threaded)"), n as f64, "client/s", || {
+            black_box(run_campaign(&sc, Executor::Threaded).unwrap());
+        });
+        b.throughput(&format!("campaign round n={n} (event-loop)"), n as f64, "client/s", || {
+            black_box(run_campaign(&sc, Executor::EventLoop).unwrap());
+        });
+    }
+
+    // n = 10⁵ smoke path: thread cost stays O(par::threads()) while the
+    // thread-per-client shape would need 100k OS threads here
+    if std::env::var("CCESA_BENCH_FULL").ok().as_deref() == Some("1") {
+        let n = 100_000;
+        let sc = scenario(n, 1);
+        b.throughput(&format!("campaign round n={n} (event-loop)"), n as f64, "client/s", || {
+            black_box(run_campaign(&sc, Executor::EventLoop).unwrap());
+        });
+    } else {
+        eprintln!("skipping n=100000 event-loop smoke (set CCESA_BENCH_FULL=1)");
     }
 
     b.report();
+    // cargo runs bench binaries with cwd = the package root (rust/);
+    // anchor the default artifact at the workspace root so CI and humans
+    // find it where the repo documents it.
+    let default = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_campaign_throughput.json");
+    b.write_report_to_sink(default);
 }

@@ -76,4 +76,5 @@ fn main() {
     );
 
     b.report();
+    b.write_report_to_sink(concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_masking_hotpath.json"));
 }

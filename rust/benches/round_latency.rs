@@ -1,10 +1,11 @@
 //! End-to-end round latency vs n (E-perf / Table 5.1 aggregate), the
-//! threaded coordinator vs the sync engine, and the PJRT masked_sum
-//! kernel vs the pure-Rust server aggregation.
+//! deployment shapes (thread-per-client, worker-pool event loop) vs the
+//! sync engine, and the PJRT masked_sum kernel vs the pure-Rust server
+//! aggregation.
 
 use ccesa::analysis::bounds::{p_star, t_rule};
 use ccesa::bench::{black_box, Bench};
-use ccesa::coordinator::run_round_threaded;
+use ccesa::coordinator::{run_round_event_loop, run_round_threaded};
 use ccesa::protocol::engine::run_round;
 use ccesa::protocol::{ProtocolConfig, Topology};
 use ccesa::runtime::{to_u32, Input, Manifest, Runtime};
@@ -31,6 +32,9 @@ fn main() {
         if n == 100 {
             b.bench(&format!("round n={n} CCESA(p*) threaded"), || {
                 black_box(run_round_threaded(&cc_cfg, &models).unwrap());
+            });
+            b.bench(&format!("round n={n} CCESA(p*) event-loop"), || {
+                black_box(run_round_event_loop(&cc_cfg, &models).unwrap());
             });
         }
     }
@@ -74,4 +78,5 @@ fn main() {
     }
 
     b.report();
+    b.write_report_to_sink(concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_round_latency.json"));
 }

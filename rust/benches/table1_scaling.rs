@@ -7,13 +7,16 @@
 //! Client time:  CCESA ≈ p·SA           SA O(n²+mn)
 
 use ccesa::analysis::bounds::{p_star, t_rule};
+use ccesa::bench::{Bench, BenchResult};
 use ccesa::protocol::engine::run_round;
 use ccesa::protocol::{ProtocolConfig, Topology};
 use ccesa::util::rng::Rng;
-use ccesa::util::stats::power_law_exponent;
+use ccesa::util::stats::{power_law_exponent, Summary};
+use std::time::Instant;
 
 fn main() {
     let full = std::env::var("CCESA_BENCH_FULL").ok().as_deref() == Some("1");
+    let mut b = Bench::new("table1_scaling");
     let ns: Vec<usize> = if full {
         vec![50, 100, 200, 400, 800]
     } else {
@@ -34,16 +37,31 @@ fn main() {
             .map(|_| (0..dim).map(|_| rng.next_u64() & 0xFFFF_FFFF).collect())
             .collect();
         let p = p_star(n, 0.0);
+        let t0 = Instant::now();
         let cc = run_round(
             &ProtocolConfig::new(n, t_rule(n, p), dim, Topology::ErdosRenyi { p }, 7),
             &models,
         )
         .expect("ccesa round");
+        let cc_s = t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
         let sa = run_round(
             &ProtocolConfig::new(n, n / 2 + 1, dim, Topology::Complete, 7),
             &models,
         )
         .expect("sa round");
+        let sa_s = t0.elapsed().as_secs_f64();
+        // one wall-clock sample per round into the standard bench schema
+        // (this target measures one full round per configuration — it has
+        // no iteration loop to hand to Bench::bench)
+        for (scheme, secs) in [("ccesa", cc_s), ("sa", sa_s)] {
+            b.results.push(BenchResult {
+                name: format!("round n={n} {scheme} (dim={dim})"),
+                iters: 1,
+                summary: Summary::of(&[secs]),
+                throughput_label: None,
+            });
+        }
         let model_bytes = (dim * 4) as f64;
         let cl_cc = cc.stats.mean_client_total() - model_bytes;
         let cl_sa = sa.stats.mean_client_total() - model_bytes;
@@ -81,4 +99,6 @@ fn main() {
     let (k_tcc, _) = power_law_exponent(&xs, &col(4));
     let (k_tsa, _) = power_law_exponent(&xs, &col(5));
     println!("  client time CCESA            n^{k_tcc:.2}   vs SA n^{k_tsa:.2} (CCESA flatter)");
+
+    b.write_report_to_sink(concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_table1_scaling.json"));
 }

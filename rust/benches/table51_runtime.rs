@@ -7,13 +7,17 @@
 //! time — the paper's claim is the CCESA/SA ratio ≈ p.
 
 use ccesa::analysis::bounds::{p_star, t_rule};
+use ccesa::bench::{Bench, BenchResult};
 use ccesa::protocol::dropout::DropoutModel;
 use ccesa::protocol::engine::run_round;
 use ccesa::protocol::{ProtocolConfig, Topology};
 use ccesa::util::rng::Rng;
+use ccesa::util::stats::Summary;
+use std::time::Instant;
 
 fn main() {
     let full = std::env::var("CCESA_BENCH_FULL").ok().as_deref() == Some("1");
+    let mut b = Bench::new("table51_runtime");
     let ns: &[usize] = if full { &[100, 300, 500] } else { &[100, 300] };
     let dim = 10_000;
     let mask_bits = 16;
@@ -31,7 +35,7 @@ fn main() {
             let models: Vec<Vec<u64>> = (0..n)
                 .map(|_| (0..dim).map(|_| rng.next_u64() & 0xFFFF).collect())
                 .collect();
-            let row = |scheme: &str, topology: Topology, t: usize, p_label: f64| -> f64 {
+            let mut row = |scheme: &str, topology: Topology, t: usize, p_label: f64| -> f64 {
                 let cfg = ProtocolConfig {
                     n,
                     t,
@@ -45,7 +49,17 @@ fn main() {
                     },
                     seed: 0xBE7C + n as u64,
                 };
+                let t0 = Instant::now();
                 let r = run_round(&cfg, &models).expect("round");
+                // one wall-clock sample per configuration into the standard
+                // bench schema (one full round per table row — no
+                // iteration loop to hand to Bench::bench)
+                b.results.push(BenchResult {
+                    name: format!("{scheme} round n={n} q={q_total}"),
+                    iters: 1,
+                    summary: Summary::of(&[t0.elapsed().as_secs_f64()]),
+                    throughput_label: None,
+                });
                 let per_client = |name: &str| {
                     // engine buckets aggregate all clients; report mean/client
                     r.times.total_ms(name) / n as f64
@@ -80,4 +94,6 @@ fn main() {
     println!(
         "\nmean (measured ratio)/(predicted p) = {mean_rel:.2} — 1.0 is a perfect Table 5.1 match"
     );
+
+    b.write_report_to_sink(concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_table51_runtime.json"));
 }

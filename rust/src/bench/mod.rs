@@ -189,6 +189,20 @@ impl Bench {
         std::fs::write(path, format!("{}\n", self.to_json()))
     }
 
+    /// Standard bench-binary epilogue: write the JSON report to whatever
+    /// sink [`json_sink`] resolves (`--json PATH` / `CCESA_BENCH_JSON` /
+    /// `default_path`), logging the outcome. Every bench target calls this
+    /// with its canonical `BENCH_<name>.json` path so its report joins the
+    /// CI bench-trajectory gate (`tools/bench_gate.py`).
+    pub fn write_report_to_sink(&self, default_path: &str) {
+        if let Some(path) = json_sink(Some(default_path)) {
+            match self.write_json(&path) {
+                Ok(()) => println!("wrote {path}"),
+                Err(e) => eprintln!("failed to write {path}: {e}"),
+            }
+        }
+    }
+
     /// Print a formatted report for the group.
     pub fn report(&self) {
         println!("\n== bench group: {} ==", self.group);
@@ -228,6 +242,11 @@ pub fn black_box<T>(x: T) -> T {
 /// -- …`) wins, then the `CCESA_BENCH_JSON` env var, then `default`
 /// (benches with a canonical artifact, e.g. `BENCH_aggregate.json`, pass
 /// one; ad-hoc benches pass `None` and stay stdout-only).
+///
+/// The override names ONE file, but a bare `cargo bench` runs every
+/// target — each would clobber the previous report. Use `--json` /
+/// `CCESA_BENCH_JSON` only with a single `--bench <target>`; multi-target
+/// sweeps (CI) should rely on the per-target defaults.
 pub fn json_sink(default: Option<&str>) -> Option<String> {
     let mut args = std::env::args().skip(1);
     while let Some(a) = args.next() {

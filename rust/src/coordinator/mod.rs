@@ -1,46 +1,41 @@
-//! Threaded deployment shape: the server event loop and one worker thread
-//! per client, exchanging the protocol messages over mpsc channels.
+//! Deployment shapes for one aggregation round: how n client state
+//! machines and one server actually execute.
 //!
 //! `protocol::engine` is the deterministic synchronous core used by tests
-//! and benches; this module is the "real service" arrangement — clients
-//! are concurrent, the server collects each phase as messages arrive, and
-//! per-phase completion is detected by counting (every live client either
-//! responds or reports that it dropped). With `DropoutModel::None` or
-//! `Targeted` the result is bit-identical to the sync engine for the same
-//! seed (asserted in tests).
+//! and benches. This module provides two "real service" arrangements built
+//! on the same poll-able [`ClientSm`]:
+//!
+//! * [`run_round_event_loop`] — **the scaling shape.** A single event loop
+//!   multiplexes all n client state machines over a fixed worker pool
+//!   (`par::threads()`-sized): clients are sharded deterministically across
+//!   workers, each protocol phase is one parallel sweep over the shards,
+//!   and the server drains the resulting `Up` messages in client-id order.
+//!   Thread cost is O(workers), independent of n — a 10⁵-client round runs
+//!   on a handful of OS threads.
+//! * [`run_round_threaded`] — the legacy thread-per-client shape: one OS
+//!   thread per client exchanging the same `Up`/`Down` messages over mpsc
+//!   channels. It caps out at a few thousand clients (thread-spawn cost and
+//!   scheduler pressure) and is kept only as a differential witness until
+//!   the event loop's equivalence suite has proven itself everywhere; it is
+//!   scheduled for deletion (see ROADMAP).
+//!
+//! With `DropoutModel::None` or `Targeted` (rng-free models), both shapes
+//! produce sums, survivor sets and `NetStats` bit-identical to the sync
+//! engine for the same seed (asserted in tests and in the randomized
+//! differential harness, `sim::differential`).
 
 use crate::net::{Dir, NetStats};
-use crate::protocol::client::Client;
+use crate::protocol::client::ClientSm;
 use crate::protocol::messages::*;
 use crate::protocol::server::{RoundOutput, Server};
 use crate::protocol::{ClientId, ProtocolConfig, SurvivorSets};
 use crate::util::rng::Rng;
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
 
-/// Client → server messages; every live client sends exactly one per phase.
-enum Up {
-    Adv(AdvertiseKeys),
-    Shares(ShareUpload),
-    Masked(MaskedInput),
-    Unmask(UnmaskShares),
-    /// client dropped during the given phase
-    Dropped(ClientId, u8),
-    /// client hit an internal error — treated as a drop, but logged
-    Failed(ClientId, u8, String),
-}
-
-/// Server → client phase inputs.
-enum Down {
-    Bundle(KeyBundle),
-    Delivery(ShareDelivery),
-    Announce(SurvivorAnnounce),
-    /// round over (client not needed further)
-    Finish,
-}
-
-/// Outcome of a threaded round (mirrors the engine's essentials).
+/// Outcome of a coordinated round (mirrors the engine's essentials).
 #[derive(Debug)]
 pub struct CoordRoundResult {
     pub sum: Option<Vec<u64>>,
@@ -49,92 +44,277 @@ pub struct CoordRoundResult {
     pub stats: NetStats,
 }
 
-/// Run one aggregation round with real threads.
+/// How the event loop actually ran — the observable for "no thread-per-
+/// client" assertions.
+#[derive(Debug, Clone, Copy)]
+pub struct LoopTelemetry {
+    /// Worker budget the loop ran with.
+    pub workers: usize,
+    /// Maximum number of concurrently live pool threads observed across
+    /// all sweeps (1 when a sweep ran inline on the caller's thread).
+    pub peak_live_workers: usize,
+    /// Parallel sweeps executed — one per protocol phase reached.
+    pub sweeps: usize,
+}
+
+/// Minimum clients a pool worker should own before a sweep is worth its
+/// thread spawns: a client step costs tens of µs of crypto (x25519
+/// agreements, Shamir splits), so ~16 clients dwarf the ~10 µs spawn+join.
+/// Below `workers · MIN_CLIENTS_PER_WORKER` clients the sweep degrades
+/// toward fewer workers (1 at simulation sizes) and runs inline,
+/// bit-identically.
+pub const MIN_CLIENTS_PER_WORKER: usize = 16;
+
+/// Default worker count for an n-client event loop: [`crate::par::threads`]
+/// capped so each worker owns at least [`MIN_CLIENTS_PER_WORKER`] clients.
+pub fn event_loop_workers(n: usize) -> usize {
+    crate::par::threads().min(n / MIN_CLIENTS_PER_WORKER).max(1)
+}
+
+/// Pre-draw every client's per-step dropout decision in the sync engine's
+/// draw order (step-major, client-minor), so rng-free models produce
+/// identical survivor sets in every execution shape.
+fn predraw_survivals(cfg: &ProtocolConfig, dropout_rng: &mut Rng) -> Vec<[bool; 4]> {
+    let mut survives = vec![[true; 4]; cfg.n];
+    for step in 0..4 {
+        for (id, s) in survives.iter_mut().enumerate() {
+            s[step] = cfg.dropout.survives(step, id, dropout_rng);
+        }
+    }
+    survives
+}
+
+/// One client's slot in the event loop: its state machine plus single-entry
+/// mailboxes. The loop writes `inbox` while routing, a sweep moves
+/// `inbox → step → outbox`, and the drain empties `outbox` in id order.
+struct Lane<'m> {
+    sm: ClientSm<'m>,
+    inbox: Option<Down>,
+    outbox: Option<Up>,
+}
+
+/// One parallel sweep: step every lane holding a phase input, sharding the
+/// lane vector contiguously across at most `workers` pool threads. The
+/// gauge pair records the peak number of concurrently live workers.
+fn sweep_lanes(lanes: &mut [Lane<'_>], workers: usize, live: &AtomicUsize, peak: &AtomicUsize) {
+    crate::par::for_each_slice(lanes, workers, |_, chunk| {
+        let cur = live.fetch_add(1, Ordering::SeqCst) + 1;
+        peak.fetch_max(cur, Ordering::SeqCst);
+        for lane in chunk.iter_mut() {
+            if let Some(down) = lane.inbox.take() {
+                lane.outbox = Some(lane.sm.step(down));
+            }
+        }
+        live.fetch_sub(1, Ordering::SeqCst);
+    });
+}
+
+/// Run one aggregation round through the worker-pool event loop with the
+/// default worker count ([`event_loop_workers`]).
+pub fn run_round_event_loop(
+    cfg: &ProtocolConfig,
+    models: &[Vec<u64>],
+) -> Result<CoordRoundResult> {
+    run_round_event_loop_with(cfg, models, event_loop_workers(cfg.n)).map(|(r, _)| r)
+}
+
+/// [`run_round_event_loop`] with an explicit worker budget, returning the
+/// loop telemetry alongside the result.
+pub fn run_round_event_loop_with(
+    cfg: &ProtocolConfig,
+    models: &[Vec<u64>],
+    workers: usize,
+) -> Result<(CoordRoundResult, LoopTelemetry)> {
+    assert_eq!(models.len(), cfg.n);
+    let workers = workers.max(1);
+    let mut rng = Rng::new(cfg.seed);
+    let graph = cfg.build_graph_with(&mut rng);
+    let mut dropout_rng = rng.split(0xD20);
+    let survives = predraw_survivals(cfg, &mut dropout_rng);
+
+    // RNG derivation is order-dependent (`split` advances the base), so the
+    // per-client streams are drawn serially — that part is cheap. The
+    // expensive part, key generation (two x25519 ladders per client inside
+    // `Client::new`), derives only from the already-split streams, so lane
+    // construction itself runs on the worker pool.
+    let streams: Vec<(Rng, Rng)> = (0..cfg.n)
+        .map(|id| (rng.split(0xC11E27 + id as u64), rng.split(0x5A12E + id as u64)))
+        .collect();
+    // The per-machine Step-2 mask budget splits the host budget across the
+    // sweep workers, so sweep × mask parallelism never exceeds
+    // `par::threads()` live threads — the "no thread-per-client" claim
+    // holds at any dim, not just when vectors are too short to shard.
+    let mask_workers = (crate::par::threads() / workers).max(1);
+    let mut lanes: Vec<Lane<'_>> = crate::par::map_indexed(cfg.n, workers, |id| {
+        let (mut key_rng, share_rng) = streams[id].clone();
+        let mut sm = ClientSm::new(
+            id,
+            cfg.t,
+            cfg.mask_bits,
+            graph.neighbors(id).to_vec(),
+            &mut key_rng,
+            share_rng,
+            &models[id],
+            survives[id],
+        );
+        sm.set_mask_workers(mask_workers);
+        Lane { sm, inbox: Some(Down::Start), outbox: None }
+    });
+    drop(streams); // lanes cloned their pairs; free ~2n ChaCha states
+
+    let mut server = Server::new(cfg.n, cfg.t, cfg.mask_bits, cfg.dim, graph.clone());
+    let mut stats = NetStats::new(cfg.n);
+    let live = AtomicUsize::new(0);
+    let peak = AtomicUsize::new(0);
+    let mut sweeps = 0usize;
+
+    // ---- phase 0: advertise keys
+    sweep_lanes(&mut lanes, workers, &live, &peak);
+    sweeps += 1;
+    let mut advs = Vec::new();
+    for lane in lanes.iter_mut() {
+        match lane.outbox.take() {
+            Some(Up::Adv(a)) => {
+                stats.record(0, Dir::Up, a.id, a.size_bytes());
+                advs.push(a);
+            }
+            Some(Up::Dropped(id, step)) => log::trace!("client {id} dropped at step {step}"),
+            Some(Up::Failed(id, step, e)) => {
+                log::debug!("client {id} failed step {step}: {e}")
+            }
+            Some(_) => bail!("protocol order violation in phase 0"),
+            None => bail!("client {} produced no phase-0 output", lane.sm.id()),
+        }
+    }
+    let bundles = server.step0_route_keys(advs)?;
+    for (id, b) in bundles {
+        stats.record(0, Dir::Down, id, b.size_bytes());
+        lanes[id].inbox = Some(Down::Bundle(b));
+    }
+
+    // ---- phase 1: share keys
+    sweep_lanes(&mut lanes, workers, &live, &peak);
+    sweeps += 1;
+    let mut uploads = Vec::new();
+    for lane in lanes.iter_mut() {
+        match lane.outbox.take() {
+            Some(Up::Shares(u)) => {
+                stats.record(1, Dir::Up, u.from, u.size_bytes());
+                uploads.push(u);
+            }
+            Some(Up::Dropped(id, step)) => log::trace!("client {id} dropped at step {step}"),
+            Some(Up::Failed(id, step, e)) => {
+                log::debug!("client {id} withdrew step {step}: {e}")
+            }
+            Some(_) => bail!("protocol order violation in phase 1"),
+            None => {}
+        }
+    }
+    let deliveries = server.step1_route_shares(uploads)?;
+    for (id, d) in deliveries {
+        stats.record(1, Dir::Down, id, d.size_bytes());
+        lanes[id].inbox = Some(Down::Delivery(d));
+    }
+
+    // ---- phase 2: masked inputs
+    sweep_lanes(&mut lanes, workers, &live, &peak);
+    sweeps += 1;
+    let mut masked = Vec::new();
+    for lane in lanes.iter_mut() {
+        match lane.outbox.take() {
+            Some(Up::Masked(m)) => {
+                stats.record(2, Dir::Up, m.id, m.size_bytes());
+                masked.push(m);
+            }
+            Some(Up::Dropped(id, step)) => log::trace!("client {id} dropped at step {step}"),
+            Some(Up::Failed(id, step, e)) => {
+                log::debug!("client {id} failed step {step}: {e}")
+            }
+            Some(_) => bail!("protocol order violation in phase 2"),
+            None => {}
+        }
+    }
+    let announce = Arc::new(server.step2_collect_masked(masked)?);
+    for &id in &announce.v3 {
+        stats.record(2, Dir::Down, id, announce.size_bytes());
+        lanes[id].inbox = Some(Down::Announce(announce.clone()));
+    }
+
+    // ---- phase 3: unmask shares
+    sweep_lanes(&mut lanes, workers, &live, &peak);
+    sweeps += 1;
+    let mut responses = Vec::new();
+    for lane in lanes.iter_mut() {
+        match lane.outbox.take() {
+            Some(Up::Unmask(u)) => {
+                stats.record(3, Dir::Up, u.from, u.size_bytes());
+                responses.push(u);
+            }
+            Some(Up::Dropped(id, step)) => log::trace!("client {id} dropped at step {step}"),
+            Some(Up::Failed(id, step, e)) => {
+                log::debug!("client {id} failed step {step}: {e}")
+            }
+            Some(_) => bail!("protocol order violation in phase 3"),
+            None => {}
+        }
+    }
+    let RoundOutput { sum, reliable, sets } = server.finalize(responses)?;
+
+    let telemetry = LoopTelemetry {
+        workers,
+        peak_live_workers: peak.load(Ordering::SeqCst).max(1),
+        sweeps,
+    };
+    Ok((CoordRoundResult { sum, reliable, sets, stats }, telemetry))
+}
+
+/// Run one aggregation round with real threads — one OS thread per client.
+///
+/// Legacy shape: scales to a few thousand clients at most. Kept as the
+/// differential witness for the event loop; new code should call
+/// [`run_round_event_loop`].
 pub fn run_round_threaded(cfg: &ProtocolConfig, models: &[Vec<u64>]) -> Result<CoordRoundResult> {
     assert_eq!(models.len(), cfg.n);
     let mut rng = Rng::new(cfg.seed);
     let graph = cfg.build_graph_with(&mut rng);
     let mut dropout_rng = rng.split(0xD20);
-
-    // Pre-draw dropout decisions in the engine's order so None/Targeted
-    // models produce identical survivor sets to the sync engine.
-    let mut survives = vec![[true; 4]; cfg.n];
-    for step in 0..4 {
-        for (id, s) in survives.iter_mut().enumerate() {
-            s[step] = cfg.dropout.survives(step, id, &mut dropout_rng);
-        }
-    }
+    let survives = predraw_survivals(cfg, &mut dropout_rng);
 
     let (tx_up, rx_up) = mpsc::channel::<Up>();
     let mut to_clients: BTreeMap<ClientId, mpsc::Sender<Down>> = BTreeMap::new();
 
     std::thread::scope(|scope| -> Result<CoordRoundResult> {
-        // spawn client workers
+        // spawn one worker per client, each driving its own state machine
         for id in 0..cfg.n {
             let (tx_down, rx_down) = mpsc::channel::<Down>();
             to_clients.insert(id, tx_down);
             let tx_up = tx_up.clone();
-            let neighbors = graph.neighbors(id).to_vec();
             let mut key_rng = rng.split(0xC11E27 + id as u64);
-            let mut share_rng = rng.split(0x5A12E + id as u64);
-            let model = models[id].clone();
+            let share_rng = rng.split(0x5A12E + id as u64);
+            let neighbors = graph.neighbors(id).to_vec();
+            let model: &[u64] = &models[id];
             let surv = survives[id];
             let t = cfg.t;
             let bits = cfg.mask_bits;
             scope.spawn(move || {
-                let mut me = Client::new(id, t, bits, neighbors, &mut key_rng);
-                // phase 0
-                if !surv[0] {
-                    let _ = tx_up.send(Up::Dropped(id, 0));
-                    return;
-                }
-                let _ = tx_up.send(Up::Adv(me.step0_advertise()));
-                // phase 1
-                let Ok(Down::Bundle(bundle)) = rx_down.recv() else { return };
-                if !surv[1] {
-                    let _ = tx_up.send(Up::Dropped(id, 1));
-                    return;
-                }
-                match me.step1_share_keys(&bundle, &mut share_rng) {
-                    Ok(up) => {
-                        let _ = tx_up.send(Up::Shares(up));
-                    }
-                    Err(e) => {
-                        // small live neighborhood ⇒ secure withdrawal
-                        let _ = tx_up.send(Up::Failed(id, 1, e.to_string()));
+                // key generation stays on the worker thread (parallel
+                // across clients), fed by the pre-split stream
+                let mut sm =
+                    ClientSm::new(id, t, bits, neighbors, &mut key_rng, share_rng, model, surv);
+                let mut up = sm.step(Down::Start);
+                loop {
+                    let finished = sm.done();
+                    let _ = tx_up.send(up);
+                    if finished {
                         return;
                     }
-                }
-                // phase 2
-                let Ok(Down::Delivery(delivery)) = rx_down.recv() else { return };
-                if !surv[2] {
-                    let _ = tx_up.send(Up::Dropped(id, 2));
-                    return;
-                }
-                match me.step2_masked_input(&delivery, &model) {
-                    Ok(mi) => {
-                        let _ = tx_up.send(Up::Masked(mi));
-                    }
-                    Err(e) => {
-                        let _ = tx_up.send(Up::Failed(id, 2, e.to_string()));
-                        return;
+                    match rx_down.recv() {
+                        // Finish (or a closed channel) ends the worker
+                        // without a protocol response
+                        Ok(Down::Finish) | Err(_) => return,
+                        Ok(down) => up = sm.step(down),
                     }
                 }
-                // phase 3
-                let Ok(Down::Announce(announce)) = rx_down.recv() else { return };
-                if !surv[3] {
-                    let _ = tx_up.send(Up::Dropped(id, 3));
-                    return;
-                }
-                match me.step3_unmask(&announce) {
-                    Ok(um) => {
-                        let _ = tx_up.send(Up::Unmask(um));
-                    }
-                    Err(e) => {
-                        let _ = tx_up.send(Up::Failed(id, 3, e.to_string()));
-                    }
-                }
-                let _ = rx_down.recv(); // Finish
             });
         }
         drop(tx_up);
@@ -207,7 +387,7 @@ pub fn run_round_threaded(cfg: &ProtocolConfig, models: &[Vec<u64>]) -> Result<C
                 }
             }
             masked.sort_by_key(|m| m.id);
-            let announce = server.step2_collect_masked(masked)?;
+            let announce = Arc::new(server.step2_collect_masked(masked)?);
             let expect3 = announce.v3.len();
             for &id in &announce.v3 {
                 stats.record(2, Dir::Down, id, announce.size_bytes());
@@ -233,8 +413,7 @@ pub fn run_round_threaded(cfg: &ProtocolConfig, models: &[Vec<u64>]) -> Result<C
         })();
 
         // Unblock every worker that is still waiting for its next phase
-        // input: Finish fails the worker's expected-message pattern match,
-        // so it exits; workers that already returned just drop the send.
+        // input; workers that already returned just drop the send.
         for tx in to_clients.values() {
             let _ = tx.send(Down::Finish);
         }
@@ -256,22 +435,42 @@ mod tests {
             .collect()
     }
 
+    /// Σ over the given clients in Z_{2^32} — the tests' sum oracle.
+    fn expected_sum(m: &[Vec<u64>], ids: impl Iterator<Item = usize>, dim: usize) -> Vec<u64> {
+        let mut expect = vec![0u64; dim];
+        for i in ids {
+            for (a, x) in expect.iter_mut().zip(&m[i]) {
+                *a = a.wrapping_add(*x) & 0xFFFF_FFFF;
+            }
+        }
+        expect
+    }
+
+    /// Both deployment shapes against the sync engine.
+    fn assert_all_shapes_match_engine(cfg: &ProtocolConfig, m: &[Vec<u64>]) {
+        let sync = engine::run_round(cfg, m).unwrap();
+        for (name, r) in [
+            ("threaded", run_round_threaded(cfg, m).unwrap()),
+            ("event-loop", run_round_event_loop(cfg, m).unwrap()),
+        ] {
+            assert_eq!(r.reliable, sync.reliable, "{name}: reliable");
+            assert_eq!(r.sets, sync.sets, "{name}: survivor sets");
+            assert_eq!(r.sum, sync.sum, "{name}: sum");
+            assert_eq!(r.stats, sync.stats, "{name}: NetStats");
+        }
+    }
+
     #[test]
-    fn threaded_matches_sync_engine_no_dropout() {
+    fn both_shapes_match_sync_engine_no_dropout() {
         let n = 12;
         let dim = 40;
         let cfg = ProtocolConfig::new(n, 5, dim, Topology::ErdosRenyi { p: 0.7 }, 2024);
         let m = models(n, dim, 3);
-        let sync = engine::run_round(&cfg, &m).unwrap();
-        let threaded = run_round_threaded(&cfg, &m).unwrap();
-        assert_eq!(threaded.reliable, sync.reliable);
-        assert_eq!(threaded.sets, sync.sets);
-        assert_eq!(threaded.sum, sync.sum);
-        assert_eq!(threaded.stats.server_total(), sync.stats.server_total());
+        assert_all_shapes_match_engine(&cfg, &m);
     }
 
     #[test]
-    fn threaded_matches_sync_engine_targeted_dropout() {
+    fn both_shapes_match_sync_engine_targeted_dropout() {
         let n = 10;
         let dim = 16;
         let cfg = ProtocolConfig {
@@ -281,11 +480,7 @@ mod tests {
             ..ProtocolConfig::new(n, 4, dim, Topology::Complete, 77)
         };
         let m = models(n, dim, 4);
-        let sync = engine::run_round(&cfg, &m).unwrap();
-        let threaded = run_round_threaded(&cfg, &m).unwrap();
-        assert_eq!(threaded.reliable, sync.reliable);
-        assert_eq!(threaded.sets, sync.sets);
-        assert_eq!(threaded.sum, sync.sum);
+        assert_all_shapes_match_engine(&cfg, &m);
     }
 
     #[test]
@@ -296,20 +491,40 @@ mod tests {
         let m = models(n, dim, 6);
         let r = run_round_threaded(&cfg, &m).unwrap();
         assert!(r.reliable);
-        let mut expect = vec![0u64; dim];
-        for mv in &m {
-            for (a, x) in expect.iter_mut().zip(mv) {
-                *a = a.wrapping_add(*x) & 0xFFFF_FFFF;
-            }
+        assert_eq!(r.sum.unwrap(), expected_sum(&m, 0..n, dim));
+    }
+
+    #[test]
+    fn event_loop_sum_is_true_sum_across_worker_counts() {
+        // the result must not depend on how lanes shard across workers
+        let n = 9;
+        let dim = 20;
+        let cfg = ProtocolConfig::new(n, 4, dim, Topology::Complete, 6);
+        let m = models(n, dim, 7);
+        let expect = expected_sum(&m, 0..n, dim);
+        for workers in [1usize, 2, 3, 8] {
+            let (r, tel) = run_round_event_loop_with(&cfg, &m, workers).unwrap();
+            assert!(r.reliable, "workers={workers}");
+            assert_eq!(r.sum.as_ref().unwrap(), &expect, "workers={workers}");
+            assert!(tel.peak_live_workers <= workers.max(1), "workers={workers}");
+            assert_eq!(tel.sweeps, 4);
         }
-        assert_eq!(r.sum.unwrap(), expect);
+    }
+
+    #[test]
+    fn event_loop_worker_default_scales_with_population() {
+        assert_eq!(event_loop_workers(0), 1);
+        assert_eq!(event_loop_workers(MIN_CLIENTS_PER_WORKER - 1), 1);
+        let big = event_loop_workers(MIN_CLIENTS_PER_WORKER * 1024);
+        assert!(big >= 1 && big <= crate::par::threads());
+        assert!(event_loop_workers(MIN_CLIENTS_PER_WORKER * 2) <= 2);
     }
 
     #[test]
     fn aborted_round_terminates_and_errors() {
         // every client dropping at step 0 leaves |V1| = 0 < t: the server
-        // aborts mid-protocol; the call must return Err rather than
-        // deadlock joining workers that never got their phase input
+        // aborts mid-protocol; both shapes must return Err — the threaded
+        // one without deadlocking on workers that never got phase input
         let n = 6;
         let cfg = ProtocolConfig {
             dropout: DropoutModel::Targeted {
@@ -319,6 +534,7 @@ mod tests {
         };
         let m = models(n, 4, 3);
         assert!(run_round_threaded(&cfg, &m).is_err());
+        assert!(run_round_event_loop(&cfg, &m).is_err());
     }
 
     #[test]
@@ -335,13 +551,15 @@ mod tests {
         };
         let m = models(n, 4, 4);
         assert!(run_round_threaded(&cfg, &m).is_err());
+        assert!(run_round_event_loop(&cfg, &m).is_err());
     }
 
     #[test]
-    fn threaded_iid_dropout_terminates_and_is_consistent() {
-        // Iid dropout draws happen in a fixed pre-pass, so the run is
+    fn iid_dropout_terminates_and_is_consistent() {
+        // Iid dropout draws happen in a fixed pre-pass, so each shape is
         // deterministic; the protocol must terminate and, when reliable,
-        // produce exactly the V3 sum.
+        // produce exactly the V3 sum. Both shapes share the pre-pass, so
+        // they also agree with each other.
         for seed in 0..5 {
             let n = 14;
             let cfg = ProtocolConfig {
@@ -349,20 +567,20 @@ mod tests {
                 ..ProtocolConfig::new(n, 5, 8, Topology::ErdosRenyi { p: 0.8 }, 100 + seed)
             };
             let m = models(n, 8, seed);
-            match run_round_threaded(&cfg, &m) {
-                Ok(r) => {
-                    if r.reliable {
-                        let sum = r.sum.unwrap();
-                        let mut expect = vec![0u64; 8];
-                        for &i in &r.sets.v3 {
-                            for (a, x) in expect.iter_mut().zip(&m[i]) {
-                                *a = a.wrapping_add(*x) & 0xFFFF_FFFF;
-                            }
-                        }
-                        assert_eq!(sum, expect, "seed={seed}");
+            let threaded = run_round_threaded(&cfg, &m);
+            let looped = run_round_event_loop(&cfg, &m);
+            match (threaded, looped) {
+                (Ok(a), Ok(b)) => {
+                    assert_eq!(a.sets, b.sets, "seed={seed}");
+                    assert_eq!(a.sum, b.sum, "seed={seed}");
+                    assert_eq!(a.stats, b.stats, "seed={seed}");
+                    if a.reliable {
+                        let expect = expected_sum(&m, a.sets.v3.iter().copied(), 8);
+                        assert_eq!(a.sum.unwrap(), expect, "seed={seed}");
                     }
                 }
-                Err(_) => { /* |V_k| < t abort is acceptable under dropout */ }
+                (Err(_), Err(_)) => { /* |V_k| < t abort is acceptable under dropout */ }
+                (a, b) => panic!("shapes disagree on abort: seed={seed} {a:?} vs {b:?}"),
             }
         }
     }

@@ -3,6 +3,12 @@
 //! A [`Client`] is driven through `step0_advertise → step1_share_keys →
 //! step2_masked_input → step3_unmask`. Any step may simply not be called
 //! (dropout); the state carries everything needed by later steps.
+//!
+//! [`ClientSm`] wraps a [`Client`] into an explicit poll-able machine with
+//! a single `step(Down) -> Up` transition — the unit both deployment
+//! shapes in `crate::coordinator` multiplex: the thread-per-client
+//! coordinator drives one per worker thread, the event-loop coordinator
+//! sweeps thousands of them per pool worker.
 
 use super::messages::*;
 use super::ClientId;
@@ -151,6 +157,21 @@ impl Client {
         delivery: &ShareDelivery,
         model: &[u64],
     ) -> Result<MaskedInput> {
+        let workers = crate::par::threads_for_len(model.len());
+        self.step2_masked_input_with(delivery, model, workers)
+    }
+
+    /// [`Client::step2_masked_input`] with an explicit worker budget for
+    /// the mask pass. Coordinators that step many clients from a worker
+    /// pool pass a reduced budget (host threads ÷ pool workers) so nested
+    /// parallelism cannot oversubscribe the host; the result is
+    /// bit-identical for any worker count (see `crate::par`).
+    pub fn step2_masked_input_with(
+        &mut self,
+        delivery: &ShareDelivery,
+        model: &[u64],
+        workers: usize,
+    ) -> Result<MaskedInput> {
         for es in &delivery.shares {
             if es.to != self.id {
                 bail!("misrouted ciphertext: to={} at client {}", es.to, self.id);
@@ -172,11 +193,13 @@ impl Client {
             jobs.push(MaskJob { seed, pairwise: true, negate: self.id > j });
         }
 
-        // Execute: one parallel pass over disjoint model slices.
+        // Execute: one parallel pass over disjoint model slices. Never more
+        // workers than the vector length warrants, whatever the caller's
+        // budget.
         let bits = self.mask_bits;
         let mask = crate::util::mod_mask(bits);
         let mut masked: Vec<u64> = model.iter().map(|&w| w & mask).collect();
-        let workers = crate::par::threads_for_len(masked.len());
+        let workers = workers.clamp(1, crate::par::threads_for_len(masked.len()));
         crate::par::for_each_slice(&mut masked, workers, |offset, slice| {
             apply_mask_jobs_range(slice, &jobs, bits, offset);
         });
@@ -224,6 +247,144 @@ impl Client {
             }
         }
         Ok(UnmaskShares { from: self.id, shares })
+    }
+}
+
+/// Explicit poll-able per-client state machine: one [`step`](ClientSm::step)
+/// call consumes the server's phase input ([`Down`]) and yields exactly one
+/// phase output ([`Up`]).
+///
+/// The machine owns everything a round needs from the client side — the
+/// [`Client`] crypto state, its Shamir share RNG, a borrow of its model
+/// vector, and the pre-drawn per-step survival decisions — so a coordinator
+/// only routes messages. Phases advance `0 → 1 → 2 → 3`; a dropout,
+/// withdrawal (step-1 error), protocol-order violation, or [`Down::Finish`]
+/// sends the machine to the terminal state ([`done`](ClientSm::done)).
+pub struct ClientSm<'m> {
+    client: Client,
+    share_rng: Rng,
+    model: &'m [u64],
+    /// Pre-drawn survival decision per phase (rng-free replay of the
+    /// dropout model, in the sync engine's draw order).
+    survives: [bool; 4],
+    /// Phase whose input the machine expects next; > 3 means done.
+    phase: u8,
+    /// Worker budget for the Step-2 mask pass; `None` = auto per vector
+    /// length (see [`ClientSm::set_mask_workers`]).
+    mask_workers: Option<usize>,
+}
+
+impl<'m> ClientSm<'m> {
+    /// Build the machine. `key_rng` seeds the key pairs (consumed here, as
+    /// `Client::new` draws from it); `share_rng` is retained for the
+    /// Step-1 Shamir splits.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        id: ClientId,
+        t: usize,
+        mask_bits: u32,
+        neighbors: Vec<ClientId>,
+        key_rng: &mut Rng,
+        share_rng: Rng,
+        model: &'m [u64],
+        survives: [bool; 4],
+    ) -> ClientSm<'m> {
+        ClientSm {
+            client: Client::new(id, t, mask_bits, neighbors, key_rng),
+            share_rng,
+            model,
+            survives,
+            phase: 0,
+            mask_workers: None,
+        }
+    }
+
+    /// Cap the worker budget of this machine's Step-2 mask pass. A
+    /// coordinator that steps many machines concurrently from a worker
+    /// pool passes `par::threads() / pool_workers` so sweep × mask
+    /// parallelism never exceeds the host budget; the masked result is
+    /// bit-identical for any budget.
+    pub fn set_mask_workers(&mut self, workers: usize) {
+        self.mask_workers = Some(workers.max(1));
+    }
+
+    pub fn id(&self) -> ClientId {
+        self.client.id
+    }
+
+    /// The round is over for this client: it completed Step 3, dropped,
+    /// failed, or was finished by the server.
+    pub fn done(&self) -> bool {
+        self.phase > 3
+    }
+
+    /// Drive one phase transition. Every call yields exactly one [`Up`];
+    /// the caller decides whether to deliver it (the threaded coordinator
+    /// does not forward the response to a [`Down::Finish`]).
+    pub fn step(&mut self, down: Down) -> Up {
+        let id = self.client.id;
+        let Some(phase) = down.phase() else {
+            // Down::Finish — the server no longer needs this client.
+            let at = self.phase.min(3);
+            self.phase = 4;
+            return Up::Dropped(id, at);
+        };
+        if phase != self.phase {
+            let expected = self.phase;
+            self.phase = 4;
+            return Up::Failed(
+                id,
+                phase,
+                format!("protocol order violation: phase-{phase} input, expected {expected}"),
+            );
+        }
+        if !self.survives[phase as usize] {
+            self.phase = 4;
+            return Up::Dropped(id, phase);
+        }
+        match down {
+            Down::Start => {
+                self.phase = 1;
+                Up::Adv(self.client.step0_advertise())
+            }
+            Down::Bundle(bundle) => {
+                match self.client.step1_share_keys(&bundle, &mut self.share_rng) {
+                    Ok(up) => {
+                        self.phase = 2;
+                        Up::Shares(up)
+                    }
+                    Err(e) => {
+                        // small live neighborhood ⇒ secure withdrawal
+                        self.phase = 4;
+                        Up::Failed(id, 1, e.to_string())
+                    }
+                }
+            }
+            Down::Delivery(delivery) => {
+                let stepped = match self.mask_workers {
+                    Some(w) => self.client.step2_masked_input_with(&delivery, self.model, w),
+                    None => self.client.step2_masked_input(&delivery, self.model),
+                };
+                match stepped {
+                    Ok(mi) => {
+                        self.phase = 3;
+                        Up::Masked(mi)
+                    }
+                    Err(e) => {
+                        self.phase = 4;
+                        Up::Failed(id, 2, e.to_string())
+                    }
+                }
+            }
+            Down::Announce(announce) => {
+                self.phase = 4; // Step 3 is the last transition either way
+                match self.client.step3_unmask(&announce) {
+                    Ok(um) => Up::Unmask(um),
+                    Err(e) => Up::Failed(id, 3, e.to_string()),
+                }
+            }
+            Down::Finish => unreachable!("Finish handled above (phase() is None)"),
+        }
     }
 }
 
@@ -359,5 +520,78 @@ mod tests {
             shares: vec![EncryptedShare { from: 1, to: 2, ciphertext: vec![0; 32] }],
         };
         assert!(a.step2_masked_input(&bad, &[0u64; 4]).is_err());
+    }
+
+    fn mk_sm(model: &[u64], survives: [bool; 4]) -> ClientSm<'_> {
+        let mut key_rng = Rng::new(50);
+        ClientSm::new(0, 1, 32, vec![], &mut key_rng, Rng::new(51), model, survives)
+    }
+
+    #[test]
+    fn sm_advertises_then_rejects_out_of_order_input() {
+        let model = vec![1u64; 4];
+        let mut sm = mk_sm(&model, [true; 4]);
+        assert_eq!(sm.id(), 0);
+        assert!(!sm.done());
+        assert!(matches!(sm.step(Down::Start), Up::Adv(_)));
+        assert!(!sm.done());
+        // a second Start is a phase-0 input in phase 1: order violation
+        match sm.step(Down::Start) {
+            Up::Failed(0, 0, msg) => assert!(msg.contains("order violation"), "{msg}"),
+            other => panic!("expected Failed, got {other:?}"),
+        }
+        assert!(sm.done());
+    }
+
+    #[test]
+    fn sm_drop_decision_is_per_phase() {
+        let model = vec![1u64; 4];
+        let mut sm = mk_sm(&model, [false, true, true, true]);
+        assert!(matches!(sm.step(Down::Start), Up::Dropped(0, 0)));
+        assert!(sm.done());
+
+        let mut sm = mk_sm(&model, [true, false, true, true]);
+        assert!(matches!(sm.step(Down::Start), Up::Adv(_)));
+        let bundle = KeyBundle { entries: vec![] };
+        assert!(matches!(sm.step(Down::Bundle(bundle)), Up::Dropped(0, 1)));
+        assert!(sm.done());
+    }
+
+    #[test]
+    fn sm_finish_terminates_without_protocol_output() {
+        let model = vec![1u64; 4];
+        let mut sm = mk_sm(&model, [true; 4]);
+        assert!(matches!(sm.step(Down::Start), Up::Adv(_)));
+        assert!(matches!(sm.step(Down::Finish), Up::Dropped(0, 1)));
+        assert!(sm.done());
+    }
+
+    #[test]
+    fn sm_runs_all_four_phases_solo() {
+        // t = 1, no neighbors: the client shares only with itself, masks
+        // with just its self mask, and reveals its own b-share
+        let model = vec![7u64; 4];
+        let mut sm = mk_sm(&model, [true; 4]);
+        assert!(matches!(sm.step(Down::Start), Up::Adv(_)));
+        let up = sm.step(Down::Bundle(KeyBundle { entries: vec![] }));
+        match up {
+            Up::Shares(s) => assert!(s.shares.is_empty(), "no neighbors, no ciphertexts"),
+            other => panic!("expected Shares, got {other:?}"),
+        }
+        let delivery = ShareDelivery { to: 0, shares: vec![] };
+        let masked = match sm.step(Down::Delivery(delivery)) {
+            Up::Masked(m) => m,
+            other => panic!("expected Masked, got {other:?}"),
+        };
+        assert_ne!(masked.masked, model, "self mask must hide the model");
+        let ann = std::sync::Arc::new(SurvivorAnnounce { v3: vec![0] });
+        match sm.step(Down::Announce(ann)) {
+            Up::Unmask(um) => {
+                assert_eq!(um.shares.len(), 1);
+                assert_eq!(um.shares[0].1, ShareKind::SelfMask);
+            }
+            other => panic!("expected Unmask, got {other:?}"),
+        }
+        assert!(sm.done());
     }
 }

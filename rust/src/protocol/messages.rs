@@ -141,12 +141,68 @@ impl UnmaskShares {
     }
 }
 
+/// Client → server phase envelope: every live client emits exactly one
+/// per phase. Shared by both deployment shapes — the thread-per-client
+/// coordinator sends these over mpsc channels, the event-loop coordinator
+/// collects them from per-client outbox slots after each parallel sweep.
+#[derive(Debug)]
+pub enum Up {
+    Adv(AdvertiseKeys),
+    Shares(ShareUpload),
+    Masked(MaskedInput),
+    Unmask(UnmaskShares),
+    /// Client dropped during the given phase (0–3).
+    Dropped(ClientId, u8),
+    /// Client hit an internal error — treated as a drop, but logged.
+    Failed(ClientId, u8, String),
+}
+
+/// Server → client phase input, consumed by [`super::client::ClientSm`].
+///
+/// The announce is shared (`Arc`): it is the one broadcast message — every
+/// V3 member receives the same |V3|-entry survivor list, and cloning it per
+/// recipient would cost O(n²) at n = 10⁵. Byte accounting still charges
+/// every recipient the full `size_bytes()`.
+#[derive(Debug)]
+pub enum Down {
+    /// Kick off phase 0 (no server payload — the round itself).
+    Start,
+    Bundle(KeyBundle),
+    Delivery(ShareDelivery),
+    Announce(std::sync::Arc<SurvivorAnnounce>),
+    /// Round over; the client is not needed further.
+    Finish,
+}
+
+impl Down {
+    /// The phase (0–3) this input drives, or `None` for [`Down::Finish`].
+    pub fn phase(&self) -> Option<u8> {
+        match self {
+            Down::Start => Some(0),
+            Down::Bundle(_) => Some(1),
+            Down::Delivery(_) => Some(2),
+            Down::Announce(_) => Some(3),
+            Down::Finish => None,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     fn share() -> Share {
         Share { x: 1, y: vec![0u16; 16] }
+    }
+
+    #[test]
+    fn down_phase_indices() {
+        assert_eq!(Down::Start.phase(), Some(0));
+        assert_eq!(Down::Bundle(KeyBundle { entries: vec![] }).phase(), Some(1));
+        assert_eq!(Down::Delivery(ShareDelivery { to: 0, shares: vec![] }).phase(), Some(2));
+        let ann = std::sync::Arc::new(SurvivorAnnounce { v3: vec![] });
+        assert_eq!(Down::Announce(ann).phase(), Some(3));
+        assert_eq!(Down::Finish.phase(), None);
     }
 
     #[test]

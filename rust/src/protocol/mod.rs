@@ -1,8 +1,12 @@
 //! The CCESA / SA secure-aggregation protocol (Algorithm 1 of the paper).
 //!
 //! Module layout:
-//! * [`messages`] — wire messages with exact byte sizes;
-//! * [`client`] — the client state machine (Steps 0–3);
+//! * [`messages`] — wire messages with exact byte sizes, plus the
+//!   [`messages::Up`]/[`messages::Down`] phase envelopes both deployment
+//!   shapes exchange;
+//! * [`client`] — the client state machine (Steps 0–3), and
+//!   [`client::ClientSm`], its explicit poll-able `step(Down) -> Up` form
+//!   multiplexed by `crate::coordinator`;
 //! * [`server`] — the server state machine: collection, Shamir
 //!   reconstruction, mask cancellation (Eq. 4), Theorem-1 reliability
 //!   detection;

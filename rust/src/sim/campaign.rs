@@ -1,5 +1,6 @@
-//! Multi-round campaign runner: drive a compiled [`Scenario`] through
-//! either round driver and aggregate what happened.
+//! Multi-round campaign runner: drive a compiled [`Scenario`] through any
+//! [`Executor`] (sync engine, thread-per-client coordinator, or worker-pool
+//! event loop) and aggregate what happened.
 //!
 //! The engine driver additionally scores each round's transcript with the
 //! Definition-2 eavesdropper attack and checks Theorem 1's predicate
@@ -7,20 +8,43 @@
 //! experiment (§4.3), a privacy experiment (§4.4) and a regression suite.
 
 use super::scenario::{RoundPlan, Scenario};
-use crate::coordinator::run_round_threaded;
+use crate::coordinator::{run_round_event_loop, run_round_threaded, CoordRoundResult};
 use crate::net::NetStats;
 use crate::protocol::adversary::{attack, Breach};
 use crate::protocol::engine::run_round;
 use crate::protocol::{ClientId, SurvivorSets};
 use anyhow::Result;
 
-/// Which round driver executes the campaign.
+/// Which execution shape drives the campaign's rounds.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Driver {
+pub enum Executor {
     /// The deterministic synchronous engine (`protocol::engine`).
     Engine,
-    /// The threaded coordinator (one worker thread per client).
-    Coordinator,
+    /// The thread-per-client coordinator (legacy deployment shape).
+    Threaded,
+    /// The worker-pool event-loop coordinator (the scaling shape).
+    EventLoop,
+}
+
+impl Executor {
+    /// Every executor, in reference-first order.
+    pub const ALL: [Executor; 3] = [Executor::Engine, Executor::Threaded, Executor::EventLoop];
+
+    /// Every executor except the [`Executor::Engine`] reference — the list
+    /// the differential harness and equivalence suites iterate, derived
+    /// from [`Executor::ALL`] so a future executor joins them by
+    /// construction.
+    pub fn non_reference() -> impl Iterator<Item = Executor> {
+        Executor::ALL.into_iter().filter(|e| *e != Executor::Engine)
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Executor::Engine => "engine",
+            Executor::Threaded => "threaded",
+            Executor::EventLoop => "event-loop",
+        }
+    }
 }
 
 /// Everything recorded about one campaign round.
@@ -33,13 +57,13 @@ pub struct RoundRecord {
     pub sum: Option<Vec<u64>>,
     pub sets: SurvivorSets,
     pub stats: NetStats,
-    /// Engine driver only: whether Theorem 1's predicate agreed with the
+    /// Engine executor only: whether Theorem 1's predicate agreed with the
     /// implementation's reliability outcome.
     pub theorem1_agrees: Option<bool>,
-    /// Engine driver only: partial-sum breaches the Definition-2
+    /// Engine executor only: partial-sum breaches the Definition-2
     /// eavesdropper extracted from this round's transcript.
     pub breaches: usize,
-    /// Engine driver only: honest clients whose individual model the
+    /// Engine executor only: honest clients whose individual model the
     /// scenario's colluding set reads off a breached partial sum.
     pub exposed_honest: usize,
 }
@@ -65,7 +89,7 @@ impl RoundRecord {
 pub struct CampaignReport {
     pub scenario: String,
     pub seed: u64,
-    pub driver: Driver,
+    pub executor: Executor,
     pub records: Vec<RoundRecord>,
     pub total_stats: NetStats,
 }
@@ -116,15 +140,31 @@ fn exposed_honest(breaches: &[Breach], colluders: &[ClientId]) -> usize {
         .count()
 }
 
-/// Run one pre-compiled round plan through the chosen driver.
+/// Run one pre-compiled round plan through the chosen executor.
 pub fn run_plan(
     plan: &RoundPlan,
     models: &[Vec<u64>],
-    driver: Driver,
+    executor: Executor,
     colluders: &[ClientId],
 ) -> RoundRecord {
-    match driver {
-        Driver::Engine => match run_round(&plan.cfg, models) {
+    // The coordinator shapes report the same essentials, so one record
+    // constructor serves both.
+    let coord_record = |r: Result<CoordRoundResult>| match r {
+        Ok(r) => RoundRecord {
+            round: plan.round,
+            aborted: false,
+            reliable: r.reliable,
+            sum: r.sum,
+            sets: r.sets,
+            stats: r.stats,
+            theorem1_agrees: None,
+            breaches: 0,
+            exposed_honest: 0,
+        },
+        Err(_) => RoundRecord::aborted(plan.round, plan.cfg.n),
+    };
+    match executor {
+        Executor::Engine => match run_round(&plan.cfg, models) {
             Ok(r) => {
                 let breaches = attack(&r.transcript);
                 RoundRecord {
@@ -141,57 +181,45 @@ pub fn run_plan(
             }
             Err(_) => RoundRecord::aborted(plan.round, plan.cfg.n),
         },
-        Driver::Coordinator => match run_round_threaded(&plan.cfg, models) {
-            Ok(r) => RoundRecord {
-                round: plan.round,
-                aborted: false,
-                reliable: r.reliable,
-                sum: r.sum,
-                sets: r.sets,
-                stats: r.stats,
-                theorem1_agrees: None,
-                breaches: 0,
-                exposed_honest: 0,
-            },
-            Err(_) => RoundRecord::aborted(plan.round, plan.cfg.n),
-        },
+        Executor::Threaded => coord_record(run_round_threaded(&plan.cfg, models)),
+        Executor::EventLoop => coord_record(run_round_event_loop(&plan.cfg, models)),
     }
 }
 
-/// Run a full scenario campaign through the chosen driver.
+/// Run a full scenario campaign through the chosen executor.
 ///
 /// §Perf: compiled plans are rng-free data, so rounds are independent —
 /// each round's per-client work (model materialization, the full protocol
 /// round, transcript scoring) runs on a `crate::par` worker. Records are
 /// merged back in round order, so the report (including the `NetStats`
 /// accumulation order) is bit-identical to the serial runner's.
-pub fn run_campaign(sc: &Scenario, driver: Driver) -> Result<CampaignReport> {
+pub fn run_campaign(sc: &Scenario, executor: Executor) -> Result<CampaignReport> {
     let plans = sc.compile();
     let colluders = sc.adversary.colluders();
-    let workers = match driver {
+    let workers = match executor {
         // Rounds whose vectors are too short to shard internally (the
         // simulation regime — exactly the rounds step2/finalize run
         // serially) parallelize across rounds here. Rounds that do shard
         // internally run one at a time: parallelizing both levels would
         // oversubscribe CPU ~threads² and hold several rounds' full model
         // sets in memory at once.
-        Driver::Engine if crate::par::threads_for_len(sc.dim) == 1 => crate::par::threads(),
-        Driver::Engine => 1,
-        // the coordinator already spawns one worker thread per client;
-        // running its rounds concurrently would multiply that by the
-        // round count (n=1000 campaigns → thousands of threads)
-        Driver::Coordinator => 1,
+        Executor::Engine if crate::par::threads_for_len(sc.dim) == 1 => crate::par::threads(),
+        Executor::Engine => 1,
+        // both coordinator shapes parallelize internally (the threaded one
+        // across client threads, the event loop across pool workers);
+        // running their rounds concurrently on top would multiply that
+        Executor::Threaded | Executor::EventLoop => 1,
     };
     let records = crate::par::map_indexed(plans.len(), workers, |i| {
         let plan = &plans[i];
         let models = sc.round_models(plan.round);
-        run_plan(plan, &models, driver, colluders)
+        run_plan(plan, &models, executor, colluders)
     });
     let mut total_stats = NetStats::new(sc.n);
     for record in &records {
         total_stats.merge(&record.stats);
     }
-    Ok(CampaignReport { scenario: sc.name.clone(), seed: sc.seed, driver, records, total_stats })
+    Ok(CampaignReport { scenario: sc.name.clone(), seed: sc.seed, executor, records, total_stats })
 }
 
 #[cfg(test)]
@@ -220,7 +248,7 @@ mod tests {
     #[test]
     fn churn_free_campaign_is_fully_reliable() {
         let sc = scenario(ChurnModel::None, 4);
-        let rep = run_campaign(&sc, Driver::Engine).unwrap();
+        let rep = run_campaign(&sc, Executor::Engine).unwrap();
         assert_eq!(rep.rounds(), 4);
         assert_eq!(rep.reliable_rounds(), 4);
         assert_eq!(rep.aborted_rounds(), 0);
@@ -243,23 +271,36 @@ mod tests {
     fn whole_cohort_churn_aborts_not_panics() {
         let script = vec![[(0..10).collect::<Vec<_>>(), vec![], vec![], vec![]]];
         let sc = scenario(ChurnModel::Scripted { rounds: script }, 2);
-        let rep = run_campaign(&sc, Driver::Engine).unwrap();
+        let rep = run_campaign(&sc, Executor::Engine).unwrap();
         assert!(rep.records[0].aborted);
         assert!(!rep.records[1].aborted, "round 2 is failure-free and recovers");
         assert_eq!(rep.aborted_rounds(), 1);
     }
 
     #[test]
-    fn coordinator_driver_reports_same_shape() {
+    fn every_executor_reports_same_shape() {
         let sc = scenario(ChurnModel::TargetedAdaptive { count: 1, step: 2 }, 2);
-        let e = run_campaign(&sc, Driver::Engine).unwrap();
-        let c = run_campaign(&sc, Driver::Coordinator).unwrap();
-        assert_eq!(e.rounds(), c.rounds());
-        for (re, rc) in e.records.iter().zip(&c.records) {
-            assert_eq!(re.sum, rc.sum, "round {}", re.round);
-            assert_eq!(re.sets, rc.sets, "round {}", re.round);
-            assert_eq!(re.stats, rc.stats, "round {}", re.round);
+        let e = run_campaign(&sc, Executor::Engine).unwrap();
+        for alt in Executor::non_reference() {
+            let c = run_campaign(&sc, alt).unwrap();
+            assert_eq!(c.executor, alt);
+            assert_eq!(e.rounds(), c.rounds(), "{}", alt.name());
+            for (re, rc) in e.records.iter().zip(&c.records) {
+                assert_eq!(re.sum, rc.sum, "{} round {}", alt.name(), re.round);
+                assert_eq!(re.sets, rc.sets, "{} round {}", alt.name(), re.round);
+                assert_eq!(re.stats, rc.stats, "{} round {}", alt.name(), re.round);
+            }
         }
+    }
+
+    #[test]
+    fn executor_axis_is_complete_and_named() {
+        assert_eq!(Executor::ALL.len(), 3);
+        let names: Vec<&str> = Executor::ALL.iter().map(|e| e.name()).collect();
+        assert_eq!(names, vec!["engine", "threaded", "event-loop"]);
+        let non_ref: Vec<Executor> = Executor::non_reference().collect();
+        assert_eq!(non_ref.len(), Executor::ALL.len() - 1);
+        assert!(!non_ref.contains(&Executor::Engine));
     }
 
     #[test]

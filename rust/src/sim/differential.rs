@@ -1,24 +1,29 @@
 //! Differential harness: every scenario must produce bit-identical results
-//! through the sync engine and the threaded coordinator.
+//! through every executor — the sync engine (reference), the
+//! thread-per-client coordinator, and the worker-pool event loop.
 //!
-//! The coordinator's module contract ("bit-identical to the sync engine for
-//! the same seed" under rng-free dropout) was previously pinned by two
+//! The coordinator module's contract ("bit-identical to the sync engine for
+//! the same seed" under rng-free dropout) was previously pinned by
 //! hand-written cases; this harness turns it into a property checked over
 //! randomized scenario campaigns — mixed topology schedules, churn models
 //! and adversary sets — with a shrinker that minimizes any failing scenario
-//! to a small, quotable reproduction seed.
+//! to a small, quotable reproduction seed. Each non-reference executor is
+//! diffed against the engine independently, so a mismatch names the shape
+//! that diverged.
 
-use super::campaign::{run_plan, Driver, RoundRecord};
+use super::campaign::{run_plan, Executor, RoundRecord};
 use super::churn::ChurnModel;
 use super::scenario::{random_scenario, AdversarySpec, Scenario, TopologySchedule};
 use crate::protocol::Topology;
 
-/// A divergence between the two drivers on one round.
+/// A divergence between the engine and one executor on one round.
 #[derive(Debug, Clone)]
 pub struct Mismatch {
     pub scenario: String,
     pub seed: u64,
     pub round: usize,
+    /// The non-reference executor that diverged from the engine.
+    pub executor: Executor,
     pub field: &'static str,
     pub detail: String,
 }
@@ -45,11 +50,11 @@ impl DifferentialReport {
     }
 }
 
-fn diff_records(e: &RoundRecord, c: &RoundRecord) -> Option<(&'static str, String)> {
+fn diff_records(e: &RoundRecord, c: &RoundRecord, who: &str) -> Option<(&'static str, String)> {
     if e.aborted != c.aborted {
         return Some((
             "abort",
-            format!("engine aborted={}, coordinator aborted={}", e.aborted, c.aborted),
+            format!("engine aborted={}, {who} aborted={}", e.aborted, c.aborted),
         ));
     }
     if e.aborted {
@@ -58,38 +63,42 @@ fn diff_records(e: &RoundRecord, c: &RoundRecord) -> Option<(&'static str, Strin
     if e.reliable != c.reliable {
         return Some((
             "reliable",
-            format!("engine reliable={}, coordinator reliable={}", e.reliable, c.reliable),
+            format!("engine reliable={}, {who} reliable={}", e.reliable, c.reliable),
         ));
     }
     if e.sets != c.sets {
-        return Some(("survivor_sets", format!("engine {:?} vs coordinator {:?}", e.sets, c.sets)));
+        return Some(("survivor_sets", format!("engine {:?} vs {who} {:?}", e.sets, c.sets)));
     }
     if e.sum != c.sum {
-        return Some(("sum", format!("engine {:?} vs coordinator {:?}", e.sum, c.sum)));
+        return Some(("sum", format!("engine {:?} vs {who} {:?}", e.sum, c.sum)));
     }
     if e.stats != c.stats {
-        return Some(("net_stats", format!("engine {:?} vs coordinator {:?}", e.stats, c.stats)));
+        return Some(("net_stats", format!("engine {:?} vs {who} {:?}", e.stats, c.stats)));
     }
     None
 }
 
-/// Run one scenario campaign under both drivers round by round; the first
-/// divergence (sums, survivor sets, NetStats, or abort behavior) wins.
+/// Run one scenario campaign under every executor round by round; the first
+/// divergence from the engine (sums, survivor sets, NetStats, or abort
+/// behavior) wins.
 pub fn diff_scenario(sc: &Scenario) -> Option<Mismatch> {
     let plans = sc.compile();
     let colluders = sc.adversary.colluders();
     for plan in &plans {
         let models = sc.round_models(plan.round);
-        let e = run_plan(plan, &models, Driver::Engine, colluders);
-        let c = run_plan(plan, &models, Driver::Coordinator, colluders);
-        if let Some((field, detail)) = diff_records(&e, &c) {
-            return Some(Mismatch {
-                scenario: sc.name.clone(),
-                seed: sc.seed,
-                round: plan.round,
-                field,
-                detail,
-            });
+        let e = run_plan(plan, &models, Executor::Engine, colluders);
+        for alt in Executor::non_reference() {
+            let c = run_plan(plan, &models, alt, colluders);
+            if let Some((field, detail)) = diff_records(&e, &c, alt.name()) {
+                return Some(Mismatch {
+                    scenario: sc.name.clone(),
+                    seed: sc.seed,
+                    round: plan.round,
+                    executor: alt,
+                    field,
+                    detail,
+                });
+            }
         }
     }
     None

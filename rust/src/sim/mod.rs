@@ -11,22 +11,24 @@
 //! * [`churn`] — multi-round churn processes (i.i.d., bursty Markov,
 //!   correlated-regional outages, targeted-adaptive hub attacks, scripted)
 //!   compiled to explicit per-step schedules;
-//! * [`campaign`] — runs a scenario through either round driver, scoring
-//!   reliability, Theorem-1 agreement and eavesdropper/collusion privacy;
-//! * [`differential`] — asserts both drivers produce bit-identical sums,
+//! * [`campaign`] — runs a scenario through any [`campaign::Executor`]
+//!   (sync engine, thread-per-client coordinator, worker-pool event loop),
+//!   scoring reliability, Theorem-1 agreement and eavesdropper/collusion
+//!   privacy;
+//! * [`differential`] — asserts every executor produces bit-identical sums,
 //!   survivor sets and [`crate::net::NetStats`] on randomized scenarios,
 //!   with a shrinker that minimizes failures to a reportable seed.
 //!
 //! Every future scale or performance PR validates against this substrate:
-//! change a driver, run the differential; add a churn regime, add a variant
-//! here and every harness picks it up.
+//! change an executor, run the differential; add a churn regime, add a
+//! variant here and every harness picks it up.
 
 pub mod campaign;
 pub mod churn;
 pub mod differential;
 pub mod scenario;
 
-pub use campaign::{run_campaign, run_plan, CampaignReport, Driver, RoundRecord};
+pub use campaign::{run_campaign, run_plan, CampaignReport, Executor, RoundRecord};
 pub use churn::ChurnModel;
 pub use differential::{
     diff_scenario, run_differential, shrink, DifferentialReport, Failure, Mismatch,

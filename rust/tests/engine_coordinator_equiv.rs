@@ -1,10 +1,15 @@
-//! Determinism regression suite: `engine::run_round` and the threaded
-//! `coordinator` must produce bit-identical `RoundResult` essentials (sum,
-//! survivor sets, NetStats) for the same seed under rng-free dropout
-//! models, exactly as the coordinator module docs promise — and each driver
-//! must be bit-identical to itself across reruns.
+//! Determinism regression suite: `engine::run_round`, the thread-per-client
+//! `coordinator` and the worker-pool event loop must produce bit-identical
+//! `RoundResult` essentials (sum, survivor sets, NetStats) for the same
+//! seed under rng-free dropout models, exactly as the coordinator module
+//! docs promise — and each execution shape must be bit-identical to itself
+//! across reruns. The event loop additionally proves the scaling claim:
+//! rounds at n = 10⁴ (tier-1) and n = 10⁵ (CI scale job, `--ignored`)
+//! complete with peak live pool workers ≤ `par::threads()`.
 
-use ccesa::coordinator::run_round_threaded;
+use ccesa::coordinator::{
+    run_round_event_loop, run_round_event_loop_with, run_round_threaded, CoordRoundResult,
+};
 use ccesa::protocol::dropout::DropoutModel;
 use ccesa::protocol::engine::run_round;
 use ccesa::protocol::{ProtocolConfig, Topology};
@@ -19,11 +24,14 @@ fn models(n: usize, dim: usize, seed: u64) -> Vec<Vec<u64>> {
 
 fn assert_equivalent(cfg: &ProtocolConfig, m: &[Vec<u64>], label: &str) {
     let sync = run_round(cfg, m).unwrap();
-    let threaded = run_round_threaded(cfg, m).unwrap();
-    assert_eq!(threaded.reliable, sync.reliable, "{label}: reliable");
-    assert_eq!(threaded.sets, sync.sets, "{label}: survivor sets");
-    assert_eq!(threaded.sum, sync.sum, "{label}: sum");
-    assert_eq!(threaded.stats, sync.stats, "{label}: NetStats");
+    let check = |name: &str, r: CoordRoundResult| {
+        assert_eq!(r.reliable, sync.reliable, "{label}/{name}: reliable");
+        assert_eq!(r.sets, sync.sets, "{label}/{name}: survivor sets");
+        assert_eq!(r.sum, sync.sum, "{label}/{name}: sum");
+        assert_eq!(r.stats, sync.stats, "{label}/{name}: NetStats");
+    };
+    check("threaded", run_round_threaded(cfg, m).unwrap());
+    check("event-loop", run_round_event_loop(cfg, m).unwrap());
 }
 
 #[test]
@@ -59,7 +67,7 @@ fn bit_identical_under_targeted_dropout() {
 
 #[test]
 fn bit_identical_under_materialized_iid() {
-    // a stochastic model becomes driver-independent once materialized —
+    // a stochastic model becomes shape-independent once materialized —
     // the mechanism the sim scenario compiler relies on
     let n = 13;
     let dim = 8;
@@ -114,10 +122,37 @@ fn coordinator_rerun_is_bit_identical() {
 }
 
 #[test]
-fn both_drivers_abort_identically() {
-    // |V2| < t after mass step-1 dropout: the engine errors; the
-    // coordinator must error too (and terminate — regression for the
-    // worker-unblocking fix) rather than deadlock or return a result
+fn event_loop_rerun_is_bit_identical_across_worker_counts() {
+    // rerun stability AND worker-count independence: the lane sharding
+    // must be invisible in every observable
+    let n = 11;
+    let dim = 12;
+    let cfg = ProtocolConfig {
+        dropout: DropoutModel::Targeted { per_step: [vec![1], vec![], vec![6], vec![9]] },
+        ..ProtocolConfig::new(n, 4, dim, Topology::Complete, 3005)
+    };
+    let m = models(n, dim, 15);
+    let (a, _) = run_round_event_loop_with(&cfg, &m, 1).unwrap();
+    for workers in [2usize, 3, 8] {
+        let (b, tel) = run_round_event_loop_with(&cfg, &m, workers).unwrap();
+        assert_eq!(a.sum, b.sum, "workers={workers}");
+        assert_eq!(a.sets, b.sets, "workers={workers}");
+        assert_eq!(a.stats, b.stats, "workers={workers}");
+        assert!(tel.peak_live_workers <= workers, "workers={workers}");
+        assert_eq!(tel.sweeps, 4, "workers={workers}");
+    }
+    // and the threaded shape agrees with the event loop on the same config
+    let t = run_round_threaded(&cfg, &m).unwrap();
+    assert_eq!(t.sum, a.sum);
+    assert_eq!(t.sets, a.sets);
+    assert_eq!(t.stats, a.stats);
+}
+
+#[test]
+fn both_shapes_abort_identically() {
+    // |V2| < t after mass step-1 dropout: the engine errors; both
+    // coordinator shapes must error too (the threaded one without
+    // deadlocking — regression for the worker-unblocking fix)
     let n = 8;
     let cfg = ProtocolConfig {
         dropout: DropoutModel::Targeted {
@@ -127,7 +162,8 @@ fn both_drivers_abort_identically() {
     };
     let m = models(n, 6, 16);
     assert!(run_round(&cfg, &m).is_err(), "engine must abort");
-    assert!(run_round_threaded(&cfg, &m).is_err(), "coordinator must abort");
+    assert!(run_round_threaded(&cfg, &m).is_err(), "threaded must abort");
+    assert!(run_round_event_loop(&cfg, &m).is_err(), "event loop must abort");
 }
 
 #[test]
@@ -144,4 +180,65 @@ fn sixteen_and_sixty_four_bit_domains_equivalent() {
             .collect();
         assert_equivalent(&cfg, &m, &format!("bits={bits}"));
     }
+}
+
+/// Exact expected no-dropout sum: Σ models over all n clients in Z_{2^32}.
+fn true_sum_all(m: &[Vec<u64>], dim: usize) -> Vec<u64> {
+    let mut expect = vec![0u64; dim];
+    for mv in m {
+        for (a, x) in expect.iter_mut().zip(mv) {
+            *a = a.wrapping_add(*x) & 0xFFFF_FFFF;
+        }
+    }
+    expect
+}
+
+/// Tier-1 scale smoke: one n = 10⁴ event-loop round — two orders of
+/// magnitude past the differential suite's population, still inside the
+/// tier-1 budget because thread cost is O(par::threads()), not O(n).
+#[test]
+fn event_loop_n10k_single_round_smoke() {
+    let n = 10_000;
+    let dim = 4;
+    let cfg = ProtocolConfig::new(n, 3, dim, Topology::Harary { k: 6 }, 41);
+    let m = models(n, dim, 42);
+    let workers = ccesa::par::threads();
+    let (r, tel) = run_round_event_loop_with(&cfg, &m, workers).unwrap();
+    assert!(r.reliable);
+    assert_eq!(r.sets.v4.len(), n);
+    assert_eq!(r.sum.unwrap(), true_sum_all(&m, dim));
+    assert!(
+        tel.peak_live_workers <= workers,
+        "peak {} workers exceeds budget {workers}",
+        tel.peak_live_workers
+    );
+    assert_eq!(tel.sweeps, 4);
+}
+
+/// CI scale job (`--ignored`): a n = 10⁵-client round completes on a fixed
+/// worker pool — the regime where Bocchi-style complete-graph costs
+/// diverge from the sparse Erdős–Rényi scheme, and where the
+/// thread-per-client shape would need 10⁵ OS threads.
+#[test]
+#[ignore = "scale smoke (~minutes unoptimized): run explicitly — CI scale-smoke job, release profile"]
+fn event_loop_n100k_round_completes_with_bounded_threads() {
+    let n = 100_000;
+    let dim = 4;
+    let cfg = ProtocolConfig::new(n, 3, dim, Topology::Harary { k: 6 }, 43);
+    let m = models(n, dim, 44);
+    let workers = ccesa::par::threads();
+    let (r, tel) = run_round_event_loop_with(&cfg, &m, workers).unwrap();
+    assert!(r.reliable);
+    assert_eq!(r.sets.v4.len(), n);
+    assert_eq!(r.sum.unwrap(), true_sum_all(&m, dim));
+    assert!(
+        tel.peak_live_workers <= workers,
+        "peak {} workers exceeds budget {workers}",
+        tel.peak_live_workers
+    );
+    assert_eq!(tel.sweeps, 4);
+    println!(
+        "n=100000 round: workers={} peak_live={} sweeps={}",
+        tel.workers, tel.peak_live_workers, tel.sweeps
+    );
 }

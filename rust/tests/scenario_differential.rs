@@ -1,17 +1,19 @@
 //! The scenario differential harness at full width: ≥200 randomized
 //! scenarios (mixed topology schedules, churn models, adversary sets) must
-//! run bit-identically through the sync engine and the threaded
-//! coordinator, and a 5-round campaign at n = 1000 clients must complete
-//! with the two drivers in exact agreement.
+//! run bit-identically through every executor — sync engine,
+//! thread-per-client coordinator, and worker-pool event loop — and a
+//! 5-round campaign at n = 1000 clients must complete with all executors
+//! in exact agreement.
 
 use ccesa::protocol::Topology;
 use ccesa::sim::{
-    random_scenario, run_campaign, run_differential, AdversarySpec, ChurnModel, Driver, Scenario,
-    ThresholdRule, TopologySchedule,
+    random_scenario, run_campaign, run_differential, AdversarySpec, ChurnModel, Executor,
+    Scenario, ThresholdRule, TopologySchedule,
 };
 
-/// The acceptance sweep: 200 seeded random scenarios, zero mismatches.
-/// Failures arrive pre-shrunk with a quotable seed.
+/// The acceptance sweep: 200 seeded random scenarios, zero mismatches
+/// across both non-reference executors. Failures arrive pre-shrunk with a
+/// quotable seed and the name of the shape that diverged.
 #[test]
 fn differential_200_randomized_scenarios() {
     let report = run_differential(0xD1FF_0000, 200);
@@ -64,8 +66,8 @@ fn generator_covers_topologies_churn_and_adversaries() {
 }
 
 /// Acceptance smoke: a 5-round campaign at n = 1000 clients completes under
-/// both drivers with bit-identical sums, survivor sets and NetStats, stays
-/// reliable under scripted churn, and never disagrees with Theorem 1.
+/// every executor with bit-identical sums, survivor sets and NetStats,
+/// stays reliable under scripted churn, and never disagrees with Theorem 1.
 #[test]
 fn campaign_smoke_n1000_five_rounds_bit_identical() {
     let n = 1000;
@@ -94,16 +96,17 @@ fn campaign_smoke_n1000_five_rounds_bit_identical() {
         seed: 0x51107E,
     };
 
-    let engine = run_campaign(&sc, Driver::Engine).unwrap();
-    let coord = run_campaign(&sc, Driver::Coordinator).unwrap();
-
+    let engine = run_campaign(&sc, Executor::Engine).unwrap();
     assert_eq!(engine.rounds(), 5);
-    assert_eq!(coord.rounds(), 5);
-    for (e, c) in engine.records.iter().zip(&coord.records) {
-        assert_eq!(e.aborted, c.aborted, "round {}", e.round);
-        assert_eq!(e.sets, c.sets, "round {}", e.round);
-        assert_eq!(e.sum, c.sum, "round {}", e.round);
-        assert_eq!(e.stats, c.stats, "round {}", e.round);
+    for alt in Executor::non_reference() {
+        let coord = run_campaign(&sc, alt).unwrap();
+        assert_eq!(coord.rounds(), 5, "{}", alt.name());
+        for (e, c) in engine.records.iter().zip(&coord.records) {
+            assert_eq!(e.aborted, c.aborted, "{} round {}", alt.name(), e.round);
+            assert_eq!(e.sets, c.sets, "{} round {}", alt.name(), e.round);
+            assert_eq!(e.sum, c.sum, "{} round {}", alt.name(), e.round);
+            assert_eq!(e.stats, c.stats, "{} round {}", alt.name(), e.round);
+        }
     }
     assert_eq!(engine.reliable_rounds(), 5, "scripted churn stays under threshold");
     assert_eq!(engine.aborted_rounds(), 0);

@@ -1,0 +1,181 @@
+#!/usr/bin/env python3
+"""Bench-trajectory regression gate.
+
+Compares fresh ``BENCH_<target>.json`` reports (written by the bench
+binaries via ``bench::json_sink``) against a committed baseline directory
+and fails when any case's median regresses by more than the threshold.
+
+Schema: every report is the ``Bench::to_json`` object —
+``{"group": ..., "host_cores": ..., "default_threads": ...,
+"results": [{"name": ..., "median_s": ..., ...}, ...]}``.
+Cases are matched by ``name`` within the file of the same basename.
+
+Usage:
+    python3 tools/bench_gate.py                     # gate against BENCH_baseline/
+    python3 tools/bench_gate.py --threshold 0.25    # explicit threshold
+    python3 tools/bench_gate.py --update            # adopt fresh runs as baseline
+    python3 tools/bench_gate.py BENCH_crypto_primitives.json  # gate a subset
+
+Bootstrap: a fresh file (or case) with no committed baseline is reported
+and skipped — commit the uploaded ``bench-json`` CI artifact into
+``BENCH_baseline/`` (or run with ``--update`` on the reference machine) to
+arm the gate for it. ``CCESA_BENCH_GATE_THRESHOLD`` overrides the default
+threshold without touching CI configuration.
+
+Exit status: 0 = no regressions, 1 = at least one regression, 2 = usage or
+unreadable input.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import shutil
+import sys
+
+# Cases faster than this are dominated by timer/scheduler noise at the
+# short CI measurement budget; they are reported but never gated.
+DEFAULT_NOISE_FLOOR_S = 2e-5
+
+
+def load_report(path):
+    with open(path) as f:
+        doc = json.load(f)
+    if "results" not in doc or "group" not in doc:
+        raise ValueError(f"{path}: not a Bench::to_json report (missing group/results)")
+    cases = {}
+    for row in doc["results"]:
+        cases[row["name"]] = (float(row["median_s"]), int(row.get("iters", 1)))
+    return doc["group"], cases
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("fresh", nargs="*", help="fresh BENCH_*.json files (default: glob cwd)")
+    ap.add_argument("--baseline", default="BENCH_baseline", help="committed baseline directory")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=float(os.environ.get("CCESA_BENCH_GATE_THRESHOLD", "0.25")),
+        help="fail when fresh_median > baseline_median * (1 + threshold); default 0.25",
+    )
+    ap.add_argument(
+        "--noise-floor",
+        type=float,
+        default=DEFAULT_NOISE_FLOOR_S,
+        help=f"skip cases with baseline median below this (s); default {DEFAULT_NOISE_FLOOR_S}",
+    )
+    ap.add_argument("--update", action="store_true", help="copy fresh reports into the baseline")
+    ap.add_argument(
+        "--strict",
+        action="store_true",
+        help="fail on coverage gaps too (missing baselines, renamed/removed cases)",
+    )
+    args = ap.parse_args()
+
+    fresh_paths = args.fresh or sorted(glob.glob("BENCH_*.json"))
+    if not fresh_paths:
+        print("bench_gate: no BENCH_*.json files found — run the bench targets first")
+        return 2
+
+    if args.update:
+        os.makedirs(args.baseline, exist_ok=True)
+        for path in fresh_paths:
+            dst = os.path.join(args.baseline, os.path.basename(path))
+            shutil.copyfile(path, dst)
+            print(f"bench_gate: baseline updated: {dst}")
+        return 0
+
+    regressions = []
+    improvements = 0
+    gated = 0
+    skipped = []
+    coverage_gaps = []
+    seen_basenames = set()
+    for path in fresh_paths:
+        try:
+            group, fresh = load_report(path)
+        except (OSError, ValueError, KeyError) as e:
+            print(f"bench_gate: cannot read {path}: {e}")
+            return 2
+        seen_basenames.add(os.path.basename(path))
+        base_path = os.path.join(args.baseline, os.path.basename(path))
+        if not os.path.exists(base_path):
+            coverage_gaps.append(
+                f"{path}: no committed baseline ({base_path}) — bootstrap pending"
+            )
+            continue
+        try:
+            _, base = load_report(base_path)
+        except (OSError, ValueError, KeyError) as e:
+            print(f"bench_gate: cannot read baseline {base_path}: {e}")
+            return 2
+        # a baseline case the fresh run no longer reports is a rename or a
+        # removed case: a regression could hide behind it, so surface it
+        for name in sorted(set(base) - set(fresh)):
+            coverage_gaps.append(
+                f"{group} / {name}: in baseline but not in fresh run (renamed/removed?)"
+            )
+        for name, (fresh_med, fresh_iters) in sorted(fresh.items()):
+            if name not in base:
+                coverage_gaps.append(f"{group} / {name}: new case, no baseline median")
+                continue
+            base_med, base_iters = base[name]
+            if base_med < args.noise_floor:
+                skipped.append(
+                    f"{group} / {name}: baseline {base_med:.3g}s below noise floor"
+                )
+                continue
+            if base_iters < 2 or fresh_iters < 2:
+                # a single sample on either side (table-style targets, or a
+                # case so slow the CI budget allowed one cold-start
+                # iteration) is not a median; report, don't gate
+                which = "baseline" if base_iters < 2 else "fresh run"
+                skipped.append(f"{group} / {name}: single-sample {which}, not gated")
+                continue
+            gated += 1
+            ratio = fresh_med / base_med
+            line = f"{group} / {name}: {base_med:.6g}s -> {fresh_med:.6g}s ({ratio:.2f}x)"
+            if ratio > 1.0 + args.threshold:
+                regressions.append(line)
+                print(f"REGRESSION  {line}")
+            else:
+                if ratio < 1.0:
+                    improvements += 1
+                print(f"ok          {line}")
+
+    # committed baseline files whose target produced no fresh report at all
+    # (target deleted, or dropped out of the CI sweep)
+    if os.path.isdir(args.baseline):
+        for fname in sorted(os.listdir(args.baseline)):
+            if fname.startswith("BENCH_") and fname.endswith(".json"):
+                if fname not in seen_basenames:
+                    coverage_gaps.append(
+                        f"{args.baseline}/{fname}: baseline has no fresh report — "
+                        "target removed or missing from the sweep"
+                    )
+
+    for line in skipped:
+        print(f"skipped     {line}")
+    for line in coverage_gaps:
+        print(f"coverage    {line}")
+    print(
+        f"bench_gate: {gated} cases gated at +{args.threshold:.0%}, "
+        f"{len(regressions)} regressions, {improvements} improvements, "
+        f"{len(skipped)} skipped, {len(coverage_gaps)} coverage gaps"
+    )
+    if regressions:
+        print("bench_gate: FAIL — medians regressed beyond the threshold:")
+        for line in regressions:
+            print(f"  {line}")
+        return 1
+    if args.strict and coverage_gaps:
+        print("bench_gate: FAIL (--strict) — coverage gaps listed above")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
