@@ -12,6 +12,7 @@
 //! ```
 
 use ccesa::analysis::bounds::{p_star, t_rule};
+use ccesa::codec::Codec;
 use ccesa::fl::data::{partition_iid, partition_noniid, SyntheticCifar};
 use ccesa::fl::rounds::{run_fl_mlp, Aggregation, FlConfig, FlHistory};
 use ccesa::protocol::dropout::DropoutModel;
@@ -85,12 +86,14 @@ fn main() -> anyhow::Result<()> {
                 t_override: Some(k / 2 + 1),
                 mask_bits: 32,
                 dropout: DropoutModel::iid_from_total(q_total),
+                codec: Codec::Dense,
             },
             Some(p) => Aggregation::Secure {
                 topology: Topology::ErdosRenyi { p: *p },
                 t_override: Some(t_rule(k, *p).min(k * 2 / 3)),
                 mask_bits: 32,
                 dropout: DropoutModel::iid_from_total(q_total),
+                codec: Codec::Dense,
             },
         };
         let cfg = FlConfig {

@@ -69,14 +69,17 @@ fn main() -> anyhow::Result<()> {
             .collect();
         let p = p_star(n, 0.0);
         let t = t_rule(n, p);
-        let cc = run_round(
-            &ProtocolConfig::new(n, t, dim, Topology::ErdosRenyi { p }, seed),
-            &models,
-        )?;
-        let sa = run_round(
-            &ProtocolConfig::new(n, n / 2 + 1, dim, Topology::Complete, seed),
-            &models,
-        )?;
+        let mk = |t: usize, topology: Topology| -> anyhow::Result<ProtocolConfig> {
+            ProtocolConfig::builder()
+                .clients(n)
+                .threshold(t)
+                .model_dim(dim)
+                .topology(topology)
+                .seed(seed)
+                .build()
+        };
+        let cc = run_round(&mk(t, Topology::ErdosRenyi { p })?, &models)?;
+        let sa = run_round(&mk(n / 2 + 1, Topology::Complete)?, &models)?;
         // per-client non-model traffic: total minus the masked upload
         let model_bytes = (dim * 4) as f64;
         let cc_extra = cc.stats.mean_client_total() - model_bytes;

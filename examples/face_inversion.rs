@@ -87,15 +87,20 @@ fn main() -> anyhow::Result<()> {
     // an actual masked wire payload for the victim (client 0)
     let p = p_star(k, 0.0).min(1.0);
     let models: Vec<Vec<u64>> = (0..k).map(|_| quantized.clone()).collect();
-    let cfg_ccesa = ProtocolConfig::new(
-        k,
-        t_rule(k, p).min(k / 2),
-        dims.param_count(),
-        Topology::ErdosRenyi { p },
-        seed,
-    );
+    let cfg_ccesa = ProtocolConfig::builder()
+        .clients(k)
+        .threshold(t_rule(k, p).min(k / 2))
+        .model_dim(dims.param_count())
+        .topology(Topology::ErdosRenyi { p })
+        .seed(seed)
+        .build()?;
     let ccesa_round = run_round(&cfg_ccesa, &models)?;
-    let cfg_sa = ProtocolConfig::new(k, k / 2 + 1, dims.param_count(), Topology::Complete, seed);
+    let cfg_sa = ProtocolConfig::builder()
+        .clients(k)
+        .threshold(k / 2 + 1)
+        .model_dim(dims.param_count())
+        .seed(seed)
+        .build()?;
     let sa_round = run_round(&cfg_sa, &models)?;
     let masked_of = |r: &ccesa::protocol::engine::RoundResult| {
         r.transcript.masked.first().map(|(_, v)| v.clone()).unwrap()

@@ -117,15 +117,14 @@ fn main() -> anyhow::Result<()> {
                 None => Topology::Complete,
                 Some(p) => Topology::ErdosRenyi { p },
             };
-            let cfg = ProtocolConfig {
-                n,
-                t,
-                mask_bits: 32,
-                dim,
-                topology,
-                dropout: DropoutModel::iid_from_total(q_total),
-                seed: seed ^ (r as u64) << 8,
-            };
+            let cfg = ProtocolConfig::builder()
+                .clients(n)
+                .threshold(t)
+                .model_dim(dim)
+                .topology(topology)
+                .dropout(DropoutModel::iid_from_total(q_total))
+                .seed(seed ^ (r as u64) << 8)
+                .build()?;
             match run_round(&cfg, &models) {
                 Ok(res) => {
                     bytes += res.stats.server_total();

@@ -36,7 +36,7 @@ fn main() -> anyhow::Result<()> {
     let seed: u64 = args.req("seed");
 
     let q = per_step_q(q_total);
-    let ps = p_star(n, q_total);
+    let ps = p_star(n, q_total); // already clamped to ≤ 1 (builder-valid)
     let t = t_rule(n, ps);
     let harary_k = ((n as f64 - 1.0) * ps).round() as usize; // equal mean degree
     println!("n={n} q_total={q_total} p*={ps:.4} t={t} harary_k={harary_k}\n");
@@ -82,15 +82,14 @@ fn main() -> anyhow::Result<()> {
         let models: Vec<Vec<u64>> = (0..n)
             .map(|_| (0..dim).map(|_| rng.next_u64() & 0xFFFF_FFFF).collect())
             .collect();
-        let cfg = ProtocolConfig {
-            n,
-            t: tt,
-            mask_bits: 32,
-            dim,
-            topology: topo,
-            dropout: DropoutModel::iid_from_total(q_total),
-            seed,
-        };
+        let cfg = ProtocolConfig::builder()
+            .clients(n)
+            .threshold(tt)
+            .model_dim(dim)
+            .topology(topo)
+            .dropout(DropoutModel::iid_from_total(q_total))
+            .seed(seed)
+            .build()?;
         let timer = Timer::start();
         let round = run_round(&cfg, &models);
         let ms = timer.elapsed_ms();

@@ -77,18 +77,23 @@ fn main() -> anyhow::Result<()> {
         let words = q.quantize(&flat);
         let models: Vec<Vec<u64>> = (0..k).map(|_| words.clone()).collect();
         let sa_round = run_round(
-            &ProtocolConfig::new(k, k / 2 + 1, flat.len(), Topology::Complete, seed),
+            &ProtocolConfig::builder()
+                .clients(k)
+                .threshold(k / 2 + 1)
+                .model_dim(flat.len())
+                .seed(seed)
+                .build()?,
             &models,
         )?;
         let p = p_star(40, 0.0).min(1.0); // small-n guard: use n=40's p*
         let cc_round = run_round(
-            &ProtocolConfig::new(
-                k,
-                t_rule(k, p).min(k / 2 + 1),
-                flat.len(),
-                Topology::ErdosRenyi { p },
-                seed,
-            ),
+            &ProtocolConfig::builder()
+                .clients(k)
+                .threshold(t_rule(k, p).min(k / 2 + 1))
+                .model_dim(flat.len())
+                .topology(Topology::ErdosRenyi { p })
+                .seed(seed)
+                .build()?,
             &models,
         )?;
         let masked_of = |r: &ccesa::protocol::engine::RoundResult| {

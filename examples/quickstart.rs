@@ -13,6 +13,7 @@
 //! ```
 
 use ccesa::analysis::bounds::{p_star, t_rule};
+use ccesa::codec::Codec;
 use ccesa::fl::data::{partition_iid, SyntheticCifar};
 use ccesa::fl::rounds::{run_fl_mlp, Aggregation, FlConfig};
 use ccesa::protocol::dropout::DropoutModel;
@@ -79,6 +80,7 @@ fn main() -> anyhow::Result<()> {
             t_override: Some(t),
             mask_bits: 32,
             dropout: DropoutModel::iid_from_total(q_total),
+            codec: Codec::Dense,
         },
         seed,
     };

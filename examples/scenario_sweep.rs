@@ -3,9 +3,11 @@
 //! plus a randomized engine↔coordinator differential check.
 //!
 //! Per churn model: reliable/aborted/breached round counts, Theorem-1
-//! agreement, and total traffic through the server. The differential rows
-//! confirm the threaded deployment shape is bit-identical to the engine on
-//! every generated scenario (and shrink + report any divergence).
+//! agreement, and total traffic through the server; a payload-codec sweep
+//! shows the masked-payload savings of top-k/rand-k sparsification. The
+//! differential rows confirm the event-loop deployment shape is
+//! bit-identical to the engine on every generated scenario (and shrink +
+//! report any divergence).
 //!
 //! ```bash
 //! cargo run --release --example scenario_sweep
@@ -15,8 +17,8 @@
 use ccesa::analysis::bounds::p_star;
 use ccesa::protocol::Topology;
 use ccesa::sim::{
-    run_campaign, run_differential, AdversarySpec, ChurnModel, Executor, Scenario, ThresholdRule,
-    TopologySchedule,
+    run_campaign, run_differential, AdversarySpec, ChurnModel, CodecSpec, Executor, Scenario,
+    ThresholdRule, TopologySchedule,
 };
 use ccesa::util::cli::Args;
 
@@ -63,6 +65,7 @@ fn main() -> anyhow::Result<()> {
             churn,
             adversary: AdversarySpec::Colluding((0..n / 10).collect()),
             threshold: ThresholdRule::Auto,
+            codec: CodecSpec::Dense,
             clip: 4.0,
             seed,
         };
@@ -76,6 +79,44 @@ fn main() -> anyhow::Result<()> {
             rep.exposed_honest_total(),
             rep.theorem1_violations(),
             rep.total_stats.server_total() as f64 / 1024.0,
+        );
+    }
+
+    // payload-codec sweep: same campaign, masked-payload bytes per codec —
+    // the bandwidth lever the codec layer adds on top of the sparse graph
+    println!("\n== codec sweep: n={n} rounds={rounds} (iid 3% churn) ==");
+    println!("{:<12} {:>8} {:>16} {:>12}", "codec", "reliable", "payload KiB", "vs dense");
+    let mut dense_payload = 0u64;
+    for codec in [
+        CodecSpec::Dense,
+        CodecSpec::TopK { frac: 0.1 },
+        CodecSpec::RandK { frac: 0.1 },
+    ] {
+        let sc = Scenario {
+            name: format!("codec-{}", codec.name()),
+            n,
+            dim: 128,
+            mask_bits: 32,
+            rounds,
+            topology: TopologySchedule::Static(Topology::ErdosRenyi { p }),
+            churn: ChurnModel::Iid { q: 0.03 },
+            adversary: AdversarySpec::Eavesdropper,
+            threshold: ThresholdRule::Auto,
+            codec,
+            clip: 4.0,
+            seed,
+        };
+        let rep = run_campaign(&sc, Executor::Engine)?;
+        let payload = rep.total_stats.masked_payload_bytes;
+        if matches!(codec, CodecSpec::Dense) {
+            dense_payload = payload;
+        }
+        println!(
+            "{:<12} {:>8} {:>16.1} {:>11.1}x",
+            codec.name(),
+            rep.reliable_rounds(),
+            payload as f64 / 1024.0,
+            dense_payload as f64 / payload.max(1) as f64,
         );
     }
 

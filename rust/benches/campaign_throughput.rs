@@ -1,8 +1,7 @@
 //! Campaign throughput at production scale: full scenario rounds per
-//! second through the sync engine, the thread-per-client coordinator, and
-//! the worker-pool event loop, up to n ≈ 1000 clients — plus an n = 10⁵
-//! smoke path for the event loop, the regime the thread-per-client shape
-//! cannot reach at all.
+//! second through the sync engine and the worker-pool event loop, up to
+//! n ≈ 1000 clients, across the payload-codec axis (dense / top-k /
+//! rand-k) — plus an n = 10⁵ smoke path for the event loop.
 //!
 //! The Harary topology keeps the per-client degree fixed (8), so the cost
 //! per round scales linearly in n and the rounds/s numbers compare across
@@ -11,7 +10,7 @@
 //! n=1000 cases is a handful of full campaign rounds). The n = 10⁵ case
 //! costs seconds per iteration and only runs with `CCESA_BENCH_FULL=1`;
 //! CI exercises the same scale through the ignored
-//! `event_loop_n100k_round` test instead.
+//! `event_loop_n100k` tests instead.
 //!
 //! ```bash
 //! cargo bench --bench campaign_throughput
@@ -22,7 +21,8 @@
 use ccesa::bench::{black_box, Bench};
 use ccesa::protocol::Topology;
 use ccesa::sim::{
-    run_campaign, AdversarySpec, ChurnModel, Executor, Scenario, ThresholdRule, TopologySchedule,
+    run_campaign, AdversarySpec, ChurnModel, CodecSpec, Executor, Scenario, ThresholdRule,
+    TopologySchedule,
 };
 
 fn scenario(n: usize, rounds: usize) -> Scenario {
@@ -36,6 +36,7 @@ fn scenario(n: usize, rounds: usize) -> Scenario {
         churn: ChurnModel::Iid { q: 0.005 },
         adversary: AdversarySpec::Eavesdropper,
         threshold: ThresholdRule::Fixed(4),
+        codec: CodecSpec::Dense,
         clip: 4.0,
         seed: 0xBE2C,
     }
@@ -51,15 +52,33 @@ fn main() {
         });
     }
 
-    // the two deployment shapes, side by side at the same populations
+    // the event-loop deployment shape at the same populations
     for &n in &[100usize, 1000] {
         let sc = scenario(n, 1);
-        b.throughput(&format!("campaign round n={n} (threaded)"), n as f64, "client/s", || {
-            black_box(run_campaign(&sc, Executor::Threaded).unwrap());
-        });
         b.throughput(&format!("campaign round n={n} (event-loop)"), n as f64, "client/s", || {
             black_box(run_campaign(&sc, Executor::EventLoop).unwrap());
         });
+    }
+
+    // the payload-codec axis at fixed n: dense vs top-k vs rand-k at 10%
+    // sparsity — Step-2 payload bytes drop ~10×, and the rows land in
+    // BENCH_campaign_throughput.json for the regression gate
+    for (label, codec) in [
+        ("dense", CodecSpec::Dense),
+        ("topk10", CodecSpec::TopK { frac: 0.1 }),
+        ("randk10", CodecSpec::RandK { frac: 0.1 }),
+    ] {
+        let mut sc = scenario(400, 1);
+        sc.name = format!("bench-codec-{label}");
+        sc.codec = codec;
+        b.throughput(
+            &format!("campaign round n=400 codec={label} (engine)"),
+            400.0,
+            "client/s",
+            || {
+                black_box(run_campaign(&sc, Executor::Engine).unwrap());
+            },
+        );
     }
 
     // n = 10⁵ smoke path: thread cost stays O(par::threads()) while the

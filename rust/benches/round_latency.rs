@@ -1,15 +1,28 @@
 //! End-to-end round latency vs n (E-perf / Table 5.1 aggregate), the
-//! deployment shapes (thread-per-client, worker-pool event loop) vs the
-//! sync engine, and the PJRT masked_sum kernel vs the pure-Rust server
-//! aggregation.
+//! event-loop deployment shape vs the sync engine, the sparse payload
+//! codecs vs dense, and the PJRT masked_sum kernel vs the pure-Rust
+//! server aggregation.
 
 use ccesa::analysis::bounds::{p_star, t_rule};
 use ccesa::bench::{black_box, Bench};
-use ccesa::coordinator::{run_round_event_loop, run_round_threaded};
+use ccesa::codec::Codec;
+use ccesa::coordinator::run_round_event_loop;
 use ccesa::protocol::engine::run_round;
 use ccesa::protocol::{ProtocolConfig, Topology};
 use ccesa::runtime::{to_u32, Input, Manifest, Runtime};
 use ccesa::util::rng::Rng;
+
+fn cfg(n: usize, t: usize, dim: usize, topology: Topology, codec: Codec) -> ProtocolConfig {
+    ProtocolConfig::builder()
+        .clients(n)
+        .threshold(t)
+        .model_dim(dim)
+        .topology(topology)
+        .codec(codec)
+        .seed(4)
+        .build()
+        .unwrap()
+}
 
 fn main() {
     let mut b = Bench::new("round_latency");
@@ -21,8 +34,8 @@ fn main() {
             .map(|_| (0..dim).map(|_| rng.next_u64() & 0xFFFF_FFFF).collect())
             .collect();
         let p = p_star(n, 0.0);
-        let cc_cfg = ProtocolConfig::new(n, t_rule(n, p), dim, Topology::ErdosRenyi { p }, 4);
-        let sa_cfg = ProtocolConfig::new(n, n / 2 + 1, dim, Topology::Complete, 4);
+        let cc_cfg = cfg(n, t_rule(n, p), dim, Topology::ErdosRenyi { p }, Codec::Dense);
+        let sa_cfg = cfg(n, n / 2 + 1, dim, Topology::Complete, Codec::Dense);
         b.bench(&format!("round n={n} CCESA(p*) sync"), || {
             black_box(run_round(&cc_cfg, &models).unwrap());
         });
@@ -30,11 +43,15 @@ fn main() {
             black_box(run_round(&sa_cfg, &models).unwrap());
         });
         if n == 100 {
-            b.bench(&format!("round n={n} CCESA(p*) threaded"), || {
-                black_box(run_round_threaded(&cc_cfg, &models).unwrap());
-            });
             b.bench(&format!("round n={n} CCESA(p*) event-loop"), || {
                 black_box(run_round_event_loop(&cc_cfg, &models).unwrap());
+            });
+            // sparse payload at k = dim/10: Step 2 masks and the server
+            // accumulator shrink 10×
+            let topk_cfg =
+                cfg(n, t_rule(n, p), dim, Topology::ErdosRenyi { p }, Codec::TopK { k: dim / 10 });
+            b.bench(&format!("round n={n} CCESA(p*) topk10%"), || {
+                black_box(run_round(&topk_cfg, &models).unwrap());
             });
         }
     }

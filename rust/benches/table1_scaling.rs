@@ -37,19 +37,22 @@ fn main() {
             .map(|_| (0..dim).map(|_| rng.next_u64() & 0xFFFF_FFFF).collect())
             .collect();
         let p = p_star(n, 0.0);
+        let mk = |t: usize, topology: Topology| {
+            ProtocolConfig::builder()
+                .clients(n)
+                .threshold(t)
+                .model_dim(dim)
+                .topology(topology)
+                .seed(7)
+                .build()
+                .unwrap()
+        };
         let t0 = Instant::now();
-        let cc = run_round(
-            &ProtocolConfig::new(n, t_rule(n, p), dim, Topology::ErdosRenyi { p }, 7),
-            &models,
-        )
-        .expect("ccesa round");
+        let cc = run_round(&mk(t_rule(n, p), Topology::ErdosRenyi { p }), &models)
+            .expect("ccesa round");
         let cc_s = t0.elapsed().as_secs_f64();
         let t0 = Instant::now();
-        let sa = run_round(
-            &ProtocolConfig::new(n, n / 2 + 1, dim, Topology::Complete, 7),
-            &models,
-        )
-        .expect("sa round");
+        let sa = run_round(&mk(n / 2 + 1, Topology::Complete), &models).expect("sa round");
         let sa_s = t0.elapsed().as_secs_f64();
         // one wall-clock sample per round into the standard bench schema
         // (this target measures one full round per configuration — it has

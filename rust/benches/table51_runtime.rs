@@ -36,19 +36,20 @@ fn main() {
                 .map(|_| (0..dim).map(|_| rng.next_u64() & 0xFFFF).collect())
                 .collect();
             let mut row = |scheme: &str, topology: Topology, t: usize, p_label: f64| -> f64 {
-                let cfg = ProtocolConfig {
-                    n,
-                    t,
-                    mask_bits,
-                    dim,
-                    topology,
-                    dropout: if q_total > 0.0 {
+                let cfg = ProtocolConfig::builder()
+                    .clients(n)
+                    .threshold(t)
+                    .model_dim(dim)
+                    .mask_bits(mask_bits)
+                    .topology(topology)
+                    .dropout(if q_total > 0.0 {
                         DropoutModel::iid_from_total(q_total)
                     } else {
                         DropoutModel::None
-                    },
-                    seed: 0xBE7C + n as u64,
-                };
+                    })
+                    .seed(0xBE7C + n as u64)
+                    .build()
+                    .expect("bench config");
                 let t0 = Instant::now();
                 let r = run_round(&cfg, &models).expect("round");
                 // one wall-clock sample per configuration into the standard

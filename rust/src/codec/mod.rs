@@ -1,0 +1,367 @@
+//! The payload codec layer: how a client's dense model update becomes the
+//! maskable field vector that travels on the wire.
+//!
+//! Sparse secret-sharing graphs (this paper) cut the *key/share* traffic;
+//! sparsifying the *payload* itself — Beguier et al. (Efficient Sparse
+//! Secure Aggregation), Ergün et al. (Sparsified Secure Aggregation) —
+//! cuts the dominant masked-model bytes too. A [`Codec`] chooses which
+//! coordinates of the dense update enter a round:
+//!
+//! * [`Codec::Dense`] — the identity codec: every coordinate, bit-identical
+//!   to the pre-codec protocol (same wire bytes, same keystream positions,
+//!   same aggregate).
+//! * [`Codec::TopK`] — global top-k sparsification: the k coordinates with
+//!   the largest summed two's-complement magnitude across the round's
+//!   updates. The scoring is an oracle computed by the round driver (which,
+//!   in simulation, holds every update); a deployment would rank by the
+//!   previous round's public global update instead, so the map is shared
+//!   knowledge either way and costs no extra wire bytes.
+//! * [`Codec::RandK`] — random-k sparsification: k coordinates drawn from
+//!   `Rng::new(seed ^ INDEX_SEED_SALT)` — derivable by every party from
+//!   the public round seed alone.
+//!
+//! **Why a shared index plan.** Pairwise masks cancel *positionally*:
+//! survivor i adds `PRG(s_{i,j})[p]` where survivor j subtracts it, so both
+//! must agree on which dense coordinate position p refers to. A single
+//! per-round [`IndexPlan`] — same for every client — keeps the packed
+//! windows aligned, which is what lets the server unmask a sparse round
+//! with the unchanged counter-seekable range APIs
+//! ([`crate::crypto::prg::apply_mask_range`] / `MaskJob`): the packed
+//! vector of length k simply *is* the mask domain, and any shard `[a, b)`
+//! of it regenerates exactly keystream elements `a..b`.
+//!
+//! An [`EncodedUpdate`] is the value windows plus (a shared handle to) the
+//! coordinate map; [`IndexPlan::scatter`] lifts a packed aggregate back to
+//! the dense domain with zeros off support, so a reliable round's sum is
+//! always a `dim`-length vector whatever the codec.
+
+use crate::util::mod_mask;
+use crate::util::rng::Rng;
+use std::sync::Arc;
+
+/// Domain-separation salt for the RandK index seed: the coordinate draw
+/// must not correlate with the graph/key/share streams that also derive
+/// from the round seed.
+pub const INDEX_SEED_SALT: u64 = 0x1DE5_EED0_C0DE_C0DE;
+
+/// Which payload codec a round runs (carried by
+/// [`crate::protocol::ProtocolConfig`], validated by its builder).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Codec {
+    /// Identity: the full dense vector (the pre-codec protocol).
+    Dense,
+    /// Global top-k by summed magnitude (oracle scoring, see module docs).
+    TopK { k: usize },
+    /// k coordinates drawn from the public round seed.
+    RandK { k: usize },
+}
+
+impl Codec {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Codec::Dense => "dense",
+            Codec::TopK { .. } => "topk",
+            Codec::RandK { .. } => "randk",
+        }
+    }
+
+    /// Build the round's shared index plan. `models` is the TopK scoring
+    /// oracle (one quantized update per client); Dense and RandK ignore it.
+    /// Every driver (sync engine, event loop) calls this with the same
+    /// inputs and therefore derives the same plan.
+    pub fn plan(
+        &self,
+        dim: usize,
+        mask_bits: u32,
+        seed: u64,
+        models: &[Vec<u64>],
+    ) -> Arc<IndexPlan> {
+        match self {
+            Codec::Dense => IndexPlan::identity(dim),
+            Codec::RandK { k } => {
+                assert!(*k >= 1 && *k <= dim, "RandK k={k} out of 1..=dim={dim}");
+                let mut rng = Rng::new(seed ^ INDEX_SEED_SALT);
+                let mut idx: Vec<u32> =
+                    rng.sample_indices(dim, *k).into_iter().map(|i| i as u32).collect();
+                idx.sort_unstable();
+                IndexPlan::sparse(idx, dim)
+            }
+            Codec::TopK { k } => {
+                assert!(*k >= 1 && *k <= dim, "TopK k={k} out of 1..=dim={dim}");
+                // Score = Σ_i |update_i[j]| in two's complement over Z_{2^b};
+                // ties break toward the lower coordinate so the selection is
+                // a pure function of (models, mask_bits).
+                let mut scores = vec![0u128; dim];
+                for m in models {
+                    for (s, &w) in scores.iter_mut().zip(m.iter()) {
+                        *s += magnitude(w, mask_bits) as u128;
+                    }
+                }
+                let mut order: Vec<u32> = (0..dim as u32).collect();
+                // Partial select: only the top-k set is needed, not a full
+                // ranking — O(dim + k log k) instead of O(dim log dim). The
+                // comparator is a total order (index tie-break), so the
+                // selected set is identical to a full sort's prefix.
+                order.select_nth_unstable_by(*k - 1, |a, b| {
+                    scores[*b as usize]
+                        .cmp(&scores[*a as usize])
+                        .then_with(|| a.cmp(b))
+                });
+                let mut idx: Vec<u32> = order[..*k].to_vec();
+                idx.sort_unstable();
+                IndexPlan::sparse(idx, dim)
+            }
+        }
+    }
+}
+
+/// Two's-complement magnitude of a masked-domain word: |x| where x is the
+/// signed interpretation of `w` in Z_{2^bits}.
+#[inline]
+fn magnitude(w: u64, bits: u32) -> u64 {
+    let m = (w & mod_mask(bits)) as u128;
+    let half = 1u128 << (bits - 1);
+    if m >= half {
+        ((1u128 << bits) - m) as u64
+    } else {
+        m as u64
+    }
+}
+
+/// The round's shared coordinate map: which dense coordinates the packed
+/// payload covers, in ascending order. One plan per round, shared by every
+/// client and the server (`Arc`), so windows align and pairwise masks
+/// cancel positionally.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct IndexPlan {
+    /// Sorted, deduplicated selected coordinates; `None` = identity
+    /// (all of `0..dim`, no gather/scatter on the hot path).
+    indices: Option<Vec<u32>>,
+    dim: usize,
+}
+
+impl IndexPlan {
+    /// The identity plan: every coordinate of a `dim`-length model.
+    pub fn identity(dim: usize) -> Arc<IndexPlan> {
+        Arc::new(IndexPlan { indices: None, dim })
+    }
+
+    /// A sparse plan over the given sorted coordinate set.
+    pub fn sparse(indices: Vec<u32>, dim: usize) -> Arc<IndexPlan> {
+        assert!(
+            indices.windows(2).all(|w| w[0] < w[1]),
+            "index plan must be strictly ascending"
+        );
+        if let Some(&last) = indices.last() {
+            assert!((last as usize) < dim, "index {last} out of dim {dim}");
+        }
+        Arc::new(IndexPlan { indices: Some(indices), dim })
+    }
+
+    /// Packed payload length (= masked-vector length on the wire).
+    pub fn len(&self) -> usize {
+        match &self.indices {
+            None => self.dim,
+            Some(idx) => idx.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Dense model dimension this plan was built for.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn is_identity(&self) -> bool {
+        self.indices.is_none()
+    }
+
+    /// The selected dense coordinates, or `None` for the identity plan.
+    pub fn indices(&self) -> Option<&[u32]> {
+        self.indices.as_deref()
+    }
+
+    /// Gather the plan's coordinates from a dense vector, reducing each
+    /// word into Z_{2^bits}. For the identity plan this is exactly the
+    /// pre-codec `model.iter().map(|&w| w & mask)` pass — bit-identical.
+    pub fn encode(&self, dense: &[u64], bits: u32) -> Vec<u64> {
+        assert_eq!(dense.len(), self.dim, "encode: model dimension mismatch");
+        let mask = mod_mask(bits);
+        match &self.indices {
+            None => dense.iter().map(|&w| w & mask).collect(),
+            Some(idx) => idx.iter().map(|&i| dense[i as usize] & mask).collect(),
+        }
+    }
+
+    /// Lift a packed aggregate back to the dense domain: selected
+    /// coordinates take the packed values, everything else is 0 (which
+    /// dequantizes to 0.0 under the two's-complement quantizer).
+    pub fn scatter(&self, packed: &[u64]) -> Vec<u64> {
+        assert_eq!(packed.len(), self.len(), "scatter: payload length mismatch");
+        match &self.indices {
+            None => packed.to_vec(),
+            Some(idx) => {
+                let mut dense = vec![0u64; self.dim];
+                for (&i, &v) in idx.iter().zip(packed.iter()) {
+                    dense[i as usize] = v;
+                }
+                dense
+            }
+        }
+    }
+
+    /// Zero every off-support coordinate of a dense vector in place — the
+    /// projection that makes a dense ground-truth sum comparable with a
+    /// scattered sparse aggregate.
+    pub fn project(&self, dense: &mut [u64]) {
+        assert_eq!(dense.len(), self.dim, "project: dimension mismatch");
+        let Some(idx) = &self.indices else { return };
+        let mut next = idx.iter().copied().peekable();
+        for (j, w) in dense.iter_mut().enumerate() {
+            if next.peek() == Some(&(j as u32)) {
+                next.next();
+            } else {
+                *w = 0;
+            }
+        }
+    }
+}
+
+/// A client update encoded for one round: the maskable value windows plus
+/// a handle to the round's shared coordinate map. `values[p]` is the
+/// (masked) field element for dense coordinate `plan.indices()[p]` (or
+/// `p` itself under the identity plan).
+#[derive(Debug, Clone)]
+pub struct EncodedUpdate {
+    pub values: Vec<u64>,
+    pub plan: Arc<IndexPlan>,
+}
+
+impl EncodedUpdate {
+    /// Wire bytes of the masked value windows (the coordinate map is
+    /// derived knowledge — round seed or public scoring — and costs none).
+    pub fn payload_bytes(&self, bits: u32) -> usize {
+        self.values.len() * bits.div_ceil(8) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_plan_is_identity() {
+        let plan = Codec::Dense.plan(6, 32, 9, &[]);
+        assert!(plan.is_identity());
+        assert_eq!(plan.len(), 6);
+        assert_eq!(plan.dim(), 6);
+        let v = vec![1u64 << 40, 2, 3, 4, 5, 6];
+        let enc = plan.encode(&v, 32);
+        assert_eq!(enc, vec![0, 2, 3, 4, 5, 6], "encode reduces mod 2^32");
+        assert_eq!(plan.scatter(&enc), enc, "identity scatter is a copy");
+        let mut w = v.clone();
+        plan.project(&mut w);
+        assert_eq!(w, v, "identity projection is a no-op");
+    }
+
+    #[test]
+    fn sparse_encode_scatter_project_round_trip() {
+        let plan = IndexPlan::sparse(vec![1, 3, 4], 6);
+        assert_eq!(plan.len(), 3);
+        assert!(!plan.is_identity());
+        let dense = vec![10u64, 11, 12, 13, 14, 15];
+        let enc = plan.encode(&dense, 32);
+        assert_eq!(enc, vec![11, 13, 14]);
+        assert_eq!(plan.scatter(&enc), vec![0, 11, 0, 13, 14, 0]);
+        let mut proj = dense.clone();
+        plan.project(&mut proj);
+        assert_eq!(proj, vec![0, 11, 0, 13, 14, 0]);
+        // scatter ∘ encode == project for any dense vector already in-field
+        assert_eq!(plan.scatter(&enc), proj);
+    }
+
+    #[test]
+    fn randk_plan_is_seed_deterministic_and_seed_sensitive() {
+        let c = Codec::RandK { k: 8 };
+        let a = c.plan(100, 32, 7, &[]);
+        let b = c.plan(100, 32, 7, &[]);
+        let d = c.plan(100, 32, 8, &[]);
+        assert_eq!(a, b);
+        assert_ne!(a, d, "different round seeds must draw different supports");
+        let idx = a.indices().unwrap();
+        assert_eq!(idx.len(), 8);
+        assert!(idx.windows(2).all(|w| w[0] < w[1]));
+        assert!(idx.iter().all(|&i| (i as usize) < 100));
+    }
+
+    #[test]
+    fn topk_plan_selects_largest_magnitudes() {
+        // two clients; coordinate 2 carries a large negative (two's
+        // complement) value — magnitude scoring must still select it
+        let neg = (1u64 << 32) - 1000; // -1000 mod 2^32
+        let models = vec![vec![1u64, 0, neg, 5, 2], vec![2u64, 0, 0, 900, 1]];
+        let plan = Codec::TopK { k: 2 }.plan(5, 32, 3, &models);
+        assert_eq!(plan.indices().unwrap(), &[2, 3], "|−1000| and 905 dominate");
+    }
+
+    #[test]
+    fn topk_ties_break_toward_lower_index() {
+        let models = vec![vec![7u64, 7, 7, 7]];
+        let plan = Codec::TopK { k: 2 }.plan(4, 32, 0, &models);
+        assert_eq!(plan.indices().unwrap(), &[0, 1]);
+    }
+
+    #[test]
+    fn magnitude_is_twos_complement_abs() {
+        assert_eq!(magnitude(5, 32), 5);
+        assert_eq!(magnitude((1u64 << 32) - 3, 32), 3);
+        assert_eq!(magnitude(1u64 << 31, 32), 1u64 << 31);
+        assert_eq!(magnitude(u64::MAX, 64), 1);
+        assert_eq!(magnitude(3, 16), 3);
+        assert_eq!(magnitude(0xFFFF, 16), 1);
+    }
+
+    #[test]
+    fn payload_bytes_follow_bit_width() {
+        let plan = IndexPlan::sparse(vec![0, 2], 4);
+        let up = EncodedUpdate { values: vec![1, 2], plan };
+        assert_eq!(up.payload_bytes(32), 8);
+        assert_eq!(up.payload_bytes(16), 4);
+        assert_eq!(up.payload_bytes(64), 16);
+    }
+
+    #[test]
+    fn masking_in_packed_domain_matches_full_vector_prefix() {
+        // The packed vector is its own mask domain: masking k packed values
+        // consumes keystream elements 0..k, exactly like a dense vector of
+        // length k — the property that lets sparse rounds reuse the range
+        // APIs unchanged.
+        use crate::crypto::prg::{apply_mask, apply_mask_range, NONCE_SELF};
+        let seed = [9u8; 32];
+        let plan = IndexPlan::sparse(vec![2, 5, 11, 17], 20);
+        let dense: Vec<u64> = (0..20u64).map(|i| i * 31).collect();
+        let mut packed = plan.encode(&dense, 32);
+        let mut reference = packed.clone();
+        apply_mask(&mut reference, &seed, &NONCE_SELF, 32, false);
+        // shard the packed vector at an arbitrary split — same result
+        let (lo, hi) = packed.split_at_mut(1);
+        apply_mask_range(lo, &seed, &NONCE_SELF, 32, false, 0);
+        apply_mask_range(hi, &seed, &NONCE_SELF, 32, false, 1);
+        assert_eq!(packed, reference);
+    }
+
+    #[test]
+    #[should_panic(expected = "strictly ascending")]
+    fn unsorted_plan_rejected() {
+        let _ = IndexPlan::sparse(vec![3, 1], 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of dim")]
+    fn out_of_range_plan_rejected() {
+        let _ = IndexPlan::sparse(vec![1, 5], 5);
+    }
+}

@@ -1,8 +1,8 @@
-//! Deployment shapes for one aggregation round: how n client state
-//! machines and one server actually execute.
+//! Deployment shape for one aggregation round: how n client state machines
+//! and one server actually execute.
 //!
 //! `protocol::engine` is the deterministic synchronous core used by tests
-//! and benches. This module provides two "real service" arrangements built
+//! and benches. This module provides the "real service" arrangement built
 //! on the same poll-able [`ClientSm`]:
 //!
 //! * [`run_round_event_loop`] — **the scaling shape.** A single event loop
@@ -12,28 +12,28 @@
 //!   and the server drains the resulting `Up` messages in client-id order.
 //!   Thread cost is O(workers), independent of n — a 10⁵-client round runs
 //!   on a handful of OS threads.
-//! * [`run_round_threaded`] — the legacy thread-per-client shape: one OS
-//!   thread per client exchanging the same `Up`/`Down` messages over mpsc
-//!   channels. It caps out at a few thousand clients (thread-spawn cost and
-//!   scheduler pressure) and is kept only as a differential witness until
-//!   the event loop's equivalence suite has proven itself everywhere; it is
-//!   scheduled for deletion (see ROADMAP).
 //!
-//! With `DropoutModel::None` or `Targeted` (rng-free models), both shapes
-//! produce sums, survivor sets and `NetStats` bit-identical to the sync
-//! engine for the same seed (asserted in tests and in the randomized
-//! differential harness, `sim::differential`).
+//! The legacy thread-per-client `run_round_threaded` (one OS thread + mpsc
+//! channel pair per client) served as the event loop's differential witness
+//! through its first green CI cycles and was deleted once the equivalence
+//! suite and the randomized differential harness pinned the event loop
+//! against the engine directly (see ROADMAP).
+//!
+//! With `DropoutModel::None` or `Targeted` (rng-free models), the event
+//! loop produces sums, survivor sets and `NetStats` bit-identical to the
+//! sync engine for the same seed — under every payload codec — as asserted
+//! in tests and in the randomized differential harness
+//! (`sim::differential`).
 
 use crate::net::{Dir, NetStats};
 use crate::protocol::client::ClientSm;
 use crate::protocol::messages::*;
 use crate::protocol::server::{RoundOutput, Server};
-use crate::protocol::{ClientId, ProtocolConfig, SurvivorSets};
+use crate::protocol::{ProtocolConfig, SurvivorSets};
 use crate::util::rng::Rng;
-use anyhow::{anyhow, bail, Result};
-use std::collections::BTreeMap;
+use anyhow::{bail, Result};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::Arc;
 
 /// Outcome of a coordinated round (mirrors the engine's essentials).
 #[derive(Debug)]
@@ -131,6 +131,10 @@ pub fn run_round_event_loop_with(
     let graph = cfg.build_graph_with(&mut rng);
     let mut dropout_rng = rng.split(0xD20);
     let survives = predraw_survivals(cfg, &mut dropout_rng);
+    // The round's shared payload plan — same derivation as the sync engine
+    // (public round seed / scoring oracle, never the protocol RNG stream),
+    // so both shapes encode identical windows.
+    let plan = cfg.codec.plan(cfg.dim, cfg.mask_bits, cfg.seed, models);
 
     // RNG derivation is order-dependent (`split` advances the base), so the
     // per-client streams are drawn serially — that part is cheap. The
@@ -155,6 +159,7 @@ pub fn run_round_event_loop_with(
             &mut key_rng,
             share_rng,
             &models[id],
+            plan.clone(),
             survives[id],
         );
         sm.set_mask_workers(mask_workers);
@@ -162,7 +167,7 @@ pub fn run_round_event_loop_with(
     });
     drop(streams); // lanes cloned their pairs; free ~2n ChaCha states
 
-    let mut server = Server::new(cfg.n, cfg.t, cfg.mask_bits, cfg.dim, graph.clone());
+    let mut server = Server::new(cfg.n, cfg.t, cfg.mask_bits, plan, graph.clone());
     let mut stats = NetStats::new(cfg.n);
     let live = AtomicUsize::new(0);
     let peak = AtomicUsize::new(0);
@@ -224,6 +229,7 @@ pub fn run_round_event_loop_with(
         match lane.outbox.take() {
             Some(Up::Masked(m)) => {
                 stats.record(2, Dir::Up, m.id, m.size_bytes());
+                stats.record_masked_payload(m.payload_bytes());
                 masked.push(m);
             }
             Some(Up::Dropped(id, step)) => log::trace!("client {id} dropped at step {step}"),
@@ -268,162 +274,10 @@ pub fn run_round_event_loop_with(
     Ok((CoordRoundResult { sum, reliable, sets, stats }, telemetry))
 }
 
-/// Run one aggregation round with real threads — one OS thread per client.
-///
-/// Legacy shape: scales to a few thousand clients at most. Kept as the
-/// differential witness for the event loop; new code should call
-/// [`run_round_event_loop`].
-pub fn run_round_threaded(cfg: &ProtocolConfig, models: &[Vec<u64>]) -> Result<CoordRoundResult> {
-    assert_eq!(models.len(), cfg.n);
-    let mut rng = Rng::new(cfg.seed);
-    let graph = cfg.build_graph_with(&mut rng);
-    let mut dropout_rng = rng.split(0xD20);
-    let survives = predraw_survivals(cfg, &mut dropout_rng);
-
-    let (tx_up, rx_up) = mpsc::channel::<Up>();
-    let mut to_clients: BTreeMap<ClientId, mpsc::Sender<Down>> = BTreeMap::new();
-
-    std::thread::scope(|scope| -> Result<CoordRoundResult> {
-        // spawn one worker per client, each driving its own state machine
-        for id in 0..cfg.n {
-            let (tx_down, rx_down) = mpsc::channel::<Down>();
-            to_clients.insert(id, tx_down);
-            let tx_up = tx_up.clone();
-            let mut key_rng = rng.split(0xC11E27 + id as u64);
-            let share_rng = rng.split(0x5A12E + id as u64);
-            let neighbors = graph.neighbors(id).to_vec();
-            let model: &[u64] = &models[id];
-            let surv = survives[id];
-            let t = cfg.t;
-            let bits = cfg.mask_bits;
-            scope.spawn(move || {
-                // key generation stays on the worker thread (parallel
-                // across clients), fed by the pre-split stream
-                let mut sm =
-                    ClientSm::new(id, t, bits, neighbors, &mut key_rng, share_rng, model, surv);
-                let mut up = sm.step(Down::Start);
-                loop {
-                    let finished = sm.done();
-                    let _ = tx_up.send(up);
-                    if finished {
-                        return;
-                    }
-                    match rx_down.recv() {
-                        // Finish (or a closed channel) ends the worker
-                        // without a protocol response
-                        Ok(Down::Finish) | Err(_) => return,
-                        Ok(down) => up = sm.step(down),
-                    }
-                }
-            });
-        }
-        drop(tx_up);
-
-        // The server phases run in an inner closure so that EVERY exit path
-        // — including a mid-protocol abort like |V_k| < t — falls through to
-        // the wake-up loop below. Without it, an early `?` return would
-        // leave worker threads parked on `rx_down.recv()` with their senders
-        // still alive, and `thread::scope` would deadlock joining them.
-        let result = (|| -> Result<CoordRoundResult> {
-            let mut server = Server::new(cfg.n, cfg.t, cfg.mask_bits, cfg.dim, graph.clone());
-            let mut stats = NetStats::new(cfg.n);
-
-            // ---- phase 0: every client reports (advert or drop)
-            let mut advs = Vec::new();
-            for _ in 0..cfg.n {
-                match rx_up.recv().map_err(|_| anyhow!("client channel closed"))? {
-                    Up::Adv(a) => {
-                        stats.record(0, Dir::Up, a.id, a.size_bytes());
-                        advs.push(a);
-                    }
-                    Up::Dropped(id, step) => log::trace!("client {id} dropped at step {step}"),
-                    Up::Failed(id, step, e) => log::debug!("client {id} failed step {step}: {e}"),
-                    _ => return Err(anyhow!("protocol order violation in phase 0")),
-                }
-            }
-            // deterministic drain order regardless of thread scheduling
-            advs.sort_by_key(|a| a.id);
-            let bundles = server.step0_route_keys(advs)?;
-            let expect1 = bundles.len();
-            for (id, b) in bundles {
-                stats.record(0, Dir::Down, id, b.size_bytes());
-                let _ = to_clients[&id].send(Down::Bundle(b));
-            }
-
-            // ---- phase 1
-            let mut uploads = Vec::new();
-            for _ in 0..expect1 {
-                match rx_up.recv()? {
-                    Up::Shares(u) => {
-                        stats.record(1, Dir::Up, u.from, u.size_bytes());
-                        uploads.push(u);
-                    }
-                    Up::Dropped(id, step) => log::trace!("client {id} dropped at step {step}"),
-                    Up::Failed(id, step, e) => {
-                        log::debug!("client {id} withdrew step {step}: {e}")
-                    }
-                    _ => return Err(anyhow!("protocol order violation in phase 1")),
-                }
-            }
-            uploads.sort_by_key(|u| u.from);
-            let deliveries = server.step1_route_shares(uploads)?;
-            let expect2 = deliveries.len();
-            for (id, d) in deliveries {
-                stats.record(1, Dir::Down, id, d.size_bytes());
-                let _ = to_clients[&id].send(Down::Delivery(d));
-            }
-
-            // ---- phase 2
-            let mut masked = Vec::new();
-            for _ in 0..expect2 {
-                match rx_up.recv()? {
-                    Up::Masked(m) => {
-                        stats.record(2, Dir::Up, m.id, m.size_bytes());
-                        masked.push(m);
-                    }
-                    Up::Dropped(id, step) => log::trace!("client {id} dropped at step {step}"),
-                    Up::Failed(id, step, e) => log::debug!("client {id} failed step {step}: {e}"),
-                    _ => return Err(anyhow!("protocol order violation in phase 2")),
-                }
-            }
-            masked.sort_by_key(|m| m.id);
-            let announce = Arc::new(server.step2_collect_masked(masked)?);
-            let expect3 = announce.v3.len();
-            for &id in &announce.v3 {
-                stats.record(2, Dir::Down, id, announce.size_bytes());
-                let _ = to_clients[&id].send(Down::Announce(announce.clone()));
-            }
-
-            // ---- phase 3
-            let mut responses = Vec::new();
-            for _ in 0..expect3 {
-                match rx_up.recv()? {
-                    Up::Unmask(u) => {
-                        stats.record(3, Dir::Up, u.from, u.size_bytes());
-                        responses.push(u);
-                    }
-                    Up::Dropped(id, step) => log::trace!("client {id} dropped at step {step}"),
-                    Up::Failed(id, step, e) => log::debug!("client {id} failed step {step}: {e}"),
-                    _ => return Err(anyhow!("protocol order violation in phase 3")),
-                }
-            }
-            responses.sort_by_key(|r| r.from);
-            let RoundOutput { sum, reliable, sets } = server.finalize(responses)?;
-            Ok(CoordRoundResult { sum, reliable, sets, stats })
-        })();
-
-        // Unblock every worker that is still waiting for its next phase
-        // input; workers that already returned just drop the send.
-        for tx in to_clients.values() {
-            let _ = tx.send(Down::Finish);
-        }
-        result
-    })
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::codec::Codec;
     use crate::protocol::dropout::DropoutModel;
     use crate::protocol::engine;
     use crate::protocol::Topology;
@@ -446,52 +300,54 @@ mod tests {
         expect
     }
 
-    /// Both deployment shapes against the sync engine.
-    fn assert_all_shapes_match_engine(cfg: &ProtocolConfig, m: &[Vec<u64>]) {
+    /// The event loop against the sync engine, field by field.
+    fn assert_matches_engine(cfg: &ProtocolConfig, m: &[Vec<u64>]) {
         let sync = engine::run_round(cfg, m).unwrap();
-        for (name, r) in [
-            ("threaded", run_round_threaded(cfg, m).unwrap()),
-            ("event-loop", run_round_event_loop(cfg, m).unwrap()),
-        ] {
-            assert_eq!(r.reliable, sync.reliable, "{name}: reliable");
-            assert_eq!(r.sets, sync.sets, "{name}: survivor sets");
-            assert_eq!(r.sum, sync.sum, "{name}: sum");
-            assert_eq!(r.stats, sync.stats, "{name}: NetStats");
-        }
+        let r = run_round_event_loop(cfg, m).unwrap();
+        assert_eq!(r.reliable, sync.reliable, "event-loop: reliable");
+        assert_eq!(r.sets, sync.sets, "event-loop: survivor sets");
+        assert_eq!(r.sum, sync.sum, "event-loop: sum");
+        assert_eq!(r.stats, sync.stats, "event-loop: NetStats");
     }
 
     #[test]
-    fn both_shapes_match_sync_engine_no_dropout() {
+    fn event_loop_matches_sync_engine_no_dropout() {
         let n = 12;
         let dim = 40;
-        let cfg = ProtocolConfig::new(n, 5, dim, Topology::ErdosRenyi { p: 0.7 }, 2024);
+        let cfg = ProtocolConfig::for_test(n, 5, dim, Topology::ErdosRenyi { p: 0.7 }, 2024);
         let m = models(n, dim, 3);
-        assert_all_shapes_match_engine(&cfg, &m);
+        assert_matches_engine(&cfg, &m);
     }
 
     #[test]
-    fn both_shapes_match_sync_engine_targeted_dropout() {
+    fn event_loop_matches_sync_engine_targeted_dropout() {
         let n = 10;
         let dim = 16;
         let cfg = ProtocolConfig {
             dropout: DropoutModel::Targeted {
                 per_step: [vec![1], vec![3], vec![5], vec![7]],
             },
-            ..ProtocolConfig::new(n, 4, dim, Topology::Complete, 77)
+            ..ProtocolConfig::for_test(n, 4, dim, Topology::Complete, 77)
         };
         let m = models(n, dim, 4);
-        assert_all_shapes_match_engine(&cfg, &m);
+        assert_matches_engine(&cfg, &m);
     }
 
     #[test]
-    fn threaded_sum_is_true_sum() {
-        let n = 8;
-        let dim = 30;
-        let cfg = ProtocolConfig::new(n, 4, dim, Topology::Complete, 5);
-        let m = models(n, dim, 6);
-        let r = run_round_threaded(&cfg, &m).unwrap();
-        assert!(r.reliable);
-        assert_eq!(r.sum.unwrap(), expected_sum(&m, 0..n, dim));
+    fn event_loop_matches_sync_engine_under_sparse_codecs() {
+        let n = 10;
+        let dim = 32;
+        let m = models(n, dim, 5);
+        for codec in [Codec::TopK { k: 5 }, Codec::RandK { k: 5 }] {
+            let cfg = ProtocolConfig {
+                codec,
+                dropout: DropoutModel::Targeted {
+                    per_step: [vec![], vec![2], vec![6], vec![]],
+                },
+                ..ProtocolConfig::for_test(n, 4, dim, Topology::ErdosRenyi { p: 0.85 }, 88)
+            };
+            assert_matches_engine(&cfg, &m);
+        }
     }
 
     #[test]
@@ -499,7 +355,7 @@ mod tests {
         // the result must not depend on how lanes shard across workers
         let n = 9;
         let dim = 20;
-        let cfg = ProtocolConfig::new(n, 4, dim, Topology::Complete, 6);
+        let cfg = ProtocolConfig::for_test(n, 4, dim, Topology::Complete, 6);
         let m = models(n, dim, 7);
         let expect = expected_sum(&m, 0..n, dim);
         for workers in [1usize, 2, 3, 8] {
@@ -523,60 +379,61 @@ mod tests {
     #[test]
     fn aborted_round_terminates_and_errors() {
         // every client dropping at step 0 leaves |V1| = 0 < t: the server
-        // aborts mid-protocol; both shapes must return Err — the threaded
-        // one without deadlocking on workers that never got phase input
+        // aborts mid-protocol; the event loop must return Err
         let n = 6;
         let cfg = ProtocolConfig {
             dropout: DropoutModel::Targeted {
                 per_step: [(0..n).collect(), vec![], vec![], vec![]],
             },
-            ..ProtocolConfig::new(n, 3, 4, Topology::Complete, 3)
+            ..ProtocolConfig::for_test(n, 3, 4, Topology::Complete, 3)
         };
         let m = models(n, 4, 3);
-        assert!(run_round_threaded(&cfg, &m).is_err());
         assert!(run_round_event_loop(&cfg, &m).is_err());
     }
 
     #[test]
     fn abort_after_step1_terminates_and_errors() {
         // all clients past V1 drop at step 2 → |V3| = 0 < t: abort happens
-        // after workers have consumed one phase input — the late-phase
-        // unblocking path
+        // after lanes have consumed one phase input
         let n = 5;
         let cfg = ProtocolConfig {
             dropout: DropoutModel::Targeted {
                 per_step: [vec![], vec![], (0..n).collect(), vec![]],
             },
-            ..ProtocolConfig::new(n, 2, 4, Topology::Complete, 4)
+            ..ProtocolConfig::for_test(n, 2, 4, Topology::Complete, 4)
         };
         let m = models(n, 4, 4);
-        assert!(run_round_threaded(&cfg, &m).is_err());
         assert!(run_round_event_loop(&cfg, &m).is_err());
     }
 
     #[test]
-    fn iid_dropout_terminates_and_is_consistent() {
-        // Iid dropout draws happen in a fixed pre-pass, so each shape is
-        // deterministic; the protocol must terminate and, when reliable,
-        // produce exactly the V3 sum. Both shapes share the pre-pass, so
-        // they also agree with each other.
+    fn materialized_iid_dropout_terminates_and_is_consistent() {
+        // Bit-identity between the engine and the event loop is promised
+        // for rng-free dropout only (the engine draws Iid lazily over
+        // survivors, the loop pre-draws all n×4 decisions — different
+        // stream positions once anyone drops). Materializing the Iid model
+        // into an explicit schedule, exactly as the sim scenario compiler
+        // does, restores a shared schedule: the round must terminate and,
+        // when reliable, produce exactly the V3 sum in engine agreement.
         for seed in 0..5 {
             let n = 14;
+            let per_step =
+                DropoutModel::Iid { q: 0.15 }.materialize(n, &mut Rng::new(0x1D1D + seed));
             let cfg = ProtocolConfig {
-                dropout: DropoutModel::Iid { q: 0.15 },
-                ..ProtocolConfig::new(n, 5, 8, Topology::ErdosRenyi { p: 0.8 }, 100 + seed)
+                dropout: DropoutModel::Targeted { per_step },
+                ..ProtocolConfig::for_test(n, 5, 8, Topology::ErdosRenyi { p: 0.8 }, 100 + seed)
             };
             let m = models(n, 8, seed);
-            let threaded = run_round_threaded(&cfg, &m);
+            let sync = engine::run_round(&cfg, &m);
             let looped = run_round_event_loop(&cfg, &m);
-            match (threaded, looped) {
+            match (sync, looped) {
                 (Ok(a), Ok(b)) => {
                     assert_eq!(a.sets, b.sets, "seed={seed}");
                     assert_eq!(a.sum, b.sum, "seed={seed}");
                     assert_eq!(a.stats, b.stats, "seed={seed}");
-                    if a.reliable {
-                        let expect = expected_sum(&m, a.sets.v3.iter().copied(), 8);
-                        assert_eq!(a.sum.unwrap(), expect, "seed={seed}");
+                    if b.reliable {
+                        let expect = expected_sum(&m, b.sets.v3.iter().copied(), 8);
+                        assert_eq!(b.sum.unwrap(), expect, "seed={seed}");
                     }
                 }
                 (Err(_), Err(_)) => { /* |V_k| < t abort is acceptable under dropout */ }

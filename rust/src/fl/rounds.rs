@@ -9,6 +9,7 @@
 
 use super::data::Dataset;
 use crate::analysis::bounds::t_rule;
+use crate::codec::{Codec, IndexPlan};
 use crate::masking::Quantizer;
 use crate::net::NetStats;
 use crate::protocol::dropout::DropoutModel;
@@ -17,6 +18,7 @@ use crate::protocol::{ProtocolConfig, Topology};
 use crate::runtime::mlp::{MlpParams, MlpRuntime};
 use crate::util::rng::Rng;
 use anyhow::Result;
+use std::sync::Arc;
 
 /// How client updates are combined.
 #[derive(Debug, Clone)]
@@ -31,6 +33,10 @@ pub enum Aggregation {
         t_override: Option<usize>,
         mask_bits: u32,
         dropout: DropoutModel,
+        /// Payload codec for the masked uploads ([`Codec::Dense`] is the
+        /// classic full-model path; sparse codecs update only the round's
+        /// shared support, leaving other global coordinates untouched).
+        codec: Codec,
     },
 }
 
@@ -91,6 +97,10 @@ pub struct SecureMeanOutcome {
     /// The abort error when the protocol gave up mid-round; callers log it
     /// with their round context.
     pub abort: Option<String>,
+    /// The round's payload plan: which coordinates of `mean` carry this
+    /// round's aggregate. Off-support coordinates of a sparse mean are 0.0
+    /// and must not overwrite state a caller keeps per coordinate.
+    pub plan: Arc<IndexPlan>,
 }
 
 impl SecureMeanOutcome {
@@ -117,7 +127,7 @@ impl SecureMeanOutcome {
 pub fn secure_mean(locals: &[Vec<f32>], q: &Quantizer, pcfg: &ProtocolConfig) -> SecureMeanOutcome {
     let models: Vec<Vec<u64>> = locals.iter().map(|l| q.quantize(l)).collect();
     match run_round(pcfg, &models) {
-        Ok(RoundResult { sum: Some(sum), sets, stats, .. }) => {
+        Ok(RoundResult { sum: Some(sum), sets, stats, plan, .. }) => {
             let denom = sets.v3.len().max(1) as f64;
             let mean: Vec<f32> =
                 q.dequantize(&sum).iter().map(|v| (v / denom) as f32).collect();
@@ -127,21 +137,27 @@ pub fn secure_mean(locals: &[Vec<f32>], q: &Quantizer, pcfg: &ProtocolConfig) ->
                 stats: Some(stats),
                 survivors: sets.v3.len(),
                 abort: None,
+                plan,
             }
         }
-        Ok(RoundResult { sum: None, sets, stats, .. }) => SecureMeanOutcome {
+        Ok(RoundResult { sum: None, sets, stats, plan, .. }) => SecureMeanOutcome {
             mean: None,
             reliable: false,
             stats: Some(stats),
             survivors: sets.v3.len(),
             abort: None,
+            plan,
         },
+        // Aborted before the round ran its course: derive the same plan the
+        // round would have used so the field is always meaningful (cold
+        // path — this is the only place it is re-derived).
         Err(e) => SecureMeanOutcome {
             mean: None,
             reliable: false,
             stats: None,
             survivors: 0,
             abort: Some(e.to_string()),
+            plan: pcfg.codec.plan(pcfg.dim, pcfg.mask_bits, pcfg.seed, &models),
         },
     }
 }
@@ -242,7 +258,7 @@ pub fn run_fl_mlp(
                 }
                 (Some(MlpParams::from_flat(mlp.dims, &mean)?), true, 0, 0)
             }
-            Aggregation::Secure { topology, t_override, mask_bits, dropout } => {
+            Aggregation::Secure { topology, t_override, mask_bits, dropout, codec } => {
                 let q = Quantizer::for_sum_of(*mask_bits, cfg.clip, k);
                 let t = t_override.unwrap_or_else(|| match topology {
                     Topology::Complete => k / 2 + 1,
@@ -250,19 +266,33 @@ pub fn run_fl_mlp(
                     Topology::Harary { k: deg } => (deg / 2 + 1).max(2),
                     Topology::Custom(_) => k / 2 + 1,
                 });
-                let pcfg = ProtocolConfig {
-                    n: k,
-                    t,
-                    mask_bits: *mask_bits,
-                    dim,
-                    topology: topology.clone(),
-                    dropout: dropout.clone(),
-                    seed: cfg.seed ^ (round as u64).wrapping_mul(0x9E3779B97F4A7C15),
-                };
+                let pcfg = ProtocolConfig::builder()
+                    .clients(k)
+                    .threshold(t)
+                    .model_dim(dim)
+                    .mask_bits(*mask_bits)
+                    .topology(topology.clone())
+                    .dropout(dropout.clone())
+                    .codec(*codec)
+                    .seed(cfg.seed ^ (round as u64).wrapping_mul(0x9E3779B97F4A7C15))
+                    .build()?;
                 let outcome = secure_mean(&locals, &q, &pcfg);
                 let (up, down) = outcome.charge(round, &mut history.total_stats);
                 let new_global = match outcome.mean {
-                    Some(mean) => Some(MlpParams::from_flat(mlp.dims, &mean)?),
+                    // A sparse round aggregates only the plan's support: take
+                    // the secure mean there and keep the previous global on
+                    // every off-support coordinate (whose mean slots are
+                    // 0.0 by scatter, not "the clients agreed on 0").
+                    Some(mean) => match outcome.plan.indices() {
+                        Some(support) => {
+                            let mut merged = global.flatten();
+                            for &i in support {
+                                merged[i as usize] = mean[i as usize];
+                            }
+                            Some(MlpParams::from_flat(mlp.dims, &merged)?)
+                        }
+                        None => Some(MlpParams::from_flat(mlp.dims, &mean)?),
+                    },
                     None => None,
                 };
                 (new_global, outcome.reliable, up, down)
@@ -368,7 +398,9 @@ where
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sim::{AdversarySpec, ChurnModel, Scenario, ThresholdRule, TopologySchedule};
+    use crate::sim::{
+        AdversarySpec, ChurnModel, CodecSpec, Scenario, ThresholdRule, TopologySchedule,
+    };
 
     fn scenario(n: usize, rounds: usize, churn: ChurnModel) -> Scenario {
         Scenario {
@@ -381,9 +413,20 @@ mod tests {
             churn,
             adversary: AdversarySpec::Eavesdropper,
             threshold: ThresholdRule::Fixed(n / 2 + 1),
+            codec: CodecSpec::Dense,
             clip: 4.0,
             seed: 0xF15C,
         }
+    }
+
+    fn pcfg_complete(n: usize, t: usize, dim: usize, seed: u64) -> ProtocolConfig {
+        ProtocolConfig::builder()
+            .clients(n)
+            .threshold(t)
+            .model_dim(dim)
+            .seed(seed)
+            .build()
+            .unwrap()
     }
 
     #[test]
@@ -395,7 +438,7 @@ mod tests {
             .map(|_| (0..dim).map(|_| rng.normal_f32(0.0, 0.5)).collect())
             .collect();
         let q = Quantizer::for_sum_of(32, 4.0, n);
-        let pcfg = ProtocolConfig::new(n, n / 2 + 1, dim, Topology::Complete, 77);
+        let pcfg = pcfg_complete(n, n / 2 + 1, dim, 77);
         let outcome = secure_mean(&locals, &q, &pcfg);
         assert!(outcome.reliable);
         assert_eq!(outcome.survivors, n);
@@ -411,12 +454,46 @@ mod tests {
     fn secure_mean_abort_reports_unreliable() {
         let locals = vec![vec![0.5f32; 4]; 3];
         let q = Quantizer::for_sum_of(32, 4.0, 3);
-        // t > n: |V1| < t already in step 0, so the server aborts
-        let pcfg = ProtocolConfig::new(3, 5, 4, Topology::Complete, 1);
+        // two of three clients drop at step 0: |V1| = 1 < t = 3, so the
+        // server aborts mid-round (the builder rejects a *statically*
+        // impossible t > n at construction instead)
+        let pcfg = ProtocolConfig {
+            dropout: DropoutModel::Targeted {
+                per_step: [vec![1, 2], vec![], vec![], vec![]],
+            },
+            ..pcfg_complete(3, 3, 4, 1)
+        };
         let outcome = secure_mean(&locals, &q, &pcfg);
         assert!(!outcome.reliable);
         assert!(outcome.mean.is_none());
         assert!(outcome.abort.is_some(), "abort reason must be surfaced");
+    }
+
+    #[test]
+    fn sparse_secure_mean_updates_only_the_round_support() {
+        // constant 1.0 updates under RandK: the decoded mean is ≈1.0 on the
+        // round's support and exactly 0.0 elsewhere (0 dequantizes to 0)
+        let n = 6;
+        let dim = 10;
+        let k = 4;
+        let locals = vec![vec![1.0f32; dim]; n];
+        let q = Quantizer::for_sum_of(32, 4.0, n);
+        let pcfg = ProtocolConfig {
+            codec: Codec::RandK { k },
+            ..pcfg_complete(n, n / 2 + 1, dim, 0xF00D)
+        };
+        let outcome = secure_mean(&locals, &q, &pcfg);
+        assert!(outcome.reliable);
+        let mean = outcome.mean.unwrap();
+        let support = outcome.plan.indices().unwrap().to_vec();
+        let tol = (q.sum_error_bound(n) / n as f64 + 1e-6) as f32;
+        for (j, m) in mean.iter().enumerate() {
+            if support.contains(&(j as u32)) {
+                assert!((m - 1.0).abs() <= tol, "support coord {j}: {m}");
+            } else {
+                assert_eq!(*m, 0.0, "off-support coord {j} must stay untouched");
+            }
+        }
     }
 
     #[test]
@@ -465,6 +542,29 @@ mod tests {
         // 1, 2, 4 → the oracle genuinely observes the evolving model
         let hist = run_fl_scenario(&sc, |_, _, global, _| vec![global[0] + 1.0; 5]).unwrap();
         assert!((hist.global[0] - 7.0).abs() < 0.05, "global {}", hist.global[0]);
+    }
+
+    #[test]
+    fn fl_scenario_sparse_codec_accumulates_on_support_only() {
+        // constant 1.0 updates through RandK rounds: each coordinate of the
+        // global grows by exactly its per-round support hit count
+        let n = 6;
+        let rounds = 3;
+        let mut sc = scenario(n, rounds, ChurnModel::None);
+        sc.codec = CodecSpec::RandK { frac: 0.4 }; // dim 5 → k = 2
+        let hist = run_fl_scenario(&sc, |_, _, _, _| vec![1.0f32; 5]).unwrap();
+        assert_eq!(hist.unreliable_rounds(), 0);
+        let mut hits = vec![0u32; sc.dim];
+        for plan in sc.compile() {
+            let p = plan.cfg.codec.plan(sc.dim, sc.mask_bits, plan.cfg.seed, &[]);
+            for &i in p.indices().unwrap() {
+                hits[i as usize] += 1;
+            }
+        }
+        assert!(hits.iter().sum::<u32>() > 0, "supports must be non-empty");
+        for (j, g) in hist.global.iter().enumerate() {
+            assert!((g - hits[j] as f32).abs() < 0.01, "coord {j}: {g} vs {}", hits[j]);
+        }
     }
 }
 

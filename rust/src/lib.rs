@@ -17,6 +17,7 @@
 pub mod analysis;
 pub mod bench;
 pub mod attacks;
+pub mod codec;
 pub mod coordinator;
 pub mod crypto;
 pub mod fl;

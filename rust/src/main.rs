@@ -23,6 +23,7 @@ use ccesa::protocol::engine::run_round;
 use ccesa::protocol::{ProtocolConfig, Topology};
 use ccesa::runtime::mlp::MlpRuntime;
 use ccesa::runtime::Runtime;
+use ccesa::sim::CodecSpec;
 use ccesa::util::cli::Args;
 use ccesa::util::json::Json;
 use ccesa::util::rng::Rng;
@@ -42,6 +43,7 @@ fn main() -> Result<()> {
     .flag("trials", Some("500"), "Monte-Carlo trials")
     .flag("seed", Some("1"), "seed")
     .flag("config", None, "JSON config path for `fl`")
+    .flag("codec", Some("dense"), "payload codec: dense | topk:<frac> | randk:<frac>")
     .switch("sa", "use the complete graph (Bonawitz et al. SA)")
     .parse();
 
@@ -103,6 +105,29 @@ fn analyze(args: &Args, what: &str) -> Result<()> {
     Ok(())
 }
 
+/// Parse `dense | topk:<frac> | randk:<frac>` into the scenario-axis codec
+/// spec (fraction-relative, resolved against the concrete dim).
+fn parse_codec(spec: &str) -> Result<CodecSpec> {
+    let spec = spec.trim();
+    if spec == "dense" {
+        return Ok(CodecSpec::Dense);
+    }
+    let (kind, frac) = spec
+        .split_once(':')
+        .ok_or_else(|| anyhow!("codec {spec:?}: expected dense | topk:<frac> | randk:<frac>"))?;
+    let frac: f64 = frac
+        .parse()
+        .map_err(|_| anyhow!("codec {spec:?}: fraction must be a number in (0, 1]"))?;
+    if !frac.is_finite() || frac <= 0.0 || frac > 1.0 {
+        bail!("codec {spec:?}: fraction {frac} must be in (0, 1]");
+    }
+    match kind {
+        "topk" => Ok(CodecSpec::TopK { frac }),
+        "randk" => Ok(CodecSpec::RandK { frac }),
+        other => bail!("unknown codec family {other:?} (dense|topk|randk)"),
+    }
+}
+
 fn round(args: &Args) -> Result<()> {
     let n: usize = args.req("n");
     let dim: usize = args.req("dim");
@@ -113,26 +138,29 @@ fn round(args: &Args) -> Result<()> {
         .get::<usize>("t")
         .unwrap_or_else(|| if sa { n / 2 + 1 } else { t_rule(n, p) });
     let topology = if sa { Topology::Complete } else { Topology::ErdosRenyi { p } };
+    let codec = parse_codec(&args.req::<String>("codec"))?.resolve(dim);
     let mut rng = Rng::new(args.req("seed"));
     let models: Vec<Vec<u64>> = (0..n)
         .map(|_| (0..dim).map(|_| rng.next_u64() & 0xFFFF_FFFF).collect())
         .collect();
-    let cfg = ProtocolConfig {
-        n,
-        t,
-        mask_bits: 32,
-        dim,
-        topology,
-        dropout: if qt > 0.0 { DropoutModel::iid_from_total(qt) } else { DropoutModel::None },
-        seed: args.req("seed"),
-    };
+    let cfg = ProtocolConfig::builder()
+        .clients(n)
+        .threshold(t)
+        .model_dim(dim)
+        .topology(topology)
+        .dropout(if qt > 0.0 { DropoutModel::iid_from_total(qt) } else { DropoutModel::None })
+        .codec(codec)
+        .seed(args.req("seed"))
+        .build()?;
     let r = run_round(&cfg, &models)?;
     println!(
-        "scheme={} n={n} t={t} p={:.4} dim={dim}\nreliable={} |V1..V4|={},{},{},{}\n\
-         sum==truth: {}\nbytes up/down per step: {:?} / {:?}\n\
+        "scheme={} n={n} t={t} p={:.4} dim={dim} codec={}\n\
+         reliable={} |V1..V4|={},{},{},{}\n\
+         sum==truth: {}\nbytes up/down per step: {:?} / {:?}\nmasked payload bytes: {}\n\
          client ms (mean): step0={:.3} step1={:.3} step2={:.3} step3={:.3}; server total={:.1} ms",
         if sa { "SA" } else { "CCESA" },
         if sa { 1.0 } else { p },
+        cfg.codec.name(),
         r.reliable,
         r.sets.v1.len(),
         r.sets.v2.len(),
@@ -141,6 +169,7 @@ fn round(args: &Args) -> Result<()> {
         r.sum.as_deref() == Some(&r.true_sum_v3[..]),
         r.stats.bytes_up,
         r.stats.bytes_down,
+        r.stats.masked_payload_bytes,
         r.times.total_ms("client_step0") / n as f64,
         r.times.total_ms("client_step1") / n as f64,
         r.times.total_ms("client_step2") / n as f64,
@@ -188,6 +217,9 @@ fn fl(args: &Args) -> Result<()> {
     };
 
     let k = ((n as f64) * fraction).round().max(1.0) as usize;
+    // optional payload codec: {"codec": "randk:0.1"} etc., default dense
+    let codec_spec = parse_codec(j.get("codec").as_str().unwrap_or("dense"))?;
+    let codec = codec_spec.resolve(mlp.dims.param_count());
     let aggregation = match scheme.as_str() {
         "plain" | "fedavg" => Aggregation::Plain,
         "sa" => Aggregation::Secure {
@@ -195,6 +227,7 @@ fn fl(args: &Args) -> Result<()> {
             t_override: Some(k / 2 + 1),
             mask_bits: 32,
             dropout: if qt > 0.0 { DropoutModel::iid_from_total(qt) } else { DropoutModel::None },
+            codec,
         },
         "ccesa" => {
             let p = j.get("p").as_f64().unwrap_or_else(|| p_star(k, qt));
@@ -207,6 +240,7 @@ fn fl(args: &Args) -> Result<()> {
                 } else {
                     DropoutModel::None
                 },
+                codec,
             }
         }
         other => bail!("unknown scheme {other:?} (plain|sa|ccesa)"),

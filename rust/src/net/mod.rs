@@ -27,6 +27,10 @@ pub struct NetStats {
     pub bytes_down: [u64; 4],
     pub msgs_up: [u64; 4],
     pub msgs_down: [u64; 4],
+    /// Bytes of masked field elements in Step-2 uploads — the payload the
+    /// codec layer shrinks. Dense: |V3|·m·b/8; a k-sparse codec cuts this
+    /// to |V3|·k·b/8, and the ratio is the measured bandwidth saving.
+    pub masked_payload_bytes: u64,
     /// per-client totals across all steps (index = client id)
     pub client_up: Vec<u64>,
     pub client_down: Vec<u64>,
@@ -56,6 +60,13 @@ impl NetStats {
                 self.client_down[client] += bytes as u64;
             }
         }
+    }
+
+    /// Charge the masked-value payload of one Step-2 upload (a subset of
+    /// the bytes already charged via [`NetStats::record`] — tracked
+    /// separately so per-codec savings are directly measurable).
+    pub fn record_masked_payload(&mut self, bytes: usize) {
+        self.masked_payload_bytes += bytes as u64;
     }
 
     /// Total bytes through the server (both directions, all steps).
@@ -97,6 +108,7 @@ impl NetStats {
             self.msgs_up[s] += other.msgs_up[s];
             self.msgs_down[s] += other.msgs_down[s];
         }
+        self.masked_payload_bytes += other.masked_payload_bytes;
         if self.client_up.len() < other.client_up.len() {
             self.client_up.resize(other.client_up.len(), 0);
             self.client_down.resize(other.client_down.len(), 0);
@@ -133,14 +145,17 @@ mod tests {
     fn merge_adds_counters() {
         let mut a = NetStats::new(2);
         a.record(1, Dir::Up, 0, 10);
+        a.record_masked_payload(7);
         let mut b = NetStats::new(2);
         b.record(1, Dir::Up, 1, 20);
         b.record(3, Dir::Down, 0, 5);
+        b.record_masked_payload(11);
         a.merge(&b);
         assert_eq!(a.bytes_up[1], 30);
         assert_eq!(a.bytes_down[3], 5);
         assert_eq!(a.msgs_up[1], 2);
         assert_eq!(a.client_up[1], 20);
+        assert_eq!(a.masked_payload_bytes, 18);
     }
 
     #[test]

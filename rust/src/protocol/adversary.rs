@@ -27,6 +27,11 @@ pub struct Transcript {
     pub t: usize,
     pub mask_bits: u32,
     pub dim: usize,
+    /// Length of the masked payload vectors on the wire: `dim` under the
+    /// dense codec, k under a sparse one. The eavesdropper sees (and the
+    /// attack recovers) packed vectors — the coordinate map is public
+    /// derived knowledge either way.
+    pub payload_len: usize,
     /// The assignment graph (public: implied by the key routing).
     pub graph: Graph,
     /// Advertised public keys.
@@ -42,7 +47,7 @@ pub struct Transcript {
 }
 
 /// A successful partial-sum recovery: the client subset and the recovered
-/// Σ_{i∈subset} θ_i (mod 2^b).
+/// Σ_{i∈subset} θ_i (mod 2^b), in the wire (packed) payload domain.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Breach {
     pub subset: Vec<ClientId>,
@@ -83,8 +88,8 @@ pub fn attack(tr: &Transcript) -> Vec<Breach> {
         if subset.len() == tr.v3.len() {
             continue; // not a proper subset
         }
-        // Accumulate Σ θ̃_i over the component.
-        let mut acc = vec![0u64; tr.dim];
+        // Accumulate Σ θ̃_i over the component (wire payload domain).
+        let mut acc = vec![0u64; tr.payload_len];
         for &i in &subset {
             let Some(v) = masked.get(&i) else { continue 'component };
             for (a, x) in acc.iter_mut().zip(v.iter()) {
@@ -218,7 +223,7 @@ mod tests {
     #[test]
     fn connected_graph_resists_attack() {
         let n = 10;
-        let cfg = ProtocolConfig::new(n, 4, 12, Topology::Complete, 31);
+        let cfg = ProtocolConfig::for_test(n, 4, 12, Topology::Complete, 31);
         let m = models(n, 12, 1);
         let r = run_round(&cfg, &m).unwrap();
         assert!(attack(&r.transcript).is_empty());
@@ -238,10 +243,7 @@ mod tests {
                 }
             }
         }
-        let cfg = ProtocolConfig {
-            topology: Topology::Custom(g),
-            ..ProtocolConfig::new(n, 3, 6, Topology::Complete, 77)
-        };
+        let cfg = ProtocolConfig::for_test(n, 3, 6, Topology::Custom(g), 77);
         let m = models(n, 6, 2);
         let r = run_round(&cfg, &m).unwrap();
         assert!(r.reliable, "both cliques are self-sufficient");
@@ -270,9 +272,8 @@ mod tests {
         for seed in 0..60 {
             let n = 14;
             let cfg = ProtocolConfig {
-                topology: Topology::ErdosRenyi { p: 0.25 },
                 dropout: DropoutModel::Iid { q: 0.05 },
-                ..ProtocolConfig::new(n, 2, 4, Topology::Complete, 9000 + seed)
+                ..ProtocolConfig::for_test(n, 2, 4, Topology::ErdosRenyi { p: 0.25 }, 9000 + seed)
             };
             let m = models(n, 4, seed);
             let Ok(r) = run_round(&cfg, &m) else { continue };
@@ -325,14 +326,50 @@ mod tests {
         for i in 0..10 {
             g.add_edge(10, i); // bridge connects everything
         }
-        let cfg = ProtocolConfig {
-            topology: Topology::Custom(g),
-            ..ProtocolConfig::new(n, 3, 4, Topology::Complete, 55)
-        };
+        let cfg = ProtocolConfig::for_test(n, 3, 4, Topology::Custom(g), 55);
         let m = models(n, 4, 3);
         let r = run_round(&cfg, &m).unwrap();
         // bridge alive: G3 connected, attack fails
         assert!(attack(&r.transcript).is_empty());
+    }
+
+    #[test]
+    fn attack_recovers_packed_partial_sums_under_sparse_codec() {
+        // two 5-cliques, RandK payload: the eavesdropper's recovered
+        // partial sums live in the packed wire domain and equal the
+        // encoded true partial sums coordinate for coordinate
+        use crate::codec::Codec;
+        let n = 10;
+        let dim = 9;
+        let k = 4;
+        let mut g = Graph::empty(n);
+        for base_id in [0usize, 5] {
+            for i in 0..5 {
+                for j in (i + 1)..5 {
+                    g.add_edge(base_id + i, base_id + j);
+                }
+            }
+        }
+        let cfg = ProtocolConfig {
+            codec: Codec::RandK { k },
+            ..ProtocolConfig::for_test(n, 3, dim, Topology::Custom(g), 91)
+        };
+        let m = models(n, dim, 6);
+        let r = run_round(&cfg, &m).unwrap();
+        assert!(r.reliable);
+        assert_eq!(r.transcript.payload_len, k);
+        let plan = cfg.codec.plan(dim, cfg.mask_bits, cfg.seed, &m);
+        let breaches = attack(&r.transcript);
+        assert_eq!(breaches.len(), 2, "both components breached");
+        for b in &breaches {
+            let mut dense = vec![0u64; dim];
+            for &i in &b.subset {
+                for (a, x) in dense.iter_mut().zip(&m[i]) {
+                    *a = a.wrapping_add(*x) & 0xFFFF_FFFF;
+                }
+            }
+            assert_eq!(b.partial_sum, plan.encode(&dense, 32), "subset {:?}", b.subset);
+        }
     }
 
     #[test]

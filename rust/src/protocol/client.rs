@@ -12,6 +12,7 @@
 
 use super::messages::*;
 use super::ClientId;
+use crate::codec::{EncodedUpdate, IndexPlan};
 use crate::crypto::aead;
 use crate::crypto::dh::{self, KeyPair, PublicKey};
 use crate::crypto::prg::{apply_mask_jobs_range, MaskJob};
@@ -19,6 +20,7 @@ use crate::shamir::{self, Share};
 use crate::util::rng::Rng;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 /// Per-pair AEAD nonce: direction-dependent so the shared key `c_{i,j}` is
 /// never reused with the same nonce for both directions.
@@ -145,20 +147,28 @@ impl Client {
     }
 
     /// **Step 2** — receive the ciphertexts addressed to us (their senders
-    /// are exactly V2 ∩ Adj(i)), then mask the model per Eq. (3).
+    /// are exactly V2 ∩ Adj(i)), encode the model through the round's
+    /// shared index plan, then mask the encoded windows per Eq. (3).
+    ///
+    /// The packed vector is its own mask domain: element p of the encoding
+    /// consumes keystream element p, whatever dense coordinate it maps to.
+    /// Because the plan is shared, every survivor's windows align and
+    /// pairwise masks cancel positionally — with the identity plan this is
+    /// bit-identical to the pre-codec dense path.
     ///
     /// §Perf: plan-then-execute. The d+1 mask seeds (self + one DH
     /// agreement per alive neighbor) are derived first; then one parallel
-    /// pass shards the model vector across workers, each applying every
+    /// pass shards the encoded vector across workers, each applying every
     /// seed's keystream range to its disjoint slice
     /// (`prg::apply_mask_range`) — bit-identical to the serial pass.
     pub fn step2_masked_input(
         &mut self,
         delivery: &ShareDelivery,
         model: &[u64],
+        plan: &Arc<IndexPlan>,
     ) -> Result<MaskedInput> {
-        let workers = crate::par::threads_for_len(model.len());
-        self.step2_masked_input_with(delivery, model, workers)
+        let workers = crate::par::threads_for_len(plan.len());
+        self.step2_masked_input_with(delivery, model, plan, workers)
     }
 
     /// [`Client::step2_masked_input`] with an explicit worker budget for
@@ -170,6 +180,7 @@ impl Client {
         &mut self,
         delivery: &ShareDelivery,
         model: &[u64],
+        plan: &Arc<IndexPlan>,
         workers: usize,
     ) -> Result<MaskedInput> {
         for es in &delivery.shares {
@@ -193,17 +204,21 @@ impl Client {
             jobs.push(MaskJob { seed, pairwise: true, negate: self.id > j });
         }
 
-        // Execute: one parallel pass over disjoint model slices. Never more
-        // workers than the vector length warrants, whatever the caller's
-        // budget.
+        // Execute: encode (gather + reduce into Z_{2^b}; the identity plan
+        // is exactly the old dense copy), then one parallel pass over
+        // disjoint slices of the encoding. Never more workers than the
+        // vector length warrants, whatever the caller's budget.
         let bits = self.mask_bits;
-        let mask = crate::util::mod_mask(bits);
-        let mut masked: Vec<u64> = model.iter().map(|&w| w & mask).collect();
-        let workers = workers.clamp(1, crate::par::threads_for_len(masked.len()));
-        crate::par::for_each_slice(&mut masked, workers, |offset, slice| {
+        let mut values = plan.encode(model, bits);
+        let workers = workers.clamp(1, crate::par::threads_for_len(values.len()));
+        crate::par::for_each_slice(&mut values, workers, |offset, slice| {
             apply_mask_jobs_range(slice, &jobs, bits, offset);
         });
-        Ok(MaskedInput { id: self.id, masked, bits })
+        Ok(MaskedInput {
+            id: self.id,
+            update: EncodedUpdate { values, plan: plan.clone() },
+            bits,
+        })
     }
 
     /// **Step 3** — after learning V3, decrypt the stored ciphertexts and
@@ -264,6 +279,8 @@ pub struct ClientSm<'m> {
     client: Client,
     share_rng: Rng,
     model: &'m [u64],
+    /// The round's shared payload plan (codec output) applied in Step 2.
+    plan: Arc<IndexPlan>,
     /// Pre-drawn survival decision per phase (rng-free replay of the
     /// dropout model, in the sync engine's draw order).
     survives: [bool; 4],
@@ -277,7 +294,7 @@ pub struct ClientSm<'m> {
 impl<'m> ClientSm<'m> {
     /// Build the machine. `key_rng` seeds the key pairs (consumed here, as
     /// `Client::new` draws from it); `share_rng` is retained for the
-    /// Step-1 Shamir splits.
+    /// Step-1 Shamir splits; `plan` is the round's shared index plan.
     #[allow(clippy::too_many_arguments)]
     pub fn new(
         id: ClientId,
@@ -287,12 +304,14 @@ impl<'m> ClientSm<'m> {
         key_rng: &mut Rng,
         share_rng: Rng,
         model: &'m [u64],
+        plan: Arc<IndexPlan>,
         survives: [bool; 4],
     ) -> ClientSm<'m> {
         ClientSm {
             client: Client::new(id, t, mask_bits, neighbors, key_rng),
             share_rng,
             model,
+            plan,
             survives,
             phase: 0,
             mask_workers: None,
@@ -362,8 +381,10 @@ impl<'m> ClientSm<'m> {
             }
             Down::Delivery(delivery) => {
                 let stepped = match self.mask_workers {
-                    Some(w) => self.client.step2_masked_input_with(&delivery, self.model, w),
-                    None => self.client.step2_masked_input(&delivery, self.model),
+                    Some(w) => {
+                        self.client.step2_masked_input_with(&delivery, self.model, &self.plan, w)
+                    }
+                    None => self.client.step2_masked_input(&delivery, self.model, &self.plan),
                 };
                 match stepped {
                     Ok(mi) => {
@@ -449,7 +470,8 @@ mod tests {
         // deliver a's ciphertext to b, b masks
         let delivery = ShareDelivery { to: 1, shares: up_a.shares.clone() };
         let model = vec![5u64; 8];
-        let _ = b.step2_masked_input(&delivery, &model).unwrap();
+        let plan = IndexPlan::identity(8);
+        let _ = b.step2_masked_input(&delivery, &model, &plan).unwrap();
 
         // both 0 and 1 in V3 ⇒ b reveals a SelfMask share of owner 0
         let um = b.step3_unmask(&SurvivorAnnounce { v3: vec![0, 1] }).unwrap();
@@ -460,7 +482,7 @@ mod tests {
         // if owner 0 dropped after step 1 ⇒ SecretKey share instead
         let mut b2 = mk(1, 2, vec![0], 11);
         let _ = b2.step1_share_keys(&bb, &mut rng).unwrap();
-        let _ = b2.step2_masked_input(&delivery, &model).unwrap();
+        let _ = b2.step2_masked_input(&delivery, &model, &plan).unwrap();
         let um2 = b2.step3_unmask(&SurvivorAnnounce { v3: vec![1] }).unwrap();
         let kinds2: Vec<_> = um2.shares.iter().map(|(o, k, _)| (*o, *k)).collect();
         assert!(kinds2.contains(&(0, ShareKind::SecretKey)));
@@ -482,16 +504,17 @@ mod tests {
             let mut tmp = mk(1, 2, vec![0], 21);
             tmp.step1_share_keys(&bundle_for(&[&a]), &mut rng).unwrap()
         };
+        let plan = IndexPlan::identity(16);
         let masked = a
-            .step2_masked_input(&ShareDelivery { to: 0, shares: up_b.shares }, &model)
+            .step2_masked_input(&ShareDelivery { to: 0, shares: up_b.shares }, &model, &plan)
             .unwrap();
         // remove masks manually: PRG(b_0) and +PRG(s_01) (0 < 1 ⇒ plus)
-        let mut rec = masked.masked.clone();
+        let mut rec = masked.update.values.clone();
         apply_mask(&mut rec, &a.b_seed, &NONCE_SELF, 32, true);
         let seed = dh::agree_mask_seed(&a.s_keys.sk, &b.s_keys.pk);
         apply_mask(&mut rec, &seed, &NONCE_PAIRWISE, 32, true);
         assert_eq!(rec, model);
-        assert_ne!(masked.masked, model, "mask must actually hide the model");
+        assert_ne!(masked.update.values, model, "mask must actually hide the model");
     }
 
     #[test]
@@ -503,8 +526,9 @@ mod tests {
         let _ = b.step1_share_keys(&bundle_for(&[&a]), &mut rng).unwrap();
         let mut shares = up_a.shares.clone();
         shares[0].ciphertext[5] ^= 0xFF;
+        let plan = IndexPlan::identity(4);
         let _ = b
-            .step2_masked_input(&ShareDelivery { to: 1, shares }, &[0u64; 4])
+            .step2_masked_input(&ShareDelivery { to: 1, shares }, &[0u64; 4], &plan)
             .unwrap();
         assert!(b.step3_unmask(&SurvivorAnnounce { v3: vec![0, 1] }).is_err());
     }
@@ -519,12 +543,14 @@ mod tests {
             to: 0,
             shares: vec![EncryptedShare { from: 1, to: 2, ciphertext: vec![0; 32] }],
         };
-        assert!(a.step2_masked_input(&bad, &[0u64; 4]).is_err());
+        let plan = IndexPlan::identity(4);
+        assert!(a.step2_masked_input(&bad, &[0u64; 4], &plan).is_err());
     }
 
     fn mk_sm(model: &[u64], survives: [bool; 4]) -> ClientSm<'_> {
         let mut key_rng = Rng::new(50);
-        ClientSm::new(0, 1, 32, vec![], &mut key_rng, Rng::new(51), model, survives)
+        let plan = IndexPlan::identity(model.len());
+        ClientSm::new(0, 1, 32, vec![], &mut key_rng, Rng::new(51), model, plan, survives)
     }
 
     #[test]
@@ -583,7 +609,7 @@ mod tests {
             Up::Masked(m) => m,
             other => panic!("expected Masked, got {other:?}"),
         };
-        assert_ne!(masked.masked, model, "self mask must hide the model");
+        assert_ne!(masked.update.values, model, "self mask must hide the model");
         let ann = std::sync::Arc::new(SurvivorAnnounce { v3: vec![0] });
         match sm.step(Down::Announce(ann)) {
             Up::Unmask(um) => {

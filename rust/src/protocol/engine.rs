@@ -11,10 +11,12 @@ use super::client::Client;
 use super::messages::*;
 use super::server::{theorem1_predicate, RoundOutput, Server};
 use super::{ClientId, ProtocolConfig, SurvivorSets};
+use crate::codec::IndexPlan;
 use crate::net::{Dir, NetStats};
 use crate::util::rng::Rng;
 use crate::util::timer::StepTimes;
 use anyhow::Result;
+use std::sync::Arc;
 
 /// Everything observable about one protocol round.
 #[derive(Debug)]
@@ -32,6 +34,10 @@ pub struct RoundResult {
     pub true_sum_v3: Vec<u64>,
     /// Whether Theorem 1's predicate held (must equal `reliable`).
     pub theorem1_holds: bool,
+    /// The payload plan this round ran under (the codec's shared coordinate
+    /// map) — callers that post-process `sum` per coordinate read the
+    /// support from here instead of re-deriving it.
+    pub plan: Arc<IndexPlan>,
 }
 
 /// Run one full aggregation round over quantized inputs
@@ -44,6 +50,10 @@ pub fn run_round(cfg: &ProtocolConfig, models: &[Vec<u64>]) -> Result<RoundResul
     let mut rng = Rng::new(cfg.seed);
     let graph = cfg.build_graph_with(&mut rng);
     let mut dropout_rng = rng.split(0xD20);
+    // The round's shared payload plan — derived from public knowledge
+    // (round seed / scoring oracle), never from the protocol RNG stream,
+    // so Dense rounds stay bit-identical to the pre-codec engine.
+    let plan = cfg.codec.plan(cfg.dim, cfg.mask_bits, cfg.seed, models);
 
     let mut clients: Vec<Client> = (0..cfg.n)
         .map(|i| {
@@ -51,7 +61,7 @@ pub fn run_round(cfg: &ProtocolConfig, models: &[Vec<u64>]) -> Result<RoundResul
             Client::new(i, cfg.t, cfg.mask_bits, graph.neighbors(i).to_vec(), &mut crng)
         })
         .collect();
-    let mut server = Server::new(cfg.n, cfg.t, cfg.mask_bits, cfg.dim, graph.clone());
+    let mut server = Server::new(cfg.n, cfg.t, cfg.mask_bits, plan.clone(), graph.clone());
     let mut stats = NetStats::new(cfg.n);
     let mut times = StepTimes::new();
     let mut alive: Vec<bool> = vec![true; cfg.n];
@@ -115,8 +125,9 @@ pub fn run_round(cfg: &ProtocolConfig, models: &[Vec<u64>]) -> Result<RoundResul
     times.time("client_step2", || -> Result<()> {
         for (id, delivery) in &deliveries {
             if alive[*id] && cfg.dropout.survives(2, *id, &mut dropout_rng) {
-                let mi = clients[*id].step2_masked_input(delivery, &models[*id])?;
+                let mi = clients[*id].step2_masked_input(delivery, &models[*id], &plan)?;
                 stats.record(2, Dir::Up, *id, mi.size_bytes());
+                stats.record_masked_payload(mi.payload_bytes());
                 masked_inputs.push(mi);
             } else {
                 alive[*id] = false;
@@ -125,7 +136,7 @@ pub fn run_round(cfg: &ProtocolConfig, models: &[Vec<u64>]) -> Result<RoundResul
         Ok(())
     })?;
     let observed_masked: Vec<(ClientId, Vec<u64>)> =
-        masked_inputs.iter().map(|m| (m.id, m.masked.clone())).collect();
+        masked_inputs.iter().map(|m| (m.id, m.update.values.clone())).collect();
     let announce = times.time("server_step2", || server.step2_collect_masked(masked_inputs))?;
     for &id in &announce.v3 {
         stats.record(2, Dir::Down, id, announce.size_bytes());
@@ -157,7 +168,9 @@ pub fn run_round(cfg: &ProtocolConfig, models: &[Vec<u64>]) -> Result<RoundResul
     let RoundOutput { sum, reliable, sets } =
         times.time("server_finalize", || server.finalize(responses))?;
 
-    // Ground truth over V3 for validation.
+    // Ground truth over V3 for validation: the dense modular sum projected
+    // onto the round's support (identity projection for Dense) — exactly
+    // what a reliable round's scattered aggregate must equal.
     let modmask = crate::util::mod_mask(cfg.mask_bits);
     let mut true_sum = vec![0u64; cfg.dim];
     for &i in &sets.v3 {
@@ -165,6 +178,7 @@ pub fn run_round(cfg: &ProtocolConfig, models: &[Vec<u64>]) -> Result<RoundResul
             *a = a.wrapping_add(*x) & modmask;
         }
     }
+    plan.project(&mut true_sum);
 
     let theorem1_holds = theorem1_predicate(&graph, &sets, cfg.t);
 
@@ -173,6 +187,7 @@ pub fn run_round(cfg: &ProtocolConfig, models: &[Vec<u64>]) -> Result<RoundResul
         t: cfg.t,
         mask_bits: cfg.mask_bits,
         dim: cfg.dim,
+        payload_len: plan.len(),
         graph,
         keys: server.advertised_keys().clone(),
         v2: observed_v2,
@@ -190,6 +205,7 @@ pub fn run_round(cfg: &ProtocolConfig, models: &[Vec<u64>]) -> Result<RoundResul
         transcript,
         true_sum_v3: true_sum,
         theorem1_holds,
+        plan,
     })
 }
 
@@ -210,7 +226,7 @@ mod tests {
     fn sa_no_dropout_recovers_exact_sum() {
         let n = 8;
         let dim = 50;
-        let cfg = ProtocolConfig::new(n, 5, dim, Topology::Complete, 42);
+        let cfg = ProtocolConfig::for_test(n, 5, dim, Topology::Complete, 42);
         let m = models(n, dim, 7);
         let r = run_round(&cfg, &m).unwrap();
         assert!(r.reliable);
@@ -223,10 +239,7 @@ mod tests {
     fn ccesa_er_no_dropout_recovers_exact_sum() {
         let n = 20;
         let dim = 30;
-        let cfg = ProtocolConfig {
-            topology: Topology::ErdosRenyi { p: 0.7 },
-            ..ProtocolConfig::new(n, 6, dim, Topology::Complete, 1234)
-        };
+        let cfg = ProtocolConfig::for_test(n, 6, dim, Topology::ErdosRenyi { p: 0.7 }, 1234);
         let m = models(n, dim, 8);
         let r = run_round(&cfg, &m).unwrap();
         assert!(r.reliable, "sets={:?}", r.sets);
@@ -243,7 +256,7 @@ mod tests {
             dropout: DropoutModel::Targeted {
                 per_step: [vec![], vec![], vec![2, 5], vec![]],
             },
-            ..ProtocolConfig::new(n, 4, dim, Topology::Complete, 99)
+            ..ProtocolConfig::for_test(n, 4, dim, Topology::Complete, 99)
         };
         let m = models(n, dim, 9);
         let r = run_round(&cfg, &m).unwrap();
@@ -261,7 +274,7 @@ mod tests {
             dropout: DropoutModel::Targeted {
                 per_step: [vec![0], vec![1], vec![2], vec![3]],
             },
-            ..ProtocolConfig::new(n, 5, dim, Topology::Complete, 77)
+            ..ProtocolConfig::for_test(n, 5, dim, Topology::Complete, 77)
         };
         let m = models(n, dim, 10);
         let r = run_round(&cfg, &m).unwrap();
@@ -282,7 +295,7 @@ mod tests {
             dropout: DropoutModel::Targeted {
                 per_step: [vec![], vec![], vec![], vec![0, 1, 2, 3]],
             },
-            ..ProtocolConfig::new(n, 8, 10, Topology::Complete, 5)
+            ..ProtocolConfig::for_test(n, 8, 10, Topology::Complete, 5)
         };
         let m = models(n, 10, 11);
         let r = run_round(&cfg, &m).unwrap();
@@ -300,15 +313,8 @@ mod tests {
         for seed in 0..trials {
             let n = 12;
             let cfg = ProtocolConfig {
-                mask_bits: 32,
                 dropout: DropoutModel::Iid { q: 0.12 },
-                ..ProtocolConfig::new(
-                    n,
-                    5,
-                    8,
-                    Topology::ErdosRenyi { p: 0.6 },
-                    1000 + seed,
-                )
+                ..ProtocolConfig::for_test(n, 5, 8, Topology::ErdosRenyi { p: 0.6 }, 1000 + seed)
             };
             let m = models(n, 8, seed);
             match run_round(&cfg, &m) {
@@ -338,7 +344,7 @@ mod tests {
     fn sixteen_bit_masking_domain() {
         let n = 6;
         let dim = 20;
-        let mut cfg = ProtocolConfig::new(n, 3, dim, Topology::Complete, 3);
+        let mut cfg = ProtocolConfig::for_test(n, 3, dim, Topology::Complete, 3);
         cfg.mask_bits = 16;
         let mut rng = Rng::new(12);
         let m: Vec<Vec<u64>> = (0..n)
@@ -356,12 +362,10 @@ mod tests {
         let n = 40;
         let dim = 100;
         let m = models(n, dim, 13);
-        let sa = run_round(&ProtocolConfig::new(n, 8, dim, Topology::Complete, 21), &m).unwrap();
+        let sa =
+            run_round(&ProtocolConfig::for_test(n, 8, dim, Topology::Complete, 21), &m).unwrap();
         let cc = run_round(
-            &ProtocolConfig {
-                topology: Topology::ErdosRenyi { p: 0.5 },
-                ..ProtocolConfig::new(n, 8, dim, Topology::Complete, 21)
-            },
+            &ProtocolConfig::for_test(n, 8, dim, Topology::ErdosRenyi { p: 0.5 }, 21),
             &m,
         )
         .unwrap();
@@ -386,9 +390,39 @@ mod tests {
     }
 
     #[test]
+    fn sparse_codecs_recover_projected_sum_under_dropout() {
+        use crate::codec::Codec;
+        let n = 12;
+        let dim = 40;
+        let k = 7;
+        let m = models(n, dim, 21);
+        for codec in [Codec::RandK { k }, Codec::TopK { k }] {
+            let cfg = ProtocolConfig {
+                codec,
+                dropout: DropoutModel::Targeted {
+                    per_step: [vec![1], vec![], vec![5], vec![]],
+                },
+                ..ProtocolConfig::for_test(n, 4, dim, Topology::ErdosRenyi { p: 0.9 }, 2200)
+            };
+            let r = run_round(&cfg, &m).unwrap();
+            assert!(r.reliable, "{codec:?}");
+            let sum = r.sum.as_ref().unwrap();
+            assert_eq!(sum.len(), dim, "{codec:?}: aggregate is always dense-length");
+            assert_eq!(sum, &r.true_sum_v3, "{codec:?}");
+            let nonzero = sum.iter().filter(|&&x| x != 0).count();
+            assert!(nonzero <= k, "{codec:?}: {nonzero} nonzero coords > k={k}");
+            // byte accounting shrinks with k: id + k·4 per masked input
+            let v3 = r.sets.v3.len() as u64;
+            assert_eq!(r.stats.bytes_up[2], v3 * (4 + k as u64 * 4), "{codec:?}");
+            assert_eq!(r.stats.masked_payload_bytes, v3 * k as u64 * 4, "{codec:?}");
+            assert_eq!(r.transcript.payload_len, k, "{codec:?}");
+        }
+    }
+
+    #[test]
     fn transcript_captures_public_view() {
         let n = 6;
-        let cfg = ProtocolConfig::new(n, 3, 5, Topology::Complete, 17);
+        let cfg = ProtocolConfig::for_test(n, 3, 5, Topology::Complete, 17);
         let m = models(n, 5, 14);
         let r = run_round(&cfg, &m).unwrap();
         let t = &r.transcript;

@@ -7,6 +7,7 @@
 //! honest rather than formula-driven.
 
 use super::ClientId;
+use crate::codec::EncodedUpdate;
 use crate::crypto::dh::PublicKey;
 use crate::shamir::Share;
 
@@ -86,18 +87,31 @@ impl ShareDelivery {
     }
 }
 
-/// Step 2, client → server: the masked model θ̃_i (Eq. 3).
+/// Step 2, client → server: the masked, codec-encoded update θ̃_i (Eq. 3).
+///
+/// Under [`crate::codec::Codec::Dense`] the value windows are the full
+/// masked model — byte-identical to the pre-codec wire format. Sparse
+/// codecs send only the round's selected coordinates; the coordinate map
+/// itself is shared derived knowledge (round seed / public scoring) and
+/// costs no wire bytes (see `crate::codec` module docs).
 #[derive(Debug, Clone)]
 pub struct MaskedInput {
     pub id: ClientId,
-    pub masked: Vec<u64>,
+    /// Masked value windows + the round's shared coordinate map.
+    pub update: EncodedUpdate,
     /// Wire width of each element (the aggregation domain Z_{2^bits}).
     pub bits: u32,
 }
 
 impl MaskedInput {
     pub fn size_bytes(&self) -> usize {
-        ID_BYTES + (self.masked.len() * self.bits.div_ceil(8) as usize)
+        ID_BYTES + self.payload_bytes()
+    }
+
+    /// Bytes of masked field elements alone (the per-codec payload that
+    /// `NetStats::masked_payload_bytes` aggregates).
+    pub fn payload_bytes(&self) -> usize {
+        self.update.payload_bytes(self.bits)
     }
 }
 
@@ -215,10 +229,31 @@ mod tests {
 
         assert_eq!(share().size_bytes(), A_S);
 
-        let mi = MaskedInput { id: 3, masked: vec![0; 100], bits: 32 };
+        let dense = crate::codec::IndexPlan::identity(100);
+        let mi = MaskedInput {
+            id: 3,
+            update: EncodedUpdate { values: vec![0; 100], plan: dense.clone() },
+            bits: 32,
+        };
         assert_eq!(mi.size_bytes(), 4 + 400);
-        let mi16 = MaskedInput { id: 3, masked: vec![0; 100], bits: 16 };
+        assert_eq!(mi.payload_bytes(), 400);
+        let mi16 = MaskedInput {
+            id: 3,
+            update: EncodedUpdate { values: vec![0; 100], plan: dense },
+            bits: 16,
+        };
         assert_eq!(mi16.size_bytes(), 4 + 200);
+
+        // a sparse update charges only its value windows: the coordinate
+        // map is derived, not transmitted
+        let sparse = crate::codec::IndexPlan::sparse(vec![5, 9, 77], 100);
+        let mi_sparse = MaskedInput {
+            id: 3,
+            update: EncodedUpdate { values: vec![0; 3], plan: sparse },
+            bits: 32,
+        };
+        assert_eq!(mi_sparse.size_bytes(), 4 + 12);
+        assert_eq!(mi_sparse.payload_bytes(), 12);
 
         let um = UnmaskShares {
             from: 0,

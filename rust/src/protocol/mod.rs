@@ -26,8 +26,10 @@ pub mod engine;
 pub mod messages;
 pub mod server;
 
+use crate::codec::Codec;
 use crate::graph::Graph;
 use crate::util::rng::Rng;
+use anyhow::{bail, Result};
 
 /// Client identifier: index in 0..n.
 pub type ClientId = usize;
@@ -61,6 +63,12 @@ impl Topology {
 }
 
 /// Static protocol parameters for one aggregation round.
+///
+/// Construct with [`ProtocolConfig::builder`], which validates every knob
+/// at construction time (threshold vs population, codec k vs dimension,
+/// topology parameters, mask width) instead of surfacing nonsense as a
+/// mid-round panic. Fields stay public for inspection and struct-update in
+/// tests; the builder is the only construction surface.
 #[derive(Debug, Clone)]
 pub struct ProtocolConfig {
     /// Number of clients n.
@@ -76,22 +84,42 @@ pub struct ProtocolConfig {
     pub topology: Topology,
     /// Dropout model applied per step.
     pub dropout: dropout::DropoutModel,
-    /// Master seed (graph, keys, shares, dropout all derive from it).
+    /// Payload codec: which coordinates of the dense update travel (and
+    /// get masked) this round. [`Codec::Dense`] is the pre-codec protocol.
+    pub codec: Codec,
+    /// Master seed (graph, keys, shares, dropout — and the RandK index
+    /// plan — all derive from it).
     pub seed: u64,
 }
 
 impl ProtocolConfig {
-    /// Convenience constructor with no dropout.
-    pub fn new(n: usize, t: usize, dim: usize, topology: Topology, seed: u64) -> Self {
-        ProtocolConfig {
-            n,
-            t,
-            mask_bits: 32,
-            dim,
-            topology,
-            dropout: dropout::DropoutModel::None,
-            seed,
-        }
+    /// Start a validated configuration:
+    /// `ProtocolConfig::builder().clients(n).threshold(t).model_dim(d)
+    /// .topology(..).codec(..).seed(..).build()?`.
+    pub fn builder() -> ProtocolConfigBuilder {
+        ProtocolConfigBuilder::default()
+    }
+
+    /// Unit-test shorthand for the common (n, t, dim, topology, seed)
+    /// shape — one definition instead of a builder chain per test module.
+    /// Panics on invalid parameters; production code goes through
+    /// [`ProtocolConfig::builder`].
+    #[cfg(test)]
+    pub(crate) fn for_test(
+        n: usize,
+        t: usize,
+        dim: usize,
+        topology: Topology,
+        seed: u64,
+    ) -> ProtocolConfig {
+        ProtocolConfig::builder()
+            .clients(n)
+            .threshold(t)
+            .model_dim(dim)
+            .topology(topology)
+            .seed(seed)
+            .build()
+            .expect("test config must be valid")
     }
 
     /// Materialize the assignment graph from an explicit RNG — the single
@@ -111,6 +139,141 @@ impl ProtocolConfig {
     }
 }
 
+/// Typed builder for [`ProtocolConfig`]: `clients`, `threshold` and
+/// `model_dim` are required; topology defaults to [`Topology::Complete`],
+/// the codec to [`Codec::Dense`], `mask_bits` to 32, dropout to none and
+/// the seed to 0. [`ProtocolConfigBuilder::build`] validates the whole
+/// combination and is the only way errors surface — a successfully built
+/// config never fails a round on a *static* parameter.
+#[derive(Debug, Clone, Default)]
+pub struct ProtocolConfigBuilder {
+    n: Option<usize>,
+    t: Option<usize>,
+    dim: Option<usize>,
+    mask_bits: Option<u32>,
+    topology: Option<Topology>,
+    dropout: Option<dropout::DropoutModel>,
+    codec: Option<Codec>,
+    seed: u64,
+}
+
+impl ProtocolConfigBuilder {
+    /// Population size n (required).
+    pub fn clients(mut self, n: usize) -> Self {
+        self.n = Some(n);
+        self
+    }
+
+    /// Secret-sharing threshold t (required; 1 ≤ t ≤ n).
+    pub fn threshold(mut self, t: usize) -> Self {
+        self.t = Some(t);
+        self
+    }
+
+    /// Model dimension m (required; 0 is allowed with [`Codec::Dense`]).
+    pub fn model_dim(mut self, dim: usize) -> Self {
+        self.dim = Some(dim);
+        self
+    }
+
+    /// Aggregation-domain width b ∈ 1..=64 (default 32).
+    pub fn mask_bits(mut self, bits: u32) -> Self {
+        self.mask_bits = Some(bits);
+        self
+    }
+
+    /// Assignment-graph family (default [`Topology::Complete`]).
+    pub fn topology(mut self, topology: Topology) -> Self {
+        self.topology = Some(topology);
+        self
+    }
+
+    /// Dropout model (default [`dropout::DropoutModel::None`]).
+    pub fn dropout(mut self, dropout: dropout::DropoutModel) -> Self {
+        self.dropout = Some(dropout);
+        self
+    }
+
+    /// Payload codec (default [`Codec::Dense`]).
+    pub fn codec(mut self, codec: Codec) -> Self {
+        self.codec = Some(codec);
+        self
+    }
+
+    /// Master seed (default 0).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Validate and produce the config.
+    pub fn build(self) -> Result<ProtocolConfig> {
+        let Some(n) = self.n else {
+            bail!("ProtocolConfig: clients(n) is required");
+        };
+        let Some(t) = self.t else {
+            bail!("ProtocolConfig: threshold(t) is required");
+        };
+        let Some(dim) = self.dim else {
+            bail!("ProtocolConfig: model_dim(d) is required");
+        };
+        if n == 0 {
+            bail!("ProtocolConfig: n must be ≥ 1");
+        }
+        if t == 0 || t > n {
+            bail!("ProtocolConfig: threshold t={t} must satisfy 1 ≤ t ≤ n={n}");
+        }
+        let mask_bits = self.mask_bits.unwrap_or(32);
+        if !(1..=64).contains(&mask_bits) {
+            bail!("ProtocolConfig: mask_bits={mask_bits} must be in 1..=64");
+        }
+        let topology = self.topology.unwrap_or(Topology::Complete);
+        match &topology {
+            Topology::ErdosRenyi { p } => {
+                if !p.is_finite() || !(0.0..=1.0).contains(p) {
+                    bail!("ProtocolConfig: Erdős–Rényi p={p} must be in [0, 1]");
+                }
+            }
+            Topology::Harary { k } => {
+                if *k >= n {
+                    bail!("ProtocolConfig: Harary degree k={k} must be < n={n}");
+                }
+            }
+            Topology::Complete => {}
+            Topology::Custom(g) => {
+                if g.n() != n {
+                    bail!(
+                        "ProtocolConfig: custom topology has {} nodes, expected n={n}",
+                        g.n()
+                    );
+                }
+            }
+        }
+        let codec = self.codec.unwrap_or(Codec::Dense);
+        match codec {
+            Codec::Dense => {}
+            Codec::TopK { k } | Codec::RandK { k } => {
+                if k == 0 || k > dim {
+                    bail!(
+                        "ProtocolConfig: {} k={k} must satisfy 1 ≤ k ≤ dim={dim}",
+                        codec.name()
+                    );
+                }
+            }
+        }
+        Ok(ProtocolConfig {
+            n,
+            t,
+            mask_bits,
+            dim,
+            topology,
+            dropout: self.dropout.unwrap_or(dropout::DropoutModel::None),
+            codec,
+            seed: self.seed,
+        })
+    }
+}
+
 /// The surviving client sets after each step (paper notation V1 ⊇ … ⊇ V4).
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct SurvivorSets {
@@ -123,5 +286,64 @@ pub struct SurvivorSets {
 impl SurvivorSets {
     pub fn contains(set: &[ClientId], id: ClientId) -> bool {
         set.binary_search(&id).is_ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_defaults_and_required_fields() {
+        let cfg = ProtocolConfig::builder()
+            .clients(8)
+            .threshold(4)
+            .model_dim(16)
+            .seed(7)
+            .build()
+            .unwrap();
+        assert_eq!(cfg.n, 8);
+        assert_eq!(cfg.t, 4);
+        assert_eq!(cfg.dim, 16);
+        assert_eq!(cfg.mask_bits, 32);
+        assert_eq!(cfg.seed, 7);
+        assert!(matches!(cfg.topology, Topology::Complete));
+        assert!(matches!(cfg.dropout, dropout::DropoutModel::None));
+        assert_eq!(cfg.codec, Codec::Dense);
+
+        assert!(ProtocolConfig::builder().threshold(2).model_dim(4).build().is_err());
+        assert!(ProtocolConfig::builder().clients(4).model_dim(4).build().is_err());
+        assert!(ProtocolConfig::builder().clients(4).threshold(2).build().is_err());
+    }
+
+    #[test]
+    fn builder_rejects_static_nonsense() {
+        let base = || ProtocolConfig::builder().clients(6).threshold(3).model_dim(10);
+        assert!(base().build().is_ok());
+        // threshold out of range
+        assert!(base().threshold(0).build().is_err());
+        assert!(base().threshold(7).build().is_err());
+        // mask width out of range
+        assert!(base().mask_bits(0).build().is_err());
+        assert!(base().mask_bits(65).build().is_err());
+        assert!(base().mask_bits(64).build().is_ok());
+        // topology parameters
+        assert!(base().topology(Topology::ErdosRenyi { p: 1.5 }).build().is_err());
+        assert!(base().topology(Topology::ErdosRenyi { p: f64::NAN }).build().is_err());
+        assert!(base().topology(Topology::Harary { k: 6 }).build().is_err());
+        assert!(base().topology(Topology::Harary { k: 4 }).build().is_ok());
+        assert!(base()
+            .topology(Topology::Custom(crate::graph::Graph::complete(5)))
+            .build()
+            .is_err());
+        // codec k bounds
+        assert!(base().codec(Codec::TopK { k: 0 }).build().is_err());
+        assert!(base().codec(Codec::TopK { k: 11 }).build().is_err());
+        assert!(base().codec(Codec::TopK { k: 10 }).build().is_ok());
+        assert!(base().codec(Codec::RandK { k: 1 }).build().is_ok());
+        // dim 0 is fine for Dense only
+        let degenerate = ProtocolConfig::builder().clients(4).threshold(2).model_dim(0);
+        assert!(degenerate.clone().build().is_ok());
+        assert!(degenerate.codec(Codec::RandK { k: 1 }).build().is_err());
     }
 }

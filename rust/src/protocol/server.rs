@@ -9,12 +9,14 @@
 
 use super::messages::*;
 use super::{ClientId, SurvivorSets};
+use crate::codec::IndexPlan;
 use crate::crypto::dh::{self, PublicKey};
 use crate::crypto::prg::{apply_mask_jobs_range, MaskJob};
 use crate::graph::Graph;
 use crate::shamir::{self, Share};
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 /// Outcome of one aggregation round at the server.
 #[derive(Debug, Clone)]
@@ -32,13 +34,16 @@ pub struct Server {
     n: usize,
     t: usize,
     mask_bits: u32,
-    dim: usize,
+    /// The round's shared payload plan: masked inputs arrive packed to
+    /// `plan.len()` elements and the aggregate scatters back to
+    /// `plan.dim()` at the end.
+    plan: Arc<IndexPlan>,
     graph: Graph,
     /// advertised keys: id → (c_pk, s_pk)
     keys: BTreeMap<ClientId, (PublicKey, PublicKey)>,
     /// step-1 ciphertexts routed by recipient
     outbox: BTreeMap<ClientId, Vec<EncryptedShare>>,
-    /// masked inputs by sender
+    /// masked (packed) inputs by sender
     masked: BTreeMap<ClientId, Vec<u64>>,
     /// step-3 shares: (owner, kind) → shares received
     shares: BTreeMap<(ClientId, ShareKind), Vec<Share>>,
@@ -46,13 +51,13 @@ pub struct Server {
 }
 
 impl Server {
-    pub fn new(n: usize, t: usize, mask_bits: u32, dim: usize, graph: Graph) -> Server {
+    pub fn new(n: usize, t: usize, mask_bits: u32, plan: Arc<IndexPlan>, graph: Graph) -> Server {
         assert_eq!(graph.n(), n);
         Server {
             n,
             t,
             mask_bits,
-            dim,
+            plan,
             graph,
             keys: BTreeMap::new(),
             outbox: BTreeMap::new(),
@@ -160,15 +165,23 @@ impl Server {
             if !SurvivorSets::contains(&self.sets.v2, mi.id) {
                 bail!("masked input from client {} not in V2", mi.id);
             }
-            if mi.masked.len() != self.dim || mi.bits != self.mask_bits {
+            if mi.update.values.len() != self.plan.len() || mi.bits != self.mask_bits {
                 bail!(
                     "masked input shape mismatch from {}: len={} bits={}",
                     mi.id,
-                    mi.masked.len(),
+                    mi.update.values.len(),
                     mi.bits
                 );
             }
-            self.masked.insert(mi.id, mi.masked);
+            // A client masking a different coordinate set than the round's
+            // plan would silently corrupt the aggregate — misaligned windows
+            // never cancel. Pointer equality is the hot path (all drivers
+            // share one Arc); the structural compare catches byzantine or
+            // handcrafted inputs.
+            if !Arc::ptr_eq(&mi.update.plan, &self.plan) && *mi.update.plan != *self.plan {
+                bail!("masked input from client {} encoded under a different index plan", mi.id);
+            }
+            self.masked.insert(mi.id, mi.update.values);
             self.sets.v3.push(mi.id);
         }
         self.sets.v3.sort_unstable();
@@ -319,14 +332,17 @@ impl Server {
             }
         }
 
-        // ---- Execute: one parallel pass over disjoint accumulator slices.
-        // Each worker sums the masked inputs over its slice, then applies
-        // every job's keystream range at the slice's offset.
+        // ---- Execute: one parallel pass over disjoint accumulator slices
+        // of the *packed* domain (= the dense vector under the identity
+        // plan). Each worker sums the masked inputs over its slice, then
+        // applies every job's keystream range at the slice's offset — the
+        // shared plan guarantees position p means the same dense coordinate
+        // in every input and every mask stream.
         let mask = crate::util::mod_mask(self.mask_bits);
         let bits = self.mask_bits;
         let masked: Vec<&Vec<u64>> = self.masked.values().collect();
-        let mut acc = vec![0u64; self.dim];
-        let workers = crate::par::threads_for_len(self.dim);
+        let mut acc = vec![0u64; self.plan.len()];
+        let workers = crate::par::threads_for_len(acc.len());
         crate::par::for_each_slice(&mut acc, workers, |offset, slice| {
             let n = slice.len();
             for v in &masked {
@@ -337,7 +353,9 @@ impl Server {
             apply_mask_jobs_range(slice, &jobs, bits, offset);
         });
 
-        Ok(RoundOutput { sum: Some(acc), reliable: true, sets })
+        // Lift the packed aggregate back to the dense domain (identity plan:
+        // a straight copy) so callers always see a dim-length sum.
+        Ok(RoundOutput { sum: Some(self.plan.scatter(&acc)), reliable: true, sets })
     }
 }
 
@@ -397,13 +415,13 @@ mod tests {
     #[test]
     fn server_rejects_protocol_violations() {
         let g = Graph::complete(3);
-        let mut s = Server::new(3, 2, 32, 4, g);
+        let mut s = Server::new(3, 2, 32, IndexPlan::identity(4), g);
         // unknown client id
         assert!(s
             .step0_route_keys(vec![AdvertiseKeys { id: 9, c_pk: [0; 32], s_pk: [0; 32] }])
             .is_err());
         // below threshold
-        let mut s2 = Server::new(3, 3, 32, 4, Graph::complete(3));
+        let mut s2 = Server::new(3, 3, 32, IndexPlan::identity(4), Graph::complete(3));
         assert!(s2
             .step0_route_keys(vec![AdvertiseKeys { id: 0, c_pk: [0; 32], s_pk: [0; 32] }])
             .is_err());
@@ -412,7 +430,8 @@ mod tests {
     #[test]
     fn unmasking_attack_guard_trips() {
         let g = Graph::complete(3);
-        let mut s = Server::new(3, 1, 32, 1, g);
+        let plan = IndexPlan::identity(1);
+        let mut s = Server::new(3, 1, 32, plan.clone(), g);
         let advs = (0..3)
             .map(|id| AdvertiseKeys { id, c_pk: [id as u8; 32], s_pk: [id as u8; 32] })
             .collect();
@@ -425,7 +444,14 @@ mod tests {
         let _ = s
             .step2_collect_masked(
                 (0..3)
-                    .map(|id| MaskedInput { id, masked: vec![0], bits: 32 })
+                    .map(|id| MaskedInput {
+                        id,
+                        update: crate::codec::EncodedUpdate {
+                            values: vec![0],
+                            plan: plan.clone(),
+                        },
+                        bits: 32,
+                    })
                     .collect(),
             )
             .unwrap();
@@ -439,5 +465,29 @@ mod tests {
             ],
         }];
         assert!(s.finalize(bad).is_err());
+    }
+
+    #[test]
+    fn server_rejects_misaligned_index_plan() {
+        // a client masking a different coordinate set than the round's plan
+        // must be refused: misaligned windows would never cancel
+        let plan = IndexPlan::sparse(vec![0, 2], 4);
+        let mut s = Server::new(3, 1, 32, plan, Graph::complete(3));
+        let advs = (0..3)
+            .map(|id| AdvertiseKeys { id, c_pk: [1; 32], s_pk: [2; 32] })
+            .collect();
+        s.step0_route_keys(advs).unwrap();
+        s.step1_route_shares((0..3).map(|id| ShareUpload { from: id, shares: vec![] }).collect())
+            .unwrap();
+        // same payload length, different support
+        let rogue = MaskedInput {
+            id: 0,
+            update: crate::codec::EncodedUpdate {
+                values: vec![0, 0],
+                plan: IndexPlan::sparse(vec![1, 3], 4),
+            },
+            bits: 32,
+        };
+        assert!(s.step2_collect_masked(vec![rogue]).is_err());
     }
 }

@@ -1,6 +1,6 @@
 //! Multi-round campaign runner: drive a compiled [`Scenario`] through any
-//! [`Executor`] (sync engine, thread-per-client coordinator, or worker-pool
-//! event loop) and aggregate what happened.
+//! [`Executor`] (sync engine or worker-pool event loop) and aggregate what
+//! happened.
 //!
 //! The engine driver additionally scores each round's transcript with the
 //! Definition-2 eavesdropper attack and checks Theorem 1's predicate
@@ -8,7 +8,7 @@
 //! experiment (§4.3), a privacy experiment (§4.4) and a regression suite.
 
 use super::scenario::{RoundPlan, Scenario};
-use crate::coordinator::{run_round_event_loop, run_round_threaded, CoordRoundResult};
+use crate::coordinator::{run_round_event_loop, CoordRoundResult};
 use crate::net::NetStats;
 use crate::protocol::adversary::{attack, Breach};
 use crate::protocol::engine::run_round;
@@ -16,19 +16,22 @@ use crate::protocol::{ClientId, SurvivorSets};
 use anyhow::Result;
 
 /// Which execution shape drives the campaign's rounds.
+///
+/// The legacy thread-per-client `Threaded` executor was deleted with its
+/// coordinator once the event loop's equivalence suite had green CI cycles
+/// (ROADMAP follow-up): the event loop is now pinned against the engine
+/// directly.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Executor {
     /// The deterministic synchronous engine (`protocol::engine`).
     Engine,
-    /// The thread-per-client coordinator (legacy deployment shape).
-    Threaded,
     /// The worker-pool event-loop coordinator (the scaling shape).
     EventLoop,
 }
 
 impl Executor {
     /// Every executor, in reference-first order.
-    pub const ALL: [Executor; 3] = [Executor::Engine, Executor::Threaded, Executor::EventLoop];
+    pub const ALL: [Executor; 2] = [Executor::Engine, Executor::EventLoop];
 
     /// Every executor except the [`Executor::Engine`] reference — the list
     /// the differential harness and equivalence suites iterate, derived
@@ -41,7 +44,6 @@ impl Executor {
     pub fn name(&self) -> &'static str {
         match self {
             Executor::Engine => "engine",
-            Executor::Threaded => "threaded",
             Executor::EventLoop => "event-loop",
         }
     }
@@ -147,8 +149,6 @@ pub fn run_plan(
     executor: Executor,
     colluders: &[ClientId],
 ) -> RoundRecord {
-    // The coordinator shapes report the same essentials, so one record
-    // constructor serves both.
     let coord_record = |r: Result<CoordRoundResult>| match r {
         Ok(r) => RoundRecord {
             round: plan.round,
@@ -181,7 +181,6 @@ pub fn run_plan(
             }
             Err(_) => RoundRecord::aborted(plan.round, plan.cfg.n),
         },
-        Executor::Threaded => coord_record(run_round_threaded(&plan.cfg, models)),
         Executor::EventLoop => coord_record(run_round_event_loop(&plan.cfg, models)),
     }
 }
@@ -205,10 +204,9 @@ pub fn run_campaign(sc: &Scenario, executor: Executor) -> Result<CampaignReport>
         // sets in memory at once.
         Executor::Engine if crate::par::threads_for_len(sc.dim) == 1 => crate::par::threads(),
         Executor::Engine => 1,
-        // both coordinator shapes parallelize internally (the threaded one
-        // across client threads, the event loop across pool workers);
-        // running their rounds concurrently on top would multiply that
-        Executor::Threaded | Executor::EventLoop => 1,
+        // the event loop parallelizes internally across pool workers;
+        // running its rounds concurrently on top would multiply that
+        Executor::EventLoop => 1,
     };
     let records = crate::par::map_indexed(plans.len(), workers, |i| {
         let plan = &plans[i];
@@ -226,7 +224,7 @@ pub fn run_campaign(sc: &Scenario, executor: Executor) -> Result<CampaignReport>
 mod tests {
     use super::*;
     use super::super::churn::ChurnModel;
-    use super::super::scenario::{AdversarySpec, ThresholdRule, TopologySchedule};
+    use super::super::scenario::{AdversarySpec, CodecSpec, ThresholdRule, TopologySchedule};
     use crate::protocol::Topology;
 
     fn scenario(churn: ChurnModel, rounds: usize) -> Scenario {
@@ -240,6 +238,7 @@ mod tests {
             churn,
             adversary: AdversarySpec::Eavesdropper,
             threshold: ThresholdRule::Fixed(4),
+            codec: CodecSpec::Dense,
             clip: 4.0,
             seed: 0xCA3F,
         }
@@ -295,12 +294,35 @@ mod tests {
 
     #[test]
     fn executor_axis_is_complete_and_named() {
-        assert_eq!(Executor::ALL.len(), 3);
+        assert_eq!(Executor::ALL.len(), 2);
         let names: Vec<&str> = Executor::ALL.iter().map(|e| e.name()).collect();
-        assert_eq!(names, vec!["engine", "threaded", "event-loop"]);
+        assert_eq!(names, vec!["engine", "event-loop"]);
         let non_ref: Vec<Executor> = Executor::non_reference().collect();
         assert_eq!(non_ref.len(), Executor::ALL.len() - 1);
         assert!(!non_ref.contains(&Executor::Engine));
+    }
+
+    #[test]
+    fn sparse_codec_campaign_reports_payload_savings() {
+        let dense = scenario(ChurnModel::None, 2);
+        let mut sparse = scenario(ChurnModel::None, 2);
+        sparse.codec = CodecSpec::RandK { frac: 0.5 };
+        let dense_rep = run_campaign(&dense, Executor::Engine).unwrap();
+        let sparse_rep = run_campaign(&sparse, Executor::Engine).unwrap();
+        assert_eq!(sparse_rep.reliable_rounds(), 2);
+        // dim 6 at frac 0.5 → k = 3: payload bytes halve exactly
+        assert_eq!(
+            sparse_rep.total_stats.masked_payload_bytes * 2,
+            dense_rep.total_stats.masked_payload_bytes
+        );
+        // every executor agrees on the sparse campaign too
+        for alt in Executor::non_reference() {
+            let c = run_campaign(&sparse, alt).unwrap();
+            for (re, rc) in sparse_rep.records.iter().zip(&c.records) {
+                assert_eq!(re.sum, rc.sum, "{} round {}", alt.name(), re.round);
+                assert_eq!(re.stats, rc.stats, "{} round {}", alt.name(), re.round);
+            }
+        }
     }
 
     #[test]

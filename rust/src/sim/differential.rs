@@ -1,19 +1,19 @@
 //! Differential harness: every scenario must produce bit-identical results
-//! through every executor — the sync engine (reference), the
-//! thread-per-client coordinator, and the worker-pool event loop.
+//! through every executor — the sync engine (reference) and the
+//! worker-pool event loop.
 //!
 //! The coordinator module's contract ("bit-identical to the sync engine for
 //! the same seed" under rng-free dropout) was previously pinned by
 //! hand-written cases; this harness turns it into a property checked over
-//! randomized scenario campaigns — mixed topology schedules, churn models
-//! and adversary sets — with a shrinker that minimizes any failing scenario
-//! to a small, quotable reproduction seed. Each non-reference executor is
-//! diffed against the engine independently, so a mismatch names the shape
-//! that diverged.
+//! randomized scenario campaigns — mixed topology schedules, churn models,
+//! adversary sets and payload codecs — with a shrinker that minimizes any
+//! failing scenario to a small, quotable reproduction seed. Each
+//! non-reference executor is diffed against the engine independently, so a
+//! mismatch names the shape that diverged.
 
 use super::campaign::{run_plan, Executor, RoundRecord};
 use super::churn::ChurnModel;
-use super::scenario::{random_scenario, AdversarySpec, Scenario, TopologySchedule};
+use super::scenario::{random_scenario, AdversarySpec, CodecSpec, Scenario, TopologySchedule};
 use crate::protocol::Topology;
 
 /// A divergence between the engine and one executor on one round.
@@ -147,6 +147,10 @@ fn candidates(sc: &Scenario, failing_round: usize) -> Vec<Scenario> {
     if sc.dim > 1 {
         push(Scenario { dim: 1, ..sc.clone() });
     }
+    // fall back to the dense reference codec
+    if !matches!(sc.codec, CodecSpec::Dense) {
+        push(Scenario { codec: CodecSpec::Dense, ..sc.clone() });
+    }
     // remove stochastic structure
     if !matches!(sc.churn, ChurnModel::None) {
         push(Scenario { churn: ChurnModel::None, ..sc.clone() });
@@ -228,8 +232,20 @@ mod tests {
             churn: ChurnModel::Iid { q: 0.05 },
             adversary: AdversarySpec::Eavesdropper,
             threshold: ThresholdRule::Fixed(3),
+            codec: CodecSpec::Dense,
             clip: 4.0,
             seed,
+        }
+    }
+
+    #[test]
+    fn healthy_sparse_scenarios_have_no_mismatch() {
+        for (seed, codec) in [
+            (11u64, CodecSpec::TopK { frac: 0.5 }),
+            (12, CodecSpec::RandK { frac: 0.5 }),
+        ] {
+            let sc = Scenario { codec, ..small(seed, 2) };
+            assert!(diff_scenario(&sc).is_none(), "seed={seed} codec={}", codec.name());
         }
     }
 

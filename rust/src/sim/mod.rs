@@ -6,18 +6,18 @@
 //! collusion. This module makes those regimes first-class:
 //!
 //! * [`scenario`] — a [`Scenario`] spec (population, topology schedule,
-//!   churn, adversary, quantizer config, rounds) compiled into rng-free
-//!   [`scenario::RoundPlan`]s for exact replay;
+//!   churn, adversary, payload codec, quantizer config, rounds) compiled
+//!   into rng-free [`scenario::RoundPlan`]s for exact replay;
 //! * [`churn`] — multi-round churn processes (i.i.d., bursty Markov,
 //!   correlated-regional outages, targeted-adaptive hub attacks, scripted)
 //!   compiled to explicit per-step schedules;
 //! * [`campaign`] — runs a scenario through any [`campaign::Executor`]
-//!   (sync engine, thread-per-client coordinator, worker-pool event loop),
-//!   scoring reliability, Theorem-1 agreement and eavesdropper/collusion
-//!   privacy;
+//!   (sync engine, worker-pool event loop), scoring reliability, Theorem-1
+//!   agreement and eavesdropper/collusion privacy;
 //! * [`differential`] — asserts every executor produces bit-identical sums,
-//!   survivor sets and [`crate::net::NetStats`] on randomized scenarios,
-//!   with a shrinker that minimizes failures to a reportable seed.
+//!   survivor sets and [`crate::net::NetStats`] on randomized scenarios
+//!   (the payload codec is one of the randomized axes), with a shrinker
+//!   that minimizes failures to a reportable seed.
 //!
 //! Every future scale or performance PR validates against this substrate:
 //! change an executor, run the differential; add a churn regime, add a
@@ -34,5 +34,6 @@ pub use differential::{
     diff_scenario, run_differential, shrink, DifferentialReport, Failure, Mismatch,
 };
 pub use scenario::{
-    random_scenario, AdversarySpec, RoundPlan, Scenario, ThresholdRule, TopologySchedule,
+    random_scenario, AdversarySpec, CodecSpec, RoundPlan, Scenario, ThresholdRule,
+    TopologySchedule,
 };

@@ -11,6 +11,7 @@
 
 use super::churn::ChurnModel;
 use crate::analysis::bounds::t_rule;
+use crate::codec::Codec;
 use crate::graph::Graph;
 use crate::protocol::dropout::DropoutModel;
 use crate::protocol::{ClientId, ProtocolConfig, Topology};
@@ -45,6 +46,43 @@ pub enum ThresholdRule {
     /// `t_rule` for Erdős–Rényi, ⌊n/2⌋+1 for the complete graph, half the
     /// degree plus one for Harary.
     Auto,
+}
+
+/// Dimension-relative payload codec choice — the scenario axis form of
+/// [`Codec`]: sparsity is a *fraction* of the model dimension so one spec
+/// sweeps across populations and dims, and [`CodecSpec::resolve`] pins the
+/// concrete k at compile time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum CodecSpec {
+    /// Full dense payload (the pre-codec protocol).
+    Dense,
+    /// Global top-k at `k = round(frac · dim)`, clamped to 1..=dim.
+    TopK { frac: f64 },
+    /// Random-k at `k = round(frac · dim)`, clamped to 1..=dim.
+    RandK { frac: f64 },
+}
+
+impl CodecSpec {
+    fn k_of(frac: f64, dim: usize) -> usize {
+        ((dim as f64 * frac).round() as usize).clamp(1, dim.max(1))
+    }
+
+    /// The concrete codec for a `dim`-dimensional round.
+    pub fn resolve(&self, dim: usize) -> Codec {
+        match self {
+            CodecSpec::Dense => Codec::Dense,
+            CodecSpec::TopK { frac } => Codec::TopK { k: Self::k_of(*frac, dim) },
+            CodecSpec::RandK { frac } => Codec::RandK { k: Self::k_of(*frac, dim) },
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CodecSpec::Dense => "dense",
+            CodecSpec::TopK { .. } => "topk",
+            CodecSpec::RandK { .. } => "randk",
+        }
+    }
 }
 
 /// Per-round assignment-graph schedule.
@@ -92,6 +130,10 @@ pub struct Scenario {
     pub churn: ChurnModel,
     pub adversary: AdversarySpec,
     pub threshold: ThresholdRule,
+    /// Payload codec applied to every round's client updates — swept by
+    /// the campaign runner and diffed by the differential harness like any
+    /// other scenario axis.
+    pub codec: CodecSpec,
     /// Quantizer clip used when the campaign drives f32 updates through
     /// `fl::rounds::run_fl_scenario` (protocol-level campaigns over u64
     /// inputs ignore it).
@@ -147,15 +189,16 @@ impl Scenario {
         for round in 0..self.rounds {
             let topo = self.topology.topology_for(round);
             let t = self.resolve_t(&topo);
-            let cfg = ProtocolConfig {
-                n: self.n,
-                t,
-                mask_bits: self.mask_bits,
-                dim: self.dim,
-                topology: topo,
-                dropout: DropoutModel::None,
-                seed: self.round_seed(round),
-            };
+            let cfg = ProtocolConfig::builder()
+                .clients(self.n)
+                .threshold(t)
+                .model_dim(self.dim)
+                .mask_bits(self.mask_bits)
+                .topology(topo)
+                .codec(self.codec.resolve(self.dim))
+                .seed(self.round_seed(round))
+                .build()
+                .expect("scenario compiles to a valid protocol config");
             graphs.push(cfg.build_graph());
             cfgs.push(cfg);
         }
@@ -221,6 +264,14 @@ pub fn random_scenario(seed: u64) -> Scenario {
     } else {
         ThresholdRule::Auto
     };
+    // Payload codec axis: dense keeps its weight (the reference path), the
+    // rest splits between the two sparse families at fractions well inside
+    // (0, 1) so every k ∈ 1..dim is reachable across seeds.
+    let codec = match rng.gen_range(5) {
+        0 | 1 => CodecSpec::Dense,
+        2 | 3 => CodecSpec::RandK { frac: 0.15 + 0.5 * rng.next_f64() },
+        _ => CodecSpec::TopK { frac: 0.15 + 0.5 * rng.next_f64() },
+    };
     Scenario {
         name: format!("random-{seed:#x}"),
         n,
@@ -231,6 +282,7 @@ pub fn random_scenario(seed: u64) -> Scenario {
         churn,
         adversary,
         threshold,
+        codec,
         clip: 4.0,
         seed,
     }
@@ -251,6 +303,7 @@ mod tests {
             churn: ChurnModel::Iid { q: 0.1 },
             adversary: AdversarySpec::Eavesdropper,
             threshold: ThresholdRule::Fixed(3),
+            codec: CodecSpec::Dense,
             clip: 4.0,
             seed: 42,
         }
@@ -313,6 +366,25 @@ mod tests {
     }
 
     #[test]
+    fn codec_spec_resolves_fraction_to_bounded_k() {
+        assert_eq!(CodecSpec::Dense.resolve(100), Codec::Dense);
+        assert_eq!(CodecSpec::TopK { frac: 0.1 }.resolve(100), Codec::TopK { k: 10 });
+        assert_eq!(CodecSpec::RandK { frac: 0.5 }.resolve(7), Codec::RandK { k: 4 });
+        // clamped at both ends
+        assert_eq!(CodecSpec::RandK { frac: 0.0 }.resolve(10), Codec::RandK { k: 1 });
+        assert_eq!(CodecSpec::TopK { frac: 2.0 }.resolve(10), Codec::TopK { k: 10 });
+        assert_eq!(CodecSpec::TopK { frac: 0.3 }.resolve(1), Codec::TopK { k: 1 });
+    }
+
+    #[test]
+    fn sparse_scenario_compiles_with_codec_in_every_plan() {
+        let sc = Scenario { codec: CodecSpec::RandK { frac: 0.5 }, ..base() };
+        for plan in sc.compile() {
+            assert_eq!(plan.cfg.codec, Codec::RandK { k: 2 }, "round {}", plan.round);
+        }
+    }
+
+    #[test]
     fn random_scenarios_are_deterministic_and_varied() {
         for seed in 0..50u64 {
             let a = random_scenario(seed);
@@ -339,5 +411,9 @@ mod tests {
             })
             .collect();
         assert!(kinds.len() >= 4, "churn kinds seen: {kinds:?}");
+        // and every codec family appears
+        let codecs: std::collections::BTreeSet<&str> =
+            (0..50u64).map(|s| random_scenario(s).codec.name()).collect();
+        assert_eq!(codecs.len(), 3, "codec kinds seen: {codecs:?}");
     }
 }

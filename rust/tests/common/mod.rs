@@ -1,0 +1,17 @@
+//! Shared helpers for the integration suites.
+
+use ccesa::protocol::{ProtocolConfig, Topology};
+
+/// The common (n, t, dim, topology, seed) configuration shape — one
+/// definition instead of a builder chain per test file. Panics on invalid
+/// parameters; production code goes through `ProtocolConfig::builder`.
+pub fn base(n: usize, t: usize, dim: usize, topology: Topology, seed: u64) -> ProtocolConfig {
+    ProtocolConfig::builder()
+        .clients(n)
+        .threshold(t)
+        .model_dim(dim)
+        .topology(topology)
+        .seed(seed)
+        .build()
+        .expect("test config must be valid")
+}

@@ -1,19 +1,22 @@
-//! Determinism regression suite: `engine::run_round`, the thread-per-client
-//! `coordinator` and the worker-pool event loop must produce bit-identical
-//! `RoundResult` essentials (sum, survivor sets, NetStats) for the same
-//! seed under rng-free dropout models, exactly as the coordinator module
-//! docs promise — and each execution shape must be bit-identical to itself
+//! Determinism regression suite: `engine::run_round` and the worker-pool
+//! event loop must produce bit-identical `RoundResult` essentials (sum,
+//! survivor sets, NetStats) for the same seed under rng-free dropout
+//! models and every payload codec, exactly as the coordinator module docs
+//! promise — and each execution shape must be bit-identical to itself
 //! across reruns. The event loop additionally proves the scaling claim:
-//! rounds at n = 10⁴ (tier-1) and n = 10⁵ (CI scale job, `--ignored`)
-//! complete with peak live pool workers ≤ `par::threads()`.
+//! rounds at n = 10⁴ (tier-1) and n = 10⁵ (CI scale job, `--ignored`,
+//! dense and RandK) complete with peak live pool workers ≤
+//! `par::threads()`.
 
-use ccesa::coordinator::{
-    run_round_event_loop, run_round_event_loop_with, run_round_threaded, CoordRoundResult,
-};
+use ccesa::codec::Codec;
+use ccesa::coordinator::{run_round_event_loop, run_round_event_loop_with, CoordRoundResult};
 use ccesa::protocol::dropout::DropoutModel;
 use ccesa::protocol::engine::run_round;
 use ccesa::protocol::{ProtocolConfig, Topology};
 use ccesa::util::rng::Rng;
+
+mod common;
+use common::base;
 
 fn models(n: usize, dim: usize, seed: u64) -> Vec<Vec<u64>> {
     let mut rng = Rng::new(seed);
@@ -30,7 +33,6 @@ fn assert_equivalent(cfg: &ProtocolConfig, m: &[Vec<u64>], label: &str) {
         assert_eq!(r.sum, sync.sum, "{label}/{name}: sum");
         assert_eq!(r.stats, sync.stats, "{label}/{name}: NetStats");
     };
-    check("threaded", run_round_threaded(cfg, m).unwrap());
     check("event-loop", run_round_event_loop(cfg, m).unwrap());
 }
 
@@ -44,7 +46,7 @@ fn bit_identical_no_dropout_across_topologies() {
         ("er", Topology::ErdosRenyi { p: 0.75 }),
         ("harary", Topology::Harary { k: 6 }),
     ] {
-        let cfg = ProtocolConfig::new(n, 5, dim, topology, 3001);
+        let cfg = base(n, 5, dim, topology, 3001);
         assert_equivalent(&cfg, &m, label);
     }
 }
@@ -60,7 +62,7 @@ fn bit_identical_under_targeted_dropout() {
         dropout: DropoutModel::Targeted {
             per_step: [vec![0], vec![4], vec![7, 8], vec![11]],
         },
-        ..ProtocolConfig::new(n, 4, dim, Topology::ErdosRenyi { p: 0.85 }, 3002)
+        ..base(n, 4, dim, Topology::ErdosRenyi { p: 0.85 }, 3002)
     };
     assert_equivalent(&cfg, &m, "targeted");
 }
@@ -76,9 +78,33 @@ fn bit_identical_under_materialized_iid() {
     let per_step = iid.materialize(n, &mut Rng::new(0xAB));
     let cfg = ProtocolConfig {
         dropout: DropoutModel::Targeted { per_step },
-        ..ProtocolConfig::new(n, 4, dim, Topology::ErdosRenyi { p: 0.9 }, 3003)
+        ..base(n, 4, dim, Topology::ErdosRenyi { p: 0.9 }, 3003)
     };
     assert_equivalent(&cfg, &m, "materialized-iid");
+}
+
+#[test]
+fn bit_identical_across_codecs_with_dropout() {
+    // the codec axis × dropout: every payload family must agree between
+    // the engine and the event loop, including the s^SK-reconstruction
+    // path masking only k packed positions
+    let n = 12;
+    let dim = 30;
+    let m = models(n, dim, 14);
+    for (label, codec) in [
+        ("dense", Codec::Dense),
+        ("topk", Codec::TopK { k: 6 }),
+        ("randk", Codec::RandK { k: 6 }),
+    ] {
+        let cfg = ProtocolConfig {
+            codec,
+            dropout: DropoutModel::Targeted {
+                per_step: [vec![1], vec![], vec![5, 9], vec![2]],
+            },
+            ..base(n, 4, dim, Topology::ErdosRenyi { p: 0.9 }, 3008)
+        };
+        assert_equivalent(&cfg, &m, label);
+    }
 }
 
 #[test]
@@ -87,7 +113,7 @@ fn engine_rerun_is_bit_identical() {
     let dim = 16;
     let cfg = ProtocolConfig {
         dropout: DropoutModel::Targeted { per_step: [vec![], vec![2], vec![5], vec![]] },
-        ..ProtocolConfig::new(n, 4, dim, Topology::ErdosRenyi { p: 0.8 }, 3004)
+        ..base(n, 4, dim, Topology::ErdosRenyi { p: 0.8 }, 3004)
     };
     let m = models(n, dim, 14);
     let a = run_round(&cfg, &m).unwrap();
@@ -106,22 +132,6 @@ fn engine_rerun_is_bit_identical() {
 }
 
 #[test]
-fn coordinator_rerun_is_bit_identical() {
-    let n = 11;
-    let dim = 12;
-    let cfg = ProtocolConfig {
-        dropout: DropoutModel::Targeted { per_step: [vec![1], vec![], vec![6], vec![9]] },
-        ..ProtocolConfig::new(n, 4, dim, Topology::Complete, 3005)
-    };
-    let m = models(n, dim, 15);
-    let a = run_round_threaded(&cfg, &m).unwrap();
-    let b = run_round_threaded(&cfg, &m).unwrap();
-    assert_eq!(a.sum, b.sum);
-    assert_eq!(a.sets, b.sets);
-    assert_eq!(a.stats, b.stats);
-}
-
-#[test]
 fn event_loop_rerun_is_bit_identical_across_worker_counts() {
     // rerun stability AND worker-count independence: the lane sharding
     // must be invisible in every observable
@@ -129,7 +139,7 @@ fn event_loop_rerun_is_bit_identical_across_worker_counts() {
     let dim = 12;
     let cfg = ProtocolConfig {
         dropout: DropoutModel::Targeted { per_step: [vec![1], vec![], vec![6], vec![9]] },
-        ..ProtocolConfig::new(n, 4, dim, Topology::Complete, 3005)
+        ..base(n, 4, dim, Topology::Complete, 3005)
     };
     let m = models(n, dim, 15);
     let (a, _) = run_round_event_loop_with(&cfg, &m, 1).unwrap();
@@ -141,28 +151,21 @@ fn event_loop_rerun_is_bit_identical_across_worker_counts() {
         assert!(tel.peak_live_workers <= workers, "workers={workers}");
         assert_eq!(tel.sweeps, 4, "workers={workers}");
     }
-    // and the threaded shape agrees with the event loop on the same config
-    let t = run_round_threaded(&cfg, &m).unwrap();
-    assert_eq!(t.sum, a.sum);
-    assert_eq!(t.sets, a.sets);
-    assert_eq!(t.stats, a.stats);
 }
 
 #[test]
 fn both_shapes_abort_identically() {
-    // |V2| < t after mass step-1 dropout: the engine errors; both
-    // coordinator shapes must error too (the threaded one without
-    // deadlocking — regression for the worker-unblocking fix)
+    // |V2| < t after mass step-1 dropout: the engine errors; the event
+    // loop must error too
     let n = 8;
     let cfg = ProtocolConfig {
         dropout: DropoutModel::Targeted {
             per_step: [vec![], (0..6).collect(), vec![], vec![]],
         },
-        ..ProtocolConfig::new(n, 5, 6, Topology::Complete, 3006)
+        ..base(n, 5, 6, Topology::Complete, 3006)
     };
     let m = models(n, 6, 16);
     assert!(run_round(&cfg, &m).is_err(), "engine must abort");
-    assert!(run_round_threaded(&cfg, &m).is_err(), "threaded must abort");
     assert!(run_round_event_loop(&cfg, &m).is_err(), "event loop must abort");
 }
 
@@ -171,7 +174,7 @@ fn sixteen_and_sixty_four_bit_domains_equivalent() {
     let n = 9;
     let dim = 7;
     for bits in [16u32, 64] {
-        let mut cfg = ProtocolConfig::new(n, 4, dim, Topology::Complete, 3007);
+        let mut cfg = base(n, 4, dim, Topology::Complete, 3007);
         cfg.mask_bits = bits;
         let modmask = if bits == 64 { u64::MAX } else { (1u64 << bits) - 1 };
         let mut rng = Rng::new(17);
@@ -200,7 +203,7 @@ fn true_sum_all(m: &[Vec<u64>], dim: usize) -> Vec<u64> {
 fn event_loop_n10k_single_round_smoke() {
     let n = 10_000;
     let dim = 4;
-    let cfg = ProtocolConfig::new(n, 3, dim, Topology::Harary { k: 6 }, 41);
+    let cfg = base(n, 3, dim, Topology::Harary { k: 6 }, 41);
     let m = models(n, dim, 42);
     let workers = ccesa::par::threads();
     let (r, tel) = run_round_event_loop_with(&cfg, &m, workers).unwrap();
@@ -216,15 +219,15 @@ fn event_loop_n10k_single_round_smoke() {
 }
 
 /// CI scale job (`--ignored`): a n = 10⁵-client round completes on a fixed
-/// worker pool — the regime where Bocchi-style complete-graph costs
-/// diverge from the sparse Erdős–Rényi scheme, and where the
-/// thread-per-client shape would need 10⁵ OS threads.
+/// worker pool — the regime where complete-graph SA costs diverge from the
+/// sparse Erdős–Rényi scheme, and where a thread-per-client shape would
+/// need 10⁵ OS threads.
 #[test]
 #[ignore = "scale smoke (~minutes unoptimized): run explicitly — CI scale-smoke job, release profile"]
 fn event_loop_n100k_round_completes_with_bounded_threads() {
     let n = 100_000;
     let dim = 4;
-    let cfg = ProtocolConfig::new(n, 3, dim, Topology::Harary { k: 6 }, 43);
+    let cfg = base(n, 3, dim, Topology::Harary { k: 6 }, 43);
     let m = models(n, dim, 44);
     let workers = ccesa::par::threads();
     let (r, tel) = run_round_event_loop_with(&cfg, &m, workers).unwrap();
@@ -240,5 +243,41 @@ fn event_loop_n100k_round_completes_with_bounded_threads() {
     println!(
         "n=100000 round: workers={} peak_live={} sweeps={}",
         tel.workers, tel.peak_live_workers, tel.sweeps
+    );
+}
+
+/// CI scale job (`--ignored`), sparse leg: the same n = 10⁵ round under a
+/// RandK payload — the masked upload shrinks 4× while the aggregate still
+/// equals the projected true sum, with the same bounded-thread guarantee.
+#[test]
+#[ignore = "scale smoke (~minutes unoptimized): run explicitly — CI scale-smoke job, release profile"]
+fn event_loop_n100k_randk_round_completes_with_bounded_threads() {
+    let n = 100_000;
+    let dim = 8;
+    let k = 2;
+    let cfg = ProtocolConfig {
+        codec: Codec::RandK { k },
+        ..base(n, 3, dim, Topology::Harary { k: 6 }, 45)
+    };
+    let m = models(n, dim, 46);
+    let workers = ccesa::par::threads();
+    let (r, tel) = run_round_event_loop_with(&cfg, &m, workers).unwrap();
+    assert!(r.reliable);
+    assert_eq!(r.sets.v4.len(), n);
+    // projected true sum: dense sum restricted to the round's support
+    let plan = cfg.codec.plan(dim, cfg.mask_bits, cfg.seed, &m);
+    let mut expect = true_sum_all(&m, dim);
+    plan.project(&mut expect);
+    assert_eq!(r.sum.unwrap(), expect);
+    // payload bytes: |V3| · k · 4 instead of |V3| · dim · 4
+    assert_eq!(r.stats.masked_payload_bytes, (n * k * 4) as u64);
+    assert!(
+        tel.peak_live_workers <= workers,
+        "peak {} workers exceeds budget {workers}",
+        tel.peak_live_workers
+    );
+    println!(
+        "n=100000 randk round: workers={} peak_live={} payload_bytes={}",
+        tel.workers, tel.peak_live_workers, r.stats.masked_payload_bytes
     );
 }

@@ -3,6 +3,7 @@
 //! of the paper's reliability story (the server must *detect* unreliable
 //! rounds, never emit a wrong sum).
 
+use ccesa::codec::{EncodedUpdate, IndexPlan};
 use ccesa::graph::Graph;
 use ccesa::protocol::client::Client;
 use ccesa::protocol::dropout::DropoutModel;
@@ -13,6 +14,9 @@ use ccesa::protocol::{ProtocolConfig, Topology};
 use ccesa::shamir::Share;
 use ccesa::util::rng::Rng;
 
+mod common;
+use common::base;
+
 fn models(n: usize, dim: usize, seed: u64) -> Vec<Vec<u64>> {
     let mut rng = Rng::new(seed);
     (0..n)
@@ -22,7 +26,7 @@ fn models(n: usize, dim: usize, seed: u64) -> Vec<Vec<u64>> {
 
 #[test]
 fn server_rejects_spoofed_share_sender() {
-    let mut s = Server::new(3, 1, 32, 2, Graph::complete(3));
+    let mut s = Server::new(3, 1, 32, IndexPlan::identity(2), Graph::complete(3));
     let advs = (0..3)
         .map(|id| AdvertiseKeys { id, c_pk: [id as u8; 32], s_pk: [id as u8; 32] })
         .collect();
@@ -36,7 +40,7 @@ fn server_rejects_spoofed_share_sender() {
 
 #[test]
 fn server_rejects_upload_from_non_v1_client() {
-    let mut s = Server::new(4, 1, 32, 2, Graph::complete(4));
+    let mut s = Server::new(4, 1, 32, IndexPlan::identity(2), Graph::complete(4));
     // only clients 0..3 advertise
     let advs = (0..3)
         .map(|id| AdvertiseKeys { id, c_pk: [1; 32], s_pk: [2; 32] })
@@ -48,7 +52,11 @@ fn server_rejects_upload_from_non_v1_client() {
 
 #[test]
 fn server_rejects_wrong_dimension_masked_input() {
-    let mut s = Server::new(3, 1, 32, 8, Graph::complete(3));
+    let mk_update = |len: usize| EncodedUpdate {
+        values: vec![0; len],
+        plan: IndexPlan::identity(len),
+    };
+    let mut s = Server::new(3, 1, 32, IndexPlan::identity(8), Graph::complete(3));
     let advs = (0..3)
         .map(|id| AdvertiseKeys { id, c_pk: [1; 32], s_pk: [2; 32] })
         .collect();
@@ -56,17 +64,17 @@ fn server_rejects_wrong_dimension_masked_input() {
     s.step1_route_shares((0..3).map(|id| ShareUpload { from: id, shares: vec![] }).collect())
         .unwrap();
     // wrong length
-    let bad = MaskedInput { id: 0, masked: vec![0; 4], bits: 32 };
+    let bad = MaskedInput { id: 0, update: mk_update(4), bits: 32 };
     assert!(s.step2_collect_masked(vec![bad]).is_err());
     // wrong bit width
-    let mut s2 = Server::new(3, 1, 32, 8, Graph::complete(3));
+    let mut s2 = Server::new(3, 1, 32, IndexPlan::identity(8), Graph::complete(3));
     let advs = (0..3)
         .map(|id| AdvertiseKeys { id, c_pk: [1; 32], s_pk: [2; 32] })
         .collect();
     s2.step0_route_keys(advs).unwrap();
     s2.step1_route_shares((0..3).map(|id| ShareUpload { from: id, shares: vec![] }).collect())
         .unwrap();
-    let bad = MaskedInput { id: 0, masked: vec![0; 8], bits: 16 };
+    let bad = MaskedInput { id: 0, update: mk_update(8), bits: 16 };
     assert!(s2.step2_collect_masked(vec![bad]).is_err());
 }
 
@@ -80,7 +88,7 @@ fn server_never_emits_wrong_sum_with_forged_step3_shares() {
     // double-kind shares and that honest-majority rounds stay exact.
     let n = 8;
     let dim = 6;
-    let cfg = ProtocolConfig::new(n, 3, dim, Topology::Complete, 10);
+    let cfg = base(n, 3, dim, Topology::Complete, 10);
     let m = models(n, dim, 2);
     let r = run_round(&cfg, &m).unwrap();
     assert!(r.reliable);
@@ -99,7 +107,8 @@ fn client_rejects_garbage_ciphertext_blob() {
         to: 0,
         shares: vec![EncryptedShare { from: 1, to: 0, ciphertext: vec![1, 2, 3] }],
     };
-    let _ = a.step2_masked_input(&delivery, &[0u64; 4]).unwrap();
+    let plan = IndexPlan::identity(4);
+    let _ = a.step2_masked_input(&delivery, &[0u64; 4], &plan).unwrap();
     assert!(a.step3_unmask(&SurvivorAnnounce { v3: vec![0, 1] }).is_err());
 }
 
@@ -122,7 +131,7 @@ fn whole_cohort_dropout_aborts_cleanly() {
         dropout: DropoutModel::Targeted {
             per_step: [(0..n).collect(), vec![], vec![], vec![]],
         },
-        ..ProtocolConfig::new(n, 3, 4, Topology::Complete, 3)
+        ..base(n, 3, 4, Topology::Complete, 3)
     };
     let m = models(n, 4, 3);
     assert!(run_round(&cfg, &m).is_err());
@@ -137,7 +146,7 @@ fn exactly_threshold_survivors_still_reliable() {
         dropout: DropoutModel::Targeted {
             per_step: [vec![], vec![], vec![], vec![0, 1, 2]],
         },
-        ..ProtocolConfig::new(n, t, 5, Topology::Complete, 8)
+        ..base(n, t, 5, Topology::Complete, 8)
     };
     let m = models(n, 5, 8);
     let r = run_round(&cfg, &m).unwrap();
@@ -154,7 +163,7 @@ fn one_below_threshold_survivors_unreliable_but_detected() {
         dropout: DropoutModel::Targeted {
             per_step: [vec![], vec![], vec![], vec![0, 1, 2]],
         },
-        ..ProtocolConfig::new(n, t, 5, Topology::Complete, 8)
+        ..base(n, t, 5, Topology::Complete, 8)
     };
     let m = models(n, 5, 8);
     let r = run_round(&cfg, &m).unwrap();
@@ -174,7 +183,7 @@ fn isolated_node_topology_handles_gracefully() {
             g.add_edge(i, j);
         }
     } // node 0 isolated
-    let cfg = ProtocolConfig::new(n, 2, 4, Topology::Custom(g), 5);
+    let cfg = base(n, 2, 4, Topology::Custom(g), 5);
     let m = models(n, 4, 5);
     let r = run_round(&cfg, &m).unwrap();
     assert!(r.reliable);
@@ -185,7 +194,7 @@ fn isolated_node_topology_handles_gracefully() {
 #[test]
 fn zero_dimension_round_is_degenerate_but_sound() {
     let n = 4;
-    let cfg = ProtocolConfig::new(n, 2, 0, Topology::Complete, 6);
+    let cfg = base(n, 2, 0, Topology::Complete, 6);
     let m = vec![vec![]; n];
     let r = run_round(&cfg, &m).unwrap();
     assert!(r.reliable);
@@ -201,7 +210,7 @@ fn non_contiguous_survivors_exercise_eval_points() {
         dropout: DropoutModel::Targeted {
             per_step: [vec![0, 6], vec![1, 7], vec![2, 8], vec![]],
         },
-        ..ProtocolConfig::new(n, 3, 4, Topology::Complete, 12)
+        ..base(n, 3, 4, Topology::Complete, 12)
     };
     let m = models(n, 4, 12);
     let r = run_round(&cfg, &m).unwrap();

@@ -6,6 +6,7 @@
 //! full (Fig 5.2 / quickstart): small client counts and few rounds keep
 //! CI time bounded while still proving the layers compose.
 
+use ccesa::codec::Codec;
 use ccesa::fl::data::{partition_iid, SyntheticCifar};
 use ccesa::fl::rounds::{run_fl_mlp, Aggregation, FlConfig};
 use ccesa::protocol::dropout::DropoutModel;
@@ -68,6 +69,7 @@ fn secure_sa_matches_plain_within_quantization() {
             t_override: None,
             mask_bits: 32,
             dropout: DropoutModel::None,
+            codec: Codec::Dense,
         }),
         &mlp,
         &train,
@@ -101,6 +103,7 @@ fn ccesa_er_graph_learns_with_dropout() {
         t_override: Some(3),
         mask_bits: 32,
         dropout: DropoutModel::Iid { q: 0.03 },
+        codec: Codec::Dense,
     });
     cfg.rounds = 6;
     let hist = run_fl_mlp(&cfg, &mlp, &train, &parts, &test).unwrap();
@@ -133,6 +136,7 @@ fn ccesa_comm_cheaper_than_sa_per_round() {
             t_override: None,
             mask_bits: 32,
             dropout: DropoutModel::None,
+            codec: Codec::Dense,
         }),
         &mlp,
         &train,
@@ -146,6 +150,7 @@ fn ccesa_comm_cheaper_than_sa_per_round() {
             t_override: Some(4),
             mask_bits: 32,
             dropout: DropoutModel::None,
+            codec: Codec::Dense,
         }),
         &mlp,
         &train,

@@ -12,6 +12,9 @@ use ccesa::protocol::{ProtocolConfig, Topology};
 use ccesa::shamir::{self, Share};
 use ccesa::util::rng::Rng;
 
+mod common;
+use common::base;
+
 fn models(n: usize, dim: usize, seed: u64) -> Vec<Vec<u64>> {
     let mut rng = Rng::new(seed);
     (0..n)
@@ -31,9 +34,8 @@ fn theorem1_iff_reliability_full_stack_sweep() {
         let t = 2 + meta.gen_range(5) as usize;
         let q = 0.12 * meta.next_f64();
         let cfg = ProtocolConfig {
-            mask_bits: 32,
             dropout: DropoutModel::Iid { q },
-            ..ProtocolConfig::new(n, t, 6, Topology::ErdosRenyi { p }, seed)
+            ..base(n, t, 6, Topology::ErdosRenyi { p }, seed)
         };
         let m = models(n, 6, seed);
         if let Ok(r) = run_round(&cfg, &m) {
@@ -57,7 +59,7 @@ fn theorem2_iff_attack_full_stack_sweep() {
         let p = 0.15 + 0.25 * meta.next_f64();
         let cfg = ProtocolConfig {
             dropout: DropoutModel::Iid { q: 0.05 },
-            ..ProtocolConfig::new(n, 2, 4, Topology::ErdosRenyi { p }, 50 + seed)
+            ..base(n, 2, 4, Topology::ErdosRenyi { p }, 50 + seed)
         };
         let m = models(n, 4, seed);
         let Ok(r) = run_round(&cfg, &m) else { continue };
@@ -94,7 +96,7 @@ fn operating_point_p_star_is_reliable_and_private() {
     for seed in 0..trials {
         let cfg = ProtocolConfig {
             dropout: DropoutModel::Iid { q },
-            ..ProtocolConfig::new(n, t, 8, Topology::ErdosRenyi { p }, 300 + seed)
+            ..base(n, t, 8, Topology::ErdosRenyi { p }, 300 + seed)
         };
         let m = models(n, 8, seed);
         let Ok(r) = run_round(&cfg, &m) else { continue };
@@ -247,7 +249,7 @@ fn shamir_threshold_sharpness_through_engine() {
                 dropout: DropoutModel::Targeted {
                     per_step: [vec![], vec![], vec![], drop_at_3],
                 },
-                ..ProtocolConfig::new(n, t, 4, Topology::Complete, 9100 + trial)
+                ..base(n, t, 4, Topology::Complete, 9100 + trial)
             };
             let m = models(n, 4, trial);
             let r = run_round(&cfg, &m).unwrap();
@@ -269,13 +271,9 @@ fn sa_equals_ccesa_on_complete_graph() {
     let n = 12;
     let dim = 20;
     let m = models(n, dim, 77);
-    let a = run_round(&ProtocolConfig::new(n, 5, dim, Topology::Complete, 9), &m).unwrap();
+    let a = run_round(&base(n, 5, dim, Topology::Complete, 9), &m).unwrap();
     let g = ccesa::graph::Graph::complete(n);
-    let b = run_round(
-        &ProtocolConfig::new(n, 5, dim, Topology::Custom(g), 9),
-        &m,
-    )
-    .unwrap();
+    let b = run_round(&base(n, 5, dim, Topology::Custom(g), 9), &m).unwrap();
     assert_eq!(a.sum, b.sum);
     assert_eq!(a.stats.server_total(), b.stats.server_total());
 }

@@ -1,14 +1,14 @@
 //! The scenario differential harness at full width: ≥200 randomized
-//! scenarios (mixed topology schedules, churn models, adversary sets) must
-//! run bit-identically through every executor — sync engine,
-//! thread-per-client coordinator, and worker-pool event loop — and a
-//! 5-round campaign at n = 1000 clients must complete with all executors
-//! in exact agreement.
+//! scenarios (mixed topology schedules, churn models, adversary sets and
+//! payload codecs) must run bit-identically through every executor — sync
+//! engine and worker-pool event loop — plus a dedicated ≥100-scenario
+//! sparse-codec sweep, and a 5-round campaign at n = 1000 clients must
+//! complete with all executors in exact agreement.
 
 use ccesa::protocol::Topology;
 use ccesa::sim::{
-    random_scenario, run_campaign, run_differential, AdversarySpec, ChurnModel, Executor,
-    Scenario, ThresholdRule, TopologySchedule,
+    diff_scenario, random_scenario, run_campaign, run_differential, AdversarySpec, ChurnModel,
+    CodecSpec, Executor, Scenario, ThresholdRule, TopologySchedule,
 };
 
 /// The acceptance sweep: 200 seeded random scenarios, zero mismatches
@@ -27,15 +27,69 @@ fn differential_200_randomized_scenarios() {
     );
 }
 
+/// Sparse payload codecs through the full differential: ≥100 randomized
+/// scenarios forced onto TopK/RandK — the engine and the event loop must
+/// stay bit-identical when the masked payload is a packed k-window vector,
+/// across every churn model, topology schedule and dropout pattern the
+/// generator produces.
+#[test]
+fn sparse_codec_differential_100_scenarios() {
+    // the acceptance criterion asks for ≥100 sparse scenarios; 120 forced-
+    // sparse seeds clear it with margin
+    let failures = sparse_codec_sweep(0x5AC0_DEC0, 120);
+    assert!(
+        failures.is_empty(),
+        "{} sparse mismatches; first: {:?}",
+        failures.len(),
+        failures.first()
+    );
+}
+
+/// Forced-sparse differential sweep: every scenario gets a TopK/RandK
+/// codec (alternating) before diffing engine vs event loop.
+fn sparse_codec_sweep(base_seed: u64, count: u64) -> Vec<ccesa::sim::Mismatch> {
+    let mut failures = Vec::new();
+    for i in 0..count {
+        let mut sc = random_scenario(base_seed + i);
+        sc.codec = if i % 2 == 0 {
+            CodecSpec::TopK { frac: 0.3 }
+        } else {
+            CodecSpec::RandK { frac: 0.3 }
+        };
+        sc.name = format!("sparse-{}-{i}", sc.codec.name());
+        if let Some(m) = diff_scenario(&sc) {
+            failures.push(m);
+        }
+    }
+    failures
+}
+
+/// Extended sparse sweep for the dedicated CI sparse-codec job
+/// (`--ignored`): 300 scenarios from a disjoint seed range, beyond the
+/// tier-1 budget.
+#[test]
+#[ignore = "extended sparse sweep (~minutes): run explicitly — CI sparse-codec job"]
+fn sparse_codec_differential_extended_300() {
+    let failures = sparse_codec_sweep(0xE07_5AC0, 300);
+    assert!(
+        failures.is_empty(),
+        "{} sparse mismatches; first: {:?}",
+        failures.len(),
+        failures.first()
+    );
+}
+
 /// The generator actually exercises the space the harness claims to cover.
 #[test]
 fn generator_covers_topologies_churn_and_adversaries() {
     let mut churn_kinds = std::collections::BTreeSet::new();
     let mut topo_kinds = std::collections::BTreeSet::new();
+    let mut codec_kinds = std::collections::BTreeSet::new();
     let mut colluding = 0usize;
     let mut multi_round = 0usize;
     for seed in 0..200u64 {
         let sc = random_scenario(0xD1FF_0000 + seed);
+        codec_kinds.insert(sc.codec.name());
         churn_kinds.insert(match sc.churn {
             ChurnModel::None => "none",
             ChurnModel::Iid { .. } => "iid",
@@ -61,6 +115,7 @@ fn generator_covers_topologies_churn_and_adversaries() {
     }
     assert!(churn_kinds.len() >= 5, "churn kinds: {churn_kinds:?}");
     assert!(topo_kinds.len() >= 5, "topology kinds: {topo_kinds:?}");
+    assert_eq!(codec_kinds.len(), 3, "codec kinds: {codec_kinds:?}");
     assert!(colluding >= 20, "colluding adversaries: {colluding}/200");
     assert!(multi_round >= 60, "multi-round scenarios: {multi_round}/200");
 }
@@ -92,6 +147,7 @@ fn campaign_smoke_n1000_five_rounds_bit_identical() {
         },
         adversary: AdversarySpec::Eavesdropper,
         threshold: ThresholdRule::Fixed(4),
+        codec: CodecSpec::Dense,
         clip: 4.0,
         seed: 0x51107E,
     };

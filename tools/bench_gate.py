@@ -73,7 +73,22 @@ def main():
         action="store_true",
         help="fail on coverage gaps too (missing baselines, renamed/removed cases)",
     )
+    ap.add_argument(
+        "--strict-if-armed",
+        action="store_true",
+        help="behave like --strict once the baseline directory holds at least one "
+        "BENCH_*.json (bootstrap stays lenient; an armed gate refuses coverage gaps)",
+    )
     args = ap.parse_args()
+
+    if args.strict_if_armed and not args.strict:
+        armed = os.path.isdir(args.baseline) and any(
+            f.startswith("BENCH_") and f.endswith(".json")
+            for f in os.listdir(args.baseline)
+        )
+        if armed:
+            args.strict = True
+            print("bench_gate: baselines present — strict mode armed")
 
     fresh_paths = args.fresh or sorted(glob.glob("BENCH_*.json"))
     if not fresh_paths:
