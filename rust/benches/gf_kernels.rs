@@ -1,0 +1,113 @@
+//! The kernels layer at the Step-3 scale (dim = 2^17): GF(2^16) slice
+//! multiply / multiply-accumulate per backend, a batched Lagrange Step-3
+//! shape (t weights over one concatenated group slice), and fused-vs-
+//! sequential multi-seed mask application.
+//!
+//! Always emits `BENCH_gf_kernels.json` (override with `--json PATH` or
+//! `CCESA_BENCH_JSON`); the report's `kernel_backend` field names the
+//! dispatched backend, and the per-case names carry the explicit backend
+//! of each row, so the acceptance comparison (vector backend ≥2× the
+//! scalar rows on a clmul-capable runner) reads straight off one file.
+
+use ccesa::bench::{black_box, Bench};
+use ccesa::crypto::prg::{NONCE_PAIRWISE, NONCE_SELF};
+use ccesa::kernels::{self, Backend, MaskStream};
+use ccesa::util::rng::Rng;
+
+const DIM: usize = 1 << 17;
+const BITS: u32 = 32;
+/// Lagrange weights in the Step-3 shape row (t at the paper's n=128 scale).
+const T: usize = 64;
+
+fn main() {
+    let mut b = Bench::new("gf_kernels");
+    let mut rng = Rng::new(0x6F16);
+
+    let src: Vec<u16> = (0..DIM).map(|_| rng.next_u32() as u16).collect();
+    let mut acc: Vec<u16> = (0..DIM).map(|_| rng.next_u32() as u16).collect();
+    let w = 0xA53B;
+
+    // Sanity: every available backend is bit-identical to scalar before
+    // anything is timed (a diverging lane must fail loudly, not get
+    // benchmarked).
+    for &bk in &kernels::available_backends() {
+        let mut got = src.clone();
+        kernels::gf_mul_slice_const_with(bk, &mut got, w);
+        let mut oracle = src.clone();
+        kernels::gf_mul_slice_const_with(Backend::Scalar, &mut oracle, w);
+        assert_eq!(got, oracle, "{bk:?} diverged from scalar");
+    }
+
+    for &bk in &kernels::available_backends() {
+        b.throughput(
+            &format!("gf_mul_slice dim={DIM} backend={}", bk.name()),
+            DIM as f64,
+            "elem/s",
+            || {
+                kernels::gf_mul_slice_const_with(bk, &mut acc, w);
+                black_box(acc[0]);
+            },
+        );
+        b.throughput(
+            &format!("gf_fma_slice dim={DIM} backend={}", bk.name()),
+            DIM as f64,
+            "elem/s",
+            || {
+                kernels::gf_fma_slice_with(bk, &mut acc, &src, w);
+                black_box(acc[0]);
+            },
+        );
+        // reconstruct_batch Step-3 shape: t weight applications over one
+        // concatenated m·owners slice
+        b.throughput(
+            &format!("step3 fma t={T} dim={DIM} backend={}", bk.name()),
+            (T * DIM) as f64,
+            "elem/s",
+            || {
+                for i in 0..T {
+                    kernels::gf_fma_slice_with(bk, &mut acc, &src, 0xA001 ^ (i as u16));
+                }
+                black_box(acc[0]);
+            },
+        );
+    }
+
+    // Fused vs sequential multi-seed mask application (backend-independent:
+    // the win is keystream-major accumulator blocking).
+    let mut acc64: Vec<u64> = (0..DIM as u64).map(|i| (i * 2654435761) & 0xFFFF_FFFF).collect();
+    for seeds in [2usize, 5, 9] {
+        let streams: Vec<MaskStream> = (0..seeds)
+            .map(|k| MaskStream {
+                seed: [k as u8 + 1; 32],
+                nonce: if k == 0 { NONCE_SELF } else { NONCE_PAIRWISE },
+                negate: k % 2 == 1,
+            })
+            .collect();
+        b.throughput(
+            &format!("apply_masks seeds={seeds} dim={DIM} sequential"),
+            (seeds * DIM * 8) as f64,
+            "B/s",
+            || {
+                for s in &streams {
+                    kernels::apply_mask_stream(&mut acc64, &s.seed, &s.nonce, BITS, s.negate, 0);
+                }
+                black_box(acc64[0]);
+            },
+        );
+        b.throughput(
+            &format!("apply_masks seeds={seeds} dim={DIM} fused"),
+            (seeds * DIM * 8) as f64,
+            "B/s",
+            || {
+                kernels::apply_masks_fused(&mut acc64, &streams, BITS, 0);
+                black_box(acc64[0]);
+            },
+        );
+    }
+
+    b.report();
+    // cargo runs bench binaries with cwd = the package root (rust/);
+    // anchor the default artifact at the workspace root so CI and humans
+    // find it where the repo documents it.
+    b.write_report_to_sink(concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_gf_kernels.json"));
+}

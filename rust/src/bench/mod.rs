@@ -166,9 +166,11 @@ impl Bench {
     }
 
     /// Machine-readable report: group name, host parallelism, the
-    /// `CCESA_THREADS` default the run used, and every case's statistics.
-    /// This is what populates the repo's bench trajectory
-    /// (`BENCH_aggregate.json` & friends).
+    /// `CCESA_THREADS` default the run used, the dispatched kernel backend
+    /// (`kernels::selected` — so a report always names the GF/mask
+    /// implementation it measured), and every case's statistics. This is
+    /// what populates the repo's bench trajectory (`BENCH_aggregate.json`
+    /// & friends).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("group", Json::str(&self.group)),
@@ -179,6 +181,7 @@ impl Bench {
                 ),
             ),
             ("default_threads", Json::Num(crate::par::threads() as f64)),
+            ("kernel_backend", Json::str(crate::kernels::selected().name())),
             ("results", Json::arr(self.results.iter().map(|r| r.to_json()))),
         ])
     }
@@ -312,6 +315,8 @@ mod tests {
         assert_eq!(parsed.get("group").as_str(), Some("jsontest"));
         assert!(parsed.get("host_cores").as_u64().unwrap() >= 1);
         assert!(parsed.get("default_threads").as_u64().unwrap() >= 1);
+        let backend = parsed.get("kernel_backend").as_str().unwrap();
+        assert!(["scalar", "table", "clmul"].contains(&backend), "{backend}");
         let results = parsed.get("results").as_arr().unwrap();
         assert_eq!(results.len(), 1);
         assert_eq!(results[0].get("name").as_str(), Some("case"));

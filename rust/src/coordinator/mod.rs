@@ -55,6 +55,10 @@ pub struct LoopTelemetry {
     pub peak_live_workers: usize,
     /// Parallel sweeps executed — one per protocol phase reached.
     pub sweeps: usize,
+    /// GF(2^16)/mask kernel backend the round's hot paths dispatched to
+    /// (`crate::kernels::selected`) — recorded so the scale jobs can audit
+    /// which backend a run actually exercised.
+    pub kernel_backend: &'static str,
 }
 
 /// Minimum clients a pool worker should own before a sweep is worth its
@@ -270,6 +274,7 @@ pub fn run_round_event_loop_with(
         workers,
         peak_live_workers: peak.load(Ordering::SeqCst).max(1),
         sweeps,
+        kernel_backend: crate::kernels::selected().name(),
     };
     Ok((CoordRoundResult { sum, reliable, sets, stats }, telemetry))
 }

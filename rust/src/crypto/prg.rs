@@ -19,6 +19,7 @@
 //! the range APIs, so the two can never diverge.
 
 use super::chacha20::{ChaCha20, BATCH_BLOCKS, WORDS_PER_BLOCK};
+use crate::kernels::MaskStream;
 use crate::util::mod_mask;
 
 /// Nonce for pairwise masks PRG(s_{i,j}).
@@ -110,6 +111,10 @@ pub fn prg(seed: &[u8; 32], nonce: &[u8; 12], bits: u32, len: usize) -> Vec<u64>
 /// consumes. For any partition of the vector, composing the shards is
 /// bit-identical to the serial `apply_mask` because Z_{2^b} addition is
 /// elementwise and each element sees the same keystream word either way.
+///
+/// Implementation: the single-stream case of the keystream-major kernel
+/// (`crate::kernels::apply_mask_stream`) — serial, sharded and multi-seed
+/// application share one code path and can never diverge.
 pub fn apply_mask_range(
     acc: &mut [u64],
     seed: &[u8; 32],
@@ -118,53 +123,7 @@ pub fn apply_mask_range(
     negate: bool,
     start: usize,
 ) {
-    let modmask = mod_mask(bits);
-    let cipher = ChaCha20::new(seed, nonce);
-    let len = acc.len();
-    if bits <= 32 {
-        // §Perf: 16-block keystream batches (quarter rounds vectorize to
-        // one AVX2/AVX-512 op per state word across blocks).
-        let mut batch = [0u32; BATCH_WORDS];
-        let mut counter = (start / WORDS_PER_BLOCK) as u32;
-        let mut skip = start % WORDS_PER_BLOCK;
-        let mut pos = 0usize;
-        while pos < len {
-            cipher.block_words_x16(counter, &mut batch);
-            counter = counter.wrapping_add(BATCH_BLOCKS as u32);
-            let take = (BATCH_WORDS - skip).min(len - pos);
-            let ks = &batch[skip..skip + take];
-            let chunk = &mut acc[pos..pos + take];
-            if negate {
-                for (a, w) in chunk.iter_mut().zip(ks.iter()) {
-                    *a = a.wrapping_sub(*w as u64 & modmask) & modmask;
-                }
-            } else {
-                for (a, w) in chunk.iter_mut().zip(ks.iter()) {
-                    *a = a.wrapping_add(*w as u64 & modmask) & modmask;
-                }
-            }
-            skip = 0;
-            pos += take;
-        }
-    } else {
-        let mut words = [0u32; WORDS_PER_BLOCK];
-        let mut counter = (start / WIDE_PER_BLOCK) as u32;
-        let mut skip = start % WIDE_PER_BLOCK;
-        let mut pos = 0usize;
-        while pos < len {
-            cipher.block_words(counter, &mut words);
-            counter = counter.wrapping_add(1);
-            let take = (WIDE_PER_BLOCK - skip).min(len - pos);
-            for (k, a) in acc[pos..pos + take].iter_mut().enumerate() {
-                let lo = words[2 * (skip + k)] as u64;
-                let hi = words[2 * (skip + k) + 1] as u64;
-                let m = (lo | (hi << 32)) & modmask;
-                *a = if negate { a.wrapping_sub(m) } else { a.wrapping_add(m) } & modmask;
-            }
-            skip = 0;
-            pos += take;
-        }
-    }
+    crate::kernels::apply_mask_stream(acc, seed, nonce, bits, negate, start);
 }
 
 /// Add `PRG(seed)` into `acc` in place with sign `+1`/`-1` mod 2^bits —
@@ -205,10 +164,20 @@ impl MaskJob {
 /// Apply every job's keystream range to `acc`, a shard whose first element
 /// is at `start` in the full vector. Composing shards over any partition is
 /// bit-identical to applying all jobs serially over the whole vector.
+///
+/// §Perf: delegates to the fused multi-seed kernel
+/// (`crate::kernels::apply_masks_fused`) — all jobs are expanded and
+/// applied per ≤256-word accumulator block (keystream-major blocking), so
+/// the shard is walked once instead of once per job, cutting accumulator
+/// traffic ~(d+1)× for a degree-d client. Per element the same keystream
+/// words are added with the same signs, so the result is bit-identical to
+/// the one-pass-per-job form.
 pub fn apply_mask_jobs_range(acc: &mut [u64], jobs: &[MaskJob], bits: u32, start: usize) {
-    for job in jobs {
-        apply_mask_range(acc, &job.seed, job.nonce(), bits, job.negate, start);
-    }
+    let streams: Vec<MaskStream> = jobs
+        .iter()
+        .map(|j| MaskStream { seed: j.seed, nonce: *j.nonce(), negate: j.negate })
+        .collect();
+    crate::kernels::apply_masks_fused(acc, &streams, bits, start);
 }
 
 #[cfg(test)]

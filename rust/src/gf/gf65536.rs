@@ -5,7 +5,9 @@
 //! the production Shamir implementation (supports up to 65535 share
 //! holders, comfortably covering the paper's n = 1000 experiments).
 
-const POLY: u32 = 0x1100B;
+/// The reduction polynomial, exported for `crate::kernels`' carry-less
+/// multiply backends (their Barrett constants derive from it).
+pub const POLY: u32 = 0x1100B;
 
 struct Tables {
     exp: Vec<u16>, // length 2*65535 to avoid mod in mul

@@ -7,6 +7,11 @@
 //! * [`gf65536`] — GF(2^16), the production field. The paper's experiments
 //!   run up to n = 1000 clients (Fig 5.2), beyond GF(2^8)'s capacity, so
 //!   shares are evaluated at x ∈ GF(2^16) \ {0} supporting n ≤ 65535.
+//!
+//! These modules provide the *scalar* arithmetic; whole-vector GF(2^16)
+//! operations on the Shamir hot path (constant-weight slice multiply and
+//! multiply-accumulate) go through the runtime-dispatched
+//! [`crate::kernels`] layer, for which [`gf65536::mul`] is the oracle.
 
 pub mod gf256;
 pub mod gf65536;

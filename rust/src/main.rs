@@ -8,6 +8,7 @@
 //! ccesa analyze montecarlo     # empirical P_e vs Theorems 5/6
 //! ccesa round --n 100 --p 0.64 --dim 10000   # one secure-agg round
 //! ccesa fl --config configs/quickstart.json  # config-driven FL run
+//! ccesa kernels                              # kernel-dispatch report (JSON)
 //! ```
 
 use anyhow::{anyhow, bail, Result};
@@ -33,7 +34,7 @@ fn main() -> Result<()> {
     let args = Args::new(
         "ccesa",
         "Communication-Computation Efficient Secure Aggregation (Choi et al. 2020)\n\
-         subcommands: analyze {pstar|costs|turbo|montecarlo} | round | fl",
+         subcommands: analyze {pstar|costs|turbo|montecarlo} | round | fl | kernels",
     )
     .flag("n", Some("100"), "number of clients")
     .flag("p", None, "ER connection probability (default: p*(n, qtotal))")
@@ -52,6 +53,13 @@ fn main() -> Result<()> {
         Some("analyze") => analyze(&args, sub.get(1).copied().unwrap_or("pstar")),
         Some("round") => round(&args),
         Some("fl") => fl(&args),
+        // kernel-dispatch audit: which GF(2^16)/mask backend this process
+        // selected (cpuid + CCESA_KERNEL), as JSON on stdout — CI asserts
+        // on it and archives it next to the bench reports
+        Some("kernels") => {
+            println!("{}", ccesa::kernels::report_json());
+            Ok(())
+        }
         other => {
             if let Some(o) = other {
                 eprintln!("unknown subcommand {o:?}\n");

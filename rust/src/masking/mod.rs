@@ -7,7 +7,9 @@
 //! 1. each client **quantizes** its f32 model delta into Z_{2^b} with a
 //!    shared (clip, scale) so that the modular sum of up to `n_max`
 //!    client vectors never wraps ambiguously;
-//! 2. clients add PRG masks (Eq. 3) — [`crate::crypto::prg`];
+//! 2. clients add PRG masks (Eq. 3) — [`crate::crypto::prg`], whose
+//!    multi-seed application runs on the fused keystream-major kernel
+//!    ([`crate::kernels::apply_masks_fused`]);
 //! 3. the server sums masked vectors mod 2^b, cancels masks (Eq. 4), and
 //!    **dequantizes** the exact integer sum back to f32.
 //!

@@ -159,8 +159,11 @@ impl Client {
     /// §Perf: plan-then-execute. The d+1 mask seeds (self + one DH
     /// agreement per alive neighbor) are derived first; then one parallel
     /// pass shards the encoded vector across workers, each applying every
-    /// seed's keystream range to its disjoint slice
-    /// (`prg::apply_mask_range`) — bit-identical to the serial pass.
+    /// seed's keystream range to its disjoint slice in one fused
+    /// keystream-major walk (`prg::apply_mask_jobs_range` →
+    /// `kernels::apply_masks_fused`: all d+1 seeds expand per slice block,
+    /// so the slice is traversed once, not d+1 times) — bit-identical to
+    /// the serial per-seed pass.
     pub fn step2_masked_input(
         &mut self,
         delivery: &ShareDelivery,

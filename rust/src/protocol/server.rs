@@ -215,10 +215,17 @@ impl Server {
     /// cancellation job (self masks for V3, pairwise seeds for V2∖V3
     /// dropouts adjacent to V3) — then *executes* one parallel pass where
     /// each worker owns a disjoint accumulator slice and applies every
-    /// job's keystream range to it (`prg::apply_mask_range`). No atomics or
-    /// locks: slices are disjoint, and the result is bit-identical to the
-    /// serial pass because Z_{2^b} addition is elementwise and each element
-    /// sees the same keystream words in the same order.
+    /// job's keystream range to it in one fused keystream-major walk
+    /// (`prg::apply_mask_jobs_range` → `kernels::apply_masks_fused`: all
+    /// jobs expand per accumulator block, so the slice is traversed once,
+    /// not once per job). No atomics or locks: slices are disjoint, and
+    /// the result is bit-identical to the serial pass because Z_{2^b}
+    /// addition is elementwise and each element sees the same keystream
+    /// words with the same signs. The Shamir reconstructions behind the
+    /// jobs run on the dispatched GF(2^16) kernel backend
+    /// (`kernels::selected`) — every backend is field-exact, so round
+    /// outputs are backend-independent (the CI `kernel-matrix` job pins
+    /// this).
     pub fn finalize(&mut self, responses: Vec<UnmaskShares>) -> Result<RoundOutput> {
         for resp in responses {
             if !SurvivorSets::contains(&self.sets.v3, resp.from) {

@@ -121,33 +121,39 @@ pub fn split(
         }
     }
     let chunks = to_chunks(secret);
-    // coefficients[c][k] = coefficient of x^k for chunk c (k=0 is secret)
-    let mut coeffs: Vec<Vec<u16>> = Vec::with_capacity(chunks.len());
-    for &s in &chunks {
-        let mut poly = Vec::with_capacity(t);
-        poly.push(s);
-        for _ in 1..t {
-            poly.push(rng.next_u32() as u16);
+    let m = chunks.len();
+    // rows[k][c] = coefficient of x^k for chunk c (row 0 is the secret).
+    // Degree-major storage lets evaluation run whole-row Horner steps
+    // through the vector kernels; the RNG is still drawn chunk-major —
+    // every coefficient of chunk c before any of chunk c+1 — the exact
+    // order the per-chunk splitter used, so shares are bit-identical for a
+    // given RNG state (the wire-contract golden tests pin this).
+    let mut rows: Vec<Vec<u16>> = Vec::with_capacity(t);
+    rows.push(chunks);
+    for _ in 1..t {
+        rows.push(vec![0u16; m]);
+    }
+    for c in 0..m {
+        for row in rows.iter_mut().skip(1) {
+            row[c] = rng.next_u32() as u16;
         }
-        coeffs.push(poly);
     }
     Ok(points
         .iter()
         .map(|&x| {
-            let y = coeffs.iter().map(|poly| eval_poly(poly, x)).collect();
+            // Vectorized Horner across all chunk polynomials at once: per
+            // degree, one slice-by-constant multiply (`kernels`) plus one
+            // row XOR — same per-element operations as scalar Horner.
+            let mut y = rows[t - 1].clone();
+            for row in rows[..t - 1].iter().rev() {
+                crate::kernels::gf_mul_slice_const(&mut y, x);
+                for (a, &c) in y.iter_mut().zip(row) {
+                    *a = gf::add(*a, c);
+                }
+            }
             Share { x, y }
         })
         .collect())
-}
-
-/// Horner evaluation of a polynomial (low-to-high coefficients) at x.
-#[inline]
-fn eval_poly(poly: &[u16], x: u16) -> u16 {
-    let mut acc = 0u16;
-    for &c in poly.iter().rev() {
-        acc = gf::add(gf::mul(acc, x), c);
-    }
-    acc
 }
 
 /// Precomputed Lagrange interpolation weights at x = 0 for one fixed,
@@ -227,11 +233,11 @@ impl LagrangeBasis {
                 return Err(ShamirError::BadParameters);
             }
         }
+        // Step-3 weight application: one vectorized multiply-accumulate
+        // per share vector (`kernels::gf_fma_slice`).
         let mut chunks = vec![0u16; m];
         for (share, &li) in shares.iter().zip(&self.weights) {
-            for (c, &y) in share.y.iter().enumerate() {
-                chunks[c] = gf::add(chunks[c], gf::mul(li, y));
-            }
+            crate::kernels::gf_fma_slice(&mut chunks, &share.y, li);
         }
         Ok(from_chunks(&chunks, secret_len))
     }
@@ -279,9 +285,13 @@ pub struct BatchReconstruction {
 ///
 /// In the server's Step-3 regime — n owners whose shares arrive from the
 /// same V4 survivors — this collapses n O(t²) basis solves into one,
-/// leaving n·O(t·m) weight applications. Falls back gracefully: jobs with
-/// unique holder sets each get their own basis and cost exactly the
-/// per-owner path.
+/// leaving n·O(t·m) weight applications, and those run *group-wide*: per
+/// Lagrange weight, every member job's share vector is applied in one
+/// `kernels::gf_fma_slice` call over their concatenation, so the vector
+/// backends see slices of m·|group| elements instead of m (XOR
+/// accumulation is exact, so this is bit-identical to the per-owner
+/// path). Falls back gracefully: jobs with unique holder sets each get
+/// their own basis and cost exactly the per-owner path.
 pub fn reconstruct_batch(
     jobs: &[&[Share]],
     t: usize,
@@ -290,15 +300,22 @@ pub fn reconstruct_batch(
     if t == 0 {
         return Err(ShamirError::BadParameters);
     }
+    // ---- Plan, in job order (error precedence preserved): validate every
+    // job and dedup Lagrange bases by (ordered) holder set.
     let mut bases: Vec<LagrangeBasis> = Vec::new();
     let mut by_points: std::collections::HashMap<Vec<u16>, usize> =
         std::collections::HashMap::new();
-    let mut secrets = Vec::with_capacity(jobs.len());
+    let mut job_basis: Vec<usize> = Vec::with_capacity(jobs.len());
+    let mut job_m: Vec<usize> = Vec::with_capacity(jobs.len());
     for shares in jobs {
         if shares.len() < t {
             return Err(ShamirError::NotEnoughShares { t, got: shares.len() });
         }
         let used = &shares[..t];
+        let m = used[0].y.len();
+        if used.iter().any(|s| s.y.len() != m) {
+            return Err(ShamirError::InconsistentLengths);
+        }
         let points: Vec<u16> = used.iter().map(|s| s.x).collect();
         let idx = match by_points.get(&points) {
             Some(&idx) => idx,
@@ -309,7 +326,33 @@ pub fn reconstruct_batch(
                 bases.len() - 1
             }
         };
-        secrets.push(bases[idx].reconstruct(used, secret_len)?);
+        job_basis.push(idx);
+        job_m.push(m);
+    }
+
+    // ---- Execute per (basis, share-vector-length) group. Jobs are
+    // sub-grouped by m so the concatenation stays rectangular; mixed-m
+    // groups only arise from malformed shares and just split into smaller
+    // groups. Group processing order does not matter — jobs are disjoint.
+    let mut secrets: Vec<Vec<u8>> = vec![Vec::new(); jobs.len()];
+    let mut groups: std::collections::HashMap<(usize, usize), Vec<usize>> =
+        std::collections::HashMap::new();
+    for (j, (&b, &m)) in job_basis.iter().zip(job_m.iter()).enumerate() {
+        groups.entry((b, m)).or_default().push(j);
+    }
+    for ((bidx, m), members) in groups {
+        let weights = &bases[bidx].weights;
+        let mut acc = vec![0u16; m * members.len()];
+        let mut row = vec![0u16; m * members.len()];
+        for (i, &w) in weights.iter().enumerate() {
+            for (slot, &j) in members.iter().enumerate() {
+                row[slot * m..(slot + 1) * m].copy_from_slice(&jobs[j][i].y);
+            }
+            crate::kernels::gf_fma_slice(&mut acc, &row, w);
+        }
+        for (slot, &j) in members.iter().enumerate() {
+            secrets[j] = from_chunks(&acc[slot * m..(slot + 1) * m], secret_len);
+        }
     }
     Ok(BatchReconstruction { secrets, bases_computed: bases.len() })
 }
@@ -586,6 +629,33 @@ mod tests {
         let empty = reconstruct_batch(&[], t, 32).unwrap();
         assert_eq!(empty.bases_computed, 0);
         assert!(empty.secrets.is_empty());
+    }
+
+    #[test]
+    fn batch_handles_mixed_share_vector_lengths() {
+        // regression for the group-concatenated weight application: two
+        // jobs sharing one holder set but with different y-lengths (a
+        // malformed/truncated share set) must still match the per-owner
+        // path element for element — they land in separate (basis, m)
+        // sub-groups but share the one basis
+        let mut r = rng();
+        let points: Vec<u16> = (1..=6).collect();
+        let t = 3;
+        let full = split(&[0x42u8; 32], t, &points, &mut r).unwrap();
+        let truncated: Vec<Share> = split(&[0x77u8; 32], t, &points, &mut r)
+            .unwrap()
+            .into_iter()
+            .map(|s| Share { x: s.x, y: s.y[..8].to_vec() })
+            .collect();
+        let jobs: Vec<&[Share]> = vec![&full[..t], &truncated[..t]];
+        let batch = reconstruct_batch(&jobs, t, 32).unwrap();
+        assert_eq!(batch.bases_computed, 1, "same holder set, one basis");
+        for (k, job) in jobs.iter().enumerate() {
+            assert_eq!(batch.secrets[k], reconstruct(job, t, 32).unwrap(), "job {k}");
+        }
+        // the truncated job reconstructs a short secret, as before
+        assert_eq!(batch.secrets[1].len(), 16);
+        assert_eq!(batch.secrets[0], vec![0x42u8; 32]);
     }
 
     #[test]

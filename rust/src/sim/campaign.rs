@@ -62,6 +62,12 @@ pub struct RoundRecord {
     /// Engine executor only: whether Theorem 1's predicate agreed with the
     /// implementation's reliability outcome.
     pub theorem1_agrees: Option<bool>,
+    /// Engine executor only: whether the unmasked aggregate equals the
+    /// independently computed plain sum (`true_sum_v3`). A `Some(false)`
+    /// means mask cancellation itself is broken — e.g. a diverging GF/mask
+    /// kernel backend — and the differential harness reports it as a named
+    /// `sum_vs_truth` mismatch rather than a downstream flake.
+    pub sum_matches_truth: Option<bool>,
     /// Engine executor only: partial-sum breaches the Definition-2
     /// eavesdropper extracted from this round's transcript.
     pub breaches: usize,
@@ -80,6 +86,7 @@ impl RoundRecord {
             sets: SurvivorSets::default(),
             stats: NetStats::new(n),
             theorem1_agrees: None,
+            sum_matches_truth: None,
             breaches: 0,
             exposed_honest: 0,
         }
@@ -158,6 +165,7 @@ pub fn run_plan(
             sets: r.sets,
             stats: r.stats,
             theorem1_agrees: None,
+            sum_matches_truth: None,
             breaches: 0,
             exposed_honest: 0,
         },
@@ -167,6 +175,7 @@ pub fn run_plan(
         Executor::Engine => match run_round(&plan.cfg, models) {
             Ok(r) => {
                 let breaches = attack(&r.transcript);
+                let sum_matches_truth = r.sum.as_deref().map(|s| s == &r.true_sum_v3[..]);
                 RoundRecord {
                     round: plan.round,
                     aborted: false,
@@ -175,6 +184,7 @@ pub fn run_plan(
                     sets: r.sets,
                     stats: r.stats,
                     theorem1_agrees: Some(r.theorem1_holds == r.reliable),
+                    sum_matches_truth,
                     breaches: breaches.len(),
                     exposed_honest: exposed_honest(&breaches, colluders),
                 }

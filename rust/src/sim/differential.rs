@@ -87,6 +87,22 @@ pub fn diff_scenario(sc: &Scenario) -> Option<Mismatch> {
     for plan in &plans {
         let models = sc.round_models(plan.round);
         let e = run_plan(plan, &models, Executor::Engine, colluders);
+        // The reference itself must unmask to the independently computed
+        // plain sum: a broken mask-cancellation path (e.g. a diverging
+        // GF/mask kernel backend) corrupts every executor identically, so
+        // only this check can name it. Running the harness once under
+        // `CCESA_KERNEL=scalar` and once under the default backend turns
+        // any backend divergence into this mismatch.
+        if e.sum_matches_truth == Some(false) {
+            return Some(Mismatch {
+                scenario: sc.name.clone(),
+                seed: sc.seed,
+                round: plan.round,
+                executor: Executor::Engine,
+                field: "sum_vs_truth",
+                detail: "engine aggregate != plain sum of V3 models".to_string(),
+            });
+        }
         for alt in Executor::non_reference() {
             let c = run_plan(plan, &models, alt, colluders);
             if let Some((field, detail)) = diff_records(&e, &c, alt.name()) {
