@@ -88,6 +88,49 @@ fn predraw_survivals(cfg: &ProtocolConfig, dropout_rng: &mut Rng) -> Vec<[bool; 
     survives
 }
 
+/// Everything a round's executors derive from `cfg.seed` before the first
+/// message moves: the secret-sharing graph, the pre-drawn dropout schedule,
+/// the codec's shared index plan and each client's RNG stream pair.
+///
+/// The derivation order is load-bearing — `Rng::split` advances the base
+/// stream, so graph → dropout → plan → per-client streams must happen in
+/// exactly this sequence for every execution shape (sync engine, event
+/// loop, socket transport) to agree bit-for-bit. Extracting it into one
+/// function is what lets the wire path (`net::socket`) share the event
+/// loop's derivation instead of re-implementing the recipe.
+pub struct RoundSetup {
+    pub graph: crate::graph::Graph,
+    /// `survives[id][step]` — the pre-drawn per-step dropout decisions, in
+    /// the sync engine's draw order (step-major, client-minor).
+    pub survives: Vec<[bool; 4]>,
+    pub plan: Arc<crate::codec::IndexPlan>,
+    /// Per-client `(key_rng, share_rng)` stream pairs, indexed by id.
+    pub streams: Vec<(Rng, Rng)>,
+}
+
+/// Derive a [`RoundSetup`] from the round config — the single source of
+/// truth for the seed → round-state recipe shared by all executors.
+pub fn derive_round_setup(cfg: &ProtocolConfig, models: &[Vec<u64>]) -> RoundSetup {
+    assert_eq!(models.len(), cfg.n);
+    let mut rng = Rng::new(cfg.seed);
+    let graph = cfg.build_graph_with(&mut rng);
+    let mut dropout_rng = rng.split(0xD20);
+    let survives = predraw_survivals(cfg, &mut dropout_rng);
+    // The round's shared payload plan — same derivation as the sync engine
+    // (public round seed / scoring oracle, never the protocol RNG stream),
+    // so all shapes encode identical windows.
+    let plan = cfg.codec.plan(cfg.dim, cfg.mask_bits, cfg.seed, models);
+    // RNG derivation is order-dependent (`split` advances the base), so the
+    // per-client streams are drawn serially — that part is cheap. The
+    // expensive part, key generation (two x25519 ladders per client inside
+    // `Client::new`), derives only from the already-split streams, so lane
+    // construction itself can run on a worker pool.
+    let streams: Vec<(Rng, Rng)> = (0..cfg.n)
+        .map(|id| (rng.split(0xC11E27 + id as u64), rng.split(0x5A12E + id as u64)))
+        .collect();
+    RoundSetup { graph, survives, plan, streams }
+}
+
 /// One client's slot in the event loop: its state machine plus single-entry
 /// mailboxes. The loop writes `inbox` while routing, a sweep moves
 /// `inbox → step → outbox`, and the drain empties `outbox` in id order.
@@ -131,23 +174,7 @@ pub fn run_round_event_loop_with(
 ) -> Result<(CoordRoundResult, LoopTelemetry)> {
     assert_eq!(models.len(), cfg.n);
     let workers = workers.max(1);
-    let mut rng = Rng::new(cfg.seed);
-    let graph = cfg.build_graph_with(&mut rng);
-    let mut dropout_rng = rng.split(0xD20);
-    let survives = predraw_survivals(cfg, &mut dropout_rng);
-    // The round's shared payload plan — same derivation as the sync engine
-    // (public round seed / scoring oracle, never the protocol RNG stream),
-    // so both shapes encode identical windows.
-    let plan = cfg.codec.plan(cfg.dim, cfg.mask_bits, cfg.seed, models);
-
-    // RNG derivation is order-dependent (`split` advances the base), so the
-    // per-client streams are drawn serially — that part is cheap. The
-    // expensive part, key generation (two x25519 ladders per client inside
-    // `Client::new`), derives only from the already-split streams, so lane
-    // construction itself runs on the worker pool.
-    let streams: Vec<(Rng, Rng)> = (0..cfg.n)
-        .map(|id| (rng.split(0xC11E27 + id as u64), rng.split(0x5A12E + id as u64)))
-        .collect();
+    let RoundSetup { graph, survives, plan, streams } = derive_round_setup(cfg, models);
     // The per-machine Step-2 mask budget splits the host budget across the
     // sweep workers, so sweep × mask parallelism never exceeds
     // `par::threads()` live threads — the "no thread-per-client" claim

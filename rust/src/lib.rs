@@ -32,3 +32,4 @@ pub mod runtime;
 pub mod shamir;
 pub mod sim;
 pub mod util;
+pub mod wire;

@@ -9,6 +9,8 @@
 //! ccesa round --n 100 --p 0.64 --dim 10000   # one secure-agg round
 //! ccesa fl --config configs/quickstart.json  # config-driven FL run
 //! ccesa kernels                              # kernel-dispatch report (JSON)
+//! ccesa serve --n 1000 --addr 127.0.0.1:7171 # socket round server
+//! ccesa connect --n 1000 --addr ...          # drive n loopback clients
 //! ```
 
 use anyhow::{anyhow, bail, Result};
@@ -28,13 +30,15 @@ use ccesa::sim::CodecSpec;
 use ccesa::util::cli::Args;
 use ccesa::util::json::Json;
 use ccesa::util::rng::Rng;
+use std::time::Duration;
 
 fn main() -> Result<()> {
     ccesa::util::logging::init();
     let args = Args::new(
         "ccesa",
         "Communication-Computation Efficient Secure Aggregation (Choi et al. 2020)\n\
-         subcommands: analyze {pstar|costs|turbo|montecarlo} | round | fl | kernels",
+         subcommands: analyze {pstar|costs|turbo|montecarlo} | round | fl | kernels \
+         | serve | connect",
     )
     .flag("n", Some("100"), "number of clients")
     .flag("p", None, "ER connection probability (default: p*(n, qtotal))")
@@ -45,7 +49,10 @@ fn main() -> Result<()> {
     .flag("seed", Some("1"), "seed")
     .flag("config", None, "JSON config path for `fl`")
     .flag("codec", Some("dense"), "payload codec: dense | topk:<frac> | randk:<frac>")
+    .flag("addr", Some("127.0.0.1:7171"), "listen/connect address for serve|connect")
+    .flag("timeout-s", Some("120"), "wire round wall-clock budget in seconds")
     .switch("sa", "use the complete graph (Bonawitz et al. SA)")
+    .switch("check", "serve: verify the wire round against the in-process engine")
     .parse();
 
     let sub: Vec<&str> = args.positional().iter().map(|s| s.as_str()).collect();
@@ -60,6 +67,8 @@ fn main() -> Result<()> {
             println!("{}", ccesa::kernels::report_json());
             Ok(())
         }
+        Some("serve") => serve_cmd(&args),
+        Some("connect") => connect_cmd(&args),
         other => {
             if let Some(o) = other {
                 eprintln!("unknown subcommand {o:?}\n");
@@ -187,6 +196,89 @@ fn round(args: &Args) -> Result<()> {
             + r.times.total_ms("server_step2")
             + r.times.total_ms("server_finalize"),
     );
+    Ok(())
+}
+
+/// Shared setup for `serve`/`connect`: both endpoints derive the identical
+/// round config, synthetic models and round tag from the same flags, so
+/// the wire carries the protocol rather than the training pipeline.
+///
+/// `--check` is only meaningful for rng-free dropout (the default
+/// `--qtotal 0.0`, where wire, event loop and engine are promised
+/// bit-identical); under `Iid` dropout the engine draws lazily while wire
+/// clients pre-draw, like the event loop.
+fn wire_round_config(args: &Args) -> Result<(ProtocolConfig, Vec<Vec<u64>>, u32)> {
+    let n: usize = args.req("n");
+    let dim: usize = args.req("dim");
+    let qt: f64 = args.req("qtotal");
+    let p = args.get::<f64>("p").unwrap_or_else(|| p_star(n, qt));
+    let t = args.get::<usize>("t").unwrap_or_else(|| t_rule(n, p));
+    let seed: u64 = args.req("seed");
+    let codec = parse_codec(&args.req::<String>("codec"))?.resolve(dim);
+    let mut rng = Rng::new(seed ^ 0x5EED_CAFE);
+    let models: Vec<Vec<u64>> = (0..n)
+        .map(|_| (0..dim).map(|_| rng.next_u64() & 0xFFFF_FFFF).collect())
+        .collect();
+    let cfg = ProtocolConfig::builder()
+        .clients(n)
+        .threshold(t)
+        .model_dim(dim)
+        .topology(Topology::ErdosRenyi { p })
+        .dropout(if qt > 0.0 { DropoutModel::iid_from_total(qt) } else { DropoutModel::None })
+        .codec(codec)
+        .seed(seed)
+        .build()?;
+    let round = ccesa::net::socket::round_tag(seed);
+    Ok((cfg, models, round))
+}
+
+fn serve_cmd(args: &Args) -> Result<()> {
+    let (cfg, models, round) = wire_round_config(args)?;
+    let timeout = Duration::from_secs(args.req::<u64>("timeout-s"));
+    let addr: String = args.req("addr");
+    let listener = std::net::TcpListener::bind(&addr)?;
+    println!("serving round {round:#010x} for n={} clients on {}", cfg.n, listener.local_addr()?);
+    let setup = ccesa::coordinator::derive_round_setup(&cfg, &models);
+    let r = ccesa::net::socket::serve(&listener, &cfg, setup.plan, setup.graph, round, timeout)?;
+    println!(
+        "reliable={} |V1..V4|={},{},{},{} framed up/down = {}/{} bytes (logical {}/{})",
+        r.reliable,
+        r.sets.v1.len(),
+        r.sets.v2.len(),
+        r.sets.v3.len(),
+        r.sets.v4.len(),
+        r.stats.framed_up,
+        r.stats.framed_down,
+        r.stats.bytes_up.iter().sum::<u64>(),
+        r.stats.bytes_down.iter().sum::<u64>(),
+    );
+    if args.get_bool("check") {
+        let sync = run_round(&cfg, &models)?;
+        if r.reliable != sync.reliable {
+            bail!("check: reliable {} over the wire vs {} in-process", r.reliable, sync.reliable);
+        }
+        if r.sets != sync.sets {
+            bail!("check: survivor sets diverge: wire {:?} vs engine {:?}", r.sets, sync.sets);
+        }
+        if r.sum != sync.sum {
+            bail!("check: aggregate sums diverge between wire and engine");
+        }
+        if !r.stats.logical_eq(&sync.stats) {
+            bail!("check: logical NetStats diverge: wire {:?} vs engine {:?}", r.stats, sync.stats);
+        }
+        println!("check: wire round is bit-identical to the in-process engine");
+    }
+    Ok(())
+}
+
+fn connect_cmd(args: &Args) -> Result<()> {
+    let (cfg, models, round) = wire_round_config(args)?;
+    let timeout = Duration::from_secs(args.req::<u64>("timeout-s"));
+    let addr: String = args.req("addr");
+    let addr: std::net::SocketAddr =
+        addr.parse().map_err(|e| anyhow!("bad --addr {addr:?}: {e}"))?;
+    ccesa::net::socket::drive_clients(addr, &cfg, &models, round, timeout)?;
+    println!("drove {} clients through round {round:#010x} against {addr}", cfg.n);
     Ok(())
 }
 

@@ -6,6 +6,8 @@
 //! message declares its wire size and is charged to (step, direction,
 //! client). The Table-1 scaling bench then fits log–log slopes against n.
 
+pub mod socket;
+
 /// Direction of a message on the star topology.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Dir {
@@ -34,6 +36,14 @@ pub struct NetStats {
     /// per-client totals across all steps (index = client id)
     pub client_up: Vec<u64>,
     pub client_down: Vec<u64>,
+    /// Bytes observed at the socket, client → server: frame payloads plus
+    /// the length prefix, header and explicit counts the wire codec adds
+    /// (see `crate::wire`). Zero for the in-process executors — only
+    /// `net::socket` measures a real wire, so differential comparisons
+    /// against the engine go through [`NetStats::logical_eq`].
+    pub framed_up: u64,
+    /// Bytes observed at the socket, server → client.
+    pub framed_down: u64,
 }
 
 impl NetStats {
@@ -45,20 +55,42 @@ impl NetStats {
         }
     }
 
-    /// Charge one message.
+    /// Charge one message. Out-of-range inputs are caller bugs (a socket
+    /// front end must validate wire-supplied client ids *before* charging),
+    /// so both asserts name exactly what went wrong instead of leaving an
+    /// anonymous index panic in the accounting layer.
     pub fn record(&mut self, step: usize, dir: Dir, client: usize, bytes: usize) {
-        assert!(step < 4, "protocol has steps 0..=3");
+        assert!(step < 4, "NetStats::record: step {step} out of range (protocol has steps 0..=3)");
         match dir {
             Dir::Up => {
+                assert!(
+                    client < self.client_up.len(),
+                    "NetStats::record: client id {client} out of range (n = {})",
+                    self.client_up.len()
+                );
                 self.bytes_up[step] += bytes as u64;
                 self.msgs_up[step] += 1;
                 self.client_up[client] += bytes as u64;
             }
             Dir::Down => {
+                assert!(
+                    client < self.client_down.len(),
+                    "NetStats::record: client id {client} out of range (n = {})",
+                    self.client_down.len()
+                );
                 self.bytes_down[step] += bytes as u64;
                 self.msgs_down[step] += 1;
                 self.client_down[client] += bytes as u64;
             }
+        }
+    }
+
+    /// Count raw socket bytes (whole frames as read/written, including
+    /// framing overhead). Only the socket transport calls this.
+    pub fn record_framed(&mut self, dir: Dir, bytes: usize) {
+        match dir {
+            Dir::Up => self.framed_up += bytes as u64,
+            Dir::Down => self.framed_down += bytes as u64,
         }
     }
 
@@ -109,14 +141,38 @@ impl NetStats {
             self.msgs_down[s] += other.msgs_down[s];
         }
         self.masked_payload_bytes += other.masked_payload_bytes;
+        self.framed_up += other.framed_up;
+        self.framed_down += other.framed_down;
+        // the two per-client vectors are independent dimensions: each one
+        // resizes under its own length check (resizing client_down under a
+        // client_up guard dropped bytes whenever the lengths diverged)
         if self.client_up.len() < other.client_up.len() {
             self.client_up.resize(other.client_up.len(), 0);
+        }
+        if self.client_down.len() < other.client_down.len() {
             self.client_down.resize(other.client_down.len(), 0);
         }
-        for (i, (u, d)) in other.client_up.iter().zip(&other.client_down).enumerate() {
+        for (i, u) in other.client_up.iter().enumerate() {
             self.client_up[i] += u;
+        }
+        for (i, d) in other.client_down.iter().enumerate() {
             self.client_down[i] += d;
         }
+    }
+
+    /// Equality over the *logical* (Appendix-C) accounting only, ignoring
+    /// the framed-byte dimension. The differential harness compares
+    /// executors with this: the socket transport must charge bit-identical
+    /// logical traffic to the in-process engine, while its framed counters
+    /// are legitimately nonzero only on the wire.
+    pub fn logical_eq(&self, other: &NetStats) -> bool {
+        self.bytes_up == other.bytes_up
+            && self.bytes_down == other.bytes_down
+            && self.msgs_up == other.msgs_up
+            && self.msgs_down == other.msgs_down
+            && self.masked_payload_bytes == other.masked_payload_bytes
+            && self.client_up == other.client_up
+            && self.client_down == other.client_down
     }
 }
 
@@ -159,9 +215,57 @@ mod tests {
     }
 
     #[test]
+    fn merge_handles_uneven_client_vectors() {
+        // regression: merge used to resize client_down only when client_up
+        // was short, silently dropping per-client bytes past the zip end
+        let mut a = NetStats::new(1);
+        a.record(0, Dir::Down, 0, 3);
+        let mut b = NetStats::new(4);
+        b.record(0, Dir::Up, 3, 10);
+        b.record(0, Dir::Down, 2, 20);
+        a.merge(&b);
+        assert_eq!(a.client_up, vec![0, 0, 0, 10]);
+        assert_eq!(a.client_down, vec![3, 0, 20, 0]);
+        // and the opposite orientation: self longer than other
+        let mut c = NetStats::new(4);
+        c.record(1, Dir::Up, 3, 7);
+        let mut d = NetStats::new(1);
+        d.record(1, Dir::Down, 0, 9);
+        c.merge(&d);
+        assert_eq!(c.client_up, vec![0, 0, 0, 7]);
+        assert_eq!(c.client_down, vec![9, 0, 0, 0]);
+    }
+
+    #[test]
+    fn framed_bytes_merge_but_do_not_affect_logical_eq() {
+        let mut a = NetStats::new(2);
+        a.record(2, Dir::Up, 0, 40);
+        let mut b = a.clone();
+        b.record_framed(Dir::Up, 46);
+        b.record_framed(Dir::Down, 10);
+        assert_ne!(a, b);
+        assert!(a.logical_eq(&b), "framed counters must not break logical equality");
+        b.record(2, Dir::Up, 1, 1);
+        assert!(!a.logical_eq(&b), "logical_eq still sees real traffic differences");
+
+        let mut c = NetStats::new(2);
+        c.record_framed(Dir::Up, 4);
+        c.merge(&b);
+        assert_eq!(c.framed_up, 50);
+        assert_eq!(c.framed_down, 10);
+    }
+
+    #[test]
     #[should_panic]
     fn rejects_invalid_step() {
         let mut s = NetStats::new(1);
         s.record(4, Dir::Up, 0, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "client id 5 out of range (n = 2)")]
+    fn rejects_out_of_range_client_with_a_named_message() {
+        let mut s = NetStats::new(2);
+        s.record(0, Dir::Up, 5, 1);
     }
 }

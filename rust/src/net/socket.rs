@@ -1,0 +1,673 @@
+//! Loopback-scale TCP transport for one aggregation round.
+//!
+//! `protocol::engine` and the `coordinator` event loop move [`Up`]/[`Down`]
+//! values through memory; this module moves the same messages as
+//! length-prefixed frames (`crate::wire`) over real sockets:
+//!
+//! * [`serve`] — the server side. Accepts `cfg.n` connections on a
+//!   listener, then runs the four protocol phases as the event loop does:
+//!   broadcast the phase's `Down` frames, poll every connection
+//!   (nonblocking read/write sweeps) until each awaited client answered or
+//!   died, decode and validate the `Up` frames, and hand them to
+//!   [`Server`] in client-id order. Malformed frames close the offending
+//!   connection; replayed or stale frames are discarded by phase — both
+//!   without disturbing the round for honest clients.
+//! * [`drive_clients`] — the client side: n poll-able [`ClientSm`]s behind
+//!   n blocking loopback sockets, stepped in parallel sweeps exactly like
+//!   the event loop's lanes.
+//! * [`run_round_wire`] — both halves wired together on an ephemeral
+//!   loopback port; the shape the differential harness runs as the `wire`
+//!   executor.
+//!
+//! Accounting: logical (Appendix-C) byte charges replicate the event loop
+//! exactly — `Start`/`Finish` and `Dropped`/`Failed` cost nothing — so a
+//! round over sockets is `NetStats::logical_eq` to the in-process engine.
+//! On top of that, `framed_up`/`framed_down` count raw bytes as read from
+//! and written to the sockets, framing overhead and duplicates included.
+
+use crate::codec::IndexPlan;
+use crate::coordinator::{derive_round_setup, event_loop_workers, CoordRoundResult};
+use crate::graph::Graph;
+use crate::net::{Dir, NetStats};
+use crate::protocol::client::ClientSm;
+use crate::protocol::messages::*;
+use crate::protocol::server::{RoundOutput, Server};
+use crate::protocol::{ClientId, ProtocolConfig};
+use crate::wire;
+use anyhow::{bail, Context, Result};
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Default wall-clock budget for a whole round (accept + 4 phases).
+pub const DEFAULT_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// Sleep between poll sweeps when nothing moved.
+const POLL_PAUSE: Duration = Duration::from_micros(200);
+
+/// The round tag stamped into every frame header, derived from the config
+/// seed so both endpoints agree without negotiation.
+pub fn round_tag(seed: u64) -> u32 {
+    (seed ^ (seed >> 32)) as u32
+}
+
+/// One accepted connection: nonblocking stream plus reassembly and
+/// write-behind buffers, and the per-phase conversation state.
+struct Conn {
+    stream: TcpStream,
+    rx: wire::FrameBuffer,
+    tx: Vec<u8>,
+    tx_pos: usize,
+    /// Claimed client id — set by the first valid phase-0 frame.
+    id: Option<ClientId>,
+    open: bool,
+    /// The server delivered this phase's `Down` and expects exactly one
+    /// `Up` back (the [`ClientSm::step`] contract).
+    awaiting: bool,
+    /// The phase answer, parked until the phase barrier harvests it.
+    slot: Option<Up>,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Conn {
+        Conn {
+            stream,
+            rx: wire::FrameBuffer::new(),
+            tx: Vec::new(),
+            tx_pos: 0,
+            id: None,
+            open: true,
+            awaiting: false,
+            slot: None,
+        }
+    }
+
+    fn queue(&mut self, frame: &[u8]) {
+        if self.open {
+            self.tx.extend_from_slice(frame);
+        }
+    }
+
+    /// Write as much buffered tx as the socket accepts right now; returns
+    /// bytes written. Never blocks.
+    fn flush(&mut self) -> usize {
+        let mut written = 0;
+        while self.open && self.tx_pos < self.tx.len() {
+            match self.stream.write(&self.tx[self.tx_pos..]) {
+                Ok(0) => self.close(),
+                Ok(k) => {
+                    self.tx_pos += k;
+                    written += k;
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(e) => {
+                    log::debug!("write to client {:?} failed: {e}", self.id);
+                    self.close();
+                }
+            }
+        }
+        if self.tx_pos == self.tx.len() {
+            self.tx.clear();
+            self.tx_pos = 0;
+        }
+        written
+    }
+
+    /// Drain the socket into the frame buffer; returns bytes read. Never
+    /// blocks. EOF or a hard error closes the connection — frames already
+    /// buffered are still decoded afterwards.
+    fn pump(&mut self) -> usize {
+        let mut total = 0;
+        let mut tmp = [0u8; 16 * 1024];
+        while self.open {
+            match self.stream.read(&mut tmp) {
+                Ok(0) => {
+                    self.open = false;
+                    self.awaiting = false;
+                    break;
+                }
+                Ok(k) => {
+                    self.rx.extend(&tmp[..k]);
+                    total += k;
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(e) => {
+                    log::debug!("read from client {:?} failed: {e}", self.id);
+                    self.close();
+                }
+            }
+        }
+        total
+    }
+
+    fn close(&mut self) {
+        self.open = false;
+        self.awaiting = false;
+        let _ = self.stream.shutdown(std::net::Shutdown::Both);
+    }
+}
+
+/// Decode buffered frames on one connection during the given phase.
+///
+/// A connection parks at most one `Up` per phase (`slot`); once it is
+/// filled, further buffered frames wait — if they belong to this phase they
+/// are duplicates and the next phase's sweep discards them by the
+/// `Up::phase` check. Frame-level garbage closes the connection; a
+/// mismatched round tag, a stale/replayed phase, or a spoofed sender id
+/// only discards the frame, so one bad message never aborts the round for
+/// honest clients.
+fn drain_frames(
+    c: &mut Conn,
+    ci: usize,
+    claimed: &mut [Option<usize>],
+    plan: &Arc<IndexPlan>,
+    round: u32,
+    phase: u8,
+) {
+    while c.slot.is_none() {
+        let body = match c.rx.next_frame() {
+            Ok(Some(b)) => b,
+            Ok(None) => return,
+            Err(e) => {
+                log::debug!("conn {ci}: bad frame ({e}); closing");
+                c.close();
+                return;
+            }
+        };
+        let (r, up) = match wire::decode_up(&body, plan) {
+            Ok(v) => v,
+            Err(e) => {
+                log::debug!("conn {ci}: undecodable message ({e}); closing");
+                c.close();
+                return;
+            }
+        };
+        if r != round {
+            log::debug!("conn {ci}: frame tagged round {r}, serving {round}; discarded");
+            continue;
+        }
+        if up.phase() != phase {
+            log::debug!(
+                "conn {ci}: discarding phase-{} message during phase {phase} (replay or stale)",
+                up.phase()
+            );
+            continue;
+        }
+        let from = up.from();
+        match c.id {
+            None => {
+                // the first valid frame claims the connection's client id
+                if from >= claimed.len() {
+                    log::debug!("conn {ci}: claims out-of-range id {from}; closing");
+                    c.close();
+                    return;
+                }
+                if claimed[from].is_some() {
+                    log::debug!("conn {ci}: id {from} already claimed; closing");
+                    c.close();
+                    return;
+                }
+                claimed[from] = Some(ci);
+                c.id = Some(from);
+            }
+            Some(id) if id != from => {
+                log::debug!("conn {ci} (client {id}): spoofed sender {from}; discarded");
+                continue;
+            }
+            Some(_) => {}
+        }
+        c.slot = Some(up);
+        c.awaiting = false;
+    }
+}
+
+/// The server side of one round: connections, the id → connection claim
+/// table, and the accumulating byte accounting.
+struct Exchange {
+    conns: Vec<Conn>,
+    claimed: Vec<Option<usize>>,
+    stats: NetStats,
+    plan: Arc<IndexPlan>,
+    round: u32,
+    deadline: Instant,
+}
+
+impl Exchange {
+    /// Encode one `Down` and queue it for the connection claiming `id`,
+    /// marking it awaited. The caller charges logical stats separately
+    /// (unconditionally, for parity with the in-process executors).
+    fn send(&mut self, id: ClientId, down: &Down) {
+        self.send_frame(id, &wire::encode_down(self.round, down));
+    }
+
+    fn send_frame(&mut self, id: ClientId, frame: &[u8]) {
+        match self.claimed.get(id).copied().flatten() {
+            Some(ci) if self.conns[ci].open => {
+                self.conns[ci].queue(frame);
+                self.conns[ci].awaiting = true;
+            }
+            _ => log::debug!("no live connection claims client {id}; down frame dropped"),
+        }
+    }
+
+    /// One phase barrier: flush pending writes, pump awaited connections,
+    /// decode their answers, and return once no open connection is still
+    /// awaited. Yields the parked `Up`s sorted by sender id — the same
+    /// order the event loop drains its lanes in.
+    fn collect(&mut self, phase: u8) -> Result<Vec<Up>> {
+        let deadline = self.deadline;
+        loop {
+            let mut outstanding = 0;
+            let Exchange { conns, claimed, stats, plan, round, .. } = self;
+            for (ci, c) in conns.iter_mut().enumerate() {
+                let written = c.flush();
+                if written > 0 {
+                    stats.record_framed(Dir::Down, written);
+                }
+                if c.open && c.awaiting {
+                    let read = c.pump();
+                    if read > 0 {
+                        stats.record_framed(Dir::Up, read);
+                    }
+                    drain_frames(c, ci, claimed, plan, *round, phase);
+                }
+                if c.open && c.awaiting {
+                    outstanding += 1;
+                }
+            }
+            if outstanding == 0 {
+                break;
+            }
+            if Instant::now() >= deadline {
+                bail!("phase {phase}: timed out with {outstanding} clients still outstanding");
+            }
+            std::thread::sleep(POLL_PAUSE);
+        }
+        let mut ups: Vec<Up> = self.conns.iter_mut().filter_map(|c| c.slot.take()).collect();
+        ups.sort_by_key(|u| u.from());
+        Ok(ups)
+    }
+}
+
+/// Serve one aggregation round to `cfg.n` socket clients.
+///
+/// `plan` and `graph` must come from the round's [`derive_round_setup`] so
+/// the server validates incoming `Masked` frames against the same index
+/// plan the clients encode with. Aborts (|V_k| < t) propagate as `Err`
+/// after the connections are dropped, which the honest driver observes as
+/// mid-round EOF — both sides fail, matching the engine's abort shape.
+pub fn serve(
+    listener: &TcpListener,
+    cfg: &ProtocolConfig,
+    plan: Arc<IndexPlan>,
+    graph: Graph,
+    round: u32,
+    timeout: Duration,
+) -> Result<CoordRoundResult> {
+    let deadline = Instant::now() + timeout;
+    listener.set_nonblocking(true).context("set_nonblocking on listener")?;
+    let mut conns = Vec::with_capacity(cfg.n);
+    while conns.len() < cfg.n {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let _ = stream.set_nodelay(true);
+                stream.set_nonblocking(true).context("set_nonblocking on accepted stream")?;
+                conns.push(Conn::new(stream));
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    bail!("accepted {} of {} connections before timeout", conns.len(), cfg.n);
+                }
+                std::thread::sleep(POLL_PAUSE);
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e).context("accept"),
+        }
+    }
+
+    let mut server = Server::new(cfg.n, cfg.t, cfg.mask_bits, plan.clone(), graph);
+    let mut ex = Exchange {
+        conns,
+        claimed: vec![None; cfg.n],
+        stats: NetStats::new(cfg.n),
+        plan,
+        round,
+        deadline,
+    };
+
+    // ---- phase 0: advertise keys (Start itself carries no logical bytes)
+    let start = wire::encode_down(round, &Down::Start);
+    for c in ex.conns.iter_mut() {
+        c.queue(&start);
+        c.awaiting = true;
+    }
+    let mut advs = Vec::new();
+    for up in ex.collect(0)? {
+        match up {
+            Up::Adv(a) => {
+                ex.stats.record(0, Dir::Up, a.id, a.size_bytes());
+                advs.push(a);
+            }
+            Up::Dropped(id, step) => log::trace!("client {id} dropped at step {step}"),
+            Up::Failed(id, step, e) => log::debug!("client {id} failed step {step}: {e}"),
+            other => bail!("protocol order violation in phase 0: {other:?}"),
+        }
+    }
+    let bundles = server.step0_route_keys(advs)?;
+    for (id, b) in bundles {
+        ex.stats.record(0, Dir::Down, id, b.size_bytes());
+        ex.send(id, &Down::Bundle(b));
+    }
+
+    // ---- phase 1: share keys
+    let mut uploads = Vec::new();
+    for up in ex.collect(1)? {
+        match up {
+            Up::Shares(u) => {
+                ex.stats.record(1, Dir::Up, u.from, u.size_bytes());
+                uploads.push(u);
+            }
+            Up::Dropped(id, step) => log::trace!("client {id} dropped at step {step}"),
+            Up::Failed(id, step, e) => log::debug!("client {id} withdrew step {step}: {e}"),
+            other => bail!("protocol order violation in phase 1: {other:?}"),
+        }
+    }
+    let deliveries = server.step1_route_shares(uploads)?;
+    for (id, d) in deliveries {
+        ex.stats.record(1, Dir::Down, id, d.size_bytes());
+        ex.send(id, &Down::Delivery(d));
+    }
+
+    // ---- phase 2: masked inputs
+    let mut masked = Vec::new();
+    for up in ex.collect(2)? {
+        match up {
+            Up::Masked(m) => {
+                ex.stats.record(2, Dir::Up, m.id, m.size_bytes());
+                ex.stats.record_masked_payload(m.payload_bytes());
+                masked.push(m);
+            }
+            Up::Dropped(id, step) => log::trace!("client {id} dropped at step {step}"),
+            Up::Failed(id, step, e) => log::debug!("client {id} failed step {step}: {e}"),
+            other => bail!("protocol order violation in phase 2: {other:?}"),
+        }
+    }
+    let announce = Arc::new(server.step2_collect_masked(masked)?);
+    // one broadcast: encode once, queue the same frame per V3 member
+    let frame = wire::encode_down(round, &Down::Announce(announce.clone()));
+    for &id in &announce.v3 {
+        ex.stats.record(2, Dir::Down, id, announce.size_bytes());
+        ex.send_frame(id, &frame);
+    }
+
+    // ---- phase 3: unmask shares
+    let mut responses = Vec::new();
+    for up in ex.collect(3)? {
+        match up {
+            Up::Unmask(u) => {
+                ex.stats.record(3, Dir::Up, u.from, u.size_bytes());
+                responses.push(u);
+            }
+            Up::Dropped(id, step) => log::trace!("client {id} dropped at step {step}"),
+            Up::Failed(id, step, e) => log::debug!("client {id} failed step {step}: {e}"),
+            other => bail!("protocol order violation in phase 3: {other:?}"),
+        }
+    }
+    let RoundOutput { sum, reliable, sets } = server.finalize(responses)?;
+
+    // Round over: tell anyone still connected, then flush best-effort.
+    // V3 clients close after their Unmask, so this usually reaches nobody.
+    let fin = wire::encode_down(round, &Down::Finish);
+    for c in ex.conns.iter_mut() {
+        if c.open {
+            c.queue(&fin);
+        }
+    }
+    let grace = Instant::now() + Duration::from_millis(250);
+    loop {
+        let mut pending = false;
+        for c in ex.conns.iter_mut() {
+            let written = c.flush();
+            if written > 0 {
+                ex.stats.record_framed(Dir::Down, written);
+            }
+            pending |= c.open && c.tx_pos < c.tx.len();
+        }
+        if !pending || Instant::now() >= grace {
+            break;
+        }
+        std::thread::sleep(POLL_PAUSE);
+    }
+
+    Ok(CoordRoundResult { sum, reliable, sets, stats: ex.stats })
+}
+
+/// A client lane on the driver side — the event loop's lane shape behind a
+/// socket: single-entry mailboxes around a poll-able state machine.
+struct DriverLane<'m> {
+    sm: ClientSm<'m>,
+    inbox: Option<Down>,
+    outbox: Option<Up>,
+}
+
+/// Drive `cfg.n` honest clients against a round server at `addr`.
+///
+/// Clients are built from the same [`derive_round_setup`] recipe as every
+/// other executor and stepped in parallel sweeps over a worker pool; the
+/// socket side is deliberately simple — blocking reads in id order, one
+/// frame per live connection per sweep — because the server's phase
+/// barrier already serializes the round globally.
+pub fn drive_clients(
+    addr: SocketAddr,
+    cfg: &ProtocolConfig,
+    models: &[Vec<u64>],
+    round: u32,
+    timeout: Duration,
+) -> Result<()> {
+    assert_eq!(models.len(), cfg.n);
+    let deadline = Instant::now() + timeout;
+    let setup = derive_round_setup(cfg, models);
+    let workers = event_loop_workers(cfg.n);
+    let mask_workers = (crate::par::threads() / workers).max(1);
+    let mut lanes: Vec<DriverLane<'_>> = crate::par::map_indexed(cfg.n, workers, |id| {
+        let (mut key_rng, share_rng) = setup.streams[id].clone();
+        let mut sm = ClientSm::new(
+            id,
+            cfg.t,
+            cfg.mask_bits,
+            setup.graph.neighbors(id).to_vec(),
+            &mut key_rng,
+            share_rng,
+            &models[id],
+            setup.plan.clone(),
+            setup.survives[id],
+        );
+        sm.set_mask_workers(mask_workers);
+        // unlike the in-process lanes, Down::Start arrives over the wire
+        DriverLane { sm, inbox: None, outbox: None }
+    });
+
+    let mut conns: Vec<Option<TcpStream>> = Vec::with_capacity(cfg.n);
+    for id in 0..cfg.n {
+        let stream = loop {
+            match TcpStream::connect(addr) {
+                Ok(s) => break s,
+                Err(e) => {
+                    if Instant::now() >= deadline {
+                        bail!("client {id}: connect to {addr} failed: {e}");
+                    }
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+        };
+        let _ = stream.set_nodelay(true);
+        stream.set_read_timeout(Some(timeout)).context("set_read_timeout")?;
+        conns.push(Some(stream));
+    }
+
+    let mut mid_round_close = false;
+    loop {
+        // read exactly one frame per live connection (blocking, id order)
+        let mut any_open = false;
+        for id in 0..cfg.n {
+            let Some(stream) = conns[id].as_mut() else { continue };
+            any_open = true;
+            match wire::read_frame(stream) {
+                Ok(Some(body)) => {
+                    let (r, down) = wire::decode_down(&body)
+                        .with_context(|| format!("client {id}: bad frame from server"))?;
+                    if r != round {
+                        bail!("client {id}: server frame tagged round {r}, expected {round}");
+                    }
+                    if matches!(down, Down::Finish) {
+                        let _ = lanes[id].sm.step(Down::Finish);
+                        conns[id] = None;
+                    } else {
+                        lanes[id].inbox = Some(down);
+                    }
+                }
+                Ok(None) => {
+                    // orderly close before Finish: the server aborted
+                    if !lanes[id].sm.done() {
+                        mid_round_close = true;
+                    }
+                    conns[id] = None;
+                }
+                Err(e) => {
+                    if !lanes[id].sm.done() {
+                        mid_round_close = true;
+                    }
+                    log::debug!("client {id}: read error: {e}");
+                    conns[id] = None;
+                }
+            }
+        }
+        if !any_open {
+            break;
+        }
+        if Instant::now() >= deadline {
+            bail!("client driver timed out with connections still open");
+        }
+
+        // one parallel sweep: step every lane holding a phase input
+        crate::par::for_each_slice(&mut lanes, workers, |_, chunk| {
+            for lane in chunk.iter_mut() {
+                if let Some(down) = lane.inbox.take() {
+                    lane.outbox = Some(lane.sm.step(down));
+                }
+            }
+        });
+
+        // write answers in id order; a terminal answer ends our side
+        for id in 0..cfg.n {
+            let Some(up) = lanes[id].outbox.take() else { continue };
+            let Some(stream) = conns[id].as_mut() else { continue };
+            stream
+                .write_all(&wire::encode_up(round, &up))
+                .with_context(|| format!("client {id}: write failed"))?;
+            if lanes[id].sm.done() {
+                // Unmask / Dropped / Failed was this client's last word;
+                // close so the server sees EOF once it pumped the frame
+                conns[id] = None;
+            }
+        }
+    }
+    if mid_round_close {
+        bail!("server closed a connection mid-round (round aborted)");
+    }
+    Ok(())
+}
+
+/// One full round over real loopback sockets: [`serve`] on a spawned
+/// thread, [`drive_clients`] on the caller's, joined at the end. A server
+/// error (including protocol aborts) takes precedence over the driver's.
+pub fn run_round_wire(cfg: &ProtocolConfig, models: &[Vec<u64>]) -> Result<CoordRoundResult> {
+    run_round_wire_with(cfg, models, DEFAULT_TIMEOUT)
+}
+
+/// [`run_round_wire`] with an explicit wall-clock budget.
+pub fn run_round_wire_with(
+    cfg: &ProtocolConfig,
+    models: &[Vec<u64>],
+    timeout: Duration,
+) -> Result<CoordRoundResult> {
+    let listener = TcpListener::bind(("127.0.0.1", 0)).context("bind loopback")?;
+    let addr = listener.local_addr().context("local_addr")?;
+    let round = round_tag(cfg.seed);
+    let setup = derive_round_setup(cfg, models);
+    let plan = setup.plan.clone();
+    let graph = setup.graph.clone();
+    drop(setup);
+    let srv_cfg = cfg.clone();
+    let server =
+        std::thread::spawn(move || serve(&listener, &srv_cfg, plan, graph, round, timeout));
+    let drove = drive_clients(addr, cfg, models, round, timeout);
+    let served = server.join().map_err(|_| anyhow::anyhow!("wire server thread panicked"))?;
+    match (served, drove) {
+        (Ok(result), Ok(())) => Ok(result),
+        (Err(e), _) => Err(e.context("wire server")),
+        (Ok(_), Err(e)) => Err(e.context("wire client driver")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::dropout::DropoutModel;
+    use crate::protocol::{engine, Topology};
+    use crate::util::rng::Rng;
+
+    fn models(n: usize, dim: usize, seed: u64) -> Vec<Vec<u64>> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| (0..dim).map(|_| rng.next_u64() & 0xFFFF_FFFF).collect())
+            .collect()
+    }
+
+    #[test]
+    fn round_tag_is_deterministic_in_the_seed() {
+        assert_eq!(round_tag(41), round_tag(41));
+        assert_eq!(round_tag(0), 0);
+        assert_ne!(round_tag(41), round_tag(42));
+        // high seed bits reach the tag
+        assert_ne!(round_tag(1 << 40), round_tag(1 << 41));
+    }
+
+    #[test]
+    fn tiny_round_over_loopback_matches_engine() {
+        let n = 6;
+        let dim = 8;
+        let cfg = ProtocolConfig::for_test(n, 3, dim, Topology::Complete, 99);
+        let m = models(n, dim, 9);
+        let wired = run_round_wire(&cfg, &m).unwrap();
+        let sync = engine::run_round(&cfg, &m).unwrap();
+        assert_eq!(wired.reliable, sync.reliable);
+        assert_eq!(wired.sets, sync.sets);
+        assert_eq!(wired.sum, sync.sum);
+        assert!(wired.stats.logical_eq(&sync.stats), "wire logical stats differ from engine");
+        let logical_up: u64 = sync.stats.bytes_up.iter().sum();
+        let logical_down: u64 = sync.stats.bytes_down.iter().sum();
+        assert!(wired.stats.framed_up > logical_up, "framing overhead must show up");
+        assert!(wired.stats.framed_down > logical_down);
+    }
+
+    #[test]
+    fn aborted_round_errors_on_both_sides_of_the_wire() {
+        // every client drops at step 0 → |V1| = 0 < t: the server aborts,
+        // drops the sockets, and the whole wire round reports Err — the
+        // same observable shape as the engine and the event loop
+        let n = 5;
+        let cfg = ProtocolConfig {
+            dropout: DropoutModel::Targeted {
+                per_step: [(0..n).collect(), vec![], vec![], vec![]],
+            },
+            ..ProtocolConfig::for_test(n, 3, 4, Topology::Complete, 7)
+        };
+        let m = models(n, 4, 7);
+        assert!(run_round_wire(&cfg, &m).is_err());
+        assert!(engine::run_round(&cfg, &m).is_err());
+    }
+}

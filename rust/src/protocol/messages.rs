@@ -171,6 +171,33 @@ pub enum Up {
     Failed(ClientId, u8, String),
 }
 
+impl Up {
+    /// The protocol phase (0–3) this output answers — for `Dropped`/
+    /// `Failed`, the phase the client was lost in. The socket server uses
+    /// this to discard stale or replayed frames that arrive after their
+    /// phase's barrier has passed.
+    pub fn phase(&self) -> u8 {
+        match self {
+            Up::Adv(_) => 0,
+            Up::Shares(_) => 1,
+            Up::Masked(_) => 2,
+            Up::Unmask(_) => 3,
+            Up::Dropped(_, step) | Up::Failed(_, step, _) => *step,
+        }
+    }
+
+    /// The client this message claims to come from.
+    pub fn from(&self) -> ClientId {
+        match self {
+            Up::Adv(a) => a.id,
+            Up::Shares(u) => u.from,
+            Up::Masked(m) => m.id,
+            Up::Unmask(u) => u.from,
+            Up::Dropped(id, _) | Up::Failed(id, _, _) => *id,
+        }
+    }
+}
+
 /// Server → client phase input, consumed by [`super::client::ClientSm`].
 ///
 /// The announce is shared (`Arc`): it is the one broadcast message — every
@@ -217,6 +244,20 @@ mod tests {
         let ann = std::sync::Arc::new(SurvivorAnnounce { v3: vec![] });
         assert_eq!(Down::Announce(ann).phase(), Some(3));
         assert_eq!(Down::Finish.phase(), None);
+    }
+
+    #[test]
+    fn up_phase_and_sender() {
+        let adv = Up::Adv(AdvertiseKeys { id: 4, c_pk: [0; 32], s_pk: [0; 32] });
+        assert_eq!((adv.phase(), adv.from()), (0, 4));
+        let sh = Up::Shares(ShareUpload { from: 2, shares: vec![] });
+        assert_eq!((sh.phase(), sh.from()), (1, 2));
+        let un = Up::Unmask(UnmaskShares { from: 7, shares: vec![] });
+        assert_eq!((un.phase(), un.from()), (3, 7));
+        let d = Up::Dropped(5, 2);
+        assert_eq!((d.phase(), d.from()), (2, 5));
+        let f = Up::Failed(6, 1, "x".into());
+        assert_eq!((f.phase(), f.from()), (1, 6));
     }
 
     #[test]

@@ -122,9 +122,18 @@ impl Server {
         &mut self,
         uploads: Vec<ShareUpload>,
     ) -> Result<Vec<(ClientId, ShareDelivery)>> {
+        let mut batch = std::collections::BTreeSet::new();
         for up in uploads {
             if !SurvivorSets::contains(&self.sets.v1, up.from) {
                 bail!("share upload from client {} not in V1", up.from);
+            }
+            // A replayed upload must not double-count toward |V2| ≥ t or
+            // route its ciphertexts twice. First message wins; duplicates
+            // are dropped without failing the round — wire retries and
+            // duplicated frames are benign, not protocol violations.
+            if SurvivorSets::contains(&self.sets.v2, up.from) || !batch.insert(up.from) {
+                log::debug!("duplicate share upload from client {} ignored", up.from);
+                continue;
             }
             for es in up.shares {
                 if es.from != up.from {
@@ -164,6 +173,14 @@ impl Server {
         for mi in inputs {
             if !SurvivorSets::contains(&self.sets.v2, mi.id) {
                 bail!("masked input from client {} not in V2", mi.id);
+            }
+            // Idempotent dedupe: a replayed masked input must not inflate
+            // |V3| or duplicate its id in the survivor announce (the
+            // `masked` map would silently keep one copy, but v3 would not).
+            // First message wins, across calls too.
+            if self.masked.contains_key(&mi.id) {
+                log::debug!("duplicate masked input from client {} ignored", mi.id);
+                continue;
             }
             if mi.update.values.len() != self.plan.len() || mi.bits != self.mask_bits {
                 bail!(
@@ -227,13 +244,40 @@ impl Server {
     /// outputs are backend-independent (the CI `kernel-matrix` job pins
     /// this).
     pub fn finalize(&mut self, responses: Vec<UnmaskShares>) -> Result<RoundOutput> {
+        let mut batch = std::collections::BTreeSet::new();
         for resp in responses {
             if !SurvivorSets::contains(&self.sets.v3, resp.from) {
                 bail!("unmask response from client {} not in V3", resp.from);
             }
+            // Same first-wins dedupe as steps 1–2: a replayed unmask
+            // response must not double-count toward |V4| ≥ t.
+            if SurvivorSets::contains(&self.sets.v4, resp.from) || !batch.insert(resp.from) {
+                log::debug!("duplicate unmask response from client {} ignored", resp.from);
+                continue;
+            }
             self.sets.v4.push(resp.from);
             for (owner, kind, share) in resp.shares {
-                self.shares.entry((owner, kind)).or_default().push(share);
+                let entry = self.shares.entry((owner, kind)).or_default();
+                // Dedupe by evaluation point: two shares at the same x for
+                // one (owner, kind) reach `shamir::reconstruct_batch` as a
+                // duplicate interpolation point and abort the whole
+                // reconstruction. Honest responders drain in ascending id
+                // order and x = holder id + 1, so arrivals are ascending
+                // and the append fast path is O(1); the linear scan runs
+                // only for out-of-order (or duplicated) points.
+                match entry.last() {
+                    Some(last) if share.x <= last.x => {
+                        if entry.iter().any(|s| s.x == share.x) {
+                            log::debug!(
+                                "duplicate share x={} for owner {owner} ignored",
+                                share.x
+                            );
+                        } else {
+                            entry.push(share);
+                        }
+                    }
+                    _ => entry.push(share),
+                }
             }
         }
         self.sets.v4.sort_unstable();
@@ -472,6 +516,102 @@ mod tests {
             ],
         }];
         assert!(s.finalize(bad).is_err());
+    }
+
+    /// Drive a server through steps 0–2 with n clients, empty share
+    /// uploads and zero masked inputs — the minimal honest transcript the
+    /// duplicate-message regressions replay against.
+    fn primed_server(n: usize, t: usize) -> (Server, Arc<IndexPlan>) {
+        let plan = IndexPlan::identity(1);
+        let mut s = Server::new(n, t, 32, plan.clone(), Graph::complete(n));
+        let advs = (0..n)
+            .map(|id| AdvertiseKeys { id, c_pk: [id as u8; 32], s_pk: [id as u8; 32] })
+            .collect();
+        s.step0_route_keys(advs).unwrap();
+        (s, plan)
+    }
+
+    fn masked_zero(id: ClientId, plan: &Arc<IndexPlan>) -> MaskedInput {
+        MaskedInput {
+            id,
+            update: crate::codec::EncodedUpdate { values: vec![0], plan: plan.clone() },
+            bits: 32,
+        }
+    }
+
+    #[test]
+    fn duplicate_share_uploads_count_once() {
+        let (mut s, _) = primed_server(3, 3);
+        let ct = EncryptedShare { from: 0, to: 1, ciphertext: vec![9; 8] };
+        let up0 = ShareUpload { from: 0, shares: vec![ct] };
+        // client 0's upload arrives twice in one batch (retry / replay):
+        // without dedupe |V2| = 4 ≥ t even though only 3 clients uploaded,
+        // and client 1 would be delivered 0's ciphertext twice
+        let uploads = vec![
+            up0.clone(),
+            up0,
+            ShareUpload { from: 1, shares: vec![] },
+            ShareUpload { from: 2, shares: vec![] },
+        ];
+        let deliveries = s.step1_route_shares(uploads).unwrap();
+        assert_eq!(s.sets().v2, vec![0, 1, 2]);
+        let to_1 = deliveries.iter().find(|(id, _)| *id == 1).unwrap();
+        assert_eq!(to_1.1.shares.len(), 1, "replayed ciphertext routed twice");
+    }
+
+    #[test]
+    fn duplicate_masked_inputs_count_once() {
+        let (mut s, plan) = primed_server(3, 3);
+        s.step1_route_shares((0..3).map(|id| ShareUpload { from: id, shares: vec![] }).collect())
+            .unwrap();
+        let inputs = vec![
+            masked_zero(0, &plan),
+            masked_zero(1, &plan),
+            masked_zero(0, &plan), // replay
+            masked_zero(2, &plan),
+        ];
+        let announce = s.step2_collect_masked(inputs).unwrap();
+        assert_eq!(announce.v3, vec![0, 1, 2], "duplicate id in SurvivorAnnounce");
+        // replay across calls is equally idempotent
+        let announce2 = s.step2_collect_masked(vec![masked_zero(1, &plan)]).unwrap();
+        assert_eq!(announce2.v3, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn replayed_unmask_shares_are_deduped() {
+        // Two servers over the same transcript; one sees every Step-3
+        // message twice plus an in-message duplicate share. Before the
+        // dedupe fixes the replay double-counted |V4| and fed
+        // `reconstruct_batch` duplicate evaluation points (x collision →
+        // the whole round degraded to unreliable).
+        let run = |duplicate: bool| {
+            let (mut s, plan) = primed_server(3, 1);
+            s.step1_route_shares(
+                (0..3).map(|id| ShareUpload { from: id, shares: vec![] }).collect(),
+            )
+            .unwrap();
+            s.step2_collect_masked((0..3).map(|id| masked_zero(id, &plan)).collect()).unwrap();
+            let resp = |from: ClientId| UnmaskShares {
+                from,
+                shares: vec![(from, ShareKind::SelfMask, Share { x: 1, y: vec![0; 16] })],
+            };
+            let mut responses: Vec<UnmaskShares> = (0..3).map(resp).collect();
+            if duplicate {
+                // replay every message, and double one share in-message
+                responses.extend((0..3).map(resp));
+                responses[0]
+                    .shares
+                    .push((0, ShareKind::SelfMask, Share { x: 1, y: vec![0; 16] }));
+            }
+            s.finalize(responses).unwrap()
+        };
+        let clean = run(false);
+        let replayed = run(true);
+        assert!(clean.reliable);
+        assert!(replayed.reliable, "duplicate shares degraded reconstruction");
+        assert_eq!(replayed.sets.v4, vec![0, 1, 2], "|V4| inflated by replay");
+        assert_eq!(clean.sum, replayed.sum);
+        assert_eq!(clean.sets, replayed.sets);
     }
 
     #[test]

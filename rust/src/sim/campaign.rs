@@ -1,6 +1,6 @@
 //! Multi-round campaign runner: drive a compiled [`Scenario`] through any
-//! [`Executor`] (sync engine or worker-pool event loop) and aggregate what
-//! happened.
+//! [`Executor`] (sync engine, worker-pool event loop, or the loopback
+//! socket wire) and aggregate what happened.
 //!
 //! The engine driver additionally scores each round's transcript with the
 //! Definition-2 eavesdropper attack and checks Theorem 1's predicate
@@ -27,11 +27,14 @@ pub enum Executor {
     Engine,
     /// The worker-pool event-loop coordinator (the scaling shape).
     EventLoop,
+    /// The loopback socket transport (`net::socket`) — every message
+    /// crosses a real TCP stream as wire frames.
+    Wire,
 }
 
 impl Executor {
     /// Every executor, in reference-first order.
-    pub const ALL: [Executor; 2] = [Executor::Engine, Executor::EventLoop];
+    pub const ALL: [Executor; 3] = [Executor::Engine, Executor::EventLoop, Executor::Wire];
 
     /// Every executor except the [`Executor::Engine`] reference — the list
     /// the differential harness and equivalence suites iterate, derived
@@ -45,6 +48,7 @@ impl Executor {
         match self {
             Executor::Engine => "engine",
             Executor::EventLoop => "event-loop",
+            Executor::Wire => "wire",
         }
     }
 }
@@ -192,6 +196,7 @@ pub fn run_plan(
             Err(_) => RoundRecord::aborted(plan.round, plan.cfg.n),
         },
         Executor::EventLoop => coord_record(run_round_event_loop(&plan.cfg, models)),
+        Executor::Wire => coord_record(crate::net::socket::run_round_wire(&plan.cfg, models)),
     }
 }
 
@@ -215,8 +220,9 @@ pub fn run_campaign(sc: &Scenario, executor: Executor) -> Result<CampaignReport>
         Executor::Engine if crate::par::threads_for_len(sc.dim) == 1 => crate::par::threads(),
         Executor::Engine => 1,
         // the event loop parallelizes internally across pool workers;
-        // running its rounds concurrently on top would multiply that
-        Executor::EventLoop => 1,
+        // running its rounds concurrently on top would multiply that —
+        // and the wire executor additionally owns real sockets per round
+        Executor::EventLoop | Executor::Wire => 1,
     };
     let records = crate::par::map_indexed(plans.len(), workers, |i| {
         let plan = &plans[i];
@@ -297,16 +303,23 @@ mod tests {
             for (re, rc) in e.records.iter().zip(&c.records) {
                 assert_eq!(re.sum, rc.sum, "{} round {}", alt.name(), re.round);
                 assert_eq!(re.sets, rc.sets, "{} round {}", alt.name(), re.round);
-                assert_eq!(re.stats, rc.stats, "{} round {}", alt.name(), re.round);
+                // framed byte counters are transport-specific; the logical
+                // accounting must match bit-for-bit
+                assert!(
+                    re.stats.logical_eq(&rc.stats),
+                    "{} round {}: logical stats diverge",
+                    alt.name(),
+                    re.round
+                );
             }
         }
     }
 
     #[test]
     fn executor_axis_is_complete_and_named() {
-        assert_eq!(Executor::ALL.len(), 2);
+        assert_eq!(Executor::ALL.len(), 3);
         let names: Vec<&str> = Executor::ALL.iter().map(|e| e.name()).collect();
-        assert_eq!(names, vec!["engine", "event-loop"]);
+        assert_eq!(names, vec!["engine", "event-loop", "wire"]);
         let non_ref: Vec<Executor> = Executor::non_reference().collect();
         assert_eq!(non_ref.len(), Executor::ALL.len() - 1);
         assert!(!non_ref.contains(&Executor::Engine));
@@ -330,7 +343,12 @@ mod tests {
             let c = run_campaign(&sparse, alt).unwrap();
             for (re, rc) in sparse_rep.records.iter().zip(&c.records) {
                 assert_eq!(re.sum, rc.sum, "{} round {}", alt.name(), re.round);
-                assert_eq!(re.stats, rc.stats, "{} round {}", alt.name(), re.round);
+                assert!(
+                    re.stats.logical_eq(&rc.stats),
+                    "{} round {}: logical stats diverge",
+                    alt.name(),
+                    re.round
+                );
             }
         }
     }

@@ -1,0 +1,841 @@
+//! Byte-level wire codec for the round protocol.
+//!
+//! Every [`Up`]/[`Down`] message in `protocol::messages` has an explicit
+//! frame encoding here, so a round can run over a real socket
+//! (`net::socket`) instead of in-process function calls. The format is
+//! deliberately simple and versioned:
+//!
+//! ```text
+//! frame    := len:u32le  body
+//! body     := version:u8  msg_type:u8  round:u32le  payload
+//! ```
+//!
+//! `len` counts the body only (so `HEADER_BYTES ≤ len ≤ MAX_FRAME`);
+//! `version` is [`WIRE_VERSION`] and a peer speaking a different version is
+//! rejected at decode (the error names the byte, which is the whole
+//! negotiation story for v1: both sides are this binary); `round` tags
+//! every frame with the round id so frames from a stale or misconfigured
+//! peer never splice into a live round.
+//!
+//! Decoding malformed bytes must return [`WireError`], never panic: the
+//! decoder reads through a bounds-checked cursor, validates counts against
+//! the remaining bytes before allocating, and rejects trailing garbage.
+//! These properties are pinned by the round-trip, golden-bytes and
+//! malformed-frame fuzz tests at the bottom of this file.
+//!
+//! Note the two byte vocabularies in play: logical `size_bytes()` (the
+//! Appendix-C cost model `NetStats` charges) and the framed bytes actually
+//! written here, which add the length prefix, header and explicit counts.
+//! The socket path records both — see `NetStats::framed_up`/`framed_down`.
+
+use crate::codec::{EncodedUpdate, IndexPlan};
+use crate::protocol::messages::*;
+use crate::protocol::ClientId;
+use crate::shamir::Share;
+use crate::util::mod_mask;
+use std::sync::Arc;
+use thiserror::Error;
+
+/// Wire format version carried in every frame.
+pub const WIRE_VERSION: u8 = 1;
+/// Body bytes before the payload: version (1) + msg type (1) + round (4).
+pub const HEADER_BYTES: usize = 6;
+/// Bytes of the frame length prefix.
+pub const LEN_BYTES: usize = 4;
+/// Upper bound on one frame's body; a length prefix above this is treated
+/// as corruption (or an attack) rather than an allocation request.
+pub const MAX_FRAME: usize = 1 << 30;
+
+// msg_type bytes: server → client in 0x00.., client → server in 0x10..
+const MT_START: u8 = 0x00;
+const MT_BUNDLE: u8 = 0x01;
+const MT_DELIVERY: u8 = 0x02;
+const MT_ANNOUNCE: u8 = 0x03;
+const MT_FINISH: u8 = 0x04;
+const MT_ADV: u8 = 0x10;
+const MT_SHARES: u8 = 0x11;
+const MT_MASKED: u8 = 0x12;
+const MT_UNMASK: u8 = 0x13;
+const MT_DROPPED: u8 = 0x14;
+const MT_FAILED: u8 = 0x15;
+
+/// Everything that can go wrong decoding a frame. Decoders return these;
+/// they never panic on input bytes.
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum WireError {
+    #[error("frame truncated while reading {0}")]
+    Truncated(&'static str),
+    #[error("frame length {0} exceeds MAX_FRAME")]
+    Oversized(u64),
+    #[error("frame length {0} shorter than the fixed header")]
+    ShortFrame(usize),
+    #[error("unsupported wire version {0}")]
+    BadVersion(u8),
+    #[error("unknown message type 0x{0:02x}")]
+    BadMsgType(u8),
+    #[error("{0} bytes of trailing garbage after the payload")]
+    TrailingBytes(usize),
+    #[error("invalid {0}")]
+    BadValue(&'static str),
+}
+
+/// Bounds-checked forward reader over a frame body.
+struct Reader<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(b: &'a [u8]) -> Reader<'a> {
+        Reader { b, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.b.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize, what: &'static str) -> Result<&'a [u8], WireError> {
+        if self.remaining() < n {
+            return Err(WireError::Truncated(what));
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &'static str) -> Result<u8, WireError> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u16(&mut self, what: &'static str) -> Result<u16, WireError> {
+        let s = self.take(2, what)?;
+        Ok(u16::from_le_bytes([s[0], s[1]]))
+    }
+
+    fn u32(&mut self, what: &'static str) -> Result<u32, WireError> {
+        let s = self.take(4, what)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn client_id(&mut self, what: &'static str) -> Result<ClientId, WireError> {
+        Ok(self.u32(what)? as ClientId)
+    }
+
+    fn done(&self) -> Result<(), WireError> {
+        if self.remaining() > 0 {
+            return Err(WireError::TrailingBytes(self.remaining()));
+        }
+        Ok(())
+    }
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_id(out: &mut Vec<u8>, id: ClientId) {
+    debug_assert!(id <= u32::MAX as usize, "client id {id} overflows the wire");
+    put_u32(out, id as u32);
+}
+
+/// Wrap a payload into a complete frame (length prefix included).
+fn frame(msg_type: u8, round: u32, payload: &[u8]) -> Vec<u8> {
+    let len = HEADER_BYTES + payload.len();
+    assert!(len <= MAX_FRAME, "frame body {len} exceeds MAX_FRAME");
+    let mut out = Vec::with_capacity(LEN_BYTES + len);
+    put_u32(&mut out, len as u32);
+    out.push(WIRE_VERSION);
+    out.push(msg_type);
+    put_u32(&mut out, round);
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Split a frame body into (msg_type, round, payload), validating version.
+fn split_body(body: &[u8]) -> Result<(u8, u32, &[u8]), WireError> {
+    if body.len() < HEADER_BYTES {
+        return Err(WireError::ShortFrame(body.len()));
+    }
+    if body[0] != WIRE_VERSION {
+        return Err(WireError::BadVersion(body[0]));
+    }
+    let round = u32::from_le_bytes([body[2], body[3], body[4], body[5]]);
+    Ok((body[1], round, &body[HEADER_BYTES..]))
+}
+
+fn put_encrypted_share(out: &mut Vec<u8>, es: &EncryptedShare) {
+    put_id(out, es.from);
+    put_id(out, es.to);
+    put_u32(out, es.ciphertext.len() as u32);
+    out.extend_from_slice(&es.ciphertext);
+}
+
+fn read_encrypted_share(r: &mut Reader<'_>) -> Result<EncryptedShare, WireError> {
+    let from = r.client_id("encrypted-share sender")?;
+    let to = r.client_id("encrypted-share recipient")?;
+    let ct_len = r.u32("ciphertext length")? as usize;
+    let ciphertext = r.take(ct_len, "ciphertext")?.to_vec();
+    Ok(EncryptedShare { from, to, ciphertext })
+}
+
+fn put_share(out: &mut Vec<u8>, s: &Share) {
+    let bytes = s.to_bytes();
+    debug_assert!(bytes.len() <= u16::MAX as usize, "share exceeds the u16 length field");
+    out.extend_from_slice(&(bytes.len() as u16).to_le_bytes());
+    out.extend_from_slice(&bytes);
+}
+
+fn read_share(r: &mut Reader<'_>) -> Result<Share, WireError> {
+    let len = r.u16("share length")? as usize;
+    let bytes = r.take(len, "share bytes")?;
+    Share::from_bytes(bytes).map_err(|_| WireError::BadValue("shamir share"))
+}
+
+/// Encode a server → client message as a complete frame.
+pub fn encode_down(round: u32, down: &Down) -> Vec<u8> {
+    match down {
+        Down::Start => frame(MT_START, round, &[]),
+        Down::Bundle(b) => {
+            let mut p = Vec::with_capacity(4 + b.entries.len() * 72);
+            put_u32(&mut p, b.entries.len() as u32);
+            for (id, c_pk, s_pk) in &b.entries {
+                put_id(&mut p, *id);
+                p.extend_from_slice(c_pk);
+                p.extend_from_slice(s_pk);
+            }
+            frame(MT_BUNDLE, round, &p)
+        }
+        Down::Delivery(d) => {
+            let mut p = Vec::new();
+            put_id(&mut p, d.to);
+            put_u32(&mut p, d.shares.len() as u32);
+            for es in &d.shares {
+                put_encrypted_share(&mut p, es);
+            }
+            frame(MT_DELIVERY, round, &p)
+        }
+        Down::Announce(a) => {
+            let mut p = Vec::with_capacity(4 + a.v3.len() * 4);
+            put_u32(&mut p, a.v3.len() as u32);
+            for &id in &a.v3 {
+                put_id(&mut p, id);
+            }
+            frame(MT_ANNOUNCE, round, &p)
+        }
+        Down::Finish => frame(MT_FINISH, round, &[]),
+    }
+}
+
+/// Encode a client → server message as a complete frame.
+///
+/// Masked values are written packed: `bits.div_ceil(8)` little-endian
+/// bytes per element, exactly the payload width `size_bytes()` models.
+pub fn encode_up(round: u32, up: &Up) -> Vec<u8> {
+    match up {
+        Up::Adv(a) => {
+            let mut p = Vec::with_capacity(4 + 64);
+            put_id(&mut p, a.id);
+            p.extend_from_slice(&a.c_pk);
+            p.extend_from_slice(&a.s_pk);
+            frame(MT_ADV, round, &p)
+        }
+        Up::Shares(u) => {
+            let mut p = Vec::new();
+            put_id(&mut p, u.from);
+            put_u32(&mut p, u.shares.len() as u32);
+            for es in &u.shares {
+                put_encrypted_share(&mut p, es);
+            }
+            frame(MT_SHARES, round, &p)
+        }
+        Up::Masked(m) => {
+            let nbytes = m.bits.div_ceil(8) as usize;
+            let mut p = Vec::with_capacity(9 + m.update.values.len() * nbytes);
+            put_id(&mut p, m.id);
+            p.push(m.bits as u8);
+            put_u32(&mut p, m.update.values.len() as u32);
+            let mask = mod_mask(m.bits);
+            for &v in &m.update.values {
+                p.extend_from_slice(&(v & mask).to_le_bytes()[..nbytes]);
+            }
+            frame(MT_MASKED, round, &p)
+        }
+        Up::Unmask(u) => {
+            let mut p = Vec::new();
+            put_id(&mut p, u.from);
+            put_u32(&mut p, u.shares.len() as u32);
+            for (owner, kind, share) in &u.shares {
+                put_id(&mut p, *owner);
+                p.push(match kind {
+                    ShareKind::SelfMask => 0,
+                    ShareKind::SecretKey => 1,
+                });
+                put_share(&mut p, share);
+            }
+            frame(MT_UNMASK, round, &p)
+        }
+        Up::Dropped(id, step) => {
+            let mut p = Vec::with_capacity(5);
+            put_id(&mut p, *id);
+            p.push(*step);
+            frame(MT_DROPPED, round, &p)
+        }
+        Up::Failed(id, step, msg) => {
+            // diagnostics only: cap at the u16 length field on a char
+            // boundary so the frame stays bounded and valid UTF-8
+            let mut end = msg.len().min(u16::MAX as usize);
+            while !msg.is_char_boundary(end) {
+                end -= 1;
+            }
+            let msg = &msg[..end];
+            let mut p = Vec::with_capacity(7 + msg.len());
+            put_id(&mut p, *id);
+            p.push(*step);
+            p.extend_from_slice(&(msg.len() as u16).to_le_bytes());
+            p.extend_from_slice(msg.as_bytes());
+            frame(MT_FAILED, round, &p)
+        }
+    }
+}
+
+/// Decode a server → client frame body (length prefix already stripped).
+pub fn decode_down(body: &[u8]) -> Result<(u32, Down), WireError> {
+    let (mt, round, payload) = split_body(body)?;
+    let mut r = Reader::new(payload);
+    let down = match mt {
+        MT_START => Down::Start,
+        MT_BUNDLE => {
+            let count = r.u32("bundle entry count")? as usize;
+            let need = count
+                .checked_mul(4 + 2 * A_K)
+                .ok_or(WireError::BadValue("bundle entry count"))?;
+            if r.remaining() < need {
+                return Err(WireError::Truncated("bundle entries"));
+            }
+            let mut entries = Vec::with_capacity(count);
+            for _ in 0..count {
+                let id = r.client_id("bundle entry id")?;
+                let c_pk: [u8; 32] = r.take(A_K, "c_pk")?.try_into().unwrap();
+                let s_pk: [u8; 32] = r.take(A_K, "s_pk")?.try_into().unwrap();
+                entries.push((id, c_pk, s_pk));
+            }
+            Down::Bundle(KeyBundle { entries })
+        }
+        MT_DELIVERY => {
+            let to = r.client_id("delivery recipient")?;
+            let count = r.u32("delivery share count")? as usize;
+            let mut shares = Vec::new();
+            for _ in 0..count {
+                shares.push(read_encrypted_share(&mut r)?);
+            }
+            Down::Delivery(ShareDelivery { to, shares })
+        }
+        MT_ANNOUNCE => {
+            let count = r.u32("announce count")? as usize;
+            let need = count.checked_mul(4).ok_or(WireError::BadValue("announce count"))?;
+            if r.remaining() < need {
+                return Err(WireError::Truncated("announce ids"));
+            }
+            let mut v3 = Vec::with_capacity(count);
+            for _ in 0..count {
+                v3.push(r.client_id("announce id")?);
+            }
+            Down::Announce(Arc::new(SurvivorAnnounce { v3 }))
+        }
+        MT_FINISH => Down::Finish,
+        other => return Err(WireError::BadMsgType(other)),
+    };
+    r.done()?;
+    Ok((round, down))
+}
+
+/// Decode a client → server frame body. Masked inputs decode against the
+/// round's shared [`IndexPlan`]: the element count must equal `plan.len()`
+/// and every value must lie in `Z_{2^bits}` — anything else is a malformed
+/// (or misaligned) frame, reported as an `Err` before it can reach the
+/// aggregation path.
+pub fn decode_up(body: &[u8], plan: &Arc<IndexPlan>) -> Result<(u32, Up), WireError> {
+    let (mt, round, payload) = split_body(body)?;
+    let mut r = Reader::new(payload);
+    let up = match mt {
+        MT_ADV => {
+            let id = r.client_id("advertise id")?;
+            let c_pk: [u8; 32] = r.take(A_K, "c_pk")?.try_into().unwrap();
+            let s_pk: [u8; 32] = r.take(A_K, "s_pk")?.try_into().unwrap();
+            Up::Adv(AdvertiseKeys { id, c_pk, s_pk })
+        }
+        MT_SHARES => {
+            let from = r.client_id("upload sender")?;
+            let count = r.u32("upload share count")? as usize;
+            let mut shares = Vec::new();
+            for _ in 0..count {
+                shares.push(read_encrypted_share(&mut r)?);
+            }
+            Up::Shares(ShareUpload { from, shares })
+        }
+        MT_MASKED => {
+            let id = r.client_id("masked sender")?;
+            let bits = r.u8("masked bit width")? as u32;
+            if !(1..=64).contains(&bits) {
+                return Err(WireError::BadValue("masked bit width"));
+            }
+            let count = r.u32("masked value count")? as usize;
+            if count != plan.len() {
+                return Err(WireError::BadValue("masked value count vs round plan"));
+            }
+            let nbytes = bits.div_ceil(8) as usize;
+            let need = count.checked_mul(nbytes).ok_or(WireError::BadValue("masked value count"))?;
+            if r.remaining() < need {
+                return Err(WireError::Truncated("masked values"));
+            }
+            let mask = mod_mask(bits);
+            let mut values = Vec::with_capacity(count);
+            for _ in 0..count {
+                let chunk = r.take(nbytes, "masked value")?;
+                let mut le = [0u8; 8];
+                le[..nbytes].copy_from_slice(chunk);
+                let v = u64::from_le_bytes(le);
+                if v & !mask != 0 {
+                    return Err(WireError::BadValue("masked value outside Z_{2^bits}"));
+                }
+                values.push(v);
+            }
+            Up::Masked(MaskedInput {
+                id,
+                update: EncodedUpdate { values, plan: plan.clone() },
+                bits,
+            })
+        }
+        MT_UNMASK => {
+            let from = r.client_id("unmask sender")?;
+            let count = r.u32("unmask share count")? as usize;
+            let mut shares = Vec::new();
+            for _ in 0..count {
+                let owner = r.client_id("share owner")?;
+                let kind = match r.u8("share kind")? {
+                    0 => ShareKind::SelfMask,
+                    1 => ShareKind::SecretKey,
+                    _ => return Err(WireError::BadValue("share kind")),
+                };
+                shares.push((owner, kind, read_share(&mut r)?));
+            }
+            Up::Unmask(UnmaskShares { from, shares })
+        }
+        MT_DROPPED => {
+            let id = r.client_id("dropped id")?;
+            let step = r.u8("dropped step")?;
+            Up::Dropped(id, step)
+        }
+        MT_FAILED => {
+            let id = r.client_id("failed id")?;
+            let step = r.u8("failed step")?;
+            let len = r.u16("failure message length")? as usize;
+            let bytes = r.take(len, "failure message")?;
+            let msg = std::str::from_utf8(bytes)
+                .map_err(|_| WireError::BadValue("failure message utf-8"))?
+                .to_string();
+            Up::Failed(id, step, msg)
+        }
+        other => return Err(WireError::BadMsgType(other)),
+    };
+    r.done()?;
+    Ok((round, up))
+}
+
+/// Incremental frame reassembly for a nonblocking stream: feed raw reads
+/// in with [`FrameBuffer::extend`], pop complete frame bodies with
+/// [`FrameBuffer::next_frame`]. Corrupt length prefixes surface as
+/// [`WireError`] (the connection should be dropped — the byte stream has
+/// lost framing).
+#[derive(Default)]
+pub struct FrameBuffer {
+    buf: Vec<u8>,
+    start: usize,
+}
+
+impl FrameBuffer {
+    pub fn new() -> FrameBuffer {
+        FrameBuffer::default()
+    }
+
+    pub fn extend(&mut self, bytes: &[u8]) {
+        // compact before growing: the consumed prefix is dead weight
+        if self.start > 0 && self.start * 2 >= self.buf.len() {
+            self.buf.drain(..self.start);
+            self.start = 0;
+        }
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Pop the next complete frame body (length prefix stripped), `None`
+    /// when more bytes are needed.
+    pub fn next_frame(&mut self) -> Result<Option<Vec<u8>>, WireError> {
+        let avail = &self.buf[self.start..];
+        if avail.len() < LEN_BYTES {
+            return Ok(None);
+        }
+        let len = u32::from_le_bytes([avail[0], avail[1], avail[2], avail[3]]) as usize;
+        if len > MAX_FRAME {
+            return Err(WireError::Oversized(len as u64));
+        }
+        if len < HEADER_BYTES {
+            return Err(WireError::ShortFrame(len));
+        }
+        if avail.len() < LEN_BYTES + len {
+            return Ok(None);
+        }
+        let body = avail[LEN_BYTES..LEN_BYTES + len].to_vec();
+        self.start += LEN_BYTES + len;
+        Ok(Some(body))
+    }
+}
+
+/// Blocking read of one frame from a stream. Returns `Ok(None)` on clean
+/// EOF at a frame boundary; a corrupt length prefix or EOF mid-frame maps
+/// to `io::ErrorKind::InvalidData`/`UnexpectedEof`.
+pub fn read_frame<R: std::io::Read>(r: &mut R) -> std::io::Result<Option<Vec<u8>>> {
+    let mut len4 = [0u8; LEN_BYTES];
+    let mut got = 0;
+    while got < LEN_BYTES {
+        match r.read(&mut len4[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "eof inside a frame length prefix",
+                ))
+            }
+            Ok(k) => got += k,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    let len = u32::from_le_bytes(len4) as usize;
+    if !(HEADER_BYTES..=MAX_FRAME).contains(&len) {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("invalid frame length {len}"),
+        ));
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    Ok(Some(body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// `Up`/`Down` carry no `PartialEq` (the `Arc`'d announce and the
+    /// plan-bearing update make derive awkward); their `Debug` output is
+    /// total over every field, so it serves as the equality witness.
+    fn dbg<T: std::fmt::Debug>(v: &T) -> String {
+        format!("{v:?}")
+    }
+
+    fn sample_share(x: u16) -> Share {
+        Share { x, y: (0..16).map(|i| x.wrapping_mul(251).wrapping_add(i)).collect() }
+    }
+
+    fn sample_ups(plan: &Arc<IndexPlan>, bits: u32) -> Vec<Up> {
+        let mask = mod_mask(bits);
+        let es = |from: ClientId, to: ClientId| EncryptedShare {
+            from,
+            to,
+            ciphertext: (0..84u8).collect(),
+        };
+        vec![
+            Up::Adv(AdvertiseKeys { id: 3, c_pk: [7; 32], s_pk: [9; 32] }),
+            Up::Shares(ShareUpload { from: 2, shares: vec![es(2, 0), es(2, 5)] }),
+            Up::Shares(ShareUpload { from: 4, shares: vec![] }),
+            Up::Masked(MaskedInput {
+                id: 6,
+                update: EncodedUpdate {
+                    values: (0..plan.len() as u64)
+                        .map(|i| i.wrapping_mul(0x9E37_79B9) & mask)
+                        .collect(),
+                    plan: plan.clone(),
+                },
+                bits,
+            }),
+            Up::Unmask(UnmaskShares {
+                from: 1,
+                shares: vec![
+                    (0, ShareKind::SelfMask, sample_share(2)),
+                    (5, ShareKind::SecretKey, sample_share(3)),
+                ],
+            }),
+            Up::Dropped(11, 2),
+            Up::Failed(12, 1, "secure withdrawal: neighborhood too small".to_string()),
+            Up::Failed(13, 0, String::new()),
+        ]
+    }
+
+    fn sample_downs() -> Vec<Down> {
+        let es = |from: ClientId, to: ClientId| EncryptedShare {
+            from,
+            to,
+            ciphertext: vec![0xAB; 84],
+        };
+        vec![
+            Down::Start,
+            Down::Bundle(KeyBundle { entries: vec![(0, [1; 32], [2; 32]), (7, [3; 32], [4; 32])] }),
+            Down::Bundle(KeyBundle { entries: vec![] }),
+            Down::Delivery(ShareDelivery { to: 3, shares: vec![es(0, 3), es(1, 3)] }),
+            Down::Announce(Arc::new(SurvivorAnnounce { v3: vec![0, 2, 5, 9] })),
+            Down::Announce(Arc::new(SurvivorAnnounce { v3: vec![] })),
+            Down::Finish,
+        ]
+    }
+
+    #[test]
+    fn every_up_variant_round_trips() {
+        for (plan, bits) in [
+            (IndexPlan::identity(9), 32u32),
+            (IndexPlan::sparse(vec![1, 4, 7, 30], 40), 16),
+            (IndexPlan::sparse(vec![0, 2], 5), 64),
+        ] {
+            for up in sample_ups(&plan, bits) {
+                let bytes = encode_up(0xDEAD_BEEF, &up);
+                let (round, back) = decode_up(&bytes[LEN_BYTES..], &plan).unwrap();
+                assert_eq!(round, 0xDEAD_BEEF);
+                assert_eq!(dbg(&back), dbg(&up));
+                // the decoded update shares the round plan, not a copy
+                if let Up::Masked(m) = &back {
+                    assert!(Arc::ptr_eq(&m.update.plan, &plan));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn every_down_variant_round_trips() {
+        for down in sample_downs() {
+            let bytes = encode_down(7, &down);
+            let (round, back) = decode_down(&bytes[LEN_BYTES..]).unwrap();
+            assert_eq!(round, 7);
+            assert_eq!(dbg(&back), dbg(&down));
+        }
+    }
+
+    #[test]
+    fn golden_frames_pin_the_v1_layout() {
+        // Start, round 0x01020304: len=6 | v1 | type 0 | round le
+        assert_eq!(
+            encode_down(0x0102_0304, &Down::Start),
+            vec![6, 0, 0, 0, 1, 0x00, 0x04, 0x03, 0x02, 0x01]
+        );
+        // Finish, round 2
+        assert_eq!(encode_down(2, &Down::Finish), vec![6, 0, 0, 0, 1, 0x04, 2, 0, 0, 0]);
+        // Dropped(7, step 3), round 2: payload = id le32 | step
+        assert_eq!(
+            encode_up(2, &Up::Dropped(7, 3)),
+            vec![11, 0, 0, 0, 1, 0x14, 2, 0, 0, 0, 7, 0, 0, 0, 3]
+        );
+        // Announce {v3: [1, 258]}, round 0: count le32 | ids le32
+        let ann = Down::Announce(Arc::new(SurvivorAnnounce { v3: vec![1, 258] }));
+        assert_eq!(
+            encode_down(0, &ann),
+            vec![18, 0, 0, 0, 1, 0x03, 0, 0, 0, 0, 2, 0, 0, 0, 1, 0, 0, 0, 2, 1, 0, 0]
+        );
+        // Masked {id 1, bits 16, values [0x0102, 0xFFFF]} under identity(2),
+        // round 9: id le32 | bits u8 | count le32 | packed le values
+        let plan = IndexPlan::identity(2);
+        let m = Up::Masked(MaskedInput {
+            id: 1,
+            update: EncodedUpdate { values: vec![0x0102, 0xFFFF], plan },
+            bits: 16,
+        });
+        assert_eq!(
+            encode_up(9, &m),
+            vec![19, 0, 0, 0, 1, 0x12, 9, 0, 0, 0, 1, 0, 0, 0, 16, 2, 0, 0, 0, 2, 1, 255, 255]
+        );
+    }
+
+    #[test]
+    fn framed_bytes_exceed_logical_bytes() {
+        // the frame always costs more than the Appendix-C logical model:
+        // length prefix + header + explicit counts
+        let up = Up::Adv(AdvertiseKeys { id: 0, c_pk: [0; 32], s_pk: [0; 32] });
+        let logical = match &up {
+            Up::Adv(a) => a.size_bytes(),
+            _ => unreachable!(),
+        };
+        assert!(encode_up(0, &up).len() > logical);
+    }
+
+    #[test]
+    fn truncation_at_every_length_errors_never_panics() {
+        let plan = IndexPlan::sparse(vec![2, 3, 11], 16);
+        let mut frames: Vec<Vec<u8>> =
+            sample_ups(&plan, 32).iter().map(|u| encode_up(5, u)).collect();
+        frames.extend(sample_downs().iter().map(|d| encode_down(5, d)));
+        for f in &frames {
+            let body = &f[LEN_BYTES..];
+            for cut in 0..body.len() {
+                // direct decode of a truncated body must be an Err
+                assert!(decode_up(&body[..cut], &plan).is_err(), "up cut={cut}");
+                assert!(decode_down(&body[..cut]).is_err(), "down cut={cut}");
+            }
+            // a truncated *frame* is just incomplete for the reassembler
+            let mut fb = FrameBuffer::new();
+            fb.extend(&f[..f.len() - 1]);
+            assert_eq!(fb.next_frame().unwrap(), None);
+            fb.extend(&f[f.len() - 1..]);
+            assert_eq!(fb.next_frame().unwrap().unwrap(), body.to_vec());
+        }
+    }
+
+    #[test]
+    fn bad_version_and_msg_type_are_rejected() {
+        let plan = IndexPlan::identity(3);
+        let good = encode_down(1, &Down::Start);
+        let mut bad_ver = good[LEN_BYTES..].to_vec();
+        bad_ver[0] = 2;
+        assert_eq!(decode_down(&bad_ver), Err(WireError::BadVersion(2)));
+        assert_eq!(decode_up(&bad_ver, &plan), Err(WireError::BadVersion(2)));
+        let mut bad_type = good[LEN_BYTES..].to_vec();
+        bad_type[1] = 0x7F;
+        assert_eq!(decode_down(&bad_type), Err(WireError::BadMsgType(0x7F)));
+        assert_eq!(decode_up(&bad_type, &plan), Err(WireError::BadMsgType(0x7F)));
+        // down types don't decode as ups and vice versa
+        assert!(matches!(decode_up(&good[LEN_BYTES..], &plan), Err(WireError::BadMsgType(_))));
+        let adv = encode_up(1, &Up::Adv(AdvertiseKeys { id: 0, c_pk: [0; 32], s_pk: [0; 32] }));
+        assert!(matches!(decode_down(&adv[LEN_BYTES..]), Err(WireError::BadMsgType(_))));
+    }
+
+    #[test]
+    fn oversized_and_undersized_length_prefixes_are_rejected() {
+        let mut fb = FrameBuffer::new();
+        fb.extend(&((MAX_FRAME as u32) + 1).to_le_bytes());
+        fb.extend(&[0u8; 16]);
+        assert!(matches!(fb.next_frame(), Err(WireError::Oversized(_))));
+        let mut fb = FrameBuffer::new();
+        fb.extend(&3u32.to_le_bytes()); // shorter than the header
+        fb.extend(&[0u8; 3]);
+        assert!(matches!(fb.next_frame(), Err(WireError::ShortFrame(3))));
+        // blocking reader rejects the same prefixes
+        let mut bad: &[u8] = &[0xFF, 0xFF, 0xFF, 0xFF, 0, 0];
+        assert!(read_frame(&mut bad).is_err());
+    }
+
+    #[test]
+    fn trailing_garbage_is_rejected() {
+        let plan = IndexPlan::identity(2);
+        for up in sample_ups(&plan, 32) {
+            let mut body = encode_up(1, &up)[LEN_BYTES..].to_vec();
+            body.push(0);
+            assert!(
+                matches!(decode_up(&body, &plan), Err(WireError::TrailingBytes(1))),
+                "{up:?}"
+            );
+        }
+        for down in sample_downs() {
+            let mut body = encode_down(1, &down)[LEN_BYTES..].to_vec();
+            body.extend_from_slice(&[0, 0]);
+            assert!(
+                matches!(decode_down(&body), Err(WireError::TrailingBytes(2))),
+                "{down:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn masked_input_is_validated_against_the_round_plan() {
+        let plan = IndexPlan::sparse(vec![1, 5], 9);
+        let m = Up::Masked(MaskedInput {
+            id: 0,
+            update: EncodedUpdate { values: vec![1, 2], plan: plan.clone() },
+            bits: 16,
+        });
+        let body = encode_up(0, &m)[LEN_BYTES..].to_vec();
+        // wrong plan length → count mismatch
+        let other = IndexPlan::sparse(vec![1, 5, 6], 9);
+        assert_eq!(
+            decode_up(&body, &other),
+            Err(WireError::BadValue("masked value count vs round plan"))
+        );
+        // narrowing the declared width to 8 bits leaves the 2-byte values
+        // as trailing garbage — still an Err, never a mis-parse
+        let mut wide = body.clone();
+        wide[HEADER_BYTES + 4] = 8; // payload layout: id(4) bits(1) count(4) values
+        assert!(decode_up(&wide, &plan).is_err());
+        // a hand-built frame carrying a value outside Z_{2^bits}: bits=12
+        // packs to 2 bytes, so 0xFFFF overflows the 12-bit domain
+        let mut p = Vec::new();
+        p.extend_from_slice(&1u32.to_le_bytes()); // id
+        p.push(12); // bits
+        p.extend_from_slice(&2u32.to_le_bytes()); // count = plan.len()
+        p.extend_from_slice(&[0xFF, 0xFF, 0x01, 0x00]);
+        let mut body12 = vec![WIRE_VERSION, 0x12, 0, 0, 0, 0];
+        body12.extend_from_slice(&p);
+        assert_eq!(
+            decode_up(&body12, &plan),
+            Err(WireError::BadValue("masked value outside Z_{2^bits}"))
+        );
+        // zero / too-wide bit widths
+        let mut zero = body.clone();
+        zero[HEADER_BYTES + 4] = 0;
+        assert_eq!(decode_up(&zero, &plan), Err(WireError::BadValue("masked bit width")));
+        let mut huge = body;
+        huge[HEADER_BYTES + 4] = 65;
+        assert_eq!(decode_up(&huge, &plan), Err(WireError::BadValue("masked bit width")));
+    }
+
+    #[test]
+    fn random_byte_flips_never_panic() {
+        let plan = IndexPlan::sparse(vec![0, 3, 4], 8);
+        let mut rng = Rng::new(0xF122);
+        let mut frames: Vec<Vec<u8>> =
+            sample_ups(&plan, 16).iter().map(|u| encode_up(3, u)).collect();
+        frames.extend(sample_downs().iter().map(|d| encode_down(3, d)));
+        for f in &frames {
+            for _ in 0..64 {
+                let mut body = f[LEN_BYTES..].to_vec();
+                let pos = rng.gen_range(body.len() as u64) as usize;
+                body[pos] ^= (rng.gen_range(255) + 1) as u8;
+                // any outcome is fine except a panic; Ok is possible when
+                // the flip lands in a value byte
+                let _ = decode_up(&body, &plan);
+                let _ = decode_down(&body);
+            }
+        }
+    }
+
+    #[test]
+    fn frame_buffer_reassembles_split_and_concatenated_frames() {
+        let a = encode_down(1, &Down::Start);
+        let b = encode_down(1, &Down::Announce(Arc::new(SurvivorAnnounce { v3: vec![4] })));
+        let mut stream = a.clone();
+        stream.extend_from_slice(&b);
+        // feed one byte at a time: frames pop exactly at their boundaries
+        let mut fb = FrameBuffer::new();
+        let mut popped = Vec::new();
+        for byte in stream {
+            fb.extend(&[byte]);
+            while let Some(body) = fb.next_frame().unwrap() {
+                popped.push(body);
+            }
+        }
+        assert_eq!(popped.len(), 2);
+        assert_eq!(popped[0], a[LEN_BYTES..].to_vec());
+        assert_eq!(popped[1], b[LEN_BYTES..].to_vec());
+        assert_eq!(fb.next_frame().unwrap(), None);
+    }
+
+    #[test]
+    fn failed_message_is_capped_on_a_char_boundary() {
+        let long = "é".repeat(40_000); // 80k bytes of 2-byte chars
+        let up = Up::Failed(1, 2, long);
+        let bytes = encode_up(0, &up);
+        let (_, back) = decode_up(&bytes[LEN_BYTES..], &IndexPlan::identity(1)).unwrap();
+        match back {
+            Up::Failed(1, 2, msg) => {
+                assert!(msg.len() <= u16::MAX as usize);
+                assert!(msg.chars().all(|c| c == 'é'));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+}

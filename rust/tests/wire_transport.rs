@@ -1,0 +1,179 @@
+//! The socket wire path against the in-process engine oracle.
+//!
+//! `net::socket::run_round_wire` moves every protocol message over real
+//! loopback TCP as `wire` frames; these suites pin it bit-identical to
+//! `protocol::engine` — sums, survivor sets, and the logical (Appendix-C)
+//! byte accounting — at four-digit client counts, under every payload
+//! codec, under dropout at every step, and under a hostile network that
+//! duplicates frames.
+
+use ccesa::codec::Codec;
+use ccesa::coordinator::derive_round_setup;
+use ccesa::net::socket;
+use ccesa::protocol::client::ClientSm;
+use ccesa::protocol::dropout::DropoutModel;
+use ccesa::protocol::engine::run_round;
+use ccesa::protocol::messages::Down;
+use ccesa::protocol::{ProtocolConfig, Topology};
+use ccesa::util::rng::Rng;
+use ccesa::wire;
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
+
+mod common;
+use common::base;
+
+fn models(n: usize, dim: usize, seed: u64) -> Vec<Vec<u64>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| (0..dim).map(|_| rng.next_u64() & 0xFFFF_FFFF).collect())
+        .collect()
+}
+
+/// A wire round must match the engine on every observable except the
+/// framed-byte counters, which must exist (and exceed the logical bytes —
+/// framing is overhead, never compression).
+fn assert_wire_matches_engine(cfg: &ProtocolConfig, m: &[Vec<u64>], label: &str) {
+    let sync = run_round(cfg, m).unwrap();
+    let wired = socket::run_round_wire(cfg, m).unwrap();
+    assert_eq!(wired.reliable, sync.reliable, "{label}: reliable");
+    assert_eq!(wired.sets, sync.sets, "{label}: survivor sets");
+    assert_eq!(wired.sum, sync.sum, "{label}: sum");
+    assert!(wired.stats.logical_eq(&sync.stats), "{label}: logical NetStats diverge");
+    let logical_up: u64 = sync.stats.bytes_up.iter().sum();
+    let logical_down: u64 = sync.stats.bytes_down.iter().sum();
+    assert!(wired.stats.framed_up > logical_up, "{label}: framed_up must exceed logical");
+    assert!(wired.stats.framed_down > logical_down, "{label}: framed_down must exceed logical");
+}
+
+#[test]
+fn thousand_client_round_over_sockets_per_codec() {
+    // the acceptance bar: a full round over real sockets at n = 1000,
+    // bit-identical to the engine for every codec family
+    let n = 1000;
+    let dim = 32;
+    let m = models(n, dim, 0xA11CE);
+    for (label, codec) in [
+        ("dense", Codec::Dense),
+        ("topk", Codec::TopK { k: 8 }),
+        ("randk", Codec::RandK { k: 8 }),
+    ] {
+        let cfg = ProtocolConfig {
+            codec,
+            ..base(n, 4, dim, Topology::Harary { k: 8 }, 0x31337)
+        };
+        assert_wire_matches_engine(&cfg, &m, label);
+    }
+}
+
+#[test]
+fn dropout_at_every_step_over_sockets_per_codec() {
+    // clients vanish at every protocol step — including one that uploads
+    // shares but never sends its masked input (s^SK reconstruction) — and
+    // the wire path must still match the engine exactly
+    let n = 40;
+    let dim = 24;
+    let m = models(n, dim, 0xD0D0);
+    for (label, codec) in [
+        ("dense", Codec::Dense),
+        ("topk", Codec::TopK { k: 6 }),
+        ("randk", Codec::RandK { k: 6 }),
+    ] {
+        let cfg = ProtocolConfig {
+            codec,
+            dropout: DropoutModel::Targeted {
+                per_step: [vec![1], vec![5, 17], vec![9, 23], vec![13]],
+            },
+            ..base(n, 8, dim, Topology::ErdosRenyi { p: 0.6 }, 0x77AB)
+        };
+        assert_wire_matches_engine(&cfg, &m, label);
+    }
+}
+
+#[test]
+fn duplicated_wire_frames_do_not_disturb_honest_clients() {
+    // a hand-rolled driver where client 0 sits behind a flaky network that
+    // transmits every frame twice — Adv, Shares, Masked and Unmask are all
+    // replayed byte-for-byte. The server must discard the duplicates
+    // (frame-level phase check; the Server-layer dedup is the second line)
+    // and the round must stay bit-identical to the in-process engine.
+    let n = 3;
+    let dim = 6;
+    let cfg = base(n, 2, dim, Topology::Complete, 4242);
+    let m = models(n, dim, 21);
+    let sync = run_round(&cfg, &m).unwrap();
+
+    let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+    let addr = listener.local_addr().unwrap();
+    let round = socket::round_tag(cfg.seed);
+    let setup = derive_round_setup(&cfg, &m);
+    let (plan, graph) = (setup.plan.clone(), setup.graph.clone());
+    let srv_cfg = cfg.clone();
+    let timeout = Duration::from_secs(60);
+    let server =
+        std::thread::spawn(move || socket::serve(&listener, &srv_cfg, plan, graph, round, timeout));
+
+    let mut sms: Vec<ClientSm<'_>> = (0..n)
+        .map(|id| {
+            let (mut key_rng, share_rng) = setup.streams[id].clone();
+            ClientSm::new(
+                id,
+                cfg.t,
+                cfg.mask_bits,
+                setup.graph.neighbors(id).to_vec(),
+                &mut key_rng,
+                share_rng,
+                &m[id],
+                setup.plan.clone(),
+                setup.survives[id],
+            )
+        })
+        .collect();
+    let mut conns: Vec<Option<TcpStream>> =
+        (0..n).map(|_| Some(TcpStream::connect(addr).unwrap())).collect();
+
+    loop {
+        let mut any_open = false;
+        for id in 0..n {
+            let Some(stream) = conns[id].as_mut() else { continue };
+            any_open = true;
+            match wire::read_frame(stream).unwrap() {
+                None => {
+                    conns[id] = None;
+                }
+                Some(body) => {
+                    let (r, down) = wire::decode_down(&body).unwrap();
+                    assert_eq!(r, round, "client {id}: round tag");
+                    if matches!(down, Down::Finish) {
+                        let _ = sms[id].step(Down::Finish);
+                        conns[id] = None;
+                        continue;
+                    }
+                    let frame = wire::encode_up(round, &sms[id].step(down));
+                    let stream = conns[id].as_mut().unwrap();
+                    stream.write_all(&frame).unwrap();
+                    if id == 0 {
+                        // the flaky network: replay the identical frame
+                        stream.write_all(&frame).unwrap();
+                    }
+                    if sms[id].done() {
+                        conns[id] = None;
+                    }
+                }
+            }
+        }
+        if !any_open {
+            break;
+        }
+    }
+
+    let wired = server.join().unwrap().unwrap();
+    assert_eq!(wired.reliable, sync.reliable);
+    assert!(wired.reliable, "the duplicate-free baseline round is reliable");
+    assert_eq!(wired.sets, sync.sets, "duplicates must not perturb survivor sets");
+    assert_eq!(wired.sum, sync.sum, "duplicates must not double-count into the sum");
+    assert!(wired.stats.logical_eq(&sync.stats), "duplicates must not be charged logically");
+    let logical_up: u64 = sync.stats.bytes_up.iter().sum();
+    assert!(wired.stats.framed_up > logical_up, "the duplicates do hit the socket counter");
+}
