@@ -31,7 +31,7 @@ use crate::protocol::messages::*;
 use crate::protocol::server::{RoundOutput, Server};
 use crate::protocol::{ProtocolConfig, SurvivorSets};
 use crate::util::rng::Rng;
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
@@ -172,6 +172,43 @@ pub fn run_round_event_loop_with(
     models: &[Vec<u64>],
     workers: usize,
 ) -> Result<(CoordRoundResult, LoopTelemetry)> {
+    run_round_event_loop_inner(cfg, models, workers, None)
+}
+
+/// [`run_round_event_loop`] writing an fsync'd `crate::journal` round log:
+/// every server state transition hits `<journal_dir>/round-<tag>.ccj`
+/// before it takes effect, so a crashed in-process round is recoverable by
+/// `journal::recover` exactly like a crashed wire round.
+pub fn run_round_event_loop_journaled(
+    cfg: &ProtocolConfig,
+    models: &[Vec<u64>],
+    journal_dir: &std::path::Path,
+) -> Result<CoordRoundResult> {
+    let round = crate::net::socket::round_tag(cfg.seed);
+    let setup = derive_round_setup(cfg, models);
+    let journal = crate::journal::Journal::create(
+        journal_dir,
+        round,
+        cfg.n,
+        cfg.t,
+        cfg.mask_bits,
+        &setup.plan,
+        &setup.graph,
+    )
+    .context("create round journal")?;
+    drop(setup);
+    let sink: Box<dyn crate::protocol::server::RoundSink> =
+        Box::new(crate::journal::JournalSink::new(journal));
+    run_round_event_loop_inner(cfg, models, event_loop_workers(cfg.n), Some(sink))
+        .map(|(r, _)| r)
+}
+
+fn run_round_event_loop_inner(
+    cfg: &ProtocolConfig,
+    models: &[Vec<u64>],
+    workers: usize,
+    sink: Option<Box<dyn crate::protocol::server::RoundSink>>,
+) -> Result<(CoordRoundResult, LoopTelemetry)> {
     assert_eq!(models.len(), cfg.n);
     let workers = workers.max(1);
     let RoundSetup { graph, survives, plan, streams } = derive_round_setup(cfg, models);
@@ -199,6 +236,9 @@ pub fn run_round_event_loop_with(
     drop(streams); // lanes cloned their pairs; free ~2n ChaCha states
 
     let mut server = Server::new(cfg.n, cfg.t, cfg.mask_bits, plan, graph.clone());
+    if let Some(sink) = sink {
+        server.set_sink(sink);
+    }
     let mut stats = NetStats::new(cfg.n);
     let live = AtomicUsize::new(0);
     let peak = AtomicUsize::new(0);

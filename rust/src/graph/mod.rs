@@ -71,6 +71,47 @@ impl Graph {
         &self.adj[i]
     }
 
+    /// Rebuild a graph from verbatim adjacency rows — the journal's
+    /// deserialization path. [`Graph::add_edge`] cannot reproduce arbitrary
+    /// per-row neighbor orders (it appends to *both* endpoints in one global
+    /// call order), but replay bit-identity requires `neighbors(i)` to come
+    /// back in exactly the recorded order, so this constructor installs the
+    /// rows directly after validating them: every entry in range, no
+    /// self-loops, no duplicates within a row, and perfect symmetry (j
+    /// appears in row i iff i appears in row j). Returns `Err` on any
+    /// violation — corrupted journal bytes must never panic.
+    pub fn from_adjacency(n: usize, adj: Vec<Vec<usize>>) -> Result<Graph, String> {
+        if adj.len() != n {
+            return Err(format!("adjacency has {} rows for n={n}", adj.len()));
+        }
+        let words_per_row = n.div_ceil(64);
+        let mut bits = vec![0u64; n * words_per_row];
+        for (i, row) in adj.iter().enumerate() {
+            for &j in row {
+                if j >= n {
+                    return Err(format!("row {i}: neighbor {j} out of range n={n}"));
+                }
+                if j == i {
+                    return Err(format!("row {i}: self-loop"));
+                }
+                let w = i * words_per_row + j / 64;
+                if bits[w] & (1u64 << (j % 64)) != 0 {
+                    return Err(format!("row {i}: duplicate neighbor {j}"));
+                }
+                bits[w] |= 1u64 << (j % 64);
+            }
+        }
+        // symmetry: the bitmatrix must equal its transpose
+        for i in 0..n {
+            for &j in &adj[i] {
+                if bits[j * words_per_row + i / 64] & (1u64 << (i % 64)) == 0 {
+                    return Err(format!("asymmetric edge ({i},{j})"));
+                }
+            }
+        }
+        Ok(Graph { n, adj, bits })
+    }
+
     pub fn degree(&self, i: usize) -> usize {
         self.adj[i].len()
     }

@@ -1,0 +1,1019 @@
+//! Append-only round journal + crash recovery.
+//!
+//! The paper's Theorem 1 is about surviving *client* dropout; this module
+//! removes the remaining single point of failure — the server process. A
+//! journaled [`Server`](crate::protocol::server::Server) writes every state
+//! transition to an append-only, length-prefixed, CRC-checksummed record
+//! log *before* applying it (journal-then-apply, via the
+//! [`RoundSink`](crate::protocol::server::RoundSink) hook), and
+//! [`recover`] replays the log through a fresh server to a bit-identical
+//! state: same survivor sets, same regenerated `Down` frames (byte-equal),
+//! same final sum.
+//!
+//! ## Record format
+//!
+//! ```text
+//! record := len:u32le  crc:u32le  body
+//! body   := version:u8  rec_type:u8  round:u32le  payload
+//! ```
+//!
+//! `len` counts the body only; `crc` is CRC-32 (IEEE) over the body. The
+//! framing mirrors the `wire` codec deliberately — same length-prefix
+//! discipline, same bounds-checked [`Reader`](crate::wire) cursor, same
+//! contract: malformed bytes return [`JournalError`], never panic.
+//!
+//! ## Durability and the torn tail
+//!
+//! Every append is one `write_all` followed by `sync_data`, so at most the
+//! *last* record can be torn by a crash. [`scan`] therefore treats an
+//! incomplete trailing record (header or body running past EOF) as a torn
+//! tail: it is dropped and recovery proceeds on the valid prefix (the
+//! on-disk file is truncated back to the prefix before the journal is
+//! reopened for appends). A *complete* record that fails its CRC is
+//! corruption, not a torn write, and surfaces as a named error.
+//!
+//! ## Replay = re-execution
+//!
+//! Recovery does not deserialize server internals; it re-executes the
+//! journaled batches through the ordinary `Server` step methods in record
+//! order. That works because every server collection is a `BTreeMap` and
+//! per-entry push order equals batch iteration order, so replay is
+//! bit-identical by construction — including the regenerated `Down`
+//! frames, which the crash harness asserts byte-equal against the
+//! pre-crash originals. The `announce`/`checkpoint`/`final` records are
+//! pure cross-checks: recovery recomputes each and refuses to resume on a
+//! mismatch.
+//!
+//! Record types `0x40..` are reserved for callers of the raw
+//! [`LogWriter`]/[`read_log`] API (the campaign runner journals per-round
+//! outcomes there — see `sim::campaign::run_campaign_resumable`).
+
+use crate::codec::IndexPlan;
+use crate::graph::Graph;
+use crate::protocol::messages::*;
+use crate::protocol::server::{RoundOutput, RoundSink, Server};
+use crate::protocol::{ClientId, SurvivorSets};
+use crate::wire::{self, Reader, WireError};
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use thiserror::Error;
+
+/// Journal format version carried in every record.
+pub const JOURNAL_VERSION: u8 = 1;
+/// Record bytes before the payload: version (1) + rec type (1) + round (4).
+pub const BODY_HEADER: usize = 6;
+/// Bytes of the per-record length + checksum prefix.
+pub const PREFIX_BYTES: usize = 8;
+/// Upper bound on one record body — same cap as `wire::MAX_FRAME`: a
+/// length above this is corruption, not an allocation request.
+pub const MAX_RECORD: usize = 1 << 30;
+
+/// Round setup: config scalars + index plan + verbatim graph adjacency.
+pub const RT_SETUP: u8 = 0x01;
+/// One phase's `Up` batch, as concatenated wire frames.
+pub const RT_UPS: u8 = 0x02;
+/// The survivor announce (cross-check; replay recomputes it).
+pub const RT_ANNOUNCE: u8 = 0x03;
+/// Packed accumulator Σ θ̃ checkpoint at finalize entry (cross-check).
+pub const RT_CHECKPOINT: u8 = 0x04;
+/// The round output (cross-check; replay recomputes it).
+pub const RT_FINAL: u8 = 0x05;
+/// First record type available to raw-log users (campaign logs etc.).
+pub const RT_USER_BASE: u8 = 0x40;
+
+/// Everything that can go wrong writing, scanning or replaying a journal.
+/// Decoders and the replay path return these; they never panic on input
+/// bytes.
+#[derive(Debug, Error)]
+pub enum JournalError {
+    #[error("journal io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error(
+        "journal record at byte {offset}: checksum mismatch \
+         (stored {stored:08x}, computed {computed:08x})"
+    )]
+    Checksum { offset: u64, stored: u32, computed: u32 },
+    #[error("journal record at byte {offset}: {what}")]
+    Corrupt { offset: u64, what: &'static str },
+    #[error("unsupported journal version {0}")]
+    BadVersion(u8),
+    #[error("unknown journal record type 0x{0:02x}")]
+    BadRecordType(u8),
+    #[error("malformed journal payload: {0}")]
+    Malformed(#[from] WireError),
+    #[error("journal setup record invalid: {0}")]
+    BadSetup(String),
+    #[error("journal record tagged round {found:08x}, journal is round {expected:08x}")]
+    WrongRound { expected: u32, found: u32 },
+    #[error("journal has no setup record")]
+    MissingSetup,
+    #[error("journal replay failed: {0}")]
+    Replay(String),
+    #[error("journaled accumulator checkpoint does not match the replayed server state")]
+    CheckpointMismatch,
+    #[error("journaled survivor announce does not match the replayed server state")]
+    AnnounceMismatch,
+    #[error("journaled final output does not match the replayed round output")]
+    FinalMismatch,
+}
+
+// ---------------------------------------------------------------------------
+// CRC-32 (IEEE 802.3, reflected, poly 0xEDB88320) — dependency-free.
+
+const CRC_TABLE: [u32; 256] = crc_table();
+
+const fn crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+/// CRC-32 over `bytes` (the checksum in every record prefix).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+// ---------------------------------------------------------------------------
+// Raw record layer
+
+/// One decoded record: type, round tag, payload bytes, and the byte offset
+/// its prefix starts at (for truncation and error reporting).
+#[derive(Debug, Clone)]
+pub struct RawRecord {
+    pub rec_type: u8,
+    pub round: u32,
+    pub payload: Vec<u8>,
+    pub offset: u64,
+}
+
+/// Scan a journal byte buffer into records. Returns the records plus the
+/// byte length of the valid prefix. An *incomplete* trailing record (fewer
+/// bytes than its header or declared body) is a torn tail: dropped, never
+/// an error. A *complete* record with a bad checksum, an absurd length or
+/// an unknown version is corruption and returns a named error.
+pub fn scan(bytes: &[u8]) -> Result<(Vec<RawRecord>, usize), JournalError> {
+    let mut records = Vec::new();
+    let mut pos = 0usize;
+    while bytes.len() - pos >= PREFIX_BYTES {
+        let offset = pos as u64;
+        let len =
+            u32::from_le_bytes([bytes[pos], bytes[pos + 1], bytes[pos + 2], bytes[pos + 3]])
+                as usize;
+        let stored = u32::from_le_bytes([
+            bytes[pos + 4],
+            bytes[pos + 5],
+            bytes[pos + 6],
+            bytes[pos + 7],
+        ]);
+        if len > MAX_RECORD {
+            return Err(JournalError::Corrupt { offset, what: "record length exceeds MAX_RECORD" });
+        }
+        if len < BODY_HEADER {
+            return Err(JournalError::Corrupt {
+                offset,
+                what: "record length shorter than the body header",
+            });
+        }
+        if bytes.len() - pos - PREFIX_BYTES < len {
+            break; // torn tail: body runs past EOF
+        }
+        let body = &bytes[pos + PREFIX_BYTES..pos + PREFIX_BYTES + len];
+        let computed = crc32(body);
+        if computed != stored {
+            return Err(JournalError::Checksum { offset, stored, computed });
+        }
+        if body[0] != JOURNAL_VERSION {
+            return Err(JournalError::BadVersion(body[0]));
+        }
+        let rec_type = body[1];
+        let round = u32::from_le_bytes([body[2], body[3], body[4], body[5]]);
+        records.push(RawRecord {
+            rec_type,
+            round,
+            payload: body[BODY_HEADER..].to_vec(),
+            offset,
+        });
+        pos += PREFIX_BYTES + len;
+    }
+    Ok((records, pos))
+}
+
+fn encode_record(rec_type: u8, round: u32, payload: &[u8]) -> Vec<u8> {
+    let len = BODY_HEADER + payload.len();
+    assert!(len <= MAX_RECORD, "journal record body {len} exceeds MAX_RECORD");
+    let mut body = Vec::with_capacity(len);
+    body.push(JOURNAL_VERSION);
+    body.push(rec_type);
+    wire::put_u32(&mut body, round);
+    body.extend_from_slice(payload);
+    let mut out = Vec::with_capacity(PREFIX_BYTES + len);
+    wire::put_u32(&mut out, len as u32);
+    wire::put_u32(&mut out, crc32(&body));
+    out.extend_from_slice(&body);
+    out
+}
+
+/// Append-only record writer over one file. Every [`LogWriter::append`] is
+/// a single `write_all` + `sync_data`, so a crash can tear at most the
+/// last record — the exact failure [`scan`] tolerates.
+pub struct LogWriter {
+    file: File,
+    path: PathBuf,
+}
+
+impl LogWriter {
+    /// Create (truncating any existing file — a fresh log).
+    pub fn create(path: &Path) -> Result<LogWriter, JournalError> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let file = OpenOptions::new().create(true).write(true).truncate(true).open(path)?;
+        Ok(LogWriter { file, path: path.to_path_buf() })
+    }
+
+    /// Open an existing log for appends (after [`scan`] validated it and
+    /// any torn tail was truncated away).
+    pub fn open_append(path: &Path) -> Result<LogWriter, JournalError> {
+        let file = OpenOptions::new().append(true).open(path)?;
+        Ok(LogWriter { file, path: path.to_path_buf() })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Append one record and fsync it (durability point: when this
+    /// returns, the record survives a crash).
+    pub fn append(&mut self, rec_type: u8, round: u32, payload: &[u8]) -> Result<(), JournalError> {
+        self.file.write_all(&encode_record(rec_type, round, payload))?;
+        self.file.sync_data()?;
+        Ok(())
+    }
+}
+
+/// Read every valid record from a log file, tolerating a torn tail (see
+/// [`scan`]). The raw companion to [`recover`] — campaign logs and tests
+/// use it directly.
+pub fn read_log(path: &Path) -> Result<Vec<RawRecord>, JournalError> {
+    let bytes = std::fs::read(path)?;
+    Ok(scan(&bytes)?.0)
+}
+
+/// Truncate the last `k` records off a journal file (crash emulation: the
+/// harness uses this to reconstruct the intermediate states a kill between
+/// two appends of one step would leave behind, and the corruption tests to
+/// build valid prefixes).
+pub fn truncate_last_records(path: &Path, k: usize) -> Result<(), JournalError> {
+    let bytes = std::fs::read(path)?;
+    let (records, _) = scan(&bytes)?;
+    if records.len() < k {
+        return Err(JournalError::Replay(format!(
+            "cannot drop {k} records from a {}-record journal",
+            records.len()
+        )));
+    }
+    let end = if k == 0 {
+        bytes.len() as u64
+    } else {
+        records[records.len() - k].offset
+    };
+    let f = OpenOptions::new().write(true).open(path)?;
+    f.set_len(end)?;
+    f.sync_data()?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Typed payload codecs
+
+fn encode_setup(n: usize, t: usize, mask_bits: u32, plan: &IndexPlan, graph: &Graph) -> Vec<u8> {
+    let mut p = Vec::new();
+    wire::put_u32(&mut p, n as u32);
+    wire::put_u32(&mut p, t as u32);
+    p.push(mask_bits as u8);
+    wire::put_u32(&mut p, plan.dim() as u32);
+    match plan.indices() {
+        None => p.push(0),
+        Some(idx) => {
+            p.push(1);
+            wire::put_u32(&mut p, idx.len() as u32);
+            for &i in idx {
+                wire::put_u32(&mut p, i);
+            }
+        }
+    }
+    // adjacency rows verbatim: neighbors() order is load-bearing for
+    // bit-identical replay (bundle entry order, mask job order)
+    for i in 0..n {
+        let row = graph.neighbors(i);
+        wire::put_u32(&mut p, row.len() as u32);
+        for &j in row {
+            wire::put_u32(&mut p, j as u32);
+        }
+    }
+    p
+}
+
+struct Setup {
+    n: usize,
+    t: usize,
+    mask_bits: u32,
+    plan: Arc<IndexPlan>,
+    graph: Graph,
+}
+
+fn decode_setup(payload: &[u8]) -> Result<Setup, JournalError> {
+    let mut r = Reader::new(payload);
+    let n = r.u32("setup n")? as usize;
+    let t = r.u32("setup t")? as usize;
+    let mask_bits = r.u8("setup mask bits")? as u32;
+    if n == 0 || t == 0 || t > n {
+        return Err(JournalError::BadSetup(format!("n={n} t={t}")));
+    }
+    if !(1..=64).contains(&mask_bits) {
+        return Err(JournalError::BadSetup(format!("mask_bits={mask_bits}")));
+    }
+    let dim = r.u32("setup plan dim")? as usize;
+    let plan = match r.u8("setup plan kind")? {
+        0 => IndexPlan::identity(dim),
+        1 => {
+            let count = r.u32("setup plan index count")? as usize;
+            let need = count.checked_mul(4).ok_or(WireError::BadValue("plan index count"))?;
+            if r.remaining() < need {
+                return Err(WireError::Truncated("plan indices").into());
+            }
+            let mut idx = Vec::with_capacity(count);
+            for _ in 0..count {
+                idx.push(r.u32("plan index")?);
+            }
+            // IndexPlan::sparse asserts these; pre-validate so corrupt
+            // bytes surface as an error, never a panic
+            if !idx.windows(2).all(|w| w[0] < w[1]) {
+                return Err(JournalError::BadSetup("plan indices not strictly ascending".into()));
+            }
+            if idx.last().is_some_and(|&last| last as usize >= dim) {
+                return Err(JournalError::BadSetup("plan index out of dim".into()));
+            }
+            IndexPlan::sparse(idx, dim)
+        }
+        k => return Err(JournalError::BadSetup(format!("plan kind {k}"))),
+    };
+    let mut adj = Vec::with_capacity(n.min(r.remaining() / 4));
+    for _ in 0..n {
+        let deg = r.u32("adjacency row degree")? as usize;
+        let need = deg.checked_mul(4).ok_or(WireError::BadValue("adjacency row degree"))?;
+        if r.remaining() < need {
+            return Err(WireError::Truncated("adjacency row").into());
+        }
+        let mut row = Vec::with_capacity(deg);
+        for _ in 0..deg {
+            row.push(r.u32("adjacency entry")? as usize);
+        }
+        adj.push(row);
+    }
+    r.done()?;
+    let graph = Graph::from_adjacency(n, adj).map_err(JournalError::BadSetup)?;
+    Ok(Setup { n, t, mask_bits, plan, graph })
+}
+
+fn encode_ups(phase: u8, round: u32, ups: &[Up]) -> Vec<u8> {
+    let mut p = Vec::new();
+    p.push(phase);
+    wire::put_u32(&mut p, ups.len() as u32);
+    for up in ups {
+        p.extend_from_slice(&wire::encode_up(round, up));
+    }
+    p
+}
+
+fn decode_ups(
+    payload: &[u8],
+    plan: &Arc<IndexPlan>,
+    round: u32,
+) -> Result<(u8, Vec<Up>), JournalError> {
+    let mut r = Reader::new(payload);
+    let phase = r.u8("ups phase")?;
+    let count = r.u32("ups count")? as usize;
+    let mut ups = Vec::new();
+    for _ in 0..count {
+        let len = r.u32("ups inner frame length")? as usize;
+        if !(wire::HEADER_BYTES..=wire::MAX_FRAME).contains(&len) {
+            return Err(WireError::BadValue("ups inner frame length").into());
+        }
+        let body = r.take(len, "ups inner frame body")?;
+        let (rr, up) = wire::decode_up(body, plan)?;
+        if rr != round {
+            return Err(JournalError::WrongRound { expected: round, found: rr });
+        }
+        if up.phase() != phase {
+            return Err(JournalError::Replay(format!(
+                "phase-{} message inside a phase-{phase} ups record",
+                up.phase()
+            )));
+        }
+        ups.push(up);
+    }
+    r.done()?;
+    Ok((phase, ups))
+}
+
+fn encode_ids(ids: &[ClientId]) -> Vec<u8> {
+    let mut p = Vec::with_capacity(4 + ids.len() * 4);
+    wire::put_u32(&mut p, ids.len() as u32);
+    for &id in ids {
+        wire::put_u32(&mut p, id as u32);
+    }
+    p
+}
+
+fn read_ids(r: &mut Reader<'_>, what: &'static str) -> Result<Vec<ClientId>, JournalError> {
+    let count = r.u32(what)? as usize;
+    let need = count.checked_mul(4).ok_or(WireError::BadValue(what))?;
+    if r.remaining() < need {
+        return Err(WireError::Truncated(what).into());
+    }
+    let mut ids = Vec::with_capacity(count);
+    for _ in 0..count {
+        ids.push(r.client_id(what)? as ClientId);
+    }
+    Ok(ids)
+}
+
+fn decode_announce(payload: &[u8]) -> Result<Vec<ClientId>, JournalError> {
+    let mut r = Reader::new(payload);
+    let v3 = read_ids(&mut r, "announce ids")?;
+    r.done()?;
+    Ok(v3)
+}
+
+fn encode_words(values: &[u64]) -> Vec<u8> {
+    let mut p = Vec::with_capacity(4 + values.len() * 8);
+    wire::put_u32(&mut p, values.len() as u32);
+    for &v in values {
+        p.extend_from_slice(&v.to_le_bytes());
+    }
+    p
+}
+
+fn read_words(r: &mut Reader<'_>, what: &'static str) -> Result<Vec<u64>, JournalError> {
+    let count = r.u32(what)? as usize;
+    let need = count.checked_mul(8).ok_or(WireError::BadValue(what))?;
+    if r.remaining() < need {
+        return Err(WireError::Truncated(what).into());
+    }
+    let mut values = Vec::with_capacity(count);
+    for _ in 0..count {
+        values.push(r.u64(what)?);
+    }
+    Ok(values)
+}
+
+fn decode_checkpoint(payload: &[u8]) -> Result<Vec<u64>, JournalError> {
+    let mut r = Reader::new(payload);
+    let acc = read_words(&mut r, "checkpoint words")?;
+    r.done()?;
+    Ok(acc)
+}
+
+fn encode_final(out: &RoundOutput) -> Vec<u8> {
+    let mut p = Vec::new();
+    p.push(out.reliable as u8);
+    match &out.sum {
+        None => p.push(0),
+        Some(sum) => {
+            p.push(1);
+            p.extend_from_slice(&encode_words(sum));
+        }
+    }
+    for set in [&out.sets.v1, &out.sets.v2, &out.sets.v3, &out.sets.v4] {
+        p.extend_from_slice(&encode_ids(set));
+    }
+    p
+}
+
+fn decode_final(payload: &[u8]) -> Result<RoundOutput, JournalError> {
+    let mut r = Reader::new(payload);
+    let reliable = match r.u8("final reliable flag")? {
+        0 => false,
+        1 => true,
+        _ => return Err(WireError::BadValue("final reliable flag").into()),
+    };
+    let sum = match r.u8("final sum flag")? {
+        0 => None,
+        1 => Some(read_words(&mut r, "final sum words")?),
+        _ => return Err(WireError::BadValue("final sum flag").into()),
+    };
+    let v1 = read_ids(&mut r, "final v1")?;
+    let v2 = read_ids(&mut r, "final v2")?;
+    let v3 = read_ids(&mut r, "final v3")?;
+    let v4 = read_ids(&mut r, "final v4")?;
+    r.done()?;
+    Ok(RoundOutput { sum, reliable, sets: SurvivorSets { v1, v2, v3, v4 } })
+}
+
+// ---------------------------------------------------------------------------
+// The round journal
+
+/// One round's append-only journal: a [`LogWriter`] bound to the round tag
+/// every record is stamped with.
+pub struct Journal {
+    w: LogWriter,
+    round: u32,
+}
+
+impl Journal {
+    /// Canonical file name for a round journal inside a journal directory.
+    pub fn path_for(dir: &Path, round: u32) -> PathBuf {
+        dir.join(format!("round-{round:08x}.ccj"))
+    }
+
+    /// Start a fresh journal for one round: creates `dir` if needed,
+    /// truncates any stale file for this round, and writes the setup
+    /// record (the replay bootstrap: n, t, mask bits, index plan, and the
+    /// graph's adjacency rows verbatim).
+    pub fn create(
+        dir: &Path,
+        round: u32,
+        n: usize,
+        t: usize,
+        mask_bits: u32,
+        plan: &IndexPlan,
+        graph: &Graph,
+    ) -> Result<Journal, JournalError> {
+        let mut w = LogWriter::create(&Self::path_for(dir, round))?;
+        w.append(RT_SETUP, round, &encode_setup(n, t, mask_bits, plan, graph))?;
+        Ok(Journal { w, round })
+    }
+
+    /// Reopen an already-recovered journal for further appends.
+    pub fn open_append(path: &Path, round: u32) -> Result<Journal, JournalError> {
+        Ok(Journal { w: LogWriter::open_append(path)?, round })
+    }
+
+    pub fn round(&self) -> u32 {
+        self.round
+    }
+
+    pub fn path(&self) -> &Path {
+        self.w.path()
+    }
+
+    fn append(&mut self, rec_type: u8, payload: &[u8]) -> Result<(), JournalError> {
+        self.w.append(rec_type, self.round, payload)
+    }
+
+    /// Record one phase's `Up` batch (as full wire frames, so the journal
+    /// shares the wire codec's golden bytes and validation).
+    pub fn record_ups(&mut self, phase: u8, ups: &[Up]) -> Result<(), JournalError> {
+        self.append(RT_UPS, &encode_ups(phase, self.round, ups))
+    }
+
+    pub fn record_announce(&mut self, v3: &[ClientId]) -> Result<(), JournalError> {
+        self.append(RT_ANNOUNCE, &encode_ids(v3))
+    }
+
+    pub fn record_checkpoint(&mut self, acc: &[u64]) -> Result<(), JournalError> {
+        self.append(RT_CHECKPOINT, &encode_words(acc))
+    }
+
+    pub fn record_final(&mut self, out: &RoundOutput) -> Result<(), JournalError> {
+        self.append(RT_FINAL, &encode_final(out))
+    }
+}
+
+/// The [`RoundSink`] a journaled server writes through: each hook clones
+/// the typed batch into `Up` envelopes and appends one fsync'd record.
+pub struct JournalSink {
+    journal: Journal,
+}
+
+impl JournalSink {
+    pub fn new(journal: Journal) -> JournalSink {
+        JournalSink { journal }
+    }
+}
+
+impl RoundSink for JournalSink {
+    fn record_step0(&mut self, advs: &[AdvertiseKeys]) -> anyhow::Result<()> {
+        let ups: Vec<Up> = advs.iter().map(|a| Up::Adv(a.clone())).collect();
+        Ok(self.journal.record_ups(0, &ups)?)
+    }
+
+    fn record_step1(&mut self, uploads: &[ShareUpload]) -> anyhow::Result<()> {
+        let ups: Vec<Up> = uploads.iter().map(|u| Up::Shares(u.clone())).collect();
+        Ok(self.journal.record_ups(1, &ups)?)
+    }
+
+    fn record_step2(&mut self, inputs: &[MaskedInput]) -> anyhow::Result<()> {
+        let ups: Vec<Up> = inputs.iter().map(|m| Up::Masked(m.clone())).collect();
+        Ok(self.journal.record_ups(2, &ups)?)
+    }
+
+    fn record_announce(&mut self, announce: &SurvivorAnnounce) -> anyhow::Result<()> {
+        Ok(self.journal.record_announce(&announce.v3)?)
+    }
+
+    fn record_step3(&mut self, responses: &[UnmaskShares]) -> anyhow::Result<()> {
+        let ups: Vec<Up> = responses.iter().map(|u| Up::Unmask(u.clone())).collect();
+        Ok(self.journal.record_ups(3, &ups)?)
+    }
+
+    fn record_checkpoint(&mut self, acc: &[u64]) -> anyhow::Result<()> {
+        Ok(self.journal.record_checkpoint(acc)?)
+    }
+
+    fn record_final(&mut self, out: &RoundOutput) -> anyhow::Result<()> {
+        Ok(self.journal.record_final(out)?)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Recovery
+
+/// A recovered round: the replayed server plus everything the transport
+/// needs to resume serving exactly where the dead process stopped.
+pub struct Recovery {
+    pub round: u32,
+    pub n: usize,
+    pub t: usize,
+    pub mask_bits: u32,
+    pub plan: Arc<IndexPlan>,
+    /// The replayed server — bit-identical to the pre-crash instance (no
+    /// sink attached; the caller reattaches via the returned journal).
+    pub server: Server,
+    /// The phase whose collection is in progress (0–3), or 4 when the
+    /// round already finalized.
+    pub next_phase: u8,
+    /// The `Down`s of `next_phase`, regenerated byte-identically — what a
+    /// resuming transport re-sends to clients stuck one phase behind.
+    /// Empty for phase 0 (the down is the broadcast `Start`) and phase 4.
+    pub downs: Vec<(ClientId, Down)>,
+    /// The survivor announce, when replay reached phase 3.
+    pub announce: Option<Arc<SurvivorAnnounce>>,
+    /// The round output, when replay reached finalize.
+    pub output: Option<RoundOutput>,
+    /// The journal reopened in append mode (torn tail already truncated
+    /// away on disk), ready to be wrapped in a [`JournalSink`] again.
+    pub journal: Journal,
+}
+
+/// Replay a journal into a [`Recovery`]. Tolerates a torn tail (dropped,
+/// and truncated off the on-disk file); everything else that does not
+/// replay to a consistent state is a named [`JournalError`].
+pub fn recover(path: &Path) -> Result<Recovery, JournalError> {
+    let bytes = std::fs::read(path)?;
+    let (records, valid_len) = scan(&bytes)?;
+    if valid_len < bytes.len() {
+        log::warn!(
+            "journal {}: dropping {} torn trailing bytes",
+            path.display(),
+            bytes.len() - valid_len
+        );
+        let f = OpenOptions::new().write(true).open(path)?;
+        f.set_len(valid_len as u64)?;
+        f.sync_data()?;
+    }
+    let mut it = records.into_iter();
+    let first = it.next().ok_or(JournalError::MissingSetup)?;
+    if first.rec_type != RT_SETUP {
+        return Err(JournalError::MissingSetup);
+    }
+    let round = first.round;
+    let Setup { n, t, mask_bits, plan, graph } = decode_setup(&first.payload)?;
+    let setup_payload = first.payload;
+
+    let mut server = Server::new(n, t, mask_bits, plan.clone(), graph);
+    let mut next_phase = 0u8;
+    let mut downs: Vec<(ClientId, Down)> = Vec::new();
+    let mut announce: Option<Arc<SurvivorAnnounce>> = None;
+    let mut output: Option<RoundOutput> = None;
+
+    for rec in it {
+        if rec.round != round {
+            return Err(JournalError::WrongRound { expected: round, found: rec.round });
+        }
+        match rec.rec_type {
+            RT_SETUP => {
+                // an identical duplicate is benign; a conflicting one is not
+                if rec.payload != setup_payload {
+                    return Err(JournalError::Replay(
+                        "conflicting duplicate setup record".into(),
+                    ));
+                }
+            }
+            RT_UPS => {
+                let (phase, ups) = decode_ups(&rec.payload, &plan, round)?;
+                // a duplicate of the just-applied batch replays through the
+                // server's first-wins dedupe (regenerating identical downs);
+                // anything else out of order cannot replay consistently
+                let duplicate = phase + 1 == next_phase;
+                if phase != next_phase && !duplicate {
+                    return Err(JournalError::Replay(format!(
+                        "out-of-order ups record: phase {phase} while expecting {next_phase}"
+                    )));
+                }
+                match phase {
+                    0 => {
+                        let advs = take_typed(ups, |u| match u {
+                            Up::Adv(a) => Some(a),
+                            _ => None,
+                        })?;
+                        let bundles = server
+                            .step0_route_keys(advs)
+                            .map_err(|e| JournalError::Replay(format!("step 0: {e}")))?;
+                        if !duplicate {
+                            downs =
+                                bundles.into_iter().map(|(id, b)| (id, Down::Bundle(b))).collect();
+                            next_phase = 1;
+                        }
+                    }
+                    1 => {
+                        let uploads = take_typed(ups, |u| match u {
+                            Up::Shares(s) => Some(s),
+                            _ => None,
+                        })?;
+                        let deliveries = server
+                            .step1_route_shares(uploads)
+                            .map_err(|e| JournalError::Replay(format!("step 1: {e}")))?;
+                        if !duplicate {
+                            downs = deliveries
+                                .into_iter()
+                                .map(|(id, d)| (id, Down::Delivery(d)))
+                                .collect();
+                            next_phase = 2;
+                        }
+                    }
+                    2 => {
+                        let inputs = take_typed(ups, |u| match u {
+                            Up::Masked(m) => Some(m),
+                            _ => None,
+                        })?;
+                        let ann = Arc::new(
+                            server
+                                .step2_collect_masked(inputs)
+                                .map_err(|e| JournalError::Replay(format!("step 2: {e}")))?,
+                        );
+                        if !duplicate {
+                            downs = ann
+                                .v3
+                                .iter()
+                                .map(|&id| (id, Down::Announce(ann.clone())))
+                                .collect();
+                            announce = Some(ann);
+                            next_phase = 3;
+                        }
+                    }
+                    3 => {
+                        let responses = take_typed(ups, |u| match u {
+                            Up::Unmask(r) => Some(r),
+                            _ => None,
+                        })?;
+                        let out = server
+                            .finalize(responses)
+                            .map_err(|e| JournalError::Replay(format!("finalize: {e}")))?;
+                        if !duplicate {
+                            downs.clear();
+                            output = Some(out);
+                            next_phase = 4;
+                        }
+                    }
+                    p => {
+                        return Err(JournalError::Replay(format!("ups record for phase {p}")));
+                    }
+                }
+            }
+            RT_ANNOUNCE => {
+                let v3 = decode_announce(&rec.payload)?;
+                match &announce {
+                    Some(a) if a.v3 == v3 => {}
+                    _ => return Err(JournalError::AnnounceMismatch),
+                }
+            }
+            RT_CHECKPOINT => {
+                let acc = decode_checkpoint(&rec.payload)?;
+                if server.packed_accumulator() != acc {
+                    return Err(JournalError::CheckpointMismatch);
+                }
+            }
+            RT_FINAL => {
+                let rec_out = decode_final(&rec.payload)?;
+                match &output {
+                    Some(out)
+                        if out.sum == rec_out.sum
+                            && out.reliable == rec_out.reliable
+                            && out.sets == rec_out.sets => {}
+                    _ => return Err(JournalError::FinalMismatch),
+                }
+            }
+            other => return Err(JournalError::BadRecordType(other)),
+        }
+    }
+
+    let journal = Journal::open_append(path, round)?;
+    Ok(Recovery {
+        round,
+        n,
+        t,
+        mask_bits,
+        plan,
+        server,
+        next_phase,
+        downs,
+        announce,
+        output,
+        journal,
+    })
+}
+
+/// Extract one typed message kind from a replayed `Up` batch; any other
+/// variant inside the record means the journal was not written by the sink
+/// and cannot be replayed.
+fn take_typed<T>(ups: Vec<Up>, f: impl Fn(Up) -> Option<T>) -> Result<Vec<T>, JournalError> {
+    let total = ups.len();
+    let out: Vec<T> = ups.into_iter().filter_map(&f).collect();
+    if out.len() != total {
+        return Err(JournalError::Replay("mixed message kinds in one ups record".into()));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::IndexPlan;
+
+    #[test]
+    fn crc32_matches_the_ieee_check_value() {
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn records_round_trip_through_scan() {
+        let a = encode_record(RT_SETUP, 7, b"alpha");
+        let b = encode_record(RT_UPS, 7, b"");
+        let mut stream = a.clone();
+        stream.extend_from_slice(&b);
+        let (recs, valid) = scan(&stream).unwrap();
+        assert_eq!(valid, stream.len());
+        assert_eq!(recs.len(), 2);
+        assert_eq!((recs[0].rec_type, recs[0].round, recs[0].payload.as_slice()), (RT_SETUP, 7, &b"alpha"[..]));
+        assert_eq!(recs[1].offset as usize, a.len());
+    }
+
+    #[test]
+    fn torn_tail_is_dropped_at_every_byte_offset() {
+        let a = encode_record(RT_SETUP, 1, b"payload");
+        let b = encode_record(RT_UPS, 1, &[9; 40]);
+        let mut stream = a.clone();
+        stream.extend_from_slice(&b);
+        for cut in a.len()..stream.len() {
+            let (recs, valid) = scan(&stream[..cut]).expect("torn tail must not error");
+            assert_eq!(recs.len(), 1, "cut={cut}");
+            assert_eq!(valid, a.len(), "cut={cut}");
+        }
+        // cutting into the *first* record leaves an empty valid prefix
+        for cut in 0..a.len() {
+            let (recs, valid) = scan(&a[..cut]).unwrap();
+            assert!(recs.is_empty(), "cut={cut}");
+            assert_eq!(valid, 0);
+        }
+    }
+
+    #[test]
+    fn checksum_flip_is_a_named_error() {
+        let mut stream = encode_record(RT_UPS, 3, b"some payload");
+        for pos in 0..stream.len() {
+            let mut bad = stream.clone();
+            bad[pos] ^= 0x40;
+            // every single-bit-flip outcome must be an Err or a clean
+            // torn-tail drop — never a panic, never a silently different
+            // record that still checksums
+            match scan(&bad) {
+                Ok((recs, _)) => {
+                    assert!(recs.is_empty(), "flip at {pos} produced a valid record");
+                }
+                Err(
+                    JournalError::Checksum { .. }
+                    | JournalError::Corrupt { .. }
+                    | JournalError::BadVersion(_),
+                ) => {}
+                Err(e) => panic!("flip at {pos}: unexpected error {e}"),
+            }
+        }
+        // an explicit checksum-byte flip names the stored/computed pair
+        stream[4] ^= 0xFF;
+        assert!(matches!(scan(&stream), Err(JournalError::Checksum { offset: 0, .. })));
+    }
+
+    #[test]
+    fn setup_payload_round_trips() {
+        let mut g = Graph::empty(4);
+        g.add_edge(0, 2);
+        g.add_edge(0, 1);
+        g.add_edge(3, 1);
+        let plan = IndexPlan::sparse(vec![1, 5, 9], 12);
+        let p = encode_setup(4, 2, 48, &plan, &g);
+        let s = decode_setup(&p).unwrap();
+        assert_eq!((s.n, s.t, s.mask_bits), (4, 2, 48));
+        assert_eq!(*s.plan, *plan);
+        // neighbor order is preserved verbatim, not sorted
+        assert_eq!(s.graph.neighbors(0), &[2, 1]);
+        assert_eq!(s.graph.neighbors(1), &[0, 3]);
+        assert_eq!(s.graph, g);
+    }
+
+    #[test]
+    fn corrupt_setup_payloads_error_never_panic() {
+        let g = Graph::complete(3);
+        let plan = IndexPlan::identity(4);
+        let good = encode_setup(3, 2, 32, &plan, &g);
+        // truncation at every length
+        for cut in 0..good.len() {
+            assert!(decode_setup(&good[..cut]).is_err(), "cut={cut}");
+        }
+        // t > n
+        let mut bad = good.clone();
+        bad[4..8].copy_from_slice(&9u32.to_le_bytes());
+        assert!(matches!(decode_setup(&bad), Err(JournalError::BadSetup(_))));
+        // mask_bits = 0
+        let mut bad = good.clone();
+        bad[8] = 0;
+        assert!(matches!(decode_setup(&bad), Err(JournalError::BadSetup(_))));
+        // non-ascending sparse indices
+        let sparse = encode_setup(3, 2, 32, &IndexPlan::sparse(vec![1, 2], 4), &g);
+        let mut bad = sparse.clone();
+        // indices live at offset 9 (dim) + 4 .. : kind(1) count(4) idx..
+        let idx_off = 9 + 4 + 1 + 4;
+        bad[idx_off..idx_off + 4].copy_from_slice(&3u32.to_le_bytes());
+        bad[idx_off + 4..idx_off + 8].copy_from_slice(&3u32.to_le_bytes());
+        assert!(matches!(decode_setup(&bad), Err(JournalError::BadSetup(_))));
+        // asymmetric adjacency
+        let mut g2 = Graph::empty(2);
+        g2.add_edge(0, 1);
+        let mut enc = encode_setup(2, 1, 32, &plan, &g2);
+        let row0 = enc.len() - 16; // two rows of deg(4)+entry(4)
+        enc[row0 + 4..row0 + 8].copy_from_slice(&0u32.to_le_bytes()); // 0 -> 0 self-loop
+        assert!(matches!(decode_setup(&enc), Err(JournalError::BadSetup(_))));
+    }
+
+    #[test]
+    fn final_payload_round_trips() {
+        let out = RoundOutput {
+            sum: Some(vec![0, u64::MAX, 17]),
+            reliable: true,
+            sets: SurvivorSets {
+                v1: vec![0, 1, 2, 3],
+                v2: vec![0, 1, 3],
+                v3: vec![0, 3],
+                v4: vec![0, 3],
+            },
+        };
+        let back = decode_final(&encode_final(&out)).unwrap();
+        assert_eq!(back.sum, out.sum);
+        assert_eq!(back.reliable, out.reliable);
+        assert_eq!(back.sets, out.sets);
+        let none = RoundOutput { sum: None, reliable: false, sets: SurvivorSets::default() };
+        let back = decode_final(&encode_final(&none)).unwrap();
+        assert_eq!(back.sum, None);
+        assert!(!back.reliable);
+    }
+
+    #[test]
+    fn log_writer_appends_survive_reopen() {
+        let dir = std::env::temp_dir().join(format!("ccesa-journal-unit-{}", std::process::id()));
+        let path = dir.join("unit.ccl");
+        let mut w = LogWriter::create(&path).unwrap();
+        w.append(RT_USER_BASE, 5, b"one").unwrap();
+        drop(w);
+        let mut w = LogWriter::open_append(&path).unwrap();
+        w.append(RT_USER_BASE + 1, 5, b"two").unwrap();
+        drop(w);
+        let recs = read_log(&path).unwrap();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].payload, b"one");
+        assert_eq!(recs[1].rec_type, RT_USER_BASE + 1);
+        // drop the last record; the first survives
+        truncate_last_records(&path, 1).unwrap();
+        let recs = read_log(&path).unwrap();
+        assert_eq!(recs.len(), 1);
+        assert!(truncate_last_records(&path, 2).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

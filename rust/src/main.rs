@@ -10,8 +10,16 @@
 //! ccesa fl --config configs/quickstart.json  # config-driven FL run
 //! ccesa kernels                              # kernel-dispatch report (JSON)
 //! ccesa serve --n 1000 --addr 127.0.0.1:7171 # socket round server
+//! ccesa serve --journal runs/j ...           # …with a crash-recovery journal
+//! ccesa recover --journal runs/j ...         # finish an interrupted round
 //! ccesa connect --n 1000 --addr ...          # drive n loopback clients
 //! ```
+//!
+//! A journaled `serve` that dies — crash, kill, SIGTERM — leaves a
+//! resumable round on disk; `recover` replays the journal and finishes the
+//! round with the reconnecting clients (`connect` retries and resubmits
+//! automatically). SIGTERM/SIGINT exit nonzero with the named
+//! "round interrupted, resumable" error instead of dying mid-write.
 
 use anyhow::{anyhow, bail, Result};
 use ccesa::analysis::bounds::{
@@ -38,7 +46,7 @@ fn main() -> Result<()> {
         "ccesa",
         "Communication-Computation Efficient Secure Aggregation (Choi et al. 2020)\n\
          subcommands: analyze {pstar|costs|turbo|montecarlo} | round | fl | kernels \
-         | serve | connect",
+         | serve | recover | connect",
     )
     .flag("n", Some("100"), "number of clients")
     .flag("p", None, "ER connection probability (default: p*(n, qtotal))")
@@ -51,6 +59,11 @@ fn main() -> Result<()> {
     .flag("codec", Some("dense"), "payload codec: dense | topk:<frac> | randk:<frac>")
     .flag("addr", Some("127.0.0.1:7171"), "listen/connect address for serve|connect")
     .flag("timeout-s", Some("120"), "wire round wall-clock budget in seconds")
+    .flag(
+        "journal",
+        None,
+        "serve: journal directory for crash recovery; recover: journal file (or its directory)",
+    )
     .switch("sa", "use the complete graph (Bonawitz et al. SA)")
     .switch("check", "serve: verify the wire round against the in-process engine")
     .parse();
@@ -68,6 +81,7 @@ fn main() -> Result<()> {
             Ok(())
         }
         Some("serve") => serve_cmd(&args),
+        Some("recover") => recover_cmd(&args),
         Some("connect") => connect_cmd(&args),
         other => {
             if let Some(o) = other {
@@ -232,14 +246,7 @@ fn wire_round_config(args: &Args) -> Result<(ProtocolConfig, Vec<Vec<u64>>, u32)
     Ok((cfg, models, round))
 }
 
-fn serve_cmd(args: &Args) -> Result<()> {
-    let (cfg, models, round) = wire_round_config(args)?;
-    let timeout = Duration::from_secs(args.req::<u64>("timeout-s"));
-    let addr: String = args.req("addr");
-    let listener = std::net::TcpListener::bind(&addr)?;
-    println!("serving round {round:#010x} for n={} clients on {}", cfg.n, listener.local_addr()?);
-    let setup = ccesa::coordinator::derive_round_setup(&cfg, &models);
-    let r = ccesa::net::socket::serve(&listener, &cfg, setup.plan, setup.graph, round, timeout)?;
+fn print_round_result(r: &ccesa::coordinator::CoordRoundResult) {
     println!(
         "reliable={} |V1..V4|={},{},{},{} framed up/down = {}/{} bytes (logical {}/{})",
         r.reliable,
@@ -252,6 +259,26 @@ fn serve_cmd(args: &Args) -> Result<()> {
         r.stats.bytes_up.iter().sum::<u64>(),
         r.stats.bytes_down.iter().sum::<u64>(),
     );
+}
+
+fn serve_cmd(args: &Args) -> Result<()> {
+    ccesa::util::shutdown::install_handlers();
+    let (cfg, models, round) = wire_round_config(args)?;
+    let timeout = Duration::from_secs(args.req::<u64>("timeout-s"));
+    let addr: String = args.req("addr");
+    let listener = std::net::TcpListener::bind(&addr)?;
+    println!("serving round {round:#010x} for n={} clients on {}", cfg.n, listener.local_addr()?);
+    let setup = ccesa::coordinator::derive_round_setup(&cfg, &models);
+    let mut opts = ccesa::net::socket::ServeOptions::new().timeout(timeout);
+    if let Some(dir) = args.get_str("journal") {
+        opts = opts.journal(dir.to_string());
+        println!(
+            "journaling to {} (resume with `ccesa recover --journal …` after a crash)",
+            ccesa::journal::Journal::path_for(std::path::Path::new(&dir), round).display()
+        );
+    }
+    let r = ccesa::net::socket::serve_with(&listener, &cfg, setup.plan, setup.graph, round, &opts)?;
+    print_round_result(&r);
     if args.get_bool("check") {
         let sync = run_round(&cfg, &models)?;
         if r.reliable != sync.reliable {
@@ -271,13 +298,37 @@ fn serve_cmd(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Finish a round an interrupted journaled `serve` left on disk. Accepts
+/// the journal file itself or the directory `serve --journal` was given
+/// (the file name is then derived from `--seed`, like `serve` derived it).
+fn recover_cmd(args: &Args) -> Result<()> {
+    ccesa::util::shutdown::install_handlers();
+    let timeout = Duration::from_secs(args.req::<u64>("timeout-s"));
+    let addr: String = args.req("addr");
+    let journal: String = args
+        .get_str("journal")
+        .ok_or_else(|| anyhow!("recover requires --journal <file-or-directory>"))?;
+    let mut path = std::path::PathBuf::from(&journal);
+    if path.is_dir() {
+        let seed: u64 = args.req("seed");
+        path = ccesa::journal::Journal::path_for(&path, ccesa::net::socket::round_tag(seed));
+    }
+    let listener = std::net::TcpListener::bind(&addr)?;
+    println!("resuming round from {} on {}", path.display(), listener.local_addr()?);
+    let r = ccesa::net::socket::serve_resume(&listener, &path, timeout)?;
+    print_round_result(&r);
+    Ok(())
+}
+
 fn connect_cmd(args: &Args) -> Result<()> {
     let (cfg, models, round) = wire_round_config(args)?;
     let timeout = Duration::from_secs(args.req::<u64>("timeout-s"));
     let addr: String = args.req("addr");
     let addr: std::net::SocketAddr =
         addr.parse().map_err(|e| anyhow!("bad --addr {addr:?}: {e}"))?;
-    ccesa::net::socket::drive_clients(addr, &cfg, &models, round, timeout)?;
+    // retries failed connects with jittered backoff and resubmits after a
+    // server restart — the client side of `serve --journal` + `recover`
+    ccesa::net::socket::drive_clients_retry(move || addr, &cfg, &models, round, timeout)?;
     println!("drove {} clients through round {round:#010x} against {addr}", cfg.n);
     Ok(())
 }

@@ -12,9 +12,24 @@
 //!   [`Server`] in client-id order. Malformed frames close the offending
 //!   connection; replayed or stale frames are discarded by phase — both
 //!   without disturbing the round for honest clients.
+//! * [`serve_with`] — [`serve`] plus a journal: every state transition is
+//!   appended (fsync'd) to a `crate::journal` round log before it takes
+//!   effect, so the process can die at any point and [`serve_resume`] can
+//!   finish the round from the log alone.
+//! * [`serve_resume`] — replay a round journal into a live [`Server`] and
+//!   pick the round up where the dead process stopped: re-accept the
+//!   surviving clients, re-send the `Down`s they never received (clients
+//!   resubmit their last `Up` on reconnect, which the server's first-wins
+//!   dedupe makes idempotent), and run the remaining phases normally.
 //! * [`drive_clients`] — the client side: n poll-able [`ClientSm`]s behind
 //!   n blocking loopback sockets, stepped in parallel sweeps exactly like
-//!   the event loop's lanes.
+//!   the event loop's lanes. Connect failures back off exponentially with
+//!   deterministic jitter instead of failing the round.
+//! * [`drive_clients_retry`] — the restart-tolerant client side: lanes
+//!   keep the last `Up` frame they sent and, when the server dies
+//!   mid-round, reconnect (to a freshly resolved address) and resubmit it;
+//!   duplicate `Down`s re-delivered by a resumed server are answered from
+//!   that cache without re-stepping the one-shot state machine.
 //! * [`run_round_wire`] — both halves wired together on an ephemeral
 //!   loopback port; the shape the differential harness runs as the `wire`
 //!   executor.
@@ -24,19 +39,26 @@
 //! round over sockets is `NetStats::logical_eq` to the in-process engine.
 //! On top of that, `framed_up`/`framed_down` count raw bytes as read from
 //! and written to the sockets, framing overhead and duplicates included.
+//! A resumed round's stats cover post-resume traffic only (the journal
+//! records protocol state, not byte accounting).
 
 use crate::codec::IndexPlan;
 use crate::coordinator::{derive_round_setup, event_loop_workers, CoordRoundResult};
 use crate::graph::Graph;
+use crate::journal::{self, Journal, JournalSink};
 use crate::net::{Dir, NetStats};
 use crate::protocol::client::ClientSm;
 use crate::protocol::messages::*;
 use crate::protocol::server::{RoundOutput, Server};
 use crate::protocol::{ClientId, ProtocolConfig};
+use crate::util::rng::Rng;
+use crate::util::shutdown;
 use crate::wire;
 use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
 use std::io::{self, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -46,10 +68,98 @@ pub const DEFAULT_TIMEOUT: Duration = Duration::from_secs(120);
 /// Sleep between poll sweeps when nothing moved.
 const POLL_PAUSE: Duration = Duration::from_micros(200);
 
+/// The named prefix every "server died / was told to die mid-round" error
+/// starts with. `ccesa serve --journal` exits nonzero with this message;
+/// the round is finishable via [`serve_resume`].
+pub const INTERRUPTED: &str = "round interrupted, resumable";
+
+/// How long a phase-4 resume (the round already finalized on disk) keeps
+/// accepting stragglers from the crashed attempt to wave them off with
+/// `Finish` before returning the replayed output.
+const RESUME_GRACE: Duration = Duration::from_millis(600);
+
+/// First delay of the connect backoff schedule.
+const BACKOFF_BASE: Duration = Duration::from_millis(1);
+
+/// Ceiling of the connect backoff schedule.
+const BACKOFF_CAP: Duration = Duration::from_millis(200);
+
 /// The round tag stamped into every frame header, derived from the config
 /// seed so both endpoints agree without negotiation.
 pub fn round_tag(seed: u64) -> u32 {
     (seed ^ (seed >> 32)) as u32
+}
+
+/// Where a journaled server deliberately dies, for crash-injection tests:
+/// after the named transition is journaled but before any of its output
+/// frames are flushed to clients. Each variant is one row of the
+/// crash-matrix in DESIGN.md §13.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StopAfter {
+    /// Journal created (setup record on disk), all connections accepted,
+    /// `Start` never sent.
+    Setup,
+    /// `apply_phase(p)` ran (its records are on disk, its `Down`s are
+    /// queued) but nothing was flushed.
+    Phase(u8),
+}
+
+/// Knobs for [`serve_with`] beyond the positional round identity.
+#[derive(Debug, Clone, Default)]
+pub struct ServeOptions {
+    /// Wall-clock budget for the whole round. `None` → [`DEFAULT_TIMEOUT`].
+    pub timeout: Option<Duration>,
+    /// Journal directory: when set, every state transition is fsync'd to
+    /// `<dir>/round-<tag>.ccj` before it takes effect.
+    pub journal_dir: Option<PathBuf>,
+    /// Crash injection point (tests only).
+    pub stop_after: Option<StopAfter>,
+}
+
+impl ServeOptions {
+    pub fn new() -> ServeOptions {
+        ServeOptions::default()
+    }
+
+    pub fn timeout(mut self, t: Duration) -> ServeOptions {
+        self.timeout = Some(t);
+        self
+    }
+
+    pub fn journal(mut self, dir: impl Into<PathBuf>) -> ServeOptions {
+        self.journal_dir = Some(dir.into());
+        self
+    }
+
+    pub fn stop_after(mut self, point: StopAfter) -> ServeOptions {
+        self.stop_after = Some(point);
+        self
+    }
+}
+
+/// Deterministic jittered exponential backoff between connect attempts,
+/// seeded from the round tag and the client id so a replayed round sleeps
+/// an identical schedule (satisfying the same determinism contract as the
+/// protocol RNG streams).
+struct Backoff {
+    rng: Rng,
+    cur: Duration,
+}
+
+impl Backoff {
+    fn new(round: u32, id: ClientId) -> Backoff {
+        let seed = ((round as u64) << 24) ^ (id as u64) ^ 0x00B0_0FF5;
+        Backoff { rng: Rng::new(seed), cur: BACKOFF_BASE }
+    }
+
+    /// Next wait: half the current step plus uniform jitter over the other
+    /// half, then double the step toward [`BACKOFF_CAP`].
+    fn next_wait(&mut self) -> Duration {
+        let us = self.cur.as_micros() as u64;
+        let wait = Duration::from_micros(us / 2 + self.rng.gen_range((us / 2).max(1)));
+        self.cur = (self.cur * 2).min(BACKOFF_CAP);
+        wait
+    }
 }
 
 /// One accepted connection: nonblocking stream plus reassembly and
@@ -113,6 +223,11 @@ impl Conn {
             self.tx_pos = 0;
         }
         written
+    }
+
+    /// Nothing queued remains unwritten (either flushed or the peer died).
+    fn drained(&self) -> bool {
+        !self.open || self.tx_pos >= self.tx.len()
     }
 
     /// Drain the socket into the frame buffer; returns bytes read. Never
@@ -253,13 +368,16 @@ impl Exchange {
         }
     }
 
-    /// One phase barrier: flush pending writes, pump awaited connections,
-    /// decode their answers, and return once no open connection is still
+    /// One phase barrier: flush pending writes, pump open connections,
+    /// decode awaited answers, and return once no open connection is still
     /// awaited. Yields the parked `Up`s sorted by sender id — the same
     /// order the event loop drains its lanes in.
     fn collect(&mut self, phase: u8) -> Result<Vec<Up>> {
         let deadline = self.deadline;
         loop {
+            if shutdown::requested() {
+                bail!("{INTERRUPTED}: shutdown requested during phase {phase}");
+            }
             let mut outstanding = 0;
             let Exchange { conns, claimed, stats, plan, round, .. } = self;
             for (ci, c) in conns.iter_mut().enumerate() {
@@ -267,12 +385,14 @@ impl Exchange {
                 if written > 0 {
                     stats.record_framed(Dir::Down, written);
                 }
-                if c.open && c.awaiting {
+                if c.open {
                     let read = c.pump();
                     if read > 0 {
                         stats.record_framed(Dir::Up, read);
                     }
-                    drain_frames(c, ci, claimed, plan, *round, phase);
+                    if c.awaiting {
+                        drain_frames(c, ci, claimed, plan, *round, phase);
+                    }
                 }
                 if c.open && c.awaiting {
                     outstanding += 1;
@@ -292,25 +412,109 @@ impl Exchange {
     }
 }
 
-/// Serve one aggregation round to `cfg.n` socket clients.
+/// Route one phase's collected `Up`s into the server and queue the
+/// resulting `Down`s, charging logical byte stats exactly as the event
+/// loop does. Returns the round output after phase 3, `None` before.
 ///
-/// `plan` and `graph` must come from the round's [`derive_round_setup`] so
-/// the server validates incoming `Masked` frames against the same index
-/// plan the clients encode with. Aborts (|V_k| < t) propagate as `Err`
-/// after the connections are dropped, which the honest driver observes as
-/// mid-round EOF — both sides fail, matching the engine's abort shape.
-pub fn serve(
-    listener: &TcpListener,
-    cfg: &ProtocolConfig,
-    plan: Arc<IndexPlan>,
-    graph: Graph,
-    round: u32,
-    timeout: Duration,
-) -> Result<CoordRoundResult> {
-    let deadline = Instant::now() + timeout;
+/// Shared by [`serve_with`] (phases 0–3 in sequence) and [`serve_resume`]
+/// (the remaining phases after replay) so the two paths cannot drift.
+fn apply_phase(
+    server: &mut Server,
+    ex: &mut Exchange,
+    phase: u8,
+    ups: Vec<Up>,
+) -> Result<Option<RoundOutput>> {
+    match phase {
+        0 => {
+            let mut advs = Vec::new();
+            for up in ups {
+                match up {
+                    Up::Adv(a) => {
+                        ex.stats.record(0, Dir::Up, a.id, a.size_bytes());
+                        advs.push(a);
+                    }
+                    Up::Dropped(id, step) => log::trace!("client {id} dropped at step {step}"),
+                    Up::Failed(id, step, e) => log::debug!("client {id} failed step {step}: {e}"),
+                    other => bail!("protocol order violation in phase 0: {other:?}"),
+                }
+            }
+            let bundles = server.step0_route_keys(advs)?;
+            for (id, b) in bundles {
+                ex.stats.record(0, Dir::Down, id, b.size_bytes());
+                ex.send(id, &Down::Bundle(b));
+            }
+            Ok(None)
+        }
+        1 => {
+            let mut uploads = Vec::new();
+            for up in ups {
+                match up {
+                    Up::Shares(u) => {
+                        ex.stats.record(1, Dir::Up, u.from, u.size_bytes());
+                        uploads.push(u);
+                    }
+                    Up::Dropped(id, step) => log::trace!("client {id} dropped at step {step}"),
+                    Up::Failed(id, step, e) => log::debug!("client {id} withdrew step {step}: {e}"),
+                    other => bail!("protocol order violation in phase 1: {other:?}"),
+                }
+            }
+            let deliveries = server.step1_route_shares(uploads)?;
+            for (id, d) in deliveries {
+                ex.stats.record(1, Dir::Down, id, d.size_bytes());
+                ex.send(id, &Down::Delivery(d));
+            }
+            Ok(None)
+        }
+        2 => {
+            let mut masked = Vec::new();
+            for up in ups {
+                match up {
+                    Up::Masked(m) => {
+                        ex.stats.record(2, Dir::Up, m.id, m.size_bytes());
+                        ex.stats.record_masked_payload(m.payload_bytes());
+                        masked.push(m);
+                    }
+                    Up::Dropped(id, step) => log::trace!("client {id} dropped at step {step}"),
+                    Up::Failed(id, step, e) => log::debug!("client {id} failed step {step}: {e}"),
+                    other => bail!("protocol order violation in phase 2: {other:?}"),
+                }
+            }
+            let announce = Arc::new(server.step2_collect_masked(masked)?);
+            // one broadcast: encode once, queue the same frame per V3 member
+            let frame = wire::encode_down(ex.round, &Down::Announce(announce.clone()));
+            for &id in &announce.v3 {
+                ex.stats.record(2, Dir::Down, id, announce.size_bytes());
+                ex.send_frame(id, &frame);
+            }
+            Ok(None)
+        }
+        3 => {
+            let mut responses = Vec::new();
+            for up in ups {
+                match up {
+                    Up::Unmask(u) => {
+                        ex.stats.record(3, Dir::Up, u.from, u.size_bytes());
+                        responses.push(u);
+                    }
+                    Up::Dropped(id, step) => log::trace!("client {id} dropped at step {step}"),
+                    Up::Failed(id, step, e) => log::debug!("client {id} failed step {step}: {e}"),
+                    other => bail!("protocol order violation in phase 3: {other:?}"),
+                }
+            }
+            Ok(Some(server.finalize(responses)?))
+        }
+        _ => bail!("apply_phase called with out-of-range phase {phase}"),
+    }
+}
+
+/// Accept exactly `n` connections (nonblocking poll against `deadline`).
+fn accept_exact(listener: &TcpListener, n: usize, deadline: Instant) -> Result<Vec<Conn>> {
     listener.set_nonblocking(true).context("set_nonblocking on listener")?;
-    let mut conns = Vec::with_capacity(cfg.n);
-    while conns.len() < cfg.n {
+    let mut conns = Vec::with_capacity(n);
+    while conns.len() < n {
+        if shutdown::requested() {
+            bail!("{INTERRUPTED}: shutdown requested while accepting connections");
+        }
         match listener.accept() {
             Ok((stream, _)) => {
                 let _ = stream.set_nodelay(true);
@@ -319,7 +523,7 @@ pub fn serve(
             }
             Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
                 if Instant::now() >= deadline {
-                    bail!("accepted {} of {} connections before timeout", conns.len(), cfg.n);
+                    bail!("accepted {} of {n} connections before timeout", conns.len());
                 }
                 std::thread::sleep(POLL_PAUSE);
             }
@@ -327,100 +531,13 @@ pub fn serve(
             Err(e) => return Err(e).context("accept"),
         }
     }
+    Ok(conns)
+}
 
-    let mut server = Server::new(cfg.n, cfg.t, cfg.mask_bits, plan.clone(), graph);
-    let mut ex = Exchange {
-        conns,
-        claimed: vec![None; cfg.n],
-        stats: NetStats::new(cfg.n),
-        plan,
-        round,
-        deadline,
-    };
-
-    // ---- phase 0: advertise keys (Start itself carries no logical bytes)
-    let start = wire::encode_down(round, &Down::Start);
-    for c in ex.conns.iter_mut() {
-        c.queue(&start);
-        c.awaiting = true;
-    }
-    let mut advs = Vec::new();
-    for up in ex.collect(0)? {
-        match up {
-            Up::Adv(a) => {
-                ex.stats.record(0, Dir::Up, a.id, a.size_bytes());
-                advs.push(a);
-            }
-            Up::Dropped(id, step) => log::trace!("client {id} dropped at step {step}"),
-            Up::Failed(id, step, e) => log::debug!("client {id} failed step {step}: {e}"),
-            other => bail!("protocol order violation in phase 0: {other:?}"),
-        }
-    }
-    let bundles = server.step0_route_keys(advs)?;
-    for (id, b) in bundles {
-        ex.stats.record(0, Dir::Down, id, b.size_bytes());
-        ex.send(id, &Down::Bundle(b));
-    }
-
-    // ---- phase 1: share keys
-    let mut uploads = Vec::new();
-    for up in ex.collect(1)? {
-        match up {
-            Up::Shares(u) => {
-                ex.stats.record(1, Dir::Up, u.from, u.size_bytes());
-                uploads.push(u);
-            }
-            Up::Dropped(id, step) => log::trace!("client {id} dropped at step {step}"),
-            Up::Failed(id, step, e) => log::debug!("client {id} withdrew step {step}: {e}"),
-            other => bail!("protocol order violation in phase 1: {other:?}"),
-        }
-    }
-    let deliveries = server.step1_route_shares(uploads)?;
-    for (id, d) in deliveries {
-        ex.stats.record(1, Dir::Down, id, d.size_bytes());
-        ex.send(id, &Down::Delivery(d));
-    }
-
-    // ---- phase 2: masked inputs
-    let mut masked = Vec::new();
-    for up in ex.collect(2)? {
-        match up {
-            Up::Masked(m) => {
-                ex.stats.record(2, Dir::Up, m.id, m.size_bytes());
-                ex.stats.record_masked_payload(m.payload_bytes());
-                masked.push(m);
-            }
-            Up::Dropped(id, step) => log::trace!("client {id} dropped at step {step}"),
-            Up::Failed(id, step, e) => log::debug!("client {id} failed step {step}: {e}"),
-            other => bail!("protocol order violation in phase 2: {other:?}"),
-        }
-    }
-    let announce = Arc::new(server.step2_collect_masked(masked)?);
-    // one broadcast: encode once, queue the same frame per V3 member
-    let frame = wire::encode_down(round, &Down::Announce(announce.clone()));
-    for &id in &announce.v3 {
-        ex.stats.record(2, Dir::Down, id, announce.size_bytes());
-        ex.send_frame(id, &frame);
-    }
-
-    // ---- phase 3: unmask shares
-    let mut responses = Vec::new();
-    for up in ex.collect(3)? {
-        match up {
-            Up::Unmask(u) => {
-                ex.stats.record(3, Dir::Up, u.from, u.size_bytes());
-                responses.push(u);
-            }
-            Up::Dropped(id, step) => log::trace!("client {id} dropped at step {step}"),
-            Up::Failed(id, step, e) => log::debug!("client {id} failed step {step}: {e}"),
-            other => bail!("protocol order violation in phase 3: {other:?}"),
-        }
-    }
-    let RoundOutput { sum, reliable, sets } = server.finalize(responses)?;
-
-    // Round over: tell anyone still connected, then flush best-effort.
-    // V3 clients close after their Unmask, so this usually reaches nobody.
-    let fin = wire::encode_down(round, &Down::Finish);
+/// Round over: tell anyone still connected, then flush best-effort.
+/// V3 clients close after their Unmask, so this usually reaches nobody.
+fn finish_blast(ex: &mut Exchange) {
+    let fin = wire::encode_down(ex.round, &Down::Finish);
     for c in ex.conns.iter_mut() {
         if c.open {
             c.queue(&fin);
@@ -441,8 +558,305 @@ pub fn serve(
         }
         std::thread::sleep(POLL_PAUSE);
     }
+}
 
+/// Serve one aggregation round to `cfg.n` socket clients.
+///
+/// `plan` and `graph` must come from the round's [`derive_round_setup`] so
+/// the server validates incoming `Masked` frames against the same index
+/// plan the clients encode with. Aborts (|V_k| < t) propagate as `Err`
+/// after the connections are dropped, which the honest driver observes as
+/// mid-round EOF — both sides fail, matching the engine's abort shape.
+pub fn serve(
+    listener: &TcpListener,
+    cfg: &ProtocolConfig,
+    plan: Arc<IndexPlan>,
+    graph: Graph,
+    round: u32,
+    timeout: Duration,
+) -> Result<CoordRoundResult> {
+    serve_with(listener, cfg, plan, graph, round, &ServeOptions::new().timeout(timeout))
+}
+
+/// [`serve`] with options: an fsync'd round journal (crash recovery via
+/// [`serve_resume`]) and deliberate crash injection for tests.
+pub fn serve_with(
+    listener: &TcpListener,
+    cfg: &ProtocolConfig,
+    plan: Arc<IndexPlan>,
+    graph: Graph,
+    round: u32,
+    opts: &ServeOptions,
+) -> Result<CoordRoundResult> {
+    let deadline = Instant::now() + opts.timeout.unwrap_or(DEFAULT_TIMEOUT);
+    // The journal's setup record goes to disk before the first client is
+    // even accepted: a crash anywhere after this line leaves a resumable
+    // round on disk.
+    let mut server = Server::new(cfg.n, cfg.t, cfg.mask_bits, plan.clone(), graph.clone());
+    if let Some(dir) = &opts.journal_dir {
+        let j = Journal::create(dir, round, cfg.n, cfg.t, cfg.mask_bits, &plan, &graph)
+            .context("create round journal")?;
+        server.set_sink(Box::new(JournalSink::new(j)));
+    }
+    let conns = accept_exact(listener, cfg.n, deadline)?;
+    let mut ex = Exchange {
+        conns,
+        claimed: vec![None; cfg.n],
+        stats: NetStats::new(cfg.n),
+        plan,
+        round,
+        deadline,
+    };
+
+    if matches!(opts.stop_after, Some(StopAfter::Setup)) {
+        bail!("{INTERRUPTED}: stopped after setup, before Start");
+    }
+
+    // phase 0 kickoff: Start itself carries no logical bytes
+    let start = wire::encode_down(round, &Down::Start);
+    for c in ex.conns.iter_mut() {
+        c.queue(&start);
+        c.awaiting = true;
+    }
+
+    let mut output = None;
+    for phase in 0..4u8 {
+        let ups = ex.collect(phase)?;
+        output = apply_phase(&mut server, &mut ex, phase, ups)?;
+        if matches!(opts.stop_after, Some(StopAfter::Phase(p)) if p == phase) {
+            // die with this phase journaled but none of its downs flushed
+            bail!("{INTERRUPTED}: stopped after applying phase {phase}");
+        }
+    }
+    let RoundOutput { sum, reliable, sets } = output.expect("phase 3 yields the round output");
+    finish_blast(&mut ex);
     Ok(CoordRoundResult { sum, reliable, sets, stats: ex.stats })
+}
+
+/// Resume a journaled round after a server crash or shutdown.
+///
+/// Replays `journal_path` into a bit-identical [`Server`], then runs the
+/// reconnect barrier: every client owed the next phase's `Down` must
+/// reconnect and resubmit its last `Up` (how the retry driver behaves),
+/// which identifies it; it is re-sent the `Down` it never received and the
+/// round proceeds through the remaining phases exactly as [`serve_with`]
+/// would. Clients the round no longer needs are waved off with `Finish`.
+///
+/// Known limitation (documented in DESIGN.md §13): a client that already
+/// sent its terminal `Up` and hung up cannot be re-asked, so a crash that
+/// loses an unjournaled `Up` after the client disconnected stalls the
+/// barrier to its deadline. The journal fsyncs before downs are flushed,
+/// so the server never *acknowledges* state it could lose.
+pub fn serve_resume(
+    listener: &TcpListener,
+    journal_path: &Path,
+    timeout: Duration,
+) -> Result<CoordRoundResult> {
+    let deadline = Instant::now() + timeout;
+    let rec = journal::recover(journal_path).context("recover round journal")?;
+    let round = rec.round;
+    let next = rec.next_phase;
+    let mut server = rec.server;
+    server.set_sink(Box::new(JournalSink::new(rec.journal)));
+    listener.set_nonblocking(true).context("set_nonblocking on listener")?;
+
+    let mut ex = Exchange {
+        conns: Vec::new(),
+        claimed: vec![None; rec.n],
+        stats: NetStats::new(rec.n),
+        plan: rec.plan.clone(),
+        round,
+        deadline,
+    };
+
+    // The round already finalized on disk: nothing left to compute. Wave
+    // off stragglers from the crashed attempt and return the replay.
+    if next >= 4 {
+        let output = rec.output.expect("phase-4 recovery carries the round output");
+        finish_wave(listener, &mut ex)?;
+        let RoundOutput { sum, reliable, sets } = output;
+        return Ok(CoordRoundResult { sum, reliable, sets, stats: ex.stats });
+    }
+
+    if next == 0 {
+        // Nobody ever saw Start: accept everyone and run from the top
+        // (the recovered server state is empty, only the setup existed).
+        ex.conns = accept_exact(listener, rec.n, deadline)?;
+        let start = wire::encode_down(round, &Down::Start);
+        for c in ex.conns.iter_mut() {
+            c.queue(&start);
+            c.awaiting = true;
+        }
+    } else {
+        resume_barrier(listener, &mut ex, &rec.downs, next)?;
+    }
+
+    let mut output = None;
+    for phase in next..4 {
+        let ups = ex.collect(phase)?;
+        output = apply_phase(&mut server, &mut ex, phase, ups)?;
+    }
+    let RoundOutput { sum, reliable, sets } = output.expect("phase 3 yields the round output");
+    finish_blast(&mut ex);
+    Ok(CoordRoundResult { sum, reliable, sets, stats: ex.stats })
+}
+
+/// The reconnect barrier of a mid-round resume: accept connections and
+/// classify each by its first valid frame until every `Down`-recipient of
+/// `phase` has been re-sent its down (or already answered it).
+///
+/// Claiming rules, for a client owed a down: a frame from `phase` itself
+/// parks as that client's answer (the pre-crash flush reached it); a frame
+/// from `phase - 1` is the resubmitted previous answer — the client never
+/// saw its down, so it is re-sent and awaited. Anything else (a client the
+/// round no longer needs, or one too far behind to rejoin) is told
+/// `Finish` and forgotten.
+fn resume_barrier(
+    listener: &TcpListener,
+    ex: &mut Exchange,
+    downs: &[(ClientId, Down)],
+    phase: u8,
+) -> Result<()> {
+    let finish = wire::encode_down(ex.round, &Down::Finish);
+    let mut owed: BTreeMap<ClientId, Vec<u8>> =
+        downs.iter().map(|(id, d)| (*id, wire::encode_down(ex.round, d))).collect();
+    let total = owed.len();
+    while !owed.is_empty() {
+        if shutdown::requested() {
+            bail!("{INTERRUPTED}: shutdown requested during the resume barrier");
+        }
+        loop {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    let _ = stream.set_nodelay(true);
+                    stream.set_nonblocking(true).context("set_nonblocking on accepted stream")?;
+                    ex.conns.push(Conn::new(stream));
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e).context("accept during resume"),
+            }
+        }
+        for ci in 0..ex.conns.len() {
+            let written = ex.conns[ci].flush();
+            if written > 0 {
+                ex.stats.record_framed(Dir::Down, written);
+            }
+            if !ex.conns[ci].open || ex.conns[ci].id.is_some() {
+                continue;
+            }
+            let read = ex.conns[ci].pump();
+            if read > 0 {
+                ex.stats.record_framed(Dir::Up, read);
+            }
+            // classify this connection by its first valid frame
+            loop {
+                let c = &mut ex.conns[ci];
+                let body = match c.rx.next_frame() {
+                    Ok(Some(b)) => b,
+                    Ok(None) => break,
+                    Err(e) => {
+                        log::debug!("resume conn {ci}: bad frame ({e}); closing");
+                        c.close();
+                        break;
+                    }
+                };
+                let (r, up) = match wire::decode_up(&body, &ex.plan) {
+                    Ok(v) => v,
+                    Err(e) => {
+                        log::debug!("resume conn {ci}: undecodable message ({e}); closing");
+                        c.close();
+                        break;
+                    }
+                };
+                if r != ex.round {
+                    continue;
+                }
+                let from = up.from();
+                if from >= ex.claimed.len() || ex.claimed[from].is_some() {
+                    log::debug!("resume conn {ci}: invalid or duplicate claim of id {from}");
+                    c.close();
+                    break;
+                }
+                ex.claimed[from] = Some(ci);
+                c.id = Some(from);
+                match owed.remove(&from) {
+                    Some(frame) => {
+                        if up.phase() == phase {
+                            // the pre-crash flush reached this client and
+                            // this is already its next answer
+                            c.slot = Some(up);
+                            c.awaiting = false;
+                        } else if up.phase() + 1 == phase {
+                            c.queue(&frame);
+                            c.awaiting = true;
+                        } else {
+                            log::debug!(
+                                "resume: client {from} resubmitted phase {}, serving {phase}; \
+                                 too far behind to rejoin",
+                                up.phase()
+                            );
+                            c.queue(&finish);
+                        }
+                    }
+                    None => c.queue(&finish),
+                }
+                break;
+            }
+        }
+        if owed.is_empty() {
+            break;
+        }
+        if Instant::now() >= ex.deadline {
+            bail!(
+                "resume barrier: timed out with {} of {total} expected clients not back",
+                owed.len()
+            );
+        }
+        std::thread::sleep(POLL_PAUSE);
+    }
+    Ok(())
+}
+
+/// Phase-4 resume: the round is already finalized, so every reconnecting
+/// client is a straggler from the crashed attempt — accept it, read off
+/// its resubmission, and wave it away with `Finish` for a grace window.
+fn finish_wave(listener: &TcpListener, ex: &mut Exchange) -> Result<()> {
+    let finish = wire::encode_down(ex.round, &Down::Finish);
+    let until = Instant::now() + RESUME_GRACE;
+    while Instant::now() < until {
+        if shutdown::requested() {
+            break;
+        }
+        loop {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    let _ = stream.set_nodelay(true);
+                    stream.set_nonblocking(true).context("set_nonblocking on accepted stream")?;
+                    let mut c = Conn::new(stream);
+                    c.queue(&finish);
+                    ex.conns.push(c);
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e).context("accept during finish wave"),
+            }
+        }
+        for c in ex.conns.iter_mut() {
+            let written = c.flush();
+            if written > 0 {
+                ex.stats.record_framed(Dir::Down, written);
+            }
+            if c.open {
+                let read = c.pump();
+                if read > 0 {
+                    ex.stats.record_framed(Dir::Up, read);
+                }
+            }
+        }
+        std::thread::sleep(POLL_PAUSE);
+    }
+    Ok(())
 }
 
 /// A client lane on the driver side — the event loop's lane shape behind a
@@ -453,26 +867,15 @@ struct DriverLane<'m> {
     outbox: Option<Up>,
 }
 
-/// Drive `cfg.n` honest clients against a round server at `addr`.
-///
-/// Clients are built from the same [`derive_round_setup`] recipe as every
-/// other executor and stepped in parallel sweeps over a worker pool; the
-/// socket side is deliberately simple — blocking reads in id order, one
-/// frame per live connection per sweep — because the server's phase
-/// barrier already serializes the round globally.
-pub fn drive_clients(
-    addr: SocketAddr,
+/// Build the driver-side lanes from the round's canonical setup recipe.
+fn build_lanes<'m>(
     cfg: &ProtocolConfig,
-    models: &[Vec<u64>],
-    round: u32,
-    timeout: Duration,
-) -> Result<()> {
-    assert_eq!(models.len(), cfg.n);
-    let deadline = Instant::now() + timeout;
+    models: &'m [Vec<u64>],
+    workers: usize,
+) -> Vec<DriverLane<'m>> {
     let setup = derive_round_setup(cfg, models);
-    let workers = event_loop_workers(cfg.n);
     let mask_workers = (crate::par::threads() / workers).max(1);
-    let mut lanes: Vec<DriverLane<'_>> = crate::par::map_indexed(cfg.n, workers, |id| {
+    crate::par::map_indexed(cfg.n, workers, |id| {
         let (mut key_rng, share_rng) = setup.streams[id].clone();
         let mut sm = ClientSm::new(
             id,
@@ -488,18 +891,42 @@ pub fn drive_clients(
         sm.set_mask_workers(mask_workers);
         // unlike the in-process lanes, Down::Start arrives over the wire
         DriverLane { sm, inbox: None, outbox: None }
-    });
+    })
+}
+
+/// Drive `cfg.n` honest clients against a round server at `addr`.
+///
+/// Clients are built from the same [`derive_round_setup`] recipe as every
+/// other executor and stepped in parallel sweeps over a worker pool; the
+/// socket side is deliberately simple — blocking reads in id order, one
+/// frame per live connection per sweep — because the server's phase
+/// barrier already serializes the round globally. A refused connect is
+/// retried under deterministic jittered backoff until the deadline, not
+/// surfaced as a round failure.
+pub fn drive_clients(
+    addr: SocketAddr,
+    cfg: &ProtocolConfig,
+    models: &[Vec<u64>],
+    round: u32,
+    timeout: Duration,
+) -> Result<()> {
+    assert_eq!(models.len(), cfg.n);
+    let deadline = Instant::now() + timeout;
+    let workers = event_loop_workers(cfg.n);
+    let mut lanes = build_lanes(cfg, models, workers);
 
     let mut conns: Vec<Option<TcpStream>> = Vec::with_capacity(cfg.n);
     for id in 0..cfg.n {
+        let mut backoff = Backoff::new(round, id);
         let stream = loop {
             match TcpStream::connect(addr) {
                 Ok(s) => break s,
                 Err(e) => {
-                    if Instant::now() >= deadline {
+                    let now = Instant::now();
+                    if now >= deadline {
                         bail!("client {id}: connect to {addr} failed: {e}");
                     }
-                    std::thread::sleep(Duration::from_millis(1));
+                    std::thread::sleep(backoff.next_wait().min(deadline - now));
                 }
             }
         };
@@ -581,6 +1008,191 @@ pub fn drive_clients(
     Ok(())
 }
 
+/// Per-lane socket state of the restart-tolerant driver: a nonblocking
+/// connection plus the cached wire frame of the lane's last answer.
+struct RetryLink {
+    conn: Option<Conn>,
+    backoff: Backoff,
+    next_attempt: Instant,
+    /// The encoded frame of the last `Up` this lane sent — resubmitted
+    /// verbatim on every reconnect (claiming the lane's identity for the
+    /// resume barrier) and re-sent on duplicate `Down`s. The server's
+    /// first-wins dedupe makes both idempotent.
+    last_up: Option<Vec<u8>>,
+    /// The highest down-phase already stepped through the one-shot SM.
+    answered: Option<u8>,
+    /// The lane heard `Finish`, or had nothing more to say when the
+    /// connection went away.
+    done: bool,
+}
+
+/// Drive `cfg.n` honest clients against a server that may die and be
+/// resumed (via [`serve_resume`]) any number of times mid-round.
+///
+/// Differences from [`drive_clients`]: connections are nonblocking with a
+/// per-lane reassembly buffer; `resolve` is consulted on every reconnect
+/// (a restarted server usually binds a fresh ephemeral port); a lane whose
+/// connection dies before it is done reconnects under backoff and
+/// resubmits its last `Up` frame; a duplicate `Down` (phase already
+/// answered) is answered from the cached frame — the one-shot [`ClientSm`]
+/// is never re-stepped. A lane that already said its last word treats EOF
+/// as the round ending rather than reconnecting.
+pub fn drive_clients_retry(
+    mut resolve: impl FnMut() -> SocketAddr,
+    cfg: &ProtocolConfig,
+    models: &[Vec<u64>],
+    round: u32,
+    timeout: Duration,
+) -> Result<()> {
+    assert_eq!(models.len(), cfg.n);
+    let deadline = Instant::now() + timeout;
+    let workers = event_loop_workers(cfg.n);
+    let mut lanes = build_lanes(cfg, models, workers);
+    let now = Instant::now();
+    let mut links: Vec<RetryLink> = (0..cfg.n)
+        .map(|id| RetryLink {
+            conn: None,
+            backoff: Backoff::new(round, id),
+            next_attempt: now,
+            last_up: None,
+            answered: None,
+            done: false,
+        })
+        .collect();
+
+    loop {
+        let mut moved = false;
+        for id in 0..cfg.n {
+            let link = &mut links[id];
+            if link.done {
+                // only a terminal answer may still be in flight
+                if let Some(c) = link.conn.as_mut() {
+                    c.flush();
+                    if c.drained() {
+                        c.close();
+                        link.conn = None;
+                    }
+                }
+                continue;
+            }
+            if link.conn.as_ref().map_or(true, |c| !c.open) {
+                if lanes[id].sm.done() {
+                    // last word sent and the connection is gone: nothing
+                    // left to say, so do not chase a restarted server
+                    link.conn = None;
+                    link.done = true;
+                    continue;
+                }
+                if Instant::now() < link.next_attempt {
+                    continue;
+                }
+                match TcpStream::connect(resolve()) {
+                    Ok(s) => {
+                        let _ = s.set_nodelay(true);
+                        s.set_nonblocking(true).context("set_nonblocking on client stream")?;
+                        let mut c = Conn::new(s);
+                        if let Some(f) = &link.last_up {
+                            // resubmit: identifies the lane to a resumed
+                            // server; first-wins dedupe drops it otherwise
+                            c.queue(f);
+                        }
+                        link.conn = Some(c);
+                        moved = true;
+                    }
+                    Err(_) => {
+                        link.next_attempt = Instant::now() + link.backoff.next_wait();
+                        continue;
+                    }
+                }
+            }
+            let c = link.conn.as_mut().expect("connected above");
+            moved |= c.flush() > 0;
+            moved |= c.pump() > 0;
+            while lanes[id].inbox.is_none() && !link.done {
+                let body = match c.rx.next_frame() {
+                    Ok(Some(b)) => b,
+                    Ok(None) => break,
+                    Err(e) => {
+                        log::debug!("client {id}: bad frame from server ({e}); reconnecting");
+                        c.close();
+                        break;
+                    }
+                };
+                let (r, down) = wire::decode_down(&body)
+                    .with_context(|| format!("client {id}: undecodable frame from server"))?;
+                if r != round {
+                    bail!("client {id}: server frame tagged round {r}, expected {round}");
+                }
+                let Some(dp) = down.phase() else {
+                    let _ = lanes[id].sm.step(Down::Finish);
+                    link.done = true;
+                    c.close();
+                    link.conn = None;
+                    break;
+                };
+                let next = link.answered.map_or(0, |a| a + 1);
+                if dp < next {
+                    // a resumed server re-sent a down we already answered:
+                    // answer from the cache, never re-step the one-shot SM
+                    if let Some(f) = link.last_up.clone() {
+                        c.queue(&f);
+                        moved = true;
+                    }
+                    continue;
+                }
+                if dp > next {
+                    bail!("client {id}: server skipped from phase {next} to {dp}");
+                }
+                link.answered = Some(dp);
+                lanes[id].inbox = Some(down);
+                moved = true;
+                break;
+            }
+            if let Some(c) = link.conn.as_ref() {
+                if !c.open && lanes[id].inbox.is_none() && !link.done {
+                    // the server died mid-round; retry after a backoff
+                    link.conn = None;
+                    link.next_attempt = Instant::now() + link.backoff.next_wait();
+                }
+            }
+        }
+
+        // one parallel sweep: step every lane holding a phase input
+        crate::par::for_each_slice(&mut lanes, workers, |_, chunk| {
+            for lane in chunk.iter_mut() {
+                if let Some(down) = lane.inbox.take() {
+                    lane.outbox = Some(lane.sm.step(down));
+                }
+            }
+        });
+
+        // queue answers; cache each frame for resubmission on reconnect
+        for id in 0..cfg.n {
+            let Some(up) = lanes[id].outbox.take() else { continue };
+            let frame = wire::encode_up(round, &up);
+            let link = &mut links[id];
+            if let Some(c) = link.conn.as_mut() {
+                c.queue(&frame);
+                moved = true;
+            }
+            link.last_up = Some(frame);
+            // lanes that said their last word linger for Finish (or EOF):
+            // a resumed server may still need the frame re-sent
+        }
+
+        if links.iter().all(|l| l.done && l.conn.is_none()) {
+            return Ok(());
+        }
+        if Instant::now() >= deadline {
+            let live = links.iter().filter(|l| !l.done).count();
+            bail!("retry client driver timed out with {live} lanes unfinished");
+        }
+        if !moved {
+            std::thread::sleep(POLL_PAUSE);
+        }
+    }
+}
+
 /// One full round over real loopback sockets: [`serve`] on a spawned
 /// thread, [`drive_clients`] on the caller's, joined at the end. A server
 /// error (including protocol aborts) takes precedence over the driver's.
@@ -637,6 +1249,23 @@ mod tests {
     }
 
     #[test]
+    fn backoff_is_deterministic_and_bounded() {
+        let schedule = |round, id| {
+            let mut b = Backoff::new(round, id);
+            (0..12).map(|_| b.next_wait()).collect::<Vec<_>>()
+        };
+        assert_eq!(schedule(7, 3), schedule(7, 3), "same seed, same schedule");
+        assert_ne!(schedule(7, 3), schedule(7, 4), "per-client jitter");
+        assert_ne!(schedule(7, 3), schedule(8, 3), "per-round jitter");
+        let s = schedule(7, 3);
+        // every wait sits inside its doubling step's window, capped
+        assert!(s.iter().all(|w| *w <= BACKOFF_CAP));
+        assert!(s[0] >= BACKOFF_BASE / 2);
+        // the tail reaches the cap's window
+        assert!(s[11] >= BACKOFF_CAP / 2);
+    }
+
+    #[test]
     fn tiny_round_over_loopback_matches_engine() {
         let n = 6;
         let dim = 8;
@@ -652,6 +1281,31 @@ mod tests {
         let logical_down: u64 = sync.stats.bytes_down.iter().sum();
         assert!(wired.stats.framed_up > logical_up, "framing overhead must show up");
         assert!(wired.stats.framed_down > logical_down);
+    }
+
+    #[test]
+    fn retry_driver_matches_engine_on_an_uninterrupted_round() {
+        // the restart-tolerant driver must be a drop-in replacement when
+        // the server happens not to crash
+        let n = 6;
+        let dim = 8;
+        let cfg = ProtocolConfig::for_test(n, 3, dim, Topology::Complete, 99);
+        let m = models(n, dim, 9);
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let round = round_tag(cfg.seed);
+        let setup = derive_round_setup(&cfg, &m);
+        let (plan, graph) = (setup.plan.clone(), setup.graph.clone());
+        let srv_cfg = cfg.clone();
+        let server = std::thread::spawn(move || {
+            serve(&listener, &srv_cfg, plan, graph, round, DEFAULT_TIMEOUT)
+        });
+        drive_clients_retry(|| addr, &cfg, &m, round, DEFAULT_TIMEOUT).unwrap();
+        let wired = server.join().unwrap().unwrap();
+        let sync = engine::run_round(&cfg, &m).unwrap();
+        assert_eq!(wired.sum, sync.sum);
+        assert_eq!(wired.sets, sync.sets);
+        assert!(wired.stats.logical_eq(&sync.stats));
     }
 
     #[test]

@@ -29,6 +29,37 @@ pub struct RoundOutput {
     pub sets: SurvivorSets,
 }
 
+/// Durability hook the server invokes at every state transition, *before*
+/// applying the batch — journal-then-apply, so the log is never behind the
+/// state a crash can lose. `crate::journal::JournalSink` is the production
+/// implementation (append-only fsync'd record log); the trait lives here so
+/// `protocol` never depends on `journal`.
+///
+/// The hooks receive borrowed batches in the exact order the step will
+/// consume them; an implementation that persists them verbatim can replay
+/// the round bit-identically (all server collections are `BTreeMap`s and
+/// per-entry push order equals batch iteration order). A sink error aborts
+/// the step — a round that cannot be made durable must not advance.
+pub trait RoundSink: Send {
+    /// Phase-0 batch: the advertisements `step0_route_keys` is about to
+    /// consume.
+    fn record_step0(&mut self, advs: &[AdvertiseKeys]) -> Result<()>;
+    /// Phase-1 batch of share uploads.
+    fn record_step1(&mut self, uploads: &[ShareUpload]) -> Result<()>;
+    /// Phase-2 batch of masked inputs.
+    fn record_step2(&mut self, inputs: &[MaskedInput]) -> Result<()>;
+    /// The survivor announce computed by `step2_collect_masked` (recorded
+    /// after the batch applied, as a replay cross-check).
+    fn record_announce(&mut self, announce: &SurvivorAnnounce) -> Result<()>;
+    /// Phase-3 batch of unmask responses.
+    fn record_step3(&mut self, responses: &[UnmaskShares]) -> Result<()>;
+    /// The packed accumulator Σ_{i∈V3} θ̃_i (masks still on) checkpointed
+    /// at finalize entry — recovery recomputes and must match.
+    fn record_checkpoint(&mut self, acc: &[u64]) -> Result<()>;
+    /// The finished round output.
+    fn record_final(&mut self, out: &RoundOutput) -> Result<()>;
+}
+
 /// Server state across one round.
 pub struct Server {
     n: usize,
@@ -48,6 +79,9 @@ pub struct Server {
     /// step-3 shares: (owner, kind) → shares received
     shares: BTreeMap<(ClientId, ShareKind), Vec<Share>>,
     sets: SurvivorSets,
+    /// Optional durability sink (journal): consulted before each state
+    /// transition. `None` (the default) costs nothing on the hot path.
+    sink: Option<Box<dyn RoundSink>>,
 }
 
 impl Server {
@@ -64,7 +98,30 @@ impl Server {
             masked: BTreeMap::new(),
             shares: BTreeMap::new(),
             sets: SurvivorSets::default(),
+            sink: None,
         }
+    }
+
+    /// Attach a durability sink; every subsequent step records its batch
+    /// before applying it.
+    pub fn set_sink(&mut self, sink: Box<dyn RoundSink>) {
+        self.sink = Some(sink);
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn t(&self) -> usize {
+        self.t
+    }
+
+    pub fn mask_bits(&self) -> u32 {
+        self.mask_bits
+    }
+
+    pub fn plan(&self) -> &Arc<IndexPlan> {
+        &self.plan
     }
 
     pub fn graph(&self) -> &Graph {
@@ -86,6 +143,9 @@ impl Server {
         &mut self,
         advertisements: Vec<AdvertiseKeys>,
     ) -> Result<Vec<(ClientId, KeyBundle)>> {
+        if let Some(sink) = self.sink.as_mut() {
+            sink.record_step0(&advertisements)?;
+        }
         for adv in advertisements {
             if adv.id >= self.n {
                 bail!("advertisement from unknown client {}", adv.id);
@@ -122,6 +182,9 @@ impl Server {
         &mut self,
         uploads: Vec<ShareUpload>,
     ) -> Result<Vec<(ClientId, ShareDelivery)>> {
+        if let Some(sink) = self.sink.as_mut() {
+            sink.record_step1(&uploads)?;
+        }
         let mut batch = std::collections::BTreeSet::new();
         for up in uploads {
             if !SurvivorSets::contains(&self.sets.v1, up.from) {
@@ -170,6 +233,9 @@ impl Server {
         &mut self,
         inputs: Vec<MaskedInput>,
     ) -> Result<SurvivorAnnounce> {
+        if let Some(sink) = self.sink.as_mut() {
+            sink.record_step2(&inputs)?;
+        }
         for mi in inputs {
             if !SurvivorSets::contains(&self.sets.v2, mi.id) {
                 bail!("masked input from client {} not in V2", mi.id);
@@ -205,7 +271,26 @@ impl Server {
         if self.sets.v3.len() < self.t {
             bail!("|V3|={} < t={}", self.sets.v3.len(), self.t);
         }
-        Ok(SurvivorAnnounce { v3: self.sets.v3.clone() })
+        let announce = SurvivorAnnounce { v3: self.sets.v3.clone() };
+        if let Some(sink) = self.sink.as_mut() {
+            sink.record_announce(&announce)?;
+        }
+        Ok(announce)
+    }
+
+    /// The packed accumulator Σ θ̃_i over every masked input received so
+    /// far, masks still on — the pre-finalize checkpoint the journal
+    /// records and recovery recomputes as an integrity cross-check. Serial
+    /// on purpose: it runs once per round, only when a sink is attached.
+    pub fn packed_accumulator(&self) -> Vec<u64> {
+        let mask = crate::util::mod_mask(self.mask_bits);
+        let mut acc = vec![0u64; self.plan.len()];
+        for v in self.masked.values() {
+            for (a, x) in acc.iter_mut().zip(v.iter()) {
+                *a = a.wrapping_add(*x) & mask;
+            }
+        }
+        acc
     }
 
     /// V3⁺ of Theorem 1: V3 plus the V2-neighbors of V3.
@@ -244,6 +329,22 @@ impl Server {
     /// outputs are backend-independent (the CI `kernel-matrix` job pins
     /// this).
     pub fn finalize(&mut self, responses: Vec<UnmaskShares>) -> Result<RoundOutput> {
+        if self.sink.is_some() {
+            // journal-then-apply, plus the pre-finalize accumulator
+            // checkpoint recovery recomputes as an integrity cross-check
+            let acc = self.packed_accumulator();
+            let sink = self.sink.as_mut().unwrap();
+            sink.record_step3(&responses)?;
+            sink.record_checkpoint(&acc)?;
+        }
+        let out = self.finalize_inner(responses)?;
+        if let Some(sink) = self.sink.as_mut() {
+            sink.record_final(&out)?;
+        }
+        Ok(out)
+    }
+
+    fn finalize_inner(&mut self, responses: Vec<UnmaskShares>) -> Result<RoundOutput> {
         let mut batch = std::collections::BTreeSet::new();
         for resp in responses {
             if !SurvivorSets::contains(&self.sets.v3, resp.from) {

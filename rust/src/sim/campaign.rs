@@ -54,7 +54,7 @@ impl Executor {
 }
 
 /// Everything recorded about one campaign round.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct RoundRecord {
     pub round: usize,
     /// The server aborted before finalize (|V_k| < t at some step).
@@ -81,7 +81,7 @@ pub struct RoundRecord {
 }
 
 impl RoundRecord {
-    fn aborted(round: usize, n: usize) -> RoundRecord {
+    pub(crate) fn aborted(round: usize, n: usize) -> RoundRecord {
         RoundRecord {
             round,
             aborted: true,
@@ -236,6 +236,214 @@ pub fn run_campaign(sc: &Scenario, executor: Executor) -> Result<CampaignReport>
     Ok(CampaignReport { scenario: sc.name.clone(), seed: sc.seed, executor, records, total_stats })
 }
 
+// ---------------------------------------------------------------------------
+// Resumable campaigns — every finished round is one durable log record
+// ---------------------------------------------------------------------------
+
+/// Record type for one serialized [`RoundRecord`] in a campaign log (the
+/// journal's raw user range, so `journal::read_log` tooling just works).
+const RT_CAMPAIGN_ROUND: u8 = crate::journal::RT_USER_BASE;
+
+/// Where [`resume_campaign`] keeps a scenario's on-disk progress.
+pub fn campaign_log_path(dir: &std::path::Path, sc: &Scenario, executor: Executor) -> std::path::PathBuf {
+    dir.join(format!("campaign-{}-{}-{:016x}.ccl", sc.name, executor.name(), sc.seed))
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_ids(out: &mut Vec<u8>, ids: &[ClientId]) {
+    crate::wire::put_u32(out, ids.len() as u32);
+    for &id in ids {
+        crate::wire::put_u32(out, id as u32);
+    }
+}
+
+fn put_u64s(out: &mut Vec<u8>, xs: &[u64]) {
+    crate::wire::put_u32(out, xs.len() as u32);
+    for &x in xs {
+        put_u64(out, x);
+    }
+}
+
+/// Optional-bool as one byte: 0 = None, 2 = Some(false), 3 = Some(true).
+fn put_opt_bool(out: &mut Vec<u8>, v: Option<bool>) {
+    out.push(match v {
+        None => 0,
+        Some(false) => 2,
+        Some(true) => 3,
+    });
+}
+
+fn encode_round_record(r: &RoundRecord) -> Vec<u8> {
+    let mut out = Vec::new();
+    put_u64(&mut out, r.round as u64);
+    out.push(u8::from(r.aborted) | (u8::from(r.reliable) << 1) | (u8::from(r.sum.is_some()) << 2));
+    if let Some(sum) = &r.sum {
+        put_u64s(&mut out, sum);
+    }
+    put_ids(&mut out, &r.sets.v1);
+    put_ids(&mut out, &r.sets.v2);
+    put_ids(&mut out, &r.sets.v3);
+    put_ids(&mut out, &r.sets.v4);
+    let s = &r.stats;
+    for step in 0..4 {
+        put_u64(&mut out, s.bytes_up[step]);
+        put_u64(&mut out, s.bytes_down[step]);
+        put_u64(&mut out, s.msgs_up[step]);
+        put_u64(&mut out, s.msgs_down[step]);
+    }
+    put_u64(&mut out, s.masked_payload_bytes);
+    put_u64(&mut out, s.framed_up);
+    put_u64(&mut out, s.framed_down);
+    put_u64s(&mut out, &s.client_up);
+    put_u64s(&mut out, &s.client_down);
+    put_opt_bool(&mut out, r.theorem1_agrees);
+    put_opt_bool(&mut out, r.sum_matches_truth);
+    put_u64(&mut out, r.breaches as u64);
+    put_u64(&mut out, r.exposed_honest as u64);
+    out
+}
+
+fn decode_round_record(payload: &[u8]) -> Result<RoundRecord> {
+    use crate::wire::Reader;
+    fn ids(rd: &mut Reader<'_>) -> Result<Vec<ClientId>> {
+        let len = rd.u32("set length")? as usize;
+        (0..len).map(|_| Ok(rd.u32("client id")? as ClientId)).collect()
+    }
+    fn u64s(rd: &mut Reader<'_>) -> Result<Vec<u64>> {
+        let len = rd.u32("vector length")? as usize;
+        (0..len).map(|_| Ok(rd.u64("u64 element")?)).collect()
+    }
+    fn opt_bool(rd: &mut Reader<'_>) -> Result<Option<bool>> {
+        match rd.u8("optional bool")? {
+            0 => Ok(None),
+            2 => Ok(Some(false)),
+            3 => Ok(Some(true)),
+            b => anyhow::bail!("campaign record: invalid optional-bool byte 0x{b:02x}"),
+        }
+    }
+    let mut rd = Reader::new(payload);
+    let round = rd.u64("round index")? as usize;
+    let flags = rd.u8("flags")?;
+    let aborted = flags & 1 != 0;
+    let reliable = flags & 2 != 0;
+    let sum = if flags & 4 != 0 { Some(u64s(&mut rd)?) } else { None };
+    let sets = SurvivorSets {
+        v1: ids(&mut rd)?,
+        v2: ids(&mut rd)?,
+        v3: ids(&mut rd)?,
+        v4: ids(&mut rd)?,
+    };
+    let mut stats = NetStats::new(0);
+    for step in 0..4 {
+        stats.bytes_up[step] = rd.u64("bytes_up")?;
+        stats.bytes_down[step] = rd.u64("bytes_down")?;
+        stats.msgs_up[step] = rd.u64("msgs_up")?;
+        stats.msgs_down[step] = rd.u64("msgs_down")?;
+    }
+    stats.masked_payload_bytes = rd.u64("masked_payload_bytes")?;
+    stats.framed_up = rd.u64("framed_up")?;
+    stats.framed_down = rd.u64("framed_down")?;
+    stats.client_up = u64s(&mut rd)?;
+    stats.client_down = u64s(&mut rd)?;
+    let theorem1_agrees = opt_bool(&mut rd)?;
+    let sum_matches_truth = opt_bool(&mut rd)?;
+    let breaches = rd.u64("breaches")? as usize;
+    let exposed_honest = rd.u64("exposed_honest")? as usize;
+    rd.done()?;
+    Ok(RoundRecord {
+        round,
+        aborted,
+        reliable,
+        sum,
+        sets,
+        stats,
+        theorem1_agrees,
+        sum_matches_truth,
+        breaches,
+        exposed_honest,
+    })
+}
+
+/// Run a campaign as a durable on-disk artifact: every finished round is
+/// appended (checksummed, fsynced) to a journal-format log under `dir`,
+/// and a rerun after a crash — or a deliberate kill — replays the recorded
+/// rounds from disk and computes only the remainder.
+///
+/// Rounds run serially (append order *is* round order), so a resumed
+/// report is bit-identical to an uninterrupted [`run_campaign`] of the
+/// same scenario: same records, same `total_stats` accumulation order.
+/// The log is keyed by scenario name, executor and seed; a log whose
+/// records disagree with the compiled plan sequence (edited file, seed
+/// collision) is rejected with a named error rather than silently merged.
+pub fn resume_campaign(
+    sc: &Scenario,
+    executor: Executor,
+    dir: &std::path::Path,
+) -> Result<CampaignReport> {
+    use anyhow::{bail, Context};
+    let plans = sc.compile();
+    let colluders = sc.adversary.colluders();
+    let path = campaign_log_path(dir, sc, executor);
+    let tag = crate::net::socket::round_tag(sc.seed);
+    let mut records: Vec<RoundRecord> = Vec::new();
+    let mut log = if path.exists() {
+        for raw in crate::journal::read_log(&path).context("read campaign log")? {
+            if raw.rec_type != RT_CAMPAIGN_ROUND {
+                bail!("campaign log {}: unexpected record type 0x{:02x}", path.display(), raw.rec_type);
+            }
+            if raw.round != tag {
+                bail!(
+                    "campaign log {}: round tag {:08x} does not match scenario seed (expected {tag:08x})",
+                    path.display(),
+                    raw.round
+                );
+            }
+            let rec = decode_round_record(&raw.payload)
+                .with_context(|| format!("campaign log {}: corrupt round record", path.display()))?;
+            match plans.get(records.len()) {
+                Some(plan) if plan.round == rec.round => records.push(rec),
+                Some(plan) => bail!(
+                    "campaign log {}: recorded round {} where the scenario expects round {}",
+                    path.display(),
+                    rec.round,
+                    plan.round
+                ),
+                None => bail!(
+                    "campaign log {}: more rounds recorded than the scenario has",
+                    path.display()
+                ),
+            }
+        }
+        crate::journal::LogWriter::open_append(&path).context("reopen campaign log")?
+    } else {
+        crate::journal::LogWriter::create(&path).context("create campaign log")?
+    };
+    if !records.is_empty() {
+        log::info!(
+            "campaign {}: resuming at round {} of {} from {}",
+            sc.name,
+            records.len(),
+            plans.len(),
+            path.display()
+        );
+    }
+    for plan in plans.iter().skip(records.len()) {
+        let models = sc.round_models(plan.round);
+        let rec = run_plan(plan, &models, executor, colluders);
+        log.append(RT_CAMPAIGN_ROUND, tag, &encode_round_record(&rec))
+            .with_context(|| format!("append round {} to campaign log", plan.round))?;
+        records.push(rec);
+    }
+    let mut total_stats = NetStats::new(sc.n);
+    for record in &records {
+        total_stats.merge(&record.stats);
+    }
+    Ok(CampaignReport { scenario: sc.name.clone(), seed: sc.seed, executor, records, total_stats })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -351,6 +559,59 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn round_record_codec_round_trips() {
+        let sc = scenario(ChurnModel::TargetedAdaptive { count: 1, step: 2 }, 2);
+        let rep = run_campaign(&sc, Executor::Engine).unwrap();
+        for rec in &rep.records {
+            let decoded = decode_round_record(&encode_round_record(rec)).unwrap();
+            assert_eq!(rec, &decoded);
+        }
+        // the aborted shape (None sum, empty sets) round-trips too
+        let ab = RoundRecord::aborted(7, 10);
+        assert_eq!(ab, decode_round_record(&encode_round_record(&ab)).unwrap());
+    }
+
+    #[test]
+    fn resumable_campaign_is_bit_identical_and_resumes_after_truncation() {
+        let dir = std::env::temp_dir().join(format!("ccesa-campaign-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let sc = scenario(ChurnModel::TargetedAdaptive { count: 1, step: 2 }, 3);
+        let full = run_campaign(&sc, Executor::Engine).unwrap();
+        // fresh log: resumable run matches the in-memory runner bit-for-bit
+        let first = resume_campaign(&sc, Executor::Engine, &dir).unwrap();
+        assert_eq!(full.records, first.records);
+        assert_eq!(full.total_stats, first.total_stats);
+        // kill the campaign after round 2 of 3 (chop the last record) and
+        // resume: only the missing round reruns, and the report still
+        // matches the uninterrupted run exactly
+        let path = campaign_log_path(&dir, &sc, Executor::Engine);
+        crate::journal::truncate_last_records(&path, 1).unwrap();
+        let resumed = resume_campaign(&sc, Executor::Engine, &dir).unwrap();
+        assert_eq!(full.records, resumed.records);
+        assert_eq!(full.total_stats, resumed.total_stats);
+        // a completed log replays entirely from disk
+        let replayed = resume_campaign(&sc, Executor::Engine, &dir).unwrap();
+        assert_eq!(full.records, replayed.records);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn campaign_log_for_a_different_seed_is_rejected() {
+        let dir = std::env::temp_dir().join(format!("ccesa-campaign-foreign-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let sc = scenario(ChurnModel::None, 2);
+        let path = campaign_log_path(&dir, &sc, Executor::Engine);
+        let tag = crate::net::socket::round_tag(sc.seed);
+        let mut w = crate::journal::LogWriter::create(&path).unwrap();
+        let rec = RoundRecord::aborted(0, sc.n);
+        w.append(RT_CAMPAIGN_ROUND, tag ^ 1, &encode_round_record(&rec)).unwrap();
+        drop(w);
+        let err = resume_campaign(&sc, Executor::Engine, &dir).unwrap_err();
+        assert!(err.to_string().contains("round tag"), "unexpected error: {err:#}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -1,0 +1,506 @@
+//! Crash-injection harness: kill the server at every phase boundary and
+//! prove the journal finishes the round bit-identically anyway.
+//!
+//! The harness drives [`ClientSm`] lanes in-process, exactly like the
+//! event loop, against a journaled [`Server`]. At the chosen
+//! [`CrashPoint`] the server value is dropped — the process-death
+//! equivalent for everything the protocol owns, since all server state is
+//! in that value — and the round continues on a server rebuilt solely by
+//! `journal::recover`. Crash points the sink writes inside a single server
+//! call (`AfterStep2`, `AfterStep3`, `PreFinalize`) are emulated by
+//! truncating trailing records off the on-disk log, which is byte-for-byte
+//! what an earlier death would have left behind.
+//!
+//! Two invariants are asserted on every recovery, not just at the end:
+//! the replayed server regenerates the pending `Down`s **byte-identically**
+//! (compared as wire frames), and the finished round's sum, survivor sets
+//! and reliability verdict match the uninterrupted engine — the
+//! crash-vs-engine differential of DESIGN.md §13.
+//!
+//! The lanes (and the harness-side `NetStats`) survive the crash like real
+//! remote clients survive a server death, which is what lets the harness
+//! assert *full* logical stats parity with the engine.
+
+use super::campaign::RoundRecord;
+use crate::coordinator::{derive_round_setup, CoordRoundResult};
+use crate::journal::{self, Journal, JournalSink};
+use crate::net::{Dir, NetStats};
+use crate::protocol::client::ClientSm;
+use crate::protocol::messages::*;
+use crate::protocol::server::{RoundOutput, Server};
+use crate::protocol::{engine, ClientId, ProtocolConfig};
+use crate::wire;
+use anyhow::{bail, ensure, Context, Result};
+use std::path::Path;
+use std::sync::Arc;
+
+/// Phase boundary at which the server dies. Variants whose journal record
+/// lands mid-call are emulated by truncating the log (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CrashPoint {
+    /// Journal holds only the setup record; phase 0 was never applied.
+    AfterSetup,
+    /// Step 0 applied and journaled; its bundles never delivered.
+    AfterStep0,
+    /// Step 1 applied and journaled; its deliveries never delivered.
+    AfterStep1,
+    /// Step 2's masked batch journaled but the crash beat the announce
+    /// record (emulated: run to [`CrashPoint::AfterAnnounce`], truncate 1).
+    AfterStep2,
+    /// Step 2 and the announce record journaled; announce never delivered.
+    AfterAnnounce,
+    /// Step 3's unmask batch journaled; checkpoint and final records lost
+    /// (emulated: full run, truncate 2).
+    AfterStep3,
+    /// Everything but the final record journaled (emulated: truncate 1).
+    PreFinalize,
+}
+
+impl CrashPoint {
+    /// Every crash point, in protocol order — the DESIGN.md §13 matrix.
+    pub const ALL: [CrashPoint; 7] = [
+        CrashPoint::AfterSetup,
+        CrashPoint::AfterStep0,
+        CrashPoint::AfterStep1,
+        CrashPoint::AfterStep2,
+        CrashPoint::AfterAnnounce,
+        CrashPoint::AfterStep3,
+        CrashPoint::PreFinalize,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CrashPoint::AfterSetup => "after-setup",
+            CrashPoint::AfterStep0 => "after-step0",
+            CrashPoint::AfterStep1 => "after-step1",
+            CrashPoint::AfterStep2 => "after-step2",
+            CrashPoint::AfterAnnounce => "after-announce",
+            CrashPoint::AfterStep3 => "after-step3",
+            CrashPoint::PreFinalize => "pre-finalize",
+        }
+    }
+}
+
+/// One in-process client lane (the event loop's shape, driven serially).
+struct Lane<'m> {
+    sm: ClientSm<'m>,
+    inbox: Option<Down>,
+    outbox: Option<Up>,
+}
+
+fn sweep(lanes: &mut [Lane<'_>]) {
+    for lane in lanes.iter_mut() {
+        if let Some(down) = lane.inbox.take() {
+            lane.outbox = Some(lane.sm.step(down));
+        }
+    }
+}
+
+/// Harvest one phase's answers in lane (= client id) order, charging
+/// logical Up stats exactly like the event loop.
+fn drain(lanes: &mut [Lane<'_>], phase: u8, stats: &mut NetStats) -> Result<Vec<Up>> {
+    let mut ups = Vec::new();
+    for lane in lanes.iter_mut() {
+        match lane.outbox.take() {
+            None => {}
+            Some(Up::Dropped(id, step)) => log::trace!("client {id} dropped at step {step}"),
+            Some(Up::Failed(id, step, e)) => log::debug!("client {id} failed step {step}: {e}"),
+            Some(up) => {
+                if up.phase() != phase {
+                    bail!("protocol order violation in phase {phase}: {up:?}");
+                }
+                match &up {
+                    Up::Adv(a) => stats.record(0, Dir::Up, a.id, a.size_bytes()),
+                    Up::Shares(u) => stats.record(1, Dir::Up, u.from, u.size_bytes()),
+                    Up::Masked(m) => {
+                        stats.record(2, Dir::Up, m.id, m.size_bytes());
+                        stats.record_masked_payload(m.payload_bytes());
+                    }
+                    Up::Unmask(u) => stats.record(3, Dir::Up, u.from, u.size_bytes()),
+                    _ => unreachable!("terminal variants matched above"),
+                }
+                ups.push(up);
+            }
+        }
+    }
+    Ok(ups)
+}
+
+/// Route one phase's answers into the server; returns the `Down`s to
+/// deliver (empty after phase 3) and the output (phase 3 only).
+fn apply(
+    server: &mut Server,
+    phase: u8,
+    ups: Vec<Up>,
+) -> Result<(Vec<(ClientId, Down)>, Option<RoundOutput>)> {
+    match phase {
+        0 => {
+            let advs = ups
+                .into_iter()
+                .map(|u| match u {
+                    Up::Adv(a) => a,
+                    other => unreachable!("drain checked phases: {other:?}"),
+                })
+                .collect();
+            let downs = server
+                .step0_route_keys(advs)?
+                .into_iter()
+                .map(|(id, b)| (id, Down::Bundle(b)))
+                .collect();
+            Ok((downs, None))
+        }
+        1 => {
+            let uploads = ups
+                .into_iter()
+                .map(|u| match u {
+                    Up::Shares(s) => s,
+                    other => unreachable!("drain checked phases: {other:?}"),
+                })
+                .collect();
+            let downs = server
+                .step1_route_shares(uploads)?
+                .into_iter()
+                .map(|(id, d)| (id, Down::Delivery(d)))
+                .collect();
+            Ok((downs, None))
+        }
+        2 => {
+            let inputs = ups
+                .into_iter()
+                .map(|u| match u {
+                    Up::Masked(m) => m,
+                    other => unreachable!("drain checked phases: {other:?}"),
+                })
+                .collect();
+            let ann = Arc::new(server.step2_collect_masked(inputs)?);
+            let downs = ann.v3.iter().map(|&id| (id, Down::Announce(ann.clone()))).collect();
+            Ok((downs, None))
+        }
+        3 => {
+            let responses = ups
+                .into_iter()
+                .map(|u| match u {
+                    Up::Unmask(r) => r,
+                    other => unreachable!("drain checked phases: {other:?}"),
+                })
+                .collect();
+            Ok((Vec::new(), Some(server.finalize(responses)?)))
+        }
+        p => bail!("apply called with out-of-range phase {p}"),
+    }
+}
+
+/// Deliver one phase's `Down`s into the lanes, charging logical Down stats
+/// exactly like the event loop (`Start`/`Finish` cost nothing).
+fn deliver(lanes: &mut [Lane<'_>], phase: u8, stats: &mut NetStats, downs: Vec<(ClientId, Down)>) {
+    for (id, down) in downs {
+        let bytes = match &down {
+            Down::Bundle(b) => b.size_bytes(),
+            Down::Delivery(d) => d.size_bytes(),
+            Down::Announce(a) => a.size_bytes(),
+            Down::Start | Down::Finish => 0,
+        };
+        stats.record(phase as usize, Dir::Down, id, bytes);
+        lanes[id].inbox = Some(down);
+    }
+}
+
+/// "The process dies here": drop the server (journal and all), optionally
+/// chop emulated-crash records off the log, and rebuild everything from
+/// disk. Verifies the recovery resumed at the expected phase.
+fn crash_and_recover(
+    server: Server,
+    path: &Path,
+    round: u32,
+    truncate: usize,
+    expect_phase: u8,
+) -> Result<(Server, Vec<(ClientId, Down)>, Option<RoundOutput>)> {
+    drop(server);
+    if truncate > 0 {
+        journal::truncate_last_records(path, truncate)
+            .with_context(|| format!("truncate {truncate} records (emulated crash)"))?;
+    }
+    let rec = journal::recover(path).context("recover after injected crash")?;
+    ensure!(rec.round == round, "recovered round {:08x}, expected {round:08x}", rec.round);
+    ensure!(
+        rec.next_phase == expect_phase,
+        "recovered at phase {}, expected {expect_phase}",
+        rec.next_phase
+    );
+    let mut server = rec.server;
+    server.set_sink(Box::new(JournalSink::new(rec.journal)));
+    Ok((server, rec.downs, rec.output))
+}
+
+/// The recovered server must regenerate the pending `Down`s byte-for-byte
+/// (compared as encoded wire frames — the strictest equality we can ask).
+fn ensure_downs_match(
+    round: u32,
+    expected: &[(ClientId, Down)],
+    recovered: &[(ClientId, Down)],
+) -> Result<()> {
+    ensure!(
+        expected.len() == recovered.len(),
+        "recovery regenerated {} downs, expected {}",
+        recovered.len(),
+        expected.len()
+    );
+    for ((eid, ed), (rid, rd)) in expected.iter().zip(recovered) {
+        ensure!(eid == rid, "recovery down order diverged: client {rid}, expected {eid}");
+        let ef = wire::encode_down(round, ed);
+        let rf = wire::encode_down(round, rd);
+        ensure!(ef == rf, "recovered down for client {rid} is not byte-identical");
+    }
+    Ok(())
+}
+
+fn ensure_outputs_match(expected: &RoundOutput, recovered: &RoundOutput) -> Result<()> {
+    ensure!(
+        expected.sum == recovered.sum
+            && expected.reliable == recovered.reliable
+            && expected.sets == recovered.sets,
+        "recovered round output diverged:\n  expected {expected:?}\n  recovered {recovered:?}"
+    );
+    Ok(())
+}
+
+/// Run one round with a server crash injected at `point`, recovering from
+/// the journal in `dir` and finishing the round on the replayed server.
+///
+/// Lanes and byte accounting live on the harness side (the "clients"), so
+/// the returned [`CoordRoundResult`] carries full logical stats — callers
+/// can demand `logical_eq` with the uninterrupted engine, not just equal
+/// sums.
+pub fn run_round_crashy(
+    cfg: &ProtocolConfig,
+    models: &[Vec<u64>],
+    dir: &Path,
+    point: CrashPoint,
+) -> Result<CoordRoundResult> {
+    assert_eq!(models.len(), cfg.n);
+    let round = crate::net::socket::round_tag(cfg.seed);
+    let setup = derive_round_setup(cfg, models);
+    let path = Journal::path_for(dir, round);
+    let journal = Journal::create(dir, round, cfg.n, cfg.t, cfg.mask_bits, &setup.plan, &setup.graph)
+        .context("create round journal")?;
+    let mut server = Server::new(cfg.n, cfg.t, cfg.mask_bits, setup.plan.clone(), setup.graph.clone());
+    server.set_sink(Box::new(JournalSink::new(journal)));
+    let mut stats = NetStats::new(cfg.n);
+    let mut lanes: Vec<Lane<'_>> = (0..cfg.n)
+        .map(|id| {
+            let (mut key_rng, share_rng) = setup.streams[id].clone();
+            let sm = ClientSm::new(
+                id,
+                cfg.t,
+                cfg.mask_bits,
+                setup.graph.neighbors(id).to_vec(),
+                &mut key_rng,
+                share_rng,
+                &models[id],
+                setup.plan.clone(),
+                setup.survives[id],
+            );
+            Lane { sm, inbox: Some(Down::Start), outbox: None }
+        })
+        .collect();
+
+    // ---- phase 0
+    sweep(&mut lanes);
+    let ups = drain(&mut lanes, 0, &mut stats)?;
+    if point == CrashPoint::AfterSetup {
+        let (s, downs, _) = crash_and_recover(server, &path, round, 0, 0)?;
+        server = s;
+        ensure!(downs.is_empty(), "phase-0 recovery owes no downs");
+    }
+    let (mut downs, _) = apply(&mut server, 0, ups)?;
+    if point == CrashPoint::AfterStep0 {
+        let (s, rdowns, _) = crash_and_recover(server, &path, round, 0, 1)?;
+        server = s;
+        ensure_downs_match(round, &downs, &rdowns)?;
+        downs = rdowns; // finish the round on recovery's regenerated downs
+    }
+    deliver(&mut lanes, 0, &mut stats, downs);
+
+    // ---- phase 1
+    sweep(&mut lanes);
+    let ups = drain(&mut lanes, 1, &mut stats)?;
+    let (mut downs, _) = apply(&mut server, 1, ups)?;
+    if point == CrashPoint::AfterStep1 {
+        let (s, rdowns, _) = crash_and_recover(server, &path, round, 0, 2)?;
+        server = s;
+        ensure_downs_match(round, &downs, &rdowns)?;
+        downs = rdowns;
+    }
+    deliver(&mut lanes, 1, &mut stats, downs);
+
+    // ---- phase 2
+    sweep(&mut lanes);
+    let ups = drain(&mut lanes, 2, &mut stats)?;
+    let (mut downs, _) = apply(&mut server, 2, ups)?;
+    match point {
+        CrashPoint::AfterStep2 => {
+            // die between the ups record and the announce record
+            let (s, rdowns, _) = crash_and_recover(server, &path, round, 1, 3)?;
+            server = s;
+            ensure_downs_match(round, &downs, &rdowns)?;
+            downs = rdowns;
+        }
+        CrashPoint::AfterAnnounce => {
+            let (s, rdowns, _) = crash_and_recover(server, &path, round, 0, 3)?;
+            server = s;
+            ensure_downs_match(round, &downs, &rdowns)?;
+            downs = rdowns;
+        }
+        _ => {}
+    }
+    deliver(&mut lanes, 2, &mut stats, downs);
+
+    // ---- phase 3
+    sweep(&mut lanes);
+    let ups = drain(&mut lanes, 3, &mut stats)?;
+    let (_, output) = apply(&mut server, 3, ups)?;
+    let mut output = output.expect("phase 3 yields the round output");
+    match point {
+        CrashPoint::AfterStep3 => {
+            // lose the checkpoint and final records
+            let (_, rdowns, rout) = crash_and_recover(server, &path, round, 2, 4)?;
+            ensure!(rdowns.is_empty(), "phase-4 recovery owes no downs");
+            let rout = rout.expect("phase-4 recovery carries the round output");
+            ensure_outputs_match(&output, &rout)?;
+            output = rout;
+        }
+        CrashPoint::PreFinalize => {
+            // lose only the final record; the checkpoint must cross-check
+            let (_, rdowns, rout) = crash_and_recover(server, &path, round, 1, 4)?;
+            ensure!(rdowns.is_empty(), "phase-4 recovery owes no downs");
+            let rout = rout.expect("phase-4 recovery carries the round output");
+            ensure_outputs_match(&output, &rout)?;
+            output = rout;
+        }
+        _ => {}
+    }
+
+    // round over: the executors' Finish costs no logical bytes
+    for lane in lanes.iter_mut() {
+        if !lane.sm.done() {
+            let _ = lane.sm.step(Down::Finish);
+        }
+    }
+    let RoundOutput { sum, reliable, sets } = output;
+    Ok(CoordRoundResult { sum, reliable, sets, stats })
+}
+
+/// The crash-vs-engine differential for one round config: every crash
+/// point must finish the round `logical_eq`-identical to the uninterrupted
+/// engine (or abort exactly when the engine aborts).
+pub fn diff_crash_round(cfg: &ProtocolConfig, models: &[Vec<u64>], dir: &Path) -> Result<()> {
+    let reference = engine::run_round(cfg, models);
+    for point in CrashPoint::ALL {
+        let crashed = run_round_crashy(cfg, models, &dir.join(point.name()), point);
+        match (&reference, crashed) {
+            (Err(_), Err(_)) => {}
+            (Err(e), Ok(_)) => {
+                bail!("{}: engine aborted ({e}) but the crashed round finished", point.name())
+            }
+            (Ok(_), Err(e)) => bail!("{}: crashed round failed: {e}", point.name()),
+            (Ok(r), Ok(c)) => {
+                ensure!(c.sum == r.sum, "{}: sum diverged from engine", point.name());
+                ensure!(c.sets == r.sets, "{}: survivor sets diverged", point.name());
+                ensure!(c.reliable == r.reliable, "{}: reliability diverged", point.name());
+                ensure!(
+                    c.stats.logical_eq(&r.stats),
+                    "{}: logical stats diverged from engine",
+                    point.name()
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Shape `run_round_crashy`'s outcome like a campaign round record so the
+/// differential harness can reuse its comparators.
+pub fn crash_record(
+    cfg: &ProtocolConfig,
+    models: &[Vec<u64>],
+    dir: &Path,
+    point: CrashPoint,
+    round: usize,
+) -> RoundRecord {
+    match run_round_crashy(cfg, models, dir, point) {
+        Ok(r) => RoundRecord {
+            round,
+            aborted: false,
+            reliable: r.reliable,
+            sum: r.sum,
+            sets: r.sets,
+            stats: r.stats,
+            theorem1_agrees: None,
+            sum_matches_truth: None,
+            breaches: 0,
+            exposed_honest: 0,
+        },
+        Err(_) => RoundRecord::aborted(round, cfg.n),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::Topology;
+    use crate::util::rng::Rng;
+
+    fn models(n: usize, dim: usize, seed: u64) -> Vec<Vec<u64>> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| (0..dim).map(|_| rng.next_u64() & 0xFFFF).collect()).collect()
+    }
+
+    fn tmp_dir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("ccesa-crash-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn every_crash_point_finishes_the_round_like_the_engine() {
+        let n = 8;
+        let dim = 6;
+        let cfg = ProtocolConfig::for_test(n, 3, dim, Topology::Complete, 42);
+        let m = models(n, dim, 5);
+        let dir = tmp_dir("matrix");
+        diff_crash_round(&cfg, &m, &dir).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn crash_recovery_survives_mid_round_dropouts() {
+        use crate::protocol::dropout::DropoutModel;
+        let n = 9;
+        let dim = 5;
+        let cfg = ProtocolConfig {
+            dropout: DropoutModel::Targeted { per_step: [vec![1], vec![4], vec![7], vec![]] },
+            ..ProtocolConfig::for_test(n, 3, dim, Topology::Complete, 17)
+        };
+        let m = models(n, dim, 23);
+        let dir = tmp_dir("churny");
+        diff_crash_round(&cfg, &m, &dir).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn aborting_rounds_abort_under_every_crash_point_too() {
+        use crate::protocol::dropout::DropoutModel;
+        let n = 5;
+        let cfg = ProtocolConfig {
+            dropout: DropoutModel::Targeted {
+                per_step: [(0..n).collect(), vec![], vec![], vec![]],
+            },
+            ..ProtocolConfig::for_test(n, 3, 4, Topology::Complete, 7)
+        };
+        let m = models(n, 4, 7);
+        let dir = tmp_dir("abort");
+        diff_crash_round(&cfg, &m, &dir).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

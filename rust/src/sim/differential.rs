@@ -122,6 +122,38 @@ pub fn diff_scenario(sc: &Scenario) -> Option<Mismatch> {
     None
 }
 
+/// Crash-recovery differential: every round of the scenario, killed at
+/// every [`crate::sim::crash::CrashPoint`], must finish — on the
+/// journal-recovered server — bit-identically to the uninterrupted engine
+/// (or abort exactly when the engine aborts). Journals are written under
+/// `dir`. The first divergence wins; its `detail` names the crash point.
+pub fn diff_crash_scenario(sc: &Scenario, dir: &std::path::Path) -> Option<Mismatch> {
+    use super::crash::{crash_record, CrashPoint};
+    let plans = sc.compile();
+    let colluders = sc.adversary.colluders();
+    for plan in &plans {
+        let models = sc.round_models(plan.round);
+        let e = run_plan(plan, &models, Executor::Engine, colluders);
+        for point in CrashPoint::ALL {
+            let round_dir = dir.join(format!("r{}-{}", plan.round, point.name()));
+            let c = crash_record(&plan.cfg, &models, &round_dir, point, plan.round);
+            let who = format!("crash@{}", point.name());
+            if let Some((field, detail)) = diff_records(&e, &c, &who) {
+                return Some(Mismatch {
+                    scenario: sc.name.clone(),
+                    seed: sc.seed,
+                    round: plan.round,
+                    // the crash harness drives the event-loop shape
+                    executor: Executor::EventLoop,
+                    field,
+                    detail: format!("[{who}] {detail}"),
+                });
+            }
+        }
+    }
+    None
+}
+
 /// Keep a scenario structurally valid while its knobs shrink.
 fn clamp_to_n(sc: &mut Scenario) {
     let n = sc.n;

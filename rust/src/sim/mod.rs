@@ -17,7 +17,10 @@
 //! * [`differential`] — asserts every executor produces bit-identical sums,
 //!   survivor sets and [`crate::net::NetStats`] on randomized scenarios
 //!   (the payload codec is one of the randomized axes), with a shrinker
-//!   that minimizes failures to a reportable seed.
+//!   that minimizes failures to a reportable seed;
+//! * [`crash`] — kills a journaled server at every phase boundary
+//!   ([`crash::CrashPoint`]) and requires the journal-recovered server to
+//!   finish the round bit-identically to the uninterrupted engine.
 //!
 //! Every future scale or performance PR validates against this substrate:
 //! change an executor, run the differential; add a churn regime, add a
@@ -25,13 +28,18 @@
 
 pub mod campaign;
 pub mod churn;
+pub mod crash;
 pub mod differential;
 pub mod scenario;
 
-pub use campaign::{run_campaign, run_plan, CampaignReport, Executor, RoundRecord};
+pub use campaign::{
+    resume_campaign, run_campaign, run_plan, CampaignReport, Executor, RoundRecord,
+};
+pub use crash::{diff_crash_round, run_round_crashy, CrashPoint};
 pub use churn::ChurnModel;
 pub use differential::{
-    diff_scenario, run_differential, shrink, DifferentialReport, Failure, Mismatch,
+    diff_crash_scenario, diff_scenario, run_differential, shrink, DifferentialReport, Failure,
+    Mismatch,
 };
 pub use scenario::{
     random_scenario, AdversarySpec, CodecSpec, RoundPlan, Scenario, ThresholdRule,

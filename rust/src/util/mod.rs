@@ -8,6 +8,7 @@ pub mod hex;
 pub mod json;
 pub mod logging;
 pub mod rng;
+pub mod shutdown;
 pub mod stats;
 pub mod timer;
 

@@ -1,0 +1,80 @@
+//! Cooperative shutdown on SIGTERM/SIGINT.
+//!
+//! `ccesa serve` installs the handlers once at startup; the transport's
+//! poll loops check [`requested`] every sweep and bail with the named
+//! "round interrupted, resumable" error instead of dying mid-write. The
+//! journal needs no extra flushing on that path — every record is
+//! `write_all` + `sync_data` before the state transition it describes
+//! takes effect, so whatever is on disk is already consistent.
+//!
+//! No `libc` crate: `std` links the platform C library on unix anyway, so
+//! the two signal numbers and `signal(2)` are declared directly. The
+//! handler only stores a relaxed atomic flag — async-signal-safe by
+//! construction. Non-unix builds compile to a no-op install and the same
+//! flag, which tests drive through [`trigger`].
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+static REQUESTED: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+mod sys {
+    extern "C" {
+        pub fn signal(signum: i32, handler: usize) -> usize;
+    }
+
+    pub const SIGINT: i32 = 2;
+    pub const SIGTERM: i32 = 15;
+
+    pub extern "C" fn on_signal(_signum: i32) {
+        super::REQUESTED.store(true, std::sync::atomic::Ordering::Relaxed);
+    }
+}
+
+/// Install SIGTERM/SIGINT handlers that set the shutdown flag. Idempotent;
+/// a no-op off unix (use [`trigger`] there, and in tests).
+pub fn install_handlers() {
+    #[cfg(unix)]
+    unsafe {
+        let handler = sys::on_signal as extern "C" fn(i32) as usize;
+        sys::signal(sys::SIGINT, handler);
+        sys::signal(sys::SIGTERM, handler);
+    }
+}
+
+/// Has a shutdown been requested (by signal or [`trigger`])?
+pub fn requested() -> bool {
+    REQUESTED.load(Ordering::Relaxed)
+}
+
+/// Request a shutdown in-process — what the signal handler does, exposed
+/// for tests and embedders.
+pub fn trigger() {
+    REQUESTED.store(true, Ordering::Relaxed);
+}
+
+/// Clear the flag (tests run many shutdowns in one process).
+pub fn reset() {
+    REQUESTED.store(false, Ordering::Relaxed);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flag_round_trips() {
+        reset();
+        assert!(!requested());
+        trigger();
+        assert!(requested());
+        reset();
+        assert!(!requested());
+    }
+
+    #[test]
+    fn install_is_idempotent() {
+        install_handlers();
+        install_handlers();
+    }
+}

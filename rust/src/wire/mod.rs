@@ -79,22 +79,24 @@ pub enum WireError {
     BadValue(&'static str),
 }
 
-/// Bounds-checked forward reader over a frame body.
-struct Reader<'a> {
+/// Bounds-checked forward reader over a frame body. `pub(crate)` so the
+/// journal record decoder (`crate::journal`) shares the same never-panic
+/// cursor discipline instead of re-implementing it.
+pub(crate) struct Reader<'a> {
     b: &'a [u8],
     pos: usize,
 }
 
 impl<'a> Reader<'a> {
-    fn new(b: &'a [u8]) -> Reader<'a> {
+    pub(crate) fn new(b: &'a [u8]) -> Reader<'a> {
         Reader { b, pos: 0 }
     }
 
-    fn remaining(&self) -> usize {
+    pub(crate) fn remaining(&self) -> usize {
         self.b.len() - self.pos
     }
 
-    fn take(&mut self, n: usize, what: &'static str) -> Result<&'a [u8], WireError> {
+    pub(crate) fn take(&mut self, n: usize, what: &'static str) -> Result<&'a [u8], WireError> {
         if self.remaining() < n {
             return Err(WireError::Truncated(what));
         }
@@ -103,25 +105,30 @@ impl<'a> Reader<'a> {
         Ok(s)
     }
 
-    fn u8(&mut self, what: &'static str) -> Result<u8, WireError> {
+    pub(crate) fn u8(&mut self, what: &'static str) -> Result<u8, WireError> {
         Ok(self.take(1, what)?[0])
     }
 
-    fn u16(&mut self, what: &'static str) -> Result<u16, WireError> {
+    pub(crate) fn u16(&mut self, what: &'static str) -> Result<u16, WireError> {
         let s = self.take(2, what)?;
         Ok(u16::from_le_bytes([s[0], s[1]]))
     }
 
-    fn u32(&mut self, what: &'static str) -> Result<u32, WireError> {
+    pub(crate) fn u32(&mut self, what: &'static str) -> Result<u32, WireError> {
         let s = self.take(4, what)?;
         Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
     }
 
-    fn client_id(&mut self, what: &'static str) -> Result<ClientId, WireError> {
+    pub(crate) fn u64(&mut self, what: &'static str) -> Result<u64, WireError> {
+        let s = self.take(8, what)?;
+        Ok(u64::from_le_bytes([s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7]]))
+    }
+
+    pub(crate) fn client_id(&mut self, what: &'static str) -> Result<ClientId, WireError> {
         Ok(self.u32(what)? as ClientId)
     }
 
-    fn done(&self) -> Result<(), WireError> {
+    pub(crate) fn done(&self) -> Result<(), WireError> {
         if self.remaining() > 0 {
             return Err(WireError::TrailingBytes(self.remaining()));
         }
@@ -129,7 +136,7 @@ impl<'a> Reader<'a> {
     }
 }
 
-fn put_u32(out: &mut Vec<u8>, v: u32) {
+pub(crate) fn put_u32(out: &mut Vec<u8>, v: u32) {
     out.extend_from_slice(&v.to_le_bytes());
 }
 

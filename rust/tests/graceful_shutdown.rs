@@ -1,0 +1,64 @@
+//! SIGTERM/SIGINT handling for `ccesa serve`: a shutdown request makes the
+//! server bail with the named "round interrupted, resumable" error, and the
+//! journal it leaves behind really is resumable.
+//!
+//! Lives in its own integration binary because the shutdown flag is
+//! process-global: triggering it next to other in-flight wire tests would
+//! interrupt *their* servers too.
+
+use ccesa::coordinator::derive_round_setup;
+use ccesa::journal::{self, Journal};
+use ccesa::net::socket::{self, ServeOptions, INTERRUPTED};
+use ccesa::protocol::Topology;
+use ccesa::util::rng::Rng;
+use ccesa::util::shutdown;
+use std::net::TcpListener;
+use std::time::Duration;
+
+mod common;
+use common::base;
+
+fn models(n: usize, dim: usize, seed: u64) -> Vec<Vec<u64>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| (0..dim).map(|_| rng.next_u64() & 0xFFFF).collect())
+        .collect()
+}
+
+#[test]
+fn shutdown_request_interrupts_the_server_with_the_named_resumable_error() {
+    let n = 5;
+    let dim = 4;
+    let cfg = base(n, 3, dim, Topology::Complete, 0x516);
+    let m = models(n, dim, 3);
+    let dir = std::env::temp_dir().join(format!("ccesa-shutdown-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let round = socket::round_tag(cfg.seed);
+    let setup = derive_round_setup(&cfg, &m);
+
+    // installing the real handlers is safe and idempotent (the flag path
+    // below is what they share with an actual SIGTERM)
+    shutdown::install_handlers();
+    shutdown::install_handlers();
+
+    // a signal arrives before any client ever connects: the accept loop
+    // must notice the flag instead of blocking out its whole timeout
+    shutdown::trigger();
+    let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+    let opts = ServeOptions::new().timeout(Duration::from_secs(30)).journal(dir.clone());
+    let err = socket::serve_with(&listener, &cfg, setup.plan, setup.graph, round, &opts)
+        .unwrap_err();
+    shutdown::reset();
+    assert!(
+        err.to_string().contains(INTERRUPTED),
+        "shutdown error must carry the named resumable message, got: {err:#}"
+    );
+
+    // the interrupted round is on disk and structurally resumable: the
+    // setup record was fsynced before the first accept
+    let rec = journal::recover(&Journal::path_for(&dir, round)).unwrap();
+    assert_eq!(rec.round, round);
+    assert_eq!(rec.next_phase, 0, "nothing was applied, so recovery restarts the round");
+    assert!(rec.output.is_none());
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,318 @@
+//! Round journal + crash recovery, end to end.
+//!
+//! Three layers of assurance:
+//!
+//! 1. **Corruption matrix** — a finished round's journal truncated at every
+//!    byte offset, bit-flipped checksums, duplicated and out-of-order
+//!    records: recovery either succeeds on the valid prefix or returns a
+//!    named `JournalError`; it never panics and never double-counts.
+//! 2. **In-process crash matrix** — `sim::crash` kills a journaled server
+//!    at all seven phase boundaries, across every payload codec and three
+//!    churn models, and requires the recovered round bit-identical to the
+//!    uninterrupted engine (sums, survivor sets, logical `NetStats`).
+//! 3. **Wire restart** — a real TCP server killed at phase boundaries via
+//!    `StopAfter`, restarted on a *fresh port* with `serve_resume`, while
+//!    `drive_clients_retry` clients reconnect with backoff and resubmit;
+//!    the finished round must match the engine, including at n = 1000.
+
+use ccesa::codec::Codec;
+use ccesa::coordinator::{run_round_event_loop_journaled, derive_round_setup};
+use ccesa::journal::{self, Journal, JournalError, LogWriter, PREFIX_BYTES};
+use ccesa::net::socket::{self, ServeOptions, StopAfter, INTERRUPTED};
+use ccesa::protocol::dropout::DropoutModel;
+use ccesa::protocol::engine::run_round;
+use ccesa::protocol::{ProtocolConfig, Topology};
+use ccesa::sim::crash::{diff_crash_round, run_round_crashy, CrashPoint};
+use ccesa::util::rng::Rng;
+use std::net::{SocketAddr, TcpListener};
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+mod common;
+use common::base;
+
+fn models(n: usize, dim: usize, seed: u64) -> Vec<Vec<u64>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| (0..dim).map(|_| rng.next_u64() & 0xFFFF_FFFF).collect())
+        .collect()
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("ccesa-jrec-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// A complete round's journal (all record types through FINAL), plus the
+/// round it computed, for the corruption suites to mangle.
+fn finished_journal(tag: &str) -> (PathBuf, PathBuf, u32, ccesa::coordinator::CoordRoundResult) {
+    let n = 6;
+    let dim = 4;
+    let cfg = base(n, 3, dim, Topology::Complete, 0x1AB);
+    let m = models(n, dim, 9);
+    let dir = tmp_dir(tag);
+    let r = run_round_event_loop_journaled(&cfg, &m, &dir).unwrap();
+    let round = socket::round_tag(cfg.seed);
+    let path = Journal::path_for(&dir, round);
+    (dir, path, round, r)
+}
+
+// ---------------------------------------------------------------------------
+// 1. Corruption matrix
+// ---------------------------------------------------------------------------
+
+#[test]
+fn truncation_at_every_byte_offset_recovers_or_errors_but_never_panics() {
+    let (dir, path, round, _) = finished_journal("trunc");
+    let bytes = std::fs::read(&path).unwrap();
+    assert!(bytes.len() > 100, "journal suspiciously small: {} bytes", bytes.len());
+    let work = dir.join("prefix.ccl");
+    let mut last_phase = 0u8;
+    for cut in 0..=bytes.len() {
+        std::fs::write(&work, &bytes[..cut]).unwrap();
+        match journal::recover(&work) {
+            Ok(rec) => {
+                assert_eq!(rec.round, round, "cut at {cut}");
+                // longer valid prefixes never recover to an earlier phase
+                assert!(
+                    rec.next_phase >= last_phase,
+                    "cut at {cut}: phase went backwards ({} < {last_phase})",
+                    rec.next_phase
+                );
+                last_phase = rec.next_phase;
+            }
+            Err(e) => {
+                // only the named pre-setup shapes may fail; anything else
+                // is a torn tail and must recover on the valid prefix
+                assert!(
+                    matches!(e, JournalError::MissingSetup | JournalError::Malformed(_)),
+                    "cut at {cut}: unexpected error {e}"
+                );
+            }
+        }
+    }
+    assert_eq!(last_phase, 4, "the full journal must recover a finished round");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn bit_flipped_record_bodies_are_named_checksum_errors() {
+    let (dir, path, _round, _) = finished_journal("flip");
+    let bytes = std::fs::read(&path).unwrap();
+    let records = journal::read_log(&path).unwrap();
+    assert!(records.len() >= 5, "expected a full round's records");
+    // flip one body byte in every non-final record: scan must fail that
+    // record's checksum, not misparse downstream records
+    let work = dir.join("flipped.ccl");
+    for rec in &records[..records.len() - 1] {
+        let mut mangled = bytes.clone();
+        let at = rec.offset as usize + PREFIX_BYTES;
+        mangled[at] ^= 0x40;
+        std::fs::write(&work, &mangled).unwrap();
+        let err = journal::recover(&work).unwrap_err();
+        assert!(
+            matches!(err, JournalError::Checksum { .. }),
+            "record at {}: expected checksum error, got {err}",
+            rec.offset
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn duplicated_phase_batch_replays_idempotently_without_double_counting() {
+    let (dir, path, round, baseline) = finished_journal("dup");
+    let records = journal::read_log(&path).unwrap();
+    // rebuild the journal with every record doubled in place — the replay
+    // must treat each duplicate batch as the retransmission it is; the
+    // FINAL cross-check record would name any double-counted sum
+    let work = dir.join("doubled.ccl");
+    let mut w = LogWriter::create(&work).unwrap();
+    for rec in &records {
+        w.append(rec.rec_type, rec.round, &rec.payload).unwrap();
+        w.append(rec.rec_type, rec.round, &rec.payload).unwrap();
+    }
+    drop(w);
+    let rec = journal::recover(&work).unwrap();
+    assert_eq!(rec.round, round);
+    assert_eq!(rec.next_phase, 4);
+    let out = rec.output.expect("doubled journal still recovers the output");
+    assert_eq!(out.sum, baseline.sum, "duplicate records must never change the sum");
+    assert_eq!(out.sets, baseline.sets);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn out_of_order_and_skipped_records_are_named_replay_errors() {
+    let (dir, path, _round, _) = finished_journal("order");
+    let records = journal::read_log(&path).unwrap();
+    // skip the phase-0 batch: setup straight to phase 1
+    let work = dir.join("skipped.ccl");
+    let mut w = LogWriter::create(&work).unwrap();
+    w.append(records[0].rec_type, records[0].round, &records[0].payload).unwrap();
+    w.append(records[2].rec_type, records[2].round, &records[2].payload).unwrap();
+    drop(w);
+    let err = journal::recover(&work).unwrap_err();
+    assert!(matches!(err, JournalError::Replay(_)), "skip: expected replay error, got {err}");
+    // replay an *old* batch after a later one (phase 1 then phase 0)
+    let rewound = dir.join("rewound.ccl");
+    let mut w = LogWriter::create(&rewound).unwrap();
+    for rec in &records[..3] {
+        w.append(rec.rec_type, rec.round, &rec.payload).unwrap();
+    }
+    w.append(records[1].rec_type, records[1].round, &records[1].payload).unwrap();
+    drop(w);
+    let err = journal::recover(&rewound).unwrap_err();
+    assert!(matches!(err, JournalError::Replay(_)), "rewind: expected replay error, got {err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// 2. In-process crash matrix: every boundary × every codec × churn models
+// ---------------------------------------------------------------------------
+
+#[test]
+fn crash_matrix_every_boundary_codec_and_churn_matches_engine() {
+    let n = 10;
+    let dim = 8;
+    let m = models(n, dim, 0xC4A5);
+    let churns: [(&str, DropoutModel); 3] = [
+        ("steady", DropoutModel::None),
+        (
+            "midround",
+            DropoutModel::Targeted { per_step: [vec![2], vec![5], vec![], vec![]] },
+        ),
+        (
+            "every-step",
+            DropoutModel::Targeted { per_step: [vec![1], vec![4], vec![7], vec![9]] },
+        ),
+    ];
+    for (codec_name, codec) in [
+        ("dense", Codec::Dense),
+        ("topk", Codec::TopK { k: 3 }),
+        ("randk", Codec::RandK { k: 3 }),
+    ] {
+        for (churn_name, dropout) in churns.clone() {
+            let cfg = ProtocolConfig {
+                codec: codec.clone(),
+                dropout,
+                ..base(n, 4, dim, Topology::ErdosRenyi { p: 0.9 }, 0xBEE5)
+            };
+            let dir = tmp_dir(&format!("matrix-{codec_name}-{churn_name}"));
+            diff_crash_round(&cfg, &m, &dir)
+                .unwrap_or_else(|e| panic!("{codec_name}/{churn_name}: {e:#}"));
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+}
+
+#[test]
+fn recovered_journal_is_itself_resumable_again() {
+    // crash, recover, and the journal the recovered server kept appending
+    // must itself recover to the same finished round (recovery composes)
+    let n = 8;
+    let dim = 6;
+    let cfg = base(n, 3, dim, Topology::Complete, 0x2FA);
+    let m = models(n, dim, 31);
+    let dir = tmp_dir("compose");
+    let r = run_round_crashy(&cfg, &m, &dir, CrashPoint::AfterStep1).unwrap();
+    let rec = journal::recover(&Journal::path_for(&dir, socket::round_tag(cfg.seed))).unwrap();
+    assert_eq!(rec.next_phase, 4);
+    let out = rec.output.unwrap();
+    assert_eq!(out.sum, r.sum);
+    assert_eq!(out.sets, r.sets);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// 3. Wire restart: kill the TCP server, resume on a fresh port
+// ---------------------------------------------------------------------------
+
+/// Kill a journaled wire server at `point`, restart on a fresh ephemeral
+/// port, and finish the round with the same retrying clients. Returns the
+/// recovered round result.
+fn wire_crash_restart(
+    cfg: &ProtocolConfig,
+    m: &[Vec<u64>],
+    point: StopAfter,
+    tag: &str,
+) -> ccesa::coordinator::CoordRoundResult {
+    let dir = tmp_dir(tag);
+    let round = socket::round_tag(cfg.seed);
+    let setup = derive_round_setup(cfg, m);
+    let timeout = Duration::from_secs(120);
+
+    let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+    let addr_cell = Arc::new(Mutex::new(listener.local_addr().unwrap()));
+
+    let (srv_cfg, plan, graph, jdir) = (cfg.clone(), setup.plan.clone(), setup.graph.clone(), dir.clone());
+    let server = std::thread::spawn(move || {
+        let opts = ServeOptions::new().timeout(timeout).journal(jdir).stop_after(point);
+        socket::serve_with(&listener, &srv_cfg, plan, graph, round, &opts)
+    });
+
+    let (cli_cfg, cli_models, cell) = (cfg.clone(), m.to_vec(), addr_cell.clone());
+    let clients = std::thread::spawn(move || {
+        let resolve = move || -> SocketAddr { *cell.lock().unwrap() };
+        socket::drive_clients_retry(resolve, &cli_cfg, &cli_models, round, timeout)
+    });
+
+    // the injected crash: the server must die with the named resumable error
+    let err = server.join().unwrap().unwrap_err();
+    assert!(
+        err.to_string().contains(INTERRUPTED),
+        "{tag}: crash error not named resumable: {err:#}"
+    );
+
+    // restart on a *different* port; clients re-resolve and reconnect
+    let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+    *addr_cell.lock().unwrap() = listener.local_addr().unwrap();
+    let path = Journal::path_for(&dir, round);
+    let r = socket::serve_resume(&listener, &path, timeout)
+        .unwrap_or_else(|e| panic!("{tag}: resume failed: {e:#}"));
+    clients.join().unwrap().unwrap_or_else(|e| panic!("{tag}: clients failed: {e:#}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    r
+}
+
+#[test]
+fn wire_server_killed_at_every_boundary_resumes_on_a_fresh_port() {
+    let n = 12;
+    let dim = 8;
+    let cfg = ProtocolConfig {
+        dropout: DropoutModel::Targeted { per_step: [vec![3], vec![7], vec![], vec![]] },
+        ..base(n, 4, dim, Topology::Complete, 0xD1E)
+    };
+    let m = models(n, dim, 77);
+    let sync = run_round(&cfg, &m).unwrap();
+    for (tag, point) in [
+        ("setup", StopAfter::Setup),
+        ("phase0", StopAfter::Phase(0)),
+        ("phase1", StopAfter::Phase(1)),
+        ("phase2", StopAfter::Phase(2)),
+        ("phase3", StopAfter::Phase(3)),
+    ] {
+        let r = wire_crash_restart(&cfg, &m, point, &format!("wire-{tag}"));
+        assert_eq!(r.sum, sync.sum, "{tag}: sum");
+        assert_eq!(r.sets, sync.sets, "{tag}: survivor sets");
+        assert_eq!(r.reliable, sync.reliable, "{tag}: reliable");
+        // post-crash stats cover only resumed traffic, so no stats compare
+    }
+}
+
+#[test]
+fn thousand_client_wire_round_survives_a_mid_round_server_crash() {
+    // the CI acceptance bar: n = 1000 over real loopback sockets, server
+    // killed after routing shares (phase 1), resumed on a fresh port
+    let n = 1000;
+    let dim = 8;
+    let cfg = base(n, 4, dim, Topology::Harary { k: 8 }, 0xFEED);
+    let m = models(n, dim, 0xACE);
+    let sync = run_round(&cfg, &m).unwrap();
+    let r = wire_crash_restart(&cfg, &m, StopAfter::Phase(1), "wire-1k");
+    assert_eq!(r.sum, sync.sum);
+    assert_eq!(r.sets, sync.sets);
+    assert_eq!(r.reliable, sync.reliable);
+}
