@@ -115,10 +115,44 @@ impl Codec {
     }
 }
 
+/// A client's *local* top-k support: the k coordinates of `eff` (its
+/// error-feedback-corrected update, see `protocol::session`) with the
+/// largest two's-complement magnitude, ties toward the lower coordinate.
+/// Returned sorted ascending — the per-client half of the deployment-grade
+/// TopK path, where ranking needs only local knowledge (vs the
+/// [`Codec::plan`] oracle, which sums magnitudes across all clients).
+pub fn local_topk(eff: &[u64], bits: u32, k: usize) -> Vec<u32> {
+    let dim = eff.len();
+    assert!(k >= 1 && k <= dim, "local_topk k={k} out of 1..=dim={dim}");
+    let mut order: Vec<u32> = (0..dim as u32).collect();
+    order.select_nth_unstable_by(k - 1, |a, b| {
+        magnitude(eff[*b as usize], bits)
+            .cmp(&magnitude(eff[*a as usize], bits))
+            .then_with(|| a.cmp(b))
+    });
+    let mut idx = order[..k].to_vec();
+    idx.sort_unstable();
+    idx
+}
+
+/// Union of per-client supports into one round coordinate map (sorted,
+/// deduplicated) — what the server assembles from the uploaded local-top-k
+/// sets before announcing the round's shared [`IndexPlan`].
+pub fn union_support(supports: &[Vec<u32>], dim: usize) -> Vec<u32> {
+    let mut present = vec![false; dim];
+    for s in supports {
+        for &i in s {
+            assert!((i as usize) < dim, "support index {i} out of dim {dim}");
+            present[i as usize] = true;
+        }
+    }
+    (0..dim as u32).filter(|&i| present[i as usize]).collect()
+}
+
 /// Two's-complement magnitude of a masked-domain word: |x| where x is the
 /// signed interpretation of `w` in Z_{2^bits}.
 #[inline]
-fn magnitude(w: u64, bits: u32) -> u64 {
+pub(crate) fn magnitude(w: u64, bits: u32) -> u64 {
     let m = (w & mod_mask(bits)) as u128;
     let half = 1u128 << (bits - 1);
     if m >= half {
@@ -312,6 +346,28 @@ mod tests {
         let models = vec![vec![7u64, 7, 7, 7]];
         let plan = Codec::TopK { k: 2 }.plan(4, 32, 0, &models);
         assert_eq!(plan.indices().unwrap(), &[0, 1]);
+    }
+
+    #[test]
+    fn local_topk_ranks_by_own_magnitude() {
+        let neg = (1u64 << 32) - 2000; // -2000 mod 2^32
+        let eff = vec![5u64, neg, 0, 1999, 7];
+        assert_eq!(local_topk(&eff, 32, 2), vec![1, 3]);
+        // ties break toward the lower coordinate
+        assert_eq!(local_topk(&[4u64, 4, 4], 32, 2), vec![0, 1]);
+    }
+
+    #[test]
+    fn union_support_merges_and_dedupes() {
+        let u = union_support(&[vec![3, 1], vec![1, 7], vec![]], 8);
+        assert_eq!(u, vec![1, 3, 7]);
+        assert_eq!(union_support(&[], 4), Vec::<u32>::new());
+    }
+
+    #[test]
+    #[should_panic(expected = "out of dim")]
+    fn union_support_rejects_out_of_range() {
+        let _ = union_support(&[vec![4]], 4);
     }
 
     #[test]

@@ -5,7 +5,8 @@
 //! and benches. This module provides the "real service" arrangement built
 //! on the same poll-able [`ClientSm`]:
 //!
-//! * [`run_round_event_loop`] — **the scaling shape.** A single event loop
+//! * the event-loop executor ([`RoundRunner`] with the default
+//!   [`Executor::EventLoop`]) — **the scaling shape.** A single event loop
 //!   multiplexes all n client state machines over a fixed worker pool
 //!   (`par::threads()`-sized): clients are sharded deterministically across
 //!   workers, each protocol phase is one parallel sweep over the shards,
@@ -25,15 +26,19 @@
 //! in tests and in the randomized differential harness
 //! (`sim::differential`).
 
+pub use crate::net::socket::StopAfter;
+
 use crate::net::{Dir, NetStats};
 use crate::protocol::client::ClientSm;
 use crate::protocol::messages::*;
-use crate::protocol::server::{RoundOutput, Server};
+use crate::protocol::server::{RoundOutput, RoundSink, Server};
 use crate::protocol::{ProtocolConfig, SurvivorSets};
 use crate::util::rng::Rng;
 use anyhow::{bail, Context, Result};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 /// Outcome of a coordinated round (mirrors the engine's essentials).
 #[derive(Debug)]
@@ -78,7 +83,7 @@ pub fn event_loop_workers(n: usize) -> usize {
 /// Pre-draw every client's per-step dropout decision in the sync engine's
 /// draw order (step-major, client-minor), so rng-free models produce
 /// identical survivor sets in every execution shape.
-fn predraw_survivals(cfg: &ProtocolConfig, dropout_rng: &mut Rng) -> Vec<[bool; 4]> {
+pub(crate) fn predraw_survivals(cfg: &ProtocolConfig, dropout_rng: &mut Rng) -> Vec<[bool; 4]> {
     let mut survives = vec![[true; 4]; cfg.n];
     for step in 0..4 {
         for (id, s) in survives.iter_mut().enumerate() {
@@ -156,38 +161,234 @@ fn sweep_lanes(lanes: &mut [Lane<'_>], workers: usize, live: &AtomicUsize, peak:
     });
 }
 
-/// Run one aggregation round through the worker-pool event loop with the
-/// default worker count ([`event_loop_workers`]).
-pub fn run_round_event_loop(
-    cfg: &ProtocolConfig,
-    models: &[Vec<u64>],
-) -> Result<CoordRoundResult> {
-    run_round_event_loop_with(cfg, models, event_loop_workers(cfg.n)).map(|(r, _)| r)
+/// Which execution shape drives a round.
+///
+/// The legacy thread-per-client `Threaded` executor was deleted with its
+/// coordinator once the event loop's equivalence suite had green CI cycles
+/// (ROADMAP follow-up): the event loop is now pinned against the engine
+/// directly. Lives here (not in `sim::campaign`) since [`RoundRunner`]
+/// made it part of the round API; the campaign re-exports it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Executor {
+    /// The deterministic synchronous engine (`protocol::engine`).
+    Engine,
+    /// The worker-pool event-loop coordinator (the scaling shape).
+    EventLoop,
+    /// The loopback socket transport (`net::socket`) — every message
+    /// crosses a real TCP stream as wire frames.
+    Wire,
 }
 
-/// [`run_round_event_loop`] with an explicit worker budget, returning the
-/// loop telemetry alongside the result.
-pub fn run_round_event_loop_with(
-    cfg: &ProtocolConfig,
-    models: &[Vec<u64>],
-    workers: usize,
-) -> Result<(CoordRoundResult, LoopTelemetry)> {
-    run_round_event_loop_inner(cfg, models, workers, None)
+impl Executor {
+    /// Every executor, in reference-first order.
+    pub const ALL: [Executor; 3] = [Executor::Engine, Executor::EventLoop, Executor::Wire];
+
+    /// Every executor except the [`Executor::Engine`] reference — the list
+    /// the differential harness and equivalence suites iterate, derived
+    /// from [`Executor::ALL`] so a future executor joins them by
+    /// construction.
+    pub fn non_reference() -> impl Iterator<Item = Executor> {
+        Executor::ALL.into_iter().filter(|e| *e != Executor::Engine)
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Executor::Engine => "engine",
+            Executor::EventLoop => "event-loop",
+            Executor::Wire => "wire",
+        }
+    }
 }
 
-/// [`run_round_event_loop`] writing an fsync'd `crate::journal` round log:
-/// every server state transition hits `<journal_dir>/round-<tag>.ccj`
-/// before it takes effect, so a crashed in-process round is recoverable by
-/// `journal::recover` exactly like a crashed wire round.
-pub fn run_round_event_loop_journaled(
+/// Validated knobs for one round execution — the single options surface
+/// shared by [`RoundRunner`], the wire transport (`net::socket::serve` /
+/// `serve_resume`) and the session layer (`protocol::session`). Built via
+/// [`RoundOptions::builder`], which rejects contradictory combinations
+/// instead of silently ignoring knobs (mirroring
+/// `ProtocolConfig::builder`).
+#[derive(Debug, Clone)]
+pub struct RoundOptions {
+    /// Execution shape. Defaults to [`Executor::EventLoop`].
+    pub executor: Executor,
+    /// Event-loop sweep worker budget; `None` → [`event_loop_workers`].
+    pub workers: Option<usize>,
+    /// Journal directory: when set, every server state transition is
+    /// fsync'd to `<dir>/round-<tag>.ccj` before it takes effect, so a
+    /// crashed round is recoverable (`journal::recover` / `serve_resume`).
+    pub journal_dir: Option<PathBuf>,
+    /// Wall-clock budget for wire rounds (accept + 4 phases). `None` →
+    /// `net::socket::DEFAULT_TIMEOUT`. In-process executors ignore it.
+    pub timeout: Option<Duration>,
+    /// Crash injection point (tests only; wire executor with a journal).
+    pub stop_after: Option<StopAfter>,
+}
+
+impl Default for RoundOptions {
+    fn default() -> RoundOptions {
+        RoundOptions {
+            executor: Executor::EventLoop,
+            workers: None,
+            journal_dir: None,
+            timeout: None,
+            stop_after: None,
+        }
+    }
+}
+
+impl RoundOptions {
+    pub fn builder() -> RoundOptionsBuilder {
+        RoundOptionsBuilder::default()
+    }
+
+    /// The effective wire deadline.
+    pub fn timeout_or_default(&self) -> Duration {
+        self.timeout.unwrap_or(crate::net::socket::DEFAULT_TIMEOUT)
+    }
+}
+
+/// Builder for [`RoundOptions`]; `build()` validates cross-knob rules.
+#[derive(Debug, Clone, Default)]
+pub struct RoundOptionsBuilder {
+    executor: Option<Executor>,
+    workers: Option<usize>,
+    journal_dir: Option<PathBuf>,
+    timeout: Option<Duration>,
+    stop_after: Option<StopAfter>,
+}
+
+impl RoundOptionsBuilder {
+    pub fn executor(mut self, e: Executor) -> Self {
+        self.executor = Some(e);
+        self
+    }
+
+    pub fn workers(mut self, w: usize) -> Self {
+        self.workers = Some(w);
+        self
+    }
+
+    pub fn journal(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.journal_dir = Some(dir.into());
+        self
+    }
+
+    pub fn timeout(mut self, t: Duration) -> Self {
+        self.timeout = Some(t);
+        self
+    }
+
+    pub fn stop_after(mut self, point: StopAfter) -> Self {
+        self.stop_after = Some(point);
+        self
+    }
+
+    pub fn build(self) -> Result<RoundOptions> {
+        let executor = self.executor.unwrap_or(Executor::EventLoop);
+        if let Some(w) = self.workers {
+            if w == 0 {
+                bail!("workers must be >= 1");
+            }
+            if executor != Executor::EventLoop {
+                bail!("an explicit worker budget only applies to the event-loop executor");
+            }
+        }
+        if self.journal_dir.is_some() && executor == Executor::Engine {
+            bail!("the sync engine executor does not journal; use the event loop or wire");
+        }
+        if self.stop_after.is_some() {
+            if self.journal_dir.is_none() {
+                bail!("crash injection (stop_after) requires a journal to resume from");
+            }
+            if executor != Executor::Wire {
+                bail!("crash injection (stop_after) is a wire-executor knob");
+            }
+        }
+        Ok(RoundOptions {
+            executor,
+            workers: self.workers,
+            journal_dir: self.journal_dir,
+            timeout: self.timeout,
+            stop_after: self.stop_after,
+        })
+    }
+}
+
+/// The one way to run a cold aggregation round: every executor (sync
+/// engine, worker-pool event loop, loopback wire), optional journaling and
+/// crash injection behind a single validated options surface. Replaces the
+/// old `run_round_event_loop{,_with,_journaled}` / `run_round_wire{,_with}`
+/// function family.
+///
+/// Warm (session) rounds go through `protocol::session::Session::run_round`,
+/// which takes the same [`RoundOptions`].
+pub struct RoundRunner {
+    opts: RoundOptions,
+}
+
+impl RoundRunner {
+    pub fn new(opts: RoundOptions) -> RoundRunner {
+        RoundRunner { opts }
+    }
+
+    pub fn options(&self) -> &RoundOptions {
+        &self.opts
+    }
+
+    /// Run one cold round over `models` under this runner's options.
+    pub fn run(&self, cfg: &ProtocolConfig, models: &[Vec<u64>]) -> Result<CoordRoundResult> {
+        match self.opts.executor {
+            Executor::Engine => {
+                let r = crate::protocol::engine::run_round(cfg, models)?;
+                Ok(CoordRoundResult {
+                    sum: r.sum,
+                    reliable: r.reliable,
+                    sets: r.sets,
+                    stats: r.stats,
+                })
+            }
+            Executor::EventLoop => self.run_event_loop(cfg, models).map(|(r, _)| r),
+            Executor::Wire => crate::net::socket::run_round_wire_opts(cfg, models, &self.opts),
+        }
+    }
+
+    /// [`RoundRunner::run`] returning the loop telemetry. Event-loop
+    /// executor only — the other shapes have no sweep telemetry.
+    pub fn run_with_telemetry(
+        &self,
+        cfg: &ProtocolConfig,
+        models: &[Vec<u64>],
+    ) -> Result<(CoordRoundResult, LoopTelemetry)> {
+        if self.opts.executor != Executor::EventLoop {
+            bail!("loop telemetry is only observable on the event-loop executor");
+        }
+        self.run_event_loop(cfg, models)
+    }
+
+    fn run_event_loop(
+        &self,
+        cfg: &ProtocolConfig,
+        models: &[Vec<u64>],
+    ) -> Result<(CoordRoundResult, LoopTelemetry)> {
+        let workers = self.opts.workers.unwrap_or_else(|| event_loop_workers(cfg.n));
+        let sink = match &self.opts.journal_dir {
+            Some(dir) => Some(cold_journal_sink(dir, cfg, models)?),
+            None => None,
+        };
+        run_round_event_loop_inner(cfg, models, workers, sink).map(|(r, t, _)| (r, t))
+    }
+}
+
+/// Create the fsync'd round journal for an in-process cold round — the
+/// setup record is on disk before the first lane steps.
+fn cold_journal_sink(
+    dir: &std::path::Path,
     cfg: &ProtocolConfig,
     models: &[Vec<u64>],
-    journal_dir: &std::path::Path,
-) -> Result<CoordRoundResult> {
+) -> Result<Box<dyn RoundSink>> {
     let round = crate::net::socket::round_tag(cfg.seed);
     let setup = derive_round_setup(cfg, models);
     let journal = crate::journal::Journal::create(
-        journal_dir,
+        dir,
         round,
         cfg.n,
         cfg.t,
@@ -196,19 +397,26 @@ pub fn run_round_event_loop_journaled(
         &setup.graph,
     )
     .context("create round journal")?;
-    drop(setup);
-    let sink: Box<dyn crate::protocol::server::RoundSink> =
-        Box::new(crate::journal::JournalSink::new(journal));
-    run_round_event_loop_inner(cfg, models, event_loop_workers(cfg.n), Some(sink))
-        .map(|(r, _)| r)
+    Ok(Box::new(crate::journal::JournalSink::new(journal)))
 }
 
-fn run_round_event_loop_inner(
+/// The event loop, also handing back the client state machines after the
+/// round — `protocol::session::Session::establish` retains the clients
+/// (with their session caches) for the warm rounds that follow.
+pub(crate) fn run_cold_round_capture<'m>(
     cfg: &ProtocolConfig,
-    models: &[Vec<u64>],
+    models: &'m [Vec<u64>],
     workers: usize,
-    sink: Option<Box<dyn crate::protocol::server::RoundSink>>,
-) -> Result<(CoordRoundResult, LoopTelemetry)> {
+) -> Result<(CoordRoundResult, Vec<ClientSm<'m>>)> {
+    run_round_event_loop_inner(cfg, models, workers, None).map(|(r, _, sms)| (r, sms))
+}
+
+fn run_round_event_loop_inner<'m>(
+    cfg: &ProtocolConfig,
+    models: &'m [Vec<u64>],
+    workers: usize,
+    sink: Option<Box<dyn RoundSink>>,
+) -> Result<(CoordRoundResult, LoopTelemetry, Vec<ClientSm<'m>>)> {
     assert_eq!(models.len(), cfg.n);
     let workers = workers.max(1);
     let RoundSetup { graph, survives, plan, streams } = derive_round_setup(cfg, models);
@@ -343,7 +551,164 @@ fn run_round_event_loop_inner(
         sweeps,
         kernel_backend: crate::kernels::selected().name(),
     };
-    Ok((CoordRoundResult { sum, reliable, sets, stats }, telemetry))
+    let machines = lanes.into_iter().map(|l| l.sm).collect();
+    Ok((CoordRoundResult { sum, reliable, sets, stats }, telemetry, machines))
+}
+
+/// Inputs of one warm (session-resume) round through the event loop: the
+/// participants' already-`warm_begin`-ed state machines, the warm server
+/// built from the session's caches, and the byte charge of the
+/// server-assembled coordinate-map download (0 for derived-map codecs).
+pub(crate) struct WarmLoopIo<'m> {
+    pub machines: Vec<ClientSm<'m>>,
+    pub server: Server,
+    /// Per-recipient coordinate-map download bytes (union support × 4,
+    /// TopK only) charged with the phase-0 plan and excluded from
+    /// [`NetStats::setup_bytes`].
+    pub map_bytes: usize,
+    pub workers: usize,
+}
+
+/// Run one warm round's four phases through the worker-pool event loop.
+///
+/// The machines and the server are handed back even when the round errors
+/// (a |V_k| < t abort), so the session layer can re-seat its clients and
+/// stay usable — an aborted warm round burns its ratchet round number,
+/// nothing else.
+pub(crate) fn run_warm_event_loop(
+    io: WarmLoopIo<'_>,
+) -> (Result<CoordRoundResult>, Server, Vec<ClientSm<'_>>) {
+    let WarmLoopIo { machines, mut server, map_bytes, workers } = io;
+    let workers = workers.max(1);
+    let mask_workers = (crate::par::threads() / workers).max(1);
+    let mut lane_of: Vec<Option<usize>> = vec![None; server.n()];
+    let mut lanes: Vec<Lane<'_>> = machines
+        .into_iter()
+        .enumerate()
+        .map(|(idx, mut sm)| {
+            sm.set_mask_workers(mask_workers);
+            lane_of[sm.id()] = Some(idx);
+            Lane { sm, inbox: Some(Down::Start), outbox: None }
+        })
+        .collect();
+    let mut stats = NetStats::new(server.n());
+    let res = warm_loop_phases(&mut lanes, &lane_of, &mut server, &mut stats, map_bytes, workers);
+    let machines = lanes.into_iter().map(|l| l.sm).collect();
+    let res = res.map(|RoundOutput { sum, reliable, sets }| CoordRoundResult {
+        sum,
+        reliable,
+        sets,
+        stats,
+    });
+    (res, server, machines)
+}
+
+fn warm_loop_phases(
+    lanes: &mut [Lane<'_>],
+    lane_of: &[Option<usize>],
+    server: &mut Server,
+    stats: &mut NetStats,
+    map_bytes: usize,
+    workers: usize,
+) -> Result<RoundOutput> {
+    let live = AtomicUsize::new(0);
+    let peak = AtomicUsize::new(0);
+
+    // ---- phase 0: session resume (supports + re-key announcements)
+    sweep_lanes(lanes, workers, &live, &peak);
+    let mut resumes = Vec::new();
+    for lane in lanes.iter_mut() {
+        match lane.outbox.take() {
+            Some(Up::Warm(r)) => {
+                stats.record(0, Dir::Up, r.id, r.size_bytes());
+                stats.record_coord_map(r.support_bytes());
+                stats.record_rekey(Dir::Up, r.rekey_bytes());
+                resumes.push(r);
+            }
+            Some(Up::Dropped(id, step)) => log::trace!("client {id} dropped at step {step}"),
+            Some(Up::Failed(id, step, e)) => {
+                log::debug!("client {id} failed step {step}: {e}")
+            }
+            Some(_) => bail!("protocol order violation in warm phase 0"),
+            None => bail!("client {} produced no phase-0 output", lane.sm.id()),
+        }
+    }
+    let plans = server.warm_step0_resume(resumes)?;
+    for (id, wp) in plans {
+        stats.record(0, Dir::Down, id, wp.size_bytes() + map_bytes);
+        stats.record_coord_map(map_bytes);
+        stats.record_rekey(Dir::Down, wp.rekey_bytes());
+        let lane = lane_of[id].expect("warm plan for a client without a lane");
+        lanes[lane].inbox = Some(Down::WarmPlan(wp));
+    }
+
+    // ---- phase 1: share keys (ratcheted pads / re-key AEAD re-deals)
+    sweep_lanes(lanes, workers, &live, &peak);
+    let mut uploads = Vec::new();
+    for lane in lanes.iter_mut() {
+        match lane.outbox.take() {
+            Some(Up::Shares(u)) => {
+                stats.record(1, Dir::Up, u.from, u.size_bytes());
+                uploads.push(u);
+            }
+            Some(Up::Dropped(id, step)) => log::trace!("client {id} dropped at step {step}"),
+            Some(Up::Failed(id, step, e)) => {
+                log::debug!("client {id} withdrew step {step}: {e}")
+            }
+            Some(_) => bail!("protocol order violation in warm phase 1"),
+            None => {}
+        }
+    }
+    let deliveries = server.step1_route_shares(uploads)?;
+    for (id, d) in deliveries {
+        stats.record(1, Dir::Down, id, d.size_bytes());
+        let lane = lane_of[id].expect("delivery for a client without a lane");
+        lanes[lane].inbox = Some(Down::Delivery(d));
+    }
+
+    // ---- phase 2: masked inputs
+    sweep_lanes(lanes, workers, &live, &peak);
+    let mut masked = Vec::new();
+    for lane in lanes.iter_mut() {
+        match lane.outbox.take() {
+            Some(Up::Masked(m)) => {
+                stats.record(2, Dir::Up, m.id, m.size_bytes());
+                stats.record_masked_payload(m.payload_bytes());
+                masked.push(m);
+            }
+            Some(Up::Dropped(id, step)) => log::trace!("client {id} dropped at step {step}"),
+            Some(Up::Failed(id, step, e)) => {
+                log::debug!("client {id} failed step {step}: {e}")
+            }
+            Some(_) => bail!("protocol order violation in warm phase 2"),
+            None => {}
+        }
+    }
+    let announce = Arc::new(server.step2_collect_masked(masked)?);
+    for &id in &announce.v3 {
+        stats.record(2, Dir::Down, id, announce.size_bytes());
+        let lane = lane_of[id].expect("announce for a client without a lane");
+        lanes[lane].inbox = Some(Down::Announce(announce.clone()));
+    }
+
+    // ---- phase 3: unmask shares
+    sweep_lanes(lanes, workers, &live, &peak);
+    let mut responses = Vec::new();
+    for lane in lanes.iter_mut() {
+        match lane.outbox.take() {
+            Some(Up::Unmask(u)) => {
+                stats.record(3, Dir::Up, u.from, u.size_bytes());
+                responses.push(u);
+            }
+            Some(Up::Dropped(id, step)) => log::trace!("client {id} dropped at step {step}"),
+            Some(Up::Failed(id, step, e)) => {
+                log::debug!("client {id} failed step {step}: {e}")
+            }
+            Some(_) => bail!("protocol order violation in warm phase 3"),
+            None => {}
+        }
+    }
+    server.finalize(responses)
 }
 
 #[cfg(test)]
@@ -372,10 +737,15 @@ mod tests {
         expect
     }
 
+    /// A [`RoundRunner`] on the default event-loop executor.
+    fn loop_runner() -> RoundRunner {
+        RoundRunner::new(RoundOptions::default())
+    }
+
     /// The event loop against the sync engine, field by field.
     fn assert_matches_engine(cfg: &ProtocolConfig, m: &[Vec<u64>]) {
         let sync = engine::run_round(cfg, m).unwrap();
-        let r = run_round_event_loop(cfg, m).unwrap();
+        let r = loop_runner().run(cfg, m).unwrap();
         assert_eq!(r.reliable, sync.reliable, "event-loop: reliable");
         assert_eq!(r.sets, sync.sets, "event-loop: survivor sets");
         assert_eq!(r.sum, sync.sum, "event-loop: sum");
@@ -431,7 +801,8 @@ mod tests {
         let m = models(n, dim, 7);
         let expect = expected_sum(&m, 0..n, dim);
         for workers in [1usize, 2, 3, 8] {
-            let (r, tel) = run_round_event_loop_with(&cfg, &m, workers).unwrap();
+            let opts = RoundOptions::builder().workers(workers).build().unwrap();
+            let (r, tel) = RoundRunner::new(opts).run_with_telemetry(&cfg, &m).unwrap();
             assert!(r.reliable, "workers={workers}");
             assert_eq!(r.sum.as_ref().unwrap(), &expect, "workers={workers}");
             assert!(tel.peak_live_workers <= workers.max(1), "workers={workers}");
@@ -460,7 +831,7 @@ mod tests {
             ..ProtocolConfig::for_test(n, 3, 4, Topology::Complete, 3)
         };
         let m = models(n, 4, 3);
-        assert!(run_round_event_loop(&cfg, &m).is_err());
+        assert!(loop_runner().run(&cfg, &m).is_err());
     }
 
     #[test]
@@ -475,7 +846,7 @@ mod tests {
             ..ProtocolConfig::for_test(n, 2, 4, Topology::Complete, 4)
         };
         let m = models(n, 4, 4);
-        assert!(run_round_event_loop(&cfg, &m).is_err());
+        assert!(loop_runner().run(&cfg, &m).is_err());
     }
 
     #[test]
@@ -497,7 +868,7 @@ mod tests {
             };
             let m = models(n, 8, seed);
             let sync = engine::run_round(&cfg, &m);
-            let looped = run_round_event_loop(&cfg, &m);
+            let looped = loop_runner().run(&cfg, &m);
             match (sync, looped) {
                 (Ok(a), Ok(b)) => {
                     assert_eq!(a.sets, b.sets, "seed={seed}");
@@ -511,6 +882,59 @@ mod tests {
                 (Err(_), Err(_)) => { /* |V_k| < t abort is acceptable under dropout */ }
                 (a, b) => panic!("shapes disagree on abort: seed={seed} {a:?} vs {b:?}"),
             }
+        }
+    }
+
+    #[test]
+    fn round_options_builder_validates_cross_knob_rules() {
+        // defaults: event loop, nothing else
+        let d = RoundOptions::builder().build().unwrap();
+        assert_eq!(d.executor, Executor::EventLoop);
+        assert!(d.workers.is_none() && d.journal_dir.is_none() && d.stop_after.is_none());
+
+        assert!(RoundOptions::builder().workers(0).build().is_err());
+        assert!(RoundOptions::builder().executor(Executor::Wire).workers(2).build().is_err());
+        let journaled_engine = RoundOptions::builder().executor(Executor::Engine).journal("/tmp/j");
+        assert!(journaled_engine.build().is_err());
+        // stop_after needs a journal AND the wire executor
+        assert!(RoundOptions::builder()
+            .executor(Executor::Wire)
+            .stop_after(StopAfter::Setup)
+            .build()
+            .is_err());
+        assert!(RoundOptions::builder()
+            .journal("/tmp/j")
+            .stop_after(StopAfter::Setup)
+            .build()
+            .is_err());
+        let ok = RoundOptions::builder()
+            .executor(Executor::Wire)
+            .journal("/tmp/j")
+            .stop_after(StopAfter::Phase(2))
+            .timeout(Duration::from_secs(5))
+            .build()
+            .unwrap();
+        assert_eq!(ok.stop_after, Some(StopAfter::Phase(2)));
+        assert_eq!(ok.timeout_or_default(), Duration::from_secs(5));
+    }
+
+    #[test]
+    fn engine_and_wire_executors_agree_through_the_runner() {
+        let n = 8;
+        let dim = 12;
+        let cfg = ProtocolConfig::for_test(n, 4, dim, Topology::ErdosRenyi { p: 0.8 }, 909);
+        let m = models(n, dim, 11);
+        let reference = RoundRunner::new(
+            RoundOptions::builder().executor(Executor::Engine).build().unwrap(),
+        )
+        .run(&cfg, &m)
+        .unwrap();
+        for e in Executor::non_reference() {
+            let opts = RoundOptions::builder().executor(e).build().unwrap();
+            let r = RoundRunner::new(opts).run(&cfg, &m).unwrap();
+            assert_eq!(r.sets, reference.sets, "{}", e.name());
+            assert_eq!(r.sum, reference.sum, "{}", e.name());
+            assert!(r.stats.logical_eq(&reference.stats), "{}", e.name());
         }
     }
 }

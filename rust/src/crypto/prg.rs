@@ -26,11 +26,53 @@ use crate::util::mod_mask;
 pub const NONCE_PAIRWISE: [u8; 12] = *b"ccesa-pair\0\0";
 /// Nonce for self masks PRG(b_i).
 pub const NONCE_SELF: [u8; 12] = *b"ccesa-self\0\0";
+/// Nonce for the cross-round session seed ratchet ([`ratchet_seed`]).
+pub const NONCE_RATCHET: [u8; 12] = *b"ccesa-rtch\0\0";
+/// Nonce prefix (10 bytes + direction byte + zero) for warm-round share
+/// transport ([`warm_share_pad`]).
+pub const NONCE_WARM_SHARE_PREFIX: [u8; 10] = *b"ccesa-wshr";
 
 /// Keystream words per vectorized batch (16 blocks × 16 words).
 const BATCH_WORDS: usize = BATCH_BLOCKS * WORDS_PER_BLOCK;
 /// Elements per block on the wide (b > 32) path: two u32 words each.
 const WIDE_PER_BLOCK: usize = WORDS_PER_BLOCK / 2;
+
+/// Per-round mask seed of a cross-round session: the first 32 keystream
+/// bytes of `ChaCha20(base, NONCE_RATCHET)` at block counter `round`.
+///
+/// Counter-seekable by construction — deriving round k is O(1), not k
+/// hash-chain steps — and one-way in the forward direction only in the
+/// sense that distinct rounds use independent keystream blocks; the session
+/// layer re-keys `base` itself whenever a secret key that could reconstruct
+/// it has been revealed (see `protocol::session`).
+pub fn ratchet_seed(base: &[u8; 32], round: u64) -> [u8; 32] {
+    assert!(round <= u32::MAX as u64, "ratchet round {round} exceeds the u32 counter space");
+    let cipher = ChaCha20::new(base, &NONCE_RATCHET);
+    let mut block = [0u8; 64];
+    cipher.block(round as u32, &mut block);
+    block[..32].try_into().unwrap()
+}
+
+/// One-time pad for a warm-round share ciphertext: 32 keystream bytes of
+/// `ChaCha20(enc_base, "ccesa-wshr" || dir || 0)` at block counter `round`.
+///
+/// Warm rounds re-deal only the fresh self-mask share `b_i^{(k)}_{j}` (32
+/// bytes) over the cached pairwise channel key; the pad is XORed over the
+/// share's byte encoding. `dir` separates the i→j and j→i streams that
+/// share one `enc_base` (callers pass `(from < to) as u8`). Unlike the
+/// cold-start AEAD path this carries no tag — a tampering server can only
+/// corrupt the sum (already in its power by dropping messages), not learn
+/// anything, and the differential harness catches corruption.
+pub fn warm_share_pad(enc_base: &[u8; 32], dir: u8, round: u64) -> [u8; 32] {
+    assert!(round <= u32::MAX as u64, "warm round {round} exceeds the u32 counter space");
+    let mut nonce = [0u8; 12];
+    nonce[..10].copy_from_slice(&NONCE_WARM_SHARE_PREFIX);
+    nonce[10] = dir;
+    let cipher = ChaCha20::new(enc_base, &nonce);
+    let mut block = [0u8; 64];
+    cipher.block(round as u32, &mut block);
+    block[..32].try_into().unwrap()
+}
 
 /// Expand elements `start .. start + out.len()` of `PRG(seed)` into `out`,
 /// each reduced mod 2^bits — `out` is a window of the conceptual full mask
@@ -278,6 +320,38 @@ mod tests {
                 assert_eq!(sharded, serial, "bits={bits} split={split}");
             }
         }
+    }
+
+    #[test]
+    fn ratchet_rounds_are_independent_and_seekable() {
+        let base = [0x11u8; 32];
+        let s0 = ratchet_seed(&base, 0);
+        let s1 = ratchet_seed(&base, 1);
+        let s1000 = ratchet_seed(&base, 1000);
+        assert_ne!(s0, s1);
+        assert_ne!(s1, s1000);
+        // deterministic: seeking straight to a round gives the same seed
+        assert_eq!(ratchet_seed(&base, 1000), s1000);
+        // base-sensitive
+        assert_ne!(ratchet_seed(&[0x12u8; 32], 0), s0);
+        // domain-separated from the mask expansion of the same key
+        let mut direct = [0u64; 4];
+        expand_masks(&base, &NONCE_SELF, 64, &mut direct);
+        let s0_words: Vec<u64> =
+            s0.chunks(8).map(|c| u64::from_le_bytes(c.try_into().unwrap())).collect();
+        assert_ne!(direct.to_vec(), s0_words);
+    }
+
+    #[test]
+    fn warm_share_pad_separates_round_direction_and_key() {
+        let k = [0x77u8; 32];
+        let p = warm_share_pad(&k, 0, 3);
+        assert_eq!(warm_share_pad(&k, 0, 3), p);
+        assert_ne!(warm_share_pad(&k, 1, 3), p);
+        assert_ne!(warm_share_pad(&k, 0, 4), p);
+        assert_ne!(warm_share_pad(&[0x78u8; 32], 0, 3), p);
+        // and from the ratchet stream of the same key
+        assert_ne!(ratchet_seed(&k, 3), p);
     }
 
     #[test]

@@ -395,11 +395,96 @@ where
     Ok(history)
 }
 
+/// Drive a [`crate::sim::SessionScenario`] through the FL update loop: one
+/// cold establishing round, then the scenario's warm rounds over a live
+/// [`crate::protocol::session::Session`] — amortized setup, ratcheted
+/// seeds, and (under a TopK codec) per-client local ranking with
+/// cross-round error feedback. The companion to [`run_fl_scenario`], which
+/// re-runs cold setup every round.
+///
+/// Per round, every client produces a `dim`-length f32 update via
+/// `local_update(round, client, &global, rng)` (round 0 is the cold
+/// round); updates are quantized into the modular domain, aggregated, and
+/// the dequantized V3 mean is added to the global on the round's support.
+/// Off-support coordinates are untouched — but unlike the oracle-TopK cold
+/// path, their quantized mass is *not lost*: it stays in each client's
+/// session residual and ships in a later round.
+pub fn run_fl_session<F>(
+    sc: &crate::sim::SessionScenario,
+    clip: f32,
+    mut local_update: F,
+) -> Result<ScenarioFlHistory>
+where
+    F: FnMut(u64, usize, &[f32], &mut Rng) -> Vec<f32>,
+{
+    use crate::coordinator::CoordRoundResult;
+    use crate::protocol::session::Session;
+    let cfg = sc.config()?;
+    let q = Quantizer::for_sum_of(sc.mask_bits, clip, sc.n);
+    let opts = crate::coordinator::RoundOptions::default();
+    let mut history = ScenarioFlHistory {
+        global: vec![0.0f32; sc.dim],
+        logs: Vec::with_capacity(sc.warm_rounds as usize + 1),
+        total_stats: NetStats::new(sc.n),
+    };
+    let mut rng = Rng::new(sc.seed ^ 0xF1);
+    let mut locals_for = |round: u64, global: &[f32], rng: &mut Rng| -> Vec<Vec<u64>> {
+        (0..sc.n)
+            .map(|client| {
+                let mut crng = rng.split(0x10CA1 + client as u64);
+                let update = local_update(round, client, global, &mut crng);
+                assert_eq!(update.len(), sc.dim, "client {client} update dimension");
+                q.quantize(&update)
+            })
+            .collect()
+    };
+    let mut apply = |history: &mut ScenarioFlHistory, round: u64, r: &CoordRoundResult| {
+        history.total_stats.merge(&r.stats);
+        if let Some(sum) = &r.sum {
+            let denom = r.sets.v3.len().max(1) as f64;
+            for (g, v) in history.global.iter_mut().zip(q.dequantize(sum)) {
+                *g += (v / denom) as f32;
+            }
+        }
+        history.logs.push(ScenarioRoundLog {
+            round: round as usize,
+            reliable: r.reliable,
+            survivors: r.sets.v3.len(),
+            bytes_up: r.stats.bytes_up.iter().sum(),
+            bytes_down: r.stats.bytes_down.iter().sum(),
+        });
+    };
+
+    let models = locals_for(0, &history.global.clone(), &mut rng);
+    let (mut session, cold) = Session::establish(&cfg, &models)?;
+    apply(&mut history, 0, &cold);
+    let members = session.members();
+    for round in 1..=sc.warm_rounds {
+        let models = locals_for(round, &history.global.clone(), &mut rng);
+        let active = sc.active_for(round, &members);
+        match session.run_round(&models, &active, &opts) {
+            Ok(r) => apply(&mut history, round, &r),
+            Err(e) => {
+                log::warn!("warm round {round}: protocol aborted: {e}");
+                history.logs.push(ScenarioRoundLog {
+                    round: round as usize,
+                    reliable: false,
+                    survivors: 0,
+                    bytes_up: 0,
+                    bytes_down: 0,
+                });
+            }
+        }
+    }
+    Ok(history)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::sim::{
-        AdversarySpec, ChurnModel, CodecSpec, Scenario, ThresholdRule, TopologySchedule,
+        AdversarySpec, Attendance, ChurnModel, CodecSpec, Scenario, SessionScenario,
+        ThresholdRule, TopologySchedule,
     };
 
     fn scenario(n: usize, rounds: usize, churn: ChurnModel) -> Scenario {
@@ -542,6 +627,123 @@ mod tests {
         // 1, 2, 4 → the oracle genuinely observes the evolving model
         let hist = run_fl_scenario(&sc, |_, _, global, _| vec![global[0] + 1.0; 5]).unwrap();
         assert!((hist.global[0] - 7.0).abs() < 0.05, "global {}", hist.global[0]);
+    }
+
+    #[test]
+    fn session_error_feedback_beats_oracle_topk_at_equal_k() {
+        // 2 "big" coordinates (1.0/round) and 6 "small" ones (0.4/round),
+        // identical across clients, aggregated under TopK k=2 for one cold
+        // round plus six more. The oracle cold path re-picks the two big
+        // coordinates every round and the small mass is lost forever; the
+        // session's error feedback banks it in residuals until it outranks
+        // the big coordinates and ships with interest. Equal k, equal
+        // rounds — the only difference is the residual.
+        let n = 6;
+        let dim = 8;
+        let rounds = 7u64; // cold + 6 warm
+        let update = |_: u64, _: usize, _: &[f32], _: &mut Rng| {
+            let mut u = vec![0.4f32; dim];
+            u[0] = 1.0;
+            u[1] = 1.0;
+            u
+        };
+        let dense_ref: Vec<f32> = (0..dim)
+            .map(|j| (if j < 2 { 1.0f32 } else { 0.4 }) * rounds as f32)
+            .collect();
+        let l1 = |global: &[f32]| -> f32 {
+            global.iter().zip(&dense_ref).map(|(g, d)| (g - d).abs()).sum()
+        };
+
+        let ssc = SessionScenario {
+            name: "ef-convergence".to_string(),
+            n,
+            dim,
+            mask_bits: 32,
+            t: n / 2 + 1,
+            topology: Topology::Complete,
+            codec: CodecSpec::TopK { frac: 2.0 / dim as f64 },
+            warm_rounds: rounds - 1,
+            attendance: Attendance::Full,
+            seed: 0xEF,
+        };
+        let ef = run_fl_session(&ssc, 4.0, update).unwrap();
+        assert_eq!(ef.unreliable_rounds(), 0);
+
+        let oracle = Scenario {
+            name: "ef-oracle-baseline".to_string(),
+            n,
+            dim,
+            mask_bits: 32,
+            rounds: rounds as usize,
+            topology: TopologySchedule::Static(Topology::Complete),
+            churn: ChurnModel::None,
+            adversary: AdversarySpec::Eavesdropper,
+            threshold: ThresholdRule::Fixed(n / 2 + 1),
+            codec: CodecSpec::TopK { frac: 2.0 / dim as f64 },
+            clip: 4.0,
+            seed: 0xEF,
+        };
+        let or = run_fl_scenario(&oracle, |r, c, g, rng| update(r as u64, c, g, rng)).unwrap();
+        assert_eq!(or.unreliable_rounds(), 0);
+
+        // the oracle path never touches the small coordinates at all
+        for j in 2..dim {
+            assert_eq!(or.global[j], 0.0, "oracle starves coordinate {j}");
+        }
+        // error feedback does: every coordinate moves by the end
+        assert!(
+            ef.global[2..].iter().all(|&g| g > 0.0),
+            "EF must eventually ship the starved coordinates: {:?}",
+            ef.global
+        );
+        // and the headline: at equal k and equal rounds, the EF trajectory
+        // is strictly closer to the dense reference (≈9.6 vs ≈16.8 here;
+        // the wide margin absorbs quantization noise and tie-break choice)
+        assert!(
+            l1(&ef.global) < l1(&or.global) * 0.8,
+            "EF L1 error {} vs oracle {}",
+            l1(&ef.global),
+            l1(&or.global)
+        );
+    }
+
+    #[test]
+    fn session_fl_loop_matches_cold_loop_on_dense_rounds() {
+        // with the dense codec there is no support selection and no
+        // residual: cold-per-round and warm-session aggregation see the
+        // same updates, so the trajectories must agree to quantization
+        // precision (the transports differ, the math must not)
+        let n = 6;
+        let dim = 5;
+        let update = |_: u64, client: usize, _: &[f32], _: &mut Rng| {
+            vec![(client as f32 + 1.0) / 10.0; dim]
+        };
+        let ssc = SessionScenario {
+            name: "dense-session".to_string(),
+            n,
+            dim,
+            mask_bits: 32,
+            t: n / 2 + 1,
+            topology: Topology::Complete,
+            codec: CodecSpec::Dense,
+            warm_rounds: 3,
+            attendance: Attendance::Full,
+            seed: 0xDE5E,
+        };
+        let hist = run_fl_session(&ssc, 4.0, update).unwrap();
+        assert_eq!(hist.logs.len(), 4);
+        assert_eq!(hist.unreliable_rounds(), 0);
+        let per_round_mean: f32 = (1..=n).map(|c| c as f32 / 10.0).sum::<f32>() / n as f32;
+        let expect = per_round_mean * 4.0;
+        for g in &hist.global {
+            assert!((g - expect).abs() < 5e-3, "global {g} vs {expect}");
+        }
+        // the session rounds actually amortized: warm setup traffic per
+        // round is below the cold round's
+        let cold_up = hist.logs[0].bytes_up;
+        for l in &hist.logs[1..] {
+            assert!(l.bytes_up < cold_up, "round {}: {} vs cold {cold_up}", l.round, l.bytes_up);
+        }
     }
 
     #[test]

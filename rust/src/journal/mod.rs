@@ -49,11 +49,13 @@
 //! outcomes there — see `sim::campaign::run_campaign_resumable`).
 
 use crate::codec::IndexPlan;
+use crate::crypto::dh::PublicKey;
 use crate::graph::Graph;
 use crate::protocol::messages::*;
-use crate::protocol::server::{RoundOutput, RoundSink, Server};
+use crate::protocol::server::{RoundOutput, RoundSink, Server, WarmCtx};
 use crate::protocol::{ClientId, SurvivorSets};
 use crate::wire::{self, Reader, WireError};
+use std::collections::BTreeMap;
 use std::fs::{File, OpenOptions};
 use std::io::Write;
 use std::path::{Path, PathBuf};
@@ -330,12 +332,99 @@ fn encode_setup(n: usize, t: usize, mask_bits: u32, plan: &IndexPlan, graph: &Gr
     p
 }
 
+/// The session caches a warm round's setup record carries on top of the
+/// cold fields, so [`recover`] rebuilds a warm `Server` (advertised keys,
+/// delta clocks) without the session process.
+struct WarmSetup {
+    keys: BTreeMap<ClientId, (PublicKey, PublicKey)>,
+    ctx: WarmCtx,
+    map_bytes: usize,
+}
+
+/// Trailing warm section appended to the cold setup payload. Presence is
+/// signaled by remaining bytes after the adjacency rows (version stays 1:
+/// a cold journal is byte-identical to what it always was).
+fn encode_setup_warm(
+    cold: Vec<u8>,
+    n: usize,
+    keys: &BTreeMap<ClientId, (PublicKey, PublicKey)>,
+    ctx: &WarmCtx,
+    map_bytes: usize,
+) -> Vec<u8> {
+    assert_eq!(ctx.last_seen.len(), n, "one last_seen clock per client");
+    assert_eq!(ctx.rekeyed_at.len(), n, "one rekeyed_at clock per client");
+    let mut p = cold;
+    p.push(1); // warm marker
+    p.extend_from_slice(&ctx.round.to_le_bytes());
+    wire::put_u32(&mut p, map_bytes as u32);
+    wire::put_u32(&mut p, keys.len() as u32);
+    for (&id, (c_pk, s_pk)) in keys {
+        wire::put_u32(&mut p, id as u32);
+        p.extend_from_slice(c_pk);
+        p.extend_from_slice(s_pk);
+    }
+    for &k in &ctx.last_seen {
+        p.extend_from_slice(&k.to_le_bytes());
+    }
+    for &k in &ctx.rekeyed_at {
+        p.extend_from_slice(&k.to_le_bytes());
+    }
+    p
+}
+
+fn decode_setup_warm(r: &mut Reader<'_>, n: usize) -> Result<WarmSetup, JournalError> {
+    if r.u8("warm marker")? != 1 {
+        return Err(JournalError::BadSetup("unknown warm setup marker".into()));
+    }
+    let round = r.u64("warm round")?;
+    if round == 0 {
+        return Err(JournalError::BadSetup("warm round must be >= 1".into()));
+    }
+    let map_bytes = r.u32("warm map bytes")? as usize;
+    let count = r.u32("warm key count")? as usize;
+    let need = count.checked_mul(4 + 64).ok_or(WireError::BadValue("warm key count"))?;
+    if r.remaining() < need {
+        return Err(WireError::Truncated("warm key entries").into());
+    }
+    let mut keys = BTreeMap::new();
+    for _ in 0..count {
+        let id = r.client_id("warm key id")?;
+        if id >= n {
+            return Err(JournalError::BadSetup(format!("warm key id {id} out of range")));
+        }
+        let c_pk: [u8; 32] = r.take(32, "warm c_pk")?.try_into().unwrap();
+        let s_pk: [u8; 32] = r.take(32, "warm s_pk")?.try_into().unwrap();
+        if keys.insert(id, (c_pk, s_pk)).is_some() {
+            return Err(JournalError::BadSetup(format!("duplicate warm key id {id}")));
+        }
+    }
+    let mut last_seen = Vec::with_capacity(n);
+    for _ in 0..n {
+        last_seen.push(r.u64("warm last_seen clock")?);
+    }
+    let mut rekeyed_at = Vec::with_capacity(n);
+    for _ in 0..n {
+        rekeyed_at.push(r.u64("warm rekeyed_at clock")?);
+    }
+    for (&clock, what) in last_seen.iter().zip(std::iter::repeat("last_seen")).chain(
+        rekeyed_at.iter().zip(std::iter::repeat("rekeyed_at")),
+    ) {
+        if clock >= round {
+            return Err(JournalError::BadSetup(format!(
+                "warm {what} clock {clock} not before round {round}"
+            )));
+        }
+    }
+    Ok(WarmSetup { keys, ctx: WarmCtx { round, last_seen, rekeyed_at }, map_bytes })
+}
+
 struct Setup {
     n: usize,
     t: usize,
     mask_bits: u32,
     plan: Arc<IndexPlan>,
     graph: Graph,
+    warm: Option<WarmSetup>,
 }
 
 fn decode_setup(payload: &[u8]) -> Result<Setup, JournalError> {
@@ -387,9 +476,11 @@ fn decode_setup(payload: &[u8]) -> Result<Setup, JournalError> {
         }
         adj.push(row);
     }
+    // bytes past the adjacency rows are the warm (session) section
+    let warm = if r.remaining() > 0 { Some(decode_setup_warm(&mut r, n)?) } else { None };
     r.done()?;
     let graph = Graph::from_adjacency(n, adj).map_err(JournalError::BadSetup)?;
-    Ok(Setup { n, t, mask_bits, plan, graph })
+    Ok(Setup { n, t, mask_bits, plan, graph, warm })
 }
 
 fn encode_ups(phase: u8, round: u32, ups: &[Up]) -> Vec<u8> {
@@ -561,6 +652,29 @@ impl Journal {
         Ok(Journal { w, round })
     }
 
+    /// [`Journal::create`] for a warm (session) round: the setup record
+    /// additionally carries the session caches — advertised keys, delta
+    /// clocks, the session round number and the TopK coordinate-map charge
+    /// — so [`recover`] rebuilds a warm `Server` from the log alone.
+    #[allow(clippy::too_many_arguments)]
+    pub fn create_warm(
+        dir: &Path,
+        round: u32,
+        n: usize,
+        t: usize,
+        mask_bits: u32,
+        plan: &IndexPlan,
+        graph: &Graph,
+        keys: &BTreeMap<ClientId, (PublicKey, PublicKey)>,
+        warm: &WarmCtx,
+        map_bytes: usize,
+    ) -> Result<Journal, JournalError> {
+        let mut w = LogWriter::create(&Self::path_for(dir, round))?;
+        let cold = encode_setup(n, t, mask_bits, plan, graph);
+        w.append(RT_SETUP, round, &encode_setup_warm(cold, n, keys, warm, map_bytes))?;
+        Ok(Journal { w, round })
+    }
+
     /// Reopen an already-recovered journal for further appends.
     pub fn open_append(path: &Path, round: u32) -> Result<Journal, JournalError> {
         Ok(Journal { w: LogWriter::open_append(path)?, round })
@@ -615,6 +729,11 @@ impl RoundSink for JournalSink {
         Ok(self.journal.record_ups(0, &ups)?)
     }
 
+    fn record_warm_step0(&mut self, resumes: &[WarmResume]) -> anyhow::Result<()> {
+        let ups: Vec<Up> = resumes.iter().map(|r| Up::Warm(r.clone())).collect();
+        Ok(self.journal.record_ups(0, &ups)?)
+    }
+
     fn record_step1(&mut self, uploads: &[ShareUpload]) -> anyhow::Result<()> {
         let ups: Vec<Up> = uploads.iter().map(|u| Up::Shares(u.clone())).collect();
         Ok(self.journal.record_ups(1, &ups)?)
@@ -654,8 +773,13 @@ pub struct Recovery {
     pub t: usize,
     pub mask_bits: u32,
     pub plan: Arc<IndexPlan>,
+    /// Per-recipient coordinate-map bytes on warm plan downs (TopK warm
+    /// rounds; 0 otherwise) — the transport re-charges these on resume.
+    pub map_bytes: usize,
     /// The replayed server — bit-identical to the pre-crash instance (no
-    /// sink attached; the caller reattaches via the returned journal).
+    /// sink attached; the caller reattaches via the returned journal). For
+    /// a warm round's journal this is a warm server, session caches loaded
+    /// from the setup record.
     pub server: Server,
     /// The phase whose collection is in progress (0–3), or 4 when the
     /// round already finalized.
@@ -695,10 +819,16 @@ pub fn recover(path: &Path) -> Result<Recovery, JournalError> {
         return Err(JournalError::MissingSetup);
     }
     let round = first.round;
-    let Setup { n, t, mask_bits, plan, graph } = decode_setup(&first.payload)?;
+    let Setup { n, t, mask_bits, plan, graph, warm } = decode_setup(&first.payload)?;
     let setup_payload = first.payload;
 
-    let mut server = Server::new(n, t, mask_bits, plan.clone(), graph);
+    let (mut server, map_bytes) = match warm {
+        None => (Server::new(n, t, mask_bits, plan.clone(), graph), 0),
+        Some(w) => (
+            Server::new_warm(n, t, mask_bits, plan.clone(), graph, w.keys, w.ctx),
+            w.map_bytes,
+        ),
+    };
     let mut next_phase = 0u8;
     let mut downs: Vec<(ClientId, Down)> = Vec::new();
     let mut announce: Option<Arc<SurvivorAnnounce>> = None;
@@ -729,6 +859,22 @@ pub fn recover(path: &Path) -> Result<Recovery, JournalError> {
                     )));
                 }
                 match phase {
+                    0 if server.warm().is_some() => {
+                        let resumes = take_typed(ups, |u| match u {
+                            Up::Warm(w) => Some(w),
+                            _ => None,
+                        })?;
+                        let plans = server
+                            .warm_step0_resume(resumes)
+                            .map_err(|e| JournalError::Replay(format!("warm step 0: {e}")))?;
+                        if !duplicate {
+                            downs = plans
+                                .into_iter()
+                                .map(|(id, wp)| (id, Down::WarmPlan(wp)))
+                                .collect();
+                            next_phase = 1;
+                        }
+                    }
                     0 => {
                         let advs = take_typed(ups, |u| match u {
                             Up::Adv(a) => Some(a),
@@ -832,6 +978,7 @@ pub fn recover(path: &Path) -> Result<Recovery, JournalError> {
         t,
         mask_bits,
         plan,
+        map_bytes,
         server,
         next_phase,
         downs,

@@ -7,6 +7,7 @@
 //! ccesa analyze turbo          # §1 Turbo-aggregate comparison
 //! ccesa analyze montecarlo     # empirical P_e vs Theorems 5/6
 //! ccesa round --n 100 --p 0.64 --dim 10000   # one secure-agg round
+//! ccesa round --session runs/s --rounds 10   # cold round + 10 warm rounds
 //! ccesa fl --config configs/quickstart.json  # config-driven FL run
 //! ccesa kernels                              # kernel-dispatch report (JSON)
 //! ccesa serve --n 1000 --addr 127.0.0.1:7171 # socket round server
@@ -64,6 +65,13 @@ fn main() -> Result<()> {
         None,
         "serve: journal directory for crash recovery; recover: journal file (or its directory)",
     )
+    .flag(
+        "session",
+        None,
+        "round: session directory — establish a cross-round session with one cold \
+         round, then run --rounds journaled warm rounds in it",
+    )
+    .flag("rounds", Some("5"), "warm rounds to run under `round --session`")
     .switch("sa", "use the complete graph (Bonawitz et al. SA)")
     .switch("check", "serve: verify the wire round against the in-process engine")
     .parse();
@@ -170,10 +178,6 @@ fn round(args: &Args) -> Result<()> {
         .unwrap_or_else(|| if sa { n / 2 + 1 } else { t_rule(n, p) });
     let topology = if sa { Topology::Complete } else { Topology::ErdosRenyi { p } };
     let codec = parse_codec(&args.req::<String>("codec"))?.resolve(dim);
-    let mut rng = Rng::new(args.req("seed"));
-    let models: Vec<Vec<u64>> = (0..n)
-        .map(|_| (0..dim).map(|_| rng.next_u64() & 0xFFFF_FFFF).collect())
-        .collect();
     let cfg = ProtocolConfig::builder()
         .clients(n)
         .threshold(t)
@@ -183,6 +187,13 @@ fn round(args: &Args) -> Result<()> {
         .codec(codec)
         .seed(args.req("seed"))
         .build()?;
+    if let Some(dir) = args.get_str("session") {
+        return session_rounds(args, &cfg, dir);
+    }
+    let mut rng = Rng::new(args.req("seed"));
+    let models: Vec<Vec<u64>> = (0..n)
+        .map(|_| (0..dim).map(|_| rng.next_u64() & 0xFFFF_FFFF).collect())
+        .collect();
     let r = run_round(&cfg, &models)?;
     println!(
         "scheme={} n={n} t={t} p={:.4} dim={dim} codec={}\n\
@@ -210,6 +221,49 @@ fn round(args: &Args) -> Result<()> {
             + r.times.total_ms("server_step2")
             + r.times.total_ms("server_finalize"),
     );
+    Ok(())
+}
+
+/// `ccesa round --session <dir>`: establish a cross-round session with one
+/// cold round, then run `--rounds` warm rounds over fresh synthetic models,
+/// each journaled under `<dir>` (one recoverable `.ccj` per warm round).
+/// Prints the amortization ledger: per-round setup bytes as a fraction of
+/// the cold round's, plus coordinate-map and re-key traffic.
+fn session_rounds(args: &Args, cfg: &ProtocolConfig, dir: &str) -> Result<()> {
+    use ccesa::protocol::session::Session;
+    let rounds: u64 = args.req("rounds");
+    let seed: u64 = args.req("seed");
+    let modmask = 0xFFFF_FFFFu64;
+    let models_for = |round: u64| -> Vec<Vec<u64>> {
+        let mut rng = Rng::new(ccesa::protocol::session::round_seed(seed, round) ^ 0x5E55);
+        (0..cfg.n)
+            .map(|_| (0..cfg.dim).map(|_| rng.next_u64() & modmask).collect())
+            .collect()
+    };
+    let (mut session, cold) = Session::establish(cfg, &models_for(0))?;
+    let cold_setup = cold.stats.setup_bytes();
+    println!(
+        "session established: {} members, cold round setup {} bytes, journal dir {dir}",
+        session.members().len(),
+        cold_setup,
+    );
+    let opts = ccesa::coordinator::RoundOptions::builder().journal(dir.to_string()).build()?;
+    let active = vec![true; cfg.n];
+    for round in 1..=rounds {
+        let r = session.run_round(&models_for(round), &active, &opts)?;
+        let s = &r.stats;
+        println!(
+            "warm round {round}: reliable={} |V3|={} setup {} bytes ({:.1}% of cold) \
+             coord-map {} rekey {}/{} bytes",
+            r.reliable,
+            r.sets.v3.len(),
+            s.setup_bytes(),
+            s.setup_bytes() as f64 / cold_setup.max(1) as f64 * 100.0,
+            s.coord_map_bytes,
+            s.rekey_up,
+            s.rekey_down,
+        );
+    }
     Ok(())
 }
 
@@ -269,7 +323,9 @@ fn serve_cmd(args: &Args) -> Result<()> {
     let listener = std::net::TcpListener::bind(&addr)?;
     println!("serving round {round:#010x} for n={} clients on {}", cfg.n, listener.local_addr()?);
     let setup = ccesa::coordinator::derive_round_setup(&cfg, &models);
-    let mut opts = ccesa::net::socket::ServeOptions::new().timeout(timeout);
+    let mut opts = ccesa::coordinator::RoundOptions::builder()
+        .executor(ccesa::coordinator::Executor::Wire)
+        .timeout(timeout);
     if let Some(dir) = args.get_str("journal") {
         opts = opts.journal(dir.to_string());
         println!(
@@ -277,7 +333,8 @@ fn serve_cmd(args: &Args) -> Result<()> {
             ccesa::journal::Journal::path_for(std::path::Path::new(&dir), round).display()
         );
     }
-    let r = ccesa::net::socket::serve_with(&listener, &cfg, setup.plan, setup.graph, round, &opts)?;
+    let opts = opts.build()?;
+    let r = ccesa::net::socket::serve(&listener, &cfg, setup.plan, setup.graph, round, &opts)?;
     print_round_result(&r);
     if args.get_bool("check") {
         let sync = run_round(&cfg, &models)?;
@@ -315,7 +372,11 @@ fn recover_cmd(args: &Args) -> Result<()> {
     }
     let listener = std::net::TcpListener::bind(&addr)?;
     println!("resuming round from {} on {}", path.display(), listener.local_addr()?);
-    let r = ccesa::net::socket::serve_resume(&listener, &path, timeout)?;
+    let opts = ccesa::coordinator::RoundOptions::builder()
+        .executor(ccesa::coordinator::Executor::Wire)
+        .timeout(timeout)
+        .build()?;
+    let r = ccesa::net::socket::serve_resume(&listener, &path, &opts)?;
     print_round_result(&r);
     Ok(())
 }

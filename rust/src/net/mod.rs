@@ -44,6 +44,19 @@ pub struct NetStats {
     pub framed_up: u64,
     /// Bytes observed at the socket, server → client.
     pub framed_down: u64,
+    /// Coordinate-map traffic of the deployment-grade TopK path: local
+    /// support uploads (warm phase 0) plus any explicit plan downloads.
+    /// A subset of the step-0/1 bytes already charged via
+    /// [`NetStats::record`], tracked separately so the codec's map cost is
+    /// measurable and excluded from [`NetStats::setup_bytes`].
+    pub coord_map_bytes: u64,
+    /// Session re-key traffic, client → server: fresh public keys and
+    /// cold-style AEAD share ciphertexts sent because the ratchet forced a
+    /// re-key. On a cold round this is *all* step-0/1 upload bytes.
+    pub rekey_up: u64,
+    /// Session re-key traffic, server → client (key bundles / replacement
+    /// neighbor keys / re-dealt share deliveries).
+    pub rekey_down: u64,
 }
 
 impl NetStats {
@@ -101,6 +114,29 @@ impl NetStats {
         self.masked_payload_bytes += bytes as u64;
     }
 
+    /// Charge coordinate-map bytes (a subset of already-recorded traffic).
+    pub fn record_coord_map(&mut self, bytes: usize) {
+        self.coord_map_bytes += bytes as u64;
+    }
+
+    /// Charge session re-key bytes (a subset of already-recorded traffic).
+    pub fn record_rekey(&mut self, dir: Dir, bytes: usize) {
+        match dir {
+            Dir::Up => self.rekey_up += bytes as u64,
+            Dir::Down => self.rekey_down += bytes as u64,
+        }
+    }
+
+    /// Setup traffic of the round: steps 0–1 in both directions, minus the
+    /// coordinate-map bytes (which pay for the codec, not for keys/shares).
+    /// This is the quantity the session layer amortizes — warm rounds must
+    /// push it far below a cold start (the `session-steady-state` CI gate).
+    pub fn setup_bytes(&self) -> u64 {
+        let gross: u64 = self.bytes_up[..2].iter().sum::<u64>()
+            + self.bytes_down[..2].iter().sum::<u64>();
+        gross - self.coord_map_bytes
+    }
+
     /// Total bytes through the server (both directions, all steps).
     pub fn server_total(&self) -> u64 {
         self.bytes_up.iter().sum::<u64>() + self.bytes_down.iter().sum::<u64>()
@@ -143,6 +179,9 @@ impl NetStats {
         self.masked_payload_bytes += other.masked_payload_bytes;
         self.framed_up += other.framed_up;
         self.framed_down += other.framed_down;
+        self.coord_map_bytes += other.coord_map_bytes;
+        self.rekey_up += other.rekey_up;
+        self.rekey_down += other.rekey_down;
         // the two per-client vectors are independent dimensions: each one
         // resizes under its own length check (resizing client_down under a
         // client_up guard dropped bytes whenever the lengths diverged)
@@ -171,6 +210,9 @@ impl NetStats {
             && self.msgs_up == other.msgs_up
             && self.msgs_down == other.msgs_down
             && self.masked_payload_bytes == other.masked_payload_bytes
+            && self.coord_map_bytes == other.coord_map_bytes
+            && self.rekey_up == other.rekey_up
+            && self.rekey_down == other.rekey_down
             && self.client_up == other.client_up
             && self.client_down == other.client_down
     }
@@ -253,6 +295,34 @@ mod tests {
         c.merge(&b);
         assert_eq!(c.framed_up, 50);
         assert_eq!(c.framed_down, 10);
+    }
+
+    #[test]
+    fn coord_map_and_rekey_counters_merge_and_gate_logical_eq() {
+        let mut a = NetStats::new(2);
+        a.record(0, Dir::Up, 0, 100);
+        a.record(1, Dir::Down, 0, 50);
+        a.record(2, Dir::Up, 0, 500);
+        let mut b = a.clone();
+        assert!(a.logical_eq(&b));
+        b.record_coord_map(12);
+        assert!(!a.logical_eq(&b), "coordinate-map bytes are logical traffic");
+        a.record_coord_map(12);
+        a.record_rekey(Dir::Up, 64);
+        assert!(!a.logical_eq(&b), "re-key accounting is logical traffic");
+        b.record_rekey(Dir::Up, 64);
+        assert!(a.logical_eq(&b));
+
+        // setup_bytes = step 0–1 both directions minus the coordinate map
+        assert_eq!(a.setup_bytes(), 100 + 50 - 12);
+
+        let mut c = NetStats::new(2);
+        c.record_coord_map(3);
+        c.record_rekey(Dir::Down, 7);
+        c.merge(&a);
+        assert_eq!(c.coord_map_bytes, 15);
+        assert_eq!(c.rekey_up, 64);
+        assert_eq!(c.rekey_down, 7);
     }
 
     #[test]

@@ -11,11 +11,11 @@
 //!   died, decode and validate the `Up` frames, and hand them to
 //!   [`Server`] in client-id order. Malformed frames close the offending
 //!   connection; replayed or stale frames are discarded by phase — both
-//!   without disturbing the round for honest clients.
-//! * [`serve_with`] — [`serve`] plus a journal: every state transition is
-//!   appended (fsync'd) to a `crate::journal` round log before it takes
-//!   effect, so the process can die at any point and [`serve_resume`] can
-//!   finish the round from the log alone.
+//!   without disturbing the round for honest clients. Knobs come from the
+//!   shared [`RoundOptions`] surface: a journal directory makes every
+//!   state transition fsync'd to a `crate::journal` round log before it
+//!   takes effect, so the process can die at any point and
+//!   [`serve_resume`] can finish the round from the log alone.
 //! * [`serve_resume`] — replay a round journal into a live [`Server`] and
 //!   pick the round up where the dead process stopped: re-accept the
 //!   surviving clients, re-send the `Down`s they never received (clients
@@ -30,9 +30,14 @@
 //!   mid-round, reconnect (to a freshly resolved address) and resubmit it;
 //!   duplicate `Down`s re-delivered by a resumed server are answered from
 //!   that cache without re-stepping the one-shot state machine.
-//! * [`run_round_wire`] — both halves wired together on an ephemeral
-//!   loopback port; the shape the differential harness runs as the `wire`
-//!   executor.
+//! * [`run_round_wire_opts`] — both halves wired together on an ephemeral
+//!   loopback port; the shape `coordinator::RoundRunner` runs as the
+//!   `wire` executor.
+//! * [`run_warm_round_wire`] — the warm (session) variant: the server and
+//!   the client state machines arrive pre-built from
+//!   `protocol::session::Session`, phase 0 moves [`WarmResume`] /
+//!   [`Down::WarmPlan`] frames instead of key advertisements, and both
+//!   halves hand their state back so the session survives the round.
 //!
 //! Accounting: logical (Appendix-C) byte charges replicate the event loop
 //! exactly — `Start`/`Finish` and `Dropped`/`Failed` cost nothing — so a
@@ -43,7 +48,7 @@
 //! records protocol state, not byte accounting).
 
 use crate::codec::IndexPlan;
-use crate::coordinator::{derive_round_setup, event_loop_workers, CoordRoundResult};
+use crate::coordinator::{derive_round_setup, event_loop_workers, CoordRoundResult, RoundOptions};
 use crate::graph::Graph;
 use crate::journal::{self, Journal, JournalSink};
 use crate::net::{Dir, NetStats};
@@ -58,7 +63,7 @@ use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::io::{self, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::path::{Path, PathBuf};
+use std::path::Path;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -102,39 +107,6 @@ pub enum StopAfter {
     /// `apply_phase(p)` ran (its records are on disk, its `Down`s are
     /// queued) but nothing was flushed.
     Phase(u8),
-}
-
-/// Knobs for [`serve_with`] beyond the positional round identity.
-#[derive(Debug, Clone, Default)]
-pub struct ServeOptions {
-    /// Wall-clock budget for the whole round. `None` → [`DEFAULT_TIMEOUT`].
-    pub timeout: Option<Duration>,
-    /// Journal directory: when set, every state transition is fsync'd to
-    /// `<dir>/round-<tag>.ccj` before it takes effect.
-    pub journal_dir: Option<PathBuf>,
-    /// Crash injection point (tests only).
-    pub stop_after: Option<StopAfter>,
-}
-
-impl ServeOptions {
-    pub fn new() -> ServeOptions {
-        ServeOptions::default()
-    }
-
-    pub fn timeout(mut self, t: Duration) -> ServeOptions {
-        self.timeout = Some(t);
-        self
-    }
-
-    pub fn journal(mut self, dir: impl Into<PathBuf>) -> ServeOptions {
-        self.journal_dir = Some(dir.into());
-        self
-    }
-
-    pub fn stop_after(mut self, point: StopAfter) -> ServeOptions {
-        self.stop_after = Some(point);
-        self
-    }
 }
 
 /// Deterministic jittered exponential backoff between connect attempts,
@@ -348,6 +320,9 @@ struct Exchange {
     plan: Arc<IndexPlan>,
     round: u32,
     deadline: Instant,
+    /// Per-recipient union-coordinate-map bytes riding on each warm plan
+    /// down (TopK warm rounds only; 0 for cold rounds).
+    map_bytes: usize,
 }
 
 impl Exchange {
@@ -416,8 +391,9 @@ impl Exchange {
 /// resulting `Down`s, charging logical byte stats exactly as the event
 /// loop does. Returns the round output after phase 3, `None` before.
 ///
-/// Shared by [`serve_with`] (phases 0–3 in sequence) and [`serve_resume`]
-/// (the remaining phases after replay) so the two paths cannot drift.
+/// Shared by [`serve`] / [`serve_warm`] (phases 0–3 in sequence) and
+/// [`serve_resume`] (the remaining phases after replay) so the paths
+/// cannot drift.
 fn apply_phase(
     server: &mut Server,
     ex: &mut Exchange,
@@ -425,6 +401,30 @@ fn apply_phase(
     ups: Vec<Up>,
 ) -> Result<Option<RoundOutput>> {
     match phase {
+        0 if server.warm().is_some() => {
+            let mut resumes = Vec::new();
+            for up in ups {
+                match up {
+                    Up::Warm(r) => {
+                        ex.stats.record(0, Dir::Up, r.id, r.size_bytes());
+                        ex.stats.record_coord_map(r.support_bytes());
+                        ex.stats.record_rekey(Dir::Up, r.rekey_bytes());
+                        resumes.push(r);
+                    }
+                    Up::Dropped(id, step) => log::trace!("client {id} dropped at step {step}"),
+                    Up::Failed(id, step, e) => log::debug!("client {id} failed step {step}: {e}"),
+                    other => bail!("protocol order violation in warm phase 0: {other:?}"),
+                }
+            }
+            let plans = server.warm_step0_resume(resumes)?;
+            for (id, wp) in plans {
+                ex.stats.record(0, Dir::Down, id, wp.size_bytes() + ex.map_bytes);
+                ex.stats.record_coord_map(ex.map_bytes);
+                ex.stats.record_rekey(Dir::Down, wp.rekey_bytes());
+                ex.send(id, &Down::WarmPlan(wp));
+            }
+            Ok(None)
+        }
         0 => {
             let mut advs = Vec::new();
             for up in ups {
@@ -560,35 +560,27 @@ fn finish_blast(ex: &mut Exchange) {
     }
 }
 
-/// Serve one aggregation round to `cfg.n` socket clients.
+/// Serve one cold aggregation round to `cfg.n` socket clients.
 ///
 /// `plan` and `graph` must come from the round's [`derive_round_setup`] so
 /// the server validates incoming `Masked` frames against the same index
 /// plan the clients encode with. Aborts (|V_k| < t) propagate as `Err`
 /// after the connections are dropped, which the honest driver observes as
 /// mid-round EOF — both sides fail, matching the engine's abort shape.
+///
+/// Knobs ride on [`RoundOptions`] (the executor field is not consulted —
+/// this *is* the wire executor): `journal_dir` makes every state
+/// transition fsync'd before it takes effect (crash recovery via
+/// [`serve_resume`]); `stop_after` injects a deliberate crash for tests.
 pub fn serve(
     listener: &TcpListener,
     cfg: &ProtocolConfig,
     plan: Arc<IndexPlan>,
     graph: Graph,
     round: u32,
-    timeout: Duration,
+    opts: &RoundOptions,
 ) -> Result<CoordRoundResult> {
-    serve_with(listener, cfg, plan, graph, round, &ServeOptions::new().timeout(timeout))
-}
-
-/// [`serve`] with options: an fsync'd round journal (crash recovery via
-/// [`serve_resume`]) and deliberate crash injection for tests.
-pub fn serve_with(
-    listener: &TcpListener,
-    cfg: &ProtocolConfig,
-    plan: Arc<IndexPlan>,
-    graph: Graph,
-    round: u32,
-    opts: &ServeOptions,
-) -> Result<CoordRoundResult> {
-    let deadline = Instant::now() + opts.timeout.unwrap_or(DEFAULT_TIMEOUT);
+    let deadline = Instant::now() + opts.timeout_or_default();
     // The journal's setup record goes to disk before the first client is
     // even accepted: a crash anywhere after this line leaves a resumable
     // round on disk.
@@ -598,14 +590,72 @@ pub fn serve_with(
             .context("create round journal")?;
         server.set_sink(Box::new(JournalSink::new(j)));
     }
-    let conns = accept_exact(listener, cfg.n, deadline)?;
+    serve_accepted(listener, server, cfg.n, 0, round, deadline, opts)
+}
+
+/// Serve one warm (session) round to `expect` resuming session members.
+///
+/// The server arrives pre-built by `protocol::session::Session` (graph,
+/// advertised keys and delta clocks loaded); phase 0 runs the
+/// [`WarmResume`] / [`Down::WarmPlan`] exchange instead of key
+/// advertisement. `map_bytes` is the per-recipient union-coordinate-map
+/// charge riding on each plan down (TopK rounds).
+pub(crate) fn serve_warm(
+    listener: &TcpListener,
+    mut server: Server,
+    expect: usize,
+    map_bytes: usize,
+    round: u32,
+    opts: &RoundOptions,
+) -> (Result<CoordRoundResult>, Server) {
+    debug_assert!(server.warm().is_some(), "serve_warm needs a warm server");
+    let deadline = Instant::now() + opts.timeout_or_default();
+    if let Some(dir) = &opts.journal_dir {
+        let warm = server.warm().expect("warm server carries its context").clone();
+        let made = Journal::create_warm(
+            dir,
+            round,
+            server.n(),
+            server.t(),
+            server.mask_bits(),
+            server.plan(),
+            server.graph(),
+            server.advertised_keys(),
+            &warm,
+            map_bytes,
+        )
+        .context("create warm round journal");
+        match made {
+            Ok(j) => server.set_sink(Box::new(JournalSink::new(j))),
+            Err(e) => return (Err(e), server),
+        }
+    }
+    let res = serve_accepted(listener, &mut server, expect, map_bytes, round, deadline, opts);
+    (res, server)
+}
+
+/// The accept + Start + 4-phase loop shared by [`serve`] and
+/// [`serve_warm`]: [`apply_phase`] branches on `server.warm()` so the two
+/// paths cannot drift anywhere past phase 0.
+fn serve_accepted(
+    listener: &TcpListener,
+    mut server: impl std::borrow::BorrowMut<Server>,
+    expect: usize,
+    map_bytes: usize,
+    round: u32,
+    deadline: Instant,
+    opts: &RoundOptions,
+) -> Result<CoordRoundResult> {
+    let server = server.borrow_mut();
+    let conns = accept_exact(listener, expect, deadline)?;
     let mut ex = Exchange {
         conns,
-        claimed: vec![None; cfg.n],
-        stats: NetStats::new(cfg.n),
-        plan,
+        claimed: vec![None; server.n()],
+        stats: NetStats::new(server.n()),
+        plan: server.plan().clone(),
         round,
         deadline,
+        map_bytes,
     };
 
     if matches!(opts.stop_after, Some(StopAfter::Setup)) {
@@ -622,7 +672,7 @@ pub fn serve_with(
     let mut output = None;
     for phase in 0..4u8 {
         let ups = ex.collect(phase)?;
-        output = apply_phase(&mut server, &mut ex, phase, ups)?;
+        output = apply_phase(server, &mut ex, phase, ups)?;
         if matches!(opts.stop_after, Some(StopAfter::Phase(p)) if p == phase) {
             // die with this phase journaled but none of its downs flushed
             bail!("{INTERRUPTED}: stopped after applying phase {phase}");
@@ -639,8 +689,11 @@ pub fn serve_with(
 /// reconnect barrier: every client owed the next phase's `Down` must
 /// reconnect and resubmit its last `Up` (how the retry driver behaves),
 /// which identifies it; it is re-sent the `Down` it never received and the
-/// round proceeds through the remaining phases exactly as [`serve_with`]
+/// round proceeds through the remaining phases exactly as [`serve`]
 /// would. Clients the round no longer needs are waved off with `Finish`.
+/// A warm round's journal recovers to a warm [`Server`] (session caches
+/// re-derived from the SETUP record), so mid-session rounds resume the
+/// same way cold ones do.
 ///
 /// Known limitation (documented in DESIGN.md §13): a client that already
 /// sent its terminal `Up` and hung up cannot be re-asked, so a crash that
@@ -650,9 +703,9 @@ pub fn serve_with(
 pub fn serve_resume(
     listener: &TcpListener,
     journal_path: &Path,
-    timeout: Duration,
+    opts: &RoundOptions,
 ) -> Result<CoordRoundResult> {
-    let deadline = Instant::now() + timeout;
+    let deadline = Instant::now() + opts.timeout_or_default();
     let rec = journal::recover(journal_path).context("recover round journal")?;
     let round = rec.round;
     let next = rec.next_phase;
@@ -667,6 +720,7 @@ pub fn serve_resume(
         plan: rec.plan.clone(),
         round,
         deadline,
+        map_bytes: rec.map_bytes,
     };
 
     // The round already finalized on disk: nothing left to compute. Wave
@@ -911,12 +965,26 @@ pub fn drive_clients(
     timeout: Duration,
 ) -> Result<()> {
     assert_eq!(models.len(), cfg.n);
-    let deadline = Instant::now() + timeout;
     let workers = event_loop_workers(cfg.n);
     let mut lanes = build_lanes(cfg, models, workers);
+    drive_lanes(addr, &mut lanes, round, timeout, workers)
+}
 
-    let mut conns: Vec<Option<TcpStream>> = Vec::with_capacity(cfg.n);
-    for id in 0..cfg.n {
+/// The body of [`drive_clients`], factored over pre-built lanes so the
+/// warm wire round can drive a session's resumed state machines through
+/// the identical sweep loop. Lane order need not match client ids — each
+/// lane owns its socket and the server claims identities from frames.
+fn drive_lanes(
+    addr: SocketAddr,
+    lanes: &mut [DriverLane<'_>],
+    round: u32,
+    timeout: Duration,
+    workers: usize,
+) -> Result<()> {
+    let deadline = Instant::now() + timeout;
+    let n = lanes.len();
+    let mut conns: Vec<Option<TcpStream>> = Vec::with_capacity(n);
+    for id in 0..n {
         let mut backoff = Backoff::new(round, id);
         let stream = loop {
             match TcpStream::connect(addr) {
@@ -924,7 +992,7 @@ pub fn drive_clients(
                 Err(e) => {
                     let now = Instant::now();
                     if now >= deadline {
-                        bail!("client {id}: connect to {addr} failed: {e}");
+                        bail!("client lane {id}: connect to {addr} failed: {e}");
                     }
                     std::thread::sleep(backoff.next_wait().min(deadline - now));
                 }
@@ -939,7 +1007,7 @@ pub fn drive_clients(
     loop {
         // read exactly one frame per live connection (blocking, id order)
         let mut any_open = false;
-        for id in 0..cfg.n {
+        for id in 0..n {
             let Some(stream) = conns[id].as_mut() else { continue };
             any_open = true;
             match wire::read_frame(stream) {
@@ -980,7 +1048,7 @@ pub fn drive_clients(
         }
 
         // one parallel sweep: step every lane holding a phase input
-        crate::par::for_each_slice(&mut lanes, workers, |_, chunk| {
+        crate::par::for_each_slice(lanes, workers, |_, chunk| {
             for lane in chunk.iter_mut() {
                 if let Some(down) = lane.inbox.take() {
                     lane.outbox = Some(lane.sm.step(down));
@@ -989,12 +1057,12 @@ pub fn drive_clients(
         });
 
         // write answers in id order; a terminal answer ends our side
-        for id in 0..cfg.n {
+        for id in 0..n {
             let Some(up) = lanes[id].outbox.take() else { continue };
             let Some(stream) = conns[id].as_mut() else { continue };
             stream
                 .write_all(&wire::encode_up(round, &up))
-                .with_context(|| format!("client {id}: write failed"))?;
+                .with_context(|| format!("client lane {id}: write failed"))?;
             if lanes[id].sm.done() {
                 // Unmask / Dropped / Failed was this client's last word;
                 // close so the server sees EOF once it pumped the frame
@@ -1193,36 +1261,77 @@ pub fn drive_clients_retry(
     }
 }
 
-/// One full round over real loopback sockets: [`serve`] on a spawned
+/// One full cold round over real loopback sockets: [`serve`] on a spawned
 /// thread, [`drive_clients`] on the caller's, joined at the end. A server
 /// error (including protocol aborts) takes precedence over the driver's.
-pub fn run_round_wire(cfg: &ProtocolConfig, models: &[Vec<u64>]) -> Result<CoordRoundResult> {
-    run_round_wire_with(cfg, models, DEFAULT_TIMEOUT)
-}
-
-/// [`run_round_wire`] with an explicit wall-clock budget.
-pub fn run_round_wire_with(
+/// This is the `wire` arm of `coordinator::RoundRunner`; journal and
+/// crash-injection knobs on `opts` reach the serving half.
+pub fn run_round_wire_opts(
     cfg: &ProtocolConfig,
     models: &[Vec<u64>],
-    timeout: Duration,
+    opts: &RoundOptions,
 ) -> Result<CoordRoundResult> {
     let listener = TcpListener::bind(("127.0.0.1", 0)).context("bind loopback")?;
     let addr = listener.local_addr().context("local_addr")?;
     let round = round_tag(cfg.seed);
+    let timeout = opts.timeout_or_default();
     let setup = derive_round_setup(cfg, models);
     let plan = setup.plan.clone();
     let graph = setup.graph.clone();
     drop(setup);
-    let srv_cfg = cfg.clone();
-    let server =
-        std::thread::spawn(move || serve(&listener, &srv_cfg, plan, graph, round, timeout));
-    let drove = drive_clients(addr, cfg, models, round, timeout);
-    let served = server.join().map_err(|_| anyhow::anyhow!("wire server thread panicked"))?;
-    match (served, drove) {
+    let (served, drove) = std::thread::scope(|s| {
+        let handle = s.spawn(|| serve(&listener, cfg, plan, graph, round, opts));
+        let drove = drive_clients(addr, cfg, models, round, timeout);
+        let served =
+            handle.join().map_err(|_| anyhow::anyhow!("wire server thread panicked"));
+        (served, drove)
+    });
+    match (served?, drove) {
         (Ok(result), Ok(())) => Ok(result),
         (Err(e), _) => Err(e.context("wire server")),
         (Ok(_), Err(e)) => Err(e.context("wire client driver")),
     }
+}
+
+/// One warm (session) round over real loopback sockets: [`serve_warm`] on
+/// a scoped thread, the session's resumed state machines driven through
+/// [`drive_lanes`] on the caller's. Both halves hand their state back —
+/// even on an abort — so `protocol::session::Session` re-seats its
+/// clients and the session outlives the failed round.
+pub(crate) fn run_warm_round_wire<'m>(
+    server: Server,
+    machines: Vec<ClientSm<'m>>,
+    map_bytes: usize,
+    round: u32,
+    opts: &RoundOptions,
+) -> (Result<CoordRoundResult>, Server, Vec<ClientSm<'m>>) {
+    let listener = match TcpListener::bind(("127.0.0.1", 0)).context("bind loopback") {
+        Ok(l) => l,
+        Err(e) => return (Err(e), server, machines),
+    };
+    let addr = match listener.local_addr().context("local_addr") {
+        Ok(a) => a,
+        Err(e) => return (Err(e), server, machines),
+    };
+    let timeout = opts.timeout_or_default();
+    let expect = machines.len();
+    let mut lanes: Vec<DriverLane<'m>> =
+        machines.into_iter().map(|sm| DriverLane { sm, inbox: None, outbox: None }).collect();
+    let workers = event_loop_workers(expect);
+    let (served, server, drove) = std::thread::scope(|s| {
+        let handle = s.spawn(|| serve_warm(&listener, server, expect, map_bytes, round, opts));
+        let drove = drive_lanes(addr, &mut lanes, round, timeout, workers);
+        let (served, server) =
+            handle.join().expect("warm wire server thread panicked");
+        (served, server, drove)
+    });
+    let machines = lanes.into_iter().map(|l| l.sm).collect();
+    let result = match (served, drove) {
+        (Ok(result), Ok(())) => Ok(result),
+        (Err(e), _) => Err(e.context("warm wire server")),
+        (Ok(_), Err(e)) => Err(e.context("warm wire client driver")),
+    };
+    (result, server, machines)
 }
 
 #[cfg(test)]
@@ -1271,7 +1380,7 @@ mod tests {
         let dim = 8;
         let cfg = ProtocolConfig::for_test(n, 3, dim, Topology::Complete, 99);
         let m = models(n, dim, 9);
-        let wired = run_round_wire(&cfg, &m).unwrap();
+        let wired = run_round_wire_opts(&cfg, &m, &RoundOptions::default()).unwrap();
         let sync = engine::run_round(&cfg, &m).unwrap();
         assert_eq!(wired.reliable, sync.reliable);
         assert_eq!(wired.sets, sync.sets);
@@ -1298,7 +1407,7 @@ mod tests {
         let (plan, graph) = (setup.plan.clone(), setup.graph.clone());
         let srv_cfg = cfg.clone();
         let server = std::thread::spawn(move || {
-            serve(&listener, &srv_cfg, plan, graph, round, DEFAULT_TIMEOUT)
+            serve(&listener, &srv_cfg, plan, graph, round, &RoundOptions::default())
         });
         drive_clients_retry(|| addr, &cfg, &m, round, DEFAULT_TIMEOUT).unwrap();
         let wired = server.join().unwrap().unwrap();
@@ -1321,7 +1430,7 @@ mod tests {
             ..ProtocolConfig::for_test(n, 3, 4, Topology::Complete, 7)
         };
         let m = models(n, 4, 7);
-        assert!(run_round_wire(&cfg, &m).is_err());
+        assert!(run_round_wire_opts(&cfg, &m, &RoundOptions::default()).is_err());
         assert!(engine::run_round(&cfg, &m).is_err());
     }
 }

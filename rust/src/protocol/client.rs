@@ -15,12 +15,18 @@ use super::ClientId;
 use crate::codec::{EncodedUpdate, IndexPlan};
 use crate::crypto::aead;
 use crate::crypto::dh::{self, KeyPair, PublicKey};
-use crate::crypto::prg::{apply_mask_jobs_range, MaskJob};
+use crate::crypto::prg::{apply_mask_jobs_range, ratchet_seed, warm_share_pad, MaskJob};
 use crate::shamir::{self, Share};
 use crate::util::rng::Rng;
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 use std::collections::BTreeMap;
 use std::sync::Arc;
+
+/// Warm-round share ciphertext length: the 32 share bytes (the 16 GF(2^16)
+/// chunk evaluations of a 32-byte secret, x implicit) XORed with
+/// [`warm_share_pad`]. Distinguishes pad-transport cts from the 86-byte
+/// AEAD cold format on the receive path.
+const WARM_CT_BYTES: usize = 32;
 
 /// Per-pair AEAD nonce: direction-dependent so the shared key `c_{i,j}` is
 /// never reused with the same nonce for both directions.
@@ -30,6 +36,39 @@ fn pair_nonce(from: ClientId, to: ClientId) -> [u8; 12] {
     n[4..8].copy_from_slice(&(to as u32).to_le_bytes());
     n[8..12].copy_from_slice(b"shr1");
     n
+}
+
+/// Cross-round caches built by [`Client::establish_session`] after a
+/// completed cold round. Everything a warm round reuses instead of
+/// re-advertising keys: the per-neighbor channel secrets (derived once per
+/// DH agreement, ratcheted per round) and the Shamir shares of each
+/// neighbor's `s^SK` that cold Step 1 delivered.
+#[derive(Debug, Clone)]
+struct SessionCache {
+    /// j → HKDF(x25519(s_i^SK, s_j^PK)) — the pairwise mask base the
+    /// per-round seed is ratcheted from.
+    mask_bases: BTreeMap<ClientId, [u8; 32]>,
+    /// j → HKDF(x25519(c_i^SK, c_j^PK)) — the pairwise channel key warm
+    /// share transport is padded (or, on re-key rounds, AEAD-sealed) with.
+    enc_bases: BTreeMap<ClientId, [u8; 32]>,
+    /// owner → our share of s^SK_owner, from the owner's last successful
+    /// deal. Deleted when the owner re-keys (stale shares reconstruct a
+    /// retired secret); re-cached from the owner's next AEAD re-deal.
+    cached_sk_shares: BTreeMap<ClientId, Share>,
+}
+
+/// Per-warm-round state, reset by [`Client::warm_begin`].
+#[derive(Debug, Clone)]
+struct WarmRound {
+    /// Session round counter k (cold round = 0).
+    round: u64,
+    /// This client announces fresh key pairs this round.
+    rekeying: bool,
+    /// owner → owner's fresh b^{(k)}-share for us, parsed from this
+    /// round's delivery. Parsed in Step 2 — not Step 3 like the cold path —
+    /// so a V2 \ V3 recipient still caches a re-keying neighbor's re-dealt
+    /// sk-share even though it never sees the survivor announce.
+    b_shares: BTreeMap<ClientId, Share>,
 }
 
 /// Client state across the four protocol steps.
@@ -43,7 +82,9 @@ pub struct Client {
     pub b_seed: [u8; 32],
     t: usize,
     mask_bits: u32,
-    /// Static neighborhood Adj(i) in the assignment graph.
+    /// Neighborhood Adj(i) in the assignment graph, in the graph's
+    /// adjacency order (grown in lock-step with server-side graph repair —
+    /// warm alive-bitmaps index into this order).
     neighbors: Vec<ClientId>,
     /// Public keys received in the Step-0 bundle: j → (c_j^PK, s_j^PK).
     peer_keys: BTreeMap<ClientId, (PublicKey, PublicKey)>,
@@ -55,6 +96,10 @@ pub struct Client {
     /// Neighbors that were alive in Step 1 (senders of `received`) — the
     /// paper's V2 ∩ Adj(i), fixed when the delivery arrives.
     alive_neighbors_v2: Vec<ClientId>,
+    /// Cross-round caches; `None` until a cold round established them.
+    session: Option<SessionCache>,
+    /// In-flight warm-round state; `None` on cold rounds.
+    warm: Option<WarmRound>,
 }
 
 impl Client {
@@ -83,11 +128,52 @@ impl Client {
             own_sk_share: None,
             received: BTreeMap::new(),
             alive_neighbors_v2: Vec::new(),
+            session: None,
+            warm: None,
         }
     }
 
     pub fn neighbors(&self) -> &[ClientId] {
         &self.neighbors
+    }
+
+    /// Append a repair edge's far endpoint to Adj(i). Must be called in the
+    /// same global order the server calls `Graph::add_edge` so the warm
+    /// alive-bitmap indices keep matching the server's adjacency rows.
+    pub fn add_neighbor(&mut self, j: ClientId) {
+        if j != self.id && !self.neighbors.contains(&j) {
+            self.neighbors.push(j);
+        }
+    }
+
+    /// Cross-round caches are in place (a cold round completed and
+    /// [`Client::establish_session`] ran).
+    pub fn has_session(&self) -> bool {
+        self.session.is_some()
+    }
+
+    /// Decrypt + parse one cold-format AEAD share ciphertext from `owner`:
+    /// `len-prefixed b-share || sk-share` under the pairwise channel key.
+    fn open_pair_ct(&self, owner: ClientId, ct: &[u8]) -> Result<(Share, Share)> {
+        let (c_pk, _) = self
+            .peer_keys
+            .get(&owner)
+            .with_context(|| format!("no enc public key for owner {owner}"))?;
+        let key = dh::agree_enc_key(&self.c_keys.sk, c_pk);
+        let pt = aead::open(&key, &pair_nonce(owner, self.id), b"ccesa-share", ct)
+            .with_context(|| format!("decrypting shares from {owner}"))?;
+        if pt.len() < 2 {
+            bail!("short share plaintext from {owner}");
+        }
+        let blen = u16::from_le_bytes([pt[0], pt[1]]) as usize;
+        if pt.len() < 2 + blen {
+            bail!("truncated share plaintext from {owner}");
+        }
+        let b_share = Share::from_bytes(&pt[2..2 + blen])
+            .map_err(|e| anyhow::anyhow!("bad b-share from {owner}: {e}"))?;
+        let sk_share = Share::from_bytes(&pt[2 + blen..])
+            .map_err(|e| anyhow::anyhow!("bad sk-share from {owner}: {e}"))?;
+        Ok((b_share, sk_share))
     }
 
     /// **Step 0** — advertise public keys.
@@ -239,29 +325,289 @@ impl Client {
             }
         }
         for (&owner, ct) in &self.received {
-            let (c_pk, _) = self
-                .peer_keys
-                .get(&owner)
-                .with_context(|| format!("no enc public key for owner {owner}"))?;
-            let key = dh::agree_enc_key(&self.c_keys.sk, c_pk);
-            let pt = aead::open(&key, &pair_nonce(owner, self.id), b"ccesa-share", ct)
-                .with_context(|| format!("decrypting shares from {owner}"))?;
-            if pt.len() < 2 {
-                bail!("short share plaintext from {owner}");
-            }
-            let blen = u16::from_le_bytes([pt[0], pt[1]]) as usize;
-            if pt.len() < 2 + blen {
-                bail!("truncated share plaintext from {owner}");
-            }
-            let b_share = Share::from_bytes(&pt[2..2 + blen])
-                .map_err(|e| anyhow::anyhow!("bad b-share from {owner}: {e}"))?;
-            let sk_share = Share::from_bytes(&pt[2 + blen..])
-                .map_err(|e| anyhow::anyhow!("bad sk-share from {owner}: {e}"))?;
+            let (b_share, sk_share) = self.open_pair_ct(owner, ct)?;
             if in_v3(owner) {
                 shares.push((owner, ShareKind::SelfMask, b_share));
             } else {
                 // owner uploaded shares (∈ V2) but no masked input (∉ V3)
                 shares.push((owner, ShareKind::SecretKey, sk_share));
+            }
+        }
+        Ok(UnmaskShares { from: self.id, shares })
+    }
+
+    // ----- cross-round session (warm rounds) -----------------------------
+
+    /// Promote a completed cold round into a session: derive every
+    /// per-neighbor channel secret once and cache the sk-shares the cold
+    /// Step-1 delivery carried. Warm rounds ratchet per-round secrets from
+    /// these caches instead of repeating the O(|Adj|) DH + AEAD setup.
+    pub fn establish_session(&mut self) -> Result<()> {
+        let mut cache = SessionCache {
+            mask_bases: BTreeMap::new(),
+            enc_bases: BTreeMap::new(),
+            cached_sk_shares: BTreeMap::new(),
+        };
+        for (&j, (c_pk, s_pk)) in &self.peer_keys {
+            cache.mask_bases.insert(j, dh::agree_mask_seed(&self.s_keys.sk, s_pk));
+            cache.enc_bases.insert(j, dh::agree_enc_key(&self.c_keys.sk, c_pk));
+        }
+        let received = std::mem::take(&mut self.received);
+        for (&owner, ct) in &received {
+            let (_, sk_share) = self
+                .open_pair_ct(owner, ct)
+                .with_context(|| format!("client {}: caching session shares", self.id))?;
+            cache.cached_sk_shares.insert(owner, sk_share);
+        }
+        self.session = Some(cache);
+        self.alive_neighbors_v2.clear();
+        Ok(())
+    }
+
+    /// Begin warm round `k`: fresh per-round self-mask seed `b^{(k)}`, and
+    /// — when the session layer forced a re-key (our `s^SK` was exposed by
+    /// a V2 \ V3 reconstruction, or a repair edge touched us) — fresh key
+    /// pairs plus a rebuild of every cached channel secret they feed.
+    ///
+    /// Draw order matches [`Client::new`] (c-keys, s-keys, seed) so warm
+    /// rng streams line up across executors.
+    pub fn warm_begin(&mut self, round: u64, rekey: bool, rng: &mut Rng) -> Result<()> {
+        ensure!(self.session.is_some(), "client {}: warm round without a session", self.id);
+        if rekey {
+            self.c_keys = KeyPair::generate(rng);
+            self.s_keys = KeyPair::generate(rng);
+            let session = self.session.as_mut().unwrap();
+            for (&j, (c_pk, s_pk)) in &self.peer_keys {
+                session.mask_bases.insert(j, dh::agree_mask_seed(&self.s_keys.sk, s_pk));
+                session.enc_bases.insert(j, dh::agree_enc_key(&self.c_keys.sk, c_pk));
+            }
+        }
+        rng.fill_bytes(&mut self.b_seed);
+        self.own_b_share = None;
+        self.received.clear();
+        self.alive_neighbors_v2.clear();
+        self.warm = Some(WarmRound { round, rekeying: rekey, b_shares: BTreeMap::new() });
+        Ok(())
+    }
+
+    /// **Warm phase 0** — resume the session: report our local TopK support
+    /// proposal (sparse codecs) and fresh public keys when re-keying.
+    pub fn warm_resume(&self, support: Option<Vec<u32>>) -> Result<WarmResume> {
+        let warm = self
+            .warm
+            .as_ref()
+            .with_context(|| format!("client {}: warm_resume before warm_begin", self.id))?;
+        let rekey = warm.rekeying.then(|| (self.c_keys.pk, self.s_keys.pk));
+        Ok(WarmResume { id: self.id, support, rekey })
+    }
+
+    /// **Warm phase 1** — consume the session delta and deal this round's
+    /// shares.
+    ///
+    /// Applies neighbor re-keys first (replace cached public keys, rebuild
+    /// the channel secrets, drop sk-shares the retired keys made stale),
+    /// then deals the fresh `b^{(k)}` share to every alive neighbor as a
+    /// 32-byte pad-XOR ciphertext over the cached channel key. A re-keying
+    /// client falls back to the cold 86-byte AEAD format carrying both the
+    /// `b^{(k)}`-share and the share of its *new* `s^SK`.
+    pub fn warm_share_keys(&mut self, plan: &WarmPlan, rng: &mut Rng) -> Result<ShareUpload> {
+        let (round, rekeying) = {
+            let warm = self
+                .warm
+                .as_ref()
+                .with_context(|| format!("client {}: warm plan before warm_begin", self.id))?;
+            (warm.round, warm.rekeying)
+        };
+        ensure!(plan.to == self.id, "misrouted warm plan: to={} at client {}", plan.to, self.id);
+        for (id, c_pk, s_pk) in &plan.keys {
+            self.peer_keys.insert(*id, (*c_pk, *s_pk));
+            let mask_base = dh::agree_mask_seed(&self.s_keys.sk, s_pk);
+            let enc_base = dh::agree_enc_key(&self.c_keys.sk, c_pk);
+            let session = self.session.as_mut().unwrap();
+            session.mask_bases.insert(*id, mask_base);
+            session.enc_bases.insert(*id, enc_base);
+            session.cached_sk_shares.remove(id);
+        }
+        if plan.alive_bitmap.len() != self.neighbors.len().div_ceil(8) {
+            bail!(
+                "client {}: alive bitmap covers {} neighbors, have {}",
+                self.id,
+                plan.alive_bitmap.len() * 8,
+                self.neighbors.len()
+            );
+        }
+        let alive: Vec<ClientId> = self
+            .neighbors
+            .iter()
+            .enumerate()
+            .filter(|(b, _)| plan.alive_bitmap[b / 8] & (1u8 << (b % 8)) != 0)
+            .map(|(_, &j)| j)
+            .collect();
+
+        let mut holders: Vec<ClientId> = alive.clone();
+        holders.push(self.id);
+        holders.sort_unstable();
+        let points: Vec<u16> = holders.iter().map(|&h| shamir::point_for_client(h)).collect();
+        if self.t > points.len() {
+            bail!(
+                "client {}: threshold t={} exceeds |Adj(i)∩V1|+1={}",
+                self.id,
+                self.t,
+                points.len()
+            );
+        }
+        let b_shares =
+            shamir::split(&self.b_seed, self.t, &points, rng).context("splitting warm b_i")?;
+        let sk_shares = if rekeying {
+            Some(
+                shamir::split(&self.s_keys.sk, self.t, &points, rng)
+                    .context("splitting re-keyed s_i^SK")?,
+            )
+        } else {
+            None
+        };
+
+        let mut out = Vec::with_capacity(holders.len() - 1);
+        for (idx, (holder, b)) in holders.iter().zip(b_shares).enumerate() {
+            if *holder == self.id {
+                self.own_b_share = Some(b);
+                if let Some(sks) = &sk_shares {
+                    self.own_sk_share = Some(sks[idx].clone());
+                }
+                continue;
+            }
+            let enc_base = *self
+                .session
+                .as_ref()
+                .unwrap()
+                .enc_bases
+                .get(holder)
+                .with_context(|| format!("no cached channel key for holder {holder}"))?;
+            let ct = if let Some(sks) = &sk_shares {
+                // cold AEAD format under the fresh channel key; the nonce
+                // is never reused with it (re-keying refreshed the key)
+                let bb = b.to_bytes();
+                let sb = sks[idx].to_bytes();
+                let mut pt = Vec::with_capacity(2 + bb.len() + sb.len());
+                pt.extend_from_slice(&(bb.len() as u16).to_le_bytes());
+                pt.extend_from_slice(&bb);
+                pt.extend_from_slice(&sb);
+                aead::seal(&enc_base, &pair_nonce(self.id, *holder), b"ccesa-share", &pt)
+            } else {
+                // pad transport: y-chunks only, x is the holder's implicit
+                // evaluation point
+                let pad = warm_share_pad(&enc_base, (self.id < *holder) as u8, round);
+                let mut ct = vec![0u8; WARM_CT_BYTES];
+                for (c, chunk) in b.y.iter().enumerate() {
+                    ct[2 * c..2 * c + 2].copy_from_slice(&chunk.to_le_bytes());
+                }
+                for (byte, p) in ct.iter_mut().zip(pad) {
+                    *byte ^= p;
+                }
+                ct
+            };
+            out.push(EncryptedShare { from: self.id, to: *holder, ciphertext: ct });
+        }
+        Ok(ShareUpload { from: self.id, shares: out })
+    }
+
+    /// **Warm phase 2** — parse this round's share delivery (pad or AEAD
+    /// per ciphertext length, caching re-dealt sk-shares immediately), then
+    /// mask the encoded update with ratcheted pairwise seeds and the fresh
+    /// `b^{(k)}` self seed.
+    pub fn warm_masked_input_with(
+        &mut self,
+        delivery: &ShareDelivery,
+        model: &[u64],
+        plan: &Arc<IndexPlan>,
+        workers: usize,
+    ) -> Result<MaskedInput> {
+        let round = self
+            .warm
+            .as_ref()
+            .with_context(|| format!("client {}: warm delivery before warm_begin", self.id))?
+            .round;
+        let mut b_shares = BTreeMap::new();
+        for es in &delivery.shares {
+            if es.to != self.id {
+                bail!("misrouted ciphertext: to={} at client {}", es.to, self.id);
+            }
+            if es.ciphertext.len() == WARM_CT_BYTES {
+                let enc_base = *self
+                    .session
+                    .as_ref()
+                    .unwrap()
+                    .enc_bases
+                    .get(&es.from)
+                    .with_context(|| format!("no cached channel key for owner {}", es.from))?;
+                let pad = warm_share_pad(&enc_base, (es.from < self.id) as u8, round);
+                let mut y = Vec::with_capacity(WARM_CT_BYTES / 2);
+                for c in 0..WARM_CT_BYTES / 2 {
+                    let lo = es.ciphertext[2 * c] ^ pad[2 * c];
+                    let hi = es.ciphertext[2 * c + 1] ^ pad[2 * c + 1];
+                    y.push(u16::from_le_bytes([lo, hi]));
+                }
+                b_shares.insert(es.from, Share { x: shamir::point_for_client(self.id), y });
+            } else {
+                // a re-keying neighbor's AEAD re-deal: cache its fresh
+                // sk-share now — Step 3 never runs for V2 \ V3 recipients
+                let (b_share, sk_share) = self.open_pair_ct(es.from, &es.ciphertext)?;
+                self.session.as_mut().unwrap().cached_sk_shares.insert(es.from, sk_share);
+                b_shares.insert(es.from, b_share);
+            }
+        }
+        self.alive_neighbors_v2 = b_shares.keys().copied().collect();
+        self.warm.as_mut().unwrap().b_shares = b_shares;
+
+        let mut jobs: Vec<MaskJob> = Vec::with_capacity(1 + self.alive_neighbors_v2.len());
+        jobs.push(MaskJob { seed: self.b_seed, pairwise: false, negate: false });
+        let session = self.session.as_ref().unwrap();
+        for &j in &self.alive_neighbors_v2 {
+            let base = session
+                .mask_bases
+                .get(&j)
+                .with_context(|| format!("no cached mask base for neighbor {j}"))?;
+            let seed = ratchet_seed(base, round);
+            jobs.push(MaskJob { seed, pairwise: true, negate: self.id > j });
+        }
+
+        let bits = self.mask_bits;
+        let mut values = plan.encode(model, bits);
+        let workers = workers.clamp(1, crate::par::threads_for_len(values.len()));
+        crate::par::for_each_slice(&mut values, workers, |offset, slice| {
+            apply_mask_jobs_range(slice, &jobs, bits, offset);
+        });
+        Ok(MaskedInput {
+            id: self.id,
+            update: EncodedUpdate { values, plan: plan.clone() },
+            bits,
+        })
+    }
+
+    /// **Warm phase 3** — reveal this round's `b^{(k)}`-shares for V3
+    /// owners; for owners that dropped in V2 \ V3, reveal the *cached*
+    /// session sk-share (skipped when a missed re-deal left us without one
+    /// — the holder set self-heals around absences, reconstruction only
+    /// needs t of them).
+    pub fn warm_unmask(&mut self, announce: &SurvivorAnnounce) -> Result<UnmaskShares> {
+        let warm = self
+            .warm
+            .as_ref()
+            .with_context(|| format!("client {}: warm announce before warm_begin", self.id))?;
+        let v3 = &announce.v3;
+        let in_v3 = |id: ClientId| v3.binary_search(&id).is_ok();
+        let mut shares: Vec<(ClientId, ShareKind, Share)> = Vec::new();
+        if in_v3(self.id) {
+            if let Some(b) = &self.own_b_share {
+                shares.push((self.id, ShareKind::SelfMask, b.clone()));
+            }
+        }
+        let session = self.session.as_ref().unwrap();
+        for (&owner, b_share) in &warm.b_shares {
+            if in_v3(owner) {
+                shares.push((owner, ShareKind::SelfMask, b_share.clone()));
+            } else if let Some(sk) = session.cached_sk_shares.get(&owner) {
+                shares.push((owner, ShareKind::SecretKey, sk.clone()));
             }
         }
         Ok(UnmaskShares { from: self.id, shares })
@@ -292,6 +638,12 @@ pub struct ClientSm<'m> {
     /// Worker budget for the Step-2 mask pass; `None` = auto per vector
     /// length (see [`ClientSm::set_mask_workers`]).
     mask_workers: Option<usize>,
+    /// Warm-round phase-0 payload: the local TopK support proposal, taken
+    /// when the resume message is emitted. `None` on cold rounds (and warm
+    /// rounds of derived-map codecs).
+    warm_support: Option<Vec<u32>>,
+    /// This machine drives a warm (session-resume) round.
+    warm: bool,
 }
 
 impl<'m> ClientSm<'m> {
@@ -318,7 +670,41 @@ impl<'m> ClientSm<'m> {
             survives,
             phase: 0,
             mask_workers: None,
+            warm_support: None,
+            warm: false,
         }
+    }
+
+    /// Build a warm-round machine around a session client ([`Client::warm_begin`]
+    /// must already have run for this round). Phase 0 emits [`Up::Warm`]
+    /// carrying `support`; phase 1 consumes [`Down::WarmPlan`]; phases 2–3
+    /// run the ratcheted warm variants of masking and unmasking.
+    pub fn resume(
+        client: Client,
+        support: Option<Vec<u32>>,
+        share_rng: Rng,
+        model: &'m [u64],
+        plan: Arc<IndexPlan>,
+        survives: [bool; 4],
+    ) -> ClientSm<'m> {
+        debug_assert!(client.warm.is_some(), "resume() requires warm_begin");
+        ClientSm {
+            client,
+            share_rng,
+            model,
+            plan,
+            survives,
+            phase: 0,
+            mask_workers: None,
+            warm_support: support,
+            warm: true,
+        }
+    }
+
+    /// Take the client back out (with its updated session caches) after the
+    /// round — the session layer re-seats it for the next warm round.
+    pub fn into_client(self) -> Client {
+        self.client
     }
 
     /// Cap the worker budget of this machine's Step-2 mask pass. A
@@ -365,9 +751,25 @@ impl<'m> ClientSm<'m> {
             return Up::Dropped(id, phase);
         }
         match down {
+            Down::Start if self.warm => {
+                match self.client.warm_resume(self.warm_support.take()) {
+                    Ok(wr) => {
+                        self.phase = 1;
+                        Up::Warm(wr)
+                    }
+                    Err(e) => {
+                        self.phase = 4;
+                        Up::Failed(id, 0, e.to_string())
+                    }
+                }
+            }
             Down::Start => {
                 self.phase = 1;
                 Up::Adv(self.client.step0_advertise())
+            }
+            Down::Bundle(_) if self.warm => {
+                self.phase = 4;
+                Up::Failed(id, 1, "cold key bundle sent to a warm session client".into())
             }
             Down::Bundle(bundle) => {
                 match self.client.step1_share_keys(&bundle, &mut self.share_rng) {
@@ -382,12 +784,31 @@ impl<'m> ClientSm<'m> {
                     }
                 }
             }
-            Down::Delivery(delivery) => {
-                let stepped = match self.mask_workers {
-                    Some(w) => {
-                        self.client.step2_masked_input_with(&delivery, self.model, &self.plan, w)
+            Down::WarmPlan(_) if !self.warm => {
+                self.phase = 4;
+                Up::Failed(id, 1, "warm session plan sent to a cold client".into())
+            }
+            Down::WarmPlan(plan) => {
+                match self.client.warm_share_keys(&plan, &mut self.share_rng) {
+                    Ok(up) => {
+                        self.phase = 2;
+                        Up::Shares(up)
                     }
-                    None => self.client.step2_masked_input(&delivery, self.model, &self.plan),
+                    Err(e) => {
+                        // small live neighborhood ⇒ secure withdrawal
+                        self.phase = 4;
+                        Up::Failed(id, 1, e.to_string())
+                    }
+                }
+            }
+            Down::Delivery(delivery) => {
+                let workers = self.mask_workers.unwrap_or_else(|| {
+                    crate::par::threads_for_len(self.plan.len())
+                });
+                let stepped = if self.warm {
+                    self.client.warm_masked_input_with(&delivery, self.model, &self.plan, workers)
+                } else {
+                    self.client.step2_masked_input_with(&delivery, self.model, &self.plan, workers)
                 };
                 match stepped {
                     Ok(mi) => {
@@ -402,7 +823,12 @@ impl<'m> ClientSm<'m> {
             }
             Down::Announce(announce) => {
                 self.phase = 4; // Step 3 is the last transition either way
-                match self.client.step3_unmask(&announce) {
+                let unmasked = if self.warm {
+                    self.client.warm_unmask(&announce)
+                } else {
+                    self.client.step3_unmask(&announce)
+                };
+                match unmasked {
                     Ok(um) => Up::Unmask(um),
                     Err(e) => Up::Failed(id, 3, e.to_string()),
                 }
@@ -593,6 +1019,151 @@ mod tests {
         assert!(matches!(sm.step(Down::Start), Up::Adv(_)));
         assert!(matches!(sm.step(Down::Finish), Up::Dropped(0, 1)));
         assert!(sm.done());
+    }
+
+    /// Run a manual 2-client cold round so both ends hold each other's
+    /// ciphertexts, then establish sessions on both.
+    fn establish_pair() -> (Client, Client, Rng) {
+        let mut rng = Rng::new(0x5E55);
+        let mut a = mk(0, 2, vec![1], 100);
+        let mut b = mk(1, 2, vec![0], 101);
+        let up_a = a.step1_share_keys(&bundle_for(&[&b]), &mut rng).unwrap();
+        let up_b = b.step1_share_keys(&bundle_for(&[&a]), &mut rng).unwrap();
+        let model = vec![9u64; 8];
+        let plan = IndexPlan::identity(8);
+        let _ = a
+            .step2_masked_input(&ShareDelivery { to: 0, shares: up_b.shares }, &model, &plan)
+            .unwrap();
+        let _ = b
+            .step2_masked_input(&ShareDelivery { to: 1, shares: up_a.shares }, &model, &plan)
+            .unwrap();
+        a.establish_session().unwrap();
+        b.establish_session().unwrap();
+        (a, b, rng)
+    }
+
+    fn full_alive_plan(to: ClientId, n_neighbors: usize) -> WarmPlan {
+        WarmPlan {
+            to,
+            alive_bitmap: vec![0xFF; n_neighbors.div_ceil(8)],
+            keys: vec![],
+        }
+    }
+
+    #[test]
+    fn warm_round_trip_reveals_fresh_b_and_cached_sk() {
+        let (mut a, mut b, mut rng) = establish_pair();
+        assert!(a.has_session() && b.has_session());
+        a.warm_begin(1, false, &mut rng).unwrap();
+        b.warm_begin(1, false, &mut rng).unwrap();
+        assert!(a.warm_resume(None).unwrap().rekey.is_none());
+        let up_a = a.warm_share_keys(&full_alive_plan(0, 1), &mut rng).unwrap();
+        let up_b = b.warm_share_keys(&full_alive_plan(1, 1), &mut rng).unwrap();
+        // pad transport: exactly the 32 share-y bytes, no tag
+        assert_eq!(up_a.shares[0].ciphertext.len(), WARM_CT_BYTES);
+        let model = vec![3u64; 8];
+        let plan = IndexPlan::identity(8);
+        let masked_a = a
+            .warm_masked_input_with(&ShareDelivery { to: 0, shares: up_b.shares }, &model, &plan, 1)
+            .unwrap();
+        let _ = b
+            .warm_masked_input_with(&ShareDelivery { to: 1, shares: up_a.shares }, &model, &plan, 1)
+            .unwrap();
+        assert_ne!(masked_a.update.values, model);
+
+        // both in V3: a reveals its own fresh b-share + b's fresh b-share
+        let um = a.warm_unmask(&SurvivorAnnounce { v3: vec![0, 1] }).unwrap();
+        let kinds: Vec<_> = um.shares.iter().map(|(o, k, _)| (*o, *k)).collect();
+        assert_eq!(kinds, vec![(0, ShareKind::SelfMask), (1, ShareKind::SelfMask)]);
+
+        // b dropped in V2 \ V3: a reveals the *cached* sk-share instead
+        let um2 = a.warm_unmask(&SurvivorAnnounce { v3: vec![0] }).unwrap();
+        let kinds2: Vec<_> = um2.shares.iter().map(|(o, k, _)| (*o, *k)).collect();
+        assert_eq!(kinds2, vec![(0, ShareKind::SelfMask), (1, ShareKind::SecretKey)]);
+    }
+
+    #[test]
+    fn warm_pairwise_masks_cancel_and_differ_per_round() {
+        use crate::util::mod_mask;
+        let model = vec![0u64; 8];
+        let plan = IndexPlan::identity(8);
+        let mut sums = Vec::new();
+        for round in [1u64, 2] {
+            let (mut a, mut b, mut rng) = establish_pair();
+            a.warm_begin(round, false, &mut rng).unwrap();
+            b.warm_begin(round, false, &mut rng).unwrap();
+            let up_a = a.warm_share_keys(&full_alive_plan(0, 1), &mut rng).unwrap();
+            let up_b = b.warm_share_keys(&full_alive_plan(1, 1), &mut rng).unwrap();
+            let ma = a
+                .warm_masked_input_with(
+                    &ShareDelivery { to: 0, shares: up_b.shares },
+                    &model,
+                    &plan,
+                    1,
+                )
+                .unwrap();
+            let mb = b
+                .warm_masked_input_with(
+                    &ShareDelivery { to: 1, shares: up_a.shares },
+                    &model,
+                    &plan,
+                    1,
+                )
+                .unwrap();
+            // pairwise masks cancel in the sum; self masks remain
+            let mask = mod_mask(32);
+            let sum: Vec<u64> = ma
+                .update
+                .values
+                .iter()
+                .zip(&mb.update.values)
+                .map(|(x, y)| x.wrapping_add(*y) & mask)
+                .collect();
+            use crate::crypto::prg::{apply_mask, NONCE_SELF};
+            let mut rec = sum.clone();
+            apply_mask(&mut rec, &a.b_seed, &NONCE_SELF, 32, true);
+            apply_mask(&mut rec, &b.b_seed, &NONCE_SELF, 32, true);
+            assert_eq!(rec, model, "round {round}: self-mask removal recovers the sum");
+            sums.push(ma.update.values.clone());
+        }
+        assert_ne!(sums[0], sums[1], "ratcheted masks must differ across rounds");
+    }
+
+    #[test]
+    fn warm_rekey_redeals_sk_over_aead_and_updates_recipient_cache() {
+        let (mut a, mut b, mut rng) = establish_pair();
+        let stale = b.session.as_ref().unwrap().cached_sk_shares[&0].clone();
+        a.warm_begin(1, true, &mut rng).unwrap();
+        b.warm_begin(1, false, &mut rng).unwrap();
+        let wr = a.warm_resume(None).unwrap();
+        let (new_c_pk, new_s_pk) = wr.rekey.expect("re-keying client must announce keys");
+        assert_eq!(new_c_pk, a.c_keys.pk);
+
+        // b's plan carries a's fresh keys: stale sk-share cache is dropped
+        let plan_b = WarmPlan {
+            to: 1,
+            alive_bitmap: vec![0x01],
+            keys: vec![(0, new_c_pk, new_s_pk)],
+        };
+        let up_b = b.warm_share_keys(&plan_b, &mut rng).unwrap();
+        assert!(!b.session.as_ref().unwrap().cached_sk_shares.contains_key(&0));
+        let up_a = a.warm_share_keys(&full_alive_plan(0, 1), &mut rng).unwrap();
+        // re-keying sender uses the 86-byte AEAD format
+        assert_eq!(up_a.shares[0].ciphertext.len(), 2 + 34 + 34 + 16);
+
+        let model = vec![4u64; 8];
+        let plan = IndexPlan::identity(8);
+        let _ = a
+            .warm_masked_input_with(&ShareDelivery { to: 0, shares: up_b.shares }, &model, &plan, 1)
+            .unwrap();
+        let _ = b
+            .warm_masked_input_with(&ShareDelivery { to: 1, shares: up_a.shares }, &model, &plan, 1)
+            .unwrap();
+        // the AEAD re-deal re-cached a fresh share of the *new* sk
+        let fresh = b.session.as_ref().unwrap().cached_sk_shares[&0].clone();
+        assert_ne!(fresh, stale, "cached sk-share must track the re-key");
+        let um = b.warm_unmask(&SurvivorAnnounce { v3: vec![1] }).unwrap();
+        assert!(um.shares.contains(&(0, ShareKind::SecretKey, fresh)));
     }
 
     #[test]

@@ -46,6 +46,73 @@ impl KeyBundle {
     }
 }
 
+/// Warm-round phase 0, client → server: resume an established session.
+///
+/// Replaces [`AdvertiseKeys`] on warm rounds: session keys are cached, so
+/// the client only reports (a) its local TopK support — the k coordinates
+/// it wants in this round's union coordinate map (sparse codecs only; the
+/// bytes are charged to `NetStats::coord_map_bytes`, not setup) — and (b) a
+/// fresh key pair when the ratchet forced a re-key (charged to
+/// `NetStats::rekey_up`).
+#[derive(Debug, Clone)]
+pub struct WarmResume {
+    pub id: ClientId,
+    /// Local-top-k coordinate proposal (sorted ascending); `None` for
+    /// codecs with a derived coordinate map (Dense, RandK).
+    pub support: Option<Vec<u32>>,
+    /// Fresh `(c_pk, s_pk)` when this client re-keys this round.
+    pub rekey: Option<(PublicKey, PublicKey)>,
+}
+
+impl WarmResume {
+    pub fn size_bytes(&self) -> usize {
+        ID_BYTES + self.support_bytes() + self.rekey_bytes()
+    }
+
+    /// Coordinate-map bytes (the support proposal).
+    pub fn support_bytes(&self) -> usize {
+        self.support.as_ref().map_or(0, |s| s.len() * ID_BYTES)
+    }
+
+    /// Re-key traffic bytes (the fresh key pair, if any).
+    pub fn rekey_bytes(&self) -> usize {
+        if self.rekey.is_some() {
+            2 * A_K
+        } else {
+            0
+        }
+    }
+}
+
+/// Warm-round phase 0, server → client: the session delta this client
+/// needs before dealing warm shares.
+///
+/// Replaces [`KeyBundle`]: the neighbor keys are cached, so the server
+/// sends only (a) which neighbors are alive this round (one bit each, over
+/// the client's neighbor list in insertion order) and (b) replacement
+/// public keys for neighbors that re-keyed — including re-keys the client
+/// missed while absent (charged to `NetStats::rekey_down`).
+#[derive(Debug, Clone)]
+pub struct WarmPlan {
+    pub to: ClientId,
+    /// Bit b of byte b/8 = neighbor `neighbors(to)[b]` is in V1 this round.
+    pub alive_bitmap: Vec<u8>,
+    /// Fresh public keys of neighbors that re-keyed since this client last
+    /// saw them.
+    pub keys: Vec<(ClientId, PublicKey, PublicKey)>,
+}
+
+impl WarmPlan {
+    pub fn size_bytes(&self) -> usize {
+        ID_BYTES + self.alive_bitmap.len() + self.rekey_bytes()
+    }
+
+    /// Re-key traffic bytes (the replacement neighbor keys).
+    pub fn rekey_bytes(&self) -> usize {
+        self.keys.len() * (ID_BYTES + 2 * A_K)
+    }
+}
+
 /// An encrypted pair of shares (b_{i,j}, s^{SK}_{i,j}) for one recipient.
 #[derive(Debug, Clone)]
 pub struct EncryptedShare {
@@ -162,6 +229,8 @@ impl UnmaskShares {
 #[derive(Debug)]
 pub enum Up {
     Adv(AdvertiseKeys),
+    /// Warm-round phase 0: session resume instead of key advertisement.
+    Warm(WarmResume),
     Shares(ShareUpload),
     Masked(MaskedInput),
     Unmask(UnmaskShares),
@@ -178,7 +247,7 @@ impl Up {
     /// phase's barrier has passed.
     pub fn phase(&self) -> u8 {
         match self {
-            Up::Adv(_) => 0,
+            Up::Adv(_) | Up::Warm(_) => 0,
             Up::Shares(_) => 1,
             Up::Masked(_) => 2,
             Up::Unmask(_) => 3,
@@ -190,6 +259,7 @@ impl Up {
     pub fn from(&self) -> ClientId {
         match self {
             Up::Adv(a) => a.id,
+            Up::Warm(w) => w.id,
             Up::Shares(u) => u.from,
             Up::Masked(m) => m.id,
             Up::Unmask(u) => u.from,
@@ -209,6 +279,9 @@ pub enum Down {
     /// Kick off phase 0 (no server payload — the round itself).
     Start,
     Bundle(KeyBundle),
+    /// Warm-round phase 1 kick-off: the session delta (alive bitmap +
+    /// re-keyed neighbor keys) instead of a full key bundle.
+    WarmPlan(WarmPlan),
     Delivery(ShareDelivery),
     Announce(std::sync::Arc<SurvivorAnnounce>),
     /// Round over; the client is not needed further.
@@ -220,7 +293,7 @@ impl Down {
     pub fn phase(&self) -> Option<u8> {
         match self {
             Down::Start => Some(0),
-            Down::Bundle(_) => Some(1),
+            Down::Bundle(_) | Down::WarmPlan(_) => Some(1),
             Down::Delivery(_) => Some(2),
             Down::Announce(_) => Some(3),
             Down::Finish => None,
@@ -301,6 +374,30 @@ mod tests {
             shares: vec![(1, ShareKind::SelfMask, share()), (2, ShareKind::SecretKey, share())],
         };
         assert_eq!(um.size_bytes(), 4 + 2 * (4 + 1 + A_S));
+    }
+
+    #[test]
+    fn warm_message_sizes_split_by_accounting_bucket() {
+        let wr = WarmResume { id: 1, support: Some(vec![3, 9, 40]), rekey: None };
+        assert_eq!(wr.support_bytes(), 12);
+        assert_eq!(wr.rekey_bytes(), 0);
+        assert_eq!(wr.size_bytes(), 4 + 12);
+        let wr2 = WarmResume { id: 1, support: None, rekey: Some(([0; 32], [0; 32])) };
+        assert_eq!(wr2.size_bytes(), 4 + 64);
+        assert_eq!(wr2.rekey_bytes(), 64);
+
+        let wp = WarmPlan {
+            to: 2,
+            alive_bitmap: vec![0xFF, 0x01],
+            keys: vec![(5, [0; 32], [0; 32])],
+        };
+        assert_eq!(wp.rekey_bytes(), 68);
+        assert_eq!(wp.size_bytes(), 4 + 2 + 68);
+
+        let up = Up::Warm(WarmResume { id: 9, support: None, rekey: None });
+        assert_eq!((up.phase(), up.from()), (0, 9));
+        let down = Down::WarmPlan(WarmPlan { to: 0, alive_bitmap: vec![], keys: vec![] });
+        assert_eq!(down.phase(), Some(1));
     }
 
     #[test]

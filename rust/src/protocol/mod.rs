@@ -25,6 +25,7 @@ pub mod dropout;
 pub mod engine;
 pub mod messages;
 pub mod server;
+pub mod session;
 
 use crate::codec::Codec;
 use crate::graph::Graph;

@@ -44,6 +44,9 @@ pub trait RoundSink: Send {
     /// Phase-0 batch: the advertisements `step0_route_keys` is about to
     /// consume.
     fn record_step0(&mut self, advs: &[AdvertiseKeys]) -> Result<()>;
+    /// Warm-round phase-0 batch: the session resumes
+    /// `warm_step0_resume` is about to consume.
+    fn record_warm_step0(&mut self, resumes: &[WarmResume]) -> Result<()>;
     /// Phase-1 batch of share uploads.
     fn record_step1(&mut self, uploads: &[ShareUpload]) -> Result<()>;
     /// Phase-2 batch of masked inputs.
@@ -58,6 +61,24 @@ pub trait RoundSink: Send {
     fn record_checkpoint(&mut self, acc: &[u64]) -> Result<()>;
     /// The finished round output.
     fn record_final(&mut self, out: &RoundOutput) -> Result<()>;
+}
+
+/// Cross-round session state the server carries into a warm round.
+///
+/// Owned by `protocol::session::ServerSession` between rounds, moved into
+/// the round's [`Server`] (and read back after it) so the wire transport
+/// and journal recovery can rebuild a warm server from one record.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WarmCtx {
+    /// Session round counter k ≥ 1 (the cold round is 0).
+    pub round: u64,
+    /// Per client: the last round it completed phase 1 (processed its
+    /// session delta), 0 = the cold round. Key-update deltas cover every
+    /// re-key after this.
+    pub last_seen: Vec<u64>,
+    /// Per client: the round its current key pairs were announced in,
+    /// 0 = the cold round.
+    pub rekeyed_at: Vec<u64>,
 }
 
 /// Server state across one round.
@@ -82,6 +103,8 @@ pub struct Server {
     /// Optional durability sink (journal): consulted before each state
     /// transition. `None` (the default) costs nothing on the hot path.
     sink: Option<Box<dyn RoundSink>>,
+    /// Warm-round session context; `None` on cold rounds.
+    warm: Option<WarmCtx>,
 }
 
 impl Server {
@@ -99,7 +122,35 @@ impl Server {
             shares: BTreeMap::new(),
             sets: SurvivorSets::default(),
             sink: None,
+            warm: None,
         }
+    }
+
+    /// Build a warm-round server: the session's cached public keys replace
+    /// phase-0 advertisements, and `warm` carries the ratchet round plus
+    /// the per-client delta clocks.
+    pub fn new_warm(
+        n: usize,
+        t: usize,
+        mask_bits: u32,
+        plan: Arc<IndexPlan>,
+        graph: Graph,
+        keys: BTreeMap<ClientId, (PublicKey, PublicKey)>,
+        warm: WarmCtx,
+    ) -> Server {
+        assert_eq!(warm.last_seen.len(), n);
+        assert_eq!(warm.rekeyed_at.len(), n);
+        assert!(warm.round >= 1, "warm rounds are numbered from 1");
+        let mut s = Server::new(n, t, mask_bits, plan, graph);
+        s.keys = keys;
+        s.warm = Some(warm);
+        s
+    }
+
+    /// The warm session context (updated in place as the round progresses),
+    /// or `None` for a cold round.
+    pub fn warm(&self) -> Option<&WarmCtx> {
+        self.warm.as_ref()
     }
 
     /// Attach a durability sink; every subsequent step records its batch
@@ -176,6 +227,69 @@ impl Server {
             .collect())
     }
 
+    /// **Warm step 0** — collect session resumes (their senders form V1),
+    /// apply announced re-keys, and build each survivor's session delta:
+    /// the alive bitmap over its adjacency row plus replacement keys for
+    /// every neighbor that re-keyed after the recipient last completed
+    /// phase 1 (this round's re-keys included — `rekeyed_at` is bumped
+    /// before the plans are assembled).
+    pub fn warm_step0_resume(
+        &mut self,
+        resumes: Vec<WarmResume>,
+    ) -> Result<Vec<(ClientId, WarmPlan)>> {
+        if self.warm.is_none() {
+            bail!("warm resume batch on a cold-round server");
+        }
+        if let Some(sink) = self.sink.as_mut() {
+            sink.record_warm_step0(&resumes)?;
+        }
+        let round = self.warm.as_ref().unwrap().round;
+        let mut batch = std::collections::BTreeSet::new();
+        for wr in resumes {
+            if wr.id >= self.n {
+                bail!("warm resume from unknown client {}", wr.id);
+            }
+            // first message wins, like every other phase batch
+            if !batch.insert(wr.id) {
+                log::debug!("duplicate warm resume from client {} ignored", wr.id);
+                continue;
+            }
+            if let Some((c_pk, s_pk)) = wr.rekey {
+                self.keys.insert(wr.id, (c_pk, s_pk));
+                self.warm.as_mut().unwrap().rekeyed_at[wr.id] = round;
+            }
+        }
+        self.sets.v1 = batch.into_iter().collect();
+        if self.sets.v1.len() < self.t {
+            bail!(
+                "|V1|={} < t={}: not enough clients to continue",
+                self.sets.v1.len(),
+                self.t
+            );
+        }
+        let warm = self.warm.as_ref().unwrap();
+        Ok(self
+            .sets
+            .v1
+            .iter()
+            .map(|&j| {
+                let neigh = self.graph.neighbors(j);
+                let mut alive_bitmap = vec![0u8; neigh.len().div_ceil(8)];
+                for (b, &i) in neigh.iter().enumerate() {
+                    if SurvivorSets::contains(&self.sets.v1, i) {
+                        alive_bitmap[b / 8] |= 1u8 << (b % 8);
+                    }
+                }
+                let keys = neigh
+                    .iter()
+                    .filter(|&&i| warm.rekeyed_at[i] > warm.last_seen[j])
+                    .filter_map(|&i| self.keys.get(&i).map(|(c, s)| (i, *c, *s)))
+                    .collect();
+                (j, WarmPlan { to: j, alive_bitmap, keys })
+            })
+            .collect())
+    }
+
     /// **Step 1** — collect encrypted-share uploads (senders form V2) and
     /// route each ciphertext to its recipient.
     pub fn step1_route_shares(
@@ -209,6 +323,15 @@ impl Server {
         self.sets.v2.sort_unstable();
         if self.sets.v2.len() < self.t {
             bail!("|V2|={} < t={}", self.sets.v2.len(), self.t);
+        }
+        // V2 membership proves the client processed this round's session
+        // delta (the plan precedes the upload), so its key-update clock
+        // advances — a client that got the plan but never dealt is re-sent
+        // the same (idempotent) delta on its next appearance.
+        if let Some(warm) = self.warm.as_mut() {
+            for &j in &self.sets.v2 {
+                warm.last_seen[j] = warm.round;
+            }
         }
         // deliver only to V2 members (others have dropped)
         let v2 = self.sets.v2.clone();
@@ -478,7 +601,13 @@ impl Server {
                 let Some((_, s_pk_j)) = self.keys.get(&j) else {
                     return Ok(RoundOutput { sum: None, reliable: false, sets });
                 };
-                let seed = dh::agree_mask_seed(&sk, s_pk_j);
+                let base = dh::agree_mask_seed(&sk, s_pk_j);
+                // Warm rounds mask with the round-k ratchet of the pairwise
+                // base, so cancellation ratchets identically.
+                let seed = match &self.warm {
+                    Some(w) => crate::crypto::prg::ratchet_seed(&base, w.round),
+                    None => base,
+                };
                 // The survivor j applied sign(j<i ? + : −); cancel it.
                 jobs.push(MaskJob { seed, pairwise: true, negate: j < *i });
             }
@@ -713,6 +842,45 @@ mod tests {
         assert_eq!(replayed.sets.v4, vec![0, 1, 2], "|V4| inflated by replay");
         assert_eq!(clean.sum, replayed.sum);
         assert_eq!(clean.sets, replayed.sets);
+    }
+
+    #[test]
+    fn warm_step0_builds_alive_bitmaps_and_key_deltas() {
+        // path 0-1-2; client 2 absent this round; client 0 re-keys now;
+        // client 1 last completed phase 1 at round 2, client 0 at round 1
+        let mut g = Graph::empty(3);
+        g.add_edge(0, 1);
+        g.add_edge(1, 2);
+        let keys: BTreeMap<_, _> =
+            (0..3).map(|id| (id, ([id as u8; 32], [0x40 | id as u8; 32]))).collect();
+        let warm = WarmCtx { round: 3, last_seen: vec![1, 2, 2], rekeyed_at: vec![0, 2, 0] };
+        let mut s = Server::new_warm(3, 2, 32, IndexPlan::identity(4), g, keys, warm);
+        let resumes = vec![
+            WarmResume { id: 0, support: None, rekey: Some(([9; 32], [10; 32])) },
+            WarmResume { id: 1, support: None, rekey: None },
+        ];
+        let plans = s.warm_step0_resume(resumes).unwrap();
+        assert_eq!(s.sets().v1, vec![0, 1]);
+        assert_eq!(s.advertised_keys()[&0], ([9; 32], [10; 32]), "re-key applied");
+        assert_eq!(s.warm().unwrap().rekeyed_at, vec![3, 2, 0]);
+
+        // client 0: neighbor 1 alive; 1 re-keyed at round 2 > last_seen[0]=1
+        let p0 = &plans.iter().find(|(id, _)| *id == 0).unwrap().1;
+        assert_eq!(p0.alive_bitmap, vec![0x01]);
+        assert_eq!(p0.keys, vec![(1, [1; 32], [0x41; 32])]);
+        // client 1: neighbors [0, 2] → bit 0 alive only; 0's re-key (this
+        // round) is in the delta, absent 2's cold keys are not
+        let p1 = &plans.iter().find(|(id, _)| *id == 1).unwrap().1;
+        assert_eq!(p1.alive_bitmap, vec![0x01]);
+        assert_eq!(p1.keys, vec![(0, [9; 32], [10; 32])]);
+
+        // V2 membership advances the delta clock
+        s.step1_route_shares(vec![
+            ShareUpload { from: 0, shares: vec![] },
+            ShareUpload { from: 1, shares: vec![] },
+        ])
+        .unwrap();
+        assert_eq!(s.warm().unwrap().last_seen, vec![3, 3, 2]);
     }
 
     #[test]

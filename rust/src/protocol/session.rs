@@ -1,0 +1,880 @@
+//! Cross-round sessions: amortized setup, ratcheted seeds, error-fed TopK.
+//!
+//! A cold round pays the full CCESA setup — x25519 advertisements, pairwise
+//! key agreements, AEAD share ciphertexts. This module keeps what that
+//! round established (pairwise channel secrets, graph membership, Shamir
+//! share skeletons) alive in a [`Session`] so the rounds after it start
+//! *warm*:
+//!
+//! * **Ratcheted seeds** — round k's pairwise mask seed is
+//!   `prg::ratchet_seed(base, k)` over the cached x25519 agreement; the
+//!   self-mask seed `b_i^(k)` is fresh per round and its shares travel as
+//!   32-byte pad-XOR ciphertexts over the cached channel (no AEAD, no key
+//!   exchange). Phase 0 shrinks from two public keys per client to a
+//!   [`WarmResume`] that is empty unless the client re-keys.
+//! * **Incremental re-key, not rebuild** — churn (a member skipping a
+//!   round, an `s^SK` exposed by V2∖V3 reconstruction, a repair edge)
+//!   re-keys only the touched clients: the server's per-client delta
+//!   clocks ([`WarmCtx`]) tell each plan recipient exactly which neighbor
+//!   keys it missed, and stale cached share skeletons are dropped by the
+//!   recipients themselves.
+//! * **Graph repair under churn** — when absences push a member's *active*
+//!   degree below t−1, deterministic repair edges are added among the
+//!   round's participants (both endpoints re-key; adjacency order stays
+//!   lock-stepped between server graph and client neighbor lists).
+//! * **Local TopK + error feedback** — warm TopK rounds rank coordinates
+//!   locally over `eff_i = θ_i + residual_i` (mod 2^b), upload the k-index
+//!   support in phase 0, and receive the server-assembled union support
+//!   with the plan; coordinates that don't travel accumulate into
+//!   `residual_i` for the next round. The cold round's driver-computed
+//!   global-magnitude oracle survives only as the cold-start path.
+//!
+//! Execution goes through the same three shapes as cold rounds — a serial
+//! engine driver (here), the worker-pool event loop
+//! (`coordinator::run_warm_event_loop`) and the loopback wire
+//! (`net::socket`) — selected via [`RoundOptions`]; all three are
+//! bit-identical in sums, survivor sets and logical byte accounting.
+//!
+//! Simplifications (documented, asserted in tests): session membership is
+//! fixed to the cold round's V3 (no late joins); an aborted warm round
+//! burns its ratchet round number and leaves the session usable.
+
+use super::client::{Client, ClientSm};
+use super::messages::{Down, Up, ID_BYTES};
+use super::server::{RoundOutput, Server, WarmCtx};
+use super::{ClientId, ProtocolConfig, SurvivorSets};
+use crate::codec::{local_topk, union_support, Codec, IndexPlan};
+use crate::coordinator::{
+    event_loop_workers, predraw_survivals, run_cold_round_capture, run_warm_event_loop,
+    CoordRoundResult, Executor, RoundOptions, WarmLoopIo,
+};
+use crate::crypto::dh::PublicKey;
+use crate::graph::Graph;
+use crate::net::{Dir, NetStats};
+use crate::util::rng::Rng;
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// Per-round seed stride (the 64-bit golden ratio, same schedule the sim
+/// scenario compiler uses for its multi-round seeds).
+const ROUND_SEED_STRIDE: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// The seed every round-k derivation (dropout schedule, per-client RNG
+/// streams, RandK plan, journal round tag) runs under. k = 0 is the cold
+/// round: `round_seed(seed, 0) == seed`.
+pub fn round_seed(seed: u64, round: u64) -> u64 {
+    seed ^ round.wrapping_mul(ROUND_SEED_STRIDE)
+}
+
+/// Everything a warm round derives before its first message moves — the
+/// warm counterpart of `coordinator::RoundSetup`, plus the session-layer
+/// decisions (participant set, re-key set, repair edges, effective inputs).
+struct WarmSpec {
+    round: u64,
+    plan: Arc<IndexPlan>,
+    /// `eff_i = (θ_i + residual_i) mod 2^b`, indexed by client id (empty
+    /// for non-participants — they contribute nothing this round).
+    effs: Vec<Vec<u64>>,
+    /// Phase-0 support proposal per client (TopK participants only).
+    supports: Vec<Option<Vec<u32>>>,
+    survives: Vec<[bool; 4]>,
+    share_rngs: Vec<Rng>,
+    /// Active session members this round, ascending.
+    participants: Vec<ClientId>,
+    /// Snapshot of `pending_rekey` at prepare time: who announced fresh
+    /// keys in this round's phase 0.
+    rekeying: Vec<bool>,
+    /// Per-recipient union-coordinate-map download bytes (TopK only).
+    map_bytes: usize,
+}
+
+/// A live cross-round aggregation session: the server-side caches (graph,
+/// advertised keys, delta clocks) plus the session members' [`Client`]s
+/// with their pairwise secrets, and the per-client error-feedback
+/// residuals. Built by [`Session::establish`] from one cold round; every
+/// [`Session::run_round`] after that is warm.
+pub struct Session {
+    cfg: ProtocolConfig,
+    graph: Graph,
+    /// Session members' clients, by id. `None` only transiently (while a
+    /// round's executor owns the machine) or for non-members.
+    clients: Vec<Option<Client>>,
+    member: Vec<bool>,
+    /// Current advertised keys, id → (c_pk, s_pk) — the warm server's
+    /// phase-0 substitute.
+    keys: BTreeMap<ClientId, (PublicKey, PublicKey)>,
+    last_seen: Vec<u64>,
+    rekeyed_at: Vec<u64>,
+    /// Who must announce fresh key pairs next round (exposed `s^SK`,
+    /// repair-edge endpoint). Stays set until the re-deal lands (the
+    /// client reaches V2 of a round it announced in).
+    pending_rekey: Vec<bool>,
+    /// Error-feedback residual per client, in the modular domain.
+    residuals: Vec<Vec<u64>>,
+    /// Last started round (0 = cold). Advanced at prepare time so an
+    /// aborted round can never reuse a ratcheted seed.
+    round: u64,
+    /// Repair edges added so far: (round, i, j).
+    repairs: Vec<(u64, ClientId, ClientId)>,
+}
+
+impl Session {
+    /// Run the cold round (event-loop executor) and establish the session
+    /// from its outcome: members are the cold V3, each caching its
+    /// pairwise channel secrets and the share skeletons it received.
+    pub fn establish(
+        cfg: &ProtocolConfig,
+        models: &[Vec<u64>],
+    ) -> Result<(Session, CoordRoundResult)> {
+        let (result, machines) =
+            run_cold_round_capture(cfg, models, event_loop_workers(cfg.n))?;
+        ensure!(result.reliable, "cold round unreliable: no session established");
+        let mut clients: Vec<Option<Client>> =
+            machines.into_iter().map(|sm| Some(sm.into_client())).collect();
+        let mut member = vec![false; cfg.n];
+        let mut keys = BTreeMap::new();
+        for &i in &result.sets.v3 {
+            let c = clients[i].as_mut().expect("cold round yields one client per id");
+            c.establish_session().with_context(|| format!("client {i}: establish session"))?;
+            member[i] = true;
+            keys.insert(i, (c.c_keys.pk, c.s_keys.pk));
+        }
+        ensure!(
+            result.sets.v3.len() >= cfg.t,
+            "cold V3 smaller than t: session could never run a warm round"
+        );
+        let graph = {
+            // same first draws as `derive_round_setup`
+            let mut rng = Rng::new(cfg.seed);
+            cfg.build_graph_with(&mut rng)
+        };
+        let session = Session {
+            cfg: cfg.clone(),
+            graph,
+            clients,
+            member,
+            keys,
+            last_seen: vec![0; cfg.n],
+            rekeyed_at: vec![0; cfg.n],
+            pending_rekey: vec![false; cfg.n],
+            residuals: vec![vec![0u64; cfg.dim]; cfg.n],
+            round: 0,
+            repairs: Vec::new(),
+        };
+        Ok((session, result))
+    }
+
+    /// Last started round number (0 until the first warm round).
+    pub fn round(&self) -> u64 {
+        self.round
+    }
+
+    /// Session members (the cold round's V3), ascending.
+    pub fn members(&self) -> Vec<ClientId> {
+        (0..self.cfg.n).filter(|&i| self.member[i]).collect()
+    }
+
+    pub fn is_member(&self, id: ClientId) -> bool {
+        self.member.get(id).copied().unwrap_or(false)
+    }
+
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    pub fn config(&self) -> &ProtocolConfig {
+        &self.cfg
+    }
+
+    /// The client's error-feedback residual (modular domain).
+    pub fn residual(&self, id: ClientId) -> &[u64] {
+        &self.residuals[id]
+    }
+
+    pub fn is_rekey_pending(&self, id: ClientId) -> bool {
+        self.pending_rekey[id]
+    }
+
+    /// Repair edges added so far, as (round, i, j).
+    pub fn repair_edges(&self) -> &[(u64, ClientId, ClientId)] {
+        &self.repairs
+    }
+
+    /// Run one warm round over `models` with the given per-client activity
+    /// schedule (`active[i]` = client i shows up this round; non-members
+    /// are ignored). The executor, worker budget and journal come from
+    /// `opts` exactly as for a cold [`crate::coordinator::RoundRunner`]
+    /// round.
+    pub fn run_round(
+        &mut self,
+        models: &[Vec<u64>],
+        active: &[bool],
+        opts: &RoundOptions,
+    ) -> Result<CoordRoundResult> {
+        let spec = self.prepare(models, active)?;
+        match opts.executor {
+            Executor::Engine => {
+                ensure!(
+                    opts.journal_dir.is_none(),
+                    "the sync engine executor does not journal"
+                );
+                let (result, server) = self.run_warm_engine(&spec)?;
+                self.absorb(&spec, &server, &result);
+                Ok(result)
+            }
+            Executor::EventLoop => {
+                let mut server = self.warm_server(&spec);
+                if let Some(dir) = &opts.journal_dir {
+                    let sink = warm_journal_sink(dir, &self.cfg, &spec, &server)?;
+                    server.set_sink(sink);
+                }
+                let workers = opts.workers.unwrap_or_else(|| event_loop_workers(self.cfg.n));
+                let machines = self.take_warm_machines(&spec);
+                let (res, server, machines) = run_warm_event_loop(WarmLoopIo {
+                    machines,
+                    server,
+                    map_bytes: spec.map_bytes,
+                    workers,
+                });
+                self.reseat(machines);
+                let result = res?;
+                self.absorb(&spec, &server, &result);
+                Ok(result)
+            }
+            Executor::Wire => {
+                let server = self.warm_server(&spec);
+                let tag = crate::net::socket::round_tag(round_seed(self.cfg.seed, spec.round));
+                let machines = self.take_warm_machines(&spec);
+                let (res, server, machines) = crate::net::socket::run_warm_round_wire(
+                    server,
+                    machines,
+                    spec.map_bytes,
+                    tag,
+                    opts,
+                );
+                self.reseat(machines);
+                let result = res?;
+                self.absorb(&spec, &server, &result);
+                Ok(result)
+            }
+        }
+    }
+
+    /// Derive everything round k needs and mutate the session's pre-round
+    /// state: repair the graph, advance the round counter (burned even if
+    /// the round later aborts — ratcheted seeds are never reused), draw
+    /// per-round secrets, and compute effective inputs + the payload plan.
+    fn prepare(&mut self, models: &[Vec<u64>], active: &[bool]) -> Result<WarmSpec> {
+        let n = self.cfg.n;
+        ensure!(models.len() == n, "one model vector per client");
+        ensure!(active.len() == n, "one activity flag per client");
+        let round = self.round + 1;
+
+        let participants: Vec<ClientId> =
+            (0..n).filter(|&i| active[i] && self.member[i] && self.clients[i].is_some()).collect();
+        ensure!(
+            participants.len() >= self.cfg.t,
+            "warm round {round}: {} active members < t = {}",
+            participants.len(),
+            self.cfg.t
+        );
+
+        // ---- graph repair: every participant needs t-1 active neighbors
+        for (i, j) in plan_repairs(&self.graph, &participants, self.cfg.t)? {
+            self.graph.add_edge(i, j);
+            // same global order as the server graph so warm alive-bitmap
+            // indices keep matching adjacency rows
+            self.clients[i].as_mut().expect("participant client").add_neighbor(j);
+            self.clients[j].as_mut().expect("participant client").add_neighbor(i);
+            self.pending_rekey[i] = true;
+            self.pending_rekey[j] = true;
+            self.repairs.push((round, i, j));
+        }
+
+        // ---- per-round derivation, same recipe shape as a cold round
+        let rseed = round_seed(self.cfg.seed, round);
+        let mut rng = Rng::new(rseed);
+        let mut dropout_rng = rng.split(0xD20);
+        let survives = predraw_survivals(&self.cfg, &mut dropout_rng);
+        let mut share_rngs = Vec::with_capacity(n);
+        let rekeying = self.pending_rekey.clone();
+        for id in 0..n {
+            let mut key_rng = rng.split(0xC11E27 + id as u64);
+            share_rngs.push(rng.split(0x5A12E + id as u64));
+            if participants.binary_search(&id).is_ok() {
+                self.clients[id]
+                    .as_mut()
+                    .expect("participant client")
+                    .warm_begin(round, rekeying[id], &mut key_rng)
+                    .with_context(|| format!("client {id}: warm_begin round {round}"))?;
+            }
+        }
+
+        // ---- effective inputs: error feedback folds the residual in
+        let modmask = crate::util::mod_mask(self.cfg.mask_bits);
+        let mut effs = vec![Vec::new(); n];
+        for &i in &participants {
+            ensure!(models[i].len() == self.cfg.dim, "client {i} model dimension");
+            effs[i] = models[i]
+                .iter()
+                .zip(&self.residuals[i])
+                .map(|(&m, &r)| m.wrapping_add(r) & modmask)
+                .collect();
+        }
+
+        // ---- payload plan: local ranking + server-assembled union for
+        // TopK, seed-derived for RandK, identity for Dense
+        let mut supports: Vec<Option<Vec<u32>>> = vec![None; n];
+        let (plan, map_bytes) = match self.cfg.codec {
+            Codec::Dense => (IndexPlan::identity(self.cfg.dim), 0),
+            Codec::RandK { .. } => {
+                (self.cfg.codec.plan(self.cfg.dim, self.cfg.mask_bits, rseed, &effs), 0)
+            }
+            Codec::TopK { k } => {
+                for &i in &participants {
+                    supports[i] = Some(local_topk(&effs[i], self.cfg.mask_bits, k));
+                }
+                // the union over predicted V1 (participants surviving
+                // phase 0) — exactly the supports the server will receive
+                // and union; both wire endpoints derive it identically
+                let v1_supports: Vec<Vec<u32>> = participants
+                    .iter()
+                    .filter(|&&i| survives[i][0])
+                    .map(|&i| supports[i].clone().expect("participant support"))
+                    .collect();
+                let union = union_support(&v1_supports, self.cfg.dim);
+                let map_bytes = union.len() * ID_BYTES;
+                (IndexPlan::sparse(union, self.cfg.dim), map_bytes)
+            }
+        };
+
+        self.round = round;
+        Ok(WarmSpec {
+            round,
+            plan,
+            effs,
+            supports,
+            survives,
+            share_rngs,
+            participants,
+            rekeying,
+            map_bytes,
+        })
+    }
+
+    /// The warm server for this round, seeded from the session caches.
+    fn warm_server(&self, spec: &WarmSpec) -> Server {
+        Server::new_warm(
+            self.cfg.n,
+            self.cfg.t,
+            self.cfg.mask_bits,
+            spec.plan.clone(),
+            self.graph.clone(),
+            self.keys.clone(),
+            WarmCtx {
+                round: spec.round,
+                last_seen: self.last_seen.clone(),
+                rekeyed_at: self.rekeyed_at.clone(),
+            },
+        )
+    }
+
+    /// Move the participants' clients into warm state machines for an
+    /// executor. [`Session::reseat`] puts them back afterwards.
+    fn take_warm_machines<'m>(&mut self, spec: &'m WarmSpec) -> Vec<ClientSm<'m>> {
+        spec.participants
+            .iter()
+            .map(|&i| {
+                let client = self.clients[i].take().expect("participant has a live client");
+                ClientSm::resume(
+                    client,
+                    spec.supports[i].clone(),
+                    spec.share_rngs[i].clone(),
+                    &spec.effs[i],
+                    spec.plan.clone(),
+                    spec.survives[i],
+                )
+            })
+            .collect()
+    }
+
+    fn reseat(&mut self, machines: Vec<ClientSm<'_>>) {
+        for sm in machines {
+            let client = sm.into_client();
+            let id = client.id;
+            self.clients[id] = Some(client);
+        }
+    }
+
+    /// Post-round bookkeeping: copy back the server's delta clocks and
+    /// (possibly re-keyed) advertised keys, settle the re-key ledger, and
+    /// absorb untransmitted coordinates into the residuals.
+    fn absorb(&mut self, spec: &WarmSpec, server: &Server, result: &CoordRoundResult) {
+        let warm = server.warm().expect("warm round server carries its context");
+        self.last_seen = warm.last_seen.clone();
+        self.rekeyed_at = warm.rekeyed_at.clone();
+        self.keys = server.advertised_keys().clone();
+
+        let support = spec.plan.indices();
+        for &i in &spec.participants {
+            let in_v2 = SurvivorSets::contains(&result.sets.v2, i);
+            let in_v3 = SurvivorSets::contains(&result.sets.v3, i);
+            // a pending re-key completes when the re-deal landed (V2 of a
+            // round it announced in) ...
+            if spec.rekeying[i] && in_v2 {
+                self.pending_rekey[i] = false;
+            }
+            // ... and V2∖V3 membership exposes s^SK to reconstruction, so
+            // the key must rotate before its next pairwise use
+            if in_v2 && !in_v3 {
+                self.pending_rekey[i] = true;
+            }
+            // error feedback: transmitted coordinates reset, everything
+            // else (including a whole update that never made V3) carries
+            if result.reliable && in_v3 {
+                let mut r = spec.effs[i].clone();
+                match support {
+                    Some(idx) => {
+                        for &d in idx {
+                            r[d as usize] = 0;
+                        }
+                    }
+                    None => r.fill(0),
+                }
+                self.residuals[i] = r;
+            } else {
+                self.residuals[i] = spec.effs[i].clone();
+            }
+        }
+    }
+
+    /// The serial warm driver — the session's own "engine" executor,
+    /// mirroring `protocol::engine::run_round` phase by phase (and charging
+    /// logical bytes exactly like the warm event loop, so the two are
+    /// `NetStats::logical_eq`).
+    fn run_warm_engine(&mut self, spec: &WarmSpec) -> Result<(CoordRoundResult, Server)> {
+        let mut server = self.warm_server(spec);
+        let mut stats = NetStats::new(self.cfg.n);
+        let mut alive = vec![false; self.cfg.n];
+        for &i in &spec.participants {
+            alive[i] = true;
+        }
+        let workers = crate::par::threads_for_len(spec.plan.len());
+
+        // ---- phase 0: session resume
+        let mut resumes = Vec::new();
+        for &i in &spec.participants {
+            if spec.survives[i][0] {
+                let r = self.clients[i]
+                    .as_ref()
+                    .expect("participant client")
+                    .warm_resume(spec.supports[i].clone())?;
+                stats.record(0, Dir::Up, i, r.size_bytes());
+                stats.record_coord_map(r.support_bytes());
+                stats.record_rekey(Dir::Up, r.rekey_bytes());
+                resumes.push(r);
+            } else {
+                alive[i] = false;
+            }
+        }
+        let plans = server.warm_step0_resume(resumes)?;
+        for (id, wp) in &plans {
+            stats.record(0, Dir::Down, *id, wp.size_bytes() + spec.map_bytes);
+            stats.record_coord_map(spec.map_bytes);
+            stats.record_rekey(Dir::Down, wp.rekey_bytes());
+        }
+
+        // ---- phase 1: share keys over the cached channels
+        let mut uploads = Vec::new();
+        for (id, wp) in &plans {
+            if alive[*id] && spec.survives[*id][1] {
+                let mut srng = spec.share_rngs[*id].clone();
+                match self.clients[*id]
+                    .as_mut()
+                    .expect("participant client")
+                    .warm_share_keys(wp, &mut srng)
+                {
+                    Ok(up) => {
+                        stats.record(1, Dir::Up, *id, up.size_bytes());
+                        uploads.push(up);
+                    }
+                    Err(e) => {
+                        log::debug!("client {id} withdraws in warm step 1: {e}");
+                        alive[*id] = false;
+                    }
+                }
+            } else {
+                alive[*id] = false;
+            }
+        }
+        let deliveries = server.step1_route_shares(uploads)?;
+        for (id, d) in &deliveries {
+            stats.record(1, Dir::Down, *id, d.size_bytes());
+        }
+
+        // ---- phase 2: masked effective inputs
+        let mut masked = Vec::new();
+        for (id, delivery) in &deliveries {
+            if alive[*id] && spec.survives[*id][2] {
+                let mi = self.clients[*id]
+                    .as_mut()
+                    .expect("participant client")
+                    .warm_masked_input_with(delivery, &spec.effs[*id], &spec.plan, workers)?;
+                stats.record(2, Dir::Up, *id, mi.size_bytes());
+                stats.record_masked_payload(mi.payload_bytes());
+                masked.push(mi);
+            } else {
+                alive[*id] = false;
+            }
+        }
+        let announce = server.step2_collect_masked(masked)?;
+        for &id in &announce.v3 {
+            stats.record(2, Dir::Down, id, announce.size_bytes());
+        }
+
+        // ---- phase 3: unmask
+        let mut responses = Vec::new();
+        for &id in &announce.v3 {
+            if alive[id] && spec.survives[id][3] {
+                let um = self.clients[id]
+                    .as_mut()
+                    .expect("participant client")
+                    .warm_unmask(&announce)?;
+                stats.record(3, Dir::Up, id, um.size_bytes());
+                responses.push(um);
+            } else {
+                alive[id] = false;
+            }
+        }
+        let RoundOutput { sum, reliable, sets } = server.finalize(responses)?;
+        Ok((CoordRoundResult { sum, reliable, sets, stats }, server))
+    }
+}
+
+/// The deterministic repair plan: for each participant (ascending) whose
+/// active degree is below t−1, add edges to the lowest-id participants it
+/// isn't connected to yet. Pure so it can be property-tested; errors when
+/// the participant pool is too small to reach the threshold.
+fn plan_repairs(
+    graph: &Graph,
+    participants: &[ClientId],
+    t: usize,
+) -> Result<Vec<(ClientId, ClientId)>> {
+    let mut part = vec![false; graph.n()];
+    for &i in participants {
+        part[i] = true;
+    }
+    // adjacency snapshot we update as we plan, so later participants see
+    // earlier repairs
+    let mut extra: Vec<Vec<ClientId>> = vec![Vec::new(); graph.n()];
+    let mut edges = Vec::new();
+    for &i in participants {
+        let mut deg = graph.neighbors(i).iter().filter(|&&j| part[j]).count()
+            + extra[i].len();
+        if deg + 1 >= t {
+            continue;
+        }
+        for &j in participants {
+            if deg + 1 >= t {
+                break;
+            }
+            if j == i || graph.has_edge(i, j) || extra[i].contains(&j) {
+                continue;
+            }
+            edges.push((i, j));
+            extra[i].push(j);
+            extra[j].push(i);
+            deg += 1;
+        }
+        if deg + 1 < t {
+            bail!(
+                "client {i}: only {} active neighbors reachable, needs {} (t = {t})",
+                deg,
+                t - 1
+            );
+        }
+    }
+    Ok(edges)
+}
+
+/// Create the warm round's fsync'd journal (setup record carries the
+/// session caches so `journal::recover` rebuilds a warm server) and wrap
+/// it as the server's durability sink.
+fn warm_journal_sink(
+    dir: &std::path::Path,
+    cfg: &ProtocolConfig,
+    spec: &WarmSpec,
+    server: &Server,
+) -> Result<Box<dyn super::server::RoundSink>> {
+    let tag = crate::net::socket::round_tag(round_seed(cfg.seed, spec.round));
+    let journal = crate::journal::Journal::create_warm(
+        dir,
+        tag,
+        cfg.n,
+        cfg.t,
+        cfg.mask_bits,
+        &spec.plan,
+        server.graph(),
+        server.advertised_keys(),
+        server.warm().expect("warm server carries its context"),
+        spec.map_bytes,
+    )
+    .context("create warm round journal")?;
+    Ok(Box::new(crate::journal::JournalSink::new(journal)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::dropout::DropoutModel;
+    use crate::protocol::Topology;
+    use crate::util::mod_mask;
+
+    fn models(n: usize, dim: usize, seed: u64) -> Vec<Vec<u64>> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| (0..dim).map(|_| rng.next_u64() & 0xFFFF_FFFF).collect())
+            .collect()
+    }
+
+    fn expected_sum(m: &[Vec<u64>], ids: &[usize], dim: usize, bits: u32) -> Vec<u64> {
+        let mm = mod_mask(bits);
+        let mut expect = vec![0u64; dim];
+        for &i in ids {
+            for (a, x) in expect.iter_mut().zip(&m[i]) {
+                *a = a.wrapping_add(*x) & mm;
+            }
+        }
+        expect
+    }
+
+    fn engine_opts() -> RoundOptions {
+        RoundOptions::builder().executor(Executor::Engine).build().unwrap()
+    }
+
+    #[test]
+    fn warm_rounds_recover_exact_sums_and_amortize_setup() {
+        let n = 12;
+        let dim = 24;
+        let cfg = ProtocolConfig::for_test(n, 5, dim, Topology::ErdosRenyi { p: 0.8 }, 4242);
+        let cold_models = models(n, dim, 1);
+        let (mut s, cold) = Session::establish(&cfg, &cold_models).unwrap();
+        assert_eq!(s.members().len(), n);
+        let active = vec![true; n];
+        for k in 1..=3u64 {
+            let m = models(n, dim, 100 + k);
+            let r = s.run_round(&m, &active, &engine_opts()).unwrap();
+            assert!(r.reliable, "round {k}");
+            assert_eq!(s.round(), k);
+            assert_eq!(
+                r.sum.as_ref().unwrap(),
+                &expected_sum(&m, &r.sets.v3, dim, cfg.mask_bits),
+                "round {k}"
+            );
+            // the whole point: warm setup traffic is a fraction of cold
+            // (the CI campaign asserts the <30% bound at realistic n)
+            assert!(
+                r.stats.setup_bytes() * 2 < cold.stats.setup_bytes(),
+                "round {k}: warm setup {} not < 1/2 of cold {}",
+                r.stats.setup_bytes(),
+                cold.stats.setup_bytes()
+            );
+            assert_eq!(r.stats.rekey_up, 0, "no churn, no re-keys");
+        }
+    }
+
+    #[test]
+    fn ratchet_is_deterministic_across_sessions_and_fresh_per_round() {
+        let n = 8;
+        let dim = 10;
+        let cfg = ProtocolConfig::for_test(n, 4, dim, Topology::Complete, 77);
+        let cold_models = models(n, dim, 2);
+        let warm_models = models(n, dim, 3);
+        let active = vec![true; n];
+        let run = |rounds: usize| -> Vec<CoordRoundResult> {
+            let (mut s, _) = Session::establish(&cfg, &cold_models).unwrap();
+            (0..rounds)
+                .map(|_| s.run_round(&warm_models, &active, &engine_opts()).unwrap())
+                .collect()
+        };
+        let a = run(2);
+        let b = run(2);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.sum, y.sum);
+            assert_eq!(x.sets, y.sets);
+            assert!(x.stats.logical_eq(&y.stats));
+        }
+        // same inputs two rounds running: the sums agree (mask-free
+        // aggregates), which only holds if each round's masks cancel
+        // internally despite distinct ratcheted seeds
+        assert_eq!(a[0].sum, a[1].sum);
+    }
+
+    #[test]
+    fn topk_error_feedback_carries_untransmitted_coordinates() {
+        let n = 6;
+        let dim = 16;
+        let k = 3;
+        let cfg = ProtocolConfig {
+            codec: Codec::TopK { k },
+            ..ProtocolConfig::for_test(n, 3, dim, Topology::Complete, 99)
+        };
+        let m = models(n, dim, 5);
+        let (mut s, _) = Session::establish(&cfg, &m).unwrap();
+        let active = vec![true; n];
+        let r = s.run_round(&m, &active, &engine_opts()).unwrap();
+        assert!(r.reliable);
+        let support: Vec<usize> = r.sum.as_ref().unwrap().iter().enumerate()
+            .filter(|(_, &v)| v != 0).map(|(d, _)| d).collect();
+        assert!(!support.is_empty() && support.len() <= n * k);
+        let mm = mod_mask(cfg.mask_bits);
+        for i in 0..n {
+            let res = s.residual(i);
+            // transmitted coordinates reset; the rest carry eff = θ + 0
+            let mut nonzero_off_support = 0;
+            for d in 0..dim {
+                if support.contains(&d) {
+                    // may or may not be in the union; if it was, residual 0
+                } else {
+                    assert_eq!(res[d], m[i][d] & mm, "client {i} coord {d}");
+                    if res[d] != 0 {
+                        nonzero_off_support += 1;
+                    }
+                }
+            }
+            assert!(nonzero_off_support > 0, "client {i}: residual must accumulate");
+        }
+        // second round: effs fold the residual in, so coordinates starved
+        // in round 1 get ranked with doubled weight
+        let r2 = s.run_round(&m, &active, &engine_opts()).unwrap();
+        assert!(r2.reliable);
+    }
+
+    #[test]
+    fn v2_minus_v3_membership_forces_a_rekey_that_lands_next_round() {
+        let n = 8;
+        let dim = 8;
+        let victim = 3;
+        let cfg = ProtocolConfig {
+            dropout: DropoutModel::Targeted { per_step: [vec![], vec![], vec![victim], vec![]] },
+            ..ProtocolConfig::for_test(n, 3, dim, Topology::Complete, 1234)
+        };
+        // cold round: victim ∈ V2∖V3 but is not a session member (members
+        // are cold V3) — use a clean cold round instead
+        let clean = ProtocolConfig { dropout: DropoutModel::None, ..cfg.clone() };
+        let m = models(n, dim, 6);
+        let (mut s, _) = Session::establish(&clean, &m).unwrap();
+        // switch the live session to the leaky dropout schedule
+        s.cfg = cfg;
+        let active = vec![true; n];
+        let r1 = s.run_round(&m, &active, &engine_opts()).unwrap();
+        assert!(r1.reliable);
+        assert!(SurvivorSets::contains(&r1.sets.v2, victim));
+        assert!(!SurvivorSets::contains(&r1.sets.v3, victim));
+        assert!(s.is_rekey_pending(victim), "exposed s^SK must force a re-key");
+        let keys_before = s.keys[&victim];
+
+        let r2 = s.run_round(&m, &active, &engine_opts()).unwrap();
+        assert!(r2.reliable);
+        assert!(r2.stats.rekey_up > 0, "round 2 carries the re-key announcement");
+        assert_ne!(s.keys[&victim], keys_before, "advertised keys rotated");
+        assert_eq!(s.rekeyed_at[victim], 2);
+        // victim reaches V2 again in round 2 (drops only at step 2), so the
+        // re-deal landed — but the fresh exposure re-arms the flag
+        assert!(s.is_rekey_pending(victim));
+    }
+
+    #[test]
+    fn absences_trigger_graph_repair_with_rekeyed_endpoints() {
+        // path-ish sparse graph: knocking out a hub starves its neighbors
+        let n = 10;
+        let dim = 6;
+        let cfg = ProtocolConfig::for_test(n, 4, dim, Topology::ErdosRenyi { p: 0.45 }, 2025);
+        let m = models(n, dim, 8);
+        let Ok((mut s, _)) = Session::establish(&cfg, &m) else {
+            // p too thin for this seed — the cold round itself failed;
+            // nothing to test
+            return;
+        };
+        // drop two members for a round; if anyone's active degree dips
+        // below t-1 the session must add repair edges and re-key endpoints
+        let mut active = vec![true; n];
+        active[1] = false;
+        active[4] = false;
+        let r = s.run_round(&m, &active, &engine_opts());
+        if let Ok(r) = r {
+            assert!(r.reliable);
+            for &(_, i, j) in s.repair_edges() {
+                assert!(s.graph().has_edge(i, j));
+                // endpoints re-keyed this round or still pending
+                assert!(
+                    s.rekeyed_at[i] >= 1 || s.is_rekey_pending(i),
+                    "repair endpoint {i} never re-keyed"
+                );
+                assert!(
+                    s.rekeyed_at[j] >= 1 || s.is_rekey_pending(j),
+                    "repair endpoint {j} never re-keyed"
+                );
+                // adjacency order stays lock-stepped client-side
+                assert!(s.clients[i].as_ref().unwrap().neighbors().contains(&j));
+                assert!(s.clients[j].as_ref().unwrap().neighbors().contains(&i));
+            }
+            // returning members resume cleanly
+            let r2 = s.run_round(&m, &vec![true; n], &engine_opts()).unwrap();
+            assert!(r2.reliable);
+            assert_eq!(
+                r2.sum.as_ref().unwrap(),
+                &expected_sum(&m, &r2.sets.v3, dim, cfg.mask_bits)
+            );
+        }
+    }
+
+    #[test]
+    fn repair_planner_tops_up_degrees_deterministically() {
+        let mut g = Graph::empty(6);
+        // a path 0-1-2-3-4, node 5 isolated
+        g.add_edge(0, 1);
+        g.add_edge(1, 2);
+        g.add_edge(2, 3);
+        g.add_edge(3, 4);
+        let parts: Vec<usize> = (0..6).collect();
+        let edges = plan_repairs(&g, &parts, 3).unwrap();
+        // applying the plan leaves everyone with active degree >= t-1 = 2
+        let mut g2 = g.clone();
+        for &(i, j) in &edges {
+            g2.add_edge(i, j);
+        }
+        for &i in &parts {
+            assert!(g2.degree(i) >= 2, "node {i} degree {} after repair", g2.degree(i));
+        }
+        // deterministic: same inputs, same plan
+        assert_eq!(edges, plan_repairs(&g, &parts, 3).unwrap());
+        // an impossible ask errors instead of looping
+        assert!(plan_repairs(&g, &[0, 5], 3).is_err());
+    }
+
+    #[test]
+    fn aborted_warm_round_burns_its_round_number_but_keeps_the_session() {
+        let n = 6;
+        let dim = 6;
+        let cfg = ProtocolConfig::for_test(n, 4, dim, Topology::Complete, 31);
+        let m = models(n, dim, 9);
+        let (mut s, _) = Session::establish(&cfg, &m).unwrap();
+        // everyone inactive → prepare fails before any secrets are drawn
+        assert!(s.run_round(&m, &vec![false; n], &engine_opts()).is_err());
+        // dropout storm at phase 0 → server aborts (|V1| < t) after the
+        // round number was burned
+        s.cfg.dropout =
+            DropoutModel::Targeted { per_step: [(0..n).collect(), vec![], vec![], vec![]] };
+        assert!(s.run_round(&m, &vec![true; n], &engine_opts()).is_err());
+        let burned = s.round();
+        assert!(burned >= 1);
+        // back to a clean schedule: the session still works, on a fresh
+        // (never-reused) ratchet round
+        s.cfg.dropout = DropoutModel::None;
+        let r = s.run_round(&m, &vec![true; n], &engine_opts()).unwrap();
+        assert!(r.reliable);
+        assert_eq!(s.round(), burned + 1);
+    }
+}

@@ -8,50 +8,17 @@
 //! experiment (§4.3), a privacy experiment (§4.4) and a regression suite.
 
 use super::scenario::{RoundPlan, Scenario};
-use crate::coordinator::{run_round_event_loop, CoordRoundResult};
+use crate::coordinator::{CoordRoundResult, RoundOptions, RoundRunner};
 use crate::net::NetStats;
 use crate::protocol::adversary::{attack, Breach};
 use crate::protocol::engine::run_round;
 use crate::protocol::{ClientId, SurvivorSets};
 use anyhow::Result;
 
-/// Which execution shape drives the campaign's rounds.
-///
-/// The legacy thread-per-client `Threaded` executor was deleted with its
-/// coordinator once the event loop's equivalence suite had green CI cycles
-/// (ROADMAP follow-up): the event loop is now pinned against the engine
-/// directly.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Executor {
-    /// The deterministic synchronous engine (`protocol::engine`).
-    Engine,
-    /// The worker-pool event-loop coordinator (the scaling shape).
-    EventLoop,
-    /// The loopback socket transport (`net::socket`) — every message
-    /// crosses a real TCP stream as wire frames.
-    Wire,
-}
-
-impl Executor {
-    /// Every executor, in reference-first order.
-    pub const ALL: [Executor; 3] = [Executor::Engine, Executor::EventLoop, Executor::Wire];
-
-    /// Every executor except the [`Executor::Engine`] reference — the list
-    /// the differential harness and equivalence suites iterate, derived
-    /// from [`Executor::ALL`] so a future executor joins them by
-    /// construction.
-    pub fn non_reference() -> impl Iterator<Item = Executor> {
-        Executor::ALL.into_iter().filter(|e| *e != Executor::Engine)
-    }
-
-    pub fn name(&self) -> &'static str {
-        match self {
-            Executor::Engine => "engine",
-            Executor::EventLoop => "event-loop",
-            Executor::Wire => "wire",
-        }
-    }
-}
+// The executor axis lives with the round runner now ([`RoundOptions`]
+// selects it); campaigns re-export it so existing `sim::Executor` imports
+// keep working.
+pub use crate::coordinator::Executor;
 
 /// Everything recorded about one campaign round.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -195,8 +162,13 @@ pub fn run_plan(
             }
             Err(_) => RoundRecord::aborted(plan.round, plan.cfg.n),
         },
-        Executor::EventLoop => coord_record(run_round_event_loop(&plan.cfg, models)),
-        Executor::Wire => coord_record(crate::net::socket::run_round_wire(&plan.cfg, models)),
+        Executor::EventLoop | Executor::Wire => {
+            let opts = RoundOptions::builder()
+                .executor(executor)
+                .build()
+                .expect("an executor alone is always a valid round configuration");
+            coord_record(RoundRunner::new(opts).run(&plan.cfg, models))
+        }
     }
 }
 
@@ -303,6 +275,11 @@ fn encode_round_record(r: &RoundRecord) -> Vec<u8> {
     put_opt_bool(&mut out, r.sum_matches_truth);
     put_u64(&mut out, r.breaches as u64);
     put_u64(&mut out, r.exposed_honest as u64);
+    // session-era counters ride at the tail so logs written before they
+    // existed still decode (they read back as zero)
+    put_u64(&mut out, s.coord_map_bytes);
+    put_u64(&mut out, s.rekey_up);
+    put_u64(&mut out, s.rekey_down);
     out
 }
 
@@ -352,6 +329,11 @@ fn decode_round_record(payload: &[u8]) -> Result<RoundRecord> {
     let sum_matches_truth = opt_bool(&mut rd)?;
     let breaches = rd.u64("breaches")? as usize;
     let exposed_honest = rd.u64("exposed_honest")? as usize;
+    if rd.remaining() > 0 {
+        stats.coord_map_bytes = rd.u64("coord_map_bytes")?;
+        stats.rekey_up = rd.u64("rekey_up")?;
+        stats.rekey_down = rd.u64("rekey_down")?;
+    }
     rd.done()?;
     Ok(RoundRecord {
         round,

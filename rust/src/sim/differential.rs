@@ -122,6 +122,87 @@ pub fn diff_scenario(sc: &Scenario) -> Option<Mismatch> {
     None
 }
 
+/// Warm-round differential: run the session scenario's campaign (one cold
+/// establishing round + N warm rounds) through every executor and require
+/// bit-identical sums, survivor sets, abort behavior and logical
+/// [`crate::net::NetStats`] — including the session-era coordinate-map and
+/// re-key counters — on every warm round. The engine executor is the
+/// reference, exactly as in [`diff_scenario`].
+pub fn diff_session_scenario(
+    sc: &super::session::SessionScenario,
+) -> Option<Mismatch> {
+    use super::session::{run_session_campaign, SessionReport};
+    let run = |executor: Executor| -> Result<SessionReport, Mismatch> {
+        run_session_campaign(sc, executor).map_err(|e| Mismatch {
+            scenario: sc.name.clone(),
+            seed: sc.seed,
+            round: 0,
+            executor,
+            field: "campaign",
+            detail: format!("session campaign failed to run: {e:#}"),
+        })
+    };
+    let e = match run(Executor::Engine) {
+        Ok(rep) => rep,
+        Err(m) => return Some(m),
+    };
+    for alt in Executor::non_reference() {
+        let c = match run(alt) {
+            Ok(rep) => rep,
+            Err(m) => return Some(m),
+        };
+        for (re, rc) in e.warm.iter().zip(&c.warm) {
+            let mismatch = |field: &'static str, detail: String| Mismatch {
+                scenario: sc.name.clone(),
+                seed: sc.seed,
+                round: re.round as usize,
+                executor: alt,
+                field,
+                detail,
+            };
+            if re.aborted != rc.aborted {
+                return Some(mismatch(
+                    "abort",
+                    format!("engine aborted={}, {} aborted={}", re.aborted, alt.name(), rc.aborted),
+                ));
+            }
+            if re.aborted {
+                continue;
+            }
+            if re.reliable != rc.reliable {
+                return Some(mismatch(
+                    "reliable",
+                    format!(
+                        "engine reliable={}, {} reliable={}",
+                        re.reliable,
+                        alt.name(),
+                        rc.reliable
+                    ),
+                ));
+            }
+            if re.sets != rc.sets {
+                return Some(mismatch(
+                    "survivor_sets",
+                    format!("engine {:?} vs {} {:?}", re.sets, alt.name(), rc.sets),
+                ));
+            }
+            if re.sum != rc.sum {
+                return Some(mismatch(
+                    "sum",
+                    format!("engine {:?} vs {} {:?}", re.sum, alt.name(), rc.sum),
+                ));
+            }
+            if !re.stats.logical_eq(&rc.stats) {
+                return Some(mismatch(
+                    "net_stats",
+                    format!("engine {:?} vs {} {:?}", re.stats, alt.name(), rc.stats),
+                ));
+            }
+        }
+    }
+    None
+}
+
 /// Crash-recovery differential: every round of the scenario, killed at
 /// every [`crate::sim::crash::CrashPoint`], must finish — on the
 /// journal-recovered server — bit-identically to the uninterrupted engine
@@ -329,6 +410,23 @@ mod tests {
             }
             // every candidate must still compile and run end to end
             assert!(cand.compile().len() == cand.rounds);
+        }
+    }
+
+    #[test]
+    fn warm_session_scenarios_match_across_executors() {
+        use super::super::session::SessionScenario;
+        // one steady-state per sparse family plus a storm: warm phase-0
+        // resumes, union coordinate maps and re-key deltas must replay
+        // bit-identically through the event loop and the real wire
+        for sc in [
+            SessionScenario::steady_state(CodecSpec::Dense, 2, 0xD1FF),
+            SessionScenario::steady_state(CodecSpec::TopK { frac: 0.25 }, 2, 0xD1FF),
+            SessionScenario::churn_storm(CodecSpec::RandK { frac: 0.25 }, 4, 0xD1FF),
+        ] {
+            if let Some(m) = diff_session_scenario(&sc) {
+                panic!("{}: {:?}", sc.name, m);
+            }
         }
     }
 

@@ -20,7 +20,12 @@
 //!   that minimizes failures to a reportable seed;
 //! * [`crash`] — kills a journaled server at every phase boundary
 //!   ([`crash::CrashPoint`]) and requires the journal-recovered server to
-//!   finish the round bit-identically to the uninterrupted engine.
+//!   finish the round bit-identically to the uninterrupted engine;
+//! * [`session`] — cross-round *warm* campaigns over one established
+//!   [`crate::protocol::session::Session`] (steady-state and churn-storm
+//!   attendance axes), measuring setup amortization and re-key traffic,
+//!   with [`differential::diff_session_scenario`] extending the
+//!   bit-identical guarantee to warm rounds.
 //!
 //! Every future scale or performance PR validates against this substrate:
 //! change an executor, run the differential; add a churn regime, add a
@@ -31,6 +36,7 @@ pub mod churn;
 pub mod crash;
 pub mod differential;
 pub mod scenario;
+pub mod session;
 
 pub use campaign::{
     resume_campaign, run_campaign, run_plan, CampaignReport, Executor, RoundRecord,
@@ -38,10 +44,13 @@ pub use campaign::{
 pub use crash::{diff_crash_round, run_round_crashy, CrashPoint};
 pub use churn::ChurnModel;
 pub use differential::{
-    diff_crash_scenario, diff_scenario, run_differential, shrink, DifferentialReport, Failure,
-    Mismatch,
+    diff_crash_scenario, diff_scenario, diff_session_scenario, run_differential, shrink,
+    DifferentialReport, Failure, Mismatch,
 };
 pub use scenario::{
     random_scenario, AdversarySpec, CodecSpec, RoundPlan, Scenario, ThresholdRule,
     TopologySchedule,
+};
+pub use session::{
+    run_session_campaign, Attendance, SessionReport, SessionRoundRecord, SessionScenario,
 };

@@ -52,12 +52,14 @@ const MT_BUNDLE: u8 = 0x01;
 const MT_DELIVERY: u8 = 0x02;
 const MT_ANNOUNCE: u8 = 0x03;
 const MT_FINISH: u8 = 0x04;
+const MT_WARM_PLAN: u8 = 0x05;
 const MT_ADV: u8 = 0x10;
 const MT_SHARES: u8 = 0x11;
 const MT_MASKED: u8 = 0x12;
 const MT_UNMASK: u8 = 0x13;
 const MT_DROPPED: u8 = 0x14;
 const MT_FAILED: u8 = 0x15;
+const MT_WARM: u8 = 0x16;
 
 /// Everything that can go wrong decoding a frame. Decoders return these;
 /// they never panic on input bytes.
@@ -229,6 +231,19 @@ pub fn encode_down(round: u32, down: &Down) -> Vec<u8> {
             }
             frame(MT_ANNOUNCE, round, &p)
         }
+        Down::WarmPlan(w) => {
+            let mut p = Vec::with_capacity(12 + w.alive_bitmap.len() + w.keys.len() * 72);
+            put_id(&mut p, w.to);
+            put_u32(&mut p, w.alive_bitmap.len() as u32);
+            p.extend_from_slice(&w.alive_bitmap);
+            put_u32(&mut p, w.keys.len() as u32);
+            for (id, c_pk, s_pk) in &w.keys {
+                put_id(&mut p, *id);
+                p.extend_from_slice(c_pk);
+                p.extend_from_slice(s_pk);
+            }
+            frame(MT_WARM_PLAN, round, &p)
+        }
         Down::Finish => frame(MT_FINISH, round, &[]),
     }
 }
@@ -286,6 +301,28 @@ pub fn encode_up(round: u32, up: &Up) -> Vec<u8> {
             put_id(&mut p, *id);
             p.push(*step);
             frame(MT_DROPPED, round, &p)
+        }
+        Up::Warm(w) => {
+            // payload: id | flags (bit0 = support, bit1 = rekey) | parts
+            let mut p = Vec::with_capacity(
+                5 + w.support.as_ref().map_or(0, |s| 4 + s.len() * 4)
+                    + if w.rekey.is_some() { 64 } else { 0 },
+            );
+            put_id(&mut p, w.id);
+            let flags =
+                w.support.is_some() as u8 | ((w.rekey.is_some() as u8) << 1);
+            p.push(flags);
+            if let Some(support) = &w.support {
+                put_u32(&mut p, support.len() as u32);
+                for &i in support {
+                    put_u32(&mut p, i);
+                }
+            }
+            if let Some((c_pk, s_pk)) = &w.rekey {
+                p.extend_from_slice(c_pk);
+                p.extend_from_slice(s_pk);
+            }
+            frame(MT_WARM, round, &p)
         }
         Up::Failed(id, step, msg) => {
             // diagnostics only: cap at the u16 length field on a char
@@ -348,6 +385,26 @@ pub fn decode_down(body: &[u8]) -> Result<(u32, Down), WireError> {
                 v3.push(r.client_id("announce id")?);
             }
             Down::Announce(Arc::new(SurvivorAnnounce { v3 }))
+        }
+        MT_WARM_PLAN => {
+            let to = r.client_id("warm-plan recipient")?;
+            let bm_len = r.u32("warm-plan bitmap length")? as usize;
+            let alive_bitmap = r.take(bm_len, "warm-plan bitmap")?.to_vec();
+            let count = r.u32("warm-plan key count")? as usize;
+            let need = count
+                .checked_mul(4 + 2 * A_K)
+                .ok_or(WireError::BadValue("warm-plan key count"))?;
+            if r.remaining() < need {
+                return Err(WireError::Truncated("warm-plan keys"));
+            }
+            let mut keys = Vec::with_capacity(count);
+            for _ in 0..count {
+                let id = r.client_id("warm-plan key id")?;
+                let c_pk: [u8; 32] = r.take(A_K, "c_pk")?.try_into().unwrap();
+                let s_pk: [u8; 32] = r.take(A_K, "s_pk")?.try_into().unwrap();
+                keys.push((id, c_pk, s_pk));
+            }
+            Down::WarmPlan(WarmPlan { to, alive_bitmap, keys })
         }
         MT_FINISH => Down::Finish,
         other => return Err(WireError::BadMsgType(other)),
@@ -427,6 +484,38 @@ pub fn decode_up(body: &[u8], plan: &Arc<IndexPlan>) -> Result<(u32, Up), WireEr
                 shares.push((owner, kind, read_share(&mut r)?));
             }
             Up::Unmask(UnmaskShares { from, shares })
+        }
+        MT_WARM => {
+            let id = r.client_id("warm id")?;
+            let flags = r.u8("warm flags")?;
+            if flags & !0b11 != 0 {
+                return Err(WireError::BadValue("warm flags"));
+            }
+            let support = if flags & 1 != 0 {
+                let count = r.u32("warm support count")? as usize;
+                let need = count.checked_mul(4).ok_or(WireError::BadValue("warm support count"))?;
+                if r.remaining() < need {
+                    return Err(WireError::Truncated("warm support ids"));
+                }
+                let mut support = Vec::with_capacity(count);
+                for _ in 0..count {
+                    support.push(r.u32("warm support id")?);
+                }
+                if !support.windows(2).all(|w| w[0] < w[1]) {
+                    return Err(WireError::BadValue("warm support order"));
+                }
+                Some(support)
+            } else {
+                None
+            };
+            let rekey = if flags & 2 != 0 {
+                let c_pk: [u8; 32] = r.take(A_K, "warm c_pk")?.try_into().unwrap();
+                let s_pk: [u8; 32] = r.take(A_K, "warm s_pk")?.try_into().unwrap();
+                Some((c_pk, s_pk))
+            } else {
+                None
+            };
+            Up::Warm(WarmResume { id, support, rekey })
         }
         MT_DROPPED => {
             let id = r.client_id("dropped id")?;
@@ -576,6 +665,13 @@ mod tests {
             Up::Dropped(11, 2),
             Up::Failed(12, 1, "secure withdrawal: neighborhood too small".to_string()),
             Up::Failed(13, 0, String::new()),
+            Up::Warm(WarmResume { id: 8, support: None, rekey: None }),
+            Up::Warm(WarmResume { id: 9, support: Some(vec![0, 3, 17]), rekey: None }),
+            Up::Warm(WarmResume {
+                id: 10,
+                support: Some(vec![]),
+                rekey: Some(([5; 32], [6; 32])),
+            }),
         ]
     }
 
@@ -592,6 +688,12 @@ mod tests {
             Down::Delivery(ShareDelivery { to: 3, shares: vec![es(0, 3), es(1, 3)] }),
             Down::Announce(Arc::new(SurvivorAnnounce { v3: vec![0, 2, 5, 9] })),
             Down::Announce(Arc::new(SurvivorAnnounce { v3: vec![] })),
+            Down::WarmPlan(WarmPlan {
+                to: 4,
+                alive_bitmap: vec![0b1011_0110, 0b0000_0001],
+                keys: vec![(2, [8; 32], [9; 32])],
+            }),
+            Down::WarmPlan(WarmPlan { to: 0, alive_bitmap: vec![], keys: vec![] }),
             Down::Finish,
         ]
     }
@@ -788,6 +890,21 @@ mod tests {
         let mut huge = body;
         huge[HEADER_BYTES + 4] = 65;
         assert_eq!(decode_up(&huge, &plan), Err(WireError::BadValue("masked bit width")));
+    }
+
+    #[test]
+    fn warm_support_must_be_strictly_ascending() {
+        let plan = IndexPlan::identity(4);
+        let up = Up::Warm(WarmResume { id: 1, support: Some(vec![2, 2]), rekey: None });
+        // hand-encode the out-of-order support (encode_up would emit it too;
+        // the decoder is the gate)
+        let body = encode_up(0, &up)[LEN_BYTES..].to_vec();
+        assert_eq!(decode_up(&body, &plan), Err(WireError::BadValue("warm support order")));
+        // unknown flag bits are rejected
+        let good = encode_up(0, &Up::Warm(WarmResume { id: 1, support: None, rekey: None }));
+        let mut bad = good[LEN_BYTES..].to_vec();
+        bad[HEADER_BYTES + 4] = 0b100;
+        assert_eq!(decode_up(&bad, &plan), Err(WireError::BadValue("warm flags")));
     }
 
     #[test]

@@ -13,7 +13,7 @@
 //!    engine/event-loop mismatches.
 
 use ccesa::codec::{Codec, IndexPlan};
-use ccesa::coordinator::run_round_event_loop;
+use ccesa::coordinator::{RoundOptions, RoundRunner};
 use ccesa::protocol::dropout::DropoutModel;
 use ccesa::protocol::engine::run_round;
 use ccesa::protocol::{ProtocolConfig, Topology};
@@ -116,7 +116,8 @@ fn sparse_round_trip_survives_dropout_across_seeds() {
                 ..base(n, 3, dim, Topology::ErdosRenyi { p: 0.85 }, 7000 + seed)
             };
             let m = models(n, dim, seed);
-            let (engine, looped) = (run_round(&cfg, &m), run_round_event_loop(&cfg, &m));
+            let runner = RoundRunner::new(RoundOptions::default());
+            let (engine, looped) = (run_round(&cfg, &m), runner.run(&cfg, &m));
             match (engine, looped) {
                 (Ok(e), Ok(l)) => {
                     assert_eq!(e.sum, l.sum, "seed={seed} {codec:?}");

@@ -9,7 +9,7 @@
 //! `par::threads()`.
 
 use ccesa::codec::Codec;
-use ccesa::coordinator::{run_round_event_loop, run_round_event_loop_with, CoordRoundResult};
+use ccesa::coordinator::{CoordRoundResult, RoundOptions, RoundRunner};
 use ccesa::protocol::dropout::DropoutModel;
 use ccesa::protocol::engine::run_round;
 use ccesa::protocol::{ProtocolConfig, Topology};
@@ -33,7 +33,17 @@ fn assert_equivalent(cfg: &ProtocolConfig, m: &[Vec<u64>], label: &str) {
         assert_eq!(r.sum, sync.sum, "{label}/{name}: sum");
         assert_eq!(r.stats, sync.stats, "{label}/{name}: NetStats");
     };
-    check("event-loop", run_round_event_loop(cfg, m).unwrap());
+    check("event-loop", RoundRunner::new(RoundOptions::default()).run(cfg, m).unwrap());
+}
+
+/// Event-loop round with an explicit worker count, returning telemetry.
+fn event_loop_with(
+    cfg: &ProtocolConfig,
+    m: &[Vec<u64>],
+    workers: usize,
+) -> anyhow::Result<(CoordRoundResult, ccesa::coordinator::LoopTelemetry)> {
+    let opts = RoundOptions::builder().workers(workers).build()?;
+    RoundRunner::new(opts).run_with_telemetry(cfg, m)
 }
 
 #[test]
@@ -142,9 +152,9 @@ fn event_loop_rerun_is_bit_identical_across_worker_counts() {
         ..base(n, 4, dim, Topology::Complete, 3005)
     };
     let m = models(n, dim, 15);
-    let (a, _) = run_round_event_loop_with(&cfg, &m, 1).unwrap();
+    let (a, _) = event_loop_with(&cfg, &m, 1).unwrap();
     for workers in [2usize, 3, 8] {
-        let (b, tel) = run_round_event_loop_with(&cfg, &m, workers).unwrap();
+        let (b, tel) = event_loop_with(&cfg, &m, workers).unwrap();
         assert_eq!(a.sum, b.sum, "workers={workers}");
         assert_eq!(a.sets, b.sets, "workers={workers}");
         assert_eq!(a.stats, b.stats, "workers={workers}");
@@ -166,7 +176,8 @@ fn both_shapes_abort_identically() {
     };
     let m = models(n, 6, 16);
     assert!(run_round(&cfg, &m).is_err(), "engine must abort");
-    assert!(run_round_event_loop(&cfg, &m).is_err(), "event loop must abort");
+    let runner = RoundRunner::new(RoundOptions::default());
+    assert!(runner.run(&cfg, &m).is_err(), "event loop must abort");
 }
 
 #[test]
@@ -206,7 +217,7 @@ fn event_loop_n10k_single_round_smoke() {
     let cfg = base(n, 3, dim, Topology::Harary { k: 6 }, 41);
     let m = models(n, dim, 42);
     let workers = ccesa::par::threads();
-    let (r, tel) = run_round_event_loop_with(&cfg, &m, workers).unwrap();
+    let (r, tel) = event_loop_with(&cfg, &m, workers).unwrap();
     assert!(r.reliable);
     assert_eq!(r.sets.v4.len(), n);
     assert_eq!(r.sum.unwrap(), true_sum_all(&m, dim));
@@ -230,7 +241,7 @@ fn event_loop_n100k_round_completes_with_bounded_threads() {
     let cfg = base(n, 3, dim, Topology::Harary { k: 6 }, 43);
     let m = models(n, dim, 44);
     let workers = ccesa::par::threads();
-    let (r, tel) = run_round_event_loop_with(&cfg, &m, workers).unwrap();
+    let (r, tel) = event_loop_with(&cfg, &m, workers).unwrap();
     assert!(r.reliable);
     assert_eq!(r.sets.v4.len(), n);
     assert_eq!(r.sum.unwrap(), true_sum_all(&m, dim));
@@ -261,7 +272,7 @@ fn event_loop_n100k_randk_round_completes_with_bounded_threads() {
     };
     let m = models(n, dim, 46);
     let workers = ccesa::par::threads();
-    let (r, tel) = run_round_event_loop_with(&cfg, &m, workers).unwrap();
+    let (r, tel) = event_loop_with(&cfg, &m, workers).unwrap();
     assert!(r.reliable);
     assert_eq!(r.sets.v4.len(), n);
     // projected true sum: dense sum restricted to the round's support

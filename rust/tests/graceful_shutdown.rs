@@ -6,9 +6,9 @@
 //! process-global: triggering it next to other in-flight wire tests would
 //! interrupt *their* servers too.
 
-use ccesa::coordinator::derive_round_setup;
+use ccesa::coordinator::{derive_round_setup, Executor, RoundOptions};
 use ccesa::journal::{self, Journal};
-use ccesa::net::socket::{self, ServeOptions, INTERRUPTED};
+use ccesa::net::socket::{self, INTERRUPTED};
 use ccesa::protocol::Topology;
 use ccesa::util::rng::Rng;
 use ccesa::util::shutdown;
@@ -45,9 +45,14 @@ fn shutdown_request_interrupts_the_server_with_the_named_resumable_error() {
     // must notice the flag instead of blocking out its whole timeout
     shutdown::trigger();
     let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
-    let opts = ServeOptions::new().timeout(Duration::from_secs(30)).journal(dir.clone());
-    let err = socket::serve_with(&listener, &cfg, setup.plan, setup.graph, round, &opts)
-        .unwrap_err();
+    let opts = RoundOptions::builder()
+        .executor(Executor::Wire)
+        .timeout(Duration::from_secs(30))
+        .journal(dir.clone())
+        .build()
+        .unwrap();
+    let err =
+        socket::serve(&listener, &cfg, setup.plan, setup.graph, round, &opts).unwrap_err();
     shutdown::reset();
     assert!(
         err.to_string().contains(INTERRUPTED),

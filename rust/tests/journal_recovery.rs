@@ -16,9 +16,9 @@
 //!    the finished round must match the engine, including at n = 1000.
 
 use ccesa::codec::Codec;
-use ccesa::coordinator::{run_round_event_loop_journaled, derive_round_setup};
+use ccesa::coordinator::{derive_round_setup, Executor, RoundOptions, RoundRunner, StopAfter};
 use ccesa::journal::{self, Journal, JournalError, LogWriter, PREFIX_BYTES};
-use ccesa::net::socket::{self, ServeOptions, StopAfter, INTERRUPTED};
+use ccesa::net::socket::{self, INTERRUPTED};
 use ccesa::protocol::dropout::DropoutModel;
 use ccesa::protocol::engine::run_round;
 use ccesa::protocol::{ProtocolConfig, Topology};
@@ -53,7 +53,8 @@ fn finished_journal(tag: &str) -> (PathBuf, PathBuf, u32, ccesa::coordinator::Co
     let cfg = base(n, 3, dim, Topology::Complete, 0x1AB);
     let m = models(n, dim, 9);
     let dir = tmp_dir(tag);
-    let r = run_round_event_loop_journaled(&cfg, &m, &dir).unwrap();
+    let opts = RoundOptions::builder().journal(&dir).build().unwrap();
+    let r = RoundRunner::new(opts).run(&cfg, &m).unwrap();
     let round = socket::round_tag(cfg.seed);
     let path = Journal::path_for(&dir, round);
     (dir, path, round, r)
@@ -247,10 +248,17 @@ fn wire_crash_restart(
     let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
     let addr_cell = Arc::new(Mutex::new(listener.local_addr().unwrap()));
 
-    let (srv_cfg, plan, graph, jdir) = (cfg.clone(), setup.plan.clone(), setup.graph.clone(), dir.clone());
+    let (srv_cfg, plan, graph, jdir) =
+        (cfg.clone(), setup.plan.clone(), setup.graph.clone(), dir.clone());
     let server = std::thread::spawn(move || {
-        let opts = ServeOptions::new().timeout(timeout).journal(jdir).stop_after(point);
-        socket::serve_with(&listener, &srv_cfg, plan, graph, round, &opts)
+        let opts = RoundOptions::builder()
+            .executor(Executor::Wire)
+            .timeout(timeout)
+            .journal(jdir)
+            .stop_after(point)
+            .build()
+            .expect("wire round options");
+        socket::serve(&listener, &srv_cfg, plan, graph, round, &opts)
     });
 
     let (cli_cfg, cli_models, cell) = (cfg.clone(), m.to_vec(), addr_cell.clone());
@@ -270,7 +278,12 @@ fn wire_crash_restart(
     let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
     *addr_cell.lock().unwrap() = listener.local_addr().unwrap();
     let path = Journal::path_for(&dir, round);
-    let r = socket::serve_resume(&listener, &path, timeout)
+    let resume_opts = RoundOptions::builder()
+        .executor(Executor::Wire)
+        .timeout(timeout)
+        .build()
+        .expect("resume round options");
+    let r = socket::serve_resume(&listener, &path, &resume_opts)
         .unwrap_or_else(|e| panic!("{tag}: resume failed: {e:#}"));
     clients.join().unwrap().unwrap_or_else(|e| panic!("{tag}: clients failed: {e:#}"));
     let _ = std::fs::remove_dir_all(&dir);

@@ -1,0 +1,259 @@
+//! Cross-round session acceptance suite.
+//!
+//! Pins the session layer's deployment contracts from the *outside* (the
+//! public API only):
+//!
+//! 1. **Executor equivalence, warm** — the same session campaign (cold
+//!    establish + ratcheted warm rounds, absences included) is bit-identical
+//!    in sums, survivor sets and logical `NetStats` across the serial
+//!    engine, the worker-pool event loop and the loopback wire.
+//! 2. **Re-key under churn** — absences that starve active degrees force
+//!    repair edges whose endpoints re-key, identically on every executor,
+//!    and the re-key traffic is visible in the dedicated counters.
+//! 3. **Mid-session crash recovery** — a journaled warm round truncated
+//!    mid-round recovers to a *warm* server that regenerates the pending
+//!    plans; the full journal replays to the finished round's output.
+//! 4. **Steady-state amortization** (`--ignored`, CI session job) — a
+//!    20-round warm campaign per codec keeps mean warm setup bytes under
+//!    30% of the cold round's.
+
+use ccesa::codec::Codec;
+use ccesa::coordinator::{Executor, RoundOptions};
+use ccesa::journal::{self, Journal, LogWriter};
+use ccesa::net::socket;
+use ccesa::protocol::messages::Down;
+use ccesa::protocol::session::{round_seed, Session};
+use ccesa::protocol::{ProtocolConfig, Topology};
+use ccesa::sim::{run_session_campaign, CodecSpec, SessionScenario};
+use ccesa::util::rng::Rng;
+use std::path::PathBuf;
+
+mod common;
+use common::base;
+
+fn models(n: usize, dim: usize, seed: u64) -> Vec<Vec<u64>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| (0..dim).map(|_| rng.next_u64() & 0xFFFF_FFFF).collect())
+        .collect()
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("ccesa-session-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn opts_for(executor: Executor) -> RoundOptions {
+    RoundOptions::builder().executor(executor).build().unwrap()
+}
+
+/// One session campaign: establish, then `rounds` warm rounds under the
+/// given per-round activity schedule. Returns per-round essentials.
+#[allow(clippy::type_complexity)]
+fn campaign(
+    cfg: &ProtocolConfig,
+    cold_models: &[Vec<u64>],
+    schedule: &[Vec<bool>],
+    executor: Executor,
+) -> (Session, Vec<(Option<Vec<u64>>, Vec<usize>, ccesa::net::NetStats)>) {
+    let (mut session, _) = Session::establish(cfg, cold_models).unwrap();
+    let opts = opts_for(executor);
+    let records = schedule
+        .iter()
+        .enumerate()
+        .map(|(k, active)| {
+            let m = models(cfg.n, cfg.dim, 0xBEEF + k as u64);
+            let r = session
+                .run_round(&m, active, &opts)
+                .unwrap_or_else(|e| panic!("{}: warm round {}: {e:#}", executor.name(), k + 1));
+            (r.sum, r.sets.v3.clone(), r.stats)
+        })
+        .collect();
+    (session, records)
+}
+
+/// The same warm campaign — TopK payloads, one round with absences — must
+/// be bit-identical across all three executors.
+#[test]
+fn warm_rounds_bit_identical_across_all_three_executors() {
+    let n = 10;
+    let dim = 16;
+    let cfg = ProtocolConfig {
+        codec: Codec::TopK { k: 4 },
+        ..base(n, 4, dim, Topology::Complete, 0x5E55)
+    };
+    let cold = models(n, dim, 1);
+    // round 2 loses two members; round 3 has them back
+    let mut absent = vec![true; n];
+    absent[2] = false;
+    absent[7] = false;
+    let schedule = vec![vec![true; n], absent, vec![true; n]];
+
+    let (_, reference) = campaign(&cfg, &cold, &schedule, Executor::Engine);
+    for executor in [Executor::EventLoop, Executor::Wire] {
+        let (_, got) = campaign(&cfg, &cold, &schedule, executor);
+        for (k, ((esum, esets, estats), (gsum, gsets, gstats))) in
+            reference.iter().zip(&got).enumerate()
+        {
+            let name = executor.name();
+            assert_eq!(gsum, esum, "{name}: round {} sum", k + 1);
+            assert_eq!(gsets, esets, "{name}: round {} V3", k + 1);
+            assert!(gstats.logical_eq(estats), "{name}: round {} logical stats", k + 1);
+        }
+    }
+}
+
+/// Absences on a degree-t−1 Harary graph starve active degrees, so the
+/// session must add repair edges, re-key their endpoints, and stay
+/// bit-identical across executors while doing it.
+#[test]
+fn rekey_under_churn_matches_across_executors() {
+    let n = 10;
+    let dim = 8;
+    let cfg = base(n, 5, dim, Topology::Harary { k: 4 }, 0x2E2E);
+    let cold = models(n, dim, 2);
+    // every node has exactly 4 = t−1 neighbors, so two absentees force
+    // repairs among the remaining 8 participants
+    let mut absent = vec![true; n];
+    absent[1] = false;
+    absent[4] = false;
+    let schedule = vec![absent, vec![true; n]];
+
+    let (session, reference) = campaign(&cfg, &cold, &schedule, Executor::Engine);
+    assert!(!session.repair_edges().is_empty(), "absences must force repair edges");
+    for &(_, i, j) in session.repair_edges() {
+        assert!(session.graph().has_edge(i, j));
+    }
+    let (r1_stats, r2_stats) = (&reference[0].2, &reference[1].2);
+    assert!(
+        r1_stats.rekey_up > 0 && r1_stats.rekey_down > 0,
+        "repair endpoints must announce fresh keys in the repairing round"
+    );
+    // steady state again by round 2: no new repairs, so no fresh announcements
+    assert!(r2_stats.rekey_up <= r1_stats.rekey_up);
+
+    for executor in [Executor::EventLoop, Executor::Wire] {
+        let (s2, got) = campaign(&cfg, &cold, &schedule, executor);
+        assert_eq!(
+            s2.repair_edges(),
+            session.repair_edges(),
+            "{}: repair plan diverged",
+            executor.name()
+        );
+        for (k, ((esum, esets, estats), (gsum, gsets, gstats))) in
+            reference.iter().zip(&got).enumerate()
+        {
+            let name = executor.name();
+            assert_eq!(gsum, esum, "{name}: round {} sum", k + 1);
+            assert_eq!(gsets, esets, "{name}: round {} V3", k + 1);
+            assert!(gstats.logical_eq(estats), "{name}: round {} logical stats", k + 1);
+            assert_eq!(gstats.rekey_up, estats.rekey_up, "{name}: round {} rekey_up", k + 1);
+            assert_eq!(
+                gstats.rekey_down,
+                estats.rekey_down,
+                "{name}: round {} rekey_down",
+                k + 1
+            );
+        }
+    }
+}
+
+/// A journaled warm round's log recovers mid-session: the full journal
+/// replays to the finished round, and a torn prefix (setup + phase-0 ups
+/// only) rebuilds a *warm* server that regenerates the pending
+/// [`Down::WarmPlan`]s — the crash window `sim::crash` covers for cold
+/// rounds, here for the session path.
+#[test]
+fn warm_round_journal_recovers_mid_session() {
+    let n = 8;
+    let dim = 6;
+    let cfg = base(n, 3, dim, Topology::Complete, 0x10AD);
+    let cold = models(n, dim, 3);
+    let (mut session, _) = Session::establish(&cfg, &cold).unwrap();
+    let dir = tmp_dir("warm-recover");
+    let opts = RoundOptions::builder().journal(&dir).build().unwrap();
+    let m = models(n, dim, 4);
+    let live = session.run_round(&m, &vec![true; n], &opts).unwrap();
+    assert!(live.reliable);
+
+    let tag = socket::round_tag(round_seed(cfg.seed, 1));
+    let path = Journal::path_for(&dir, tag);
+
+    // the complete journal replays to the finished warm round
+    let rec = journal::recover(&path).unwrap();
+    assert_eq!(rec.round, tag);
+    assert_eq!(rec.next_phase, 4, "full warm journal must recover a finished round");
+    assert!(rec.server.warm().is_some(), "warm journal must rebuild a warm server");
+    assert_eq!(rec.map_bytes, 0, "dense warm rounds carry no coordinate map");
+    let out = rec.output.expect("finished round carries its output");
+    assert_eq!(out.sum, live.sum);
+    assert_eq!(out.sets, live.sets);
+
+    // torn mid-round: keep only the setup record and the phase-0 batch —
+    // byte-for-byte what a crash between phases 0 and 1 leaves behind
+    let records = journal::read_log(&path).unwrap();
+    assert!(records.len() >= 3, "warm journal has setup + 4 phase batches");
+    let torn = dir.join("torn.ccl");
+    let mut w = LogWriter::create(&torn).unwrap();
+    for rec in &records[..2] {
+        w.append(rec.rec_type, rec.round, &rec.payload).unwrap();
+    }
+    drop(w);
+    let rec = journal::recover(&torn).unwrap();
+    assert_eq!(rec.next_phase, 1, "phase 0 applied, phase 1 pending");
+    assert!(rec.server.warm().is_some());
+    assert_eq!(rec.downs.len(), n, "every resumer is owed its warm plan");
+    for (_, down) in &rec.downs {
+        assert!(matches!(down, Down::WarmPlan(_)), "phase-0 downs are warm plans, got {down:?}");
+    }
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// TopK warm journals persist the coordinate-map accounting: recovery
+/// re-charges the same per-recipient map bytes the live round did.
+#[test]
+fn topk_warm_journal_preserves_coordinate_map_accounting() {
+    let n = 6;
+    let dim = 20;
+    let cfg = ProtocolConfig {
+        codec: Codec::TopK { k: 4 },
+        ..base(n, 3, dim, Topology::Complete, 0x70CC)
+    };
+    let cold = models(n, dim, 5);
+    let (mut session, _) = Session::establish(&cfg, &cold).unwrap();
+    let dir = tmp_dir("topk-map");
+    let opts = RoundOptions::builder().journal(&dir).build().unwrap();
+    let live = session.run_round(&models(n, dim, 6), &vec![true; n], &opts).unwrap();
+    assert!(live.reliable);
+    assert!(live.stats.coord_map_bytes > 0, "TopK rounds charge the coordinate map");
+
+    let tag = socket::round_tag(round_seed(cfg.seed, 1));
+    let rec = journal::recover(&Journal::path_for(&dir, tag)).unwrap();
+    assert!(rec.map_bytes > 0, "recovery must re-learn the per-recipient map charge");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// CI session-steady-state job (`--ignored`): a 20-round warm campaign per
+/// codec must keep mean warm setup bytes under 30% of the cold round's —
+/// the PR's amortization acceptance bar, at a realistic population.
+#[test]
+#[ignore = "session campaign (~tens of seconds): run explicitly — CI session-steady-state job"]
+fn session_steady_state_campaign_20_rounds_per_codec() {
+    for codec in [CodecSpec::Dense, CodecSpec::TopK { frac: 0.25 }, CodecSpec::RandK { frac: 0.25 }]
+    {
+        let sc = SessionScenario::steady_state(codec, 20, 0xCAFE);
+        let report = run_session_campaign(&sc, Executor::EventLoop)
+            .unwrap_or_else(|e| panic!("{}: {e:#}", sc.name));
+        assert_eq!(report.aborted_rounds(), 0, "{}", sc.name);
+        let fraction = report.setup_fraction_of_cold();
+        println!("{}", report.one_line());
+        assert!(
+            fraction < 0.30,
+            "{}: steady-state setup bytes at {:.1}% of cold (bound: 30%)",
+            sc.name,
+            fraction * 100.0
+        );
+    }
+}

@@ -1,6 +1,6 @@
 //! The socket wire path against the in-process engine oracle.
 //!
-//! `net::socket::run_round_wire` moves every protocol message over real
+//! `net::socket::run_round_wire_opts` moves every protocol message over real
 //! loopback TCP as `wire` frames; these suites pin it bit-identical to
 //! `protocol::engine` — sums, survivor sets, and the logical (Appendix-C)
 //! byte accounting — at four-digit client counts, under every payload
@@ -8,7 +8,7 @@
 //! duplicates frames.
 
 use ccesa::codec::Codec;
-use ccesa::coordinator::derive_round_setup;
+use ccesa::coordinator::{derive_round_setup, Executor, RoundOptions};
 use ccesa::net::socket;
 use ccesa::protocol::client::ClientSm;
 use ccesa::protocol::dropout::DropoutModel;
@@ -36,7 +36,7 @@ fn models(n: usize, dim: usize, seed: u64) -> Vec<Vec<u64>> {
 /// framing is overhead, never compression).
 fn assert_wire_matches_engine(cfg: &ProtocolConfig, m: &[Vec<u64>], label: &str) {
     let sync = run_round(cfg, m).unwrap();
-    let wired = socket::run_round_wire(cfg, m).unwrap();
+    let wired = socket::run_round_wire_opts(cfg, m, &RoundOptions::default()).unwrap();
     assert_eq!(wired.reliable, sync.reliable, "{label}: reliable");
     assert_eq!(wired.sets, sync.sets, "{label}: survivor sets");
     assert_eq!(wired.sum, sync.sum, "{label}: sum");
@@ -110,9 +110,14 @@ fn duplicated_wire_frames_do_not_disturb_honest_clients() {
     let setup = derive_round_setup(&cfg, &m);
     let (plan, graph) = (setup.plan.clone(), setup.graph.clone());
     let srv_cfg = cfg.clone();
-    let timeout = Duration::from_secs(60);
-    let server =
-        std::thread::spawn(move || socket::serve(&listener, &srv_cfg, plan, graph, round, timeout));
+    let opts = RoundOptions::builder()
+        .executor(Executor::Wire)
+        .timeout(Duration::from_secs(60))
+        .build()
+        .unwrap();
+    let server = std::thread::spawn(move || {
+        socket::serve(&listener, &srv_cfg, plan, graph, round, &opts)
+    });
 
     let mut sms: Vec<ClientSm<'_>> = (0..n)
         .map(|id| {
