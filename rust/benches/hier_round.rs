@@ -1,0 +1,118 @@
+//! Flat vs hierarchical round latency. The two-level topology trades one
+//! extra (small) root round for shard-local graphs whose pairwise setup
+//! cost no longer scales with the full population — the regime the flat
+//! protocol cannot reach at all: a single-level round over n = 10⁶ clients
+//! would need pairwise key agreement across the whole population and never
+//! finishes. The 10⁶ campaign row is therefore hier-only and env-gated
+//! (`CCESA_BENCH_HIER_SCALE=1`, release, run by the scale CI job).
+
+use ccesa::analysis::bounds::{p_star, t_rule};
+use ccesa::bench::{black_box, Bench};
+use ccesa::coordinator::Executor;
+use ccesa::hier::{HierOptions, HierRunner};
+use ccesa::protocol::engine::run_round;
+use ccesa::protocol::{ProtocolConfig, Topology};
+use ccesa::util::rng::Rng;
+
+fn models_for(n: usize, dim: usize, seed: u64) -> Vec<Vec<u64>> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| (0..dim).map(|_| rng.next_u64() & 0xFFFF_FFFF).collect()).collect()
+}
+
+fn hier_cfg(n: usize, shards: usize, dim: usize) -> ProtocolConfig {
+    // p and t are governed by the shard size, not the population: that is
+    // the whole point of the two-level topology.
+    let m = n / shards;
+    let p = p_star(m, 0.0);
+    let t = t_rule(m, p).min(m.saturating_sub(1)).max(1);
+    ProtocolConfig::builder()
+        .clients(n)
+        .threshold(t)
+        .model_dim(dim)
+        .topology(Topology::Hierarchical {
+            shards,
+            intra: Box::new(Topology::ErdosRenyi { p }),
+            root: Box::new(Topology::Complete),
+        })
+        .seed(4)
+        .build()
+        .unwrap()
+}
+
+fn bench_runner() -> HierRunner {
+    // Theorem-1 audits and the plaintext truth pass are sim concerns;
+    // the bench measures the protocol path alone.
+    HierRunner::new(HierOptions {
+        executor: Executor::EventLoop,
+        check_theorem1: false,
+        check_truth: false,
+        ..HierOptions::default()
+    })
+}
+
+fn main() {
+    let mut b = Bench::new("hier_round");
+
+    // Flat-vs-hier at populations both can complete: the same clients, the
+    // same dense payload, one level vs two.
+    for &(n, shards, dim) in &[(200usize, 4usize, 2_000usize), (600, 12, 1_000)] {
+        let models = models_for(n, dim, 9);
+        let p = p_star(n, 0.0);
+        let flat_cfg = ProtocolConfig::builder()
+            .clients(n)
+            .threshold(t_rule(n, p))
+            .model_dim(dim)
+            .topology(Topology::ErdosRenyi { p })
+            .seed(4)
+            .build()
+            .unwrap();
+        b.bench(&format!("flat n={n} dim={dim}"), || {
+            black_box(run_round(&flat_cfg, &models).unwrap());
+        });
+        let cfg = hier_cfg(n, shards, dim);
+        let runner = bench_runner();
+        b.bench(&format!("hier n={n} shards={shards} dim={dim}"), || {
+            let r = runner.run(&cfg, &models).unwrap();
+            assert!(r.reliable, "bench round must be reliable");
+            black_box(r.sum);
+        });
+    }
+
+    // The campaign row: n = 10⁶ clients in 100 shards of 10⁴. Flat CCESA
+    // (let alone complete-graph SA) cannot complete this row — there is no
+    // flat baseline to record. Inside each shard, p* would dictate mean
+    // degree ≈ 0.25·m (about 124M X25519 agreements across the population),
+    // so the scale row fixes a sparse degree-8 graph with t = 3 instead:
+    // ~4M edge agreements total, with the ~1.4% of members whose
+    // neighborhood falls below t simply withdrawing at step 1. Gated: ~GBs
+    // of model state and a minutes-long round; the scale CI job opts in.
+    if std::env::var("CCESA_BENCH_HIER_SCALE").ok().as_deref() == Some("1") {
+        let (n, shards, dim) = (1_000_000usize, 100usize, 64usize);
+        let m = n / shards;
+        eprintln!("generating {n}x{dim} models…");
+        let models = models_for(n, dim, 9);
+        let cfg = ProtocolConfig::builder()
+            .clients(n)
+            .threshold(3)
+            .model_dim(dim)
+            .topology(Topology::Hierarchical {
+                shards,
+                intra: Box::new(Topology::ErdosRenyi { p: 8.0 / (m - 1) as f64 }),
+                root: Box::new(Topology::Complete),
+            })
+            .seed(4)
+            .build()
+            .unwrap();
+        let runner = bench_runner();
+        b.throughput(&format!("hier n=1e6 shards={shards} dim={dim}"), n as f64, "clients/s", || {
+            let r = runner.run(&cfg, &models).unwrap();
+            assert!(r.reliable, "scale round must be reliable");
+            black_box(r.global_v3.len());
+        });
+    } else {
+        eprintln!("skipping n=10^6 hier row: set CCESA_BENCH_HIER_SCALE=1 (scale CI)");
+    }
+
+    b.report();
+    b.write_report_to_sink(concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hier.json"));
+}

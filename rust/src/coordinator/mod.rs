@@ -336,6 +336,9 @@ impl RoundRunner {
 
     /// Run one cold round over `models` under this runner's options.
     pub fn run(&self, cfg: &ProtocolConfig, models: &[Vec<u64>]) -> Result<CoordRoundResult> {
+        if cfg.topology.is_hierarchical() {
+            bail!("hierarchical topology: drive rounds through hier::HierRunner");
+        }
         match self.opts.executor {
             Executor::Engine => {
                 let r = crate::protocol::engine::run_round(cfg, models)?;

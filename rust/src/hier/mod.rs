@@ -1,0 +1,704 @@
+//! Two-level (sharded) secure aggregation — the million-client shape.
+//!
+//! One flat assignment graph over 10⁶ clients is neither the paper's regime
+//! (Choi et al. evaluate n ≤ 500) nor deployable: per-client degree, Shamir
+//! fan-out and the server's reconstruction work all scale with the flat
+//! graph, and the event loop must hold every client lane at once. The
+//! hierarchical topology (cf. "Private Aggregation in Hierarchical Wireless
+//! FL", arXiv 2306.14088) runs the *existing* protocol twice instead of
+//! forking it:
+//!
+//! * **Intra-shard level** — clients are partitioned into contiguous shards
+//!   (`ShardPlan`); each shard runs a full CCESA round on its own `intra`
+//!   graph, `ProtocolConfig` and mask-seed domain (`shard_seed`), producing
+//!   a masked-then-unmasked shard sum over its local V3.
+//! * **Root level** — the shard aggregators become the clients of one more
+//!   round on the `root` graph: aggregator s's "model" is shard s's sum,
+//!   and the same self-mask + pairwise-mask + Shamir machinery merges them
+//!   securely (an aggregator that vanishes after submitting is recovered by
+//!   `reconstruct_batch` exactly like any flat client).
+//!
+//! Both levels go through [`crate::coordinator::RoundRunner`] — engine and
+//! event-loop executors today, wire as a ROADMAP follow-up — so the fused
+//! mask kernels, `derive_round_setup` and batched reconstruction are reused
+//! per level rather than reimplemented.
+//!
+//! **Payload plan.** Sparse codecs are planned **once, globally**, with the
+//! flat engine's exact derivation (`cfg.codec.plan(dim, bits, seed, models)`
+//! — the public round seed / summed-magnitude oracle over *all* models).
+//! Every client model is encoded into that packed domain up front and both
+//! levels run `Codec::Dense` at `dim = plan.len()`; the root sum is
+//! scattered back to dense at the end. Per-shard plans would diverge
+//! (shard-local TopK oracles, shard-seeded RandK draws) and break the
+//! flat-oracle differential; one global plan keeps the support bit-identical
+//! to the flat protocol's.
+//!
+//! **Aggregator failure semantics.** A shard that aborts or reports
+//! unreliable is withheld from the root round (a targeted step-0 drop of
+//! its aggregator): the global sum degrades to *dropping that shard*, never
+//! to including a possibly mask-corrupted partial sum. Scheduled aggregator
+//! failures ([`HierOptions::agg_dropout`]) compose with this — a lost
+//! aggregator at any root step is handled by the root protocol like any
+//! dropped client.
+
+use crate::codec::IndexPlan;
+use crate::coordinator::{CoordRoundResult, Executor, RoundOptions, RoundRunner};
+use crate::net::NetStats;
+use crate::protocol::dropout::DropoutModel;
+use crate::protocol::server::theorem1_predicate;
+use crate::protocol::{ClientId, ProtocolConfig, SurvivorSets, Topology};
+use crate::util::mod_mask;
+use crate::util::rng::Rng;
+use anyhow::{bail, ensure, Result};
+use std::sync::Arc;
+
+/// Salt mixed into per-shard master seeds so each shard is its own
+/// mask-seed domain (no pairwise seed or self-mask can collide across
+/// shards even for adjacent shard indices).
+pub const SHARD_SEED_SALT: u64 = 0x5AA6_6D0A_11A5_EED5;
+
+/// Salt for the root level's master seed.
+pub const ROOT_SEED_SALT: u64 = 0x2007_AA66_E007_1EE7;
+
+/// Master seed for shard `s`'s intra-shard round.
+pub fn shard_seed(master: u64, s: usize) -> u64 {
+    master ^ (s as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ SHARD_SEED_SALT
+}
+
+/// Master seed for the root (aggregator) round.
+pub fn root_seed(master: u64) -> u64 {
+    master ^ ROOT_SEED_SALT
+}
+
+/// Contiguous partition of `0..n` into shards: the first `n % shards`
+/// shards hold one extra client (sizes balanced to ±1, same rule as
+/// `par::partition`). Shard s's local client i is global client
+/// `range(s).0 + i` — the offset `NetStats::merge_at` re-homes by.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardPlan {
+    n: usize,
+    ranges: Vec<(usize, usize)>,
+}
+
+impl ShardPlan {
+    /// Partition `n` clients into exactly `shards` shards.
+    pub fn new(n: usize, shards: usize) -> Result<ShardPlan> {
+        ensure!(shards >= 1, "ShardPlan: shards must be ≥ 1");
+        ensure!(shards <= n, "ShardPlan: shards={shards} must be ≤ n={n}");
+        let ranges = crate::par::partition(n, shards).into_iter().map(|r| (r.start, r.end)).collect();
+        Ok(ShardPlan { n, ranges })
+    }
+
+    /// Partition by *target* shard size: `shards = max(1, n / size)`, so
+    /// actual shard sizes are ≥ `size` (never below the threshold the size
+    /// was picked for).
+    pub fn from_shard_size(n: usize, size: usize) -> Result<ShardPlan> {
+        ensure!(size >= 1, "ShardPlan: shard size must be ≥ 1");
+        ShardPlan::new(n, (n / size).max(1))
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn shards(&self) -> usize {
+        self.ranges.len()
+    }
+
+    /// Global id range `[lo, hi)` of shard `s`.
+    pub fn range(&self, s: usize) -> (usize, usize) {
+        self.ranges[s]
+    }
+
+    pub fn len_of(&self, s: usize) -> usize {
+        let (lo, hi) = self.ranges[s];
+        hi - lo
+    }
+
+    /// Which shard holds global client `id`.
+    pub fn shard_of(&self, id: ClientId) -> usize {
+        assert!(id < self.n, "client {id} out of range (n={})", self.n);
+        self.ranges.partition_point(|&(_, hi)| hi <= id)
+    }
+
+    pub fn min_size(&self) -> usize {
+        (0..self.shards()).map(|s| self.len_of(s)).min().unwrap_or(0)
+    }
+
+    pub fn max_size(&self) -> usize {
+        (0..self.shards()).map(|s| self.len_of(s)).max().unwrap_or(0)
+    }
+}
+
+/// Knobs for one hierarchical round. Plain struct + `Default` (the knobs
+/// are orthogonal; there is no contradictory combination to reject beyond
+/// the executor check in [`HierRunner::run`]).
+#[derive(Debug, Clone)]
+pub struct HierOptions {
+    /// Per-level execution shape: [`Executor::Engine`] or
+    /// [`Executor::EventLoop`]. Wire is a ROADMAP follow-up and rejected.
+    pub executor: Executor,
+    /// How many shards run concurrently; `None` → `par::threads()` capped
+    /// by the shard count.
+    pub shard_parallelism: Option<usize>,
+    /// Event-loop worker budget *inside* each shard round; `None` → 1 when
+    /// shards themselves run in parallel (no nested oversubscription), else
+    /// the event loop's own default sizing.
+    pub workers: Option<usize>,
+    /// Targeted root-level failures: `agg_dropout[step]` lists aggregator
+    /// (= shard) indices that drop at that root step.
+    pub agg_dropout: [Vec<usize>; 4],
+    /// Recompute the Theorem-1 reliability predicate per level graph
+    /// (one extra graph build per level; sim turns this on, benches off).
+    pub check_theorem1: bool,
+    /// Compute the plaintext `true_sum` over the covered clients (the
+    /// differential self-check; off for the 10⁶ campaign rows).
+    pub check_truth: bool,
+}
+
+impl Default for HierOptions {
+    fn default() -> HierOptions {
+        HierOptions {
+            executor: Executor::EventLoop,
+            shard_parallelism: None,
+            workers: None,
+            agg_dropout: std::array::from_fn(|_| Vec::new()),
+            check_theorem1: false,
+            check_truth: true,
+        }
+    }
+}
+
+/// One level's outcome (shard-local or aggregator ids — see the field on
+/// [`HierRoundResult`] carrying it).
+#[derive(Debug, Clone)]
+pub struct LevelReport {
+    /// The level produced a sum (did not abort).
+    pub completed: bool,
+    /// The level's server believed its sum covers exactly its V3.
+    pub reliable: bool,
+    /// Survivor sets in the level's local id space.
+    pub sets: SurvivorSets,
+    /// Theorem-1 predicate on the level's graph ([`HierOptions::check_theorem1`]).
+    pub theorem1_holds: Option<bool>,
+}
+
+/// Per-level traffic roll-up. `intra` is indexed by *global* client id
+/// (each shard's `NetStats` merged at its range offset); `root` by
+/// aggregator (= shard) id — two genuinely different id spaces, kept apart.
+#[derive(Debug, Clone)]
+pub struct HierStats {
+    pub intra: NetStats,
+    pub root: NetStats,
+}
+
+impl HierStats {
+    /// Total logical bytes moved across both levels, both directions.
+    pub fn total_bytes(&self) -> u64 {
+        self.intra.server_total() + self.root.server_total()
+    }
+}
+
+/// Outcome of one hierarchical round.
+#[derive(Debug)]
+pub struct HierRoundResult {
+    /// The dense global sum (root sum scattered through the global plan);
+    /// `None` when the root round aborted.
+    pub sum: Option<Vec<u64>>,
+    /// Root-level reliability (participating shards are reliable by
+    /// construction — unreliable shards are withheld from the root round).
+    pub reliable: bool,
+    /// Global ids of every client whose input the sum covers: the union of
+    /// shard-local V3s over shards whose aggregator made the root V3.
+    pub global_v3: Vec<ClientId>,
+    /// Per-shard outcomes, shard-local ids.
+    pub shard_reports: Vec<LevelReport>,
+    /// Root-level outcome, aggregator ids; `None` for the single-shard
+    /// degenerate case (no root round runs — the round *is* flat).
+    pub root: Option<LevelReport>,
+    pub stats: HierStats,
+    /// Plaintext sum over `global_v3` projected on the plan
+    /// ([`HierOptions::check_truth`]; `None` when off or when `sum` is).
+    pub true_sum: Option<Vec<u64>>,
+    /// The round's global payload plan (flat-engine derivation).
+    pub plan: Arc<IndexPlan>,
+    pub shard_plan: ShardPlan,
+}
+
+/// Drives one hierarchical round: shard rounds (in parallel), then the
+/// root round over the shard sums. The hierarchical analogue of
+/// [`RoundRunner`], and built on it per level.
+pub struct HierRunner {
+    opts: HierOptions,
+}
+
+impl HierRunner {
+    pub fn new(opts: HierOptions) -> HierRunner {
+        HierRunner { opts }
+    }
+
+    pub fn options(&self) -> &HierOptions {
+        &self.opts
+    }
+
+    /// Run one hierarchical round. `cfg.topology` must be
+    /// [`Topology::Hierarchical`] (the builder has already validated shard
+    /// sizes ≥ t+1 and the per-level graph families).
+    pub fn run(&self, cfg: &ProtocolConfig, models: &[Vec<u64>]) -> Result<HierRoundResult> {
+        let Topology::Hierarchical { shards, intra, root } = &cfg.topology else {
+            bail!("HierRunner requires Topology::Hierarchical (got a flat topology)");
+        };
+        if self.opts.executor == Executor::Wire {
+            bail!("wire executor for hierarchical rounds is not implemented yet (ROADMAP)");
+        }
+        ensure!(models.len() == cfg.n, "one model vector per client");
+        for (i, m) in models.iter().enumerate() {
+            ensure!(m.len() == cfg.dim, "client {i} model dimension");
+        }
+        let shard_plan = ShardPlan::new(cfg.n, *shards)?;
+        for (step, drops) in self.opts.agg_dropout.iter().enumerate() {
+            for &a in drops {
+                ensure!(a < shard_plan.shards(), "agg_dropout step {step}: aggregator {a} out of range");
+            }
+        }
+
+        // Single shard: the round *is* the flat protocol — delegate
+        // wholesale (same cfg minus the hierarchical wrapper) so the
+        // degenerate case is bit-identical by construction.
+        if shard_plan.shards() == 1 {
+            return self.run_single_shard(cfg, models, intra);
+        }
+
+        // The global payload plan, with the flat engine's exact derivation
+        // (public round seed / scoring oracle over all n models).
+        let plan = cfg.codec.plan(cfg.dim, cfg.mask_bits, cfg.seed, models);
+
+        // Pre-draw the global dropout schedule once at the hier layer so
+        // both executors shard it identically. (Targeted schedules pass
+        // through untouched — the rng-free replay path sim relies on.)
+        let sched: [Vec<ClientId>; 4] = match &cfg.dropout {
+            DropoutModel::Targeted { per_step } => per_step.clone(),
+            other => other.materialize(cfg.n, &mut Rng::new(cfg.seed).split(0xD20)),
+        };
+
+        // Encode every model into the packed domain once; shards then run
+        // Codec::Dense over contiguous slices. The identity plan borrows
+        // the caller's models — no copy on the Dense path.
+        let packed_storage: Vec<Vec<u64>>;
+        let packed: &[Vec<u64>] = if plan.is_identity() {
+            models
+        } else {
+            packed_storage = models.iter().map(|m| plan.encode(m, cfg.mask_bits)).collect();
+            &packed_storage
+        };
+
+        // Inner round options: when shards run concurrently, each inner
+        // event loop defaults to one worker — shard-level parallelism is
+        // the parallelism (same no-oversubscription rule as campaigns).
+        let shard_par = self
+            .opts
+            .shard_parallelism
+            .unwrap_or_else(crate::par::threads)
+            .clamp(1, shard_plan.shards());
+        let mut inner = RoundOptions::builder().executor(self.opts.executor);
+        if self.opts.executor == Executor::EventLoop {
+            if let Some(w) = self.opts.workers {
+                inner = inner.workers(w);
+            } else if shard_par > 1 {
+                inner = inner.workers(1);
+            }
+        }
+        let inner_opts = inner.build()?;
+
+        let check_t1 = self.opts.check_theorem1;
+        let run_shard = |s: usize| -> Result<(CoordRoundResult, Option<bool>)> {
+            let (lo, hi) = shard_plan.range(s);
+            let local_sched: [Vec<ClientId>; 4] = std::array::from_fn(|k| {
+                sched[k].iter().filter(|&&c| c >= lo && c < hi).map(|&c| c - lo).collect()
+            });
+            let shard_cfg = ProtocolConfig::builder()
+                .clients(hi - lo)
+                .threshold(cfg.t)
+                .model_dim(plan.len())
+                .mask_bits(cfg.mask_bits)
+                .topology((**intra).clone())
+                .dropout(DropoutModel::Targeted { per_step: local_sched })
+                .seed(shard_seed(cfg.seed, s))
+                .build()?;
+            let r = RoundRunner::new(inner_opts.clone()).run(&shard_cfg, &packed[lo..hi])?;
+            let t1 = check_t1
+                .then(|| theorem1_predicate(&shard_cfg.build_graph(), &r.sets, shard_cfg.t));
+            Ok((r, t1))
+        };
+        let shard_runs = crate::par::map_indexed(shard_plan.shards(), shard_par, run_shard);
+        let mut shard_results = Vec::with_capacity(shard_runs.len());
+        for (s, r) in shard_runs.into_iter().enumerate() {
+            shard_results.push(r.map_err(|e| e.context(format!("shard {s}")))?);
+        }
+
+        // Root inputs: a completed, reliable shard contributes its sum; an
+        // aborted or unreliable shard is withheld (targeted step-0 drop of
+        // its aggregator) — the global sum degrades to dropping that shard,
+        // never to folding in a possibly mask-corrupted partial sum.
+        let k = plan.len();
+        let mut agg_models = Vec::with_capacity(shard_plan.shards());
+        let mut root_sched = self.opts.agg_dropout.clone();
+        for (s, (r, _)) in shard_results.iter().enumerate() {
+            match (&r.sum, r.reliable) {
+                (Some(sum), true) => agg_models.push(sum.clone()),
+                _ => {
+                    agg_models.push(vec![0u64; k]);
+                    root_sched[0].push(s);
+                }
+            }
+        }
+        for v in &mut root_sched {
+            v.sort_unstable();
+            v.dedup();
+        }
+
+        let n_root = shard_plan.shards();
+        let root_cfg = ProtocolConfig::builder()
+            .clients(n_root)
+            .threshold(n_root / 2 + 1) // majority of aggregators
+            .model_dim(k)
+            .mask_bits(cfg.mask_bits)
+            .topology((**root).clone())
+            .dropout(DropoutModel::Targeted { per_step: root_sched })
+            .seed(root_seed(cfg.seed))
+            .build()?;
+        let root_opts = RoundOptions::builder().executor(self.opts.executor).build()?;
+        let root_r = RoundRunner::new(root_opts).run(&root_cfg, &agg_models)?;
+        let root_t1 = check_t1
+            .then(|| theorem1_predicate(&root_cfg.build_graph(), &root_r.sets, root_cfg.t));
+
+        // The sum covers exactly the shards whose aggregator made root-V3
+        // (a later root dropout is recovered by reconstruction, like any
+        // flat client); within each, the shard's own V3.
+        let mut global_v3 = Vec::new();
+        for &s in &root_r.sets.v3 {
+            let lo = shard_plan.range(s).0;
+            global_v3.extend(shard_results[s].0.sets.v3.iter().map(|&c| c + lo));
+        }
+
+        let sum = root_r.sum.as_ref().map(|packed_sum| plan.scatter(packed_sum));
+        let reliable = root_r.reliable && sum.is_some();
+        let true_sum = (self.opts.check_truth && sum.is_some())
+            .then(|| truth_over(models, &global_v3, cfg.mask_bits, plan.as_ref()));
+
+        let mut intra = NetStats::new(cfg.n);
+        for (s, (r, _)) in shard_results.iter().enumerate() {
+            intra.merge_at(&r.stats, shard_plan.range(s).0);
+        }
+        let shard_reports = shard_results
+            .into_iter()
+            .map(|(r, t1)| LevelReport {
+                completed: r.sum.is_some(),
+                reliable: r.reliable,
+                sets: r.sets,
+                theorem1_holds: t1,
+            })
+            .collect();
+
+        Ok(HierRoundResult {
+            sum,
+            reliable,
+            global_v3,
+            shard_reports,
+            root: Some(LevelReport {
+                completed: root_r.sum.is_some(),
+                reliable: root_r.reliable,
+                sets: root_r.sets,
+                theorem1_holds: root_t1,
+            }),
+            stats: HierStats { intra, root: root_r.stats },
+            true_sum,
+            plan,
+            shard_plan,
+        })
+    }
+
+    /// `shards == 1`: run the flat protocol under the `intra` family with
+    /// the caller's codec/dropout untouched — bit-identical to a flat round
+    /// by construction.
+    fn run_single_shard(
+        &self,
+        cfg: &ProtocolConfig,
+        models: &[Vec<u64>],
+        intra: &Topology,
+    ) -> Result<HierRoundResult> {
+        let flat_cfg = ProtocolConfig { topology: intra.clone(), ..cfg.clone() };
+        let mut inner = RoundOptions::builder().executor(self.opts.executor);
+        if self.opts.executor == Executor::EventLoop {
+            if let Some(w) = self.opts.workers {
+                inner = inner.workers(w);
+            }
+        }
+        let r = RoundRunner::new(inner.build()?).run(&flat_cfg, models)?;
+        let plan = flat_cfg.codec.plan(flat_cfg.dim, flat_cfg.mask_bits, flat_cfg.seed, models);
+        let t1 = self
+            .opts
+            .check_theorem1
+            .then(|| theorem1_predicate(&flat_cfg.build_graph(), &r.sets, flat_cfg.t));
+        let global_v3 = r.sets.v3.clone();
+        let completed = r.sum.is_some();
+        let reliable = r.reliable && completed;
+        let true_sum = (self.opts.check_truth && completed)
+            .then(|| truth_over(models, &global_v3, cfg.mask_bits, plan.as_ref()));
+        Ok(HierRoundResult {
+            sum: r.sum,
+            reliable,
+            global_v3,
+            shard_reports: vec![LevelReport {
+                completed,
+                reliable: r.reliable,
+                sets: r.sets,
+                theorem1_holds: t1,
+            }],
+            root: None,
+            stats: HierStats { intra: r.stats, root: NetStats::new(0) },
+            true_sum,
+            plan,
+            shard_plan: ShardPlan::new(cfg.n, 1)?,
+        })
+    }
+}
+
+/// Plaintext sum of `models[c]` over `ids` in Z_{2^bits}, projected on the
+/// round's plan support — the oracle the differential harness compares
+/// every hierarchical sum against.
+pub fn truth_over(models: &[Vec<u64>], ids: &[ClientId], bits: u32, plan: &IndexPlan) -> Vec<u64> {
+    let modmask = mod_mask(bits);
+    let dim = plan.dim();
+    let mut truth = vec![0u64; dim];
+    for &c in ids {
+        for (j, w) in models[c].iter().enumerate() {
+            truth[j] = truth[j].wrapping_add(w & modmask) & modmask;
+        }
+    }
+    plan.project(&mut truth);
+    truth
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::Codec;
+
+    fn hier_cfg(n: usize, t: usize, shards: usize, seed: u64) -> ProtocolConfig {
+        ProtocolConfig::builder()
+            .clients(n)
+            .threshold(t)
+            .model_dim(8)
+            .topology(Topology::Hierarchical {
+                shards,
+                intra: Box::new(Topology::Complete),
+                root: Box::new(Topology::Complete),
+            })
+            .seed(seed)
+            .build()
+            .unwrap()
+    }
+
+    fn models(n: usize, dim: usize, seed: u64) -> Vec<Vec<u64>> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| (0..dim).map(|_| rng.next_u64() & 0xFFFF_FFFF).collect()).collect()
+    }
+
+    #[test]
+    fn shard_plan_partitions_with_remainder() {
+        let p = ShardPlan::new(10, 3).unwrap();
+        assert_eq!(p.shards(), 3);
+        assert_eq!((p.range(0), p.range(1), p.range(2)), ((0, 4), (4, 7), (7, 10)));
+        assert_eq!((p.min_size(), p.max_size()), (3, 4));
+        for id in 0..10 {
+            let s = p.shard_of(id);
+            let (lo, hi) = p.range(s);
+            assert!(id >= lo && id < hi, "id={id} s={s}");
+        }
+        assert!(ShardPlan::new(4, 0).is_err());
+        assert!(ShardPlan::new(4, 5).is_err());
+        // target-size construction keeps sizes ≥ the target
+        let q = ShardPlan::from_shard_size(10, 4).unwrap();
+        assert_eq!(q.shards(), 2);
+        assert_eq!(q.min_size(), 5);
+    }
+
+    #[test]
+    fn level_seeds_are_distinct_domains() {
+        let master = 42;
+        let mut seen = std::collections::BTreeSet::new();
+        seen.insert(master);
+        seen.insert(root_seed(master));
+        for s in 0..100 {
+            seen.insert(shard_seed(master, s));
+        }
+        assert_eq!(seen.len(), 102, "all level seeds must be pairwise distinct");
+    }
+
+    #[test]
+    fn builder_validates_hierarchical_bounds() {
+        let hier = |shards| Topology::Hierarchical {
+            shards,
+            intra: Box::new(Topology::Complete),
+            root: Box::new(Topology::Complete),
+        };
+        let base = |t| ProtocolConfig::builder().clients(12).threshold(t).model_dim(4);
+        assert!(base(3).topology(hier(3)).build().is_ok());
+        // shard size 12/4 = 3 < t+1 = 4 → rejected at build time
+        assert!(base(3).topology(hier(4)).build().is_err());
+        assert!(base(3).topology(hier(0)).build().is_err());
+        assert!(base(1).topology(hier(13)).build().is_err());
+        // nested hierarchy rejected
+        assert!(base(2)
+            .topology(Topology::Hierarchical {
+                shards: 2,
+                intra: Box::new(hier(2)),
+                root: Box::new(Topology::Complete),
+            })
+            .build()
+            .is_err());
+        // root family validated against the shard count
+        assert!(base(2)
+            .topology(Topology::Hierarchical {
+                shards: 2,
+                intra: Box::new(Topology::Complete),
+                root: Box::new(Topology::Harary { k: 2 }),
+            })
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn flat_drivers_reject_hierarchical_configs() {
+        let cfg = hier_cfg(12, 3, 3, 7);
+        let ms = models(12, 8, 7);
+        let err = crate::protocol::engine::run_round(&cfg, &ms).unwrap_err();
+        assert!(err.to_string().contains("hier"), "{err}");
+        let runner = RoundRunner::new(RoundOptions::default());
+        assert!(runner.run(&cfg, &ms).is_err());
+    }
+
+    #[test]
+    fn healthy_round_sums_exactly() {
+        let cfg = hier_cfg(13, 3, 3, 11);
+        let ms = models(13, 8, 11);
+        let r = HierRunner::new(HierOptions {
+            executor: Executor::Engine,
+            check_theorem1: true,
+            ..HierOptions::default()
+        })
+        .run(&cfg, &ms)
+        .unwrap();
+        assert!(r.reliable);
+        assert_eq!(r.global_v3, (0..13).collect::<Vec<_>>());
+        assert_eq!(r.sum, r.true_sum, "secure sum must equal the plaintext truth");
+        assert_eq!(r.shard_reports.len(), 3);
+        assert!(r.shard_reports.iter().all(|s| s.completed && s.reliable));
+        let root = r.root.as_ref().unwrap();
+        assert_eq!(root.sets.v3, vec![0, 1, 2]);
+        assert_eq!(root.theorem1_holds, Some(true));
+        // per-level stats: every global client was charged intra traffic,
+        // every aggregator root traffic
+        assert!(r.stats.intra.client_up.iter().all(|&b| b > 0));
+        assert_eq!(r.stats.root.client_up.len(), 3);
+        assert!(r.stats.total_bytes() > 0);
+    }
+
+    #[test]
+    fn engine_and_event_loop_agree_bit_for_bit() {
+        for codec in [Codec::Dense, Codec::TopK { k: 3 }, Codec::RandK { k: 4 }] {
+            let cfg = ProtocolConfig::builder()
+                .clients(14)
+                .threshold(2)
+                .model_dim(8)
+                .topology(Topology::Hierarchical {
+                    shards: 4,
+                    intra: Box::new(Topology::Complete),
+                    root: Box::new(Topology::Complete),
+                })
+                .codec(codec.clone())
+                .dropout(DropoutModel::Targeted {
+                    per_step: [vec![1], vec![], vec![7], vec![12]],
+                })
+                .seed(23)
+                .build()
+                .unwrap();
+            let ms = models(14, 8, 23);
+            let run = |ex| {
+                HierRunner::new(HierOptions { executor: ex, ..HierOptions::default() })
+                    .run(&cfg, &ms)
+                    .unwrap()
+            };
+            let a = run(Executor::Engine);
+            let b = run(Executor::EventLoop);
+            assert_eq!(a.sum, b.sum, "{codec:?}");
+            assert_eq!(a.global_v3, b.global_v3, "{codec:?}");
+            assert_eq!(a.reliable, b.reliable, "{codec:?}");
+            assert!(a.stats.intra.logical_eq(&b.stats.intra), "{codec:?}");
+            assert!(a.stats.root.logical_eq(&b.stats.root), "{codec:?}");
+            assert_eq!(a.sum, a.true_sum, "{codec:?}");
+        }
+    }
+
+    #[test]
+    fn lost_aggregator_drops_one_shard_only() {
+        let cfg = hier_cfg(15, 3, 3, 31);
+        let ms = models(15, 8, 31);
+        // aggregator 1 never shows up at the root level
+        let opts = HierOptions {
+            executor: Executor::Engine,
+            agg_dropout: [vec![1], vec![], vec![], vec![]],
+            ..HierOptions::default()
+        };
+        let r = HierRunner::new(opts).run(&cfg, &ms).unwrap();
+        assert!(r.reliable);
+        let (lo, hi) = r.shard_plan.range(1);
+        assert!(r.global_v3.iter().all(|&c| c < lo || c >= hi), "shard 1 must be excluded");
+        assert_eq!(r.global_v3.len(), 15 - (hi - lo));
+        // the sum is the exact truth over the two surviving shards — the
+        // lost aggregator degraded to a dropped shard, nothing corrupted
+        assert_eq!(r.sum, r.true_sum);
+        assert!(r.root.as_ref().unwrap().sets.v3.iter().all(|&a| a != 1));
+    }
+
+    #[test]
+    fn single_shard_degenerates_to_flat_bit_identically() {
+        let cfg = ProtocolConfig::builder()
+            .clients(9)
+            .threshold(3)
+            .model_dim(8)
+            .topology(Topology::Hierarchical {
+                shards: 1,
+                intra: Box::new(Topology::ErdosRenyi { p: 0.9 }),
+                root: Box::new(Topology::Complete),
+            })
+            .dropout(DropoutModel::Targeted { per_step: [vec![], vec![2], vec![], vec![5]] })
+            .seed(77)
+            .build()
+            .unwrap();
+        let ms = models(9, 8, 77);
+        let flat_cfg =
+            ProtocolConfig { topology: Topology::ErdosRenyi { p: 0.9 }, ..cfg.clone() };
+        let flat = crate::protocol::engine::run_round(&flat_cfg, &ms).unwrap();
+        let hier = HierRunner::new(HierOptions {
+            executor: Executor::Engine,
+            ..HierOptions::default()
+        })
+        .run(&cfg, &ms)
+        .unwrap();
+        assert_eq!(hier.sum, flat.sum);
+        assert_eq!(hier.global_v3, flat.sets.v3);
+        assert_eq!(hier.shard_reports[0].sets, flat.sets);
+        assert!(hier.root.is_none());
+        assert!(hier.stats.intra.logical_eq(&flat.stats));
+    }
+
+    #[test]
+    fn truth_over_projects_on_plan_support() {
+        let ms = vec![vec![5u64, 6, 7, 8], vec![1u64, 2, 3, 4]];
+        let plan = IndexPlan::sparse(vec![1, 3], 4);
+        let t = truth_over(&ms, &[0, 1], 32, plan.as_ref());
+        assert_eq!(t, vec![0, 8, 0, 12]);
+    }
+}

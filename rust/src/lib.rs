@@ -23,6 +23,7 @@ pub mod crypto;
 pub mod fl;
 pub mod gf;
 pub mod graph;
+pub mod hier;
 pub mod journal;
 pub mod kernels;
 pub mod masking;

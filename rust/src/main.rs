@@ -7,7 +7,9 @@
 //! ccesa analyze turbo          # §1 Turbo-aggregate comparison
 //! ccesa analyze montecarlo     # empirical P_e vs Theorems 5/6
 //! ccesa round --n 100 --p 0.64 --dim 10000   # one secure-agg round
+//! ccesa round --n 1000 --shards 10 --dim 100 # two-level hierarchical round
 //! ccesa round --session runs/s --rounds 10   # cold round + 10 warm rounds
+//! ccesa topology --n 1000 --shards 10        # planned shard layout + degrees
 //! ccesa fl --config configs/quickstart.json  # config-driven FL run
 //! ccesa kernels                              # kernel-dispatch report (JSON)
 //! ccesa serve --n 1000 --addr 127.0.0.1:7171 # socket round server
@@ -29,6 +31,7 @@ use ccesa::analysis::bounds::{
 use ccesa::analysis::costs::{table1_row, turbo_comparison_ratio};
 use ccesa::analysis::montecarlo::estimate_failure_rates;
 use ccesa::fl::data::{partition_iid, partition_noniid, SyntheticCifar};
+use ccesa::hier::{root_seed, shard_seed, HierOptions, HierRunner, ShardPlan};
 use ccesa::fl::rounds::{run_fl_mlp, Aggregation, FlConfig};
 use ccesa::protocol::dropout::DropoutModel;
 use ccesa::protocol::engine::run_round;
@@ -46,8 +49,8 @@ fn main() -> Result<()> {
     let args = Args::new(
         "ccesa",
         "Communication-Computation Efficient Secure Aggregation (Choi et al. 2020)\n\
-         subcommands: analyze {pstar|costs|turbo|montecarlo} | round | fl | kernels \
-         | serve | recover | connect",
+         subcommands: analyze {pstar|costs|turbo|montecarlo} | round | topology | fl \
+         | kernels | serve | recover | connect",
     )
     .flag("n", Some("100"), "number of clients")
     .flag("p", None, "ER connection probability (default: p*(n, qtotal))")
@@ -72,6 +75,17 @@ fn main() -> Result<()> {
          round, then run --rounds journaled warm rounds in it",
     )
     .flag("rounds", Some("5"), "warm rounds to run under `round --session`")
+    .flag(
+        "shards",
+        None,
+        "round|topology: shard count — run a two-level hierarchical round \
+         (CCESA inside each shard, then across shard aggregators)",
+    )
+    .flag(
+        "shard-size",
+        None,
+        "round|topology: target clients per shard (alternative to --shards)",
+    )
     .switch("sa", "use the complete graph (Bonawitz et al. SA)")
     .switch("check", "serve: verify the wire round against the in-process engine")
     .parse();
@@ -80,6 +94,7 @@ fn main() -> Result<()> {
     match sub.first().copied() {
         Some("analyze") => analyze(&args, sub.get(1).copied().unwrap_or("pstar")),
         Some("round") => round(&args),
+        Some("topology") => topology_cmd(&args),
         Some("fl") => fl(&args),
         // kernel-dispatch audit: which GF(2^16)/mask backend this process
         // selected (cpuid + CCESA_KERNEL), as JSON on stdout — CI asserts
@@ -167,8 +182,39 @@ fn parse_codec(spec: &str) -> Result<CodecSpec> {
     }
 }
 
+/// Resolve `--shards` / `--shard-size` into a [`ShardPlan`], or `None` when
+/// neither flag is present (flat round).
+fn shard_plan_from_args(args: &Args, n: usize) -> Result<Option<ShardPlan>> {
+    match (args.get::<usize>("shards"), args.get::<usize>("shard-size")) {
+        (Some(_), Some(_)) => bail!("--shards and --shard-size are mutually exclusive"),
+        (Some(s), None) => Ok(Some(ShardPlan::new(n, s)?)),
+        (None, Some(m)) => Ok(Some(ShardPlan::from_shard_size(n, m)?)),
+        (None, None) => Ok(None),
+    }
+}
+
+/// Per-shard graph parameters shared by `round --shards` and `topology`:
+/// `p` and `t` default from the *minimum* shard size (the builder requires
+/// every shard to hold ≥ t+1 clients, so the smallest shard governs).
+fn shard_graph_params(args: &Args, plan: &ShardPlan) -> (f64, usize, bool) {
+    let qt: f64 = args.req("qtotal");
+    let sa = args.get_bool("sa");
+    // `t_rule`/`p_star` need n ≥ 2; the builder rejects genuinely
+    // undersized shards later with its own ≥ t+1 message.
+    let m = plan.min_size().max(2);
+    let p = if sa { 1.0 } else { args.get::<f64>("p").unwrap_or_else(|| p_star(m, qt)) };
+    let t = args.get::<usize>("t").unwrap_or_else(|| {
+        let t = if sa { m / 2 + 1 } else { t_rule(m, p) };
+        t.min(m.saturating_sub(1)).max(1)
+    });
+    (p, t, sa)
+}
+
 fn round(args: &Args) -> Result<()> {
     let n: usize = args.req("n");
+    if let Some(plan) = shard_plan_from_args(args, n)? {
+        return hier_round(args, plan);
+    }
     let dim: usize = args.req("dim");
     let qt: f64 = args.req("qtotal");
     let sa = args.get_bool("sa");
@@ -221,6 +267,130 @@ fn round(args: &Args) -> Result<()> {
             + r.times.total_ms("server_step2")
             + r.times.total_ms("server_finalize"),
     );
+    Ok(())
+}
+
+/// `ccesa round --shards <s>` / `--shard-size <m>`: one two-level
+/// hierarchical round — CCESA inside every shard, then CCESA across the
+/// shard aggregators — driven by [`HierRunner`].
+fn hier_round(args: &Args, plan: ShardPlan) -> Result<()> {
+    let n = plan.n();
+    let dim: usize = args.req("dim");
+    let qt: f64 = args.req("qtotal");
+    let seed: u64 = args.req("seed");
+    let (p, t, sa) = shard_graph_params(args, &plan);
+    let intra = if sa { Topology::Complete } else { Topology::ErdosRenyi { p } };
+    let codec = parse_codec(&args.req::<String>("codec"))?.resolve(dim);
+    let cfg = ProtocolConfig::builder()
+        .clients(n)
+        .threshold(t)
+        .model_dim(dim)
+        .topology(Topology::Hierarchical {
+            shards: plan.shards(),
+            intra: Box::new(intra),
+            root: Box::new(Topology::Complete),
+        })
+        .dropout(if qt > 0.0 { DropoutModel::iid_from_total(qt) } else { DropoutModel::None })
+        .codec(codec)
+        .seed(seed)
+        .build()?;
+    let mut rng = Rng::new(seed);
+    let models: Vec<Vec<u64>> = (0..n)
+        .map(|_| (0..dim).map(|_| rng.next_u64() & 0xFFFF_FFFF).collect())
+        .collect();
+    let runner = HierRunner::new(HierOptions { check_theorem1: true, ..HierOptions::default() });
+    let r = runner.run(&cfg, &models)?;
+    let shards_ok = r.shard_reports.iter().filter(|s| s.completed && s.reliable).count();
+    let shards_in_root = match &r.root {
+        Some(l) => l.sets.v3.len(),
+        None => usize::from(r.reliable),
+    };
+    let theorem1_all = r
+        .shard_reports
+        .iter()
+        .map(|s| s.theorem1_holds)
+        .chain(r.root.as_ref().map(|l| l.theorem1_holds))
+        .all(|h| h != Some(false));
+    println!(
+        "scheme={} hierarchical n={n} shards={} (sizes {}..={}) t={t} p={:.4} dim={dim} codec={}\n\
+         reliable={} shard rounds ok: {shards_ok}/{} in root V3: {shards_in_root}\n\
+         |global V3|={} coverage={:.1}% theorem1(all levels)={theorem1_all}\n\
+         sum==truth: {}\nbytes: intra {} + root {} = {} total",
+        if sa { "SA" } else { "CCESA" },
+        plan.shards(),
+        plan.min_size(),
+        plan.max_size(),
+        p,
+        cfg.codec.name(),
+        r.reliable,
+        plan.shards(),
+        r.global_v3.len(),
+        r.global_v3.len() as f64 / n as f64 * 100.0,
+        r.sum.is_some() && r.sum == r.true_sum,
+        r.stats.intra.server_total(),
+        r.stats.root.server_total(),
+        r.stats.total_bytes(),
+    );
+    Ok(())
+}
+
+/// `ccesa topology`: print the planned shard layout and the per-level
+/// graphs exactly as a hierarchical round would build them (each shard
+/// graph from its ratcheted shard seed, the root graph from the root seed).
+/// Without `--shards`/`--shard-size` it reports the flat single-level graph.
+fn topology_cmd(args: &Args) -> Result<()> {
+    let n: usize = args.req("n");
+    let seed: u64 = args.req("seed");
+    let plan = match shard_plan_from_args(args, n)? {
+        Some(p) => p,
+        None => ShardPlan::new(n, 1)?,
+    };
+    let (p, t, sa) = shard_graph_params(args, &plan);
+    let intra = if sa { Topology::Complete } else { Topology::ErdosRenyi { p } };
+    println!(
+        "n={n} shards={} sizes {}..={} t={t} intra={} root=Complete",
+        plan.shards(),
+        plan.min_size(),
+        plan.max_size(),
+        if sa { "Complete".to_string() } else { format!("ErdosRenyi(p={p:.4})") },
+    );
+    const SHOWN: usize = 8;
+    for s in 0..plan.shards().min(SHOWN) {
+        let (lo, hi) = plan.range(s);
+        println!("  shard {s}: clients {lo}..{hi} ({} members)", hi - lo);
+    }
+    if plan.shards() > SHOWN {
+        println!("  … {} more shards", plan.shards() - SHOWN);
+    }
+    let (mut dmin, mut dmax, mut dsum, mut disconnected) = (usize::MAX, 0usize, 0.0f64, 0usize);
+    for s in 0..plan.shards() {
+        // the single-shard degenerate case runs as a *flat* round on the
+        // master seed; multi-shard rounds ratchet a seed per shard
+        let level_seed = if plan.shards() == 1 { seed } else { shard_seed(seed, s) };
+        let g = intra.build(plan.len_of(s), &mut Rng::new(level_seed));
+        let (lo, hi) = g.degree_range();
+        dmin = dmin.min(lo);
+        dmax = dmax.max(hi);
+        dsum += g.mean_degree();
+        disconnected += usize::from(!g.is_connected());
+    }
+    println!(
+        "intra-shard graphs: degree min/mean/max = {dmin}/{:.2}/{dmax}, \
+         {disconnected}/{} disconnected",
+        dsum / plan.shards() as f64,
+        plan.shards(),
+    );
+    if plan.shards() > 1 {
+        let g = Topology::Complete.build(plan.shards(), &mut Rng::new(root_seed(seed)));
+        let (lo, hi) = g.degree_range();
+        println!(
+            "root graph over {} aggregators: degree min/mean/max = {lo}/{:.2}/{hi}, \
+             connected={}",
+            plan.shards(),
+            g.mean_degree(),
+            g.is_connected(),
+        );
+    }
     Ok(())
 }
 

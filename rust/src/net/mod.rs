@@ -199,6 +199,38 @@ impl NetStats {
         }
     }
 
+    /// [`NetStats::merge`] with `other`'s per-client traffic re-homed at a
+    /// global-id offset. Hierarchical roll-up: shard s covers the
+    /// contiguous id range `[offset, offset + m)`, so its local client i is
+    /// the global client `offset + i`. Aggregate (per-step / framed /
+    /// payload) counters merge unchanged.
+    pub fn merge_at(&mut self, other: &NetStats, offset: usize) {
+        for s in 0..4 {
+            self.bytes_up[s] += other.bytes_up[s];
+            self.bytes_down[s] += other.bytes_down[s];
+            self.msgs_up[s] += other.msgs_up[s];
+            self.msgs_down[s] += other.msgs_down[s];
+        }
+        self.masked_payload_bytes += other.masked_payload_bytes;
+        self.framed_up += other.framed_up;
+        self.framed_down += other.framed_down;
+        self.coord_map_bytes += other.coord_map_bytes;
+        self.rekey_up += other.rekey_up;
+        self.rekey_down += other.rekey_down;
+        if self.client_up.len() < offset + other.client_up.len() {
+            self.client_up.resize(offset + other.client_up.len(), 0);
+        }
+        if self.client_down.len() < offset + other.client_down.len() {
+            self.client_down.resize(offset + other.client_down.len(), 0);
+        }
+        for (i, u) in other.client_up.iter().enumerate() {
+            self.client_up[offset + i] += u;
+        }
+        for (i, d) in other.client_down.iter().enumerate() {
+            self.client_down[offset + i] += d;
+        }
+    }
+
     /// Equality over the *logical* (Appendix-C) accounting only, ignoring
     /// the framed-byte dimension. The differential harness compares
     /// executors with this: the socket transport must charge bit-identical

@@ -43,6 +43,9 @@ pub struct RoundResult {
 /// Run one full aggregation round over quantized inputs
 /// (`models[i].len() == cfg.dim` for every client i).
 pub fn run_round(cfg: &ProtocolConfig, models: &[Vec<u64>]) -> Result<RoundResult> {
+    if cfg.topology.is_hierarchical() {
+        anyhow::bail!("hierarchical topology: drive rounds through hier::HierRunner");
+    }
     assert_eq!(models.len(), cfg.n, "one model vector per client");
     for (i, m) in models.iter().enumerate() {
         assert_eq!(m.len(), cfg.dim, "client {i} model dimension");

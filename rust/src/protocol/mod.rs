@@ -46,10 +46,20 @@ pub enum Topology {
     Harary { k: usize },
     /// Explicit graph (tests, ablations).
     Custom(Graph),
+    /// Two-level sharded aggregation: clients run the flat protocol inside
+    /// `shards` contiguous shards (each on its own `intra` graph and
+    /// mask-seed domain), then the shard aggregators rerun it over the
+    /// shard sums on the `root` graph. Driven by `crate::hier::HierRunner`;
+    /// the flat engine/coordinator reject it by name.
+    Hierarchical { shards: usize, intra: Box<Topology>, root: Box<Topology> },
 }
 
 impl Topology {
     /// Materialize the assignment graph (deterministic in `rng`).
+    ///
+    /// Panics on [`Topology::Hierarchical`]: a two-level topology has no
+    /// single flat graph — per-level graphs are built by
+    /// `crate::hier::ShardPlan` from the `intra`/`root` families.
     pub fn build(&self, n: usize, rng: &mut Rng) -> Graph {
         match self {
             Topology::Complete => Graph::complete(n),
@@ -59,8 +69,45 @@ impl Topology {
                 assert_eq!(g.n(), n, "custom topology size mismatch");
                 g.clone()
             }
+            Topology::Hierarchical { .. } => {
+                panic!("Topology::Hierarchical has no flat graph; use hier::HierRunner")
+            }
         }
     }
+
+    /// True for the [`Topology::Hierarchical`] arm — the one family the
+    /// flat drivers must refuse (they'd otherwise build a nonsense graph).
+    pub fn is_hierarchical(&self) -> bool {
+        matches!(self, Topology::Hierarchical { .. })
+    }
+}
+
+/// Validate one *flat* topology family against a population of `n` nodes.
+/// Shared by the builder's top-level check and the per-level checks of the
+/// `Hierarchical` arm (`ctx` names the level in error messages).
+fn validate_flat_topology(topology: &Topology, n: usize, ctx: &str) -> Result<()> {
+    match topology {
+        Topology::ErdosRenyi { p } => {
+            if !p.is_finite() || !(0.0..=1.0).contains(p) {
+                bail!("ProtocolConfig: {ctx} Erdős–Rényi p={p} must be in [0, 1]");
+            }
+        }
+        Topology::Harary { k } => {
+            if *k >= n {
+                bail!("ProtocolConfig: {ctx} Harary degree k={k} must be < n={n}");
+            }
+        }
+        Topology::Complete => {}
+        Topology::Custom(g) => {
+            if g.n() != n {
+                bail!("ProtocolConfig: {ctx} custom topology has {} nodes, expected n={n}", g.n());
+            }
+        }
+        Topology::Hierarchical { .. } => {
+            bail!("ProtocolConfig: {ctx} nested Hierarchical topologies are not supported");
+        }
+    }
+    Ok(())
 }
 
 /// Static protocol parameters for one aggregation round.
@@ -229,26 +276,39 @@ impl ProtocolConfigBuilder {
             bail!("ProtocolConfig: mask_bits={mask_bits} must be in 1..=64");
         }
         let topology = self.topology.unwrap_or(Topology::Complete);
-        match &topology {
-            Topology::ErdosRenyi { p } => {
-                if !p.is_finite() || !(0.0..=1.0).contains(p) {
-                    bail!("ProtocolConfig: Erdős–Rényi p={p} must be in [0, 1]");
-                }
+        if let Topology::Hierarchical { shards, intra, root } = &topology {
+            let shards = *shards;
+            if shards == 0 {
+                bail!("ProtocolConfig: hierarchical shards must be ≥ 1");
             }
-            Topology::Harary { k } => {
-                if *k >= n {
-                    bail!("ProtocolConfig: Harary degree k={k} must be < n={n}");
-                }
+            if shards > n {
+                bail!("ProtocolConfig: hierarchical shards={shards} must be ≤ n={n}");
             }
-            Topology::Complete => {}
-            Topology::Custom(g) => {
-                if g.n() != n {
+            // Contiguous partition: the first n % shards shards get one
+            // extra client, so the *smallest* shard holds n / shards. Every
+            // shard runs the flat protocol at threshold t, and a shard that
+            // cannot lose even one client (m ≤ t) would abort on any churn —
+            // reject the footgun at build time.
+            let min_shard = n / shards;
+            if min_shard < t + 1 {
+                bail!(
+                    "ProtocolConfig: hierarchical shard size n/shards = {min_shard} \
+                     must be ≥ t+1 = {} (shrink t or use fewer shards)",
+                    t + 1
+                );
+            }
+            validate_flat_topology(intra, min_shard, "intra-shard")?;
+            if let Topology::Custom(_) = **intra {
+                if n % shards != 0 {
                     bail!(
-                        "ProtocolConfig: custom topology has {} nodes, expected n={n}",
-                        g.n()
+                        "ProtocolConfig: custom intra-shard topology requires uniform \
+                         shard sizes (n={n} is not divisible by shards={shards})"
                     );
                 }
             }
+            validate_flat_topology(root, shards, "root-level")?;
+        } else {
+            validate_flat_topology(&topology, n, "flat")?;
         }
         let codec = self.codec.unwrap_or(Codec::Dense);
         match codec {

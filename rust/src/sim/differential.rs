@@ -203,6 +203,243 @@ pub fn diff_session_scenario(
     None
 }
 
+/// Hierarchical differential: one [`super::hier::HierScenario`] through
+/// three lenses.
+///
+/// 1. **Engine self-check** — the hierarchical engine run's secure sum must
+///    equal the independently computed plaintext truth over `global_v3`
+///    whenever the round is reliable (the hier analogue of
+///    [`diff_scenario`]'s `sum_vs_truth`).
+/// 2. **Executor parity** — the hierarchical event-loop run must match the
+///    hierarchical engine run bit-for-bit: sum, covered clients, per-level
+///    survivor sets, reliability, and logical per-level `NetStats`.
+/// 3. **Flat oracle** — a *flat* engine round over the same population,
+///    master seed (→ identical payload plan), codec and global dropout
+///    schedule on a complete graph. Whenever both rounds complete and
+///    cover exactly the same clients (`flat V3 == hier global_v3`), the two
+///    sums must be equal — hierarchy must not change the answer, only the
+///    topology. (Differing coverage — shard-level withdrawals, dropped
+///    aggregators — legitimately skips the comparison; `run_hier_differential`
+///    counts how often it fired.)
+pub fn diff_hier_scenario(sc: &super::hier::HierScenario) -> Option<Mismatch> {
+    diff_hier_scenario_inner(sc).0
+}
+
+fn diff_hier_scenario_inner(sc: &super::hier::HierScenario) -> (Option<Mismatch>, bool) {
+    use crate::hier::HierRunner;
+    let mismatch = |executor: Executor, field: &'static str, detail: String| Mismatch {
+        scenario: sc.name.clone(),
+        seed: sc.seed,
+        round: 0,
+        executor,
+        field,
+        detail,
+    };
+    let cfg = match sc.config() {
+        Ok(cfg) => cfg,
+        Err(e) => {
+            return (
+                Some(mismatch(Executor::Engine, "config", format!("scenario invalid: {e:#}"))),
+                false,
+            )
+        }
+    };
+    let models = sc.models();
+    let run = |executor: Executor| HierRunner::new(sc.options(executor)).run(&cfg, &models);
+    let e = match run(Executor::Engine) {
+        Ok(r) => r,
+        Err(err) => {
+            return (
+                Some(mismatch(Executor::Engine, "campaign", format!("hier run failed: {err:#}"))),
+                false,
+            )
+        }
+    };
+    if e.reliable && e.sum != e.true_sum {
+        return (
+            Some(mismatch(
+                Executor::Engine,
+                "hier_sum_vs_truth",
+                "hierarchical aggregate != plain sum over global V3".to_string(),
+            )),
+            false,
+        );
+    }
+    let c = match run(Executor::EventLoop) {
+        Ok(r) => r,
+        Err(err) => {
+            return (
+                Some(mismatch(
+                    Executor::EventLoop,
+                    "campaign",
+                    format!("hier run failed: {err:#}"),
+                )),
+                false,
+            )
+        }
+    };
+    let el = Executor::EventLoop;
+    if e.sum.is_none() != c.sum.is_none() {
+        return (
+            Some(mismatch(
+                el,
+                "abort",
+                format!(
+                    "engine completed={}, event-loop completed={}",
+                    e.sum.is_some(),
+                    c.sum.is_some()
+                ),
+            )),
+            false,
+        );
+    }
+    if e.reliable != c.reliable {
+        return (
+            Some(mismatch(
+                el,
+                "reliable",
+                format!("engine reliable={}, event-loop reliable={}", e.reliable, c.reliable),
+            )),
+            false,
+        );
+    }
+    if e.global_v3 != c.global_v3 {
+        return (
+            Some(mismatch(
+                el,
+                "global_v3",
+                format!("engine {:?} vs event-loop {:?}", e.global_v3, c.global_v3),
+            )),
+            false,
+        );
+    }
+    if e.sum != c.sum {
+        return (Some(mismatch(el, "sum", format!("engine {:?} vs event-loop {:?}", e.sum, c.sum))), false);
+    }
+    for (s, (re, rc)) in e.shard_reports.iter().zip(&c.shard_reports).enumerate() {
+        if re.sets != rc.sets {
+            return (
+                Some(mismatch(
+                    el,
+                    "shard_sets",
+                    format!("shard {s}: engine {:?} vs event-loop {:?}", re.sets, rc.sets),
+                )),
+                false,
+            );
+        }
+    }
+    match (&e.root, &c.root) {
+        (Some(re), Some(rc)) if re.sets != rc.sets => {
+            return (
+                Some(mismatch(
+                    el,
+                    "root_sets",
+                    format!("engine {:?} vs event-loop {:?}", re.sets, rc.sets),
+                )),
+                false,
+            )
+        }
+        _ => {}
+    }
+    if !e.stats.intra.logical_eq(&c.stats.intra) || !e.stats.root.logical_eq(&c.stats.root) {
+        return (
+            Some(mismatch(
+                el,
+                "net_stats",
+                "per-level logical NetStats diverged between engine and event loop".to_string(),
+            )),
+            false,
+        );
+    }
+
+    // Flat-engine oracle: same clients, same master seed (hence the same
+    // payload plan), same global dropout — on one complete graph.
+    let flat_cfg = match crate::protocol::ProtocolConfig::builder()
+        .clients(sc.n)
+        .threshold(sc.t)
+        .model_dim(sc.dim)
+        .mask_bits(sc.mask_bits)
+        .topology(Topology::Complete)
+        .codec(sc.codec.resolve(sc.dim))
+        .dropout(crate::protocol::dropout::DropoutModel::Targeted {
+            per_step: match sc.dropout_schedule() {
+                Ok(p) => p,
+                Err(err) => {
+                    return (
+                        Some(mismatch(Executor::Engine, "config", format!("{err:#}"))),
+                        false,
+                    )
+                }
+            },
+        })
+        .seed(sc.seed)
+        .build()
+    {
+        Ok(cfg) => cfg,
+        Err(err) => {
+            return (Some(mismatch(Executor::Engine, "config", format!("oracle config: {err:#}"))), false)
+        }
+    };
+    let flat = match crate::protocol::engine::run_round(&flat_cfg, &models) {
+        Ok(r) => r,
+        Err(err) => {
+            return (
+                Some(mismatch(Executor::Engine, "campaign", format!("flat oracle failed: {err:#}"))),
+                false,
+            )
+        }
+    };
+    let comparable = e.sum.is_some() && flat.sum.is_some() && flat.sets.v3 == e.global_v3;
+    if comparable && e.sum != flat.sum {
+        return (
+            Some(mismatch(
+                Executor::Engine,
+                "flat_oracle_sum",
+                format!(
+                    "hier sum {:?} != flat-engine sum {:?} over identical V3",
+                    e.sum, flat.sum
+                ),
+            )),
+            true,
+        );
+    }
+    (None, comparable)
+}
+
+/// Generate `count` random hierarchical scenarios from `base_seed` and
+/// differential-test each. `oracle_compared` counts the scenarios where the
+/// flat-oracle sum comparison actually fired (both rounds completed with
+/// identical coverage) — callers assert it stays a healthy fraction so the
+/// oracle can't silently rot into vacuous truth.
+pub fn run_hier_differential(base_seed: u64, count: usize) -> HierDifferentialReport {
+    let mut report = HierDifferentialReport::default();
+    for i in 0..count {
+        let sc = super::hier::random_hier_scenario(base_seed.wrapping_add(i as u64));
+        report.scenarios_run += 1;
+        let (mismatch, compared) = diff_hier_scenario_inner(&sc);
+        report.oracle_compared += usize::from(compared);
+        if let Some(m) = mismatch {
+            report.failures.push(m);
+        }
+    }
+    report
+}
+
+/// Outcome of a randomized hierarchical differential run.
+#[derive(Debug, Clone, Default)]
+pub struct HierDifferentialReport {
+    pub scenarios_run: usize,
+    /// Scenarios where the flat-oracle exact-sum comparison fired.
+    pub oracle_compared: usize,
+    pub failures: Vec<Mismatch>,
+}
+
+impl HierDifferentialReport {
+    pub fn ok(&self) -> bool {
+        self.failures.is_empty()
+    }
+}
+
 /// Crash-recovery differential: every round of the scenario, killed at
 /// every [`crate::sim::crash::CrashPoint`], must finish — on the
 /// journal-recovered server — bit-identically to the uninterrupted engine

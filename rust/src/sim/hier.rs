@@ -1,0 +1,447 @@
+//! Hierarchical-round scenarios: the sharded analogues of [`super::scenario`]
+//! and [`super::campaign`].
+//!
+//! A [`HierScenario`] is one declarative hierarchical round: population,
+//! shard count, per-level graph families, payload codec, baseline churn, a
+//! *per-shard churn storm* (one shard's clients drop at a much higher
+//! rate), scheduled aggregator failures, and a cross-level adversary
+//! (colluding clients plus compromised shard aggregators). Like the flat
+//! scenarios, all stochastic churn is pre-drawn from the scenario seed into
+//! an rng-free `Targeted` schedule, so a scenario replays bit-identically
+//! through every executor — the property `diff_hier_scenario`
+//! (`super::differential`) checks, with the flat engine as the sum oracle.
+//!
+//! **Privacy metric.** The flat campaign scores `exposed_honest` from the
+//! eavesdropper transcript; the hierarchical analogue is structural: a
+//! compromised shard aggregator knows its shard's plaintext sum, so an
+//! honest client is *exposed* when it is the only non-colluding member of a
+//! compromised shard's V3 (the colluders subtract their own inputs and
+//! recover the client's update exactly). The Theorem-1 reliability
+//! predicate is checked per level graph and recorded per shard and for the
+//! root round.
+
+use super::scenario::CodecSpec;
+use crate::coordinator::Executor;
+use crate::hier::{HierOptions, HierRoundResult, HierRunner, ShardPlan};
+use crate::protocol::dropout::DropoutModel;
+use crate::protocol::{ClientId, ProtocolConfig, Topology};
+use crate::util::mod_mask;
+use crate::util::rng::Rng;
+use anyhow::{ensure, Result};
+
+/// One declarative hierarchical round.
+#[derive(Debug, Clone)]
+pub struct HierScenario {
+    pub name: String,
+    /// Total clients across all shards.
+    pub n: usize,
+    pub dim: usize,
+    pub mask_bits: u32,
+    /// Shard count (1 = the flat degenerate case).
+    pub shards: usize,
+    /// Intra-shard secret-sharing threshold.
+    pub t: usize,
+    /// Intra-shard graph family (flat families only).
+    pub intra: Topology,
+    /// Root-level graph family over the aggregators.
+    pub root: Topology,
+    pub codec: CodecSpec,
+    /// Baseline i.i.d. per-step drop probability for every client.
+    pub churn_q: f64,
+    /// Per-shard churn storm: `(shard, q)` — that shard's clients drop at
+    /// `q` per step instead of `churn_q`.
+    pub storm: Option<(usize, f64)>,
+    /// Scheduled aggregator failures per root step (shard indices).
+    pub agg_dropout: [Vec<usize>; 4],
+    /// Colluding clients (global ids) — combine with `compromised_aggs`
+    /// for cross-level collusion.
+    pub colluders: Vec<ClientId>,
+    /// Compromised shard aggregators: they learn their shard's sum.
+    pub compromised_aggs: Vec<usize>,
+    pub seed: u64,
+}
+
+impl HierScenario {
+    pub fn shard_plan(&self) -> Result<ShardPlan> {
+        ShardPlan::new(self.n, self.shards)
+    }
+
+    /// Pre-draw the per-step drop schedule (baseline + storm) from the
+    /// scenario seed — the same step-major, client-minor draw order as
+    /// `DropoutModel::materialize`, so it is rng-free data afterwards.
+    pub fn dropout_schedule(&self) -> Result<[Vec<ClientId>; 4]> {
+        let plan = self.shard_plan()?;
+        if let Some((shard, q)) = self.storm {
+            ensure!(shard < plan.shards(), "storm shard {shard} out of range");
+            ensure!((0.0..=1.0).contains(&q), "storm q={q} out of range");
+        }
+        ensure!(
+            (0.0..=1.0).contains(&self.churn_q),
+            "churn_q={} out of range",
+            self.churn_q
+        );
+        let mut rng = Rng::new(self.seed ^ 0xC4021);
+        let mut per_step: [Vec<ClientId>; 4] = std::array::from_fn(|_| Vec::new());
+        for drops in per_step.iter_mut() {
+            for c in 0..self.n {
+                let q = match self.storm {
+                    Some((shard, q)) if plan.shard_of(c) == shard => q,
+                    _ => self.churn_q,
+                };
+                if rng.bernoulli(q) {
+                    drops.push(c);
+                }
+            }
+        }
+        Ok(per_step)
+    }
+
+    /// Compile to a validated hierarchical [`ProtocolConfig`] with the
+    /// pre-drawn `Targeted` schedule.
+    pub fn config(&self) -> Result<ProtocolConfig> {
+        ProtocolConfig::builder()
+            .clients(self.n)
+            .threshold(self.t)
+            .model_dim(self.dim)
+            .mask_bits(self.mask_bits)
+            .topology(Topology::Hierarchical {
+                shards: self.shards,
+                intra: Box::new(self.intra.clone()),
+                root: Box::new(self.root.clone()),
+            })
+            .codec(self.codec.resolve(self.dim))
+            .dropout(DropoutModel::Targeted { per_step: self.dropout_schedule()? })
+            .seed(self.seed)
+            .build()
+    }
+
+    /// Deterministic client inputs: full-entropy words in Z_{2^mask_bits}
+    /// (the flat scenarios' derivation).
+    pub fn models(&self) -> Vec<Vec<u64>> {
+        let modmask = mod_mask(self.mask_bits);
+        let mut rng = Rng::new(self.seed ^ 0x0DE1);
+        (0..self.n)
+            .map(|_| (0..self.dim).map(|_| rng.next_u64() & modmask).collect())
+            .collect()
+    }
+
+    /// Runner options for this scenario under `executor` (Theorem-1 and
+    /// truth checks on — this is the validation path, not the bench path).
+    pub fn options(&self, executor: Executor) -> HierOptions {
+        HierOptions {
+            executor,
+            agg_dropout: self.agg_dropout.clone(),
+            check_theorem1: true,
+            check_truth: true,
+            ..HierOptions::default()
+        }
+    }
+
+    /// Run the scenario once and score it.
+    pub fn run(&self, executor: Executor) -> Result<HierRoundRecord> {
+        let cfg = self.config()?;
+        let models = self.models();
+        let result = HierRunner::new(self.options(executor)).run(&cfg, &models)?;
+        Ok(score(self, result))
+    }
+}
+
+/// One scored hierarchical round.
+#[derive(Debug)]
+pub struct HierRoundRecord {
+    /// The root level produced a sum.
+    pub completed: bool,
+    pub reliable: bool,
+    /// `sum == true_sum` (`None` when the round aborted).
+    pub sum_matches_truth: Option<bool>,
+    /// Shards whose aggregator did not make the root V3 (dropped, aborted
+    /// or withheld-as-unreliable). 0 for the single-shard degenerate.
+    pub shards_dropped: usize,
+    /// Honest clients exposed to the compromised-aggregator adversary
+    /// (global ids): sole non-colluding members of a compromised shard's V3.
+    pub exposed_honest: Vec<ClientId>,
+    /// Every shard's Theorem-1 predicate agreed with its reliability flag.
+    pub shard_theorem1_agrees: bool,
+    /// Root-level Theorem-1 agreement (`None` for single-shard rounds).
+    pub root_theorem1_agrees: Option<bool>,
+    pub result: HierRoundResult,
+}
+
+fn score(sc: &HierScenario, result: HierRoundResult) -> HierRoundRecord {
+    let completed = result.sum.is_some();
+    let sum_matches_truth = match (&result.sum, &result.true_sum) {
+        (Some(s), Some(t)) => Some(s == t),
+        _ => None,
+    };
+    let shards_dropped = match &result.root {
+        Some(root) => result.shard_plan.shards() - root.sets.v3.len(),
+        None => 0,
+    };
+    let mut exposed = Vec::new();
+    for &a in &sc.compromised_aggs {
+        if a >= result.shard_reports.len() || !result.shard_reports[a].completed {
+            continue;
+        }
+        let lo = result.shard_plan.range(a).0;
+        let honest: Vec<ClientId> = result.shard_reports[a]
+            .sets
+            .v3
+            .iter()
+            .map(|&c| c + lo)
+            .filter(|g| !sc.colluders.contains(g))
+            .collect();
+        if honest.len() == 1 {
+            exposed.push(honest[0]);
+        }
+    }
+    exposed.sort_unstable();
+    exposed.dedup();
+    let shard_theorem1_agrees = result
+        .shard_reports
+        .iter()
+        .all(|r| r.theorem1_holds.map(|h| h == r.reliable).unwrap_or(true));
+    let root_theorem1_agrees = result
+        .root
+        .as_ref()
+        .and_then(|r| r.theorem1_holds.map(|h| h == r.reliable));
+    HierRoundRecord {
+        completed,
+        reliable: result.reliable,
+        sum_matches_truth,
+        shards_dropped,
+        exposed_honest: exposed,
+        shard_theorem1_agrees,
+        root_theorem1_agrees,
+        result,
+    }
+}
+
+/// Aggregate outcomes of a hierarchical campaign.
+#[derive(Debug, Clone, Default)]
+pub struct HierCampaignReport {
+    pub rounds: usize,
+    pub completed: usize,
+    pub reliable: usize,
+    /// Rounds where the secure sum disagreed with the plaintext truth —
+    /// must stay 0; any nonzero count is a soundness bug.
+    pub truth_mismatches: usize,
+    pub shards_dropped_total: usize,
+    pub exposed_honest_total: usize,
+    /// Per-level Theorem-1 vs reliability disagreements (flat campaigns
+    /// track the same signal as `theorem1_agrees`).
+    pub theorem1_disagreements: usize,
+}
+
+/// Run a batch of hierarchical scenarios and aggregate the scores.
+pub fn run_hier_campaign(
+    scenarios: &[HierScenario],
+    executor: Executor,
+) -> Result<HierCampaignReport> {
+    let mut report = HierCampaignReport::default();
+    for sc in scenarios {
+        let r = sc.run(executor)?;
+        report.rounds += 1;
+        report.completed += usize::from(r.completed);
+        report.reliable += usize::from(r.reliable);
+        report.truth_mismatches += usize::from(r.sum_matches_truth == Some(false));
+        report.shards_dropped_total += r.shards_dropped;
+        report.exposed_honest_total += r.exposed_honest.len();
+        if !r.shard_theorem1_agrees || r.root_theorem1_agrees == Some(false) {
+            report.theorem1_disagreements += 1;
+        }
+    }
+    Ok(report)
+}
+
+/// The per-shard-churn campaign: `rounds` hierarchical rounds over a fixed
+/// population where the storm rotates across shards (round r storms shard
+/// `r % shards` at `q = 0.4` against a 5% baseline), with one compromised
+/// aggregator and a two-client colluding set — the CI workload exercising
+/// shard dropout degradation and the cross-level privacy metric together.
+pub fn storm_scenarios(base_seed: u64, rounds: usize, n: usize, shards: usize) -> Vec<HierScenario> {
+    (0..rounds)
+        .map(|r| HierScenario {
+            name: format!("hier-storm-r{r}"),
+            n,
+            dim: 16,
+            mask_bits: 32,
+            shards,
+            t: 3,
+            intra: Topology::ErdosRenyi { p: 0.9 },
+            root: Topology::Complete,
+            codec: CodecSpec::Dense,
+            churn_q: 0.05,
+            storm: Some((r % shards.max(1), 0.4)),
+            agg_dropout: std::array::from_fn(|_| Vec::new()),
+            colluders: vec![0, 1],
+            compromised_aggs: vec![0],
+            seed: base_seed ^ (r as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        })
+        .collect()
+}
+
+/// Seeded random hierarchical scenario for the differential harness: small
+/// populations, every codec, shard counts 1–4 (1 exercises the flat
+/// degeneracy), churn with occasional per-shard storms, occasional
+/// aggregator failures and cross-level collusion. Shard sizes always
+/// respect the builder's `≥ t+1` floor by construction.
+pub fn random_hier_scenario(seed: u64) -> HierScenario {
+    let mut rng = Rng::new(seed ^ 0x41E2_5EED);
+    let t = 2 + rng.gen_range(2) as usize; // 2..=3
+    let shards = 1 + rng.gen_range(4) as usize; // 1..=4
+    // n ≥ shards·(t+1) keeps every shard at or above the builder floor
+    let per_shard = t + 1 + rng.gen_range(4) as usize;
+    let n = shards * per_shard + rng.gen_range(3) as usize;
+    let min_shard = n / shards;
+    let dim = 1 + rng.gen_range(16) as usize;
+    let mask_bits = [16u32, 32, 32, 64][rng.gen_range(4) as usize];
+    let intra = match rng.gen_range(3) {
+        0 => Topology::Complete,
+        1 => Topology::ErdosRenyi { p: 0.7 + 0.3 * rng.next_f64() },
+        _ => Topology::Harary { k: t + rng.gen_range((min_shard - t) as u64) as usize },
+    };
+    let root = if rng.gen_range(2) == 0 {
+        Topology::Complete
+    } else {
+        Topology::ErdosRenyi { p: 0.8 + 0.2 * rng.next_f64() }
+    };
+    let codec = match rng.gen_range(4) {
+        0 | 1 => CodecSpec::Dense,
+        2 => CodecSpec::TopK { frac: 0.25 + 0.5 * rng.next_f64() },
+        _ => CodecSpec::RandK { frac: 0.25 + 0.5 * rng.next_f64() },
+    };
+    let churn_q = [0.0, 0.0, 0.05, 0.1, 0.2][rng.gen_range(5) as usize];
+    let storm = (shards >= 2 && rng.gen_range(3) == 0)
+        .then(|| (rng.gen_range(shards as u64) as usize, 0.3 + 0.3 * rng.next_f64()));
+    let mut agg_dropout: [Vec<usize>; 4] = std::array::from_fn(|_| Vec::new());
+    if shards >= 3 && rng.gen_range(4) == 0 {
+        agg_dropout[rng.gen_range(4) as usize].push(rng.gen_range(shards as u64) as usize);
+    }
+    let colluders = if rng.gen_range(3) == 0 {
+        let mut c = vec![rng.gen_range(n as u64) as usize, rng.gen_range(n as u64) as usize];
+        c.sort_unstable();
+        c.dedup();
+        c
+    } else {
+        Vec::new()
+    };
+    let compromised_aggs = if shards >= 2 && rng.gen_range(3) == 0 {
+        vec![rng.gen_range(shards as u64) as usize]
+    } else {
+        Vec::new()
+    };
+    HierScenario {
+        name: format!("hier-rand-{seed:#x}"),
+        n,
+        dim,
+        mask_bits,
+        shards,
+        t,
+        intra,
+        root,
+        codec,
+        churn_q,
+        storm,
+        agg_dropout,
+        colluders,
+        compromised_aggs,
+        seed,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_hier_scenarios_are_deterministic_and_valid() {
+        for seed in 0..60u64 {
+            let a = random_hier_scenario(seed);
+            let b = random_hier_scenario(seed);
+            assert_eq!(format!("{a:?}"), format!("{b:?}"), "seed={seed}");
+            // every scenario must compile to a valid hierarchical config
+            let cfg = a.config().unwrap_or_else(|e| panic!("seed={seed}: {e}"));
+            assert_eq!(cfg.n, a.n);
+            assert!(cfg.topology.is_hierarchical());
+            assert_eq!(a.models().len(), a.n);
+        }
+        // the axes are actually sampled
+        let any =
+            |f: &dyn Fn(&HierScenario) -> bool| (0..60u64).any(|s| f(&random_hier_scenario(s)));
+        assert!(any(&|sc| sc.shards == 1));
+        assert!(any(&|sc| sc.shards >= 3));
+        assert!(any(&|sc| sc.storm.is_some()));
+        assert!(any(&|sc| sc.agg_dropout.iter().any(|v| !v.is_empty())));
+        assert!(any(&|sc| !sc.compromised_aggs.is_empty()));
+        assert!(any(&|sc| !matches!(sc.codec, CodecSpec::Dense)));
+    }
+
+    #[test]
+    fn dropout_schedule_is_rng_free_replayable() {
+        let sc = random_hier_scenario(5);
+        assert_eq!(sc.dropout_schedule().unwrap(), sc.dropout_schedule().unwrap());
+    }
+
+    #[test]
+    fn storm_concentrates_drops_in_the_storm_shard() {
+        let sc = HierScenario {
+            storm: Some((1, 0.9)),
+            churn_q: 0.0,
+            ..storm_scenarios(7, 1, 40, 4).remove(0)
+        };
+        let plan = sc.shard_plan().unwrap();
+        let sched = sc.dropout_schedule().unwrap();
+        assert!(sched.iter().flatten().all(|&c| plan.shard_of(c) == 1));
+        assert!(sched.iter().map(|s| s.len()).sum::<usize>() > 0);
+    }
+
+    #[test]
+    fn healthy_campaign_is_fully_reliable_and_private() {
+        let scs = vec![HierScenario {
+            churn_q: 0.0,
+            storm: None,
+            colluders: vec![],
+            compromised_aggs: vec![],
+            intra: Topology::Complete,
+            ..storm_scenarios(11, 1, 24, 3).remove(0)
+        }];
+        let rep = run_hier_campaign(&scs, Executor::Engine).unwrap();
+        assert_eq!(rep.rounds, 1);
+        assert_eq!(rep.completed, 1);
+        assert_eq!(rep.reliable, 1);
+        assert_eq!(rep.truth_mismatches, 0);
+        assert_eq!(rep.shards_dropped_total, 0);
+        assert_eq!(rep.exposed_honest_total, 0);
+        assert_eq!(rep.theorem1_disagreements, 0);
+    }
+
+    #[test]
+    fn compromised_shard_with_one_honest_member_is_exposed() {
+        // shard 0 of 3 holds clients 0..4; colluders are 3 of its 4
+        // members, so the sole remaining honest client is exposed to a
+        // compromised aggregator — and nobody is without the compromise
+        let base = HierScenario {
+            churn_q: 0.0,
+            storm: None,
+            colluders: vec![0, 1, 2],
+            compromised_aggs: vec![0],
+            intra: Topology::Complete,
+            ..storm_scenarios(13, 1, 12, 3).remove(0)
+        };
+        let r = base.run(Executor::Engine).unwrap();
+        assert_eq!(r.exposed_honest, vec![3]);
+        let clean = HierScenario { compromised_aggs: vec![], ..base };
+        assert!(clean.run(Executor::Engine).unwrap().exposed_honest.is_empty());
+    }
+
+    #[test]
+    fn storm_campaign_degrades_by_dropping_shards_not_corrupting_sums() {
+        let scs = storm_scenarios(0xCAFE, 4, 40, 4);
+        let rep = run_hier_campaign(&scs, Executor::Engine).unwrap();
+        assert_eq!(rep.rounds, 4);
+        // the invariant that matters: no completed round ever disagrees
+        // with the plaintext truth, storm or not
+        assert_eq!(rep.truth_mismatches, 0);
+        assert_eq!(rep.theorem1_disagreements, 0);
+    }
+}

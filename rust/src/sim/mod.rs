@@ -18,6 +18,10 @@
 //!   survivor sets and [`crate::net::NetStats`] on randomized scenarios
 //!   (the payload codec is one of the randomized axes), with a shrinker
 //!   that minimizes failures to a reportable seed;
+//! * [`hier`] — hierarchical (sharded) round scenarios: per-shard churn
+//!   storms, dropped/compromised shard aggregators, cross-level collusion,
+//!   scored by [`hier::run_hier_campaign`] and differential-tested by
+//!   [`differential::diff_hier_scenario`] with the flat engine as oracle;
 //! * [`crash`] — kills a journaled server at every phase boundary
 //!   ([`crash::CrashPoint`]) and requires the journal-recovered server to
 //!   finish the round bit-identically to the uninterrupted engine;
@@ -35,6 +39,7 @@ pub mod campaign;
 pub mod churn;
 pub mod crash;
 pub mod differential;
+pub mod hier;
 pub mod scenario;
 pub mod session;
 
@@ -44,8 +49,13 @@ pub use campaign::{
 pub use crash::{diff_crash_round, run_round_crashy, CrashPoint};
 pub use churn::ChurnModel;
 pub use differential::{
-    diff_crash_scenario, diff_scenario, diff_session_scenario, run_differential, shrink,
-    DifferentialReport, Failure, Mismatch,
+    diff_crash_scenario, diff_hier_scenario, diff_scenario, diff_session_scenario,
+    run_differential, run_hier_differential, shrink, DifferentialReport, Failure,
+    HierDifferentialReport, Mismatch,
+};
+pub use hier::{
+    random_hier_scenario, run_hier_campaign, storm_scenarios, HierCampaignReport,
+    HierRoundRecord, HierScenario,
 };
 pub use scenario::{
     random_scenario, AdversarySpec, CodecSpec, RoundPlan, Scenario, ThresholdRule,

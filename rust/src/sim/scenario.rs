@@ -162,6 +162,19 @@ impl Scenario {
                 Topology::ErdosRenyi { p } => t_rule(self.n, *p).min(self.n),
                 Topology::Harary { k } => (k / 2 + 1).max(2),
                 Topology::Custom(_) => self.n / 2 + 1,
+                // Intra-shard rounds run at a threshold sized to the shard,
+                // not the population; recurse on the intra family over the
+                // smallest shard (hier scenarios use sim::hier, which sizes
+                // this itself — this arm only keeps the match total).
+                Topology::Hierarchical { shards, intra, .. } => {
+                    let m = (self.n / shards.max(&1)).max(1);
+                    match intra.as_ref() {
+                        Topology::Complete | Topology::Custom(_) => m / 2 + 1,
+                        Topology::ErdosRenyi { p } => t_rule(m, *p).min(m),
+                        Topology::Harary { k } => (k / 2 + 1).max(2),
+                        Topology::Hierarchical { .. } => m / 2 + 1,
+                    }
+                }
             },
         }
     }

@@ -1,0 +1,299 @@
+//! Hierarchical (two-level sharded) rounds end to end: builder floor and
+//! shard-boundary edge cases, the single-shard flat degeneracy, engine ↔
+//! event-loop parity, clean degradation when a shard aggregator is lost,
+//! the randomized hier differential with the flat engine as sum oracle
+//! (tier-1 smoke + `--ignored` ≥100-scenario acceptance sweep for the CI
+//! hierarchical job), and an `--ignored` n = 10⁵ scale smoke.
+
+use ccesa::coordinator::Executor;
+use ccesa::hier::{HierOptions, HierRunner, ShardPlan};
+use ccesa::protocol::dropout::DropoutModel;
+use ccesa::protocol::engine::run_round;
+use ccesa::protocol::{ProtocolConfig, Topology};
+use ccesa::sim::{run_hier_campaign, run_hier_differential, storm_scenarios};
+use ccesa::util::rng::Rng;
+
+fn models_for(n: usize, dim: usize, seed: u64) -> Vec<Vec<u64>> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| (0..dim).map(|_| rng.next_u64() & 0xFFFF_FFFF).collect()).collect()
+}
+
+fn hier_topology(shards: usize, intra: Topology, root: Topology) -> Topology {
+    Topology::Hierarchical { shards, intra: Box::new(intra), root: Box::new(root) }
+}
+
+fn runner(executor: Executor) -> HierRunner {
+    HierRunner::new(HierOptions {
+        executor,
+        check_theorem1: true,
+        check_truth: true,
+        ..HierOptions::default()
+    })
+}
+
+/// The builder floor: a shard that cannot lose even one client (smallest
+/// shard ≤ t) is rejected at build time, not discovered as an abort.
+#[test]
+fn builder_rejects_shards_below_threshold_plus_one() {
+    let build = |n: usize, t: usize, shards: usize| {
+        ProtocolConfig::builder()
+            .clients(n)
+            .threshold(t)
+            .model_dim(4)
+            .topology(hier_topology(shards, Topology::Complete, Topology::Complete))
+            .seed(1)
+            .build()
+    };
+    // n=12 in 4 shards → smallest shard 3 < t+1 = 4
+    let err = build(12, 3, 4).unwrap_err().to_string();
+    assert!(err.contains("t+1"), "unexpected error: {err}");
+    // the same population in 3 shards of 4 clears the floor
+    assert!(build(12, 3, 3).is_ok());
+    // more shards than clients
+    assert!(build(6, 1, 7).is_err());
+    // zero shards
+    assert!(build(6, 1, 0).is_err());
+}
+
+/// Remainder populations: when `n % shards != 0` the first shards take one
+/// extra client, every client lands in exactly one shard, and the round
+/// still sums exactly.
+#[test]
+fn remainder_shards_cover_every_client_and_sum_exactly() {
+    let plan = ShardPlan::new(13, 3).unwrap();
+    assert_eq!(
+        (0..3).map(|s| plan.range(s)).collect::<Vec<_>>(),
+        vec![(0, 5), (5, 9), (9, 13)],
+    );
+    for c in 0..13 {
+        let s = plan.shard_of(c);
+        let (lo, hi) = plan.range(s);
+        assert!(lo <= c && c < hi, "client {c} not inside its shard {s}");
+    }
+
+    let cfg = ProtocolConfig::builder()
+        .clients(13)
+        .threshold(3)
+        .model_dim(6)
+        .topology(hier_topology(3, Topology::Complete, Topology::Complete))
+        .seed(0xBEEF)
+        .build()
+        .unwrap();
+    let models = models_for(13, 6, 2);
+    let r = runner(Executor::Engine).run(&cfg, &models).unwrap();
+    assert!(r.reliable);
+    assert_eq!(r.global_v3, (0..13).collect::<Vec<_>>());
+    assert_eq!(r.sum, r.true_sum);
+    assert_eq!(r.shard_reports.len(), 3);
+    assert!(r.shard_reports.iter().all(|s| s.completed && s.reliable));
+}
+
+/// `--shards 1` is the flat protocol: same sum, same survivor sets, same
+/// logical traffic as `protocol::engine::run_round` on the intra topology.
+#[test]
+fn single_shard_round_is_bit_identical_to_flat() {
+    let n = 9;
+    let dim = 5;
+    let drops = DropoutModel::Targeted {
+        per_step: [vec![2], vec![], vec![7], vec![]],
+    };
+    let flat_cfg = ProtocolConfig::builder()
+        .clients(n)
+        .threshold(3)
+        .model_dim(dim)
+        .topology(Topology::ErdosRenyi { p: 0.9 })
+        .dropout(drops.clone())
+        .seed(0x51C)
+        .build()
+        .unwrap();
+    let hier_cfg = ProtocolConfig::builder()
+        .clients(n)
+        .threshold(3)
+        .model_dim(dim)
+        .topology(hier_topology(1, Topology::ErdosRenyi { p: 0.9 }, Topology::Complete))
+        .dropout(drops)
+        .seed(0x51C)
+        .build()
+        .unwrap();
+    let models = models_for(n, dim, 3);
+    let flat = run_round(&flat_cfg, &models).unwrap();
+    let hier = runner(Executor::Engine).run(&hier_cfg, &models).unwrap();
+    assert_eq!(hier.sum, flat.sum);
+    assert_eq!(hier.global_v3, flat.sets.v3);
+    assert_eq!(hier.shard_reports.len(), 1);
+    assert_eq!(hier.shard_reports[0].sets, flat.sets);
+    assert!(hier.root.is_none(), "single shard runs no root round");
+    assert!(hier.stats.intra.logical_eq(&flat.stats));
+    assert_eq!(hier.stats.root.server_total(), 0);
+}
+
+/// Engine and event loop must agree bit-for-bit on a multi-shard round
+/// with client churn *and* a scheduled aggregator failure.
+#[test]
+fn executors_agree_on_multi_shard_round_with_agg_failure() {
+    let n = 16;
+    let cfg = ProtocolConfig::builder()
+        .clients(n)
+        .threshold(2)
+        .model_dim(12)
+        .topology(hier_topology(4, Topology::Complete, Topology::Complete))
+        .dropout(DropoutModel::Targeted {
+            per_step: [vec![5], vec![], vec![11], vec![]],
+        })
+        .seed(0xAB)
+        .build()
+        .unwrap();
+    let models = models_for(n, 12, 4);
+    let opts = |executor| HierOptions {
+        executor,
+        agg_dropout: [vec![], vec![3], vec![], vec![]],
+        check_theorem1: true,
+        check_truth: true,
+        ..HierOptions::default()
+    };
+    let e = HierRunner::new(opts(Executor::Engine)).run(&cfg, &models).unwrap();
+    let l = HierRunner::new(opts(Executor::EventLoop)).run(&cfg, &models).unwrap();
+    assert_eq!(e.sum, l.sum);
+    assert_eq!(e.global_v3, l.global_v3);
+    assert_eq!(e.reliable, l.reliable);
+    for (s, (a, b)) in e.shard_reports.iter().zip(&l.shard_reports).enumerate() {
+        assert_eq!(a.sets, b.sets, "shard {s}");
+    }
+    assert_eq!(
+        e.root.as_ref().map(|r| r.sets.clone()),
+        l.root.as_ref().map(|r| r.sets.clone()),
+    );
+    assert!(e.stats.intra.logical_eq(&l.stats.intra));
+    assert!(e.stats.root.logical_eq(&l.stats.root));
+}
+
+/// Losing a shard aggregator degrades the global sum to *dropping that
+/// shard* — the covered set shrinks by exactly that shard's V3, and the
+/// sum still equals the plaintext truth over what remains.
+#[test]
+fn lost_aggregator_degrades_to_dropping_its_shard() {
+    let n = 15;
+    let cfg = ProtocolConfig::builder()
+        .clients(n)
+        .threshold(3)
+        .model_dim(8)
+        .topology(hier_topology(3, Topology::Complete, Topology::Complete))
+        .seed(0xD0A)
+        .build()
+        .unwrap();
+    let models = models_for(n, 8, 5);
+    let run = |lost: &[usize]| {
+        let mut agg_dropout: [Vec<usize>; 4] = Default::default();
+        agg_dropout[0] = lost.to_vec();
+        HierRunner::new(HierOptions {
+            executor: Executor::Engine,
+            agg_dropout,
+            check_truth: true,
+            ..HierOptions::default()
+        })
+        .run(&cfg, &models)
+        .unwrap()
+    };
+    let healthy = run(&[]);
+    assert_eq!(healthy.global_v3, (0..n).collect::<Vec<_>>());
+    assert_eq!(healthy.sum, healthy.true_sum);
+
+    let degraded = run(&[1]);
+    assert!(degraded.reliable);
+    let plan = ShardPlan::new(n, 3).unwrap();
+    let (lo, hi) = plan.range(1);
+    let expect: Vec<usize> = (0..n).filter(|c| *c < lo || *c >= hi).collect();
+    assert_eq!(degraded.global_v3, expect, "exactly shard 1 is dropped");
+    // the invariant that matters: never a corrupted sum, only a smaller one
+    assert_eq!(degraded.sum, degraded.true_sum);
+    assert_ne!(degraded.sum, healthy.sum);
+}
+
+/// Tier-1 differential smoke: randomized hier scenarios through engine and
+/// event loop, with the flat engine as exact-sum oracle — and the oracle
+/// comparison must actually fire, not be skipped to vacuity.
+#[test]
+fn hier_differential_smoke_25_scenarios() {
+    let report = run_hier_differential(0x41E2_0001, 25);
+    assert_eq!(report.scenarios_run, 25);
+    assert!(
+        report.ok(),
+        "{} mismatches; first: {:?}",
+        report.failures.len(),
+        report.failures.first()
+    );
+    assert!(report.oracle_compared > 0, "flat-oracle compare never fired in 25 scenarios");
+}
+
+/// The acceptance sweep for the CI hierarchical job (`--ignored`): ≥100
+/// randomized scenarios, zero mismatches, with the flat-oracle comparison
+/// firing on a healthy fraction.
+#[test]
+#[ignore = "hier differential sweep (~minutes): run explicitly — CI hierarchical job"]
+fn hier_differential_acceptance_120_scenarios() {
+    let report = run_hier_differential(0x41E2_1000, 120);
+    assert_eq!(report.scenarios_run, 120);
+    assert!(
+        report.ok(),
+        "{} mismatches; first: {:?}",
+        report.failures.len(),
+        report.failures.first()
+    );
+    assert!(
+        report.oracle_compared >= 20,
+        "oracle compared on only {}/120 scenarios",
+        report.oracle_compared
+    );
+}
+
+/// Per-shard churn storms for the CI hierarchical job (`--ignored`): the
+/// rotating-storm campaign may drop shards, but must never disagree with
+/// the plaintext truth or the per-level Theorem-1 predicate.
+#[test]
+#[ignore = "storm campaign (~tens of seconds): run explicitly — CI hierarchical job"]
+fn storm_campaign_12_rounds_never_corrupts() {
+    let scs = storm_scenarios(0x57012, 12, 60, 4);
+    let rep = run_hier_campaign(&scs, Executor::EventLoop).unwrap();
+    assert_eq!(rep.rounds, 12);
+    assert_eq!(rep.truth_mismatches, 0, "a corrupted sum is a soundness bug");
+    assert_eq!(rep.theorem1_disagreements, 0);
+    assert!(rep.completed >= 10, "only {}/12 storm rounds completed", rep.completed);
+}
+
+/// CI scale job (`--ignored`, release): an n = 10⁵ hierarchical round over
+/// 20 shards of 5000 on sparse degree-8 intra graphs completes, covers
+/// ≥95% of the population and sums exactly — the stepping stone to the
+/// n = 10⁶ bench row, which no flat round can reach at all.
+#[test]
+#[ignore = "scale smoke (~minutes unoptimized): run explicitly — CI scale-smoke job, release profile"]
+fn hier_scale_smoke_n_100k() {
+    let (n, shards, dim) = (100_000usize, 20usize, 32usize);
+    let m = n / shards;
+    let cfg = ProtocolConfig::builder()
+        .clients(n)
+        .threshold(3)
+        .model_dim(dim)
+        .topology(hier_topology(
+            shards,
+            Topology::ErdosRenyi { p: 8.0 / (m - 1) as f64 },
+            Topology::Complete,
+        ))
+        .seed(0x5CA1E)
+        .build()
+        .unwrap();
+    let models = models_for(n, dim, 6);
+    let r = HierRunner::new(HierOptions {
+        executor: Executor::EventLoop,
+        check_truth: true,
+        ..HierOptions::default()
+    })
+    .run(&cfg, &models)
+    .unwrap();
+    assert!(r.reliable);
+    assert_eq!(r.sum, r.true_sum, "secure sum must equal the plaintext truth");
+    assert!(
+        r.global_v3.len() >= n * 95 / 100,
+        "coverage {}/{n} below 95% (degree-8 withdrawal tail too fat)",
+        r.global_v3.len()
+    );
+}
