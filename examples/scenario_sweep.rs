@@ -17,7 +17,7 @@
 use ccesa::analysis::bounds::p_star;
 use ccesa::protocol::Topology;
 use ccesa::sim::{
-    run_campaign, run_differential, AdversarySpec, ChurnModel, CodecSpec, Executor, Scenario,
+    run_campaign, run_differential_batch, AdversarySpec, ChurnModel, CodecSpec, Executor, Scenario,
     ThresholdRule, TopologySchedule,
 };
 use ccesa::util::cli::Args;
@@ -123,7 +123,7 @@ fn main() -> anyhow::Result<()> {
     let diff_count: usize = args.req("diff");
     if diff_count > 0 {
         println!("\n== differential: {diff_count} random scenarios, engine vs coordinator ==");
-        let report = run_differential(seed.wrapping_mul(0x9E37_79B9), diff_count);
+        let report = run_differential_batch(seed.wrapping_mul(0x9E37_79B9), diff_count);
         println!(
             "scenarios={} rounds={} mismatches={}",
             report.scenarios_run,

@@ -1,13 +1,15 @@
 //! End-to-end round latency vs n (E-perf / Table 5.1 aggregate), the
-//! event-loop deployment shape vs the sync engine, the sparse payload
-//! codecs vs dense, cold-start vs steady-state session rounds, and the
-//! PJRT masked_sum kernel vs the pure-Rust server aggregation.
+//! event-loop deployment shape vs the sync engine (untimed and under the
+//! virtual-clock scheduler), the sparse payload codecs vs dense,
+//! cold-start vs steady-state session rounds, and the PJRT masked_sum
+//! kernel vs the pure-Rust server aggregation.
 
 use ccesa::analysis::bounds::{p_star, t_rule};
 use ccesa::bench::{black_box, Bench};
 use ccesa::codec::Codec;
-use ccesa::coordinator::{RoundOptions, RoundRunner};
+use ccesa::coordinator::{RoundOptions, RoundRunner, TimeoutPolicy};
 use ccesa::protocol::engine::run_round;
+use ccesa::sim::clock::{clock_seed, ClockSpec, LatencyModel};
 use ccesa::protocol::session::Session;
 use ccesa::protocol::{ProtocolConfig, Topology};
 use ccesa::runtime::{to_u32, Input, Manifest, Runtime};
@@ -47,6 +49,28 @@ fn main() {
             let runner = RoundRunner::new(RoundOptions::default());
             b.bench(&format!("round n={n} CCESA(p*) event-loop"), || {
                 black_box(runner.run(&cc_cfg, &models).unwrap());
+            });
+            // the virtual clock's scheduling overhead next to the untimed
+            // loop: same round under a materialized latency schedule with a
+            // generous (never-dropping) phase deadline
+            let sched = std::sync::Arc::new(
+                ClockSpec {
+                    link: LatencyModel::Uniform { lo_us: 50, hi_us: 5_000 },
+                    compute_us: (10, 200),
+                }
+                .materialize(n, clock_seed(cc_cfg.seed, 0)),
+            );
+            let clocked = RoundRunner::new(
+                RoundOptions::builder()
+                    .clock(sched)
+                    .timeout_policy(TimeoutPolicy::uniform(
+                        std::time::Duration::from_secs(10),
+                    ))
+                    .build()
+                    .unwrap(),
+            );
+            b.bench(&format!("round n={n} CCESA(p*) clocked event-loop"), || {
+                black_box(clocked.run(&cc_cfg, &models).unwrap());
             });
             // sparse payload at k = dim/10: Step 2 masks and the server
             // accumulator shrink 10×

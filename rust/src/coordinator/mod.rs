@@ -47,6 +47,67 @@ pub struct CoordRoundResult {
     pub reliable: bool,
     pub sets: SurvivorSets,
     pub stats: NetStats,
+    /// What the virtual clock observed, when the round ran clocked
+    /// (event-loop executor with a [`TimeoutPolicy`] + schedule); `None`
+    /// on untimed executors.
+    pub timeline: Option<RoundTimeline>,
+}
+
+/// Server patience, per protocol phase: how long to wait for stragglers
+/// before closing the phase without them, and the delivery floor that
+/// overrides the deadline.
+///
+/// On the event-loop executor the deadlines are *virtual* — measured on the
+/// deterministic [`crate::sim::clock::ClockSchedule`] — so the same policy
+/// replays bit-identically. On the wire executor the same numbers become
+/// real wall-clock `poll` deadlines (`net::socket`), which is what makes a
+/// sim-tuned policy directly deployable.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TimeoutPolicy {
+    /// Budget for each of the four phases, measured from the phase open
+    /// (the server finishing the previous phase's downloads).
+    pub per_phase_deadlines: [Duration; 4],
+    /// Grace floor: past a deadline the server keeps accepting deliveries
+    /// in arrival order until at least this many landed in the phase
+    /// (0 = the deadline is absolute). A floor ≥ t keeps a slow-but-alive
+    /// cohort from aborting the round.
+    pub min_survivors: usize,
+}
+
+impl TimeoutPolicy {
+    /// The same deadline for all four phases, no grace floor.
+    pub fn uniform(d: Duration) -> TimeoutPolicy {
+        TimeoutPolicy { per_phase_deadlines: [d; 4], min_survivors: 0 }
+    }
+
+    pub fn with_min_survivors(mut self, floor: usize) -> TimeoutPolicy {
+        self.min_survivors = floor;
+        self
+    }
+}
+
+/// What the clock observed in one round: who each phase deadline dropped,
+/// and the virtual time each phase took (the latency axis the campaign
+/// runner scores against reliability/privacy).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct RoundTimeline {
+    /// dropped[phase] — clients whose delivery missed the phase deadline
+    /// (sorted by id). Bit-identical across executors for the same seed.
+    pub dropped: [Vec<usize>; 4],
+    /// Virtual time each phase stayed open, µs.
+    pub phase_elapsed_us: [u64; 4],
+}
+
+impl RoundTimeline {
+    /// Simulated wall time of the whole round, µs.
+    pub fn total_us(&self) -> u64 {
+        self.phase_elapsed_us.iter().sum()
+    }
+
+    /// Did any phase deadline actually drop someone?
+    pub fn dropped_any(&self) -> bool {
+        self.dropped.iter().any(|d| !d.is_empty())
+    }
 }
 
 /// How the event loop actually ran — the observable for "no thread-per-
@@ -221,6 +282,14 @@ pub struct RoundOptions {
     pub timeout: Option<Duration>,
     /// Crash injection point (tests only; wire executor with a journal).
     pub stop_after: Option<StopAfter>,
+    /// Per-phase straggler policy. Event loop: requires [`RoundOptions::clock`]
+    /// and closes phases on the virtual clock. Wire: becomes real per-phase
+    /// poll deadlines inside the whole-round `timeout`.
+    pub timeout_policy: Option<TimeoutPolicy>,
+    /// Pre-materialized per-client delivery delays driving the virtual
+    /// clock (event-loop executor only; rng-free, so rounds replay
+    /// bit-identically).
+    pub clock: Option<Arc<crate::sim::clock::ClockSchedule>>,
 }
 
 impl Default for RoundOptions {
@@ -231,6 +300,8 @@ impl Default for RoundOptions {
             journal_dir: None,
             timeout: None,
             stop_after: None,
+            timeout_policy: None,
+            clock: None,
         }
     }
 }
@@ -247,6 +318,8 @@ impl RoundOptions {
 }
 
 /// Builder for [`RoundOptions`]; `build()` validates cross-knob rules.
+/// Every rejection names the offending field and the setting it conflicts
+/// with, so a caller can fix the combination without reading this source.
 #[derive(Debug, Clone, Default)]
 pub struct RoundOptionsBuilder {
     executor: Option<Executor>,
@@ -254,6 +327,8 @@ pub struct RoundOptionsBuilder {
     journal_dir: Option<PathBuf>,
     timeout: Option<Duration>,
     stop_after: Option<StopAfter>,
+    timeout_policy: Option<TimeoutPolicy>,
+    clock: Option<Arc<crate::sim::clock::ClockSchedule>>,
 }
 
 impl RoundOptionsBuilder {
@@ -282,26 +357,79 @@ impl RoundOptionsBuilder {
         self
     }
 
+    pub fn timeout_policy(mut self, p: TimeoutPolicy) -> Self {
+        self.timeout_policy = Some(p);
+        self
+    }
+
+    pub fn clock(mut self, sched: Arc<crate::sim::clock::ClockSchedule>) -> Self {
+        self.clock = Some(sched);
+        self
+    }
+
     pub fn build(self) -> Result<RoundOptions> {
         let executor = self.executor.unwrap_or(Executor::EventLoop);
         if let Some(w) = self.workers {
             if w == 0 {
-                bail!("workers must be >= 1");
+                bail!("RoundOptions: workers = 0 is invalid — the sweep needs at least one worker");
             }
             if executor != Executor::EventLoop {
-                bail!("an explicit worker budget only applies to the event-loop executor");
+                bail!(
+                    "RoundOptions: workers conflicts with executor = {}: an explicit worker \
+                     budget only applies to the event-loop executor",
+                    executor.name()
+                );
             }
         }
         if self.journal_dir.is_some() && executor == Executor::Engine {
-            bail!("the sync engine executor does not journal; use the event loop or wire");
+            bail!(
+                "RoundOptions: journal_dir conflicts with executor = engine: the sync engine \
+                 does not journal (use the event-loop or wire executor)"
+            );
         }
         if self.stop_after.is_some() {
             if self.journal_dir.is_none() {
-                bail!("crash injection (stop_after) requires a journal to resume from");
+                bail!(
+                    "RoundOptions: stop_after requires journal_dir — crash injection resumes \
+                     from the journal"
+                );
             }
             if executor != Executor::Wire {
-                bail!("crash injection (stop_after) is a wire-executor knob");
+                bail!(
+                    "RoundOptions: stop_after conflicts with executor = {}: crash injection is \
+                     a wire-executor knob",
+                    executor.name()
+                );
             }
+        }
+        if self.timeout_policy.is_some() && executor == Executor::Engine {
+            bail!(
+                "RoundOptions: timeout_policy conflicts with executor = engine: the sync engine \
+                 has no clock (use the event-loop executor with a clock schedule, or the wire)"
+            );
+        }
+        if self.clock.is_some() {
+            if executor != Executor::EventLoop {
+                bail!(
+                    "RoundOptions: clock conflicts with executor = {}: a virtual-clock schedule \
+                     only drives the event-loop executor (the wire runs on wall time)",
+                    executor.name()
+                );
+            }
+            if self.timeout_policy.is_none() {
+                bail!(
+                    "RoundOptions: clock requires timeout_policy — a schedule without phase \
+                     deadlines never closes a phase early"
+                );
+            }
+        }
+        if self.timeout_policy.is_some() && executor == Executor::EventLoop && self.clock.is_none()
+        {
+            bail!(
+                "RoundOptions: timeout_policy requires clock on the event-loop executor — \
+                 virtual deadlines need a virtual clock (the wire executor maps them to wall \
+                 time instead)"
+            );
         }
         Ok(RoundOptions {
             executor,
@@ -309,6 +437,8 @@ impl RoundOptionsBuilder {
             journal_dir: self.journal_dir,
             timeout: self.timeout,
             stop_after: self.stop_after,
+            timeout_policy: self.timeout_policy,
+            clock: self.clock,
         })
     }
 }
@@ -347,6 +477,7 @@ impl RoundRunner {
                     reliable: r.reliable,
                     sets: r.sets,
                     stats: r.stats,
+                    timeline: None,
                 })
             }
             Executor::EventLoop => self.run_event_loop(cfg, models).map(|(r, _)| r),
@@ -367,17 +498,66 @@ impl RoundRunner {
         self.run_event_loop(cfg, models)
     }
 
+    /// Run one clocked round, handing back the [`RoundTimeline`] even when
+    /// the round aborts (a |V_k| < t error) — the clocked differential
+    /// needs the observed timeout classification to build the engine
+    /// reference schedule regardless of how the round ended. Requires the
+    /// event-loop executor with both `timeout_policy` and `clock` set.
+    pub fn run_clocked(
+        &self,
+        cfg: &ProtocolConfig,
+        models: &[Vec<u64>],
+    ) -> (Result<CoordRoundResult>, RoundTimeline) {
+        if self.opts.executor != Executor::EventLoop
+            || self.opts.clock.is_none()
+            || self.opts.timeout_policy.is_none()
+        {
+            return (
+                Err(anyhow::anyhow!(
+                    "run_clocked needs the event-loop executor with clock + timeout_policy set"
+                )),
+                RoundTimeline::default(),
+            );
+        }
+        let (res, timeline) = self.run_event_loop_timed(cfg, models);
+        (res.map(|(r, _)| r), timeline)
+    }
+
     fn run_event_loop(
         &self,
         cfg: &ProtocolConfig,
         models: &[Vec<u64>],
     ) -> Result<(CoordRoundResult, LoopTelemetry)> {
+        self.run_event_loop_timed(cfg, models).0
+    }
+
+    fn run_event_loop_timed(
+        &self,
+        cfg: &ProtocolConfig,
+        models: &[Vec<u64>],
+    ) -> (Result<(CoordRoundResult, LoopTelemetry)>, RoundTimeline) {
+        let mut timeline = RoundTimeline::default();
         let workers = self.opts.workers.unwrap_or_else(|| event_loop_workers(cfg.n));
         let sink = match &self.opts.journal_dir {
-            Some(dir) => Some(cold_journal_sink(dir, cfg, models)?),
+            Some(dir) => match cold_journal_sink(dir, cfg, models) {
+                Ok(s) => Some(s),
+                Err(e) => return (Err(e), timeline),
+            },
             None => None,
         };
-        run_round_event_loop_inner(cfg, models, workers, sink).map(|(r, t, _)| (r, t))
+        let clock = match (&self.opts.clock, &self.opts.timeout_policy) {
+            (Some(sched), Some(policy)) => Some((sched.as_ref(), policy)),
+            _ => None,
+        };
+        let clocked = clock.is_some();
+        let res = run_round_event_loop_inner(cfg, models, workers, sink, clock, &mut timeline)
+            .map(|(mut r, t, _)| {
+                if clocked {
+                    r.timeline = Some(timeline.clone());
+                }
+                (r, t)
+            });
+        (res, timeline)
     }
 }
 
@@ -411,7 +591,51 @@ pub(crate) fn run_cold_round_capture<'m>(
     models: &'m [Vec<u64>],
     workers: usize,
 ) -> Result<(CoordRoundResult, Vec<ClientSm<'m>>)> {
-    run_round_event_loop_inner(cfg, models, workers, None).map(|(r, _, sms)| (r, sms))
+    let mut timeline = RoundTimeline::default();
+    run_round_event_loop_inner(cfg, models, workers, None, None, &mut timeline)
+        .map(|(r, _, sms)| (r, sms))
+}
+
+/// Time-driven phase closure: with a clock, decide which lanes' phase
+/// outputs arrived before the deadline. A lane whose delivery is late has
+/// its output replaced with [`Up::Dropped`] — from here on the round treats
+/// it exactly like a churned client (no byte charge, no further downloads),
+/// which is the equivalence the clocked differential verifies bit-for-bit.
+fn close_lanes(
+    phase: usize,
+    lanes: &mut [Lane<'_>],
+    clock: Option<(&crate::sim::clock::ClockSchedule, &TimeoutPolicy)>,
+    timeline: &mut RoundTimeline,
+    stats: &mut NetStats,
+) {
+    let Some((sched, policy)) = clock else { return };
+    // expected = every lane still in the round this phase (it produced
+    // *some* outbox); candidates = the subset whose output is a real
+    // protocol delivery. A churned/failed lane never delivers, so a real
+    // server sits out the full deadline waiting on it — `close_phase`
+    // charges that to the phase's elapsed time.
+    let expected = lanes.iter().filter(|l| l.outbox.is_some()).count();
+    let candidates: Vec<usize> = lanes
+        .iter()
+        .enumerate()
+        .filter(|(_, l)| {
+            matches!(
+                &l.outbox,
+                Some(Up::Adv(_) | Up::Shares(_) | Up::Masked(_) | Up::Unmask(_) | Up::Warm(_))
+            )
+        })
+        .map(|(id, _)| id)
+        .collect();
+    let closure = crate::sim::clock::close_phase(phase, &candidates, expected, sched, policy);
+    for &id in &closure.timed_out {
+        // a timed-out delivery is discarded unread: replace it with the
+        // same `Dropped` marker a churned client produces, so the drain
+        // loop treats both identically (trace-logged, never charged)
+        lanes[id].outbox = Some(Up::Dropped(id, phase as u8));
+        stats.record_timeout_drop(phase);
+    }
+    timeline.phase_elapsed_us[phase] = closure.elapsed_us;
+    timeline.dropped[phase] = closure.timed_out;
 }
 
 fn run_round_event_loop_inner<'m>(
@@ -419,6 +643,8 @@ fn run_round_event_loop_inner<'m>(
     models: &'m [Vec<u64>],
     workers: usize,
     sink: Option<Box<dyn RoundSink>>,
+    clock: Option<(&crate::sim::clock::ClockSchedule, &TimeoutPolicy)>,
+    timeline: &mut RoundTimeline,
 ) -> Result<(CoordRoundResult, LoopTelemetry, Vec<ClientSm<'m>>)> {
     assert_eq!(models.len(), cfg.n);
     let workers = workers.max(1);
@@ -458,6 +684,7 @@ fn run_round_event_loop_inner<'m>(
     // ---- phase 0: advertise keys
     sweep_lanes(&mut lanes, workers, &live, &peak);
     sweeps += 1;
+    close_lanes(0, &mut lanes, clock, timeline, &mut stats);
     let mut advs = Vec::new();
     for lane in lanes.iter_mut() {
         match lane.outbox.take() {
@@ -482,6 +709,7 @@ fn run_round_event_loop_inner<'m>(
     // ---- phase 1: share keys
     sweep_lanes(&mut lanes, workers, &live, &peak);
     sweeps += 1;
+    close_lanes(1, &mut lanes, clock, timeline, &mut stats);
     let mut uploads = Vec::new();
     for lane in lanes.iter_mut() {
         match lane.outbox.take() {
@@ -506,6 +734,7 @@ fn run_round_event_loop_inner<'m>(
     // ---- phase 2: masked inputs
     sweep_lanes(&mut lanes, workers, &live, &peak);
     sweeps += 1;
+    close_lanes(2, &mut lanes, clock, timeline, &mut stats);
     let mut masked = Vec::new();
     for lane in lanes.iter_mut() {
         match lane.outbox.take() {
@@ -531,6 +760,7 @@ fn run_round_event_loop_inner<'m>(
     // ---- phase 3: unmask shares
     sweep_lanes(&mut lanes, workers, &live, &peak);
     sweeps += 1;
+    close_lanes(3, &mut lanes, clock, timeline, &mut stats);
     let mut responses = Vec::new();
     for lane in lanes.iter_mut() {
         match lane.outbox.take() {
@@ -555,7 +785,7 @@ fn run_round_event_loop_inner<'m>(
         kernel_backend: crate::kernels::selected().name(),
     };
     let machines = lanes.into_iter().map(|l| l.sm).collect();
-    Ok((CoordRoundResult { sum, reliable, sets, stats }, telemetry, machines))
+    Ok((CoordRoundResult { sum, reliable, sets, stats, timeline: None }, telemetry, machines))
 }
 
 /// Inputs of one warm (session-resume) round through the event loop: the
@@ -602,6 +832,7 @@ pub(crate) fn run_warm_event_loop(
         reliable,
         sets,
         stats,
+        timeline: None,
     });
     (res, server, machines)
 }
@@ -888,28 +1119,79 @@ mod tests {
         }
     }
 
+    /// Every `build()` rejection must name the offending field and, for
+    /// cross-knob conflicts, the conflicting pair — so a failed build tells
+    /// the caller *which* constraint fired without reading this module.
+    #[track_caller]
+    fn build_err(b: RoundOptionsBuilder, wants: &[&str]) {
+        let msg = b.build().expect_err("expected a validation error").to_string();
+        for want in wants {
+            assert!(msg.contains(want), "error {msg:?} should mention {want:?}");
+        }
+    }
+
     #[test]
     fn round_options_builder_validates_cross_knob_rules() {
+        let sched = || Arc::new(crate::sim::clock::ClockSchedule { delay_us: vec![[0; 4]; 4] });
+        let policy = || TimeoutPolicy::uniform(Duration::from_millis(5));
+
         // defaults: event loop, nothing else
         let d = RoundOptions::builder().build().unwrap();
         assert_eq!(d.executor, Executor::EventLoop);
         assert!(d.workers.is_none() && d.journal_dir.is_none() && d.stop_after.is_none());
+        assert!(d.timeout_policy.is_none() && d.clock.is_none());
 
-        assert!(RoundOptions::builder().workers(0).build().is_err());
-        assert!(RoundOptions::builder().executor(Executor::Wire).workers(2).build().is_err());
-        let journaled_engine = RoundOptions::builder().executor(Executor::Engine).journal("/tmp/j");
-        assert!(journaled_engine.build().is_err());
-        // stop_after needs a journal AND the wire executor
-        assert!(RoundOptions::builder()
-            .executor(Executor::Wire)
-            .stop_after(StopAfter::Setup)
-            .build()
-            .is_err());
-        assert!(RoundOptions::builder()
-            .journal("/tmp/j")
-            .stop_after(StopAfter::Setup)
-            .build()
-            .is_err());
+        // -- workers ----------------------------------------------------
+        build_err(RoundOptions::builder().workers(0), &["workers = 0"]);
+        build_err(
+            RoundOptions::builder().executor(Executor::Wire).workers(2),
+            &["workers conflicts with executor = wire"],
+        );
+        build_err(
+            RoundOptions::builder().executor(Executor::Engine).workers(2),
+            &["workers conflicts with executor = engine"],
+        );
+
+        // -- journal ----------------------------------------------------
+        build_err(
+            RoundOptions::builder().executor(Executor::Engine).journal("/tmp/j"),
+            &["journal_dir conflicts with executor = engine"],
+        );
+
+        // -- stop_after -------------------------------------------------
+        // needs a journal AND the wire executor; the journal rule fires first
+        build_err(
+            RoundOptions::builder().executor(Executor::Wire).stop_after(StopAfter::Setup),
+            &["stop_after requires journal_dir"],
+        );
+        build_err(
+            RoundOptions::builder().journal("/tmp/j").stop_after(StopAfter::Setup),
+            &["stop_after conflicts with executor = event-loop"],
+        );
+
+        // -- timeout_policy / clock ------------------------------------
+        build_err(
+            RoundOptions::builder().executor(Executor::Engine).timeout_policy(policy()),
+            &["timeout_policy conflicts with executor = engine"],
+        );
+        build_err(
+            RoundOptions::builder().timeout_policy(policy()),
+            &["timeout_policy requires clock on the event-loop executor"],
+        );
+        build_err(
+            RoundOptions::builder().clock(sched()),
+            &["clock requires timeout_policy"],
+        );
+        build_err(
+            RoundOptions::builder().executor(Executor::Wire).clock(sched()),
+            &["clock conflicts with executor = wire"],
+        );
+        build_err(
+            RoundOptions::builder().executor(Executor::Engine).clock(sched()),
+            &["clock conflicts with executor = engine"],
+        );
+
+        // -- valid combinations ----------------------------------------
         let ok = RoundOptions::builder()
             .executor(Executor::Wire)
             .journal("/tmp/j")
@@ -919,6 +1201,27 @@ mod tests {
             .unwrap();
         assert_eq!(ok.stop_after, Some(StopAfter::Phase(2)));
         assert_eq!(ok.timeout_or_default(), Duration::from_secs(5));
+
+        // wire maps phase deadlines to wall time — no clock needed
+        let wire = RoundOptions::builder()
+            .executor(Executor::Wire)
+            .timeout_policy(policy())
+            .build()
+            .unwrap();
+        assert_eq!(wire.timeout_policy, Some(policy()));
+
+        // event loop: schedule + policy together is the virtual-clock path
+        let clocked = RoundOptions::builder()
+            .clock(sched())
+            .timeout_policy(policy().with_min_survivors(3))
+            .build()
+            .unwrap();
+        assert_eq!(clocked.timeout_policy.as_ref().unwrap().min_survivors, 3);
+        assert!(clocked.clock.is_some());
+
+        assert!(RoundOptions::builder().workers(4).build().is_ok());
+        assert!(RoundOptions::builder().journal("/tmp/j").build().is_ok());
+        assert!(RoundOptions::builder().executor(Executor::Wire).journal("/tmp/j").build().is_ok());
     }
 
     #[test]

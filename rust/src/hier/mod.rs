@@ -524,6 +524,62 @@ mod tests {
         assert_eq!(q.min_size(), 5);
     }
 
+    /// The partition law for arbitrary (n, shards): contiguous coverage of
+    /// [0, n), balanced sizes (the first n % shards shards carry the one
+    /// extra client), and `shard_of` as the exact inverse of `range` —
+    /// exhaustively for every small pair, then across a seeded sweep of
+    /// large ones.
+    #[test]
+    fn shard_plan_partition_properties_hold_for_arbitrary_shapes() {
+        fn check(n: usize, shards: usize) {
+            let p = ShardPlan::new(n, shards).unwrap();
+            assert_eq!(p.n(), n);
+            assert_eq!(p.shards(), shards);
+            // contiguous cover of [0, n)
+            let mut cursor = 0;
+            for s in 0..shards {
+                let (lo, hi) = p.range(s);
+                assert_eq!(lo, cursor, "n={n} shards={shards} s={s}: gap or overlap");
+                assert!(hi > lo, "n={n} shards={shards} s={s}: empty shard");
+                cursor = hi;
+            }
+            assert_eq!(cursor, n, "n={n} shards={shards}: partition must cover [0, n)");
+            // balance: sizes differ by ≤ 1, extras go to the first n % shards
+            let (base, extra) = (n / shards, n % shards);
+            for s in 0..shards {
+                let want = base + usize::from(s < extra);
+                assert_eq!(p.len_of(s), want, "n={n} shards={shards} s={s}");
+            }
+            assert_eq!(p.min_size(), base + usize::from(extra == shards));
+            assert_eq!(p.max_size(), base + usize::from(extra > 0));
+            // shard_of inverts range on every id
+            for id in 0..n {
+                let s = p.shard_of(id);
+                let (lo, hi) = p.range(s);
+                assert!((lo..hi).contains(&id), "n={n} shards={shards} id={id} s={s}");
+            }
+        }
+        for n in 1..=24 {
+            for shards in 1..=n {
+                check(n, shards);
+            }
+        }
+        let mut rng = Rng::new(0x5AA2D);
+        for _ in 0..50 {
+            let n = 25 + rng.gen_range(4_000) as usize;
+            let shards = 1 + rng.gen_range(n as u64) as usize;
+            check(n, shards);
+            // target-size construction never undershoots its target
+            let size = 1 + rng.gen_range(n as u64) as usize;
+            let q = ShardPlan::from_shard_size(n, size).unwrap();
+            assert!(
+                q.shards() == 1 || q.min_size() >= size,
+                "n={n} size={size}: min shard {} below target",
+                q.min_size()
+            );
+        }
+    }
+
     #[test]
     fn level_seeds_are_distinct_domains() {
         let master = 42;

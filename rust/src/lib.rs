@@ -33,5 +33,6 @@ pub mod protocol;
 pub mod runtime;
 pub mod shamir;
 pub mod sim;
+pub mod spec;
 pub mod util;
 pub mod wire;

@@ -7,6 +7,7 @@
 //! ccesa analyze turbo          # §1 Turbo-aggregate comparison
 //! ccesa analyze montecarlo     # empirical P_e vs Theorems 5/6
 //! ccesa round --n 100 --p 0.64 --dim 10000   # one secure-agg round
+//! ccesa round --spec specs/sweep.toml        # TOML round spec (flags override)
 //! ccesa round --n 1000 --shards 10 --dim 100 # two-level hierarchical round
 //! ccesa round --session runs/s --rounds 10   # cold round + 10 warm rounds
 //! ccesa topology --n 1000 --shards 10        # planned shard layout + degrees
@@ -17,6 +18,14 @@
 //! ccesa recover --journal runs/j ...         # finish an interrupted round
 //! ccesa connect --n 1000 --addr ...          # drive n loopback clients
 //! ```
+//!
+//! `round`, `topology`, `serve`, `recover` and `connect` all resolve one
+//! [`RoundSpec`]: built-in defaults, overlaid by `--spec <file.toml>`,
+//! overlaid by any flag explicitly passed (see `src/spec.rs` for the file
+//! format). A spec with `[clock]` + `[timeouts]` sections runs virtual-
+//! clock rounds; a `timeouts.sweep_ms` axis scores the phase-deadline
+//! tradeoff (reliability/privacy/latency per deadline); `serve` maps the
+//! same `[timeouts]` policy onto wall-clock poll deadlines.
 //!
 //! A journaled `serve` that dies — crash, kill, SIGTERM — leaves a
 //! resumable round on disk; `recover` replays the journal and finishes the
@@ -31,18 +40,18 @@ use ccesa::analysis::bounds::{
 use ccesa::analysis::costs::{table1_row, turbo_comparison_ratio};
 use ccesa::analysis::montecarlo::estimate_failure_rates;
 use ccesa::fl::data::{partition_iid, partition_noniid, SyntheticCifar};
-use ccesa::hier::{root_seed, shard_seed, HierOptions, HierRunner, ShardPlan};
 use ccesa::fl::rounds::{run_fl_mlp, Aggregation, FlConfig};
+use ccesa::hier::{root_seed, shard_seed, HierOptions, HierRunner, ShardPlan};
 use ccesa::protocol::dropout::DropoutModel;
 use ccesa::protocol::engine::run_round;
 use ccesa::protocol::{ProtocolConfig, Topology};
 use ccesa::runtime::mlp::MlpRuntime;
 use ccesa::runtime::Runtime;
-use ccesa::sim::CodecSpec;
+use ccesa::spec::{parse_codec, RoundSpec};
 use ccesa::util::cli::Args;
 use ccesa::util::json::Json;
 use ccesa::util::rng::Rng;
-use std::time::Duration;
+use std::sync::Arc;
 
 fn main() -> Result<()> {
     ccesa::util::logging::init();
@@ -51,6 +60,12 @@ fn main() -> Result<()> {
         "Communication-Computation Efficient Secure Aggregation (Choi et al. 2020)\n\
          subcommands: analyze {pstar|costs|turbo|montecarlo} | round | topology | fl \
          | kernels | serve | recover | connect",
+    )
+    .flag(
+        "spec",
+        None,
+        "TOML round spec for round|topology|serve|recover|connect \
+         (defaults ← file ← explicitly passed flags; see src/spec.rs)",
     )
     .flag("n", Some("100"), "number of clients")
     .flag("p", None, "ER connection probability (default: p*(n, qtotal))")
@@ -93,8 +108,8 @@ fn main() -> Result<()> {
     let sub: Vec<&str> = args.positional().iter().map(|s| s.as_str()).collect();
     match sub.first().copied() {
         Some("analyze") => analyze(&args, sub.get(1).copied().unwrap_or("pstar")),
-        Some("round") => round(&args),
-        Some("topology") => topology_cmd(&args),
+        Some("round") => round(&RoundSpec::resolve(&args)?),
+        Some("topology") => topology_cmd(&RoundSpec::resolve(&args)?),
         Some("fl") => fl(&args),
         // kernel-dispatch audit: which GF(2^16)/mask backend this process
         // selected (cpuid + CCESA_KERNEL), as JSON on stdout — CI asserts
@@ -103,9 +118,9 @@ fn main() -> Result<()> {
             println!("{}", ccesa::kernels::report_json());
             Ok(())
         }
-        Some("serve") => serve_cmd(&args),
-        Some("recover") => recover_cmd(&args),
-        Some("connect") => connect_cmd(&args),
+        Some("serve") => serve_cmd(&RoundSpec::resolve(&args)?, args.get_bool("check")),
+        Some("recover") => recover_cmd(&RoundSpec::resolve(&args)?),
+        Some("connect") => connect_cmd(&RoundSpec::resolve(&args)?),
         other => {
             if let Some(o) = other {
                 eprintln!("unknown subcommand {o:?}\n");
@@ -159,95 +174,35 @@ fn analyze(args: &Args, what: &str) -> Result<()> {
     Ok(())
 }
 
-/// Parse `dense | topk:<frac> | randk:<frac>` into the scenario-axis codec
-/// spec (fraction-relative, resolved against the concrete dim).
-fn parse_codec(spec: &str) -> Result<CodecSpec> {
-    let spec = spec.trim();
-    if spec == "dense" {
-        return Ok(CodecSpec::Dense);
+fn round(spec: &RoundSpec) -> Result<()> {
+    if let Some(plan) = spec.shard_plan()? {
+        return hier_round(spec, plan);
     }
-    let (kind, frac) = spec
-        .split_once(':')
-        .ok_or_else(|| anyhow!("codec {spec:?}: expected dense | topk:<frac> | randk:<frac>"))?;
-    let frac: f64 = frac
-        .parse()
-        .map_err(|_| anyhow!("codec {spec:?}: fraction must be a number in (0, 1]"))?;
-    if !frac.is_finite() || frac <= 0.0 || frac > 1.0 {
-        bail!("codec {spec:?}: fraction {frac} must be in (0, 1]");
+    if let Some(t) = &spec.timeouts {
+        if !t.sweep_ms.is_empty() {
+            return timeout_sweep(spec);
+        }
     }
-    match kind {
-        "topk" => Ok(CodecSpec::TopK { frac }),
-        "randk" => Ok(CodecSpec::RandK { frac }),
-        other => bail!("unknown codec family {other:?} (dense|topk|randk)"),
+    if spec.clock.is_some() {
+        return clocked_rounds(spec);
     }
-}
-
-/// Resolve `--shards` / `--shard-size` into a [`ShardPlan`], or `None` when
-/// neither flag is present (flat round).
-fn shard_plan_from_args(args: &Args, n: usize) -> Result<Option<ShardPlan>> {
-    match (args.get::<usize>("shards"), args.get::<usize>("shard-size")) {
-        (Some(_), Some(_)) => bail!("--shards and --shard-size are mutually exclusive"),
-        (Some(s), None) => Ok(Some(ShardPlan::new(n, s)?)),
-        (None, Some(m)) => Ok(Some(ShardPlan::from_shard_size(n, m)?)),
-        (None, None) => Ok(None),
+    let cfg = spec.protocol_config()?;
+    if let Some(dir) = spec.session.clone() {
+        return session_rounds(spec, &cfg, &dir);
     }
-}
-
-/// Per-shard graph parameters shared by `round --shards` and `topology`:
-/// `p` and `t` default from the *minimum* shard size (the builder requires
-/// every shard to hold ≥ t+1 clients, so the smallest shard governs).
-fn shard_graph_params(args: &Args, plan: &ShardPlan) -> (f64, usize, bool) {
-    let qt: f64 = args.req("qtotal");
-    let sa = args.get_bool("sa");
-    // `t_rule`/`p_star` need n ≥ 2; the builder rejects genuinely
-    // undersized shards later with its own ≥ t+1 message.
-    let m = plan.min_size().max(2);
-    let p = if sa { 1.0 } else { args.get::<f64>("p").unwrap_or_else(|| p_star(m, qt)) };
-    let t = args.get::<usize>("t").unwrap_or_else(|| {
-        let t = if sa { m / 2 + 1 } else { t_rule(m, p) };
-        t.min(m.saturating_sub(1)).max(1)
-    });
-    (p, t, sa)
-}
-
-fn round(args: &Args) -> Result<()> {
-    let n: usize = args.req("n");
-    if let Some(plan) = shard_plan_from_args(args, n)? {
-        return hier_round(args, plan);
-    }
-    let dim: usize = args.req("dim");
-    let qt: f64 = args.req("qtotal");
-    let sa = args.get_bool("sa");
-    let p = args.get::<f64>("p").unwrap_or_else(|| p_star(n, qt));
-    let t = args
-        .get::<usize>("t")
-        .unwrap_or_else(|| if sa { n / 2 + 1 } else { t_rule(n, p) });
-    let topology = if sa { Topology::Complete } else { Topology::ErdosRenyi { p } };
-    let codec = parse_codec(&args.req::<String>("codec"))?.resolve(dim);
-    let cfg = ProtocolConfig::builder()
-        .clients(n)
-        .threshold(t)
-        .model_dim(dim)
-        .topology(topology)
-        .dropout(if qt > 0.0 { DropoutModel::iid_from_total(qt) } else { DropoutModel::None })
-        .codec(codec)
-        .seed(args.req("seed"))
-        .build()?;
-    if let Some(dir) = args.get_str("session") {
-        return session_rounds(args, &cfg, dir);
-    }
-    let mut rng = Rng::new(args.req("seed"));
+    let (n, dim) = (spec.n, spec.dim);
+    let (p, t) = spec.graph_params();
+    let mut rng = Rng::new(spec.seed);
     let models: Vec<Vec<u64>> = (0..n)
         .map(|_| (0..dim).map(|_| rng.next_u64() & 0xFFFF_FFFF).collect())
         .collect();
     let r = run_round(&cfg, &models)?;
     println!(
-        "scheme={} n={n} t={t} p={:.4} dim={dim} codec={}\n\
+        "scheme={} n={n} t={t} p={p:.4} dim={dim} codec={}\n\
          reliable={} |V1..V4|={},{},{},{}\n\
          sum==truth: {}\nbytes up/down per step: {:?} / {:?}\nmasked payload bytes: {}\n\
          client ms (mean): step0={:.3} step1={:.3} step2={:.3} step3={:.3}; server total={:.1} ms",
-        if sa { "SA" } else { "CCESA" },
-        if sa { 1.0 } else { p },
+        if spec.sa { "SA" } else { "CCESA" },
         cfg.codec.name(),
         r.reliable,
         r.sets.v1.len(),
@@ -270,17 +225,61 @@ fn round(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `ccesa round --shards <s>` / `--shard-size <m>`: one two-level
-/// hierarchical round — CCESA inside every shard, then CCESA across the
-/// shard aggregators — driven by [`HierRunner`].
-fn hier_round(args: &Args, plan: ShardPlan) -> Result<()> {
+/// `[timeouts] sweep_ms` + `[clock]`: score reliability/privacy/simulated
+/// latency at each uniform phase deadline — the campaign's deadline axis.
+fn timeout_sweep(spec: &RoundSpec) -> Result<()> {
+    let ts = spec.timeouts.as_ref().expect("validate: sweep implies [timeouts]");
+    let clock = spec.clock.as_ref().expect("validate: sweep implies [clock]");
+    let sc = spec.scenario("spec-sweep");
+    let deadlines_us: Vec<u64> = ts.sweep_ms.iter().map(|ms| ms * 1_000).collect();
+    let rep = ccesa::sim::run_timeout_sweep(&sc, clock, &deadlines_us, ts.min_survivors);
+    print!("{}", rep.render());
+    Ok(())
+}
+
+/// `[clock]` + `[timeouts]` without a sweep: run the spec's rounds on the
+/// virtual clock and report each timeline next to the engine reference.
+fn clocked_rounds(spec: &RoundSpec) -> Result<()> {
+    let csc = spec.clocked_scenario("spec-clocked").expect("validate: clock implies [timeouts]");
+    let plans = csc.base.compile();
+    let colluders = csc.base.adversary.colluders();
+    println!(
+        "clocked rounds: n={} dim={} rounds={} phase deadlines {:?} ms min_survivors={}",
+        spec.n,
+        spec.dim,
+        plans.len(),
+        spec.timeouts.as_ref().map(|t| t.phase_ms).unwrap_or_default(),
+        csc.policy.min_survivors,
+    );
+    for plan in &plans {
+        let models = csc.base.round_models(plan.round);
+        let sched = Arc::new(csc.schedule_for(plan.round));
+        let out = ccesa::sim::run_clocked_plan(plan, &models, &sched, &csc.policy, colluders);
+        let drops: Vec<usize> = out.timeline.dropped.iter().map(|d| d.len()).collect();
+        println!(
+            "round {}: reliable={} aborted={} |V3|={} timeout drops per phase {:?} \
+             simulated latency {} µs (engine reference agrees: {})",
+            plan.round,
+            out.clocked.reliable,
+            out.clocked.aborted,
+            out.clocked.sets.v3.len(),
+            drops,
+            out.timeline.total_us(),
+            out.clocked.sum == out.engine.sum && out.clocked.sets == out.engine.sets,
+        );
+    }
+    Ok(())
+}
+
+/// `ccesa round` with `[shards]`: one two-level hierarchical round —
+/// CCESA inside every shard, then CCESA across the shard aggregators —
+/// driven by [`HierRunner`].
+fn hier_round(spec: &RoundSpec, plan: ShardPlan) -> Result<()> {
     let n = plan.n();
-    let dim: usize = args.req("dim");
-    let qt: f64 = args.req("qtotal");
-    let seed: u64 = args.req("seed");
-    let (p, t, sa) = shard_graph_params(args, &plan);
+    let dim = spec.dim;
+    let seed = spec.seed;
+    let (p, t, sa) = spec.shard_graph_params(&plan);
     let intra = if sa { Topology::Complete } else { Topology::ErdosRenyi { p } };
-    let codec = parse_codec(&args.req::<String>("codec"))?.resolve(dim);
     let cfg = ProtocolConfig::builder()
         .clients(n)
         .threshold(t)
@@ -290,8 +289,12 @@ fn hier_round(args: &Args, plan: ShardPlan) -> Result<()> {
             intra: Box::new(intra),
             root: Box::new(Topology::Complete),
         })
-        .dropout(if qt > 0.0 { DropoutModel::iid_from_total(qt) } else { DropoutModel::None })
-        .codec(codec)
+        .dropout(if spec.qtotal > 0.0 {
+            DropoutModel::iid_from_total(spec.qtotal)
+        } else {
+            DropoutModel::None
+        })
+        .codec(spec.codec.resolve(dim))
         .seed(seed)
         .build()?;
     let mut rng = Rng::new(seed);
@@ -337,15 +340,15 @@ fn hier_round(args: &Args, plan: ShardPlan) -> Result<()> {
 /// `ccesa topology`: print the planned shard layout and the per-level
 /// graphs exactly as a hierarchical round would build them (each shard
 /// graph from its ratcheted shard seed, the root graph from the root seed).
-/// Without `--shards`/`--shard-size` it reports the flat single-level graph.
-fn topology_cmd(args: &Args) -> Result<()> {
-    let n: usize = args.req("n");
-    let seed: u64 = args.req("seed");
-    let plan = match shard_plan_from_args(args, n)? {
+/// Without shards it reports the flat single-level graph.
+fn topology_cmd(spec: &RoundSpec) -> Result<()> {
+    let n = spec.n;
+    let seed = spec.seed;
+    let plan = match spec.shard_plan()? {
         Some(p) => p,
         None => ShardPlan::new(n, 1)?,
     };
-    let (p, t, sa) = shard_graph_params(args, &plan);
+    let (p, t, sa) = spec.shard_graph_params(&plan);
     let intra = if sa { Topology::Complete } else { Topology::ErdosRenyi { p } };
     println!(
         "n={n} shards={} sizes {}..={} t={t} intra={} root=Complete",
@@ -394,15 +397,15 @@ fn topology_cmd(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `ccesa round --session <dir>`: establish a cross-round session with one
-/// cold round, then run `--rounds` warm rounds over fresh synthetic models,
-/// each journaled under `<dir>` (one recoverable `.ccj` per warm round).
-/// Prints the amortization ledger: per-round setup bytes as a fraction of
-/// the cold round's, plus coordinate-map and re-key traffic.
-fn session_rounds(args: &Args, cfg: &ProtocolConfig, dir: &str) -> Result<()> {
+/// `ccesa round` with `[session]`: establish a cross-round session with one
+/// cold round, then run the spec's warm rounds over fresh synthetic models,
+/// each journaled under the session dir (one recoverable `.ccj` per warm
+/// round). Prints the amortization ledger: per-round setup bytes as a
+/// fraction of the cold round's, plus coordinate-map and re-key traffic.
+fn session_rounds(spec: &RoundSpec, cfg: &ProtocolConfig, dir: &str) -> Result<()> {
     use ccesa::protocol::session::Session;
-    let rounds: u64 = args.req("rounds");
-    let seed: u64 = args.req("seed");
+    let rounds = spec.rounds;
+    let seed = spec.seed;
     let modmask = 0xFFFF_FFFFu64;
     let models_for = |round: u64| -> Vec<Vec<u64>> {
         let mut rng = Rng::new(ccesa::protocol::session::round_seed(seed, round) ^ 0x5E55);
@@ -438,35 +441,20 @@ fn session_rounds(args: &Args, cfg: &ProtocolConfig, dir: &str) -> Result<()> {
 }
 
 /// Shared setup for `serve`/`connect`: both endpoints derive the identical
-/// round config, synthetic models and round tag from the same flags, so
+/// round config, synthetic models and round tag from the same spec, so
 /// the wire carries the protocol rather than the training pipeline.
 ///
 /// `--check` is only meaningful for rng-free dropout (the default
-/// `--qtotal 0.0`, where wire, event loop and engine are promised
+/// `qtotal = 0`, where wire, event loop and engine are promised
 /// bit-identical); under `Iid` dropout the engine draws lazily while wire
 /// clients pre-draw, like the event loop.
-fn wire_round_config(args: &Args) -> Result<(ProtocolConfig, Vec<Vec<u64>>, u32)> {
-    let n: usize = args.req("n");
-    let dim: usize = args.req("dim");
-    let qt: f64 = args.req("qtotal");
-    let p = args.get::<f64>("p").unwrap_or_else(|| p_star(n, qt));
-    let t = args.get::<usize>("t").unwrap_or_else(|| t_rule(n, p));
-    let seed: u64 = args.req("seed");
-    let codec = parse_codec(&args.req::<String>("codec"))?.resolve(dim);
-    let mut rng = Rng::new(seed ^ 0x5EED_CAFE);
-    let models: Vec<Vec<u64>> = (0..n)
-        .map(|_| (0..dim).map(|_| rng.next_u64() & 0xFFFF_FFFF).collect())
+fn wire_round_config(spec: &RoundSpec) -> Result<(ProtocolConfig, Vec<Vec<u64>>, u32)> {
+    let mut rng = Rng::new(spec.seed ^ 0x5EED_CAFE);
+    let models: Vec<Vec<u64>> = (0..spec.n)
+        .map(|_| (0..spec.dim).map(|_| rng.next_u64() & 0xFFFF_FFFF).collect())
         .collect();
-    let cfg = ProtocolConfig::builder()
-        .clients(n)
-        .threshold(t)
-        .model_dim(dim)
-        .topology(Topology::ErdosRenyi { p })
-        .dropout(if qt > 0.0 { DropoutModel::iid_from_total(qt) } else { DropoutModel::None })
-        .codec(codec)
-        .seed(seed)
-        .build()?;
-    let round = ccesa::net::socket::round_tag(seed);
+    let cfg = spec.protocol_config()?;
+    let round = ccesa::net::socket::round_tag(spec.seed);
     Ok((cfg, models, round))
 }
 
@@ -483,30 +471,44 @@ fn print_round_result(r: &ccesa::coordinator::CoordRoundResult) {
         r.stats.bytes_up.iter().sum::<u64>(),
         r.stats.bytes_down.iter().sum::<u64>(),
     );
+    if let Some(tl) = &r.timeline {
+        println!(
+            "phase deadlines: dropped {:?} (per phase), elapsed {:?} µs, {} timeout drops",
+            tl.dropped,
+            tl.phase_elapsed_us,
+            r.stats.timeout_drops.iter().sum::<u64>(),
+        );
+    }
 }
 
-fn serve_cmd(args: &Args) -> Result<()> {
+fn serve_cmd(spec: &RoundSpec, check: bool) -> Result<()> {
     ccesa::util::shutdown::install_handlers();
-    let (cfg, models, round) = wire_round_config(args)?;
-    let timeout = Duration::from_secs(args.req::<u64>("timeout-s"));
-    let addr: String = args.req("addr");
-    let listener = std::net::TcpListener::bind(&addr)?;
+    let (cfg, models, round) = wire_round_config(spec)?;
+    let listener = std::net::TcpListener::bind(&spec.addr)?;
     println!("serving round {round:#010x} for n={} clients on {}", cfg.n, listener.local_addr()?);
     let setup = ccesa::coordinator::derive_round_setup(&cfg, &models);
     let mut opts = ccesa::coordinator::RoundOptions::builder()
         .executor(ccesa::coordinator::Executor::Wire)
-        .timeout(timeout);
-    if let Some(dir) = args.get_str("journal") {
-        opts = opts.journal(dir.to_string());
+        .timeout(spec.wire_timeout());
+    if let Some(policy) = spec.timeout_policy() {
+        println!(
+            "phase deadlines {:?} ms, min_survivors {}",
+            spec.timeouts.as_ref().map(|t| t.phase_ms).unwrap_or_default(),
+            policy.min_survivors,
+        );
+        opts = opts.timeout_policy(policy);
+    }
+    if let Some(dir) = &spec.journal {
+        opts = opts.journal(dir.clone());
         println!(
             "journaling to {} (resume with `ccesa recover --journal …` after a crash)",
-            ccesa::journal::Journal::path_for(std::path::Path::new(&dir), round).display()
+            ccesa::journal::Journal::path_for(std::path::Path::new(dir), round).display()
         );
     }
     let opts = opts.build()?;
     let r = ccesa::net::socket::serve(&listener, &cfg, setup.plan, setup.graph, round, &opts)?;
     print_round_result(&r);
-    if args.get_bool("check") {
+    if check {
         let sync = run_round(&cfg, &models)?;
         if r.reliable != sync.reliable {
             bail!("check: reliable {} over the wire vs {} in-process", r.reliable, sync.reliable);
@@ -527,39 +529,44 @@ fn serve_cmd(args: &Args) -> Result<()> {
 
 /// Finish a round an interrupted journaled `serve` left on disk. Accepts
 /// the journal file itself or the directory `serve --journal` was given
-/// (the file name is then derived from `--seed`, like `serve` derived it).
-fn recover_cmd(args: &Args) -> Result<()> {
+/// (the file name is then derived from the seed, like `serve` derived it).
+fn recover_cmd(spec: &RoundSpec) -> Result<()> {
     ccesa::util::shutdown::install_handlers();
-    let timeout = Duration::from_secs(args.req::<u64>("timeout-s"));
-    let addr: String = args.req("addr");
-    let journal: String = args
-        .get_str("journal")
+    let journal = spec
+        .journal
+        .clone()
         .ok_or_else(|| anyhow!("recover requires --journal <file-or-directory>"))?;
     let mut path = std::path::PathBuf::from(&journal);
     if path.is_dir() {
-        let seed: u64 = args.req("seed");
-        path = ccesa::journal::Journal::path_for(&path, ccesa::net::socket::round_tag(seed));
+        path = ccesa::journal::Journal::path_for(&path, ccesa::net::socket::round_tag(spec.seed));
     }
-    let listener = std::net::TcpListener::bind(&addr)?;
+    let listener = std::net::TcpListener::bind(&spec.addr)?;
     println!("resuming round from {} on {}", path.display(), listener.local_addr()?);
-    let opts = ccesa::coordinator::RoundOptions::builder()
+    let mut opts = ccesa::coordinator::RoundOptions::builder()
         .executor(ccesa::coordinator::Executor::Wire)
-        .timeout(timeout)
-        .build()?;
+        .timeout(spec.wire_timeout());
+    if let Some(policy) = spec.timeout_policy() {
+        opts = opts.timeout_policy(policy);
+    }
+    let opts = opts.build()?;
     let r = ccesa::net::socket::serve_resume(&listener, &path, &opts)?;
     print_round_result(&r);
     Ok(())
 }
 
-fn connect_cmd(args: &Args) -> Result<()> {
-    let (cfg, models, round) = wire_round_config(args)?;
-    let timeout = Duration::from_secs(args.req::<u64>("timeout-s"));
-    let addr: String = args.req("addr");
+fn connect_cmd(spec: &RoundSpec) -> Result<()> {
+    let (cfg, models, round) = wire_round_config(spec)?;
     let addr: std::net::SocketAddr =
-        addr.parse().map_err(|e| anyhow!("bad --addr {addr:?}: {e}"))?;
+        spec.addr.parse().map_err(|e| anyhow!("bad --addr {:?}: {e}", spec.addr))?;
     // retries failed connects with jittered backoff and resubmits after a
     // server restart — the client side of `serve --journal` + `recover`
-    ccesa::net::socket::drive_clients_retry(move || addr, &cfg, &models, round, timeout)?;
+    ccesa::net::socket::drive_clients_retry(
+        move || addr,
+        &cfg,
+        &models,
+        round,
+        spec.wire_timeout(),
+    )?;
     println!("drove {} clients through round {round:#010x} against {addr}", cfg.n);
     Ok(())
 }

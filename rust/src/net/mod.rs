@@ -57,6 +57,12 @@ pub struct NetStats {
     /// Session re-key traffic, server → client (key bundles / replacement
     /// neighbor keys / re-dealt share deliveries).
     pub rekey_down: u64,
+    /// timeout_drops[step] — clients the server dropped at the phase-`step`
+    /// deadline (virtual-clock event loop or wire `TimeoutPolicy`): the
+    /// client produced its message too late, the server closed the phase
+    /// without it, and from then on it is indistinguishable from a churned
+    /// client. Zero on untimed executors.
+    pub timeout_drops: [u64; 4],
 }
 
 impl NetStats {
@@ -127,6 +133,18 @@ impl NetStats {
         }
     }
 
+    /// Classify one client as timeout-dropped at the `step` phase deadline.
+    /// Its late message is discarded unread, so no bytes are charged — the
+    /// counter records the *decision*, which the differential harness
+    /// compares bit-for-bit across executors.
+    pub fn record_timeout_drop(&mut self, step: usize) {
+        assert!(
+            step < 4,
+            "NetStats::record_timeout_drop: step {step} out of range (protocol has steps 0..=3)"
+        );
+        self.timeout_drops[step] += 1;
+    }
+
     /// Setup traffic of the round: steps 0–1 in both directions, minus the
     /// coordinate-map bytes (which pay for the codec, not for keys/shares).
     /// This is the quantity the session layer amortizes — warm rounds must
@@ -182,6 +200,9 @@ impl NetStats {
         self.coord_map_bytes += other.coord_map_bytes;
         self.rekey_up += other.rekey_up;
         self.rekey_down += other.rekey_down;
+        for s in 0..4 {
+            self.timeout_drops[s] += other.timeout_drops[s];
+        }
         // the two per-client vectors are independent dimensions: each one
         // resizes under its own length check (resizing client_down under a
         // client_up guard dropped bytes whenever the lengths diverged)
@@ -204,6 +225,14 @@ impl NetStats {
     /// contiguous id range `[offset, offset + m)`, so its local client i is
     /// the global client `offset + i`. Aggregate (per-step / framed /
     /// payload) counters merge unchanged.
+    ///
+    /// `offset + other.n` must not overflow `usize`: a wild offset is a
+    /// caller bug (a shard plan never produces one), and the named assert
+    /// beats an opaque capacity-overflow panic inside `Vec::resize`. Note
+    /// the id spaces are *not* checked for disjointness — calling
+    /// `merge_at` twice with overlapping ranges silently sums the
+    /// overlapping clients' traffic, which is the documented (mis)use
+    /// semantics pinned by tests.
     pub fn merge_at(&mut self, other: &NetStats, offset: usize) {
         for s in 0..4 {
             self.bytes_up[s] += other.bytes_up[s];
@@ -217,11 +246,26 @@ impl NetStats {
         self.coord_map_bytes += other.coord_map_bytes;
         self.rekey_up += other.rekey_up;
         self.rekey_down += other.rekey_down;
-        if self.client_up.len() < offset + other.client_up.len() {
-            self.client_up.resize(offset + other.client_up.len(), 0);
+        for s in 0..4 {
+            self.timeout_drops[s] += other.timeout_drops[s];
         }
-        if self.client_down.len() < offset + other.client_down.len() {
-            self.client_down.resize(offset + other.client_down.len(), 0);
+        let up_end = offset.checked_add(other.client_up.len()).unwrap_or_else(|| {
+            panic!(
+                "NetStats::merge_at: offset {offset} + {} clients overflows the id space",
+                other.client_up.len()
+            )
+        });
+        let down_end = offset.checked_add(other.client_down.len()).unwrap_or_else(|| {
+            panic!(
+                "NetStats::merge_at: offset {offset} + {} clients overflows the id space",
+                other.client_down.len()
+            )
+        });
+        if self.client_up.len() < up_end {
+            self.client_up.resize(up_end, 0);
+        }
+        if self.client_down.len() < down_end {
+            self.client_down.resize(down_end, 0);
         }
         for (i, u) in other.client_up.iter().enumerate() {
             self.client_up[offset + i] += u;
@@ -245,6 +289,7 @@ impl NetStats {
             && self.coord_map_bytes == other.coord_map_bytes
             && self.rekey_up == other.rekey_up
             && self.rekey_down == other.rekey_down
+            && self.timeout_drops == other.timeout_drops
             && self.client_up == other.client_up
             && self.client_down == other.client_down
     }
@@ -355,6 +400,73 @@ mod tests {
         assert_eq!(c.coord_map_bytes, 15);
         assert_eq!(c.rekey_up, 64);
         assert_eq!(c.rekey_down, 7);
+    }
+
+    #[test]
+    fn timeout_drops_merge_and_gate_logical_eq() {
+        let mut a = NetStats::new(2);
+        a.record(0, Dir::Up, 0, 10);
+        let mut b = a.clone();
+        assert!(a.logical_eq(&b));
+        b.record_timeout_drop(2);
+        b.record_timeout_drop(2);
+        b.record_timeout_drop(3);
+        assert_eq!(b.timeout_drops, [0, 0, 2, 1]);
+        assert!(
+            !a.logical_eq(&b),
+            "a timeout classification is a logical difference between executors"
+        );
+        a.merge(&b);
+        assert_eq!(a.timeout_drops, [0, 0, 2, 1]);
+        let mut c = NetStats::new(1);
+        c.record_timeout_drop(2);
+        c.merge_at(&b, 5);
+        assert_eq!(c.timeout_drops, [0, 0, 3, 1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "step 4 out of range")]
+    fn timeout_drop_rejects_invalid_step() {
+        let mut s = NetStats::new(1);
+        s.record_timeout_drop(4);
+    }
+
+    #[test]
+    fn merge_at_rehomes_per_client_traffic() {
+        let mut root = NetStats::new(2);
+        root.record(0, Dir::Up, 1, 5);
+        let mut shard = NetStats::new(3);
+        shard.record(2, Dir::Up, 0, 100);
+        shard.record(2, Dir::Down, 2, 7);
+        root.merge_at(&shard, 4);
+        assert_eq!(root.client_up, vec![0, 5, 0, 0, 100, 0, 0]);
+        assert_eq!(root.client_down, vec![0, 0, 0, 0, 0, 0, 7]);
+        assert_eq!(root.bytes_up[2], 100);
+    }
+
+    #[test]
+    fn merge_at_overlapping_id_spaces_sum_per_client() {
+        // Documented misuse semantics: merge_at does not police
+        // disjointness, so overlapping ranges sum the overlap. A shard
+        // plan's ranges are disjoint by construction; anything else is on
+        // the caller, and this pin keeps the behavior from drifting
+        // silently.
+        let mut agg = NetStats::new(0);
+        let mut shard = NetStats::new(2);
+        shard.record(0, Dir::Up, 0, 10);
+        shard.record(0, Dir::Up, 1, 20);
+        agg.merge_at(&shard, 0);
+        agg.merge_at(&shard, 1); // overlaps global id 1
+        assert_eq!(agg.client_up, vec![10, 30, 20]);
+        assert_eq!(agg.bytes_up[0], 60, "aggregate counters double-count too");
+    }
+
+    #[test]
+    #[should_panic(expected = "overflows the id space")]
+    fn merge_at_offset_overflow_panics_with_named_message() {
+        let mut a = NetStats::new(1);
+        let b = NetStats::new(2);
+        a.merge_at(&b, usize::MAX - 1);
     }
 
     #[test]

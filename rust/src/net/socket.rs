@@ -48,7 +48,10 @@
 //! records protocol state, not byte accounting).
 
 use crate::codec::IndexPlan;
-use crate::coordinator::{derive_round_setup, event_loop_workers, CoordRoundResult, RoundOptions};
+use crate::coordinator::{
+    derive_round_setup, event_loop_workers, CoordRoundResult, RoundOptions, RoundTimeline,
+    TimeoutPolicy,
+};
 use crate::graph::Graph;
 use crate::journal::{self, Journal, JournalSink};
 use crate::net::{Dir, NetStats};
@@ -323,6 +326,14 @@ struct Exchange {
     /// Per-recipient union-coordinate-map bytes riding on each warm plan
     /// down (TopK warm rounds only; 0 for cold rounds).
     map_bytes: usize,
+    /// Per-phase straggler policy: the sim-tuned [`TimeoutPolicy`] mapped
+    /// onto wall-clock poll deadlines. `None` → only the whole-round
+    /// `deadline` applies (the historical behavior).
+    policy: Option<TimeoutPolicy>,
+    /// Wall-clock phase timings and per-phase timeout drops, mirrored from
+    /// the event loop's virtual timeline so deployments report the same
+    /// observable.
+    timeline: RoundTimeline,
 }
 
 impl Exchange {
@@ -347,8 +358,21 @@ impl Exchange {
     /// decode awaited answers, and return once no open connection is still
     /// awaited. Yields the parked `Up`s sorted by sender id — the same
     /// order the event loop drains its lanes in.
+    ///
+    /// With a [`TimeoutPolicy`], the phase additionally closes at
+    /// `phase-open + per_phase_deadlines[phase]` (capped by the whole-round
+    /// `deadline`): clients still outstanding then are disconnected and
+    /// counted as timeout drops — from here on the round treats them
+    /// exactly like churned clients — unless fewer than `min_survivors`
+    /// answers have landed, in which case the server keeps waiting (up to
+    /// the whole-round deadline, whose hard failure is unchanged).
     fn collect(&mut self, phase: u8) -> Result<Vec<Up>> {
         let deadline = self.deadline;
+        let opened = Instant::now();
+        let phase_deadline = self
+            .policy
+            .as_ref()
+            .map(|p| (opened + p.per_phase_deadlines[phase as usize]).min(deadline));
         loop {
             if shutdown::requested() {
                 bail!("{INTERRUPTED}: shutdown requested during phase {phase}");
@@ -376,11 +400,31 @@ impl Exchange {
             if outstanding == 0 {
                 break;
             }
+            if let Some(pd) = phase_deadline {
+                let floor = self.policy.as_ref().map_or(0, |p| p.min_survivors);
+                let delivered = self.conns.iter().filter(|c| c.slot.is_some()).count();
+                if Instant::now() >= pd && delivered >= floor {
+                    for c in self.conns.iter_mut() {
+                        if c.open && c.awaiting {
+                            if let Some(id) = c.id {
+                                self.timeline.dropped[phase as usize].push(id);
+                            }
+                            c.close();
+                            c.awaiting = false;
+                            self.stats.record_timeout_drop(phase as usize);
+                        }
+                    }
+                    self.timeline.dropped[phase as usize].sort_unstable();
+                    break;
+                }
+            }
             if Instant::now() >= deadline {
                 bail!("phase {phase}: timed out with {outstanding} clients still outstanding");
             }
             std::thread::sleep(POLL_PAUSE);
         }
+        self.timeline.phase_elapsed_us[phase as usize] =
+            opened.elapsed().as_micros().min(u64::MAX as u128) as u64;
         let mut ups: Vec<Up> = self.conns.iter_mut().filter_map(|c| c.slot.take()).collect();
         ups.sort_by_key(|u| u.from());
         Ok(ups)
@@ -656,6 +700,8 @@ fn serve_accepted(
         round,
         deadline,
         map_bytes,
+        policy: opts.timeout_policy.clone(),
+        timeline: RoundTimeline::default(),
     };
 
     if matches!(opts.stop_after, Some(StopAfter::Setup)) {
@@ -680,7 +726,8 @@ fn serve_accepted(
     }
     let RoundOutput { sum, reliable, sets } = output.expect("phase 3 yields the round output");
     finish_blast(&mut ex);
-    Ok(CoordRoundResult { sum, reliable, sets, stats: ex.stats })
+    let timeline = ex.policy.is_some().then(|| ex.timeline.clone());
+    Ok(CoordRoundResult { sum, reliable, sets, stats: ex.stats, timeline })
 }
 
 /// Resume a journaled round after a server crash or shutdown.
@@ -721,6 +768,8 @@ pub fn serve_resume(
         round,
         deadline,
         map_bytes: rec.map_bytes,
+        policy: opts.timeout_policy.clone(),
+        timeline: RoundTimeline::default(),
     };
 
     // The round already finalized on disk: nothing left to compute. Wave
@@ -729,7 +778,7 @@ pub fn serve_resume(
         let output = rec.output.expect("phase-4 recovery carries the round output");
         finish_wave(listener, &mut ex)?;
         let RoundOutput { sum, reliable, sets } = output;
-        return Ok(CoordRoundResult { sum, reliable, sets, stats: ex.stats });
+        return Ok(CoordRoundResult { sum, reliable, sets, stats: ex.stats, timeline: None });
     }
 
     if next == 0 {
@@ -752,7 +801,8 @@ pub fn serve_resume(
     }
     let RoundOutput { sum, reliable, sets } = output.expect("phase 3 yields the round output");
     finish_blast(&mut ex);
-    Ok(CoordRoundResult { sum, reliable, sets, stats: ex.stats })
+    let timeline = ex.policy.is_some().then(|| ex.timeline.clone());
+    Ok(CoordRoundResult { sum, reliable, sets, stats: ex.stats, timeline })
 }
 
 /// The reconnect barrier of a mid-round resume: accept connections and

@@ -548,7 +548,7 @@ impl Session {
             }
         }
         let RoundOutput { sum, reliable, sets } = server.finalize(responses)?;
-        Ok((CoordRoundResult { sum, reliable, sets, stats }, server))
+        Ok((CoordRoundResult { sum, reliable, sets, stats, timeline: None }, server))
     }
 }
 

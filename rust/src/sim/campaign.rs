@@ -280,6 +280,11 @@ fn encode_round_record(r: &RoundRecord) -> Vec<u8> {
     put_u64(&mut out, s.coord_map_bytes);
     put_u64(&mut out, s.rekey_up);
     put_u64(&mut out, s.rekey_down);
+    // virtual-clock era: timeout-dropout classification, same tail-extension
+    // backward compatibility
+    for step in 0..4 {
+        put_u64(&mut out, s.timeout_drops[step]);
+    }
     out
 }
 
@@ -333,6 +338,11 @@ fn decode_round_record(payload: &[u8]) -> Result<RoundRecord> {
         stats.coord_map_bytes = rd.u64("coord_map_bytes")?;
         stats.rekey_up = rd.u64("rekey_up")?;
         stats.rekey_down = rd.u64("rekey_down")?;
+    }
+    if rd.remaining() > 0 {
+        for step in 0..4 {
+            stats.timeout_drops[step] = rd.u64("timeout_drops")?;
+        }
     }
     rd.done()?;
     Ok(RoundRecord {

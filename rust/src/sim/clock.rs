@@ -1,0 +1,680 @@
+//! Virtual-clock event scheduler: latency, stragglers and phase timeouts
+//! as a deterministic, replayable simulation axis.
+//!
+//! The sim subsystem's churn models decide *who* drops; this module decides
+//! *when the server stops waiting* — the deployment knob that actually
+//! produces timeout dropouts in the field. The pieces:
+//!
+//! * [`LatencyModel`] / [`ClockSpec`] — seeded per-link latency and
+//!   per-client compute-delay distributions, pre-materialized by
+//!   [`ClockSpec::materialize`] into a rng-free [`ClockSchedule`] (exactly
+//!   like churn materializes to a `Targeted` schedule), so clocked rounds
+//!   replay bit-identically and the differential shrinker keeps working;
+//! * [`close_phase`] — the event queue: a binary heap over the phase's
+//!   deliveries in arrival order, closed against a
+//!   [`TimeoutPolicy`] deadline with a `min_survivors` grace floor. The
+//!   event-loop executor calls this between the lane sweep and the server
+//!   step, so a late client is dropped *exactly like a churned client*;
+//! * [`run_clocked_plan`] — one clocked round plus its engine reference:
+//!   the sync engine re-run with the observed timeout drops merged into the
+//!   churn schedule. The clocked differential
+//!   (`sim::differential`, [`super::differential::DiffSpec::Clocked`])
+//!   requires the two to agree bit-for-bit, which is the literal check that
+//!   timeout dropouts feed the V2/V3 survivor machinery and the Theorem-1
+//!   predicate identically to churn;
+//! * [`run_timeout_sweep`] — the campaign axis: reliability, privacy and
+//!   simulated latency as a function of the phase deadline.
+//!
+//! The same [`TimeoutPolicy`] maps onto real wall-clock poll deadlines on
+//! the wire executor (`net::socket`), so a policy tuned here is directly
+//! deployable.
+
+use super::campaign::{run_plan, Executor, RoundRecord};
+use super::churn::ChurnModel;
+use super::scenario::{
+    random_scenario, AdversarySpec, CodecSpec, RoundPlan, Scenario, ThresholdRule,
+    TopologySchedule,
+};
+use crate::protocol::dropout::DropoutModel;
+use crate::protocol::{ClientId, Topology};
+use crate::util::rng::Rng;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::sync::Arc;
+use std::time::Duration;
+
+pub use crate::coordinator::{RoundOptions, RoundRunner, RoundTimeline, TimeoutPolicy};
+
+/// Per-delivery link latency distribution, µs.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LatencyModel {
+    /// Every delivery lands instantly; clocked rounds degenerate to the
+    /// untimed event loop unless compute delays alone cross a deadline.
+    None,
+    /// Uniform in `[lo_us, hi_us]` per delivery.
+    Uniform { lo_us: u64, hi_us: u64 },
+    /// Straggler mix: a `slow_frac` fraction of *clients* (drawn once per
+    /// schedule, so a straggler is slow in every phase) deliver from the
+    /// slow range; everyone else from the fast range.
+    Bimodal {
+        fast_lo_us: u64,
+        fast_hi_us: u64,
+        slow_lo_us: u64,
+        slow_hi_us: u64,
+        slow_frac: f64,
+    },
+}
+
+/// The stochastic clock description: link latency plus a uniform per-client
+/// per-phase compute delay, µs. Never consulted during a round — rounds see
+/// only the materialized [`ClockSchedule`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClockSpec {
+    pub link: LatencyModel,
+    /// Uniform compute-delay range `(lo_us, hi_us)` added to every
+    /// delivery's link latency.
+    pub compute_us: (u64, u64),
+}
+
+fn uniform_in(rng: &mut Rng, lo: u64, hi: u64) -> u64 {
+    if hi <= lo {
+        lo
+    } else {
+        lo + rng.gen_range(hi - lo + 1)
+    }
+}
+
+impl ClockSpec {
+    /// Pre-draw every (client, phase) delivery delay — client-major, with
+    /// the straggler coin (if any) flipped first per client. After this the
+    /// clock is pure data: identical (spec, n, seed) ⇒ identical schedule,
+    /// which is what keeps clocked rounds bit-replayable.
+    pub fn materialize(&self, n: usize, seed: u64) -> ClockSchedule {
+        let mut rng = Rng::new(seed);
+        let mut delay_us = Vec::with_capacity(n);
+        for _ in 0..n {
+            let slow = match self.link {
+                LatencyModel::Bimodal { slow_frac, .. } => rng.bernoulli(slow_frac),
+                _ => false,
+            };
+            let mut d = [0u64; 4];
+            for slot in d.iter_mut() {
+                let link = match self.link {
+                    LatencyModel::None => 0,
+                    LatencyModel::Uniform { lo_us, hi_us } => uniform_in(&mut rng, lo_us, hi_us),
+                    LatencyModel::Bimodal {
+                        fast_lo_us,
+                        fast_hi_us,
+                        slow_lo_us,
+                        slow_hi_us,
+                        ..
+                    } => {
+                        if slow {
+                            uniform_in(&mut rng, slow_lo_us, slow_hi_us)
+                        } else {
+                            uniform_in(&mut rng, fast_lo_us, fast_hi_us)
+                        }
+                    }
+                };
+                let compute = uniform_in(&mut rng, self.compute_us.0, self.compute_us.1);
+                *slot = link + compute;
+            }
+            delay_us.push(d);
+        }
+        ClockSchedule { delay_us }
+    }
+}
+
+/// A materialized, rng-free clock: `delay_us[id][phase]` is the virtual
+/// time from the phase opening to client `id`'s delivery reaching the
+/// server (compute + uplink). Pure data — construct one directly for
+/// hand-pinned timings.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ClockSchedule {
+    pub delay_us: Vec<[u64; 4]>,
+}
+
+impl ClockSchedule {
+    pub fn n(&self) -> usize {
+        self.delay_us.len()
+    }
+}
+
+/// Outcome of closing one phase against a deadline.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PhaseClosure {
+    /// Deliveries the server accepted, sorted by id.
+    pub accepted: Vec<ClientId>,
+    /// Deliveries that missed the deadline — dropped like churn, sorted by id.
+    pub timed_out: Vec<ClientId>,
+    /// Virtual time the phase stayed open, µs.
+    pub elapsed_us: u64,
+}
+
+/// Close one phase: a binary-heap event queue over the candidate
+/// deliveries, ordered by (due time, id).
+///
+/// * deliveries due at or before the deadline are accepted;
+/// * past the deadline the server keeps accepting in arrival order until
+///   [`TimeoutPolicy::min_survivors`] have landed (the grace floor);
+/// * everything later is timed out.
+///
+/// `expected` is how many clients the server is still waiting on (lanes it
+/// delivered this phase's input to): when every expected client is
+/// accepted, the phase closes at the last arrival; otherwise the server
+/// sat out the full deadline (or the grace tail, whichever is later) — the
+/// quantity the latency axis reports.
+pub fn close_phase(
+    phase: usize,
+    candidates: &[ClientId],
+    expected: usize,
+    sched: &ClockSchedule,
+    policy: &TimeoutPolicy,
+) -> PhaseClosure {
+    assert!(phase < 4, "close_phase: phase {phase} out of range (protocol has phases 0..=3)");
+    let deadline_us = policy.per_phase_deadlines[phase].as_micros().min(u64::MAX as u128) as u64;
+    let mut queue: BinaryHeap<Reverse<(u64, ClientId)>> = candidates
+        .iter()
+        .map(|&id| Reverse((sched.delay_us[id][phase], id)))
+        .collect();
+    let mut accepted = Vec::new();
+    let mut timed_out = Vec::new();
+    let mut last_accept_us = 0u64;
+    while let Some(Reverse((due, id))) = queue.pop() {
+        if due <= deadline_us || accepted.len() < policy.min_survivors {
+            accepted.push(id);
+            last_accept_us = last_accept_us.max(due);
+        } else {
+            timed_out.push(id);
+        }
+    }
+    let elapsed_us = if accepted.len() == expected {
+        last_accept_us
+    } else {
+        // someone expected never delivered in time: the server sat out the
+        // deadline (or the grace tail, if the floor pulled it further)
+        last_accept_us.max(deadline_us)
+    };
+    accepted.sort_unstable();
+    timed_out.sort_unstable();
+    PhaseClosure { accepted, timed_out, elapsed_us }
+}
+
+/// Salt separating per-round clock schedules from every other seed stream
+/// derived from a scenario seed.
+pub const CLOCK_SEED_SALT: u64 = 0xC10C_AEED;
+
+/// The per-round clock seed: same golden-ratio round mixing as the
+/// scenario's round seeds, domain-separated by [`CLOCK_SEED_SALT`].
+pub fn clock_seed(seed: u64, round: usize) -> u64 {
+    seed ^ (round as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ CLOCK_SEED_SALT
+}
+
+/// A [`Scenario`] with a clock and a timeout policy: the clocked
+/// differential's unit of work.
+#[derive(Debug, Clone)]
+pub struct ClockedScenario {
+    pub base: Scenario,
+    pub clock: ClockSpec,
+    pub policy: TimeoutPolicy,
+}
+
+impl ClockedScenario {
+    /// The round's materialized schedule (rng-free data, derived only from
+    /// the base seed and the round index).
+    pub fn schedule_for(&self, round: usize) -> ClockSchedule {
+        self.clock.materialize(self.base.n, clock_seed(self.base.seed, round))
+    }
+}
+
+/// Randomized clocked scenario: a [`random_scenario`] base plus a random
+/// latency model and deadlines drawn to straddle it — some scenarios drop
+/// no one, some drop stragglers, some abort outright. All three regimes
+/// must stay bit-identical across executors.
+pub fn random_clocked_scenario(seed: u64) -> ClockedScenario {
+    let base = random_scenario(seed);
+    let mut rng = Rng::new(seed ^ 0xC10C_0A15);
+    let link = match rng.gen_range(3) {
+        0 => LatencyModel::Uniform {
+            lo_us: 50 + rng.gen_range(200),
+            hi_us: 2_000 + rng.gen_range(8_000),
+        },
+        1 => LatencyModel::Bimodal {
+            fast_lo_us: 50,
+            fast_hi_us: 1_000,
+            slow_lo_us: 5_000,
+            slow_hi_us: 30_000,
+            slow_frac: 0.1 + rng.next_f64() * 0.4,
+        },
+        _ => LatencyModel::Uniform { lo_us: 10, hi_us: 500 },
+    };
+    let compute_us = (10, 10 + rng.gen_range(500));
+    let per_phase_deadlines =
+        std::array::from_fn(|_| Duration::from_micros(200 + rng.gen_range(40_000)));
+    let min_survivors = match rng.gen_range(3) {
+        0 => 0,
+        1 => base.n / 2,
+        // floor = everyone: the grace path must accept every delivery and
+        // the deadline never drops anyone
+        _ => base.n,
+    };
+    ClockedScenario {
+        base,
+        clock: ClockSpec { link, compute_us },
+        policy: TimeoutPolicy { per_phase_deadlines, min_survivors },
+    }
+}
+
+/// Union the observed timeout drops into a compiled (rng-free) dropout
+/// schedule — the reference-construction step of the clocked differential.
+fn merged_dropout(base: &DropoutModel, extra: &[Vec<ClientId>; 4]) -> DropoutModel {
+    let mut per_step: [Vec<ClientId>; 4] = match base {
+        DropoutModel::Targeted { per_step } => per_step.clone(),
+        DropoutModel::None => std::array::from_fn(|_| Vec::new()),
+        DropoutModel::Iid { .. } => {
+            unreachable!("clocked rounds run compiled plans, whose dropout is always rng-free")
+        }
+    };
+    for (step, ids) in extra.iter().enumerate() {
+        for &id in ids {
+            if !per_step[step].contains(&id) {
+                per_step[step].push(id);
+            }
+        }
+        per_step[step].sort_unstable();
+    }
+    DropoutModel::Targeted { per_step }
+}
+
+/// One clocked round and its engine reference.
+#[derive(Debug, Clone)]
+pub struct ClockedRoundOutcome {
+    /// The clocked event-loop run.
+    pub clocked: RoundRecord,
+    /// The sync engine re-run with the observed timeout drops merged into
+    /// the churn schedule, fully scored (attack, Theorem-1, sum-vs-truth) —
+    /// the reference the differential compares against, and the record the
+    /// timeout sweep reads privacy off.
+    pub engine: RoundRecord,
+    /// What the clock observed (also present even when the round aborted).
+    pub timeline: RoundTimeline,
+}
+
+/// Run one compiled round plan clocked, then build its engine reference.
+///
+/// The event loop decides the timeout classification *dynamically* (the
+/// heap over actual deliveries); the reference is the engine with exactly
+/// those drops added as churn. Identical accepted sets each phase force
+/// identical server state, so the two must agree on survivor sets, sums,
+/// reliability, abort behavior and logical `NetStats` — any divergence is
+/// an event-loop bug (a late client charged, a dropped client still routed
+/// a download, ...), which is what the clocked differential hunts.
+pub fn run_clocked_plan(
+    plan: &RoundPlan,
+    models: &[Vec<u64>],
+    sched: &Arc<ClockSchedule>,
+    policy: &TimeoutPolicy,
+    colluders: &[ClientId],
+) -> ClockedRoundOutcome {
+    assert_eq!(sched.n(), plan.cfg.n, "clock schedule population != round population");
+    let opts = RoundOptions::builder()
+        .executor(Executor::EventLoop)
+        .timeout_policy(policy.clone())
+        .clock(sched.clone())
+        .build()
+        .expect("event loop + clock + timeout_policy is a valid combination");
+    let (res, timeline) = RoundRunner::new(opts).run_clocked(&plan.cfg, models);
+    let clocked = match res {
+        Ok(r) => RoundRecord {
+            round: plan.round,
+            aborted: false,
+            reliable: r.reliable,
+            sum: r.sum,
+            sets: r.sets,
+            stats: r.stats,
+            theorem1_agrees: None,
+            sum_matches_truth: None,
+            breaches: 0,
+            exposed_honest: 0,
+        },
+        Err(_) => RoundRecord::aborted(plan.round, plan.cfg.n),
+    };
+    let mut ref_cfg = plan.cfg.clone();
+    ref_cfg.dropout = merged_dropout(&ref_cfg.dropout, &timeline.dropped);
+    let ref_plan = RoundPlan { round: plan.round, cfg: ref_cfg, graph: plan.graph.clone() };
+    let mut engine = run_plan(&ref_plan, models, Executor::Engine, colluders);
+    // the engine has no clock, so it cannot classify the drops itself;
+    // adopt the observed classification so the NetStats comparison covers
+    // the timeout_drops dimension too
+    if !engine.aborted {
+        for (step, d) in timeline.dropped.iter().enumerate() {
+            engine.stats.timeout_drops[step] = d.len() as u64;
+        }
+    }
+    ClockedRoundOutcome { clocked, engine, timeline }
+}
+
+/// One deadline's aggregate scores in a timeout sweep.
+#[derive(Debug, Clone, Default)]
+pub struct SweepPoint {
+    /// The uniform per-phase deadline this point ran under, µs.
+    pub deadline_us: u64,
+    pub rounds: usize,
+    pub reliable_rounds: usize,
+    pub aborted_rounds: usize,
+    /// Total timeout-dropout classifications across all rounds and phases.
+    pub timeout_drops: u64,
+    pub breached_rounds: usize,
+    pub exposed_honest: usize,
+    pub theorem1_violations: usize,
+    /// Mean simulated round latency, µs.
+    pub mean_round_latency_us: u64,
+}
+
+/// Reliability / privacy / latency as a function of the phase deadline —
+/// the campaign axis the virtual clock exists to score.
+#[derive(Debug, Clone)]
+pub struct TimeoutSweepReport {
+    pub scenario: String,
+    pub min_survivors: usize,
+    pub points: Vec<SweepPoint>,
+}
+
+impl TimeoutSweepReport {
+    /// Human-readable table (the `ccesa round --spec` sweep output).
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "timeout sweep — {} (min_survivors = {})\n{:>12} {:>8} {:>9} {:>8} {:>7} {:>9} {:>8} {:>12}\n",
+            self.scenario,
+            self.min_survivors,
+            "deadline_us",
+            "rounds",
+            "reliable",
+            "aborted",
+            "drops",
+            "breached",
+            "exposed",
+            "latency_us",
+        );
+        for p in &self.points {
+            out.push_str(&format!(
+                "{:>12} {:>8} {:>9} {:>8} {:>7} {:>9} {:>8} {:>12}\n",
+                p.deadline_us,
+                p.rounds,
+                p.reliable_rounds,
+                p.aborted_rounds,
+                p.timeout_drops,
+                p.breached_rounds,
+                p.exposed_honest,
+                p.mean_round_latency_us,
+            ));
+        }
+        out
+    }
+}
+
+/// Sweep a scenario across per-phase deadlines: each point runs the full
+/// campaign clocked (every round through [`run_clocked_plan`]) and scores
+/// reliability, privacy (off the engine reference, where the Definition-2
+/// attack lives) and simulated latency. Deadlines are uniform across the
+/// four phases — the follow-up ROADMAP item is adaptive per-phase tuning.
+pub fn run_timeout_sweep(
+    sc: &Scenario,
+    clock: &ClockSpec,
+    deadlines_us: &[u64],
+    min_survivors: usize,
+) -> TimeoutSweepReport {
+    let plans = sc.compile();
+    let colluders = sc.adversary.colluders();
+    let mut points = Vec::new();
+    for &d in deadlines_us {
+        let policy =
+            TimeoutPolicy::uniform(Duration::from_micros(d)).with_min_survivors(min_survivors);
+        let mut point = SweepPoint { deadline_us: d, rounds: plans.len(), ..Default::default() };
+        let mut total_latency = 0u64;
+        for plan in &plans {
+            let models = sc.round_models(plan.round);
+            let sched = Arc::new(clock.materialize(sc.n, clock_seed(sc.seed, plan.round)));
+            let out = run_clocked_plan(plan, &models, &sched, &policy, colluders);
+            point.reliable_rounds += usize::from(!out.engine.aborted && out.engine.reliable);
+            point.aborted_rounds += usize::from(out.engine.aborted);
+            point.timeout_drops +=
+                out.timeline.dropped.iter().map(|ids| ids.len() as u64).sum::<u64>();
+            point.breached_rounds += usize::from(out.engine.breaches > 0);
+            point.exposed_honest += out.engine.exposed_honest;
+            point.theorem1_violations += usize::from(out.engine.theorem1_agrees == Some(false));
+            total_latency += out.timeline.total_us();
+        }
+        point.mean_round_latency_us = total_latency / plans.len().max(1) as u64;
+        points.push(point);
+    }
+    TimeoutSweepReport { scenario: sc.name.clone(), min_survivors, points }
+}
+
+/// The CI-pinned straggler scenario: a complete graph, no churn, half the
+/// cohort fast (≲2 ms), half straggling (20–40 ms), threshold above the
+/// fast-cohort size. A deadline below the straggler tail drops the slow
+/// half, |V1| < t and the round aborts (the Theorem-1 reliability failure);
+/// a deadline past the tail keeps everyone and the round succeeds — the
+/// deadline-vs-reliability tradeoff in its sharpest form.
+pub fn straggler_scenario(seed: u64) -> (Scenario, ClockSpec) {
+    let sc = Scenario {
+        name: "straggler-tradeoff".to_string(),
+        n: 12,
+        dim: 8,
+        mask_bits: 32,
+        rounds: 3,
+        topology: TopologySchedule::Static(Topology::Complete),
+        churn: ChurnModel::None,
+        adversary: AdversarySpec::Eavesdropper,
+        threshold: ThresholdRule::Fixed(9),
+        codec: CodecSpec::Dense,
+        clip: 4.0,
+        seed,
+    };
+    let clock = ClockSpec {
+        link: LatencyModel::Bimodal {
+            fast_lo_us: 200,
+            fast_hi_us: 1_500,
+            slow_lo_us: 20_000,
+            slow_hi_us: 40_000,
+            slow_frac: 0.5,
+        },
+        compute_us: (50, 300),
+    };
+    (sc, clock)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sched_of(delays: &[[u64; 4]]) -> ClockSchedule {
+        ClockSchedule { delay_us: delays.to_vec() }
+    }
+
+    #[test]
+    fn materialize_is_deterministic_and_seed_sensitive() {
+        let spec = ClockSpec {
+            link: LatencyModel::Bimodal {
+                fast_lo_us: 10,
+                fast_hi_us: 100,
+                slow_lo_us: 1_000,
+                slow_hi_us: 2_000,
+                slow_frac: 0.3,
+            },
+            compute_us: (5, 50),
+        };
+        let a = spec.materialize(20, 42);
+        let b = spec.materialize(20, 42);
+        assert_eq!(a, b, "identical (spec, n, seed) must materialize identically");
+        let c = spec.materialize(20, 43);
+        assert_ne!(a, c, "a different seed draws a different schedule");
+        assert_eq!(a.n(), 20);
+        for d in &a.delay_us {
+            for &v in d {
+                assert!((15..=2_050).contains(&v), "delay {v} outside model support");
+            }
+        }
+    }
+
+    #[test]
+    fn close_phase_accepts_early_and_drops_late() {
+        let sched = sched_of(&[[100, 0, 0, 0], [900, 0, 0, 0], [5_000, 0, 0, 0]]);
+        let policy = TimeoutPolicy::uniform(Duration::from_micros(1_000));
+        let c = close_phase(0, &[0, 1, 2], 3, &sched, &policy);
+        assert_eq!(c.accepted, vec![0, 1]);
+        assert_eq!(c.timed_out, vec![2]);
+        // client 2 never delivered in time: the server sat out the deadline
+        assert_eq!(c.elapsed_us, 1_000);
+    }
+
+    #[test]
+    fn close_phase_without_stragglers_closes_at_last_arrival() {
+        let sched = sched_of(&[[100, 0, 0, 0], [900, 0, 0, 0]]);
+        let policy = TimeoutPolicy::uniform(Duration::from_micros(10_000));
+        let c = close_phase(0, &[0, 1], 2, &sched, &policy);
+        assert_eq!(c.accepted, vec![0, 1]);
+        assert!(c.timed_out.is_empty());
+        assert_eq!(c.elapsed_us, 900, "all expected delivered: phase closes at last arrival");
+    }
+
+    #[test]
+    fn close_phase_grace_floor_overrides_deadline_in_arrival_order() {
+        // deadline 500 would keep only client 0; a floor of 3 pulls the
+        // next two arrivals (900, 2_000) past the deadline, dropping only
+        // the very slowest
+        let sched =
+            sched_of(&[[100, 0, 0, 0], [2_000, 0, 0, 0], [900, 0, 0, 0], [7_000, 0, 0, 0]]);
+        let policy =
+            TimeoutPolicy::uniform(Duration::from_micros(500)).with_min_survivors(3);
+        let c = close_phase(0, &[0, 1, 2, 3], 4, &sched, &policy);
+        assert_eq!(c.accepted, vec![0, 1, 2]);
+        assert_eq!(c.timed_out, vec![3]);
+        assert_eq!(c.elapsed_us, 2_000, "the grace tail is the phase's elapsed time");
+    }
+
+    #[test]
+    fn close_phase_ties_break_by_id() {
+        let sched = sched_of(&[[700, 0, 0, 0], [700, 0, 0, 0], [700, 0, 0, 0]]);
+        let policy = TimeoutPolicy::uniform(Duration::from_micros(0)).with_min_survivors(2);
+        let c = close_phase(0, &[0, 1, 2], 3, &sched, &policy);
+        // all due at 700 > deadline 0: the floor admits exactly two, and
+        // the (due, id) heap order makes that deterministically ids 0, 1
+        assert_eq!(c.accepted, vec![0, 1]);
+        assert_eq!(c.timed_out, vec![2]);
+    }
+
+    #[test]
+    fn clocked_round_with_generous_deadline_matches_untimed_loop() {
+        let sc = Scenario {
+            name: "clock-generous".to_string(),
+            n: 10,
+            dim: 6,
+            mask_bits: 32,
+            rounds: 1,
+            topology: TopologySchedule::Static(Topology::ErdosRenyi { p: 0.8 }),
+            churn: ChurnModel::Iid { q: 0.1 },
+            adversary: AdversarySpec::Eavesdropper,
+            threshold: ThresholdRule::Fixed(3),
+            codec: CodecSpec::Dense,
+            clip: 4.0,
+            seed: 0xC10C_01,
+        };
+        let plans = sc.compile();
+        let models = sc.round_models(0);
+        let sched = Arc::new(
+            ClockSpec { link: LatencyModel::Uniform { lo_us: 10, hi_us: 500 }, compute_us: (1, 20) }
+                .materialize(sc.n, clock_seed(sc.seed, 0)),
+        );
+        let policy = TimeoutPolicy::uniform(Duration::from_secs(10));
+        let out = run_clocked_plan(&plans[0], &models, &sched, &policy, &[]);
+        assert!(!out.timeline.dropped_any(), "a 10 s deadline drops no one");
+        assert_eq!(out.clocked.stats.timeout_drops, [0; 4]);
+        // with no timeout drops the reference is the plain engine round
+        let plain = run_plan(&plans[0], &models, Executor::EventLoop, &[]);
+        assert_eq!(out.clocked.sets, plain.sets);
+        assert_eq!(out.clocked.sum, plain.sum);
+        assert_eq!(out.clocked.stats, plain.stats);
+        assert!(out.timeline.total_us() > 0, "the phases still took virtual time");
+    }
+
+    #[test]
+    fn clocked_rounds_replay_bit_identically() {
+        let csc = random_clocked_scenario(0xC10C_42);
+        let plans = csc.base.compile();
+        let models = csc.base.round_models(plans[0].round);
+        let sched = Arc::new(csc.schedule_for(plans[0].round));
+        let a = run_clocked_plan(&plans[0], &models, &sched, &csc.policy, &[]);
+        let b = run_clocked_plan(&plans[0], &models, &sched, &csc.policy, &[]);
+        assert_eq!(a.timeline, b.timeline, "identical seed ⇒ identical timeline");
+        assert_eq!(a.clocked, b.clocked, "identical seed ⇒ identical record");
+    }
+
+    #[test]
+    fn hand_pinned_straggler_drops_exactly_like_churn() {
+        // 6 clients, complete graph, no churn; client 5 is 50 ms slow in
+        // phase 2 only. A 1 ms deadline must classify exactly {5} at phase
+        // 2, and the engine with churn {5}@step2 must agree bit-for-bit.
+        let sc = Scenario {
+            name: "pinned-straggler".to_string(),
+            n: 6,
+            dim: 4,
+            mask_bits: 32,
+            rounds: 1,
+            topology: TopologySchedule::Static(Topology::Complete),
+            churn: ChurnModel::None,
+            adversary: AdversarySpec::Eavesdropper,
+            threshold: ThresholdRule::Fixed(3),
+            codec: CodecSpec::Dense,
+            clip: 4.0,
+            seed: 0x5712A,
+        };
+        let plans = sc.compile();
+        let models = sc.round_models(0);
+        let mut delays = vec![[100u64; 4]; 6];
+        delays[5][2] = 50_000;
+        let sched = Arc::new(ClockSchedule { delay_us: delays });
+        let policy = TimeoutPolicy::uniform(Duration::from_millis(1));
+        let out = run_clocked_plan(&plans[0], &models, &sched, &policy, &[]);
+        assert_eq!(out.timeline.dropped[2], vec![5]);
+        assert_eq!(out.clocked.stats.timeout_drops, [0, 0, 1, 0]);
+        assert!(!out.clocked.aborted && out.clocked.reliable);
+        assert!(!out.clocked.sets.v3.contains(&5), "5 is out of V3, like churn");
+        assert!(out.clocked.sets.v2.contains(&5), "5 delivered phases 0–1 on time");
+        // the merged-schedule engine agrees on every compared field
+        assert_eq!(out.engine.sets, out.clocked.sets);
+        assert_eq!(out.engine.sum, out.clocked.sum);
+        assert!(out.engine.stats.logical_eq(&out.clocked.stats));
+        assert_eq!(out.engine.stats.timeout_drops, [0, 0, 1, 0]);
+        // phase 2 sat out its full deadline; the other phases closed at
+        // the last arrival
+        assert_eq!(out.timeline.phase_elapsed_us, [100, 100, 1_000, 100]);
+    }
+
+    #[test]
+    fn sweep_reports_the_deadline_tradeoff() {
+        let (sc, clock) = straggler_scenario(0x51EE9);
+        let report = run_timeout_sweep(&sc, &clock, &[5_000, 100_000], 0);
+        assert_eq!(report.points.len(), 2);
+        let short = &report.points[0];
+        let long = &report.points[1];
+        assert_eq!(short.rounds, 3);
+        assert!(
+            short.reliable_rounds < long.reliable_rounds,
+            "short {short:?} vs long {long:?}"
+        );
+        assert_eq!(long.reliable_rounds, 3, "past the straggler tail every round succeeds");
+        assert_eq!(long.timeout_drops, 0);
+        assert!(short.timeout_drops > 0, "the short deadline dropped stragglers");
+        assert!(
+            short.mean_round_latency_us < long.mean_round_latency_us,
+            "waiting out stragglers costs latency: {} vs {}",
+            short.mean_round_latency_us,
+            long.mean_round_latency_us
+        );
+        let rendered = report.render();
+        assert!(rendered.contains("straggler-tradeoff"));
+        assert!(rendered.lines().count() >= 4);
+    }
+}

@@ -387,7 +387,7 @@ pub fn run_round_crashy(
         }
     }
     let RoundOutput { sum, reliable, sets } = output;
-    Ok(CoordRoundResult { sum, reliable, sets, stats })
+    Ok(CoordRoundResult { sum, reliable, sets, stats, timeline: None })
 }
 
 /// The crash-vs-engine differential for one round config: every crash

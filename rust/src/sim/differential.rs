@@ -10,11 +10,19 @@
 //! failing scenario to a small, quotable reproduction seed. Each
 //! non-reference executor is diffed against the engine independently, so a
 //! mismatch names the shape that diverged.
+//!
+//! Every scenario kind enters through **one** dispatcher:
+//! [`run_differential`] over a [`DiffSpec`] — flat, clocked
+//! (virtual-clock timeouts), warm-session, hierarchical, or
+//! crash-recovery. New differential axes register as a `DiffSpec` variant,
+//! not as another parallel `diff_*` entry point.
 
 use super::campaign::{run_plan, Executor, RoundRecord};
 use super::churn::ChurnModel;
+use super::clock::{clock_seed, random_clocked_scenario, run_clocked_plan, ClockedScenario};
 use super::scenario::{random_scenario, AdversarySpec, CodecSpec, Scenario, TopologySchedule};
 use crate::protocol::Topology;
+use std::sync::Arc;
 
 /// A divergence between the engine and one executor on one round.
 #[derive(Debug, Clone)]
@@ -47,6 +55,39 @@ pub struct DifferentialReport {
 impl DifferentialReport {
     pub fn ok(&self) -> bool {
         self.failures.is_empty()
+    }
+}
+
+/// One differential work item. All five scenario kinds dispatch through
+/// [`run_differential`]; the per-kind comparison logic is private to this
+/// module.
+#[derive(Debug, Clone, Copy)]
+pub enum DiffSpec<'a> {
+    /// A flat multi-round scenario through every executor.
+    Flat(&'a Scenario),
+    /// A flat scenario under a virtual clock and timeout policy: the
+    /// clocked event loop vs the sync engine re-run with the observed
+    /// timeout drops merged into the churn schedule.
+    Clocked(&'a ClockedScenario),
+    /// A warm-session campaign (cold establish + warm rounds).
+    Session(&'a super::session::SessionScenario),
+    /// A hierarchical scenario: engine self-check, executor parity, and
+    /// the flat-engine oracle.
+    Hier(&'a super::hier::HierScenario),
+    /// A scenario killed at every crash point, finished on the
+    /// journal-recovered server; journals are written under `journal_dir`.
+    Crash { scenario: &'a Scenario, journal_dir: &'a std::path::Path },
+}
+
+/// Run one differential work item; the first divergence from the reference
+/// wins. `None` means the spec's bit-identical guarantee held.
+pub fn run_differential(spec: &DiffSpec<'_>) -> Option<Mismatch> {
+    match spec {
+        DiffSpec::Flat(sc) => flat_mismatch(sc),
+        DiffSpec::Clocked(csc) => clocked_mismatch(csc),
+        DiffSpec::Session(sc) => session_mismatch(sc),
+        DiffSpec::Hier(sc) => hier_mismatch(sc).0,
+        DiffSpec::Crash { scenario, journal_dir } => crash_mismatch(scenario, journal_dir),
     }
 }
 
@@ -83,7 +124,7 @@ fn diff_records(e: &RoundRecord, c: &RoundRecord, who: &str) -> Option<(&'static
 /// Run one scenario campaign under every executor round by round; the first
 /// divergence from the engine (sums, survivor sets, NetStats, or abort
 /// behavior) wins.
-pub fn diff_scenario(sc: &Scenario) -> Option<Mismatch> {
+fn flat_mismatch(sc: &Scenario) -> Option<Mismatch> {
     let plans = sc.compile();
     let colluders = sc.adversary.colluders();
     for plan in &plans {
@@ -127,10 +168,8 @@ pub fn diff_scenario(sc: &Scenario) -> Option<Mismatch> {
 /// bit-identical sums, survivor sets, abort behavior and logical
 /// [`crate::net::NetStats`] — including the session-era coordinate-map and
 /// re-key counters — on every warm round. The engine executor is the
-/// reference, exactly as in [`diff_scenario`].
-pub fn diff_session_scenario(
-    sc: &super::session::SessionScenario,
-) -> Option<Mismatch> {
+/// reference, exactly as in [`DiffSpec::Flat`].
+fn session_mismatch(sc: &super::session::SessionScenario) -> Option<Mismatch> {
     use super::session::{run_session_campaign, SessionReport};
     let run = |executor: Executor| -> Result<SessionReport, Mismatch> {
         run_session_campaign(sc, executor).map_err(|e| Mismatch {
@@ -209,7 +248,7 @@ pub fn diff_session_scenario(
 /// 1. **Engine self-check** — the hierarchical engine run's secure sum must
 ///    equal the independently computed plaintext truth over `global_v3`
 ///    whenever the round is reliable (the hier analogue of
-///    [`diff_scenario`]'s `sum_vs_truth`).
+///    [`DiffSpec::Flat`]'s `sum_vs_truth`).
 /// 2. **Executor parity** — the hierarchical event-loop run must match the
 ///    hierarchical engine run bit-for-bit: sum, covered clients, per-level
 ///    survivor sets, reliability, and logical per-level `NetStats`.
@@ -221,11 +260,7 @@ pub fn diff_session_scenario(
 ///    topology. (Differing coverage — shard-level withdrawals, dropped
 ///    aggregators — legitimately skips the comparison; `run_hier_differential`
 ///    counts how often it fired.)
-pub fn diff_hier_scenario(sc: &super::hier::HierScenario) -> Option<Mismatch> {
-    diff_hier_scenario_inner(sc).0
-}
-
-fn diff_hier_scenario_inner(sc: &super::hier::HierScenario) -> (Option<Mismatch>, bool) {
+fn hier_mismatch(sc: &super::hier::HierScenario) -> (Option<Mismatch>, bool) {
     use crate::hier::HierRunner;
     let mismatch = |executor: Executor, field: &'static str, detail: String| Mismatch {
         scenario: sc.name.clone(),
@@ -416,7 +451,7 @@ pub fn run_hier_differential(base_seed: u64, count: usize) -> HierDifferentialRe
     for i in 0..count {
         let sc = super::hier::random_hier_scenario(base_seed.wrapping_add(i as u64));
         report.scenarios_run += 1;
-        let (mismatch, compared) = diff_hier_scenario_inner(&sc);
+        let (mismatch, compared) = hier_mismatch(&sc);
         report.oracle_compared += usize::from(compared);
         if let Some(m) = mismatch {
             report.failures.push(m);
@@ -445,7 +480,7 @@ impl HierDifferentialReport {
 /// journal-recovered server — bit-identically to the uninterrupted engine
 /// (or abort exactly when the engine aborts). Journals are written under
 /// `dir`. The first divergence wins; its `detail` names the crash point.
-pub fn diff_crash_scenario(sc: &Scenario, dir: &std::path::Path) -> Option<Mismatch> {
+fn crash_mismatch(sc: &Scenario, dir: &std::path::Path) -> Option<Mismatch> {
     use super::crash::{crash_record, CrashPoint};
     let plans = sc.compile();
     let colluders = sc.adversary.colluders();
@@ -470,6 +505,69 @@ pub fn diff_crash_scenario(sc: &Scenario, dir: &std::path::Path) -> Option<Misma
         }
     }
     None
+}
+
+/// Clocked differential: every round of the scenario runs through the
+/// clocked event loop, whose observed timeout classification is then
+/// merged into the churn schedule of a sync-engine reference run
+/// ([`run_clocked_plan`]). The two must agree bit-for-bit on survivor
+/// sets, sums, reliability, abort behavior and logical
+/// [`crate::net::NetStats`] *including the timeout-dropout counters* —
+/// the literal statement that a timeout-dropped client behaves exactly
+/// like a churned client.
+fn clocked_mismatch(csc: &ClockedScenario) -> Option<Mismatch> {
+    let sc = &csc.base;
+    let plans = sc.compile();
+    let colluders = sc.adversary.colluders();
+    for plan in &plans {
+        let models = sc.round_models(plan.round);
+        let sched = Arc::new(csc.schedule_for(plan.round));
+        let out = run_clocked_plan(plan, &models, &sched, &csc.policy, colluders);
+        if out.engine.sum_matches_truth == Some(false) {
+            return Some(Mismatch {
+                scenario: sc.name.clone(),
+                seed: sc.seed,
+                round: plan.round,
+                executor: Executor::Engine,
+                field: "sum_vs_truth",
+                detail: "engine aggregate != plain sum of V3 models (timeout drops merged)"
+                    .to_string(),
+            });
+        }
+        if let Some((field, detail)) =
+            diff_records(&out.engine, &out.clocked, "clocked event-loop")
+        {
+            return Some(Mismatch {
+                scenario: sc.name.clone(),
+                seed: sc.seed,
+                round: plan.round,
+                executor: Executor::EventLoop,
+                field,
+                detail: format!(
+                    "[clock seed {:#x}, drops {:?}] {detail}",
+                    clock_seed(sc.seed, plan.round),
+                    out.timeline.dropped
+                ),
+            });
+        }
+    }
+    None
+}
+
+/// Generate `count` random clocked scenarios from `base_seed` and
+/// differential-test each. There is no clocked shrinker yet (a ROADMAP
+/// follow-up), so a failure reports the *unshrunk* base scenario.
+pub fn run_clocked_differential(base_seed: u64, count: usize) -> DifferentialReport {
+    let mut report = DifferentialReport::default();
+    for i in 0..count {
+        let csc = random_clocked_scenario(base_seed.wrapping_add(i as u64));
+        report.scenarios_run += 1;
+        report.rounds_run += csc.base.rounds;
+        if let Some(mismatch) = run_differential(&DiffSpec::Clocked(&csc)) {
+            report.failures.push(Failure { mismatch, shrunk: csc.base.clone() });
+        }
+    }
+    report
 }
 
 /// Keep a scenario structurally valid while its knobs shrink.
@@ -539,7 +637,7 @@ fn candidates(sc: &Scenario, failing_round: usize) -> Vec<Scenario> {
 /// reproduces a mismatch, until none applies. Returns the input unchanged
 /// if it does not fail to begin with.
 pub fn shrink(sc: &Scenario) -> Scenario {
-    match diff_scenario(sc) {
+    match flat_mismatch(sc) {
         Some(mismatch) => shrink_from(sc, mismatch).0,
         None => sc.clone(),
     }
@@ -553,7 +651,7 @@ fn shrink_from(sc: &Scenario, mut mismatch: Mismatch) -> (Scenario, Mismatch) {
     loop {
         let mut progressed = false;
         for cand in candidates(&current, mismatch.round) {
-            if let Some(m) = diff_scenario(&cand) {
+            if let Some(m) = flat_mismatch(&cand) {
                 current = cand;
                 mismatch = m;
                 progressed = true;
@@ -568,15 +666,15 @@ fn shrink_from(sc: &Scenario, mut mismatch: Mismatch) -> (Scenario, Mismatch) {
     }
 }
 
-/// Generate `count` random scenarios from `base_seed` and differential-test
-/// each; failures are shrunk before reporting.
-pub fn run_differential(base_seed: u64, count: usize) -> DifferentialReport {
+/// Generate `count` random flat scenarios from `base_seed` and
+/// differential-test each; failures are shrunk before reporting.
+pub fn run_differential_batch(base_seed: u64, count: usize) -> DifferentialReport {
     let mut report = DifferentialReport::default();
     for i in 0..count {
         let sc = random_scenario(base_seed.wrapping_add(i as u64));
         report.scenarios_run += 1;
         report.rounds_run += sc.rounds;
-        if let Some(first) = diff_scenario(&sc) {
+        if let Some(first) = flat_mismatch(&sc) {
             let (shrunk, mismatch) = shrink_from(&sc, first);
             report.failures.push(Failure { mismatch, shrunk });
         }
@@ -613,7 +711,11 @@ mod tests {
             (12, CodecSpec::RandK { frac: 0.5 }),
         ] {
             let sc = Scenario { codec, ..small(seed, 2) };
-            assert!(diff_scenario(&sc).is_none(), "seed={seed} codec={}", codec.name());
+            assert!(
+                run_differential(&DiffSpec::Flat(&sc)).is_none(),
+                "seed={seed} codec={}",
+                codec.name()
+            );
         }
     }
 
@@ -621,7 +723,7 @@ mod tests {
     fn healthy_scenarios_have_no_mismatch() {
         for seed in 0..5 {
             let sc = small(seed, 2);
-            assert!(diff_scenario(&sc).is_none(), "seed={seed}");
+            assert!(run_differential(&DiffSpec::Flat(&sc)).is_none(), "seed={seed}");
         }
     }
 
@@ -661,7 +763,7 @@ mod tests {
             SessionScenario::steady_state(CodecSpec::TopK { frac: 0.25 }, 2, 0xD1FF),
             SessionScenario::churn_storm(CodecSpec::RandK { frac: 0.25 }, 4, 0xD1FF),
         ] {
-            if let Some(m) = diff_session_scenario(&sc) {
+            if let Some(m) = run_differential(&DiffSpec::Session(&sc)) {
                 panic!("{}: {:?}", sc.name, m);
             }
         }
@@ -671,8 +773,17 @@ mod tests {
     fn small_randomized_batch_is_clean() {
         // the full 200-scenario sweep lives in tests/scenario_differential.rs;
         // this is the in-crate smoke version
-        let report = run_differential(0xBA5E, 10);
+        let report = run_differential_batch(0xBA5E, 10);
         assert_eq!(report.scenarios_run, 10);
+        assert!(report.ok(), "failures: {:?}", report.failures);
+    }
+
+    #[test]
+    fn small_clocked_batch_is_clean() {
+        // the ≥100-scenario acceptance sweep lives in
+        // tests/virtual_clock.rs; this is the in-crate smoke version
+        let report = run_clocked_differential(0xC10C_BA5E, 6);
+        assert_eq!(report.scenarios_run, 6);
         assert!(report.ok(), "failures: {:?}", report.failures);
     }
 }

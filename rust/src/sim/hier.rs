@@ -8,7 +8,7 @@
 //! (colluding clients plus compromised shard aggregators). Like the flat
 //! scenarios, all stochastic churn is pre-drawn from the scenario seed into
 //! an rng-free `Targeted` schedule, so a scenario replays bit-identically
-//! through every executor — the property `diff_hier_scenario`
+//! through every executor — the property `DiffSpec::Hier`
 //! (`super::differential`) checks, with the flat engine as the sum oracle.
 //!
 //! **Privacy metric.** The flat campaign scores `exposed_honest` from the

@@ -17,18 +17,26 @@
 //! * [`differential`] — asserts every executor produces bit-identical sums,
 //!   survivor sets and [`crate::net::NetStats`] on randomized scenarios
 //!   (the payload codec is one of the randomized axes), with a shrinker
-//!   that minimizes failures to a reportable seed;
+//!   that minimizes failures to a reportable seed; every scenario kind
+//!   (flat, clocked, session, hier, crash) enters through one
+//!   [`differential::DiffSpec`] dispatcher;
+//! * [`clock`] — virtual-clock event scheduler: pre-materialized per-link
+//!   latency / compute-delay schedules, deadline-driven phase closure
+//!   ([`clock::close_phase`]) that drops stragglers exactly like churn,
+//!   and the timeout-sweep campaign axis
+//!   ([`clock::run_timeout_sweep`]: reliability/privacy/latency vs
+//!   phase deadline);
 //! * [`hier`] — hierarchical (sharded) round scenarios: per-shard churn
 //!   storms, dropped/compromised shard aggregators, cross-level collusion,
-//!   scored by [`hier::run_hier_campaign`] and differential-tested by
-//!   [`differential::diff_hier_scenario`] with the flat engine as oracle;
+//!   scored by [`hier::run_hier_campaign`] and differential-tested via
+//!   [`differential::DiffSpec::Hier`] with the flat engine as oracle;
 //! * [`crash`] — kills a journaled server at every phase boundary
 //!   ([`crash::CrashPoint`]) and requires the journal-recovered server to
 //!   finish the round bit-identically to the uninterrupted engine;
 //! * [`session`] — cross-round *warm* campaigns over one established
 //!   [`crate::protocol::session::Session`] (steady-state and churn-storm
 //!   attendance axes), measuring setup amortization and re-key traffic,
-//!   with [`differential::diff_session_scenario`] extending the
+//!   with [`differential::DiffSpec::Session`] extending the
 //!   bit-identical guarantee to warm rounds.
 //!
 //! Every future scale or performance PR validates against this substrate:
@@ -37,6 +45,7 @@
 
 pub mod campaign;
 pub mod churn;
+pub mod clock;
 pub mod crash;
 pub mod differential;
 pub mod hier;
@@ -46,12 +55,16 @@ pub mod session;
 pub use campaign::{
     resume_campaign, run_campaign, run_plan, CampaignReport, Executor, RoundRecord,
 };
+pub use clock::{
+    random_clocked_scenario, run_clocked_plan, run_timeout_sweep, straggler_scenario,
+    ClockSchedule, ClockSpec, ClockedRoundOutcome, ClockedScenario, LatencyModel, PhaseClosure,
+    SweepPoint, TimeoutSweepReport,
+};
 pub use crash::{diff_crash_round, run_round_crashy, CrashPoint};
 pub use churn::ChurnModel;
 pub use differential::{
-    diff_crash_scenario, diff_hier_scenario, diff_scenario, diff_session_scenario,
-    run_differential, run_hier_differential, shrink, DifferentialReport, Failure,
-    HierDifferentialReport, Mismatch,
+    run_clocked_differential, run_differential, run_differential_batch, run_hier_differential,
+    shrink, DiffSpec, DifferentialReport, Failure, HierDifferentialReport, Mismatch,
 };
 pub use hier::{
     random_hier_scenario, run_hier_campaign, storm_scenarios, HierCampaignReport,

@@ -15,7 +15,7 @@
 //!   each round mid-campaign, forcing graph repairs, pending re-keys and
 //!   missed-rekey catch-up downloads when absentees return.
 //!
-//! [`super::differential::diff_session_scenario`] runs these scenarios
+//! [`super::differential::DiffSpec::Session`] runs these scenarios
 //! through every executor and requires bit-identical sums, survivor sets
 //! and logical [`NetStats`] — the warm extension of the cold differential
 //! harness.

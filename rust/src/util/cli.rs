@@ -129,6 +129,13 @@ impl Args {
         self.lookup(name).map(|v| v == "true" || v == "1").unwrap_or(false)
     }
 
+    /// True iff the flag was passed explicitly on the command line.
+    /// Declared defaults do *not* count — spec-file resolution uses this
+    /// to decide which flags override the file (`--spec` + overrides).
+    pub fn is_set(&self, name: &str) -> bool {
+        self.values.contains_key(name)
+    }
+
     pub fn positional(&self) -> &[String] {
         &self.positional
     }
@@ -182,6 +189,17 @@ mod tests {
         let a = base().parse_from(argv(&["--verbose", "cmd", "x"])).unwrap();
         assert!(a.get_bool("verbose"));
         assert_eq!(a.positional(), &["cmd".to_string(), "x".to_string()]);
+    }
+
+    #[test]
+    fn is_set_distinguishes_explicit_flags_from_defaults() {
+        let a = base().parse_from(argv(&["--n", "50"])).unwrap();
+        assert!(a.is_set("n"));
+        assert!(!a.is_set("p"), "never passed");
+        assert!(!a.is_set("verbose"), "switches count only when present");
+        let a = base().parse_from(argv(&["--verbose"])).unwrap();
+        assert!(a.is_set("verbose"));
+        assert!(!a.is_set("n"), "defaulted flags are not explicitly set");
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! Utility substrates built from scratch for the offline environment:
 //! deterministic RNG, hex encoding, JSON (config + artifact manifests),
-//! CLI flag parsing, descriptive statistics and regression fits, timers
-//! and a minimal leveled logger.
+//! a TOML subset (round specs), CLI flag parsing, descriptive statistics
+//! and regression fits, timers and a minimal leveled logger.
 
 pub mod cli;
 pub mod hex;
@@ -11,6 +11,7 @@ pub mod rng;
 pub mod shutdown;
 pub mod stats;
 pub mod timer;
+pub mod toml;
 
 /// The modulus mask of the aggregation domain Z_{2^bits}.
 ///

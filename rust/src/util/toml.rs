@@ -1,0 +1,413 @@
+//! Minimal TOML-subset parser (the round-spec surface; toml-rs is
+//! unavailable offline, like clap and serde).
+//!
+//! Supported grammar — deliberately the flat subset a round spec needs:
+//! top-level keys, one level of `[section]` tables, `key = value` with
+//! basic strings (`"…"` with `\"` `\\` `\n` `\t` escapes), integers,
+//! floats, booleans, and single-line arrays of those scalars; `#`
+//! comments and blank lines. No nested/inline tables, dotted keys,
+//! multi-line strings, or datetimes — a spec using them gets a named
+//! error with the offending line number, not silent misparsing.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed scalar (or flat array of scalars).
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_i64().filter(|i| *i >= 0).map(|i| i as u64)
+    }
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_u64().map(|u| u as usize)
+    }
+    /// Floats, with integer coercion (`qtotal = 0` means `0.0`).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_arr(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    fn type_name(&self) -> &'static str {
+        match self {
+            TomlValue::Str(_) => "string",
+            TomlValue::Int(_) => "integer",
+            TomlValue::Float(_) => "float",
+            TomlValue::Bool(_) => "boolean",
+            TomlValue::Arr(_) => "array",
+        }
+    }
+}
+
+/// A parse error, carrying the 1-based source line.
+#[derive(Debug, Clone)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml error at line {}: {}", self.line, self.msg)
+    }
+}
+impl std::error::Error for TomlError {}
+
+/// A parsed document: the root table (section `""`) plus one level of
+/// named `[section]` tables. BTreeMap keeps iteration deterministic.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Toml {
+    sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+impl Toml {
+    pub fn parse(input: &str) -> Result<Toml, TomlError> {
+        let mut doc = Toml::default();
+        let mut section = String::new();
+        for (idx, raw) in input.lines().enumerate() {
+            let lineno = idx + 1;
+            let err = |msg: String| TomlError { line: lineno, msg };
+            let line = strip_comment(raw, lineno)?;
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| err(format!("unclosed section header {line:?}")))?
+                    .trim();
+                if name.is_empty() || name.starts_with('[') {
+                    return Err(err(format!(
+                        "bad section header {line:?} (only flat [section] tables are supported)"
+                    )));
+                }
+                if !name.bytes().all(|b| b.is_ascii_alphanumeric() || b == b'-' || b == b'_') {
+                    return Err(err(format!(
+                        "bad section name {name:?} (letters, digits, '-', '_')"
+                    )));
+                }
+                section = name.to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| err(format!("expected `key = value`, got {line:?}")))?;
+            let key = key.trim();
+            if key.is_empty()
+                || !key.bytes().all(|b| b.is_ascii_alphanumeric() || b == b'-' || b == b'_')
+            {
+                return Err(err(format!("bad key {key:?} (letters, digits, '-', '_')")));
+            }
+            let value = parse_value(value.trim(), lineno)?;
+            let table = doc.sections.entry(section.clone()).or_default();
+            if table.insert(key.to_string(), value).is_some() {
+                return Err(err(format!(
+                    "duplicate key {key:?} in section {:?}",
+                    if section.is_empty() { "(root)" } else { section.as_str() }
+                )));
+            }
+        }
+        Ok(doc)
+    }
+
+    /// Look up `key` in `[section]` (`""` = root). None when absent.
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section).and_then(|t| t.get(key))
+    }
+
+    /// Whether `[section]` appeared at all (even empty).
+    pub fn has_section(&self, section: &str) -> bool {
+        self.sections.contains_key(section)
+    }
+
+    /// Section names in deterministic order (the root is `""`).
+    pub fn section_names(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(|s| s.as_str())
+    }
+
+    /// Keys of one section in deterministic order.
+    pub fn keys(&self, section: &str) -> Vec<&str> {
+        self.sections
+            .get(section)
+            .map(|t| t.keys().map(|s| s.as_str()).collect())
+            .unwrap_or_default()
+    }
+
+    /// Typed lookup helper with a named type-mismatch error.
+    pub fn typed<T>(
+        &self,
+        section: &str,
+        key: &str,
+        want: &str,
+        cast: impl Fn(&TomlValue) -> Option<T>,
+    ) -> Result<Option<T>, TomlError> {
+        match self.get(section, key) {
+            None => Ok(None),
+            Some(v) => cast(v).map(Some).ok_or_else(|| TomlError {
+                line: 0,
+                msg: format!(
+                    "key {key:?} in section {:?}: expected {want}, got {}",
+                    if section.is_empty() { "(root)" } else { section },
+                    v.type_name()
+                ),
+            }),
+        }
+    }
+}
+
+/// Drop a trailing `# comment`, respecting `#` inside quoted strings.
+fn strip_comment(line: &str, lineno: usize) -> Result<&str, TomlError> {
+    let bytes = line.as_bytes();
+    let mut in_str = false;
+    let mut escaped = false;
+    for (i, &b) in bytes.iter().enumerate() {
+        if in_str {
+            if escaped {
+                escaped = false;
+            } else if b == b'\\' {
+                escaped = true;
+            } else if b == b'"' {
+                in_str = false;
+            }
+        } else if b == b'"' {
+            in_str = true;
+        } else if b == b'#' {
+            return Ok(&line[..i]);
+        }
+    }
+    if in_str {
+        return Err(TomlError { line: lineno, msg: "unterminated string".into() });
+    }
+    Ok(line)
+}
+
+fn parse_value(s: &str, lineno: usize) -> Result<TomlValue, TomlError> {
+    let err = |msg: String| TomlError { line: lineno, msg };
+    if s.is_empty() {
+        return Err(err("missing value after `=`".into()));
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        return parse_string(rest, lineno).map(TomlValue::Str);
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let body = body
+            .strip_suffix(']')
+            .ok_or_else(|| err("unclosed array (arrays must fit on one line)".into()))?;
+        let mut items = Vec::new();
+        for part in split_array(body, lineno)? {
+            let item = parse_value(&part, lineno)?;
+            if matches!(item, TomlValue::Arr(_)) {
+                return Err(err("nested arrays are not supported".into()));
+            }
+            items.push(item);
+        }
+        return Ok(TomlValue::Arr(items));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    // numbers: TOML-style `_` separators allowed; hex for seeds
+    let clean: String = s.chars().filter(|c| *c != '_').collect();
+    if let Some(hex) = clean.strip_prefix("0x").or_else(|| clean.strip_prefix("0X")) {
+        return i64::from_str_radix(hex, 16)
+            .map(TomlValue::Int)
+            .map_err(|_| err(format!("bad hex integer {s:?}")));
+    }
+    if let Ok(i) = clean.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        if f.is_finite() {
+            return Ok(TomlValue::Float(f));
+        }
+    }
+    Err(err(format!("unrecognized value {s:?} (string/integer/float/boolean/array)")))
+}
+
+/// Parse the body of a basic string (after the opening quote), rejecting
+/// trailing junk after the closing quote.
+fn parse_string(rest: &str, lineno: usize) -> Result<String, TomlError> {
+    let err = |msg: String| TomlError { line: lineno, msg };
+    let mut out = String::new();
+    let mut chars = rest.chars();
+    while let Some(c) = chars.next() {
+        match c {
+            '"' => {
+                let tail = chars.as_str().trim();
+                if !tail.is_empty() {
+                    return Err(err(format!("trailing characters after string: {tail:?}")));
+                }
+                return Ok(out);
+            }
+            '\\' => match chars.next() {
+                Some('"') => out.push('"'),
+                Some('\\') => out.push('\\'),
+                Some('n') => out.push('\n'),
+                Some('t') => out.push('\t'),
+                other => {
+                    return Err(err(format!("unsupported escape \\{}", other.unwrap_or(' '))))
+                }
+            },
+            c => out.push(c),
+        }
+    }
+    Err(err("unterminated string".into()))
+}
+
+/// Split an array body on top-level commas (commas inside strings don't
+/// count); returns trimmed item substrings.
+fn split_array(body: &str, lineno: usize) -> Result<Vec<String>, TomlError> {
+    let mut items = Vec::new();
+    let mut cur = String::new();
+    let mut in_str = false;
+    let mut escaped = false;
+    for c in body.chars() {
+        if in_str {
+            cur.push(c);
+            if escaped {
+                escaped = false;
+            } else if c == '\\' {
+                escaped = true;
+            } else if c == '"' {
+                in_str = false;
+            }
+        } else if c == '"' {
+            in_str = true;
+            cur.push(c);
+        } else if c == ',' {
+            items.push(cur.trim().to_string());
+            cur.clear();
+        } else {
+            cur.push(c);
+        }
+    }
+    if in_str {
+        return Err(TomlError { line: lineno, msg: "unterminated string in array".into() });
+    }
+    let last = cur.trim();
+    if !last.is_empty() {
+        items.push(last.to_string());
+    }
+    items.retain(|s| !s.is_empty());
+    Ok(items)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_scalars_and_arrays() {
+        let doc = Toml::parse(
+            r#"
+# round spec
+title = "straggler sweep"   # inline comment
+[round]
+n = 12
+qtotal = 0.1
+seed = 0xC10C
+sa = false
+[timeouts]
+sweep_ms = [5, 100, 1_000]
+phase_ms = [1, 1, 1, 1]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "title").unwrap().as_str(), Some("straggler sweep"));
+        assert_eq!(doc.get("round", "n").unwrap().as_usize(), Some(12));
+        assert_eq!(doc.get("round", "qtotal").unwrap().as_f64(), Some(0.1));
+        assert_eq!(doc.get("round", "seed").unwrap().as_u64(), Some(0xC10C));
+        assert_eq!(doc.get("round", "sa").unwrap().as_bool(), Some(false));
+        let sweep: Vec<u64> = doc
+            .get("timeouts", "sweep_ms")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_u64().unwrap())
+            .collect();
+        assert_eq!(sweep, vec![5, 100, 1000]);
+        assert!(doc.has_section("timeouts"));
+        assert!(!doc.has_section("clock"));
+    }
+
+    #[test]
+    fn integer_coerces_to_float_but_not_reverse() {
+        let doc = Toml::parse("a = 3\nb = 0.5").unwrap();
+        assert_eq!(doc.get("", "a").unwrap().as_f64(), Some(3.0));
+        assert_eq!(doc.get("", "b").unwrap().as_i64(), None);
+    }
+
+    #[test]
+    fn string_escapes_and_hash_inside_string() {
+        let doc = Toml::parse(r#"path = "runs/j#1\t\"q\"" "#).unwrap();
+        assert_eq!(doc.get("", "path").unwrap().as_str(), Some("runs/j#1\t\"q\""));
+    }
+
+    #[test]
+    fn named_errors_carry_line_numbers() {
+        for (src, needle) in [
+            ("x = ", "missing value"),
+            ("x == 3", "unrecognized value"),
+            ("[open\nx = 1", "unclosed section"),
+            ("[a.b]\n", "bad section name"),
+            ("x = \"oops", "unterminated string"),
+            ("x = [1, [2]]", "nested arrays"),
+            ("x = [1, 2", "unclosed array"),
+            ("x = 1\nx = 2", "duplicate key"),
+            ("just words", "expected `key = value`"),
+        ] {
+            let e = Toml::parse(src).unwrap_err();
+            assert!(e.to_string().contains(needle), "{src:?} → {e}");
+            assert!(e.line >= 1, "{src:?}");
+        }
+        assert_eq!(Toml::parse("a = 1\nb = ").unwrap_err().line, 2);
+    }
+
+    #[test]
+    fn typed_lookup_names_the_mismatch() {
+        let doc = Toml::parse("[round]\nn = \"twelve\"").unwrap();
+        let e = doc.typed("round", "n", "integer", TomlValue::as_usize).unwrap_err();
+        assert!(e.to_string().contains("\"n\""), "{e}");
+        assert!(e.to_string().contains("expected integer, got string"), "{e}");
+        assert_eq!(doc.typed("round", "absent", "integer", TomlValue::as_usize).unwrap(), None);
+    }
+}

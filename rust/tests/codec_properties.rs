@@ -18,8 +18,8 @@ use ccesa::protocol::dropout::DropoutModel;
 use ccesa::protocol::engine::run_round;
 use ccesa::protocol::{ProtocolConfig, Topology};
 use ccesa::sim::{
-    diff_scenario, AdversarySpec, ChurnModel, CodecSpec, Scenario, ThresholdRule,
-    TopologySchedule,
+    run_differential, AdversarySpec, ChurnModel, CodecSpec, DiffSpec, Scenario,
+    ThresholdRule, TopologySchedule,
 };
 use ccesa::util::rng::Rng;
 
@@ -191,8 +191,8 @@ fn topk_ten_percent_saves_5x_payload_with_zero_mismatches() {
     let topk = mk(CodecSpec::TopK { frac: 0.1 });
 
     // zero mismatches between the executors on the sparse scenario
-    assert!(diff_scenario(&topk).is_none(), "sparse differential mismatch");
-    assert!(diff_scenario(&dense).is_none(), "dense differential mismatch");
+    assert!(run_differential(&DiffSpec::Flat(&topk)).is_none(), "sparse differential mismatch");
+    assert!(run_differential(&DiffSpec::Flat(&dense)).is_none(), "dense differential mismatch");
 
     // measured payload bytes: ≥5× saving (10× exactly at frac = 0.1) —
     // one campaign per scenario provides both byte counters

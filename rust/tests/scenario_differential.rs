@@ -7,8 +7,8 @@
 
 use ccesa::protocol::Topology;
 use ccesa::sim::{
-    diff_scenario, random_scenario, run_campaign, run_differential, AdversarySpec, ChurnModel,
-    CodecSpec, Executor, Scenario, ThresholdRule, TopologySchedule,
+    random_scenario, run_campaign, run_differential, run_differential_batch, AdversarySpec,
+    ChurnModel, CodecSpec, DiffSpec, Executor, Scenario, ThresholdRule, TopologySchedule,
 };
 
 /// The acceptance sweep: 200 seeded random scenarios, zero mismatches
@@ -16,7 +16,7 @@ use ccesa::sim::{
 /// quotable seed and the name of the shape that diverged.
 #[test]
 fn differential_200_randomized_scenarios() {
-    let report = run_differential(0xD1FF_0000, 200);
+    let report = run_differential_batch(0xD1FF_0000, 200);
     assert_eq!(report.scenarios_run, 200);
     assert!(report.rounds_run >= 200, "every scenario has at least one round");
     assert!(
@@ -57,7 +57,7 @@ fn sparse_codec_sweep(base_seed: u64, count: u64) -> Vec<ccesa::sim::Mismatch> {
             CodecSpec::RandK { frac: 0.3 }
         };
         sc.name = format!("sparse-{}-{i}", sc.codec.name());
-        if let Some(m) = diff_scenario(&sc) {
+        if let Some(m) = run_differential(&DiffSpec::Flat(&sc)) {
             failures.push(m);
         }
     }
@@ -196,5 +196,5 @@ fn shrinker_preserves_passing_scenarios() {
     // sc passes (the 200-sweep covers this space), so shrink is identity
     assert_eq!(shrunk.n, sc.n);
     assert_eq!(shrunk.rounds, sc.rounds);
-    assert!(ccesa::sim::diff_scenario(&shrunk).is_none());
+    assert!(run_differential(&DiffSpec::Flat(&shrunk)).is_none());
 }

@@ -1,0 +1,162 @@
+//! The virtual-clock acceptance surface: the clocked differential (event
+//! loop under seeded latency schedules vs the sync engine with observed
+//! timeout drops merged into churn) at smoke and full width, the CI-pinned
+//! straggler deadline-vs-reliability tradeoff, and the TOML round-spec
+//! path driving the same sweep end to end.
+
+use ccesa::sim::{
+    run_clocked_differential, run_clocked_plan, run_timeout_sweep, straggler_scenario,
+};
+use ccesa::spec::RoundSpec;
+use std::sync::Arc;
+
+/// Tier-1 smoke: a slice of the clocked differential runs clean. The full
+/// ≥100-scenario sweep is the `--ignored` acceptance test below.
+#[test]
+fn clocked_differential_smoke_12_scenarios() {
+    let report = run_clocked_differential(0xC10C_D1FF, 12);
+    assert_eq!(report.scenarios_run, 12);
+    assert!(report.rounds_run >= 12, "every scenario has at least one round");
+    assert!(
+        report.ok(),
+        "{} clocked mismatches; first: {:?}",
+        report.failures.len(),
+        report.failures.first()
+    );
+}
+
+/// Acceptance criterion: ≥100 randomized clocked scenarios, zero
+/// mismatches between the clocked event loop and its engine reference —
+/// timeout-dropped clients behave bit-identically to churned clients.
+#[test]
+#[ignore = "full clocked differential (~minutes): run explicitly — CI virtual-clock job"]
+fn clocked_differential_acceptance_120_scenarios() {
+    let report = run_clocked_differential(0xC10C_ACC0, 120);
+    assert_eq!(report.scenarios_run, 120);
+    assert!(
+        report.ok(),
+        "{} clocked mismatches; first: {:?}",
+        report.failures.len(),
+        report.failures.first()
+    );
+}
+
+/// The CI-pinned tradeoff scenario: half the cohort straggles at 20–40 ms
+/// against a threshold above the fast-cohort size. A 5 ms deadline drops
+/// the slow half, |V1| < t and rounds abort (the Theorem-1 reliability
+/// failure); a 100 ms deadline keeps everyone and all rounds succeed —
+/// at the price of simulated latency.
+#[test]
+fn timeout_sweep_straggler_tradeoff() {
+    let (sc, clock) = straggler_scenario(0x51EE9);
+    let report = run_timeout_sweep(&sc, &clock, &[5_000, 100_000], 0);
+    assert_eq!(report.points.len(), 2);
+    let short = &report.points[0];
+    let long = &report.points[1];
+
+    // short deadline: stragglers dropped, reliability lost
+    assert!(short.timeout_drops > 0, "5 ms must drop the 20–40 ms tail: {short:?}");
+    assert!(short.aborted_rounds > 0, "|V1| < t must abort: {short:?}");
+    assert!(short.reliable_rounds < long.reliable_rounds, "{short:?} vs {long:?}");
+
+    // long deadline: everyone delivers, every round reliable — no privacy
+    // regression either way (the eavesdropper never breaches)
+    assert_eq!(long.reliable_rounds, 3, "past the tail every round succeeds");
+    assert_eq!(long.aborted_rounds, 0);
+    assert_eq!(long.timeout_drops, 0);
+    assert_eq!(long.breached_rounds, 0);
+    assert_eq!(long.theorem1_violations, 0);
+
+    // the cost axis: waiting out stragglers is slower in virtual time
+    assert!(
+        short.mean_round_latency_us < long.mean_round_latency_us,
+        "latency must grow with the deadline: {} vs {}",
+        short.mean_round_latency_us,
+        long.mean_round_latency_us
+    );
+
+    let rendered = report.render();
+    assert!(rendered.contains("straggler-tradeoff"));
+    assert!(rendered.contains("deadline_us"));
+}
+
+/// The TOML spec path end to end: a `[timeouts]` + `[clock]` spec compiles
+/// to the same scenario/policy/schedule the library API builds by hand,
+/// and a single clocked round driven off the spec replays bit-identically.
+#[test]
+fn spec_file_drives_clocked_rounds_deterministically() {
+    let text = r#"
+        [round]
+        n = 10
+        dim = 6
+        seed = 0xC10C_5BEC
+        t = 4
+        rounds = 2
+
+        [timeouts]
+        uniform_ms = 8
+        min_survivors = 5
+
+        [clock]
+        link = "uniform"
+        lo_us = 50
+        hi_us = 2000
+        compute_lo_us = 10
+        compute_hi_us = 100
+    "#;
+    let spec = RoundSpec::from_toml_str(text).unwrap();
+    let csc = spec.clocked_scenario("spec-clocked").expect("[clock] section compiles");
+    assert_eq!(csc.base.n, 10);
+    assert_eq!(csc.policy, spec.timeout_policy().unwrap());
+    assert_eq!(csc.policy.min_survivors, 5);
+
+    let plans = csc.base.compile();
+    assert_eq!(plans.len(), 2);
+    for plan in &plans {
+        let models = csc.base.round_models(plan.round);
+        let sched = Arc::new(csc.schedule_for(plan.round));
+        let a = run_clocked_plan(plan, &models, &sched, &csc.policy, &[]);
+        let b = run_clocked_plan(plan, &models, &sched, &csc.policy, &[]);
+        assert_eq!(a.timeline, b.timeline, "round {}: same spec ⇒ same timeline", plan.round);
+        assert_eq!(a.clocked, b.clocked, "round {}: same spec ⇒ same record", plan.round);
+        // the engine reference agrees whenever the clocked run finished
+        if !a.clocked.aborted {
+            assert_eq!(a.engine.sets, a.clocked.sets, "round {}", plan.round);
+            assert_eq!(a.engine.sum, a.clocked.sum, "round {}", plan.round);
+        }
+    }
+}
+
+/// A spec with `sweep_ms` carries the whole sweep axis: the deadlines the
+/// CLI would run are exactly the ones the report scores, in order.
+#[test]
+fn spec_sweep_axis_matches_report_points() {
+    let text = r#"
+        [round]
+        n = 8
+        dim = 4
+        seed = 7
+        t = 3
+        rounds = 1
+
+        [timeouts]
+        uniform_ms = 5
+        sweep_ms = [2, 50]
+
+        [clock]
+        link = "uniform"
+        lo_us = 100
+        hi_us = 1500
+    "#;
+    let spec = RoundSpec::from_toml_str(text).unwrap();
+    let ts = spec.timeouts.as_ref().unwrap();
+    assert_eq!(ts.sweep_ms, vec![2, 50]);
+    let sc = spec.scenario("spec-sweep");
+    let clock = spec.clock.as_ref().unwrap();
+    let deadlines: Vec<u64> = ts.sweep_ms.iter().map(|ms| ms * 1_000).collect();
+    let report = run_timeout_sweep(&sc, clock, &deadlines, ts.min_survivors);
+    assert_eq!(report.points.len(), 2);
+    assert_eq!(report.points[0].deadline_us, 2_000);
+    assert_eq!(report.points[1].deadline_us, 50_000);
+    assert_eq!(report.min_survivors, ts.min_survivors);
+}

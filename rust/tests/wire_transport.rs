@@ -8,7 +8,7 @@
 //! duplicates frames.
 
 use ccesa::codec::Codec;
-use ccesa::coordinator::{derive_round_setup, Executor, RoundOptions};
+use ccesa::coordinator::{derive_round_setup, Executor, RoundOptions, TimeoutPolicy};
 use ccesa::net::socket;
 use ccesa::protocol::client::ClientSm;
 use ccesa::protocol::dropout::DropoutModel;
@@ -181,4 +181,164 @@ fn duplicated_wire_frames_do_not_disturb_honest_clients() {
     assert!(wired.stats.logical_eq(&sync.stats), "duplicates must not be charged logically");
     let logical_up: u64 = sync.stats.bytes_up.iter().sum();
     assert!(wired.stats.framed_up > logical_up, "the duplicates do hit the socket counter");
+}
+
+/// Drive `cfg.n` honest socket clients against a policy-carrying server,
+/// each on its own thread. `stall(id, down)` returning true makes that
+/// client sleep `stall_for` *after* computing its answer — from the
+/// server's side it is connected but silent, exactly the straggler the
+/// per-phase deadline exists to cut. Write failures and mid-round EOF are
+/// tolerated: that is what being timed out looks like from the client.
+fn drive_with_straggler(
+    cfg: &ProtocolConfig,
+    m: &[Vec<u64>],
+    opts: &RoundOptions,
+    stall: impl Fn(usize, &Down) -> bool + Sync,
+    stall_for: Duration,
+) -> ccesa::coordinator::CoordRoundResult {
+    let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+    let addr = listener.local_addr().unwrap();
+    let round = socket::round_tag(cfg.seed);
+    let setup = derive_round_setup(cfg, m);
+    let (plan, graph) = (setup.plan.clone(), setup.graph.clone());
+    let stall = &stall;
+    let setup = &setup;
+    std::thread::scope(|s| {
+        let server =
+            s.spawn(|| socket::serve(&listener, cfg, plan.clone(), graph.clone(), round, opts));
+        for id in 0..cfg.n {
+            s.spawn(move || {
+                let (mut key_rng, share_rng) = setup.streams[id].clone();
+                let mut sm = ClientSm::new(
+                    id,
+                    cfg.t,
+                    cfg.mask_bits,
+                    setup.graph.neighbors(id).to_vec(),
+                    &mut key_rng,
+                    share_rng,
+                    &m[id],
+                    setup.plan.clone(),
+                    setup.survives[id],
+                );
+                let mut stream = TcpStream::connect(addr).unwrap();
+                loop {
+                    let body = match wire::read_frame(&mut stream) {
+                        Ok(Some(b)) => b,
+                        // EOF / reset: the server cut us (or the round is over)
+                        _ => break,
+                    };
+                    let (r, down) = wire::decode_down(&body).unwrap();
+                    assert_eq!(r, round, "client {id}: round tag");
+                    if matches!(down, Down::Finish) {
+                        let _ = sm.step(Down::Finish);
+                        break;
+                    }
+                    let stalled = stall(id, &down);
+                    let frame = wire::encode_up(round, &sm.step(down));
+                    if stalled {
+                        std::thread::sleep(stall_for);
+                    }
+                    if stream.write_all(&frame).is_err() {
+                        break; // already disconnected by the phase deadline
+                    }
+                    if sm.done() {
+                        break;
+                    }
+                }
+            });
+        }
+        server.join().unwrap().unwrap()
+    })
+}
+
+/// A per-phase deadline on the wire cuts a connected-but-silent straggler
+/// exactly like the virtual clock does: the round finishes without it, the
+/// drop lands in `timeout_drops`/`timeline` under the right phase, and the
+/// result is bit-identical to the engine with that client churned at the
+/// same step.
+#[test]
+fn wire_phase_deadline_cuts_a_masked_phase_straggler() {
+    let n = 6;
+    let dim = 6;
+    let straggler = 5usize;
+    let cfg = base(n, 3, dim, Topology::Complete, 0x57A11);
+    let m = models(n, dim, 0x57A11);
+    // generous everywhere except the masked phase; the grace floor of
+    // n − 1 keeps CI jitter from ever cutting a prompt client
+    let policy = TimeoutPolicy {
+        per_phase_deadlines: [
+            Duration::from_secs(30),
+            Duration::from_secs(30),
+            Duration::from_millis(200),
+            Duration::from_secs(30),
+        ],
+        min_survivors: n - 1,
+    };
+    let opts = RoundOptions::builder()
+        .executor(Executor::Wire)
+        .timeout(Duration::from_secs(60))
+        .timeout_policy(policy)
+        .build()
+        .unwrap();
+    let wired = drive_with_straggler(
+        &cfg,
+        &m,
+        &opts,
+        |id, down| id == straggler && matches!(down, Down::Delivery(_)),
+        Duration::from_secs(3),
+    );
+
+    assert_eq!(wired.stats.timeout_drops, [0, 0, 1, 0]);
+    let tl = wired.timeline.as_ref().expect("a policy-carrying round reports its timeline");
+    assert_eq!(tl.dropped[2], vec![straggler], "the straggler is named under its phase");
+    assert!(
+        tl.phase_elapsed_us[2] >= 200_000,
+        "the masked phase sat out its deadline: {} µs",
+        tl.phase_elapsed_us[2]
+    );
+    assert!(wired.reliable, "n − 1 survivors ≥ t: the round succeeds without the straggler");
+    assert!(wired.sets.v2.contains(&straggler), "shares landed on time");
+    assert!(!wired.sets.v3.contains(&straggler), "cut before masked input");
+    assert_eq!(wired.sets.v3.len(), n - 1);
+
+    // the engine with {straggler} churned at the masked step is the
+    // reference — same claim the clocked differential makes, on real TCP
+    let ref_cfg = ProtocolConfig {
+        dropout: DropoutModel::Targeted {
+            per_step: [vec![], vec![], vec![straggler], vec![]],
+        },
+        ..cfg.clone()
+    };
+    let mut sync = run_round(&ref_cfg, &m).unwrap();
+    sync.stats.timeout_drops = [0, 0, 1, 0]; // the engine has no clock to classify with
+    assert_eq!(wired.sets, sync.sets, "timeout drop must equal churn: survivor sets");
+    assert_eq!(wired.sum, sync.sum, "timeout drop must equal churn: sum");
+    assert!(wired.stats.logical_eq(&sync.stats), "timeout drop must equal churn: NetStats");
+}
+
+/// Generous per-phase deadlines are inert: nobody is cut, the timeline is
+/// still reported, and the round matches the policy-free engine exactly.
+#[test]
+fn wire_generous_phase_deadlines_drop_no_one() {
+    let n = 8;
+    let dim = 10;
+    let cfg = base(n, 3, dim, Topology::ErdosRenyi { p: 0.8 }, 0x57A22);
+    let m = models(n, dim, 0x57A22);
+    let opts = RoundOptions::builder()
+        .executor(Executor::Wire)
+        .timeout(Duration::from_secs(60))
+        .timeout_policy(TimeoutPolicy::uniform(Duration::from_secs(30)))
+        .build()
+        .unwrap();
+    let wired = drive_with_straggler(&cfg, &m, &opts, |_, _| false, Duration::ZERO);
+
+    assert_eq!(wired.stats.timeout_drops, [0; 4]);
+    let tl = wired.timeline.as_ref().expect("policy ⇒ timeline");
+    assert!(!tl.dropped_any());
+    assert!(tl.total_us() > 0, "wall-clock phase timings are recorded");
+
+    let sync = run_round(&cfg, &m).unwrap();
+    assert_eq!(wired.sets, sync.sets);
+    assert_eq!(wired.sum, sync.sum);
+    assert!(wired.stats.logical_eq(&sync.stats));
 }

@@ -12,7 +12,7 @@ Cases are matched by ``name`` within the file of the same basename.
 
 Usage:
     python3 tools/bench_gate.py                     # gate against BENCH_baseline/
-    python3 tools/bench_gate.py --threshold 0.15    # explicit threshold
+    python3 tools/bench_gate.py --threshold 0.12    # explicit threshold
     python3 tools/bench_gate.py --update            # adopt fresh runs as baseline
     python3 tools/bench_gate.py BENCH_crypto_primitives.json  # gate a subset
 
@@ -58,8 +58,8 @@ def main():
     ap.add_argument(
         "--threshold",
         type=float,
-        default=float(os.environ.get("CCESA_BENCH_GATE_THRESHOLD", "0.15")),
-        help="fail when fresh_median > baseline_median * (1 + threshold); default 0.15",
+        default=float(os.environ.get("CCESA_BENCH_GATE_THRESHOLD", "0.12")),
+        help="fail when fresh_median > baseline_median * (1 + threshold); default 0.12",
     )
     ap.add_argument(
         "--noise-floor",
